@@ -1,0 +1,20 @@
+//! L3 perf probe: per-step assemble_into cost for exact policy at large C.
+fn main() {
+    use subgen::model::{ModelSpec, SequenceCaches};
+    let spec = ModelSpec {
+        vocab: 16, d_model: 64, n_heads: 4, n_layers: 2, d_head: 16,
+        prefill_t: 512, cache_variants: vec![640, 384, 256, 128],
+        decode_batch: 8, train_accuracy: -1.0,
+    };
+    let mut caches = SequenceCaches::new(&spec, "exact", usize::MAX/4, 0.5, 1).unwrap();
+    let x = vec![0.1f32; 2*4*16];
+    for _ in 0..100 { caches.update(&x, &x, &x); }
+    let mut flat = caches.assemble(640).unwrap();
+    let t0 = std::time::Instant::now();
+    let iters = 500;
+    for _ in 0..iters {
+        caches.update(&x, &x, &x);
+        caches.assemble_into(&mut flat).unwrap();
+    }
+    println!("exact assemble_into: {:.1} µs/step", t0.elapsed().as_micros() as f64 / iters as f64);
+}

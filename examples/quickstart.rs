@@ -1,0 +1,71 @@
+//! Quickstart: the SubGen streaming-attention data structure on its own
+//! (no model, no artifacts) — Algorithm 1 against exact attention.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Streams an (m, δ)-clusterable sequence of (q, k, v) tokens through
+//! [`subgen::subgen::SubGenAttention`], then compares the estimator's
+//! output, memory and the paper's error bound (Eq. 3) to the exact
+//! softmax attention kept alongside.
+
+use subgen::attention::{error_bound_rhs, exact_attention};
+use subgen::bench::fmt_bytes;
+use subgen::kvcache::bytes_per_slot;
+use subgen::subgen::{SubGenAttention, SubGenConfig};
+use subgen::tensor::Tensor;
+use subgen::workload::{ClusterableStream, TokenStream};
+
+fn main() -> anyhow::Result<()> {
+    let dim = 32;
+    let n = 32_768;
+    let m = 12; // planted clusters
+    println!("SubGen quickstart: n={n} stream, {m} planted key clusters, d={dim}\n");
+
+    // Theorem-1 style parameters: eps=0.5, query norm r=1, delta=0.5.
+    let cfg = SubGenConfig::for_error(dim, 0.5, 0.5, 1.0, n);
+    println!("config: delta={} t={} s={}", cfg.delta, cfg.t, cfg.s);
+
+    let mut stream = ClusterableStream::new(dim, m, 0.05, 1.0, 42);
+    let mut sketch = SubGenAttention::new(cfg, 7);
+
+    // Exact reference (the O(n·d) cache SubGen replaces).
+    let mut keys = Tensor::zeros(0, dim);
+    let mut values = Tensor::zeros(0, dim);
+    let mut last_q = vec![0.0f32; dim];
+
+    for _ in 0..n {
+        let (q, k, v) = stream.next_triplet();
+        sketch.update(&k, &v);
+        keys.push_row(&k);
+        values.push_row(&v);
+        last_q = q;
+    }
+
+    let est = sketch.query(&last_q);
+    let exact = exact_attention(&last_q, &keys, &values);
+    let err: f32 =
+        est.iter().zip(&exact).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+    let bound = error_bound_rhs(0.5, &last_q, &keys, &values);
+
+    println!("\nclusters found : {} (planted {m})", sketch.num_clusters());
+    println!("‖z − Attn‖₂    : {err:.4}");
+    println!("ε·‖softmax‖·‖V‖op (Eq. 3 bound): {bound:.4}");
+    println!("bound satisfied: {}", err <= bound);
+
+    let exact_bytes = n * bytes_per_slot(dim);
+    println!("\nmemory — exact cache : {}", fmt_bytes(exact_bytes));
+    println!("memory — subgen      : {}", fmt_bytes(sketch.memory_bytes()));
+    println!(
+        "compression          : {:.1}x",
+        exact_bytes as f64 / sketch.memory_bytes() as f64
+    );
+
+    // Partition-function accuracy (the paper's core estimator).
+    let tau = sketch.partition_estimate(&last_q);
+    let exact_tau = subgen::attention::exact_log_partition(&last_q, &keys).exp() as f64;
+    println!(
+        "\npartition fn   : est {tau:.3e} vs exact {exact_tau:.3e} (rel {:.3}%)",
+        100.0 * (tau - exact_tau).abs() / exact_tau
+    );
+    Ok(())
+}

@@ -1,0 +1,112 @@
+//! End-to-end serving driver (the serving-paper e2e requirement):
+//! batched requests against the engine under open-loop Poisson load,
+//! reporting latency percentiles and throughput per cache policy.
+//!
+//!     cargo run --release --example serving_throughput [-- --requests 24]
+//!
+//! The headline serving claim of a KV-compression paper is that smaller
+//! caches keep decode latency flat as contexts grow; compressed policies
+//! run on smaller cache-capacity executables, so the per-step buffer
+//! traffic scales with the *budget*, not the context.
+
+use anyhow::Result;
+use std::path::PathBuf;
+use subgen::bench::Table;
+use subgen::cli::Args;
+use subgen::coordinator::{EngineConfig, Request};
+use subgen::model::{Generator, ModelSpec};
+use subgen::rng::Pcg64;
+use subgen::runtime::Runtime;
+use subgen::server::{channel, serve, LoadGen};
+use subgen::workload::{lines_for_seq_len, RetrievalSampler};
+
+fn main() -> Result<()> {
+    let args = Args::from_env("serving throughput under Poisson load")
+        .describe("artifacts", Some("artifacts"), "artifacts directory")
+        .describe("requests", Some("24"), "requests per policy")
+        .describe("rate", Some("4.0"), "mean arrival rate (req/s)")
+        .describe("n", Some("384"), "prompt length (tokens)")
+        .describe("new", Some("8"), "tokens generated per request")
+        .describe("budget", Some("192"), "per-head budget for compressed policies")
+        .describe("seed", Some("0"), "rng seed");
+    args.exit_on_help();
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let requests = args.usize_or("requests", 24);
+    let rate = args.f64_or("rate", 4.0);
+    let n = args.usize_or("n", 384);
+    let max_new = args.usize_or("new", 8);
+    let budget = args.usize_or("budget", 192);
+    let seed = args.u64_or("seed", 0);
+
+    let mut table = Table::new(&[
+        "policy", "completed", "tok/s", "p50", "p90", "p99", "max",
+    ]);
+    for policy in ["exact", "sink", "h2o", "subgen"] {
+        let report = run_policy(
+            &artifacts, policy, requests, rate, n, max_new, budget, seed,
+        )?;
+        table.row(&[
+            policy.to_string(),
+            format!("{}/{}", report.completed, requests),
+            format!("{:.1}", report.throughput_tps()),
+            format!("{:?}", report.latency.quantile(0.50)),
+            format!("{:?}", report.latency.quantile(0.90)),
+            format!("{:?}", report.latency.quantile(0.99)),
+            format!("{:?}", report.latency.max()),
+        ]);
+    }
+    println!();
+    table.print();
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_policy(
+    artifacts: &std::path::Path,
+    policy: &str,
+    requests: usize,
+    rate: f64,
+    n: usize,
+    max_new: usize,
+    budget: usize,
+    seed: u64,
+) -> Result<subgen::server::LoadGenReport> {
+    let (handle, rx) = channel();
+    let artifacts = artifacts.to_path_buf();
+    let engine_thread = std::thread::spawn(move || -> Result<_> {
+        // PJRT types are not Send: build the runtime inside the thread.
+        let rt = Runtime::load(&artifacts, None)?;
+        let spec = ModelSpec::from_manifest(rt.manifest())?;
+        let generator = Generator::new(&rt, spec);
+        serve(
+            &generator,
+            EngineConfig { max_active: 4, prefills_per_tick: 1, ..Default::default() },
+            rx,
+        )
+    });
+
+    let policy_owned = policy.to_string();
+    let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed));
+    let mut prompts = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        let inst = sampler.sample(lines_for_seq_len(n));
+        prompts.push(inst.tokens().0);
+    }
+    let report = LoadGen {
+        rate,
+        requests,
+        make_request: Box::new(move |id| Request {
+            id,
+            prompt: prompts[id as usize].clone(),
+            max_new,
+            policy: policy_owned.clone(),
+            budget,
+            delta: 4.0,
+        }),
+        seed,
+    }
+    .run(&handle);
+    handle.shutdown();
+    engine_thread.join().unwrap()?;
+    Ok(report)
+}

@@ -1,0 +1,136 @@
+//! Theorem 1 / Corollary 1 validation (experiment TH1 in DESIGN.md):
+//! memory and per-step time of SubGen vs the exact cache as the stream
+//! grows, plus the (1±ε) partition-function guarantee vs t.
+//!
+//!     cargo run --release --example sublinear_scaling [-- --max-n 65536]
+//!
+//! Prints the measured log-log scaling exponents: exact is Θ(n) (slope
+//! ≈ 1); SubGen with a fixed planted m must plateau (slope ≈ 0); with
+//! m = √n the slope must stay well below 1.
+
+use std::time::Instant;
+use subgen::attention::exact_log_partition;
+use subgen::bench::Table;
+use subgen::cli::Args;
+use subgen::linalg::loglog_slope;
+use subgen::rng::Pcg64;
+use subgen::subgen::{SubGenAttention, SubGenConfig};
+use subgen::tensor::Tensor;
+use subgen::workload::{ClusterableStream, TokenStream};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env("TH1: sublinear memory/time scaling")
+        .describe("max-n", Some("65536"), "largest stream length")
+        .describe("dim", Some("32"), "embedding dim");
+    args.exit_on_help();
+    let max_n = args.usize_or("max-n", 65_536);
+    let dim = args.usize_or("dim", 32);
+
+    println!("== memory & update time vs n (fixed m = 16 clusters) ==\n");
+    let mut ns = Vec::new();
+    let mut n_i = 1024usize;
+    while n_i <= max_n {
+        ns.push(n_i);
+        n_i *= 2;
+    }
+
+    let mut table = Table::new(&[
+        "n",
+        "subgen bytes",
+        "exact bytes",
+        "update µs/token",
+        "query µs",
+        "clusters",
+    ]);
+    let mut mem_series = Vec::new();
+    let mut upd_series = Vec::new();
+    let mut qry_series = Vec::new();
+    for &n in &ns {
+        let cfg = SubGenConfig { dim, delta: 0.5, t: 32, s: 64 };
+        let mut sketch = SubGenAttention::new(cfg, 1);
+        let mut stream = ClusterableStream::new(dim, 16, 0.05, 1.0, 9);
+        let t0 = Instant::now();
+        let mut q = vec![0.0f32; dim];
+        for _ in 0..n {
+            let (qq, k, v) = stream.next_triplet();
+            sketch.update(&k, &v);
+            q = qq;
+        }
+        let update_us = t0.elapsed().as_micros() as f64 / n as f64;
+        let t1 = Instant::now();
+        let reps = 50;
+        for _ in 0..reps {
+            std::hint::black_box(sketch.query(&q));
+        }
+        let query_us = t1.elapsed().as_micros() as f64 / reps as f64;
+        let exact_bytes = n * subgen::kvcache::bytes_per_slot(dim);
+        table.row(&[
+            n.to_string(),
+            sketch.memory_bytes().to_string(),
+            exact_bytes.to_string(),
+            format!("{update_us:.2}"),
+            format!("{query_us:.1}"),
+            sketch.num_clusters().to_string(),
+        ]);
+        mem_series.push(sketch.memory_bytes() as f64);
+        upd_series.push(update_us);
+        qry_series.push(query_us);
+    }
+    table.print();
+    let nsf: Vec<f64> = ns.iter().map(|&x| x as f64).collect();
+    println!("\nlog-log slopes (exact cache memory would be 1.0):");
+    println!("  subgen memory : {:+.3}", loglog_slope(&nsf, &mem_series));
+    println!("  update time   : {:+.3}", loglog_slope(&nsf, &upd_series));
+    println!("  query time    : {:+.3}", loglog_slope(&nsf, &qry_series));
+
+    println!("\n== partition function (1±ε) vs t (n = 4096, m = 8) ==\n");
+    let mut t2 = Table::new(&["t", "mean rel err", "max rel err", "1/sqrt(t)"]);
+    for t in [4usize, 8, 16, 32, 64, 128] {
+        let mut errs = Vec::new();
+        for seed in 0..5u64 {
+            let cfg = SubGenConfig { dim, delta: 0.5, t, s: 8 };
+            let mut sketch = SubGenAttention::new(cfg, seed);
+            let mut stream = ClusterableStream::new(dim, 8, 0.05, 1.0, 100 + seed);
+            let mut keys = Tensor::zeros(0, dim);
+            let mut q = vec![0.0f32; dim];
+            for _ in 0..4096 {
+                let (qq, k, v) = stream.next_triplet();
+                sketch.update(&k, &v);
+                keys.push_row(&k);
+                q = qq;
+            }
+            let est = sketch.partition_estimate(&q);
+            let exact = exact_log_partition(&q, &keys).exp() as f64;
+            errs.push(((est - exact) / exact).abs());
+        }
+        let mean = errs.iter().sum::<f64>() / errs.len() as f64;
+        let max = errs.iter().cloned().fold(0.0, f64::max);
+        t2.row(&[
+            t.to_string(),
+            format!("{mean:.4}"),
+            format!("{max:.4}"),
+            format!("{:.4}", 1.0 / (t as f64).sqrt()),
+        ]);
+    }
+    t2.print();
+
+    println!("\n== adversarial stream: δ-doubling keeps memory bounded ==\n");
+    let mut sketch = SubGenAttention::new(SubGenConfig { dim, delta: 0.3, t: 8, s: 16 }, 3);
+    let mut stream = subgen::workload::AdversarialStream::new(dim, 5);
+    let mut rng = Pcg64::seed_from_u64(0);
+    let _ = &mut rng;
+    for i in 0..20_000 {
+        let (_, k, v) = stream.next_triplet();
+        sketch.update(&k, &v);
+        sketch.enforce_cluster_cap(64);
+        if (i + 1) % 5000 == 0 {
+            println!(
+                "  n={:>6}  clusters={:>3}  memory={}",
+                i + 1,
+                sketch.num_clusters(),
+                subgen::bench::fmt_bytes(sketch.memory_bytes())
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,61 @@
+"""Writer/reader for the SUBGENCK checkpoint container.
+
+Byte-compatible with rust/src/io/checkpoint.rs (see the format comment
+there). Kept dependency-free: numpy only.
+"""
+
+from __future__ import annotations
+
+import struct
+
+import numpy as np
+
+MAGIC = b"SUBGENCK"
+VERSION = 1
+
+
+def save_checkpoint(path: str, tensors: dict[str, np.ndarray]) -> None:
+    """Write named f32 tensors (sorted by name, matching the rust writer)."""
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(struct.pack("<II", VERSION, len(tensors)))
+        for name in sorted(tensors):
+            arr = np.ascontiguousarray(tensors[name], dtype=np.float32)
+            nb = name.encode("utf-8")
+            f.write(struct.pack("<I", len(nb)))
+            f.write(nb)
+            f.write(struct.pack("<I", arr.ndim))
+            for d in arr.shape:
+                f.write(struct.pack("<I", d))
+            f.write(arr.tobytes())
+
+
+def load_checkpoint(path: str) -> dict[str, np.ndarray]:
+    """Read a checkpoint back into name -> f32 ndarray."""
+    with open(path, "rb") as f:
+        data = f.read()
+    off = 0
+
+    def take(n):
+        nonlocal off
+        chunk = data[off : off + n]
+        if len(chunk) != n:
+            raise ValueError(f"checkpoint truncated at byte {off}")
+        off += n
+        return chunk
+
+    if take(8) != MAGIC:
+        raise ValueError("bad checkpoint magic")
+    version, count = struct.unpack("<II", take(8))
+    if version != VERSION:
+        raise ValueError(f"unsupported version {version}")
+    out: dict[str, np.ndarray] = {}
+    for _ in range(count):
+        (name_len,) = struct.unpack("<I", take(4))
+        name = take(name_len).decode("utf-8")
+        (ndim,) = struct.unpack("<I", take(4))
+        dims = struct.unpack(f"<{ndim}I", take(4 * ndim))
+        numel = int(np.prod(dims)) if ndim else 1
+        arr = np.frombuffer(take(4 * numel), dtype="<f4").reshape(dims)
+        out[name] = arr.copy()
+    return out

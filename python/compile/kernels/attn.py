@@ -1,0 +1,136 @@
+"""L1 Pallas kernel: weighted-exponential attention decode.
+
+The compute hot-spot of the serving stack — one decode step's attention
+over a packed KV-cache buffer (see rust/src/kvcache/packed.rs for the
+buffer contract). Flash-decoding structure: the cache axis C is blocked;
+a running max / rescaled accumulator pair lives in VMEM scratch across
+the C-blocks of each head, so only one (block_c × dh) tile of K and V is
+resident at a time.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): ``BlockSpec`` expresses the
+HBM→VMEM schedule that the paper's CUDA decode loop expressed with
+threadblocks; the q·Kᵀ product is an MXU-shaped [dh]×[dh, block_c]
+contraction per head; the online-softmax rescale replaces the paper's
+unstabilized exp (identical after normalization).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; real-TPU efficiency is estimated analytically in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+# Default cache-axis block. 128 slots × dh≤64 × 4 B × (K+V) ≈ 64 KiB per
+# tile — comfortably double-bufferable in 16 MiB VMEM; see the §Perf
+# block-size sweep.
+DEFAULT_BLOCK_C = 128
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, w_ref, u_ref, o_ref, acc_ref, m_ref, tau_ref):
+    """One (head, c-block) grid step of the online-softmax decode.
+
+    Refs (VMEM tiles):
+      q_ref:  [dh]          current head's query
+      k_ref:  [block_c, dh] key tile
+      v_ref:  [block_c, dh] value tile
+      w_ref:  [block_c]     value-path weights
+      u_ref:  [block_c]     normalizer-path weights
+      o_ref:  [dh]          output (written on the last block)
+    Scratch (persists across the C-axis grid):
+      acc_ref: [dh]  rescaled Σ w·e^{s-m}·v
+      m_ref:   [1]   running max over active slots
+      tau_ref: [1]   rescaled Σ u·e^{s-m}
+    """
+    blk = pl.program_id(1)
+    nblk = pl.num_programs(1)
+
+    @pl.when(blk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        tau_ref[...] = jnp.zeros_like(tau_ref)
+
+    q = q_ref[...]
+    k = k_ref[...]
+    w = w_ref[...]
+    u = u_ref[...]
+
+    s = k @ q  # [block_c] — the MXU contraction
+    active = (w > 0) | (u > 0)
+    s = jnp.where(active, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    # Rescale history to the new max. exp(NEG_INF - m) == 0 handles the
+    # first block / fully-masked tiles without branches.
+    scale = jnp.exp(m_prev - m_new)
+    e = jnp.exp(s - m_new)  # masked slots: exp(NEG_INF - m) == 0
+    acc_ref[...] = acc_ref[...] * scale + (w * e) @ v_ref[...]
+    tau_ref[0] = tau_ref[0] * scale + jnp.sum(u * e)
+    m_ref[0] = m_new
+
+    @pl.when(blk == nblk - 1)
+    def _finish():
+        tau = tau_ref[0]
+        o_ref[...] = jnp.where(tau > 0, acc_ref[...] / jnp.where(tau > 0, tau, 1.0), 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c",))
+def weighted_attention(q, k, v, w, u, *, block_c: int = DEFAULT_BLOCK_C):
+    """Pallas weighted-exponential attention decode.
+
+    Args:
+      q: [H, dh]; k, v: [H, C, dh]; w, u: [H, C]. C must be a multiple
+      of ``block_c`` (the packer pads with zero-weight slots).
+
+    Returns:
+      [H, dh] — see ``ref.weighted_attention_ref`` for the math.
+    """
+    h, c, dh = k.shape
+    assert q.shape == (h, dh), (q.shape, k.shape)
+    assert w.shape == (h, c) and u.shape == (h, c)
+    block_c = min(block_c, c)
+    assert c % block_c == 0, f"C={c} not a multiple of block_c={block_c}"
+    nblk = c // block_c
+
+    grid = (h, nblk)
+    return pl.pallas_call(
+        _decode_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, dh), lambda h_, c_: (h_, 0)),
+            pl.BlockSpec((None, block_c, dh), lambda h_, c_: (h_, c_, 0)),
+            pl.BlockSpec((None, block_c, dh), lambda h_, c_: (h_, c_, 0)),
+            pl.BlockSpec((None, block_c), lambda h_, c_: (h_, c_)),
+            pl.BlockSpec((None, block_c), lambda h_, c_: (h_, c_)),
+        ],
+        out_specs=pl.BlockSpec((None, dh), lambda h_, c_: (h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dh,), q.dtype),
+            pltpu.VMEM((1,), q.dtype),
+            pltpu.VMEM((1,), q.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, w, u)
+
+
+def vmem_bytes_estimate(block_c: int, dh: int, dtype_bytes: int = 4) -> int:
+    """Analytic VMEM footprint of one grid step (per-tile K, V, w, u, q,
+    o, scratch) — used by the §Perf block-size table, *not* measured from
+    interpret mode (which runs on CPU numpy)."""
+    tile_kv = 2 * block_c * dh * dtype_bytes
+    tile_wu = 2 * block_c * dtype_bytes
+    qo = 2 * dh * dtype_bytes
+    scratch = (dh + 2) * dtype_bytes
+    # Double-buffered input tiles (the next tile streams in during compute).
+    return 2 * (tile_kv + tile_wu) + qo + scratch

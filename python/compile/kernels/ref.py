@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for the L1 kernel and the SubGen estimator.
+
+These are the correctness ground truth: the Pallas kernel must match
+``weighted_attention_ref`` to float tolerance across shapes/dtypes
+(pytest + hypothesis sweep), and the rust `PackedCache::attention`
+implements the identical math host-side.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def weighted_attention_ref(q, k, v, w, u):
+    """Weighted-exponential attention decode (multi-head).
+
+    Args:
+      q: [H, dh]        query per head
+      k: [H, C, dh]     packed cache keys
+      v: [H, C, dh]     packed cache values
+      w: [H, C]         value-path weights (>=0; 0 masks the slot)
+      u: [H, C]         normalizer-path weights (>=0; 0 masks the slot)
+
+    Returns:
+      [H, dh]: ``(Σ_j w_j·e^{s_j}·v_j) / (Σ_j u_j·e^{s_j})`` per head,
+      with ``s_j = <q, k_j>``; 0 where the denominator is 0.
+
+    Numerically stabilized with a shared max-shift over the slots that
+    have any positive weight.
+    """
+    s = jnp.einsum("hd,hcd->hc", q, k)  # [H, C]
+    active = (w > 0) | (u > 0)
+    s_masked = jnp.where(active, s, NEG_INF)
+    m = jnp.max(s_masked, axis=-1, keepdims=True)  # [H, 1]
+    e = jnp.where(active, jnp.exp(s - m), 0.0)  # [H, C]
+    z = jnp.einsum("hc,hcd->hd", w * e, v)  # [H, dh]
+    tau = jnp.sum(u * e, axis=-1, keepdims=True)  # [H, 1]
+    return jnp.where(tau > 0, z / jnp.where(tau > 0, tau, 1.0), 0.0)
+
+
+def softmax_attention_ref(q, k, v, mask=None):
+    """Plain masked softmax attention decode: special case w = u = mask."""
+    ones = jnp.ones(k.shape[:2], dtype=q.dtype) if mask is None else mask
+    return weighted_attention_ref(q, k, v, ones, ones)
+
+
+def causal_attention_ref(q, k, v):
+    """Full causal self-attention for the prefill path.
+
+    Args:
+      q, k, v: [H, T, dh]
+    Returns:
+      [H, T, dh]
+    """
+    t = q.shape[1]
+    s = jnp.einsum("htd,hsd->hts", q, k)
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    s = jnp.where(causal[None, :, :], s, NEG_INF)
+    p = jnp.exp(s - jnp.max(s, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    return jnp.einsum("hts,hsd->htd", p, v)
+
+
+def subgen_estimator_ref(q, mp_k, mp_v, mp_w, nz_k, nz_u):
+    """Algorithm 1's z/τ with separated sample sets (single head).
+
+    Args:
+      q: [dh]
+      mp_k, mp_v: [s, dh] matrix-product samples, mp_w: [s] = μ/(s·‖v‖²)
+      nz_k: [mt, dh] cluster samples, nz_u: [mt] = n_i/t
+
+    Equivalent to packing both sets into one buffer with (w, 0) and
+    (0, u) weights — asserted by tests.
+    """
+    h_q = q[None, :]
+    k = jnp.concatenate([mp_k, nz_k], axis=0)[None]  # [1, C, dh]
+    v = jnp.concatenate([mp_v, jnp.zeros_like(nz_k)], axis=0)[None]
+    w = jnp.concatenate([mp_w, jnp.zeros(nz_k.shape[0], mp_w.dtype)])[None]
+    u = jnp.concatenate([jnp.zeros(mp_k.shape[0], nz_u.dtype), nz_u])[None]
+    return weighted_attention_ref(h_q, k, v, w, u)[0]

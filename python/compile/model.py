@@ -1,0 +1,244 @@
+"""L2: GPT-style decoder (RoPE, pre-LN, MLP) in JAX.
+
+Two entry points are AOT-lowered for the rust runtime (see aot.py):
+
+* ``prefill(params, tokens)`` — full causal forward over a fixed-length
+  (padded) prompt; returns per-token per-layer q/k/v so the rust cache
+  policies can replay their streaming updates, plus all logits.
+* ``decode_step(params, token, pos, K, V, W, U)`` — one autoregressive
+  step whose attention runs through the L1 Pallas kernel over the packed
+  cache buffers (the contract in rust/src/kvcache/packed.rs).
+
+Keys are cached *post-RoPE* (queries rotate at their own position), so
+cache policies cluster exactly the embeddings Figure 1 of the paper
+visualizes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.attn import weighted_attention
+from .kernels.ref import causal_attention_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Decoder hyperparameters (recorded in the artifact manifest)."""
+
+    vocab: int = 16
+    d_model: int = 64
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 256
+    rope_base: float = 10_000.0
+    max_seq: int = 896
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict[str, Any]:
+    """Gaussian init scaled per fan-in; returns a flat name->array dict
+    (flat so the checkpoint format and rust loader stay trivial)."""
+    rng = np.random.default_rng(seed)
+
+    def normal(shape, scale):
+        return jnp.asarray(rng.normal(0.0, scale, size=shape), jnp.float32)
+
+    p: dict[str, Any] = {"embed": normal((cfg.vocab, cfg.d_model), 0.02)}
+    for l in range(cfg.n_layers):
+        s_attn = 1.0 / np.sqrt(cfg.d_model)
+        s_ff = 1.0 / np.sqrt(cfg.d_ff)
+        p[f"l{l}.wq"] = normal((cfg.d_model, cfg.d_model), s_attn)
+        p[f"l{l}.wk"] = normal((cfg.d_model, cfg.d_model), s_attn)
+        p[f"l{l}.wv"] = normal((cfg.d_model, cfg.d_model), s_attn)
+        p[f"l{l}.wo"] = normal((cfg.d_model, cfg.d_model), s_attn)
+        p[f"l{l}.w1"] = normal((cfg.d_model, cfg.d_ff), s_attn)
+        p[f"l{l}.w2"] = normal((cfg.d_ff, cfg.d_model), s_ff)
+        p[f"l{l}.ln1"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p[f"l{l}.ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+    p["ln_f"] = jnp.ones((cfg.d_model,), jnp.float32)
+    return p
+
+
+def rmsnorm(x, gain):
+    """RMSNorm (pre-LN flavor used throughout)."""
+    scale = jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6)
+    return x * scale * gain
+
+
+def rope_angles(cfg: ModelConfig, positions):
+    """RoPE angles [.., d_head/2] for integer positions [..]."""
+    half = cfg.d_head // 2
+    freqs = cfg.rope_base ** (-jnp.arange(half, dtype=jnp.float32) * 2.0 / cfg.d_head)
+    return positions[..., None].astype(jnp.float32) * freqs  # [.., half]
+
+
+def apply_rope(x, ang):
+    """Rotate feature pairs of x [.., d_head] by ang [.., d_head/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c, s = jnp.cos(ang), jnp.sin(ang)
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def _split_heads(x, cfg: ModelConfig):
+    """[.., d_model] -> [.., H, dh] -> moved so heads lead."""
+    *lead, _ = x.shape
+    return x.reshape(*lead, cfg.n_heads, cfg.d_head)
+
+
+def _qkv(params, l, x, cfg, positions):
+    """Project x [T, d] (or [d]) to per-head rope'd q, k and raw v."""
+    q = _split_heads(x @ params[f"l{l}.wq"], cfg)
+    k = _split_heads(x @ params[f"l{l}.wk"], cfg)
+    v = _split_heads(x @ params[f"l{l}.wv"], cfg)
+    ang = rope_angles(cfg, positions)  # [.., half]
+    # Broadcast angles over heads: q is [.., H, dh], ang [.., half].
+    q = apply_rope(q, ang[..., None, :])
+    k = apply_rope(k, ang[..., None, :])
+    # 1/sqrt(dh) folded into q so cached keys stay unscaled embeddings.
+    q = q / np.sqrt(cfg.d_head)
+    return q, k, v
+
+
+def _mlp(params, l, x):
+    h = jax.nn.gelu(x @ params[f"l{l}.w1"])
+    return h @ params[f"l{l}.w2"]
+
+
+def prefill(params, tokens, cfg: ModelConfig):
+    """Causal forward over a full (padded) prompt.
+
+    Args:
+      tokens: [T] int32 (PAD=0 allowed; positions are 0..T-1 regardless —
+        padding sits at the tail and its outputs are ignored downstream).
+
+    Returns dict with:
+      logits: [T, vocab]
+      qs, ks, vs: [L, T, H, dh]  (rope'd q & k; raw v)
+    """
+    t = tokens.shape[0]
+    positions = jnp.arange(t)
+    x = params["embed"][tokens]  # [T, d]
+    qs, ks, vs = [], [], []
+    for l in range(cfg.n_layers):
+        h = rmsnorm(x, params[f"l{l}.ln1"])
+        q, k, v = _qkv(params, l, h, cfg, positions)  # [T, H, dh]
+        qs.append(q)
+        ks.append(k)
+        vs.append(v)
+        # [H, T, dh] for the reference attention.
+        a = causal_attention_ref(
+            jnp.moveaxis(q, 1, 0), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0)
+        )
+        a = jnp.moveaxis(a, 0, 1).reshape(t, cfg.d_model)
+        x = x + a @ params[f"l{l}.wo"]
+        x = x + _mlp(params, l, rmsnorm(x, params[f"l{l}.ln2"]))
+    x = rmsnorm(x, params["ln_f"])
+    logits = x @ params["embed"].T
+    return {
+        "logits": logits,
+        "qs": jnp.stack(qs),
+        "ks": jnp.stack(ks),
+        "vs": jnp.stack(vs),
+    }
+
+
+def decode_step(params, token, pos, cache_k, cache_v, cache_w, cache_u, cfg: ModelConfig):
+    """One decode step over packed caches via the Pallas kernel.
+
+    Args:
+      token: scalar int32 — the current input token.
+      pos:   scalar int32 — its position (drives RoPE).
+      cache_k, cache_v: [L, H, C, dh] packed buffers.
+      cache_w, cache_u: [L, H, C] weights. The **last slot is reserved**:
+        callers pack history into slots 0..C-2 and leave slot C-1
+        zero-weighted; this step writes the new token's (k, v) there with
+        weight 1 on both paths, so self-attention is included while the
+        buffer keeps its kernel-friendly static size.
+
+    Returns dict with:
+      logits: [vocab]; q, k, v: [L, H, dh] (this step's embeddings, for
+      the rust cache-policy update).
+    """
+    x = params["embed"][token]  # [d]
+    qs, ks, vs = [], [], []
+    posv = jnp.asarray(pos)
+    for l in range(cfg.n_layers):
+        h = rmsnorm(x, params[f"l{l}.ln1"])
+        q, k, v = _qkv(params, l, h, cfg, posv)  # [H, dh]
+        qs.append(q)
+        ks.append(k)
+        vs.append(v)
+        # Write the new token into the reserved last slot and run the
+        # whole buffer through the Pallas kernel — all O(C·d) attention
+        # work stays inside the kernel.
+        kk = cache_k[l].at[:, -1, :].set(k)  # [H, C, dh]
+        vv = cache_v[l].at[:, -1, :].set(v)
+        ww = cache_w[l].at[:, -1].set(1.0)
+        uu = cache_u[l].at[:, -1].set(1.0)
+        a = weighted_attention(q, kk, vv, ww, uu)  # [H, dh]
+        x = x + a.reshape(cfg.d_model) @ params[f"l{l}.wo"]
+        x = x + _mlp(params, l, rmsnorm(x, params[f"l{l}.ln2"]))
+    x = rmsnorm(x, params["ln_f"])
+    logits = x @ params["embed"].T
+    return {"logits": logits, "q": jnp.stack(qs), "k": jnp.stack(ks), "v": jnp.stack(vs)}
+
+
+def decode_step_batched(params, tokens, poss, cache_k, cache_v, cache_w, cache_u, cfg: ModelConfig):
+    """vmap of :func:`decode_step` over a batch of independent sequences.
+
+    Args: tokens [B], poss [B], caches [B, L, H, C(+pad), dh] / [B, L, H, C].
+    """
+    return jax.vmap(
+        lambda t, p, k, v, w, u: decode_step(params, t, p, k, v, w, u, cfg)
+    )(tokens, poss, cache_k, cache_v, cache_w, cache_u)
+
+
+def lm_loss(params, tokens, mask, cfg: ModelConfig, aux_weight: float = 0.1):
+    """Masked next-token cross-entropy with a dense auxiliary term.
+
+    Args:
+      tokens: [B, T] int32; mask: [B, T] f32 — weight of each *predicting*
+      position (position j predicts token j+1).
+      aux_weight: weight of the full-sequence LM loss over all non-PAD
+        positions. The dense signal accelerates induction-head formation
+        (structure tokens are predictable) while the primary term keeps
+        the objective focused on the answer digits.
+
+    Returns scalar loss.
+    """
+
+    def one(seq):
+        return prefill(params, seq, cfg)["logits"]
+
+    logits = jax.vmap(one)(tokens)  # [B, T, vocab]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    targets = tokens[:, 1:]  # [B, T-1]
+    lp = jnp.take_along_axis(logp[:, :-1], targets[..., None], axis=-1)[..., 0]
+    m = mask[:, :-1]
+    answer_loss = -(lp * m).sum() / jnp.maximum(m.sum(), 1.0)
+    dense_m = (targets != 0).astype(jnp.float32)
+    dense_loss = -(lp * dense_m).sum() / jnp.maximum(dense_m.sum(), 1.0)
+    return answer_loss + aux_weight * dense_loss
+
+
+def greedy_answer_accuracy(params, tokens, mask, cfg: ModelConfig):
+    """Fraction of masked positions predicted correctly (teacher-forced)."""
+
+    def one(seq):
+        return prefill(params, seq, cfg)["logits"]
+
+    logits = jax.vmap(one)(tokens)
+    pred = jnp.argmax(logits[:, :-1], axis=-1)
+    ok = (pred == tokens[:, 1:]).astype(jnp.float32) * mask[:, :-1]
+    return ok.sum() / jnp.maximum(mask[:, :-1].sum(), 1.0)

@@ -1,0 +1,128 @@
+"""Synthetic line-retrieval task (the LongEval analog, see DESIGN.md).
+
+A document is a list of (line id, value) records rendered as
+``L<id2>:<val2>;`` followed by a query ``?<id2>=`` whose answer is the
+two value digits of the queried line. Ids use two digits (a 2-token
+match suffices for the induction circuit — the 3-digit variant needs a
+deeper model than the CPU training budget allows; the retrieval topology
+is unchanged). Retrieval accuracy under KV-cache
+compression is the paper's Table-1 metric; this task reproduces its
+topology (answer correctness requires attending to one distant key-value
+pair among many distractors) at a scale a from-scratch CPU-trained model
+can master.
+
+Tokenization is character-level over a 16-symbol vocabulary. The rust
+workload generator (rust/src/workload/) implements the identical format;
+``GOLDEN_EXAMPLE`` below is asserted byte-identical in both test suites.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# Vocabulary: PAD plus the 15 surface characters.
+PAD = 0
+CHARS = "0123456789L:;?="
+VOCAB = 1 + len(CHARS)  # 16
+CHAR_TO_ID = {c: i + 1 for i, c in enumerate(CHARS)}
+ID_TO_CHAR = {i + 1: c for i, c in enumerate(CHARS)}
+
+TOKENS_PER_LINE = 7  # 'L' + 2 id digits + ':' + 2 value digits + ';'
+QUERY_TOKENS = 4  # '?' + 2 id digits + '='
+ANSWER_TOKENS = 2  # 2 value digits
+
+
+def encode(text: str) -> list[int]:
+    """Character-level encode; raises on unknown characters."""
+    return [CHAR_TO_ID[c] for c in text]
+
+
+def decode(ids) -> str:
+    """Inverse of :func:`encode`, skipping PAD."""
+    return "".join(ID_TO_CHAR[i] for i in ids if i != PAD)
+
+
+@dataclasses.dataclass
+class RetrievalInstance:
+    """One generated document + query + answer."""
+
+    lines: list[tuple[int, int]]  # (id, value) records in order
+    query_id: int  # which line id is asked for
+    answer: int  # its value
+
+    def render(self) -> tuple[str, str]:
+        """Return (prompt text, answer text)."""
+        doc = "".join(f"L{i:02d}:{v:02d};" for i, v in self.lines)
+        prompt = f"{doc}?{self.query_id:02d}="
+        return prompt, f"{self.answer:02d}"
+
+    def tokens(self) -> tuple[list[int], list[int]]:
+        """Return (prompt token ids, answer token ids)."""
+        prompt, answer = self.render()
+        return encode(prompt), encode(answer)
+
+
+def sample_instance(rng: np.random.Generator, n_lines: int) -> RetrievalInstance:
+    """Sample a document with ``n_lines`` distinct line ids."""
+    ids = rng.choice(100, size=n_lines, replace=False)
+    values = rng.integers(0, 100, size=n_lines)
+    qpos = int(rng.integers(0, n_lines))
+    return RetrievalInstance(
+        lines=[(int(i), int(v)) for i, v in zip(ids, values)],
+        query_id=int(ids[qpos]),
+        answer=int(values[qpos]),
+    )
+
+
+def seq_len_for_lines(n_lines: int) -> int:
+    """Prompt+answer length in tokens for a document of n_lines."""
+    return n_lines * TOKENS_PER_LINE + QUERY_TOKENS + ANSWER_TOKENS
+
+
+def lines_for_seq_len(n: int) -> int:
+    """Largest line count whose full sequence fits in ``n`` tokens."""
+    return (n - QUERY_TOKENS - ANSWER_TOKENS) // TOKENS_PER_LINE
+
+
+def make_batch(
+    rng: np.random.Generator,
+    batch: int,
+    max_len: int,
+    min_lines: int = 4,
+    max_lines: int | None = None,
+):
+    """Sample a padded training batch.
+
+    Returns (tokens [B, max_len] int32, loss_mask [B, max_len] f32,
+    lengths [B]). ``tokens`` holds prompt+answer followed by PAD;
+    ``loss_mask`` is 1.0 exactly on the answer-digit positions (loss and
+    accuracy are measured there — next-token prediction *of* the answer
+    digit, i.e. mask marks positions whose *target* is an answer digit).
+    """
+    cap = lines_for_seq_len(max_len)
+    hi = min(max_lines, cap) if max_lines is not None else cap
+    hi = max(hi, min_lines)
+    toks = np.full((batch, max_len), PAD, dtype=np.int32)
+    mask = np.zeros((batch, max_len), dtype=np.float32)
+    lengths = np.zeros(batch, dtype=np.int32)
+    for b in range(batch):
+        n_lines = int(rng.integers(min_lines, hi + 1))
+        inst = sample_instance(rng, n_lines)
+        p, a = inst.tokens()
+        full = p + a
+        toks[b, : len(full)] = full
+        # Targets are shifted by one: position j predicts token j+1. The
+        # answer digits sit at indices len(p) and len(p)+1, so the
+        # predicting positions are len(p)-1 and len(p).
+        mask[b, len(p) - 1] = 1.0
+        mask[b, len(p)] = 1.0
+        lengths[b] = len(full)
+    return toks, mask, lengths
+
+
+# One fixed instance asserted identical in rust/src/workload tests.
+GOLDEN_EXAMPLE = RetrievalInstance(lines=[(7, 42), (23, 99)], query_id=23, answer=99)
+GOLDEN_PROMPT_TOKENS = encode("L07:42;L23:99;?23=")
+GOLDEN_ANSWER_TOKENS = encode("99")

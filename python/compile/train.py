@@ -1,0 +1,102 @@
+"""Build-time trainer for the line-retrieval model (hand-rolled Adam —
+optax is not available offline).
+
+Runs once from ``aot.py`` (or standalone: ``python -m compile.train``);
+the resulting weights are baked into the lowered HLO artifacts and also
+saved as ``model.ck`` in the rust checkpoint format.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import tasks
+from .model import ModelConfig, greedy_answer_accuracy, init_params, lm_loss
+
+
+def adam_init(params):
+    """Zero first/second moments matching the param tree."""
+    zeros = {k: jnp.zeros_like(v) for k, v in params.items()}
+    return {"m": zeros, "v": {k: jnp.zeros_like(v) for k, v in params.items()}, "t": jnp.zeros(())}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "b1", "b2", "eps"))
+def adam_step(params, opt, tokens, mask, cfg, lr=3e-3, b1=0.9, b2=0.98, eps=1e-9):
+    """One jitted Adam update; returns (params, opt, loss). ``lr`` is a
+    traced scalar so schedules don't retrigger compilation."""
+    loss, grads = jax.value_and_grad(lm_loss)(params, tokens, mask, cfg)
+    t = opt["t"] + 1.0
+    new_m, new_v, new_p = {}, {}, {}
+    for k, g in grads.items():
+        m = b1 * opt["m"][k] + (1 - b1) * g
+        v = b2 * opt["v"][k] + (1 - b2) * g * g
+        mh = m / (1 - b1**t)
+        vh = v / (1 - b2**t)
+        new_m[k] = m
+        new_v[k] = v
+        new_p[k] = params[k] - lr * mh / (jnp.sqrt(vh) + eps)
+    return new_p, {"m": new_m, "v": new_v, "t": t}, loss
+
+
+def lr_schedule(step: int, steps: int, peak: float = 3e-3, warmup: int = 100) -> float:
+    """Linear warmup then cosine decay to 10% of peak."""
+    if step < warmup:
+        return peak * (step + 1) / warmup
+    frac = (step - warmup) / max(steps - warmup, 1)
+    return peak * (0.1 + 0.9 * 0.5 * (1.0 + np.cos(np.pi * min(frac, 1.0))))
+
+
+def train(
+    cfg: ModelConfig,
+    steps: int = 1500,
+    batch: int = 16,
+    train_len: int = 768,
+    seed: int = 0,
+    log_every: int = 100,
+    min_lines: int = 4,
+    initial_params=None,
+):
+    """Train and return (params, final answer accuracy on a held-out batch).
+
+    ``train_len`` is the padded sequence length; documents sample a
+    uniform number of lines up to what fits, so the model sees every
+    retrieval distance it will be evaluated at. Pass ``initial_params``
+    to resume from an existing checkpoint.
+    """
+    rng = np.random.default_rng(seed)
+    params = initial_params if initial_params is not None else init_params(cfg, seed)
+    opt = adam_init(params)
+    t0 = time.time()
+    for step in range(1, steps + 1):
+        toks, mask, _ = tasks.make_batch(rng, batch, train_len, min_lines=min_lines)
+        lr = lr_schedule(step - 1, steps)
+        params, opt, loss = adam_step(
+            params, opt, jnp.asarray(toks), jnp.asarray(mask), cfg, lr=lr
+        )
+        if step % log_every == 0 or step == 1:
+            print(
+                f"[train] step {step:5d} loss {float(loss):.4f} lr {lr:.2e} "
+                f"({(time.time() - t0):.0f}s)",
+                flush=True,
+            )
+    # Held-out accuracy.
+    toks, mask, _ = tasks.make_batch(rng, 32, train_len, min_lines=min_lines)
+    acc = float(greedy_answer_accuracy(params, jnp.asarray(toks), jnp.asarray(mask), cfg))
+    print(f"[train] final answer-digit accuracy: {acc:.3f}", flush=True)
+    return params, acc
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=1500)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--train-len", type=int, default=768)
+    args = ap.parse_args()
+    train(ModelConfig(), steps=args.steps, batch=args.batch, train_len=args.train_len)

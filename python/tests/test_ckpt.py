@@ -1,0 +1,60 @@
+"""Checkpoint container: python roundtrip + byte-level format checks
+(the rust loader parses the same layout; see rust/src/io/checkpoint.rs)."""
+
+import struct
+
+import numpy as np
+import pytest
+
+from compile import ckpt
+
+
+def test_roundtrip(tmp_path):
+    path = str(tmp_path / "m.ck")
+    tensors = {
+        "embed": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "bias": np.asarray([-1.0, 0.5], dtype=np.float32),
+    }
+    ckpt.save_checkpoint(path, tensors)
+    back = ckpt.load_checkpoint(path)
+    assert set(back) == {"embed", "bias"}
+    np.testing.assert_array_equal(back["embed"], tensors["embed"])
+    np.testing.assert_array_equal(back["bias"], tensors["bias"])
+
+
+def test_header_layout(tmp_path):
+    path = str(tmp_path / "m.ck")
+    ckpt.save_checkpoint(path, {"x": np.zeros((2,), np.float32)})
+    raw = open(path, "rb").read()
+    assert raw[:8] == b"SUBGENCK"
+    version, count = struct.unpack("<II", raw[8:16])
+    assert (version, count) == (1, 1)
+    (name_len,) = struct.unpack("<I", raw[16:20])
+    assert raw[20 : 20 + name_len] == b"x"
+
+
+def test_truncated_rejected(tmp_path):
+    path = str(tmp_path / "m.ck")
+    ckpt.save_checkpoint(path, {"x": np.zeros((4,), np.float32)})
+    raw = open(path, "rb").read()
+    with open(path, "wb") as f:
+        f.write(raw[:-5])
+    with pytest.raises(ValueError, match="truncated"):
+        ckpt.load_checkpoint(path)
+
+
+def test_bad_magic(tmp_path):
+    path = str(tmp_path / "m.ck")
+    with open(path, "wb") as f:
+        f.write(b"BOGUS!!!" + b"\x00" * 8)
+    with pytest.raises(ValueError, match="magic"):
+        ckpt.load_checkpoint(path)
+
+
+def test_names_sorted_on_disk(tmp_path):
+    path = str(tmp_path / "m.ck")
+    ckpt.save_checkpoint(
+        path, {"zeta": np.zeros(1, np.float32), "alpha": np.zeros(1, np.float32)}
+    )
+    raw = open(path, "rb").read()
+    assert raw.find(b"alpha") < raw.find(b"zeta")

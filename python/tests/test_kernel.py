@@ -1,0 +1,161 @@
+"""L1 kernel vs pure-jnp oracle — the core correctness signal.
+
+Hypothesis sweeps shapes, weight sparsity patterns and magnitudes; the
+kernel must match ``weighted_attention_ref`` to float32 tolerance in all
+regimes, including fully-masked buffers and huge scores.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attn import weighted_attention, vmem_bytes_estimate, DEFAULT_BLOCK_C
+from compile.kernels.ref import (
+    softmax_attention_ref,
+    subgen_estimator_ref,
+    weighted_attention_ref,
+)
+
+RTOL = 2e-4
+ATOL = 2e-5
+
+
+def rand_case(rng, h, c, dh, w_density=0.7, u_density=0.7, scale=1.0):
+    q = jnp.asarray(rng.normal(size=(h, dh)) * scale, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(h, c, dh)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(h, c, dh)), jnp.float32)
+    w = rng.uniform(0, 2, size=(h, c)) * (rng.uniform(size=(h, c)) < w_density)
+    u = rng.uniform(0, 2, size=(h, c)) * (rng.uniform(size=(h, c)) < u_density)
+    return q, k, v, jnp.asarray(w, jnp.float32), jnp.asarray(u, jnp.float32)
+
+
+def assert_matches_ref(q, k, v, w, u, block_c=DEFAULT_BLOCK_C):
+    got = weighted_attention(q, k, v, w, u, block_c=block_c)
+    want = weighted_attention_ref(q, k, v, w, u)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+
+class TestBasic:
+    def test_single_block(self):
+        rng = np.random.default_rng(0)
+        assert_matches_ref(*rand_case(rng, 2, 64, 16), block_c=64)
+
+    def test_multi_block(self):
+        rng = np.random.default_rng(1)
+        assert_matches_ref(*rand_case(rng, 4, 256, 16), block_c=64)
+
+    def test_block_equals_capacity(self):
+        rng = np.random.default_rng(2)
+        assert_matches_ref(*rand_case(rng, 1, 128, 8), block_c=128)
+
+    def test_uniform_weights_are_softmax_attention(self):
+        rng = np.random.default_rng(3)
+        h, c, dh = 2, 128, 16
+        q = jnp.asarray(rng.normal(size=(h, dh)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(h, c, dh)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(h, c, dh)), jnp.float32)
+        ones = jnp.ones((h, c), jnp.float32)
+        got = weighted_attention(q, k, v, ones, ones)
+        want = softmax_attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+    def test_fully_masked_returns_zero(self):
+        rng = np.random.default_rng(4)
+        q, k, v, _, _ = rand_case(rng, 2, 128, 16)
+        zeros = jnp.zeros((2, 128), jnp.float32)
+        out = weighted_attention(q, k, v, zeros, zeros)
+        assert np.all(np.asarray(out) == 0.0)
+
+    def test_masked_tail_block_ignored(self):
+        # Data poisoned in the tail block, weights zero there.
+        rng = np.random.default_rng(5)
+        h, c, dh = 2, 256, 16
+        q, k, v, w, u = rand_case(rng, h, c, dh, 1.0, 1.0)
+        k = k.at[:, 128:, :].set(1e4)
+        w = w.at[:, 128:].set(0.0)
+        u = u.at[:, 128:].set(0.0)
+        assert_matches_ref(q, k, v, w, u, block_c=128)
+
+    def test_huge_scores_stable(self):
+        h, c, dh = 1, 128, 8
+        q = jnp.full((h, dh), 10.0, jnp.float32)
+        k = jnp.full((h, c, dh), 10.0, jnp.float32)  # scores = 800
+        v = jnp.ones((h, c, dh), jnp.float32)
+        ones = jnp.ones((h, c), jnp.float32)
+        out = np.asarray(weighted_attention(q, k, v, ones, ones))
+        assert np.all(np.isfinite(out))
+        np.testing.assert_allclose(out, 1.0, rtol=1e-5)
+
+    def test_value_only_and_norm_only_slots(self):
+        # w-only slots contribute to z, u-only slots to tau.
+        h, dh = 1, 4
+        c = 128
+        k = jnp.zeros((h, c, dh), jnp.float32)
+        v = jnp.zeros((h, c, dh), jnp.float32)
+        w = jnp.zeros((h, c), jnp.float32)
+        u = jnp.zeros((h, c), jnp.float32)
+        v = v.at[0, 0].set(jnp.asarray([2.0, 4.0, 0.0, 0.0]))
+        w = w.at[0, 0].set(0.5)
+        u = u.at[0, 1].set(2.0)
+        u = u.at[0, 2].set(2.0)
+        q = jnp.zeros((h, dh), jnp.float32)
+        out = np.asarray(weighted_attention(q, k, v, w, u))[0]
+        # z = 0.5*(2,4,0,0); tau = 4 -> (0.25, 0.5, 0, 0)
+        np.testing.assert_allclose(out, [0.25, 0.5, 0.0, 0.0], rtol=1e-6)
+
+    def test_rejects_indivisible_block(self):
+        rng = np.random.default_rng(6)
+        q, k, v, w, u = rand_case(rng, 1, 96, 8)
+        with pytest.raises(AssertionError):
+            weighted_attention(q, k, v, w, u, block_c=64)
+
+
+class TestSubGenEstimator:
+    def test_packed_equals_split_form(self):
+        rng = np.random.default_rng(7)
+        dh, s, mt = 8, 24, 40
+        q = jnp.asarray(rng.normal(size=(dh,)), jnp.float32)
+        mp_k = jnp.asarray(rng.normal(size=(s, dh)), jnp.float32)
+        mp_v = jnp.asarray(rng.normal(size=(s, dh)), jnp.float32)
+        mp_w = jnp.asarray(rng.uniform(0.1, 2.0, size=(s,)), jnp.float32)
+        nz_k = jnp.asarray(rng.normal(size=(mt, dh)), jnp.float32)
+        nz_u = jnp.asarray(rng.uniform(0.1, 5.0, size=(mt,)), jnp.float32)
+        want = subgen_estimator_ref(q, mp_k, mp_v, mp_w, nz_k, nz_u)
+        # Pack into one padded kernel buffer.
+        c = 128
+        k = jnp.zeros((1, c, dh), jnp.float32)
+        v = jnp.zeros((1, c, dh), jnp.float32)
+        w = jnp.zeros((1, c), jnp.float32)
+        u = jnp.zeros((1, c), jnp.float32)
+        k = k.at[0, :s].set(mp_k).at[0, s : s + mt].set(nz_k)
+        v = v.at[0, :s].set(mp_v)
+        w = w.at[0, :s].set(mp_w)
+        u = u.at[0, s : s + mt].set(nz_u)
+        got = weighted_attention(q[None], k, v, w, u)[0]
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    nblk=st.integers(1, 3),
+    dh=st.sampled_from([4, 8, 16]),
+    w_density=st.floats(0.0, 1.0),
+    u_density=st.floats(0.1, 1.0),
+    scale=st.floats(0.1, 3.0),
+    seed=st.integers(0, 2**31),
+)
+def test_hypothesis_sweep(h, nblk, dh, w_density, u_density, scale, seed):
+    """Shape/sparsity/magnitude sweep: kernel == oracle."""
+    rng = np.random.default_rng(seed)
+    c = 64 * nblk
+    q, k, v, w, u = rand_case(rng, h, c, dh, w_density, u_density, scale)
+    assert_matches_ref(q, k, v, w, u, block_c=64)
+
+
+def test_vmem_estimate_fits_budget():
+    """Default block conforms to the 16 MiB VMEM budget with margin."""
+    assert vmem_bytes_estimate(DEFAULT_BLOCK_C, 64) < 16 * 1024 * 1024 // 4
+    # Larger blocks grow linearly.
+    assert vmem_bytes_estimate(256, 64) > vmem_bytes_estimate(128, 64)

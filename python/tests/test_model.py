@@ -1,0 +1,127 @@
+"""L2 model: shapes, RoPE properties, decode/prefill consistency, and a
+short learning smoke test."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import tasks
+from compile.model import (
+    ModelConfig,
+    apply_rope,
+    decode_step,
+    greedy_answer_accuracy,
+    init_params,
+    lm_loss,
+    prefill,
+    rope_angles,
+)
+
+SMALL = ModelConfig(d_model=32, n_heads=2, n_layers=2, d_ff=64)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(SMALL, seed=0)
+
+
+def test_param_shapes(params):
+    assert params["embed"].shape == (SMALL.vocab, SMALL.d_model)
+    assert params["l0.wq"].shape == (SMALL.d_model, SMALL.d_model)
+    assert params["l1.w1"].shape == (SMALL.d_model, SMALL.d_ff)
+
+
+def test_prefill_shapes(params):
+    toks = jnp.asarray(np.arange(10) % SMALL.vocab, jnp.int32)
+    out = prefill(params, toks, SMALL)
+    assert out["logits"].shape == (10, SMALL.vocab)
+    assert out["ks"].shape == (SMALL.n_layers, 10, SMALL.n_heads, SMALL.d_head)
+    assert out["qs"].shape == out["vs"].shape == out["ks"].shape
+
+
+def test_rope_preserves_norm_and_relative_angle():
+    cfg = SMALL
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(cfg.d_head,)), jnp.float32)
+    a5 = rope_angles(cfg, jnp.asarray(5))
+    a9 = rope_angles(cfg, jnp.asarray(9))
+    r5 = apply_rope(x, a5)
+    r9 = apply_rope(x, a9)
+    # Norm preservation.
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(r5)), float(jnp.linalg.norm(x)), rtol=1e-5
+    )
+    # Relative property: <R_m q, R_n k> depends only on m - n.
+    y = jnp.asarray(rng.normal(size=(cfg.d_head,)), jnp.float32)
+    a0 = rope_angles(cfg, jnp.asarray(0))
+    a4 = rope_angles(cfg, jnp.asarray(4))
+    lhs = float(jnp.dot(apply_rope(x, a9), apply_rope(y, a5)))
+    rhs = float(jnp.dot(apply_rope(x, a4), apply_rope(y, a0)))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4, atol=1e-5)
+
+
+def test_decode_matches_prefill(params):
+    """Exact-cache decode must reproduce prefill logits step by step."""
+    cfg = SMALL
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(1, cfg.vocab, size=12), jnp.int32)
+    ref = prefill(params, toks, cfg)
+    l, h, dh, c = cfg.n_layers, cfg.n_heads, cfg.d_head, 64
+    ck = jnp.zeros((l, h, c, dh))
+    cv = jnp.zeros((l, h, c, dh))
+    cw = jnp.zeros((l, h, c))
+    cu = jnp.zeros((l, h, c))
+    for t in range(12):
+        d = decode_step(params, toks[t], t, ck, cv, cw, cu, cfg)
+        np.testing.assert_allclose(
+            np.asarray(d["logits"]), np.asarray(ref["logits"][t]), rtol=5e-3, atol=5e-4
+        )
+        # This step's k/v must equal the prefill-harvested ones.
+        np.testing.assert_allclose(
+            np.asarray(d["k"]), np.asarray(ref["ks"][:, t]), rtol=1e-4, atol=1e-5
+        )
+        ck = ck.at[:, :, t, :].set(d["k"])
+        cv = cv.at[:, :, t, :].set(d["v"])
+        cw = cw.at[:, :, t].set(1.0)
+        cu = cu.at[:, :, t].set(1.0)
+
+
+def test_loss_decreases_quickly():
+    """Five Adam steps on a fixed tiny batch must reduce the loss."""
+    from compile.train import adam_init, adam_step
+
+    cfg = SMALL
+    p = init_params(cfg, 1)
+    opt = adam_init(p)
+    rng = np.random.default_rng(2)
+    toks, mask, _ = tasks.make_batch(rng, 4, 96)
+    tj, mj = jnp.asarray(toks), jnp.asarray(mask)
+    first = float(lm_loss(p, tj, mj, cfg))
+    for _ in range(5):
+        p, opt, loss = adam_step(p, opt, tj, mj, cfg)
+    assert float(loss) < first, (first, float(loss))
+
+
+def test_accuracy_metric_bounds(params):
+    rng = np.random.default_rng(3)
+    toks, mask, _ = tasks.make_batch(rng, 2, 96)
+    acc = float(greedy_answer_accuracy(params, jnp.asarray(toks), jnp.asarray(mask), SMALL))
+    assert 0.0 <= acc <= 1.0
+
+
+def test_decode_reserved_slot_not_required_empty():
+    """Writing the new token must override whatever was in the last slot."""
+    cfg = SMALL
+    p = init_params(cfg, 4)
+    l, h, dh, c = cfg.n_layers, cfg.n_heads, cfg.d_head, 64
+    ck = jnp.full((l, h, c, dh), 7.0)  # garbage everywhere
+    cv = jnp.full((l, h, c, dh), -3.0)
+    cw = jnp.zeros((l, h, c))
+    cu = jnp.zeros((l, h, c))
+    d = decode_step(p, jnp.asarray(3), 0, ck, cv, cw, cu, cfg)
+    # First token, empty history: logits must equal prefill of length 1.
+    ref = prefill(p, jnp.asarray([3], jnp.int32), cfg)
+    np.testing.assert_allclose(
+        np.asarray(d["logits"]), np.asarray(ref["logits"][0]), rtol=1e-4, atol=1e-5
+    )

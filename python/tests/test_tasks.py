@@ -1,0 +1,73 @@
+"""Synthetic line-retrieval task: encoding, batching, golden parity."""
+
+import numpy as np
+import pytest
+
+from compile import tasks
+
+
+def test_golden_tokens_fixed():
+    """The fixture asserted identical in the rust workload tests."""
+    p, a = tasks.GOLDEN_EXAMPLE.tokens()
+    assert p == tasks.GOLDEN_PROMPT_TOKENS
+    assert a == tasks.GOLDEN_ANSWER_TOKENS
+    assert tasks.decode(p) == "L07:42;L23:99;?23="
+    assert tasks.decode(a) == "99"
+
+
+def test_encode_decode_roundtrip():
+    text = "L42:07;?42="
+    assert tasks.decode(tasks.encode(text)) == text
+
+
+def test_encode_rejects_unknown():
+    with pytest.raises(KeyError):
+        tasks.encode("x")
+
+
+def test_vocab_size():
+    assert tasks.VOCAB == 16
+    assert max(tasks.CHAR_TO_ID.values()) == 15
+    assert tasks.PAD == 0
+
+
+def test_seq_len_formula():
+    inst = tasks.sample_instance(np.random.default_rng(0), 12)
+    p, a = inst.tokens()
+    assert len(p) + len(a) == tasks.seq_len_for_lines(12)
+    assert tasks.lines_for_seq_len(tasks.seq_len_for_lines(12)) == 12
+
+
+def test_instance_answer_consistent():
+    rng = np.random.default_rng(1)
+    for _ in range(20):
+        inst = tasks.sample_instance(rng, 8)
+        match = [v for i, v in inst.lines if i == inst.query_id]
+        assert match == [inst.answer]
+        # Line ids are distinct.
+        ids = [i for i, _ in inst.lines]
+        assert len(set(ids)) == len(ids)
+
+
+def test_make_batch_masks_answer_positions():
+    rng = np.random.default_rng(2)
+    toks, mask, lengths = tasks.make_batch(rng, 4, 256)
+    assert toks.shape == (4, 256) and mask.shape == (4, 256)
+    for b in range(4):
+        on = np.nonzero(mask[b])[0]
+        assert len(on) == 2
+        # Predicting positions are the '=' token and the first answer
+        # digit; their *targets* are the two answer digits.
+        eq_id = tasks.CHAR_TO_ID["="]
+        assert toks[b, on[0]] == eq_id
+        digit_ids = {tasks.CHAR_TO_ID[c] for c in "0123456789"}
+        assert int(toks[b, on[0] + 1]) in digit_ids
+        assert int(toks[b, on[1] + 1]) in digit_ids
+        assert lengths[b] == on[1] + 2  # mask[1] predicts the final token
+
+
+def test_make_batch_respects_max_len():
+    rng = np.random.default_rng(3)
+    toks, _, lengths = tasks.make_batch(rng, 8, 128)
+    assert np.all(lengths <= 128)
+    assert np.all(toks[np.arange(8), lengths - 1] != tasks.PAD)

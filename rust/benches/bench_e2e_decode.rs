@@ -1,0 +1,83 @@
+//! Bench: end-to-end decode step through PJRT per cache-capacity
+//! variant and per policy — the serving-side payoff of sublinear caches
+//! (smaller buffers ⇒ less per-step traffic ⇒ flatter decode latency).
+//!
+//! Requires artifacts (`make artifacts`); prints a notice and exits
+//! cleanly when they are missing so `cargo bench` stays green.
+//!
+//!     cargo bench --bench bench_e2e_decode
+
+use std::path::Path;
+use subgen::bench::{black_box, Bencher, Table};
+use subgen::model::{Generator, ModelSpec, SequenceCaches};
+use subgen::rng::Pcg64;
+use subgen::runtime::Runtime;
+use subgen::workload::{lines_for_seq_len, RetrievalSampler};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.toml").exists() {
+        println!("bench_e2e_decode: artifacts/ missing — run `make artifacts` first; skipping.");
+        return Ok(());
+    }
+    let rt = Runtime::load(artifacts, None)?;
+    let spec = ModelSpec::from_manifest(rt.manifest())?;
+    let generator = Generator::new(&rt, spec.clone());
+    let bencher = Bencher { budget: std::time::Duration::from_millis(800), ..Default::default() };
+
+    // Shared prompt + per-policy caches at n = 384.
+    let n = 384;
+    let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(1));
+    let inst = sampler.sample(lines_for_seq_len(n));
+    let (prompt, _) = inst.tokens();
+    let pre = generator.prefill(&prompt)?;
+
+    println!("== decode-step latency by policy (n = {n}, budget 192/head) ==\n");
+    let mut table = Table::new(&["policy", "capacity C", "step ms", "pack ms", "cache bytes"]);
+    for policy in ["exact", "sink", "h2o", "subgen"] {
+        let budget = if policy == "exact" { usize::MAX / 4 } else { 192 };
+        let mut caches = SequenceCaches::new(&spec, policy, budget, 4.0, 3)?;
+        for pos in 0..prompt.len() {
+            let q = generator.position_slice(&pre.qs, pos);
+            let k = generator.position_slice(&pre.ks, pos);
+            let v = generator.position_slice(&pre.vs, pos);
+            caches.update(&q, &k, &v);
+        }
+        let c = spec.pick_cache_variant(caches.max_slots() + 1);
+        let mut flat = caches.assemble(c)?;
+        let r_pack = bencher.run(&format!("{policy}/pack"), || {
+            caches.assemble_into(black_box(&mut flat)).unwrap();
+        });
+        let r_step = bencher.run(&format!("{policy}/step"), || {
+            black_box(generator.decode(5, prompt.len(), &flat).unwrap());
+        });
+        table.row(&[
+            policy.to_string(),
+            c.to_string(),
+            format!("{:.2}", r_step.mean_ns() / 1e6),
+            format!("{:.2}", r_pack.mean_ns() / 1e6),
+            caches.memory_bytes().to_string(),
+        ]);
+    }
+    table.print();
+
+    println!("\n== decode-step latency by cache capacity (exact math, zero-padded) ==\n");
+    let mut t2 = Table::new(&["capacity C", "step ms"]);
+    for &c in &spec.cache_variants {
+        let mut caches = SequenceCaches::new(&spec, "sliding", c.saturating_sub(2).max(4), 4.0, 3)?;
+        for pos in 0..prompt.len().min(c - 2) {
+            let q = generator.position_slice(&pre.qs, pos);
+            let k = generator.position_slice(&pre.ks, pos);
+            let v = generator.position_slice(&pre.vs, pos);
+            caches.update(&q, &k, &v);
+        }
+        let flat = caches.assemble(c)?;
+        let r = bencher.run(&format!("step@C={c}"), || {
+            black_box(generator.decode(5, 400, &flat).unwrap());
+        });
+        t2.row(&[c.to_string(), format!("{:.2}", r.mean_ns() / 1e6)]);
+    }
+    t2.print();
+    println!("\n(smaller C ⇒ proportionally cheaper steps: the serving form of sublinear memory)");
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Bench companion to Figure 1: cost of the clustering machinery —
+//! greedy k-center (one-shot compression) and the online δ-threshold
+//! pass (streaming) — at cache-harvest scale, plus the t-SNE step.
+//!
+//!     cargo bench --bench bench_fig1_clustering
+
+use subgen::bench::{black_box, Bencher, Table};
+use subgen::clustering::{greedy_k_center, OnlineThresholdClustering};
+use subgen::rng::Pcg64;
+use subgen::tensor::Tensor;
+use subgen::tsne::{tsne, TsneConfig};
+
+fn main() {
+    let dim = 16;
+    let bencher = Bencher::quick();
+
+    println!("== greedy k-center (paper's Fig-1 centers, k = 16) ==\n");
+    let mut table = Table::new(&["n points", "k-center ms", "radius"]);
+    for n in [256usize, 512, 1024, 2048] {
+        let mut rng = Pcg64::seed_from_u64(n as u64);
+        let pts = Tensor::randn(&mut rng, n, dim, 1.0);
+        let mut radius = 0.0f32;
+        let r = bencher.run(&format!("kcenter@n={n}"), || {
+            let res = greedy_k_center(black_box(&pts), 16, 0);
+            radius = res.radius;
+        });
+        table.row(&[
+            n.to_string(),
+            format!("{:.2}", r.mean_ns() / 1e6),
+            format!("{radius:.3}"),
+        ]);
+    }
+    table.print();
+
+    println!("\n== online δ-threshold clustering throughput ==\n");
+    let mut t2 = Table::new(&["planted m", "ns/point", "clusters found"]);
+    for m in [4usize, 16, 64, 256] {
+        let mut rng = Pcg64::seed_from_u64(m as u64);
+        // m well-separated centers + per-point jitter.
+        let centers = Tensor::randn(&mut rng, m, dim, 2.0);
+        let mut oc = OnlineThresholdClustering::new(dim, 1.0);
+        let mut i = 0usize;
+        let r = bencher.run(&format!("online@m={m}"), || {
+            let c = centers.row(i % m);
+            let p: Vec<f32> = c.iter().map(|&x| x + 0.01 * ((i * 31 % 7) as f32)).collect();
+            oc.push(black_box(&p));
+            i += 1;
+        });
+        t2.row(&[
+            m.to_string(),
+            format!("{:.0}", r.mean_ns()),
+            oc.num_clusters().to_string(),
+        ]);
+    }
+    t2.print();
+
+    println!("\n== t-SNE (Fig-1 visualization path) ==\n");
+    let mut t3 = Table::new(&["n points", "iters", "seconds"]);
+    for (n, iters) in [(128usize, 100usize), (256, 100)] {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let pts = Tensor::randn(&mut rng, n, dim, 1.0);
+        let t0 = std::time::Instant::now();
+        let cfg = TsneConfig { iters, ..Default::default() };
+        black_box(tsne(&pts, &cfg));
+        t3.row(&[n.to_string(), iters.to_string(), format!("{:.2}", t0.elapsed().as_secs_f64())]);
+    }
+    t3.print();
+}

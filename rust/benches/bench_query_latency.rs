@@ -1,0 +1,84 @@
+//! Bench: attention query cost — SubGen sketch vs exact O(n·d) scan —
+//! and the accuracy/ε tradeoff vs the sample counts (s, t).
+//!
+//!     cargo bench --bench bench_query_latency
+
+use subgen::attention::exact_attention;
+use subgen::bench::{black_box, Bencher, Table};
+use subgen::linalg::loglog_slope;
+use subgen::subgen::{SubGenAttention, SubGenConfig};
+use subgen::tensor::Tensor;
+use subgen::workload::{ClusterableStream, TokenStream};
+
+fn main() {
+    let dim = 32;
+    let bencher = Bencher::default();
+
+    println!("== query cost vs n: sketch (o(n)) vs exact (Θ(n)) ==\n");
+    let mut table = Table::new(&["n", "subgen µs", "exact µs", "speedup"]);
+    let (mut ns, mut sub_cost, mut ex_cost) = (Vec::new(), Vec::new(), Vec::new());
+    for n in [1_000usize, 4_000, 16_000, 64_000] {
+        let cfg = SubGenConfig { dim, delta: 0.5, t: 32, s: 64 };
+        let mut sketch = SubGenAttention::new(cfg, 1);
+        let mut stream = ClusterableStream::new(dim, 16, 0.05, 1.0, 2);
+        let mut keys = Tensor::zeros(0, dim);
+        let mut values = Tensor::zeros(0, dim);
+        let mut q = vec![0.0f32; dim];
+        for _ in 0..n {
+            let (qq, k, v) = stream.next_triplet();
+            sketch.update(&k, &v);
+            keys.push_row(&k);
+            values.push_row(&v);
+            q = qq;
+        }
+        let rs = bencher.run(&format!("subgen@n={n}"), || {
+            black_box(sketch.query(black_box(&q)));
+        });
+        let re = bencher.run(&format!("exact@n={n}"), || {
+            black_box(exact_attention(black_box(&q), &keys, &values));
+        });
+        table.row(&[
+            n.to_string(),
+            format!("{:.1}", rs.mean_ns() / 1e3),
+            format!("{:.1}", re.mean_ns() / 1e3),
+            format!("{:.1}x", re.mean_ns() / rs.mean_ns()),
+        ]);
+        ns.push(n as f64);
+        sub_cost.push(rs.mean_ns());
+        ex_cost.push(re.mean_ns());
+    }
+    table.print();
+    println!(
+        "\nslopes: subgen {:+.3}, exact {:+.3} (paper: sketch o(n), exact Θ(n))\n",
+        loglog_slope(&ns, &sub_cost),
+        loglog_slope(&ns, &ex_cost)
+    );
+
+    println!("== ε tradeoff: error vs (s, t) at n = 8000 ==\n");
+    let mut t2 = Table::new(&["s", "t", "query µs", "rel err (partition)"]);
+    for (s, t) in [(16usize, 8usize), (64, 32), (256, 128), (1024, 512)] {
+        let cfg = SubGenConfig { dim, delta: 0.5, t, s };
+        let mut sketch = SubGenAttention::new(cfg, 1);
+        let mut stream = ClusterableStream::new(dim, 8, 0.05, 1.0, 5);
+        let mut keys = Tensor::zeros(0, dim);
+        let mut q = vec![0.0f32; dim];
+        for _ in 0..8_000 {
+            let (qq, k, v) = stream.next_triplet();
+            sketch.update(&k, &v);
+            keys.push_row(&k);
+            q = qq;
+        }
+        let r = bencher.run(&format!("query@s={s},t={t}"), || {
+            black_box(sketch.query(black_box(&q)));
+        });
+        let est = sketch.partition_estimate(&q);
+        let exact = subgen::attention::exact_log_partition(&q, &keys).exp() as f64;
+        t2.row(&[
+            s.to_string(),
+            t.to_string(),
+            format!("{:.1}", r.mean_ns() / 1e3),
+            format!("{:.4}", ((est - exact) / exact).abs()),
+        ]);
+    }
+    t2.print();
+}

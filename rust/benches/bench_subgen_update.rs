@@ -1,0 +1,67 @@
+//! Bench: SubGen per-token update cost vs stream length (the o(n)
+//! update-time claim of §2.1). Also sweeps δ (cluster count) and t.
+//!
+//!     cargo bench --bench bench_subgen_update
+
+use subgen::bench::{black_box, Bencher, Table};
+use subgen::linalg::loglog_slope;
+use subgen::subgen::{SubGenAttention, SubGenConfig};
+use subgen::workload::{ClusterableStream, TokenStream};
+
+fn main() {
+    let dim = 32;
+    let bencher = Bencher::default();
+
+    println!("== update cost vs prefilled stream length (m = 16) ==\n");
+    let mut table = Table::new(&["n prefilled", "ns/update", "clusters"]);
+    let mut ns = Vec::new();
+    let mut costs = Vec::new();
+    for n in [1_000usize, 4_000, 16_000, 64_000] {
+        let cfg = SubGenConfig { dim, delta: 0.5, t: 32, s: 64 };
+        let mut sketch = SubGenAttention::new(cfg, 1);
+        let mut stream = ClusterableStream::new(dim, 16, 0.05, 1.0, 2);
+        for _ in 0..n {
+            let (_, k, v) = stream.next_triplet();
+            sketch.update(&k, &v);
+        }
+        let r = bencher.run(&format!("update@n={n}"), || {
+            let (_, k, v) = stream.next_triplet();
+            sketch.update(black_box(&k), black_box(&v));
+        });
+        table.row(&[
+            n.to_string(),
+            format!("{:.0}", r.mean_ns()),
+            sketch.num_clusters().to_string(),
+        ]);
+        ns.push(n as f64);
+        costs.push(r.mean_ns());
+    }
+    table.print();
+    println!(
+        "\nupdate-cost log-log slope vs n: {:+.3} (o(n) ⇒ ≈ 0; exact rescan would be 1)\n",
+        loglog_slope(&ns, &costs)
+    );
+
+    println!("== update cost vs δ (cluster granularity), n = 8000 ==\n");
+    let mut t2 = Table::new(&["delta", "clusters", "ns/update", "memory KiB"]);
+    for delta in [0.1f32, 0.25, 0.5, 1.0, 2.0] {
+        let cfg = SubGenConfig { dim, delta, t: 32, s: 64 };
+        let mut sketch = SubGenAttention::new(cfg, 1);
+        let mut stream = ClusterableStream::new(dim, 16, 0.05, 1.0, 3);
+        for _ in 0..8_000 {
+            let (_, k, v) = stream.next_triplet();
+            sketch.update(&k, &v);
+        }
+        let r = bencher.run(&format!("update@delta={delta}"), || {
+            let (_, k, v) = stream.next_triplet();
+            sketch.update(black_box(&k), black_box(&v));
+        });
+        t2.row(&[
+            format!("{delta}"),
+            sketch.num_clusters().to_string(),
+            format!("{:.0}", r.mean_ns()),
+            format!("{}", sketch.memory_bytes() / 1024),
+        ]);
+    }
+    t2.print();
+}

@@ -1,0 +1,164 @@
+//! Bench companion to Table 1: host-side per-step policy costs at the
+//! paper's matched budgets — update, repack, and host attention —
+//! independent of PJRT (the e2e decode variant lives in
+//! bench_e2e_decode). This isolates the L3 overhead each policy adds to
+//! a decode step.
+//!
+//!     cargo bench --bench bench_table1
+
+use subgen::bench::{black_box, Bencher, Table};
+use subgen::kvcache::{build_policy, PackedCache};
+use subgen::rng::{Pcg64, Rng};
+
+fn main() {
+    let dim = 16; // d_head of the served model
+    let bencher = Bencher::default();
+    let n = 512; // context length (Table 1 largest)
+    let budget = 256; // 50% reduction
+
+    println!("== per-step policy cost at n={n}, budget={budget} (d_head {dim}) ==\n");
+    let mut table = Table::new(&[
+        "policy", "update ns", "pack ns", "host attn µs", "packed slots", "bytes",
+    ]);
+    for policy in subgen::kvcache::POLICY_NAMES {
+        let mut p = build_policy(policy, dim, budget, 4.0, 7).unwrap();
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mk = |rng: &mut Pcg64| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+            (
+                (0..dim).map(|_| rng.gaussian32(0.0, 0.5)).collect(),
+                (0..dim).map(|_| rng.gaussian32(0.0, 0.5)).collect(),
+                (0..dim).map(|_| rng.gaussian32(0.0, 1.0)).collect(),
+            )
+        };
+        for _ in 0..n {
+            let (q, k, v) = mk(&mut rng);
+            p.update(&q, &k, &v);
+        }
+        let r_upd = bencher.run(&format!("{policy}/update"), || {
+            let (q, k, v) = mk(&mut rng);
+            p.update(black_box(&q), black_box(&k), black_box(&v));
+        });
+        let mut buf = PackedCache::new(dim, p.packed_slots().max(1) + 8);
+        let r_pack = bencher.run(&format!("{policy}/pack"), || {
+            p.pack(black_box(&mut buf));
+        });
+        let q: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.3).sin()).collect();
+        let r_attn = bencher.run(&format!("{policy}/attn"), || {
+            black_box(buf.attention(black_box(&q)));
+        });
+        table.row(&[
+            policy.to_string(),
+            format!("{:.0}", r_upd.mean_ns()),
+            format!("{:.0}", r_pack.mean_ns()),
+            format!("{:.1}", r_attn.mean_ns() / 1e3),
+            buf.used().to_string(),
+            p.memory_bytes(dim).to_string(),
+        ]);
+    }
+    table.print();
+    println!("\n(exact grows with n; compressed policies stay at their budget)");
+
+    ablation_window_fraction();
+    ablation_delta_sensitivity();
+}
+
+/// Ablation (DESIGN.md): how much of the SubGen budget should the
+/// recent window take? Error of the hybrid estimator vs exact attention
+/// on a clusterable stream at a fixed total budget.
+fn ablation_window_fraction() {
+    use subgen::attention::exact_attention;
+    use subgen::kvcache::{CachePolicy, SubGenCache, SubGenCacheConfig};
+    use subgen::tensor::Tensor;
+    use subgen::workload::{ClusterableStream, TokenStream};
+
+    let dim = 16;
+    let n = 2000;
+    let total = 128usize; // budget slots
+    println!("\n== ablation: recent-window share of the SubGen budget ==\n");
+    let mut table = Table::new(&["window %", "recent", "s", "t", "mean rel err vs exact"]);
+    for frac in [0.0f64, 0.25, 0.5, 0.75] {
+        let recent = (total as f64 * frac) as usize;
+        let rest = total - recent;
+        let s = (rest / 2).max(2);
+        let t = (rest / 8).max(2);
+        let mut errs = Vec::new();
+        for seed in 0..3u64 {
+            let mut stream = ClusterableStream::new(dim, 8, 0.05, 1.0, 40 + seed);
+            let mut keys = Tensor::zeros(0, dim);
+            let mut values = Tensor::zeros(0, dim);
+            let cfg = SubGenCacheConfig {
+                dim,
+                recent,
+                s,
+                t,
+                delta: 0.5,
+                max_clusters: Some((rest / (2 * t)).max(1)),
+            };
+            let mut policy = SubGenCache::new(cfg, seed);
+            let mut q = vec![0.0f32; dim];
+            // Low-variance value regime (shared direction + noise) so the
+            // output-relative error reads the window/sample tradeoff
+            // instead of ℓ2-sampling variance (see EXPERIMENTS TH1).
+            let base: Vec<f32> = (0..dim).map(|i| ((i as f32) * 0.4).cos()).collect();
+            let mut vrng = subgen::rng::Pcg64::seed_from_u64(500 + seed);
+            use subgen::rng::Rng as _;
+            for _ in 0..n {
+                let (qq, k, _) = stream.next_triplet();
+                let v: Vec<f32> =
+                    base.iter().map(|&b| b + vrng.gaussian32(0.0, 0.1)).collect();
+                policy.update(&qq, &k, &v);
+                keys.push_row(&k);
+                values.push_row(&v);
+                q = qq;
+            }
+            let got = policy.attention(&q);
+            let want = exact_attention(&q, &keys, &values);
+            errs.push(subgen::linalg::rel_err_vec(&got, &want) as f64);
+        }
+        table.row(&[
+            format!("{:.0}%", frac * 100.0),
+            recent.to_string(),
+            s.to_string(),
+            t.to_string(),
+            format!("{:.3}", subgen::linalg::mean(&errs)),
+        ]);
+    }
+    table.print();
+}
+
+/// Ablation: δ sensitivity — cluster count, memory and partition error
+/// as δ sweeps around the stream's natural cluster radius.
+fn ablation_delta_sensitivity() {
+    use subgen::attention::exact_log_partition;
+    use subgen::subgen::{SubGenAttention, SubGenConfig};
+    use subgen::tensor::Tensor;
+    use subgen::workload::{ClusterableStream, TokenStream};
+
+    let dim = 16;
+    let n = 4000;
+    println!("\n== ablation: δ sensitivity (planted m = 8, jitter σ = 0.05) ==\n");
+    let mut table = Table::new(&["delta", "clusters", "memory KiB", "partition rel err"]);
+    for delta in [0.05f32, 0.2, 0.5, 1.0, 4.0] {
+        let mut sketch = SubGenAttention::new(SubGenConfig { dim, delta, t: 24, s: 32 }, 9);
+        let mut stream = ClusterableStream::new(dim, 8, 0.05, 1.0, 77);
+        let mut keys = Tensor::zeros(0, dim);
+        let mut q = vec![0.0f32; dim];
+        for _ in 0..n {
+            let (qq, k, v) = stream.next_triplet();
+            sketch.update(&k, &v);
+            keys.push_row(&k);
+            q = qq;
+        }
+        let est = sketch.partition_estimate(&q);
+        let exact = exact_log_partition(&q, &keys).exp() as f64;
+        table.row(&[
+            format!("{delta}"),
+            sketch.num_clusters().to_string(),
+            format!("{}", sketch.memory_bytes() / 1024),
+            format!("{:.4}", ((est - exact) / exact).abs()),
+        ]);
+    }
+    table.print();
+    println!("\n(too-small δ explodes the cluster count; too-large δ coarsens the");
+    println!(" partition estimate — the sweet spot sits near the true cluster radius)");
+}

@@ -1,0 +1,127 @@
+//! Exact streaming-attention reference and error metrics.
+//!
+//! This is the oracle the SubGen estimator is judged against in tests and
+//! experiments: `Attn(q, K, V) = softmax(K·q)ᵀ·V` (Eq. 1 of the paper),
+//! computed with full precision over the whole cache. The PJRT runtime
+//! runs the same math inside XLA; this host-side version exists so the
+//! algorithmic experiments (error bounds, sublinearity) can run without a
+//! compiled artifact.
+
+use crate::linalg::logsumexp;
+use crate::tensor::{dot, Tensor};
+
+/// Exact attention output `softmax(K·q)ᵀ·V` (numerically stabilized).
+///
+/// `keys`/`values` are row-stacked histories; `q` is the current query.
+pub fn exact_attention(q: &[f32], keys: &Tensor, values: &Tensor) -> Vec<f32> {
+    assert_eq!(keys.rows(), values.rows(), "K/V length mismatch");
+    assert_eq!(keys.cols(), q.len(), "K/q dim mismatch");
+    let n = keys.rows();
+    let d_out = values.cols();
+    if n == 0 {
+        return vec![0.0; d_out];
+    }
+    let scores: Vec<f32> = (0..n).map(|i| dot(keys.row(i), q)).collect();
+    let lse = logsumexp(&scores);
+    let mut out = vec![0.0f32; d_out];
+    for i in 0..n {
+        let w = (scores[i] - lse).exp();
+        crate::tensor::axpy(w, values.row(i), &mut out);
+    }
+    out
+}
+
+/// Exact softmax-normalizer (partition function) Σ_i exp(⟨k_i, q⟩),
+/// returned in log space for stability.
+pub fn exact_log_partition(q: &[f32], keys: &Tensor) -> f32 {
+    let scores: Vec<f32> = (0..keys.rows()).map(|i| dot(keys.row(i), q)).collect();
+    logsumexp(&scores)
+}
+
+/// ‖softmax(K·q)‖₂ — the first factor of the paper's error bound (Eq. 3).
+pub fn softmax_vector_norm(q: &[f32], keys: &Tensor) -> f32 {
+    let n = keys.rows();
+    if n == 0 {
+        return 0.0;
+    }
+    let scores: Vec<f32> = (0..n).map(|i| dot(keys.row(i), q)).collect();
+    let lse = logsumexp(&scores);
+    let mut s = 0.0f32;
+    for &sc in &scores {
+        let p = (sc - lse).exp();
+        s += p * p;
+    }
+    s.sqrt()
+}
+
+/// The right-hand side of the paper's guarantee (Eq. 3):
+/// ε·‖softmax(K·q)‖₂·‖V‖_op. Used by tests and EXPERIMENTS to check the
+/// bound empirically.
+pub fn error_bound_rhs(eps: f32, q: &[f32], keys: &Tensor, values: &Tensor) -> f32 {
+    eps * softmax_vector_norm(q, keys) * values.op_norm(60)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::tensor::norm2;
+
+    #[test]
+    fn uniform_keys_average_values() {
+        // Identical keys => softmax uniform => output = mean of values.
+        let keys = Tensor::from_vec(vec![1.0, 0.0, 1.0, 0.0, 1.0, 0.0], 3, 2);
+        let values = Tensor::from_vec(vec![3.0, 0.0, 0.0, 3.0, 3.0, 3.0], 3, 2);
+        let out = exact_attention(&[0.5, 0.5], &keys, &values);
+        assert!((out[0] - 2.0).abs() < 1e-5);
+        assert!((out[1] - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn sharp_softmax_picks_argmax_value() {
+        // One key hugely aligned with q dominates.
+        let keys = Tensor::from_vec(vec![10.0, 0.0, 0.0, 10.0], 2, 2);
+        let values = Tensor::from_vec(vec![1.0, 0.0, 0.0, 1.0], 2, 2);
+        let out = exact_attention(&[5.0, 0.0], &keys, &values);
+        assert!(out[0] > 0.999 && out[1] < 1e-3, "{out:?}");
+    }
+
+    #[test]
+    fn empty_cache_returns_zero() {
+        let keys = Tensor::zeros(0, 4);
+        let values = Tensor::zeros(0, 4);
+        assert_eq!(exact_attention(&[0.0; 4], &keys, &values), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn log_partition_matches_naive() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let keys = Tensor::randn(&mut rng, 20, 4, 0.5);
+        let q = [0.3f32, -0.1, 0.2, 0.4];
+        let naive: f32 =
+            (0..20).map(|i| dot(keys.row(i), &q).exp()).sum::<f32>().ln();
+        assert!((exact_log_partition(&q, &keys) - naive).abs() < 1e-4);
+    }
+
+    #[test]
+    fn softmax_norm_bounds() {
+        // 1/sqrt(n) <= ||softmax||_2 <= 1.
+        let mut rng = Pcg64::seed_from_u64(4);
+        let keys = Tensor::randn(&mut rng, 50, 8, 0.3);
+        let q: Vec<f32> = (0..8).map(|i| (i as f32 * 0.37).sin()).collect();
+        let s = softmax_vector_norm(&q, &keys);
+        assert!(s <= 1.0 + 1e-5);
+        assert!(s >= 1.0 / (50f32).sqrt() - 1e-5);
+    }
+
+    #[test]
+    fn output_in_value_convex_hull_norm() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let keys = Tensor::randn(&mut rng, 30, 4, 0.2);
+        let values = Tensor::randn(&mut rng, 30, 4, 1.0);
+        let q = [0.1f32, 0.2, -0.3, 0.4];
+        let out = exact_attention(&q, &keys, &values);
+        let max_v = (0..30).map(|i| norm2(values.row(i))).fold(0.0f32, f32::max);
+        assert!(norm2(&out) <= max_v + 1e-4);
+    }
+}

@@ -1,0 +1,222 @@
+//! Micro-benchmark harness (stands in for criterion, which is not
+//! available offline).
+//!
+//! Provides warmup + timed iterations with mean/σ/min reporting, table
+//! formatting for experiment output, and a tiny black-box to defeat
+//! dead-code elimination. Every `rust/benches/*.rs` target is a
+//! `harness = false` binary built on this module so `cargo bench` works
+//! end to end.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-export of the std black-box (kept behind our name so benches don't
+/// depend on unstable details).
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Result of timing one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Case label.
+    pub name: String,
+    /// Iterations timed (after warmup).
+    pub iters: usize,
+    /// Mean wall time per iteration.
+    pub mean: Duration,
+    /// Sample standard deviation per iteration.
+    pub stddev: Duration,
+    /// Fastest iteration.
+    pub min: Duration,
+}
+
+impl BenchResult {
+    /// Nanoseconds mean as f64 (for scaling-law fits).
+    pub fn mean_ns(&self) -> f64 {
+        self.mean.as_nanos() as f64
+    }
+}
+
+/// Benchmark runner with fixed warmup/measure iteration counts chosen
+/// from a target time budget.
+pub struct Bencher {
+    /// Target total measurement time per case.
+    pub budget: Duration,
+    /// Max iterations per case (cap for very fast bodies).
+    pub max_iters: usize,
+    /// Min iterations per case (floor for very slow bodies).
+    pub min_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self { budget: Duration::from_millis(300), max_iters: 10_000, min_iters: 5 }
+    }
+}
+
+impl Bencher {
+    /// Quick-profile bencher (shorter budget) for CI-style runs.
+    pub fn quick() -> Self {
+        Self { budget: Duration::from_millis(80), max_iters: 2_000, min_iters: 3 }
+    }
+
+    /// Time `f`, returning per-iteration stats. `f` is called once for
+    /// calibration, then warmup (10% of iterations), then measured.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Calibrate.
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(50));
+        let iters = ((self.budget.as_secs_f64() / once.as_secs_f64()) as usize)
+            .clamp(self.min_iters, self.max_iters);
+
+        // Warmup.
+        for _ in 0..(iters / 10).max(1) {
+            f();
+        }
+
+        // Measure per-iteration.
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t = Instant::now();
+            f();
+            samples.push(t.elapsed());
+        }
+        let ns: Vec<f64> = samples.iter().map(|d| d.as_nanos() as f64).collect();
+        let mean = crate::linalg::mean(&ns);
+        let sd = crate::linalg::stddev(&ns);
+        let min = samples.iter().min().copied().unwrap_or_default();
+        BenchResult {
+            name: name.to_string(),
+            iters,
+            mean: Duration::from_nanos(mean as u64),
+            stddev: Duration::from_nanos(sd as u64),
+            min,
+        }
+    }
+}
+
+/// Fixed-width table printer for bench/experiment output.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New table with the given column headers.
+    pub fn new(headers: &[&str]) -> Self {
+        Self { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row (must match header count).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render with aligned columns.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..ncols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, cell) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<width$} |", cell, width = widths[c]));
+            }
+            s.push('\n');
+            s
+        };
+        out.push_str(&line(&self.headers, &widths));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&line(row, &widths));
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a byte count human-readably.
+pub fn fmt_bytes(b: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{:.2} {}", v, UNITS[u])
+    }
+}
+
+/// Format a duration compactly (ns/µs/ms/s).
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}µs", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bencher_times_sleeps() {
+        let b = Bencher { budget: Duration::from_millis(20), max_iters: 50, min_iters: 3 };
+        let r = b.run("sleep", || std::thread::sleep(Duration::from_micros(200)));
+        assert!(r.mean >= Duration::from_micros(150), "{:?}", r.mean);
+        assert!(r.iters >= 3);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row(&["a".into(), "1".into()]);
+        t.row(&["longer".into(), "22".into()]);
+        let s = t.render();
+        assert!(s.contains("| name   | value |"), "{s}");
+        assert_eq!(s.lines().count(), 4);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a"]);
+        t.row(&["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500ns");
+        assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.50ms");
+    }
+}

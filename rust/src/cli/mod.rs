@@ -1,0 +1,220 @@
+//! Tiny command-line parser (stands in for clap).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args and
+//! subcommands; typed getters with defaults; and an auto-generated
+//! usage/help string. All binaries and examples in this repo parse their
+//! arguments through [`Args`].
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Declared option for help output.
+#[derive(Debug, Clone)]
+struct Spec {
+    key: String,
+    default: Option<String>,
+    help: String,
+}
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    program: String,
+    /// First non-flag token, if the caller asked for subcommands.
+    subcommand: Option<String>,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    specs: Vec<Spec>,
+    about: String,
+}
+
+impl Args {
+    /// Parse `std::env::args()`.
+    pub fn from_env(about: &str) -> Self {
+        let argv: Vec<String> = std::env::args().collect();
+        Self::parse(&argv, about)
+    }
+
+    /// Parse an explicit argv (first element is the program name).
+    pub fn parse(argv: &[String], about: &str) -> Self {
+        let mut a = Args { about: about.to_string(), ..Default::default() };
+        a.program = argv.first().cloned().unwrap_or_default();
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    a.values.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    a.values.insert(body.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    a.flags.push(body.to_string());
+                }
+            } else if a.subcommand.is_none() && a.positional.is_empty() {
+                a.subcommand = Some(tok.clone());
+            } else {
+                a.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        a
+    }
+
+    /// Declare an option (for `--help` output); returns self for chaining.
+    pub fn describe(mut self, key: &str, default: Option<&str>, help: &str) -> Self {
+        self.specs.push(Spec {
+            key: key.to_string(),
+            default: default.map(|s| s.to_string()),
+            help: help.to_string(),
+        });
+        self
+    }
+
+    /// The subcommand (first bare token), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.subcommand.as_deref()
+    }
+
+    /// True if `--key` appeared as a bare flag or with a truthy value.
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+            || matches!(self.values.get(key).map(|s| s.as_str()), Some("true") | Some("1"))
+    }
+
+    /// String option.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    /// Typed option with default; panics with a clear message on parse
+    /// failure (CLI misuse should fail loudly at startup).
+    pub fn get_parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            None => default,
+            Some(s) => s
+                .parse()
+                .unwrap_or_else(|_| panic!("--{key}: cannot parse {s:?} as {}", std::any::type_name::<T>())),
+        }
+    }
+
+    /// usize option with default.
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get_parsed_or(key, default)
+    }
+
+    /// f64 option with default.
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get_parsed_or(key, default)
+    }
+
+    /// f32 option with default.
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get_parsed_or(key, default)
+    }
+
+    /// u64 option with default.
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get_parsed_or(key, default)
+    }
+
+    /// Positional arguments (after the subcommand).
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// If `--help` was passed, print usage and exit.
+    pub fn exit_on_help(&self) {
+        if self.flag("help") {
+            println!("{}", self.usage());
+            std::process::exit(0);
+        }
+    }
+
+    /// Render the usage/help text.
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{}", self.about);
+        let _ = writeln!(s, "\nusage: {} [subcommand] [--key value ...]", self.program);
+        if !self.specs.is_empty() {
+            let _ = writeln!(s, "\noptions:");
+            for sp in &self.specs {
+                let def = sp
+                    .default
+                    .as_ref()
+                    .map(|d| format!(" (default: {d})"))
+                    .unwrap_or_default();
+                let _ = writeln!(s, "  --{:<18} {}{}", sp.key, sp.help, def);
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        std::iter::once("prog").chain(s.iter().copied()).map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = Args::parse(&argv(&["--n", "100", "--eps=0.5"]), "");
+        assert_eq!(a.usize_or("n", 0), 100);
+        assert!((a.f64_or("eps", 0.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn parses_subcommand_and_positional() {
+        let a = Args::parse(&argv(&["serve", "file1", "--port", "99"]), "");
+        assert_eq!(a.subcommand(), Some("serve"));
+        assert_eq!(a.positional(), &["file1".to_string()]);
+        assert_eq!(a.usize_or("port", 0), 99);
+    }
+
+    #[test]
+    fn bare_flag() {
+        let a = Args::parse(&argv(&["--verbose", "--n", "3"]), "");
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.usize_or("n", 0), 3);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = Args::parse(&argv(&["--check"]), "");
+        assert!(a.flag("check"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv(&[]), "");
+        assert_eq!(a.get_or("mode", "exact"), "exact");
+        assert_eq!(a.usize_or("n", 7), 7);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot parse")]
+    fn bad_typed_value_panics() {
+        let a = Args::parse(&argv(&["--n", "notanumber"]), "");
+        let _ = a.usize_or("n", 0);
+    }
+
+    #[test]
+    fn usage_lists_options() {
+        let a = Args::parse(&argv(&[]), "test tool")
+            .describe("n", Some("10"), "number of things");
+        let u = a.usage();
+        assert!(u.contains("test tool"));
+        assert!(u.contains("--n"));
+        assert!(u.contains("default: 10"));
+    }
+}

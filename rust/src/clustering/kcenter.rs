@@ -1,0 +1,150 @@
+//! Greedy k-center (Gonzalez 1985 / Dyer–Frieze 1985): the paper's [8],
+//! used in Figure 1 (cluster centers over cached keys) and in the §3.2
+//! one-shot prompt-compression variant of SubGen.
+
+use crate::tensor::{dist_sq, Tensor};
+
+/// Output of greedy k-center.
+#[derive(Debug, Clone)]
+pub struct KCenterResult {
+    /// Indices (into the input rows) of the chosen centers, in selection
+    /// order — the first is the seed, each next maximizes distance to the
+    /// current center set.
+    pub centers: Vec<usize>,
+    /// For each input point, the index *into `centers`* of its nearest
+    /// center.
+    pub assignment: Vec<usize>,
+    /// For each input point, distance to its nearest center.
+    pub dist: Vec<f32>,
+    /// max_i dist[i] — the k-center objective value (covering radius).
+    pub radius: f32,
+}
+
+/// Greedy 2-approximate k-center over the rows of `points`.
+///
+/// `seed` selects the first center (the paper seeds with the first token;
+/// experiments may pass any index). Runs in O(n·k·d).
+pub fn greedy_k_center(points: &Tensor, k: usize, seed: usize) -> KCenterResult {
+    let n = points.rows();
+    assert!(n > 0, "k-center of empty set");
+    assert!(seed < n, "seed out of range");
+    let k = k.min(n);
+
+    let mut centers = Vec::with_capacity(k);
+    let mut assignment = vec![0usize; n];
+    let mut d2 = vec![f32::INFINITY; n];
+
+    let mut next = seed;
+    for c in 0..k {
+        centers.push(next);
+        let center_row = points.row(next);
+        // Relax distances against the new center; track the farthest point.
+        let mut far = 0usize;
+        let mut far_d2 = -1.0f32;
+        for i in 0..n {
+            let nd = dist_sq(points.row(i), center_row);
+            if nd < d2[i] {
+                d2[i] = nd;
+                assignment[i] = c;
+            }
+            if d2[i] > far_d2 {
+                far_d2 = d2[i];
+                far = i;
+            }
+        }
+        next = far;
+    }
+
+    let dist: Vec<f32> = d2.iter().map(|&x| x.sqrt()).collect();
+    let radius = dist.iter().cloned().fold(0.0f32, f32::max);
+    KCenterResult { centers, assignment, dist, radius }
+}
+
+/// Covering radius as a function of k (k = 1..=k_max): the quantitative
+/// "clusterability curve" used for the Figure-1 reproduction. A dataset
+/// that clusters well shows a fast-dropping curve.
+pub fn k_center_radius_curve(points: &Tensor, k_max: usize, seed: usize) -> Vec<f32> {
+    let res = greedy_k_center(points, k_max, seed);
+    // Re-run incrementally: radius after c centers is max over points of
+    // distance to first c centers. Recompute cheaply by replaying.
+    let n = points.rows();
+    let mut d2 = vec![f32::INFINITY; n];
+    let mut curve = Vec::with_capacity(res.centers.len());
+    for &ci in &res.centers {
+        let row = points.row(ci);
+        let mut far_d2 = 0.0f32;
+        for i in 0..n {
+            let nd = dist_sq(points.row(i), row);
+            if nd < d2[i] {
+                d2[i] = nd;
+            }
+            if d2[i] > far_d2 {
+                far_d2 = d2[i];
+            }
+        }
+        curve.push(far_d2.sqrt());
+    }
+    curve
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng};
+
+    fn blobs(n_per: usize, centers: &[[f32; 2]], std: f32, seed: u64) -> Tensor {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut t = Tensor::zeros(0, 2);
+        for c in centers {
+            for _ in 0..n_per {
+                t.push_row(&[c[0] + rng.gaussian32(0.0, std), c[1] + rng.gaussian32(0.0, std)]);
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn finds_separated_blobs() {
+        let t = blobs(50, &[[0.0, 0.0], [20.0, 0.0], [0.0, 20.0]], 0.2, 1);
+        let res = greedy_k_center(&t, 3, 0);
+        assert_eq!(res.centers.len(), 3);
+        // Radius should be on the order of the blob spread, not separation.
+        assert!(res.radius < 2.0, "radius={}", res.radius);
+        // Each blob contributes one center.
+        let blocks: Vec<usize> = res.centers.iter().map(|&i| i / 50).collect();
+        let mut sorted = blocks.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 3, "centers={blocks:?}");
+    }
+
+    #[test]
+    fn radius_curve_monotone_nonincreasing() {
+        let t = blobs(40, &[[0.0, 0.0], [5.0, 5.0]], 1.0, 2);
+        let curve = k_center_radius_curve(&t, 10, 0);
+        for w in curve.windows(2) {
+            assert!(w[1] <= w[0] + 1e-6, "{curve:?}");
+        }
+    }
+
+    #[test]
+    fn k_ge_n_gives_zero_radius() {
+        let t = blobs(3, &[[0.0, 0.0]], 1.0, 3);
+        let res = greedy_k_center(&t, 10, 0);
+        assert_eq!(res.centers.len(), 3);
+        assert!(res.radius < 1e-6);
+    }
+
+    #[test]
+    fn assignment_is_nearest_center() {
+        let t = blobs(20, &[[0.0, 0.0], [10.0, 0.0]], 0.1, 4);
+        let res = greedy_k_center(&t, 2, 0);
+        for i in 0..t.rows() {
+            let assigned = res.centers[res.assignment[i]];
+            let d_assigned = dist_sq(t.row(i), t.row(assigned));
+            for &c in &res.centers {
+                assert!(d_assigned <= dist_sq(t.row(i), t.row(c)) + 1e-6);
+            }
+        }
+    }
+}

@@ -1,0 +1,21 @@
+//! Clustering substrates for SubGen.
+//!
+//! * [`OnlineThresholdClustering`] — the streaming δ-threshold clustering
+//!   at the heart of `UpdateSoftmaxNormalizer` (Algorithm 1): assign an
+//!   incoming point to the nearest existing center if within δ, otherwise
+//!   open a new cluster with the point as its representative. Inspired by
+//!   the incremental k-center scheme of Charikar–Chekuri–Feder–Motwani.
+//! * [`greedy_k_center`] — the classic 2-approximation (Gonzalez /
+//!   Dyer–Frieze) used by the paper for one-shot prompt compression and
+//!   for the Figure-1 clusterability study.
+//! * [`ClusterStats`] — quantitative clusterability metrics (radius
+//!   curves, coverage) used to reproduce Figure 1's claim that key
+//!   embeddings cluster better than value embeddings.
+
+mod online;
+mod kcenter;
+mod stats;
+
+pub use kcenter::{greedy_k_center, k_center_radius_curve, KCenterResult};
+pub use online::{Assignment, ClusterId, OnlineThresholdClustering};
+pub use stats::ClusterStats;

@@ -1,0 +1,281 @@
+//! Streaming δ-threshold clustering (the paper's Algorithm 1 core).
+
+use crate::tensor::dist_sq;
+
+/// Opaque cluster identifier (index into the center table).
+pub type ClusterId = usize;
+
+/// Online clustering: maintains centers (first-assigned representatives)
+/// and per-cluster population counts; assignment is nearest-center within
+/// threshold δ, else a new cluster is opened.
+///
+/// Invariants (Lemma 2 of the paper):
+/// 1. every center is a stream point;
+/// 2. counts sum to the number of points processed;
+/// 3. every point was within δ of its cluster's center when assigned;
+/// 4. pairwise center distances exceed δ;
+/// and if the stream is (m,δ)-clusterable the number of centers never
+/// exceeds m (pigeonhole on property 4).
+#[derive(Debug, Clone)]
+pub struct OnlineThresholdClustering {
+    dim: usize,
+    delta: f32,
+    delta_sq: f32,
+    /// Flattened row-major centers (len = centers * dim).
+    centers: Vec<f32>,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+/// Result of feeding one point to the clustering.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Assignment {
+    /// Point joined an existing cluster.
+    Existing(ClusterId),
+    /// Point opened a new cluster (and is its representative).
+    New(ClusterId),
+}
+
+impl Assignment {
+    /// The cluster id regardless of whether it is new.
+    pub fn id(&self) -> ClusterId {
+        match *self {
+            Assignment::Existing(i) | Assignment::New(i) => i,
+        }
+    }
+}
+
+impl OnlineThresholdClustering {
+    /// New empty clustering over `dim`-dimensional points with distance
+    /// threshold `delta` (> 0).
+    pub fn new(dim: usize, delta: f32) -> Self {
+        assert!(delta > 0.0, "delta must be positive");
+        assert!(dim > 0, "dim must be positive");
+        Self { dim, delta, delta_sq: delta * delta, centers: Vec::new(), counts: Vec::new(), total: 0 }
+    }
+
+    /// Observe a point; returns its assignment.
+    pub fn push(&mut self, point: &[f32]) -> Assignment {
+        assert_eq!(point.len(), self.dim, "dimension mismatch");
+        self.total += 1;
+        match self.nearest(point) {
+            Some((id, d2)) if d2 <= self.delta_sq => {
+                self.counts[id] += 1;
+                Assignment::Existing(id)
+            }
+            _ => {
+                let id = self.counts.len();
+                self.centers.extend_from_slice(point);
+                self.counts.push(1);
+                Assignment::New(id)
+            }
+        }
+    }
+
+    /// Nearest center and squared distance (linear scan over centers; the
+    /// center count is m = o(n) by assumption, so this is the sublinear
+    /// part of the update cost).
+    pub fn nearest(&self, point: &[f32]) -> Option<(ClusterId, f32)> {
+        let m = self.counts.len();
+        if m == 0 {
+            return None;
+        }
+        let mut best = 0;
+        let mut best_d2 = f32::INFINITY;
+        for i in 0..m {
+            let c = &self.centers[i * self.dim..(i + 1) * self.dim];
+            let d2 = dist_sq(c, point);
+            if d2 < best_d2 {
+                best_d2 = d2;
+                best = i;
+            }
+        }
+        Some((best, best_d2))
+    }
+
+    /// Number of clusters discovered so far (the paper's m').
+    #[inline]
+    pub fn num_clusters(&self) -> usize {
+        self.counts.len()
+    }
+
+    /// Total points processed.
+    #[inline]
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Population of cluster `id` (the paper's n_i).
+    #[inline]
+    pub fn count(&self, id: ClusterId) -> u64 {
+        self.counts[id]
+    }
+
+    /// All population counts.
+    #[inline]
+    pub fn counts(&self) -> &[u64] {
+        &self.counts
+    }
+
+    /// Center (representative) of cluster `id`.
+    #[inline]
+    pub fn center(&self, id: ClusterId) -> &[f32] {
+        &self.centers[id * self.dim..(id + 1) * self.dim]
+    }
+
+    /// Threshold δ.
+    #[inline]
+    pub fn delta(&self) -> f32 {
+        self.delta
+    }
+
+    /// Point dimension.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Bytes of state held (centers + counts): the memory-accounting
+    /// hook used by the sublinearity experiments.
+    pub fn memory_bytes(&self) -> usize {
+        self.centers.len() * std::mem::size_of::<f32>()
+            + self.counts.len() * std::mem::size_of::<u64>()
+    }
+
+    /// Double δ and greedily merge centers that now fall within the new
+    /// threshold of an earlier kept center (the doubling step of the
+    /// incremental k-center algorithm of Charikar et al., used to keep
+    /// the cluster count bounded on poorly-clusterable streams).
+    ///
+    /// Returns, for every old cluster id, the new cluster id it maps to.
+    /// Counts are reassigned to the absorbing center. After this call
+    /// points may be up to 3·δ_old from their representative — the
+    /// standard doubling-algorithm slack.
+    pub fn double_delta(&mut self) -> Vec<ClusterId> {
+        self.delta *= 2.0;
+        self.delta_sq = self.delta * self.delta;
+        let m = self.counts.len();
+        let mut kept: Vec<ClusterId> = Vec::new();
+        let mut mapping = vec![usize::MAX; m];
+        let mut new_centers: Vec<f32> = Vec::new();
+        let mut new_counts: Vec<u64> = Vec::new();
+        for i in 0..m {
+            let ci = self.center(i).to_vec();
+            // Nearest kept center within the doubled threshold?
+            let mut absorber: Option<usize> = None;
+            let mut best = self.delta_sq;
+            for (new_id, &orig) in kept.iter().enumerate() {
+                let d2 = dist_sq(&new_centers[new_id * self.dim..(new_id + 1) * self.dim], &ci);
+                let _ = orig;
+                if d2 <= best {
+                    best = d2;
+                    absorber = Some(new_id);
+                }
+            }
+            match absorber {
+                Some(new_id) => {
+                    new_counts[new_id] += self.counts[i];
+                    mapping[i] = new_id;
+                }
+                None => {
+                    let new_id = kept.len();
+                    kept.push(i);
+                    new_centers.extend_from_slice(&ci);
+                    new_counts.push(self.counts[i]);
+                    mapping[i] = new_id;
+                }
+            }
+        }
+        self.centers = new_centers;
+        self.counts = new_counts;
+        mapping
+    }
+
+    /// Debug/test helper: verify pairwise center separation > δ
+    /// (invariant 4 of Lemma 2).
+    pub fn check_center_separation(&self) -> bool {
+        let m = self.counts.len();
+        for i in 0..m {
+            for j in (i + 1)..m {
+                if dist_sq(self.center(i), self.center(j)) <= self.delta_sq {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng};
+
+    fn gaussian_blob<R: Rng>(rng: &mut R, center: &[f32], std: f32) -> Vec<f32> {
+        center.iter().map(|&c| c + rng.gaussian32(0.0, std)).collect()
+    }
+
+    #[test]
+    fn single_tight_cluster() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut oc = OnlineThresholdClustering::new(4, 1.0);
+        let c = [5.0f32, -3.0, 2.0, 0.0];
+        for _ in 0..500 {
+            oc.push(&gaussian_blob(&mut rng, &c, 0.05));
+        }
+        assert_eq!(oc.num_clusters(), 1);
+        assert_eq!(oc.count(0), 500);
+        assert_eq!(oc.total(), 500);
+    }
+
+    #[test]
+    fn well_separated_blobs_found() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let mut oc = OnlineThresholdClustering::new(2, 1.0);
+        let blobs = [[0.0f32, 0.0], [10.0, 0.0], [0.0, 10.0], [10.0, 10.0]];
+        for i in 0..2000 {
+            let b = &blobs[i % 4];
+            oc.push(&gaussian_blob(&mut rng, b, 0.1));
+        }
+        assert_eq!(oc.num_clusters(), 4);
+        let total: u64 = oc.counts().iter().sum();
+        assert_eq!(total, 2000);
+        assert!(oc.check_center_separation());
+    }
+
+    #[test]
+    fn counts_sum_to_total_always() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let mut oc = OnlineThresholdClustering::new(3, 0.5);
+        for i in 0..300 {
+            let p: Vec<f32> = (0..3).map(|_| rng.f32_range(-2.0, 2.0)).collect();
+            oc.push(&p);
+            assert_eq!(oc.counts().iter().sum::<u64>(), (i + 1) as u64);
+        }
+        assert!(oc.check_center_separation());
+    }
+
+    #[test]
+    fn representative_is_first_point() {
+        let mut oc = OnlineThresholdClustering::new(2, 1.0);
+        let a = oc.push(&[0.0, 0.0]);
+        assert_eq!(a, Assignment::New(0));
+        let b = oc.push(&[0.5, 0.0]);
+        assert_eq!(b, Assignment::Existing(0));
+        // Center stays the first point, not the mean.
+        assert_eq!(oc.center(0), &[0.0, 0.0]);
+    }
+
+    #[test]
+    fn memory_grows_with_clusters_only() {
+        let mut oc = OnlineThresholdClustering::new(2, 1.0);
+        oc.push(&[0.0, 0.0]);
+        let m1 = oc.memory_bytes();
+        for _ in 0..100 {
+            oc.push(&[0.1, 0.1]); // same cluster
+        }
+        assert_eq!(oc.memory_bytes(), m1);
+        oc.push(&[100.0, 100.0]); // new cluster
+        assert!(oc.memory_bytes() > m1);
+    }
+}

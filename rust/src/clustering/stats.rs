@@ -1,0 +1,114 @@
+//! Quantitative clusterability metrics (the measurable form of Fig. 1).
+
+use super::{greedy_k_center, k_center_radius_curve};
+use crate::tensor::{dist, norm2, Tensor};
+
+/// Summary of how clusterable a point set is.
+#[derive(Debug, Clone)]
+pub struct ClusterStats {
+    /// Number of points.
+    pub n: usize,
+    /// k-center covering radius at the probe k.
+    pub radius: f32,
+    /// Covering radius normalized by the dataset's RMS norm — the
+    /// scale-free clusterability score used to compare keys vs values.
+    pub normalized_radius: f32,
+    /// Mean distance of points to their assigned center.
+    pub mean_dist: f32,
+    /// Radius curve radius(k) for k = 1..=k.
+    pub radius_curve: Vec<f32>,
+    /// Number of clusters an online δ-threshold pass would open with
+    /// δ = radius (a lower bound proxy for the paper's m).
+    pub effective_m: usize,
+}
+
+impl ClusterStats {
+    /// Compute stats with `k` probe centers.
+    pub fn compute(points: &Tensor, k: usize) -> ClusterStats {
+        let n = points.rows();
+        assert!(n > 0);
+        let res = greedy_k_center(points, k, 0);
+        let curve = k_center_radius_curve(points, k, 0);
+        let mean_dist = res.dist.iter().sum::<f32>() / n as f32;
+
+        let rms = (points.as_slice().iter().map(|&x| x * x).sum::<f32>() / n as f32).sqrt();
+        let normalized = if rms > 0.0 { res.radius / rms } else { 0.0 };
+
+        // Greedy δ-threshold pass with δ = covering radius.
+        let delta = res.radius.max(1e-6);
+        let mut centers: Vec<usize> = Vec::new();
+        for i in 0..n {
+            let covered = centers.iter().any(|&c| dist(points.row(i), points.row(c)) <= delta);
+            if !covered {
+                centers.push(i);
+            }
+        }
+
+        ClusterStats {
+            n,
+            radius: res.radius,
+            normalized_radius: normalized,
+            mean_dist,
+            radius_curve: curve,
+            effective_m: centers.len(),
+        }
+    }
+
+    /// RMS row norm of a point set (for reporting).
+    pub fn rms_norm(points: &Tensor) -> f32 {
+        if points.rows() == 0 {
+            return 0.0;
+        }
+        let s: f32 = (0..points.rows()).map(|i| norm2(points.row(i)).powi(2)).sum();
+        (s / points.rows() as f32).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng};
+
+    #[test]
+    fn clustered_beats_uniform() {
+        let mut rng = Pcg64::seed_from_u64(11);
+        // Tight blobs.
+        let mut tight = Tensor::zeros(0, 8);
+        for b in 0..4 {
+            let center: Vec<f32> = (0..8).map(|j| ((b * 8 + j) as f32).sin() * 10.0).collect();
+            for _ in 0..50 {
+                let p: Vec<f32> = center.iter().map(|&c| c + rng.gaussian32(0.0, 0.1)).collect();
+                tight.push_row(&p);
+            }
+        }
+        // Isotropic cloud of matching scale.
+        let mut cloud = Tensor::zeros(0, 8);
+        for _ in 0..200 {
+            let p: Vec<f32> = (0..8).map(|_| rng.gaussian32(0.0, 5.0)).collect();
+            cloud.push_row(&p);
+        }
+        let st = ClusterStats::compute(&tight, 8);
+        let sc = ClusterStats::compute(&cloud, 8);
+        assert!(
+            st.normalized_radius < sc.normalized_radius / 2.0,
+            "tight={} cloud={}",
+            st.normalized_radius,
+            sc.normalized_radius
+        );
+    }
+
+    #[test]
+    fn effective_m_small_for_blobs() {
+        let mut rng = Pcg64::seed_from_u64(12);
+        let mut t = Tensor::zeros(0, 4);
+        for b in 0..3 {
+            for _ in 0..30 {
+                let p: Vec<f32> =
+                    (0..4).map(|j| (b * 4 + j) as f32 * 3.0 + rng.gaussian32(0.0, 0.05)).collect();
+                t.push_row(&p);
+            }
+        }
+        let s = ClusterStats::compute(&t, 3);
+        assert!(s.effective_m <= 3, "m={}", s.effective_m);
+    }
+}

@@ -1,0 +1,270 @@
+//! Typed experiment/serving configuration + a TOML-subset parser.
+//!
+//! The parser covers the subset this repo writes: `[section]` headers,
+//! `key = value` with string/int/float/bool values, `#` comments. Nested
+//! tables and arrays are out of scope (configs here are flat sections).
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::path::Path;
+
+/// A scalar config value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Integer literal.
+    Int(i64),
+    /// Float literal.
+    Float(f64),
+    /// `true` / `false`.
+    Bool(bool),
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "\"{s}\""),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+        }
+    }
+}
+
+/// Parsed config: section -> key -> value. Top-of-file keys live in the
+/// "" section.
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+/// Parse error with line number.
+#[derive(Debug, Clone)]
+pub struct ParseError {
+    /// 1-based line.
+    pub line: usize,
+    /// Description.
+    pub message: String,
+}
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.message)
+    }
+}
+
+impl std::error::Error for ParseError {}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Config, ParseError> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name.strip_suffix(']').ok_or_else(|| ParseError {
+                    line: lineno + 1,
+                    message: "unterminated section header".into(),
+                })?;
+                section = name.trim().to_string();
+                cfg.sections.entry(section.clone()).or_default();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| ParseError {
+                line: lineno + 1,
+                message: format!("expected key = value, got {line:?}"),
+            })?;
+            let value = parse_value(v.trim()).map_err(|m| ParseError {
+                line: lineno + 1,
+                message: m,
+            })?;
+            cfg.sections
+                .entry(section.clone())
+                .or_default()
+                .insert(k.trim().to_string(), value);
+        }
+        Ok(cfg)
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> anyhow::Result<Config> {
+        let text = std::fs::read_to_string(path)?;
+        Ok(Self::parse(&text)?)
+    }
+
+    /// Raw value lookup.
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section)?.get(key)
+    }
+
+    /// String lookup with default.
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        match self.get(section, key) {
+            Some(Value::Str(s)) => s.clone(),
+            Some(v) => v.to_string(),
+            None => default.to_string(),
+        }
+    }
+
+    /// Integer lookup with default (accepts float-typed whole numbers).
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        match self.get(section, key) {
+            Some(Value::Int(i)) => *i,
+            Some(Value::Float(x)) if x.fract() == 0.0 => *x as i64,
+            _ => default,
+        }
+    }
+
+    /// Float lookup with default (accepts ints).
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        match self.get(section, key) {
+            Some(Value::Float(x)) => *x,
+            Some(Value::Int(i)) => *i as f64,
+            _ => default,
+        }
+    }
+
+    /// Bool lookup with default.
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        match self.get(section, key) {
+            Some(Value::Bool(b)) => *b,
+            _ => default,
+        }
+    }
+
+    /// Set a value programmatically.
+    pub fn set(&mut self, section: &str, key: &str, value: Value) {
+        self.sections
+            .entry(section.to_string())
+            .or_default()
+            .insert(key.to_string(), value);
+    }
+
+    /// Section names.
+    pub fn sections(&self) -> impl Iterator<Item = &str> {
+        self.sections.keys().map(|s| s.as_str())
+    }
+
+    /// Serialize back to TOML text.
+    pub fn to_toml(&self) -> String {
+        let mut out = String::new();
+        if let Some(root) = self.sections.get("") {
+            for (k, v) in root {
+                out.push_str(&format!("{k} = {v}\n"));
+            }
+        }
+        for (name, table) in &self.sections {
+            if name.is_empty() {
+                continue;
+            }
+            out.push_str(&format!("\n[{name}]\n"));
+            for (k, v) in table {
+                out.push_str(&format!("{k} = {v}\n"));
+            }
+        }
+        out
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings is respected.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(body.to_string()));
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(x) = s.parse::<f64>() {
+        return Ok(Value::Float(x));
+    }
+    Err(format!("cannot parse value {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# top comment
+name = "subgen"
+steps = 500
+
+[policy]
+kind = "subgen"   # inline comment
+delta = 0.5
+window = 64
+enabled = true
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("", "name", ""), "subgen");
+        assert_eq!(c.int_or("", "steps", 0), 500);
+        assert_eq!(c.str_or("policy", "kind", ""), "subgen");
+        assert!((c.float_or("policy", "delta", 0.0) - 0.5).abs() < 1e-12);
+        assert_eq!(c.int_or("policy", "window", 0), 64);
+        assert!(c.bool_or("policy", "enabled", false));
+    }
+
+    #[test]
+    fn missing_keys_fall_back() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.int_or("x", "y", 42), 42);
+        assert_eq!(c.str_or("x", "y", "z"), "z");
+    }
+
+    #[test]
+    fn error_has_line_number() {
+        let err = Config::parse("a = 1\nbogus line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+    }
+
+    #[test]
+    fn hash_in_string_kept() {
+        let c = Config::parse("s = \"a#b\"").unwrap();
+        assert_eq!(c.str_or("", "s", ""), "a#b");
+    }
+
+    #[test]
+    fn roundtrip() {
+        let c = Config::parse(SAMPLE).unwrap();
+        let text = c.to_toml();
+        let c2 = Config::parse(&text).unwrap();
+        assert_eq!(c2.int_or("policy", "window", 0), 64);
+        assert_eq!(c2.str_or("", "name", ""), "subgen");
+    }
+
+    #[test]
+    fn int_float_coercion() {
+        let c = Config::parse("x = 3\ny = 4.0").unwrap();
+        assert!((c.float_or("", "x", 0.0) - 3.0).abs() < 1e-12);
+        assert_eq!(c.int_or("", "y", 0), 4);
+    }
+}

@@ -1,0 +1,307 @@
+//! The continuous-batching scheduler.
+
+use super::{Request, Response, StepExecutor};
+use super::request::Timing;
+use crate::model::{caches::FlatCaches, SequenceCaches};
+use crate::metrics::{Counter, Histogram};
+use anyhow::Result;
+use std::collections::VecDeque;
+
+/// Engine tuning knobs.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    /// Max sequences decoding concurrently (continuous batch width).
+    pub max_active: usize,
+    /// Max queued requests before `submit` rejects (backpressure).
+    pub queue_capacity: usize,
+    /// Max prefills admitted per tick (bounds tick latency).
+    pub prefills_per_tick: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self { max_active: 8, queue_capacity: 256, prefills_per_tick: 1 }
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    /// Completed requests.
+    pub completed: Counter,
+    /// Rejected (queue full).
+    pub rejected: Counter,
+    /// Generated tokens.
+    pub tokens: Counter,
+    /// End-to-end request latency.
+    pub latency: Histogram,
+    /// Per-decode-tick latency.
+    pub tick_latency: Histogram,
+}
+
+/// One active (decoding) sequence.
+struct Active {
+    req: Request,
+    timing: Timing,
+    caches: SequenceCaches,
+    flat: FlatCaches,
+    /// Next token to feed (already emitted to `generated`).
+    next: i32,
+    pos: usize,
+    generated: Vec<i32>,
+}
+
+/// The serving engine. Single-threaded event loop (PJRT executables are
+/// driven from one thread; concurrency comes from batching).
+pub struct Engine<'e, E: StepExecutor> {
+    exec: &'e E,
+    cfg: EngineConfig,
+    queue: VecDeque<(Request, Timing)>,
+    active: Vec<Active>,
+    done: Vec<Response>,
+    /// Public metrics.
+    pub stats: EngineStats,
+}
+
+impl<'e, E: StepExecutor> Engine<'e, E> {
+    /// New engine over an executor.
+    pub fn new(exec: &'e E, cfg: EngineConfig) -> Self {
+        Self {
+            exec,
+            cfg,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            done: Vec::new(),
+            stats: EngineStats::default(),
+        }
+    }
+
+    /// Enqueue a request; `false` = rejected (backpressure).
+    pub fn submit(&mut self, req: Request) -> bool {
+        if self.queue.len() >= self.cfg.queue_capacity {
+            self.stats.rejected.inc();
+            return false;
+        }
+        self.queue.push_back((req, Timing::now()));
+        true
+    }
+
+    /// Number of requests waiting + decoding.
+    pub fn pending(&self) -> usize {
+        self.queue.len() + self.active.len()
+    }
+
+    /// Drain finished responses.
+    pub fn take_responses(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.done)
+    }
+
+    /// Run one scheduler tick: admit, decode one step for every active
+    /// sequence, retire completed ones. Returns the number of sequences
+    /// that made progress.
+    pub fn tick(&mut self) -> Result<usize> {
+        let t0 = std::time::Instant::now();
+        self.admit()?;
+        let progressed = self.decode_tick()?;
+        if progressed > 0 {
+            self.stats.tick_latency.record(t0.elapsed());
+        }
+        Ok(progressed)
+    }
+
+    /// Run ticks until all submitted work completes.
+    pub fn run_to_completion(&mut self) -> Result<()> {
+        while self.pending() > 0 {
+            self.tick()?;
+        }
+        Ok(())
+    }
+
+    fn admit(&mut self) -> Result<()> {
+        let mut admitted = 0;
+        while admitted < self.cfg.prefills_per_tick
+            && self.active.len() < self.cfg.max_active
+            && !self.queue.is_empty()
+        {
+            let (req, mut timing) = self.queue.pop_front().unwrap();
+            timing.admitted = Some(std::time::Instant::now());
+            let spec = self.exec.spec();
+            let mut caches =
+                SequenceCaches::new(spec, &req.policy, req.budget, req.delta, req.id ^ 0x5EED)?;
+            let pre = self.exec.prefill(&req.prompt)?;
+            for pos in 0..req.prompt.len() {
+                let q = self.exec.position_slice(&pre.qs, pos);
+                let k = self.exec.position_slice(&pre.ks, pos);
+                let v = self.exec.position_slice(&pre.vs, pos);
+                caches.update(&q, &k, &v);
+            }
+            let vocab = spec.vocab;
+            let last = req.prompt.len() - 1;
+            let next =
+                crate::tensor::argmax(&pre.logits[last * vocab..(last + 1) * vocab]) as i32;
+            let c = spec.pick_cache_variant(caches.max_slots() + 1);
+            let flat = caches.assemble(c)?;
+            let pos = req.prompt.len();
+            self.active.push(Active {
+                req,
+                timing,
+                caches,
+                flat,
+                next,
+                pos,
+                generated: Vec::new(),
+            });
+            admitted += 1;
+        }
+        Ok(())
+    }
+
+    fn decode_tick(&mut self) -> Result<usize> {
+        let spec_vocab = self.exec.spec().vocab;
+        let mut progressed = 0;
+        let mut still_active = Vec::with_capacity(self.active.len());
+        for mut seq in std::mem::take(&mut self.active) {
+            // Emit the pending token, then run the step that consumes it.
+            seq.generated.push(seq.next);
+            let step = self.exec.decode(seq.next, seq.pos, &seq.flat)?;
+            seq.caches.update(&step.q, &step.k, &step.v);
+            seq.next = crate::tensor::argmax(&step.logits[..spec_vocab]) as i32;
+            seq.pos += 1;
+            progressed += 1;
+            self.stats.tokens.inc();
+
+            if seq.generated.len() >= seq.req.max_new {
+                let now = std::time::Instant::now();
+                let latency = now - seq.timing.submitted;
+                let queue_time =
+                    seq.timing.admitted.map(|a| a - seq.timing.submitted).unwrap_or_default();
+                self.stats.latency.record(latency);
+                self.stats.completed.inc();
+                self.done.push(Response {
+                    id: seq.req.id,
+                    tokens: seq.generated,
+                    latency,
+                    queue_time,
+                    cache_bytes: seq.caches.memory_bytes(),
+                });
+            } else {
+                // Re-assemble caches for the next step (capacity upgrade
+                // only when the history outgrows the current buffer).
+                let needed = seq.caches.max_slots() + 1;
+                if needed + 1 > seq.flat.capacity {
+                    let c = self.exec.spec().pick_cache_variant(needed);
+                    seq.flat = seq.caches.assemble(c)?;
+                } else {
+                    seq.caches.assemble_into(&mut seq.flat)?;
+                }
+                still_active.push(seq);
+            }
+        }
+        self.active = still_active;
+        Ok(progressed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MockExecutor;
+
+    fn engine(cfg: EngineConfig, exec: &MockExecutor) -> Engine<'_, MockExecutor> {
+        Engine::new(exec, cfg)
+    }
+
+    #[test]
+    fn single_request_generates_chain() {
+        let exec = MockExecutor::small();
+        let mut e = engine(EngineConfig::default(), &exec);
+        assert!(e.submit(Request::exact(1, vec![3, 4], 4)));
+        e.run_to_completion().unwrap();
+        let rs = e.take_responses();
+        assert_eq!(rs.len(), 1);
+        // Mock chain: argmax(prefill last=4) = 5, then 6, 7, 8.
+        assert_eq!(rs[0].tokens, vec![5, 6, 7, 8]);
+        assert_eq!(e.stats.completed.get(), 1);
+        assert_eq!(e.stats.tokens.get(), 4);
+        assert!(rs[0].cache_bytes > 0);
+    }
+
+    #[test]
+    fn many_requests_all_complete_in_order_of_finish() {
+        let exec = MockExecutor::small();
+        let mut e = engine(EngineConfig { max_active: 4, ..Default::default() }, &exec);
+        for id in 0..10 {
+            assert!(e.submit(Request::exact(id, vec![1, 2, 3], 3)));
+        }
+        e.run_to_completion().unwrap();
+        let rs = e.take_responses();
+        assert_eq!(rs.len(), 10);
+        let mut ids: Vec<u64> = rs.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..10).collect::<Vec<_>>());
+        assert_eq!(e.stats.completed.get(), 10);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let exec = MockExecutor::small();
+        let mut e = engine(
+            EngineConfig { queue_capacity: 2, ..Default::default() },
+            &exec,
+        );
+        assert!(e.submit(Request::exact(0, vec![1], 1)));
+        assert!(e.submit(Request::exact(1, vec![1], 1)));
+        assert!(!e.submit(Request::exact(2, vec![1], 1)));
+        assert_eq!(e.stats.rejected.get(), 1);
+    }
+
+    #[test]
+    fn batching_interleaves_sequences() {
+        let exec = MockExecutor::small();
+        let mut e = engine(
+            EngineConfig { max_active: 2, prefills_per_tick: 2, ..Default::default() },
+            &exec,
+        );
+        e.submit(Request::exact(0, vec![1], 5));
+        e.submit(Request::exact(1, vec![2], 2));
+        // After 2 ticks the short request finishes; the long one remains.
+        e.tick().unwrap();
+        e.tick().unwrap();
+        let rs = e.take_responses();
+        assert_eq!(rs.len(), 1);
+        assert_eq!(rs[0].id, 1);
+        assert_eq!(e.pending(), 1);
+        e.run_to_completion().unwrap();
+        assert_eq!(e.take_responses().len(), 1);
+    }
+
+    #[test]
+    fn policies_flow_through_engine() {
+        let exec = MockExecutor::small();
+        for policy in crate::kvcache::POLICY_NAMES {
+            let mut e = engine(EngineConfig::default(), &exec);
+            e.submit(Request {
+                id: 7,
+                prompt: vec![1, 2, 3, 4],
+                max_new: 6,
+                policy: policy.into(),
+                budget: 8,
+                delta: 0.5,
+            });
+            e.run_to_completion().unwrap();
+            let rs = e.take_responses();
+            assert_eq!(rs.len(), 1, "{policy}");
+            assert_eq!(rs[0].tokens.len(), 6, "{policy}");
+        }
+    }
+
+    #[test]
+    fn latency_metrics_recorded() {
+        let exec = MockExecutor::small();
+        let mut e = engine(EngineConfig::default(), &exec);
+        e.submit(Request::exact(0, vec![1, 2], 2));
+        e.run_to_completion().unwrap();
+        assert_eq!(e.stats.latency.count(), 1);
+        assert!(e.stats.tick_latency.count() >= 1);
+    }
+}

@@ -1,0 +1,157 @@
+//! The executor abstraction + a deterministic mock for scheduler tests.
+
+use crate::model::{caches::FlatCaches, Generator, ModelSpec, PrefillOutput, StepOutput};
+use crate::rng::SplitMix64;
+use anyhow::Result;
+
+/// What the engine needs from the model runtime.
+pub trait StepExecutor {
+    /// Model shapes.
+    fn spec(&self) -> &ModelSpec;
+    /// Full-prompt forward (padded internally).
+    fn prefill(&self, prompt: &[i32]) -> Result<PrefillOutput>;
+    /// One decode step for one sequence.
+    fn decode(&self, token: i32, pos: usize, flat: &FlatCaches) -> Result<StepOutput>;
+    /// Slice helper: one position's [L, H, dh] out of a prefill tensor.
+    fn position_slice(&self, full: &[f32], pos: usize) -> Vec<f32>;
+}
+
+impl<'rt> StepExecutor for Generator<'rt> {
+    fn spec(&self) -> &ModelSpec {
+        Generator::spec(self)
+    }
+
+    fn prefill(&self, prompt: &[i32]) -> Result<PrefillOutput> {
+        Generator::prefill(self, prompt)
+    }
+
+    fn decode(&self, token: i32, pos: usize, flat: &FlatCaches) -> Result<StepOutput> {
+        Generator::decode(self, token, pos, flat)
+    }
+
+    fn position_slice(&self, full: &[f32], pos: usize) -> Vec<f32> {
+        Generator::position_slice(self, full, pos)
+    }
+}
+
+/// Deterministic fake model: embeddings/logits are hashes of
+/// (token, pos), so scheduler tests can assert exact outputs without
+/// artifacts. Logit argmax = (token + 1) mod vocab — sequences
+/// "generate" a predictable token chain.
+pub struct MockExecutor {
+    spec: ModelSpec,
+}
+
+impl MockExecutor {
+    /// Build over an explicit spec.
+    pub fn new(spec: ModelSpec) -> Self {
+        Self { spec }
+    }
+
+    /// A small default spec for tests.
+    pub fn small() -> Self {
+        Self::new(ModelSpec {
+            vocab: 16,
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 2,
+            d_head: 8,
+            prefill_t: 64,
+            cache_variants: vec![64, 32],
+            decode_batch: 0,
+            train_accuracy: -1.0,
+        })
+    }
+
+    fn embed(&self, token: i32, pos: usize, salt: u64) -> Vec<f32> {
+        let (l, h, dh) = (self.spec.n_layers, self.spec.n_heads, self.spec.d_head);
+        (0..l * h * dh)
+            .map(|i| {
+                let bits =
+                    SplitMix64::mix(salt ^ ((token as u64) << 32) ^ ((pos as u64) << 16) ^ i as u64);
+                ((bits % 1000) as f32 / 500.0) - 1.0
+            })
+            .collect()
+    }
+
+    fn logits_for(&self, token: i32) -> Vec<f32> {
+        let v = self.spec.vocab;
+        let next = ((token + 1).rem_euclid(v as i32)) as usize;
+        let mut lg = vec![0.0f32; v];
+        lg[next] = 10.0;
+        lg
+    }
+}
+
+impl StepExecutor for MockExecutor {
+    fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    fn prefill(&self, prompt: &[i32]) -> Result<PrefillOutput> {
+        let s = &self.spec;
+        let (l, t, h, dh, v) = (s.n_layers, s.prefill_t, s.n_heads, s.d_head, s.vocab);
+        let mut logits = vec![0.0f32; t * v];
+        let mut qs = vec![0.0f32; l * t * h * dh];
+        let mut ks = qs.clone();
+        let mut vs = qs.clone();
+        for (pos, &tok) in prompt.iter().enumerate() {
+            let lg = self.logits_for(tok);
+            logits[pos * v..(pos + 1) * v].copy_from_slice(&lg);
+            for li in 0..l {
+                let at = (li * t + pos) * h * dh;
+                let q = self.embed(tok, pos, 1 + li as u64);
+                let k = self.embed(tok, pos, 100 + li as u64);
+                let val = self.embed(tok, pos, 200 + li as u64);
+                let hd = h * dh;
+                qs[at..at + hd].copy_from_slice(&q[li * hd..(li + 1) * hd]);
+                ks[at..at + hd].copy_from_slice(&k[li * hd..(li + 1) * hd]);
+                vs[at..at + hd].copy_from_slice(&val[li * hd..(li + 1) * hd]);
+            }
+        }
+        Ok(PrefillOutput { logits, qs, ks, vs })
+    }
+
+    fn decode(&self, token: i32, pos: usize, _flat: &FlatCaches) -> Result<StepOutput> {
+        Ok(StepOutput {
+            logits: self.logits_for(token),
+            q: self.embed(token, pos, 1),
+            k: self.embed(token, pos, 100),
+            v: self.embed(token, pos, 200),
+        })
+    }
+
+    fn position_slice(&self, full: &[f32], pos: usize) -> Vec<f32> {
+        let s = &self.spec;
+        let (l, t, h, dh) = (s.n_layers, s.prefill_t, s.n_heads, s.d_head);
+        let mut out = Vec::with_capacity(l * h * dh);
+        for li in 0..l {
+            let at = (li * t + pos) * h * dh;
+            out.extend_from_slice(&full[at..at + h * dh]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_is_deterministic() {
+        let m = MockExecutor::small();
+        let a = m.prefill(&[1, 2, 3]).unwrap();
+        let b = m.prefill(&[1, 2, 3]).unwrap();
+        assert_eq!(a.ks, b.ks);
+        assert_eq!(a.logits, b.logits);
+    }
+
+    #[test]
+    fn mock_logits_chain() {
+        let m = MockExecutor::small();
+        let out = m.prefill(&[5]).unwrap();
+        let v = m.spec().vocab;
+        let arg = crate::tensor::argmax(&out.logits[..v]);
+        assert_eq!(arg, 6);
+    }
+}

@@ -1,0 +1,19 @@
+//! L3 coordinator — the serving engine.
+//!
+//! vLLM-shaped: a request queue, per-sequence state machines
+//! (waiting → prefill → decode → done), a continuous-batching scheduler
+//! that admits sequences between decode ticks, and pluggable KV-cache
+//! compression policies (the paper's contribution) on every sequence.
+//!
+//! The engine is generic over [`StepExecutor`] so scheduling/batching
+//! logic is unit-tested against a deterministic mock; the PJRT-backed
+//! [`crate::model::Generator`] implements the same trait for real
+//! serving (see `impl` in this module).
+
+mod engine;
+mod executor;
+mod request;
+
+pub use engine::{Engine, EngineConfig, EngineStats};
+pub use executor::{MockExecutor, StepExecutor};
+pub use request::{Request, Response};

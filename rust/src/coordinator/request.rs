@@ -1,0 +1,55 @@
+//! Request/response types.
+
+use std::time::{Duration, Instant};
+
+/// A generation request.
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Caller-assigned id (echoed in the response).
+    pub id: u64,
+    /// Prompt token ids.
+    pub prompt: Vec<i32>,
+    /// Tokens to generate.
+    pub max_new: usize,
+    /// Cache policy name (see `kvcache::build_policy`).
+    pub policy: String,
+    /// Per-head token budget for compressed policies.
+    pub budget: usize,
+    /// SubGen cluster threshold δ.
+    pub delta: f32,
+}
+
+impl Request {
+    /// Convenience constructor with the exact policy.
+    pub fn exact(id: u64, prompt: Vec<i32>, max_new: usize) -> Self {
+        Self { id, prompt, max_new, policy: "exact".into(), budget: usize::MAX / 2, delta: 0.5 }
+    }
+}
+
+/// A completed generation.
+#[derive(Debug, Clone)]
+pub struct Response {
+    /// Request id.
+    pub id: u64,
+    /// Generated token ids (length ≤ max_new).
+    pub tokens: Vec<i32>,
+    /// Wall time from admission to completion.
+    pub latency: Duration,
+    /// Time spent queued before prefill.
+    pub queue_time: Duration,
+    /// Total KV-cache bytes retained at completion.
+    pub cache_bytes: usize,
+}
+
+/// Internal: sequence lifecycle timestamps.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct Timing {
+    pub submitted: Instant,
+    pub admitted: Option<Instant>,
+}
+
+impl Timing {
+    pub fn now() -> Self {
+        Self { submitted: Instant::now(), admitted: None }
+    }
+}

@@ -1,0 +1,221 @@
+//! Named-tensor checkpoint container (read + write).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"SUBGENCK";
+const VERSION: u32 = 1;
+
+/// One named tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NamedTensor {
+    /// Dimensions (row-major).
+    pub dims: Vec<usize>,
+    /// Flattened data, row-major.
+    pub data: Vec<f32>,
+}
+
+impl NamedTensor {
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// A set of named tensors (model weights, RoPE tables, etc.).
+#[derive(Debug, Clone, Default)]
+pub struct Checkpoint {
+    tensors: BTreeMap<String, NamedTensor>,
+}
+
+impl Checkpoint {
+    /// Empty checkpoint.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert/replace a tensor.
+    pub fn insert(&mut self, name: &str, dims: Vec<usize>, data: Vec<f32>) {
+        assert_eq!(dims.iter().product::<usize>(), data.len(), "{name}: shape/data mismatch");
+        self.tensors.insert(name.to_string(), NamedTensor { dims, data });
+    }
+
+    /// Lookup by name.
+    pub fn get(&self, name: &str) -> Option<&NamedTensor> {
+        self.tensors.get(name)
+    }
+
+    /// Lookup or error with the tensor name in the message.
+    pub fn require(&self, name: &str) -> Result<&NamedTensor> {
+        self.tensors.get(name).with_context(|| format!("checkpoint missing tensor {name:?}"))
+    }
+
+    /// Iterate names (sorted).
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.tensors.keys().map(|s| s.as_str())
+    }
+
+    /// Number of tensors.
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    /// Total parameter count.
+    pub fn total_params(&self) -> usize {
+        self.tensors.values().map(|t| t.numel()).sum()
+    }
+
+    /// Read from a file.
+    pub fn load(path: &Path) -> Result<Checkpoint> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading checkpoint {}", path.display()))?;
+        Self::from_bytes(&bytes)
+    }
+
+    /// Parse from bytes.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+        let mut r = Cursor { buf: bytes, pos: 0 };
+        let magic = r.take(8)?;
+        if magic != MAGIC {
+            bail!("bad checkpoint magic {magic:?}");
+        }
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!("unsupported checkpoint version {version}");
+        }
+        let count = r.u32()? as usize;
+        let mut ck = Checkpoint::new();
+        for _ in 0..count {
+            let name_len = r.u32()? as usize;
+            let name = std::str::from_utf8(r.take(name_len)?)
+                .context("tensor name not utf-8")?
+                .to_string();
+            let ndim = r.u32()? as usize;
+            if ndim > 8 {
+                bail!("tensor {name}: ndim {ndim} too large");
+            }
+            let mut dims = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                dims.push(r.u32()? as usize);
+            }
+            let numel: usize = dims.iter().product();
+            let raw = r.take(numel * 4)?;
+            let mut data = Vec::with_capacity(numel);
+            for c in raw.chunks_exact(4) {
+                data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+            }
+            ck.tensors.insert(name, NamedTensor { dims, data });
+        }
+        Ok(ck)
+    }
+
+    /// Write to a file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating checkpoint {}", path.display()))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&VERSION.to_le_bytes())?;
+        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, t) in &self.tensors {
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+            for &d in &t.dims {
+                f.write_all(&(d as u32).to_le_bytes())?;
+            }
+            // Bulk-convert for speed.
+            let mut raw = Vec::with_capacity(t.data.len() * 4);
+            for &x in &t.data {
+                raw.extend_from_slice(&x.to_le_bytes());
+            }
+            f.write_all(&raw)?;
+        }
+        Ok(())
+    }
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("checkpoint truncated at byte {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+// Silence unused warning for Read import used in trait bounds elsewhere.
+#[allow(unused)]
+fn _assert_read_used<R: Read>(_r: R) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_via_bytes() {
+        let mut ck = Checkpoint::new();
+        ck.insert("w1", vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        ck.insert("b", vec![3], vec![-0.5, 0.0, 0.5]);
+        let dir = std::env::temp_dir().join("subgen_ck_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("test.ck");
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.get("w1").unwrap().dims, vec![2, 3]);
+        assert_eq!(back.get("b").unwrap().data, vec![-0.5, 0.0, 0.5]);
+        assert_eq!(back.total_params(), 9);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let err = Checkpoint::from_bytes(b"NOTMAGIC\x01\x00\x00\x00").unwrap_err();
+        assert!(err.to_string().contains("magic"));
+    }
+
+    #[test]
+    fn truncated_rejected() {
+        let mut ck = Checkpoint::new();
+        ck.insert("x", vec![4], vec![0.0; 4]);
+        let dir = std::env::temp_dir().join("subgen_ck_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ck");
+        ck.save(&path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(bytes.len() - 3);
+        assert!(Checkpoint::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn require_reports_name() {
+        let ck = Checkpoint::new();
+        let err = ck.require("missing.w").unwrap_err();
+        assert!(err.to_string().contains("missing.w"));
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn insert_validates_shape() {
+        let mut ck = Checkpoint::new();
+        ck.insert("bad", vec![2, 2], vec![0.0; 3]);
+    }
+}

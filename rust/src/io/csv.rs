@@ -1,0 +1,88 @@
+//! Minimal CSV writer for experiment output (Fig-1 coordinates, sweep
+//! series). Quotes fields containing separators; floats rendered with
+//! enough precision to round-trip.
+
+use anyhow::Result;
+use std::io::Write;
+use std::path::Path;
+
+/// Buffered CSV writer.
+pub struct CsvWriter {
+    out: std::io::BufWriter<std::fs::File>,
+    cols: usize,
+}
+
+impl CsvWriter {
+    /// Create the file and write the header row.
+    pub fn create(path: &Path, headers: &[&str]) -> Result<CsvWriter> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let file = std::fs::File::create(path)?;
+        let mut w = CsvWriter { out: std::io::BufWriter::new(file), cols: headers.len() };
+        w.write_row(&headers.iter().map(|s| s.to_string()).collect::<Vec<_>>())?;
+        Ok(w)
+    }
+
+    /// Write one row of string fields.
+    pub fn write_row(&mut self, fields: &[String]) -> Result<()> {
+        anyhow::ensure!(fields.len() == self.cols, "expected {} fields, got {}", self.cols, fields.len());
+        let mut first = true;
+        for f in fields {
+            if !first {
+                write!(self.out, ",")?;
+            }
+            first = false;
+            if f.contains(',') || f.contains('"') || f.contains('\n') {
+                write!(self.out, "\"{}\"", f.replace('"', "\"\""))?;
+            } else {
+                write!(self.out, "{f}")?;
+            }
+        }
+        writeln!(self.out)?;
+        Ok(())
+    }
+
+    /// Write one row of f64 fields.
+    pub fn write_floats(&mut self, fields: &[f64]) -> Result<()> {
+        let strs: Vec<String> = fields.iter().map(|x| format!("{x}")).collect();
+        self.write_row(&strs)
+    }
+
+    /// Flush to disk.
+    pub fn flush(&mut self) -> Result<()> {
+        self.out.flush()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_and_escapes() {
+        let dir = std::env::temp_dir().join("subgen_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.write_row(&["plain".into(), "with,comma".into()]).unwrap();
+            w.write_floats(&[1.5, -2.25]).unwrap();
+            w.flush().unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "a,b");
+        assert_eq!(lines[1], "plain,\"with,comma\"");
+        assert_eq!(lines[2], "1.5,-2.25");
+    }
+
+    #[test]
+    fn wrong_arity_errors() {
+        let dir = std::env::temp_dir().join("subgen_csv_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut w = CsvWriter::create(&dir.join("t.csv"), &["a", "b"]).unwrap();
+        assert!(w.write_row(&["only-one".into()]).is_err());
+    }
+}

@@ -1,0 +1,97 @@
+//! Artifact manifest: maps logical executable names to HLO files and
+//! records the model hyperparameters they were lowered with.
+//!
+//! Written by `python/compile/aot.py` as `artifacts/manifest.toml`; read
+//! by the rust runtime at startup so shapes never drift silently between
+//! the compile path and the serving path.
+
+use crate::config::Config;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Parsed artifact manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Directory the manifest lives in (HLO paths resolve relative to it).
+    pub dir: PathBuf,
+    cfg: Config,
+}
+
+impl Manifest {
+    /// Load `manifest.toml` from an artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.toml");
+        let cfg = Config::load(&path)
+            .with_context(|| format!("loading manifest {}", path.display()))?;
+        Ok(Manifest { dir: dir.to_path_buf(), cfg })
+    }
+
+    /// Construct from an already-parsed config (tests).
+    pub fn from_config(dir: &Path, cfg: Config) -> Manifest {
+        Manifest { dir: dir.to_path_buf(), cfg }
+    }
+
+    /// Absolute path of a named HLO artifact (`[artifacts] name = "file"`).
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        let file = self.cfg.str_or("artifacts", name, "");
+        anyhow::ensure!(!file.is_empty(), "manifest has no artifact named {name:?}");
+        Ok(self.dir.join(file))
+    }
+
+    /// Checkpoint path.
+    pub fn checkpoint_path(&self) -> Result<PathBuf> {
+        let file = self.cfg.str_or("artifacts", "checkpoint", "");
+        anyhow::ensure!(!file.is_empty(), "manifest has no checkpoint entry");
+        Ok(self.dir.join(file))
+    }
+
+    /// Model hyperparameter (integer) recorded at lowering time.
+    pub fn model_int(&self, key: &str) -> Result<usize> {
+        let v = self.cfg.int_or("model", key, -1);
+        anyhow::ensure!(v >= 0, "manifest [model] missing {key:?}");
+        Ok(v as usize)
+    }
+
+    /// Model hyperparameter (float).
+    pub fn model_float(&self, key: &str, default: f64) -> f64 {
+        self.cfg.float_or("model", key, default)
+    }
+
+    /// Generic string lookup.
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.cfg.str_or(section, key, default)
+    }
+
+    /// Generic int lookup with default.
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.cfg.int_or(section, key, default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+[model]
+d_model = 64
+n_layers = 2
+n_heads = 4
+vocab = 67
+
+[artifacts]
+decode_step = "decode_step.hlo.txt"
+checkpoint = "model.ck"
+"#;
+
+    #[test]
+    fn lookups() {
+        let cfg = Config::parse(SAMPLE).unwrap();
+        let m = Manifest::from_config(Path::new("/tmp/a"), cfg);
+        assert_eq!(m.model_int("d_model").unwrap(), 64);
+        assert_eq!(m.hlo_path("decode_step").unwrap(), Path::new("/tmp/a/decode_step.hlo.txt"));
+        assert_eq!(m.checkpoint_path().unwrap(), Path::new("/tmp/a/model.ck"));
+        assert!(m.model_int("missing").is_err());
+        assert!(m.hlo_path("missing").is_err());
+    }
+}

@@ -1,0 +1,22 @@
+//! Binary checkpoint + CSV + artifact-manifest I/O.
+//!
+//! The checkpoint format is a tiny self-describing container written by
+//! `python/compile/aot.py` and read here — named f32 tensors:
+//!
+//! ```text
+//! magic   : 8 bytes  b"SUBGENCK"
+//! version : u32 LE   (1)
+//! count   : u32 LE   number of tensors
+//! repeat count times:
+//!   name_len : u32 LE, name bytes (utf-8)
+//!   ndim     : u32 LE, dims: u32 LE × ndim
+//!   data     : f32 LE × prod(dims)
+//! ```
+
+mod checkpoint;
+mod csv;
+mod manifest;
+
+pub use checkpoint::{Checkpoint, NamedTensor};
+pub use csv::CsvWriter;
+pub use manifest::Manifest;

@@ -1,0 +1,102 @@
+//! Exact (uncompressed) KV cache — the paper's "Exact" row in Table 1
+//! and the correctness oracle for every other policy.
+
+use super::{CachePolicy, PackedCache};
+use crate::tensor::Tensor;
+
+/// Stores every (k, v) pair; O(n·d) memory, the baseline SubGen beats.
+#[derive(Debug, Clone)]
+pub struct ExactCache {
+    keys: Tensor,
+    values: Tensor,
+}
+
+impl ExactCache {
+    /// Empty cache over `dim`-dimensional tokens.
+    pub fn new(dim: usize) -> Self {
+        Self { keys: Tensor::zeros(0, dim), values: Tensor::zeros(0, dim) }
+    }
+
+    /// Full key history (rows = tokens).
+    pub fn keys(&self) -> &Tensor {
+        &self.keys
+    }
+
+    /// Full value history.
+    pub fn values(&self) -> &Tensor {
+        &self.values
+    }
+}
+
+impl CachePolicy for ExactCache {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    fn update(&mut self, _q: &[f32], k: &[f32], v: &[f32]) {
+        self.keys.push_row(k);
+        self.values.push_row(v);
+    }
+
+    fn pack(&self, buf: &mut PackedCache) {
+        buf.clear();
+        for i in 0..self.keys.rows() {
+            buf.push(self.keys.row(i), self.values.row(i), 1.0, 1.0);
+        }
+    }
+
+    fn packed_append_only(&self) -> bool {
+        true
+    }
+
+    fn pack_from(&self, buf: &mut PackedCache, from: usize) {
+        buf.clear();
+        for i in from..self.keys.rows() {
+            buf.push(self.keys.row(i), self.values.row(i), 1.0, 1.0);
+        }
+    }
+
+    fn len(&self) -> u64 {
+        self.keys.rows() as u64
+    }
+
+    fn packed_slots(&self) -> usize {
+        self.keys.rows()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::exact_attention;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn matches_reference_attention_exactly() {
+        let dim = 8;
+        let mut rng = Pcg64::seed_from_u64(4);
+        let keys = Tensor::randn(&mut rng, 30, dim, 0.4);
+        let values = Tensor::randn(&mut rng, 30, dim, 1.0);
+        let mut c = ExactCache::new(dim);
+        for i in 0..30 {
+            c.update(&[0.0; 8], keys.row(i), values.row(i));
+        }
+        let q: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.3).sin()).collect();
+        let got = c.attention(&q);
+        let want = exact_attention(&q, &keys, &values);
+        assert!(crate::linalg::rel_err_vec(&got, &want) < 1e-5);
+    }
+
+    #[test]
+    fn memory_linear_in_n() {
+        let mut c = ExactCache::new(4);
+        for _ in 0..10 {
+            c.update(&[0.0; 4], &[1.0; 4], &[1.0; 4]);
+        }
+        let m10 = c.memory_bytes(4);
+        for _ in 0..10 {
+            c.update(&[0.0; 4], &[1.0; 4], &[1.0; 4]);
+        }
+        assert_eq!(c.memory_bytes(4), 2 * m10);
+    }
+}

@@ -1,0 +1,256 @@
+//! The fixed-capacity packed cache buffer shared by every policy and by
+//! the XLA kernel.
+
+use crate::tensor::dot;
+
+/// C-slot buffer: row-major K and V `[C, d]`, per-slot weights `w`
+/// (value path) and `u` (normalizer path). Unused slots carry zero
+/// weights so the kernel can always run at full capacity.
+#[derive(Debug, Clone)]
+pub struct PackedCache {
+    dim: usize,
+    capacity: usize,
+    used: usize,
+    keys: Vec<f32>,
+    values: Vec<f32>,
+    w: Vec<f32>,
+    u: Vec<f32>,
+}
+
+impl PackedCache {
+    /// Allocate an empty buffer.
+    pub fn new(dim: usize, capacity: usize) -> Self {
+        assert!(dim > 0 && capacity > 0);
+        Self {
+            dim,
+            capacity,
+            used: 0,
+            keys: vec![0.0; capacity * dim],
+            values: vec![0.0; capacity * dim],
+            w: vec![0.0; capacity],
+            u: vec![0.0; capacity],
+        }
+    }
+
+    /// Reset to empty without reallocating.
+    pub fn clear(&mut self) {
+        self.used = 0;
+        self.w.iter_mut().for_each(|x| *x = 0.0);
+        self.u.iter_mut().for_each(|x| *x = 0.0);
+        // K/V contents of unused slots are irrelevant: weights are zero.
+    }
+
+    /// Append one slot. Panics when full (policies must size buffers via
+    /// `packed_slots`).
+    pub fn push(&mut self, k: &[f32], v: &[f32], w: f32, u: f32) {
+        assert!(self.used < self.capacity, "packed cache overflow");
+        assert_eq!(k.len(), self.dim);
+        assert_eq!(v.len(), self.dim);
+        let at = self.used * self.dim;
+        self.keys[at..at + self.dim].copy_from_slice(k);
+        self.values[at..at + self.dim].copy_from_slice(v);
+        self.w[self.used] = w;
+        self.u[self.used] = u;
+        self.used += 1;
+    }
+
+    /// Occupied slots.
+    #[inline]
+    pub fn used(&self) -> usize {
+        self.used
+    }
+
+    /// Allocated slots.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Embedding dim.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Full K buffer `[capacity, dim]` row-major (zero-weighted tail
+    /// included) — exactly what the XLA executable consumes.
+    pub fn keys_buffer(&self) -> &[f32] {
+        &self.keys
+    }
+
+    /// Full V buffer.
+    pub fn values_buffer(&self) -> &[f32] {
+        &self.values
+    }
+
+    /// Value-path weights.
+    pub fn w_buffer(&self) -> &[f32] {
+        &self.w
+    }
+
+    /// Normalizer-path weights.
+    pub fn u_buffer(&self) -> &[f32] {
+        &self.u
+    }
+
+    /// Key row of slot `i`.
+    pub fn key(&self, i: usize) -> &[f32] {
+        &self.keys[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Value row of slot `i`.
+    pub fn value(&self, i: usize) -> &[f32] {
+        &self.values[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Evaluate the weighted-exponential attention estimator over the
+    /// buffer (host reference for the L1 kernel; numerically stabilized
+    /// with a max-shift over slots with positive weight).
+    pub fn attention(&self, q: &[f32]) -> Vec<f32> {
+        assert_eq!(q.len(), self.dim);
+        let mut out = vec![0.0f32; self.dim];
+        if self.used == 0 {
+            return out;
+        }
+        // Max score over slots that matter (w or u positive).
+        let mut shift = f32::NEG_INFINITY;
+        let mut scores = vec![0.0f32; self.used];
+        for i in 0..self.used {
+            let sc = dot(self.key(i), q);
+            scores[i] = sc;
+            if (self.w[i] > 0.0 || self.u[i] > 0.0) && sc > shift {
+                shift = sc;
+            }
+        }
+        if !shift.is_finite() {
+            return out;
+        }
+        let mut z = vec![0.0f64; self.dim];
+        let mut tau = 0.0f64;
+        for i in 0..self.used {
+            let e = ((scores[i] - shift) as f64).exp();
+            if self.w[i] > 0.0 {
+                let we = self.w[i] as f64 * e;
+                for (zj, &vj) in z.iter_mut().zip(self.value(i)) {
+                    *zj += we * vj as f64;
+                }
+            }
+            if self.u[i] > 0.0 {
+                tau += self.u[i] as f64 * e;
+            }
+        }
+        if tau > 0.0 {
+            for (o, zj) in out.iter_mut().zip(z) {
+                *o = (zj / tau) as f32;
+            }
+        }
+        out
+    }
+
+    /// Log-space normalizer estimate over the buffer: log Σ u_i·e^{⟨q,k_i⟩}.
+    pub fn log_partition(&self, q: &[f32]) -> f32 {
+        let mut shift = f32::NEG_INFINITY;
+        let mut scores = vec![0.0f32; self.used];
+        for i in 0..self.used {
+            let sc = dot(self.key(i), q);
+            scores[i] = sc;
+            if self.u[i] > 0.0 && sc > shift {
+                shift = sc;
+            }
+        }
+        if !shift.is_finite() {
+            return f32::NEG_INFINITY;
+        }
+        let mut s = 0.0f64;
+        for i in 0..self.used {
+            if self.u[i] > 0.0 {
+                s += self.u[i] as f64 * ((scores[i] - shift) as f64).exp();
+            }
+        }
+        shift + (s as f32).ln()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::exact_attention;
+    use crate::rng::Pcg64;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn unit_weights_recover_softmax_attention() {
+        let dim = 6;
+        let n = 12;
+        let mut rng = Pcg64::seed_from_u64(3);
+        let keys = Tensor::randn(&mut rng, n, dim, 0.5);
+        let values = Tensor::randn(&mut rng, n, dim, 1.0);
+        let mut buf = PackedCache::new(dim, n);
+        for i in 0..n {
+            buf.push(keys.row(i), values.row(i), 1.0, 1.0);
+        }
+        let q = [0.2f32, -0.1, 0.3, 0.05, -0.2, 0.1];
+        let got = buf.attention(&q);
+        let want = exact_attention(&q, &keys, &values);
+        assert!(crate::linalg::rel_err_vec(&got, &want) < 1e-5);
+    }
+
+    #[test]
+    fn zero_weight_slots_ignored() {
+        let dim = 4;
+        let mut buf = PackedCache::new(dim, 4);
+        buf.push(&[1.0; 4], &[1.0; 4], 1.0, 1.0);
+        // Poison slot with huge key but zero weights.
+        buf.push(&[100.0; 4], &[100.0; 4], 0.0, 0.0);
+        let out = buf.attention(&[1.0; 4]);
+        for &x in &out {
+            assert!((x - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn split_w_u_slots_match_manual_estimator() {
+        // Value slots (w only) and normalizer slots (u only) evaluated
+        // against a hand computation.
+        let dim = 2;
+        let mut buf = PackedCache::new(dim, 3);
+        buf.push(&[0.0, 0.0], &[2.0, 4.0], 0.5, 0.0); // value slot, e^0
+        buf.push(&[0.0, 0.0], &[0.0, 0.0], 0.0, 2.0); // norm slot, e^0
+        buf.push(&[f32::ln(2.0), 0.0], &[0.0, 0.0], 0.0, 1.0); // norm slot
+        let q = [1.0, 0.0];
+        // z = 0.5·1·(2,4) = (1,2); τ = 2·1 + 1·2 = 4 → (0.25, 0.5).
+        let out = buf.attention(&q);
+        assert!((out[0] - 0.25).abs() < 1e-5, "{out:?}");
+        assert!((out[1] - 0.5).abs() < 1e-5, "{out:?}");
+    }
+
+    #[test]
+    fn clear_reuses_buffer() {
+        let mut buf = PackedCache::new(2, 2);
+        buf.push(&[1.0, 0.0], &[1.0, 1.0], 1.0, 1.0);
+        buf.clear();
+        assert_eq!(buf.used(), 0);
+        assert_eq!(buf.attention(&[1.0, 0.0]), vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn stable_under_huge_scores() {
+        let dim = 2;
+        let mut buf = PackedCache::new(dim, 2);
+        buf.push(&[40.0, 0.0], &[1.0, 0.0], 1.0, 1.0);
+        buf.push(&[39.0, 0.0], &[0.0, 1.0], 1.0, 1.0);
+        let out = buf.attention(&[40.0, 0.0]); // scores 1600, 1560
+        assert!(out.iter().all(|x| x.is_finite()));
+        assert!(out[0] > 0.99);
+        let lp = buf.log_partition(&[40.0, 0.0]);
+        assert!((lp - 1600.0).abs() < 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn overflow_panics() {
+        let mut buf = PackedCache::new(2, 1);
+        buf.push(&[0.0; 2], &[0.0; 2], 1.0, 1.0);
+        buf.push(&[0.0; 2], &[0.0; 2], 1.0, 1.0);
+    }
+}

@@ -1,0 +1,120 @@
+//! Attention-sink cache (Xiao et al., StreamingLLM — the paper's "Sink"
+//! baseline): deterministically keep the first `n_sink` tokens plus a
+//! sliding window of the most recent tokens.
+
+use super::{CachePolicy, PackedCache, SlidingCache};
+
+/// First-`n_sink` + recent-`window` eviction policy.
+#[derive(Debug, Clone)]
+pub struct SinkCache {
+    dim: usize,
+    n_sink: usize,
+    /// The first n_sink (k, v) pairs, in arrival order.
+    sink_keys: Vec<f32>,
+    sink_values: Vec<f32>,
+    stored_sinks: usize,
+    recent: SlidingCache,
+    n: u64,
+}
+
+impl SinkCache {
+    /// `n_sink` initial tokens + `window` most recent.
+    pub fn new(dim: usize, n_sink: usize, window: usize) -> Self {
+        Self {
+            dim,
+            n_sink,
+            sink_keys: vec![0.0; n_sink * dim],
+            sink_values: vec![0.0; n_sink * dim],
+            stored_sinks: 0,
+            recent: SlidingCache::new(dim, window.max(1)),
+            n: 0,
+        }
+    }
+}
+
+impl CachePolicy for SinkCache {
+    fn name(&self) -> &'static str {
+        "sink"
+    }
+
+    fn update(&mut self, q: &[f32], k: &[f32], v: &[f32]) {
+        if self.stored_sinks < self.n_sink {
+            let at = self.stored_sinks * self.dim;
+            self.sink_keys[at..at + self.dim].copy_from_slice(k);
+            self.sink_values[at..at + self.dim].copy_from_slice(v);
+            self.stored_sinks += 1;
+        } else {
+            self.recent.update(q, k, v);
+        }
+        self.n += 1;
+    }
+
+    fn pack(&self, buf: &mut PackedCache) {
+        buf.clear();
+        for i in 0..self.stored_sinks {
+            buf.push(
+                &self.sink_keys[i * self.dim..(i + 1) * self.dim],
+                &self.sink_values[i * self.dim..(i + 1) * self.dim],
+                1.0,
+                1.0,
+            );
+        }
+        for i in 0..self.recent.retained() {
+            buf.push(self.recent.key_at(i), self.recent.value_at(i), 1.0, 1.0);
+        }
+    }
+
+    fn len(&self) -> u64 {
+        self.n
+    }
+
+    fn packed_slots(&self) -> usize {
+        self.stored_sinks + self.recent.retained()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn retains_first_and_last() {
+        let dim = 2;
+        let mut c = SinkCache::new(dim, 2, 3);
+        for i in 0..10 {
+            c.update(&[0.0; 2], &[i as f32; 2], &[i as f32; 2]);
+        }
+        let mut buf = PackedCache::new(dim, c.packed_slots());
+        c.pack(&mut buf);
+        assert_eq!(buf.used(), 5);
+        // Sinks = tokens 0,1; recent = 7,8,9.
+        assert_eq!(buf.value(0), &[0.0, 0.0]);
+        assert_eq!(buf.value(1), &[1.0, 1.0]);
+        assert_eq!(buf.value(2), &[7.0, 7.0]);
+        assert_eq!(buf.value(4), &[9.0, 9.0]);
+    }
+
+    #[test]
+    fn zero_sinks_degenerates_to_sliding() {
+        let dim = 2;
+        let mut c = SinkCache::new(dim, 0, 2);
+        for i in 0..5 {
+            c.update(&[0.0; 2], &[i as f32; 2], &[i as f32; 2]);
+        }
+        let mut buf = PackedCache::new(dim, 2);
+        c.pack(&mut buf);
+        assert_eq!(buf.used(), 2);
+        assert_eq!(buf.value(0), &[3.0, 3.0]);
+        assert_eq!(buf.value(1), &[4.0, 4.0]);
+    }
+
+    #[test]
+    fn memory_bounded() {
+        let dim = 4;
+        let mut c = SinkCache::new(dim, 4, 8);
+        for i in 0..1000 {
+            c.update(&[0.0; 4], &[i as f32; 4], &[1.0; 4]);
+        }
+        assert!(c.memory_bytes(dim) <= 12 * super::super::bytes_per_slot(dim));
+    }
+}

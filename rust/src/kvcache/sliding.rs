@@ -1,0 +1,131 @@
+//! Sliding-window cache: keep only the most recent `window` tokens.
+//! The simplest baseline and the "recent tokens" building block shared
+//! by Sink, H2O and the practical SubGen variant.
+
+use super::{CachePolicy, PackedCache};
+
+/// Ring buffer of the last `window` (k, v) pairs.
+#[derive(Debug, Clone)]
+pub struct SlidingCache {
+    dim: usize,
+    window: usize,
+    /// Ring storage, `window` rows each for k and v.
+    keys: Vec<f32>,
+    values: Vec<f32>,
+    /// Tokens observed.
+    n: u64,
+}
+
+impl SlidingCache {
+    /// Window of `window` tokens over `dim`-dimensional embeddings.
+    pub fn new(dim: usize, window: usize) -> Self {
+        assert!(window > 0);
+        Self { dim, window, keys: vec![0.0; window * dim], values: vec![0.0; window * dim], n: 0 }
+    }
+
+    /// Current number of retained tokens.
+    pub fn retained(&self) -> usize {
+        (self.n as usize).min(self.window)
+    }
+
+    /// Configured window capacity.
+    pub fn window(&self) -> usize {
+        self.window
+    }
+
+    /// Key of the i-th *oldest* retained token.
+    pub fn key_at(&self, i: usize) -> &[f32] {
+        let slot = self.slot_of(i);
+        &self.keys[slot * self.dim..(slot + 1) * self.dim]
+    }
+
+    /// Value of the i-th oldest retained token.
+    pub fn value_at(&self, i: usize) -> &[f32] {
+        let slot = self.slot_of(i);
+        &self.values[slot * self.dim..(slot + 1) * self.dim]
+    }
+
+    fn slot_of(&self, i: usize) -> usize {
+        let r = self.retained();
+        debug_assert!(i < r);
+        // Oldest retained token's ring position.
+        let start = if (self.n as usize) <= self.window { 0 } else { self.n as usize % self.window };
+        (start + i) % self.window
+    }
+}
+
+impl CachePolicy for SlidingCache {
+    fn name(&self) -> &'static str {
+        "sliding"
+    }
+
+    fn update(&mut self, _q: &[f32], k: &[f32], v: &[f32]) {
+        let slot = (self.n as usize) % self.window;
+        self.keys[slot * self.dim..(slot + 1) * self.dim].copy_from_slice(k);
+        self.values[slot * self.dim..(slot + 1) * self.dim].copy_from_slice(v);
+        self.n += 1;
+    }
+
+    fn pack(&self, buf: &mut PackedCache) {
+        buf.clear();
+        for i in 0..self.retained() {
+            buf.push(self.key_at(i), self.value_at(i), 1.0, 1.0);
+        }
+    }
+
+    fn len(&self) -> u64 {
+        self.n
+    }
+
+    fn packed_slots(&self) -> usize {
+        self.retained()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kv(i: usize, dim: usize) -> (Vec<f32>, Vec<f32>) {
+        ((0..dim).map(|j| (i * dim + j) as f32).collect(), vec![i as f32; dim])
+    }
+
+    #[test]
+    fn keeps_last_window_tokens_in_order() {
+        let dim = 2;
+        let mut c = SlidingCache::new(dim, 3);
+        for i in 0..7 {
+            let (k, v) = kv(i, dim);
+            c.update(&[0.0; 2], &k, &v);
+        }
+        assert_eq!(c.retained(), 3);
+        // Retained should be tokens 4, 5, 6 oldest-first.
+        assert_eq!(c.value_at(0), &[4.0, 4.0]);
+        assert_eq!(c.value_at(1), &[5.0, 5.0]);
+        assert_eq!(c.value_at(2), &[6.0, 6.0]);
+    }
+
+    #[test]
+    fn under_window_keeps_all() {
+        let dim = 2;
+        let mut c = SlidingCache::new(dim, 5);
+        for i in 0..3 {
+            let (k, v) = kv(i, dim);
+            c.update(&[0.0; 2], &k, &v);
+        }
+        assert_eq!(c.retained(), 3);
+        assert_eq!(c.value_at(0), &[0.0, 0.0]);
+        assert_eq!(c.value_at(2), &[2.0, 2.0]);
+    }
+
+    #[test]
+    fn memory_bounded_by_window() {
+        let dim = 4;
+        let mut c = SlidingCache::new(dim, 8);
+        for i in 0..100 {
+            let (k, v) = kv(i, dim);
+            c.update(&[0.0; 4], &k, &v);
+        }
+        assert_eq!(c.memory_bytes(dim), 8 * super::super::bytes_per_slot(dim));
+    }
+}

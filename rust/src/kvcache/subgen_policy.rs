@@ -1,0 +1,282 @@
+//! SubGen as a serving cache policy — Algorithm 1 fused with the
+//! recent-tokens sliding window (the practical variant of §3.2).
+//!
+//! Tokens enter the recent window first; when they age out they flow
+//! into the SubGen sketches (online key clustering + ℓ2 value sampling).
+//! Attention combines the exact window part with the sketched estimate
+//! of the older tokens through the shared packed-buffer estimator:
+//!
+//! * window tokens:   w = 1,           u = 1
+//! * ℓ2 samples:      w = μ/(s·‖v‖²),  u = 0
+//! * cluster samples: w = 0,           u = n_i/t
+
+use super::{CachePolicy, PackedCache, SlidingCache};
+use crate::subgen::{SubGenAttention, SubGenConfig};
+
+/// Configuration for the hybrid SubGen cache.
+#[derive(Debug, Clone, Copy)]
+pub struct SubGenCacheConfig {
+    /// Embedding dimension.
+    pub dim: usize,
+    /// Recent-window length r (0 disables the window).
+    pub recent: usize,
+    /// ℓ2 matrix-product samples s.
+    pub s: usize,
+    /// Uniform samples per cluster t.
+    pub t: usize,
+    /// Cluster threshold δ.
+    pub delta: f32,
+    /// Optional hard cap on clusters (diagnostics; None = unbounded).
+    pub max_clusters: Option<usize>,
+}
+
+/// Hybrid recent-window + SubGen-sketch cache policy.
+pub struct SubGenCache {
+    cfg: SubGenCacheConfig,
+    recent: Option<SlidingCache>,
+    sketch: SubGenAttention,
+    n: u64,
+}
+
+impl SubGenCache {
+    /// Build with explicit parameters; `seed` drives all sampling.
+    pub fn new(cfg: SubGenCacheConfig, seed: u64) -> Self {
+        let sketch_cfg =
+            SubGenConfig { dim: cfg.dim, delta: cfg.delta.max(1e-9), t: cfg.t.max(1), s: cfg.s.max(1) };
+        Self {
+            cfg,
+            recent: if cfg.recent > 0 { Some(SlidingCache::new(cfg.dim, cfg.recent)) } else { None },
+            sketch: SubGenAttention::new(sketch_cfg, seed),
+            n: 0,
+        }
+    }
+
+    /// Clusters discovered by the sketch so far.
+    pub fn num_clusters(&self) -> usize {
+        self.sketch.num_clusters()
+    }
+
+    /// The underlying sketch (diagnostics).
+    pub fn sketch(&self) -> &SubGenAttention {
+        &self.sketch
+    }
+}
+
+impl CachePolicy for SubGenCache {
+    fn name(&self) -> &'static str {
+        "subgen"
+    }
+
+    fn update(&mut self, q: &[f32], k: &[f32], v: &[f32]) {
+        match &mut self.recent {
+            Some(window) => {
+                // Oldest window token graduates into the sketch.
+                if window.retained() == window.window() {
+                    let gk = window.key_at(0).to_vec();
+                    let gv = window.value_at(0).to_vec();
+                    self.sketch.update(&gk, &gv);
+                }
+                window.update(q, k, v);
+            }
+            None => self.sketch.update(k, v),
+        }
+        // Keep the clustered share inside its budget by δ-doubling when
+        // the stream turns out less clusterable than configured.
+        if let Some(cap) = self.cfg.max_clusters {
+            self.sketch.enforce_cluster_cap(cap);
+        }
+        self.n += 1;
+    }
+
+    fn pack(&self, buf: &mut PackedCache) {
+        buf.clear();
+        // 1. Recent window: exact contribution to both paths.
+        if let Some(window) = &self.recent {
+            for i in 0..window.retained() {
+                buf.push(window.key_at(i), window.value_at(i), 1.0, 1.0);
+            }
+        }
+        // 2. ℓ2 matrix-product samples: numerator only.
+        let mp = self.sketch.matrix_product();
+        let mu = mp.mass();
+        let s = mp.num_slots() as f64;
+        for sample in mp.samples() {
+            if sample.v_norm_sq > 0.0 {
+                let w = (mu / (s * sample.v_norm_sq)) as f32;
+                buf.push(&sample.k, &sample.v, w, 0.0);
+            }
+        }
+        // 3. Cluster samples: normalizer only.
+        let nz = self.sketch.normalizer();
+        let t = nz.t() as f32;
+        for c in 0..nz.num_clusters() {
+            let u = nz.cluster_count(c) as f32 / t;
+            for key in nz.cluster_samples(c) {
+                buf.push(key, &vec![0.0; self.cfg.dim], 0.0, u);
+            }
+        }
+    }
+
+    fn len(&self) -> u64 {
+        self.n
+    }
+
+    fn packed_slots(&self) -> usize {
+        let window = self.recent.as_ref().map(|w| w.retained()).unwrap_or(0);
+        let mp = self.sketch.matrix_product().num_slots();
+        let nz = self.sketch.normalizer();
+        window + mp + nz.num_clusters() * nz.t()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::exact_attention;
+    use crate::linalg::rel_err_vec;
+    use crate::rng::{Pcg64, Rng};
+    use crate::tensor::Tensor;
+
+    /// Clusterable key stream with smooth values.
+    fn stream(n: usize, m: usize, dim: usize, sigma: f32, seed: u64) -> (Tensor, Tensor, Tensor) {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let centers: Vec<Vec<f32>> =
+            (0..m).map(|_| (0..dim).map(|_| rng.gaussian32(0.0, 1.0)).collect()).collect();
+        let mut keys = Tensor::zeros(0, dim);
+        let mut values = Tensor::zeros(0, dim);
+        let mut queries = Tensor::zeros(0, dim);
+        for i in 0..n {
+            let c = &centers[i % m];
+            keys.push_row(&c.iter().map(|&x| x + rng.gaussian32(0.0, sigma)).collect::<Vec<_>>());
+            values.push_row(&(0..dim).map(|_| rng.gaussian32(0.0, 1.0)).collect::<Vec<_>>());
+            queries.push_row(&(0..dim).map(|_| rng.gaussian32(0.0, 0.3)).collect::<Vec<_>>());
+        }
+        (keys, values, queries)
+    }
+
+    /// Eq. 3 of the paper: ‖z − Attn‖₂ ≤ ε·‖softmax(K·q)‖₂·‖V‖_op.
+    /// With s = Θ(d/ε²) and t = Θ(ε⁻²·e^{2δr}·log n), ε here ≈ 0.5.
+    #[test]
+    fn satisfies_spectral_error_bound_on_clusterable_stream() {
+        let dim = 16;
+        let n = 1200;
+        let (keys, values, queries) = stream(n, 6, dim, 0.03, 31);
+        let cfg =
+            SubGenCacheConfig { dim, recent: 64, s: 256, t: 64, delta: 0.4, max_clusters: None };
+        let mut c = SubGenCache::new(cfg, 5);
+        for i in 0..n {
+            c.update(queries.row(i), keys.row(i), values.row(i));
+        }
+        let q = queries.row(n - 1);
+        let got = c.attention(q);
+        let want = exact_attention(q, &keys, &values);
+        let err: f32 =
+            got.iter().zip(&want).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+        let rhs = crate::attention::error_bound_rhs(0.5, q, &keys, &values);
+        assert!(err <= rhs, "err={err} rhs={rhs}");
+        assert!(c.num_clusters() <= 12, "m={}", c.num_clusters());
+    }
+
+    /// In the low-variance regime for ℓ2 sampling (values sharing a
+    /// dominant direction with equal norms), the *relative output error*
+    /// is small too.
+    #[test]
+    fn low_relative_error_with_aligned_values() {
+        let dim = 16;
+        let n = 1200;
+        let (keys, _, queries) = stream(n, 6, dim, 0.03, 41);
+        let mut rng = Pcg64::seed_from_u64(42);
+        let base: Vec<f32> = (0..dim).map(|i| ((i as f32) * 0.4).cos()).collect();
+        let mut values = Tensor::zeros(0, dim);
+        for _ in 0..n {
+            values
+                .push_row(&base.iter().map(|&b| b + rng.gaussian32(0.0, 0.1)).collect::<Vec<_>>());
+        }
+        let cfg =
+            SubGenCacheConfig { dim, recent: 64, s: 256, t: 64, delta: 0.4, max_clusters: None };
+        let mut c = SubGenCache::new(cfg, 6);
+        for i in 0..n {
+            c.update(queries.row(i), keys.row(i), values.row(i));
+        }
+        let q = queries.row(n - 1);
+        let got = c.attention(q);
+        let want = exact_attention(q, &keys, &values);
+        let err = rel_err_vec(&got, &want);
+        assert!(err < 0.1, "err={err}");
+    }
+
+    /// δ-doubling keeps the cluster count (and so memory) capped on an
+    /// adversarially unclusterable stream.
+    #[test]
+    fn cluster_cap_bounds_memory_on_random_stream() {
+        let dim = 8;
+        let mut rng = Pcg64::seed_from_u64(51);
+        let cfg =
+            SubGenCacheConfig { dim, recent: 8, s: 8, t: 4, delta: 0.1, max_clusters: Some(6) };
+        let mut c = SubGenCache::new(cfg, 7);
+        for _ in 0..800 {
+            let k: Vec<f32> = (0..dim).map(|_| rng.gaussian32(0.0, 2.0)).collect();
+            let v: Vec<f32> = (0..dim).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+            c.update(&[0.0; 8], &k, &v);
+        }
+        assert!(c.num_clusters() <= 6, "m={}", c.num_clusters());
+        assert!(c.packed_slots() <= 8 + 8 + 6 * 4);
+        // Population accounting survives merges.
+        let nz = c.sketch().normalizer();
+        let pop: u64 = (0..nz.num_clusters()).map(|i| nz.cluster_count(i)).sum();
+        assert_eq!(pop, 800 - 8); // all graduated tokens
+    }
+
+    #[test]
+    fn window_only_prefix_is_exact() {
+        let dim = 8;
+        let (keys, values, queries) = stream(40, 4, dim, 0.1, 32);
+        let cfg =
+            SubGenCacheConfig { dim, recent: 64, s: 8, t: 4, delta: 0.5, max_clusters: None };
+        let mut c = SubGenCache::new(cfg, 1);
+        for i in 0..40 {
+            c.update(queries.row(i), keys.row(i), values.row(i));
+        }
+        // All 40 tokens still in the window: must equal exact attention.
+        let q = queries.row(39);
+        let got = c.attention(q);
+        let want = exact_attention(q, &keys, &values);
+        assert!(rel_err_vec(&got, &want) < 1e-5);
+    }
+
+    #[test]
+    fn memory_sublinear_vs_exact() {
+        let dim = 8;
+        let n = 4000;
+        let (keys, values, queries) = stream(n, 4, dim, 0.02, 33);
+        let cfg =
+            SubGenCacheConfig { dim, recent: 32, s: 32, t: 8, delta: 0.4, max_clusters: None };
+        let mut c = SubGenCache::new(cfg, 2);
+        for i in 0..n {
+            c.update(queries.row(i), keys.row(i), values.row(i));
+        }
+        let exact_bytes = n * super::super::bytes_per_slot(dim);
+        let got = c.memory_bytes(dim);
+        assert!(got * 10 < exact_bytes, "got={got} exact={exact_bytes}");
+    }
+
+    #[test]
+    fn no_window_variant_satisfies_bound() {
+        let dim = 8;
+        let (keys, values, queries) = stream(500, 4, dim, 0.02, 34);
+        let cfg =
+            SubGenCacheConfig { dim, recent: 0, s: 128, t: 32, delta: 0.4, max_clusters: None };
+        let mut c = SubGenCache::new(cfg, 3);
+        for i in 0..500 {
+            c.update(queries.row(i), keys.row(i), values.row(i));
+        }
+        let q = queries.row(499);
+        let got = c.attention(q);
+        let want = exact_attention(q, &keys, &values);
+        let err: f32 =
+            got.iter().zip(&want).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+        let rhs = crate::attention::error_bound_rhs(0.75, q, &keys, &values);
+        assert!(err <= rhs, "err={err} rhs={rhs}");
+        assert_eq!(c.len(), 500);
+    }
+}

@@ -1,0 +1,47 @@
+//! # SubGen — sublinear-time/memory token generation
+//!
+//! A production-shaped reproduction of *SubGen: Token Generation in
+//! Sublinear Time and Memory* (Zandieh, Han, Mirrokni, Karbasi; 2024):
+//! KV-cache compression for autoregressive LLM decoding via online
+//! clustering of keys and ℓ2 sampling of values, with a provable
+//! spectral-error guarantee.
+//!
+//! Layer map (see DESIGN.md):
+//! * **algorithm** — [`subgen`], [`clustering`], [`sampling`],
+//!   [`attention`]: the paper's Algorithm 1 and its substrates;
+//! * **serving** — [`kvcache`], [`coordinator`], [`server`],
+//!   [`runtime`], [`model`]: a vLLM-style rust serving stack with cache
+//!   policies as a first-class feature, running AOT-compiled JAX/Pallas
+//!   artifacts via PJRT;
+//! * **experiments** — [`workload`], [`tsne`], [`bench`], [`metrics`]:
+//!   everything needed to regenerate the paper's Table 1 and Figure 1
+//!   plus the Theorem-1 scaling studies;
+//! * **substrates** — [`rng`], [`tensor`], [`linalg`], [`cli`],
+//!   [`config`], [`io`], [`proptest_lite`]: the utility layer this
+//!   sandbox would normally pull from crates.io, built from scratch.
+
+pub mod attention;
+pub mod bench;
+pub mod cli;
+pub mod clustering;
+pub mod config;
+pub mod coordinator;
+pub mod io;
+pub mod kvcache;
+pub mod linalg;
+pub mod metrics;
+pub mod model;
+pub mod proptest_lite;
+pub mod rng;
+pub mod runtime;
+pub mod sampling;
+pub mod server;
+pub mod subgen;
+pub mod tensor;
+pub mod tsne;
+pub mod workload;
+
+/// Crate version string.
+pub fn version() -> &'static str {
+    env!("CARGO_PKG_VERSION")
+}

@@ -1,0 +1,163 @@
+//! Numerically careful scalar/vector helpers shared across the stack.
+
+/// Numerically stable log(Σ exp(x_i)). Returns `-inf` for empty input.
+pub fn logsumexp(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return f32::NEG_INFINITY;
+    }
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    if !m.is_finite() {
+        return m;
+    }
+    let s: f32 = xs.iter().map(|&x| (x - m).exp()).sum();
+    m + s.ln()
+}
+
+/// Stable weighted log-sum-exp: log(Σ w_i·exp(x_i)) with w_i ≥ 0.
+/// Entries with zero weight are skipped (so `x` may be -inf there).
+pub fn logsumexp_weighted(xs: &[f32], ws: &[f32]) -> f32 {
+    debug_assert_eq!(xs.len(), ws.len());
+    let mut m = f32::NEG_INFINITY;
+    for (&x, &w) in xs.iter().zip(ws) {
+        if w > 0.0 && x > m {
+            m = x;
+        }
+    }
+    if !m.is_finite() {
+        return f32::NEG_INFINITY;
+    }
+    let mut s = 0.0f32;
+    for (&x, &w) in xs.iter().zip(ws) {
+        if w > 0.0 {
+            s += w * (x - m).exp();
+        }
+    }
+    m + s.ln()
+}
+
+/// Relative error |a-b| / max(|b|, eps).
+pub fn rel_err(a: f32, b: f32) -> f32 {
+    (a - b).abs() / b.abs().max(1e-12)
+}
+
+/// L2 relative error between vectors: ‖a-b‖ / max(‖b‖, eps).
+pub fn rel_err_vec(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut num = 0.0f32;
+    let mut den = 0.0f32;
+    for (&x, &y) in a.iter().zip(b) {
+        num += (x - y) * (x - y);
+        den += y * y;
+    }
+    num.sqrt() / den.sqrt().max(1e-12)
+}
+
+/// Mean of a slice (0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation (0 for n < 2).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|&x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// p-th percentile (0..=100) by nearest-rank on a sorted copy.
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Least-squares slope of log(y) vs log(x): the empirical scaling
+/// exponent used to verify sublinearity claims (Cor. 1).
+pub fn loglog_slope(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len());
+    let lx: Vec<f64> = xs.iter().map(|&x| x.ln()).collect();
+    let ly: Vec<f64> = ys.iter().map(|&y| y.max(1e-300).ln()).collect();
+    let mx = mean(&lx);
+    let my = mean(&ly);
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for i in 0..lx.len() {
+        num += (lx[i] - mx) * (ly[i] - my);
+        den += (lx[i] - mx) * (lx[i] - mx);
+    }
+    if den == 0.0 {
+        0.0
+    } else {
+        num / den
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lse_matches_naive_small() {
+        let xs = [0.1f32, 0.2, 0.3];
+        let naive: f32 = xs.iter().map(|x| x.exp()).sum::<f32>().ln();
+        assert!((logsumexp(&xs) - naive).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lse_stable_large() {
+        let xs = [1000.0f32, 1000.0];
+        let v = logsumexp(&xs);
+        assert!((v - (1000.0 + 2.0f32.ln())).abs() < 1e-3);
+    }
+
+    #[test]
+    fn lse_empty() {
+        assert_eq!(logsumexp(&[]), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn lse_weighted() {
+        let xs = [1.0f32, 2.0, f32::NEG_INFINITY];
+        let ws = [2.0f32, 1.0, 0.0];
+        let naive = (2.0 * 1.0f32.exp() + 2.0f32.exp()).ln();
+        assert!((logsumexp_weighted(&xs, &ws) - naive).abs() < 1e-5);
+    }
+
+    #[test]
+    fn percentile_basics() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!((percentile(&xs, 50.0) - 50.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn slope_of_power_law() {
+        let xs: Vec<f64> = (1..20).map(|i| i as f64).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 3.0 * x.powf(0.5)).collect();
+        assert!((loglog_slope(&xs, &ys) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rel_err_vec_zero_for_equal() {
+        let a = [1.0f32, 2.0];
+        assert_eq!(rel_err_vec(&a, &a), 0.0);
+    }
+
+    #[test]
+    fn stats() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((stddev(&xs) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+    }
+}

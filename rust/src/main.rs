@@ -1,0 +1,126 @@
+//! `subgen` CLI — leader entrypoint for the serving stack.
+//!
+//! Subcommands:
+//!   info      — print artifact manifest + platform details
+//!   generate  — answer a single synthetic retrieval prompt
+//!   eval      — mini Table-1 run (accuracy per policy at one length)
+//!
+//! The full experiment drivers live in examples/ (see README).
+
+use anyhow::Result;
+use std::path::PathBuf;
+use subgen::cli::Args;
+use subgen::coordinator::{Engine, EngineConfig, Request};
+use subgen::model::{Generator, ModelSpec};
+use subgen::rng::Pcg64;
+use subgen::runtime::Runtime;
+use subgen::workload::{decode, lines_for_seq_len, RetrievalSampler};
+
+fn main() -> Result<()> {
+    let args = Args::from_env("subgen — sublinear KV-cache token generation")
+        .describe("artifacts", Some("artifacts"), "artifacts directory")
+        .describe("policy", Some("subgen"), "cache policy (exact|sink|h2o|sliding|subgen)")
+        .describe("budget", Some("128"), "per-head token budget")
+        .describe("delta", Some("4.0"), "subgen cluster threshold")
+        .describe("n", Some("384"), "context length in tokens (eval)")
+        .describe("questions", Some("10"), "questions to evaluate (eval)")
+        .describe("seed", Some("0"), "rng seed");
+    args.exit_on_help();
+
+    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    match args.subcommand().unwrap_or("info") {
+        "info" => info(&artifacts),
+        "generate" => generate(&args, &artifacts),
+        "eval" => eval(&args, &artifacts),
+        other => {
+            eprintln!("unknown subcommand {other:?}\n{}", args.usage());
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info(artifacts: &std::path::Path) -> Result<()> {
+    let rt = Runtime::load(artifacts, Some(&[]))?;
+    let spec = ModelSpec::from_manifest(rt.manifest())?;
+    println!("platform        : {}", rt.platform());
+    println!(
+        "model           : d_model={} layers={} heads={} d_head={} vocab={}",
+        spec.d_model, spec.n_layers, spec.n_heads, spec.d_head, spec.vocab
+    );
+    println!("prefill_t       : {}", spec.prefill_t);
+    println!("cache variants  : {:?}", spec.cache_variants);
+    println!("train accuracy  : {:.3}", spec.train_accuracy);
+    println!("artifacts       : {:?}", rt.manifest_artifact_names());
+    Ok(())
+}
+
+fn generate(args: &Args, artifacts: &std::path::Path) -> Result<()> {
+    let policy = args.get_or("policy", "subgen");
+    let budget = args.usize_or("budget", 128);
+    let delta = args.f32_or("delta", 4.0);
+    let n = args.usize_or("n", 384);
+    let seed = args.u64_or("seed", 0);
+
+    let rt = Runtime::load(artifacts, None)?;
+    let spec = ModelSpec::from_manifest(rt.manifest())?;
+    let generator = Generator::new(&rt, spec);
+
+    let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed));
+    let inst = sampler.sample(lines_for_seq_len(n));
+    let (prompt, answer) = inst.tokens();
+    println!("prompt tokens  : {}", prompt.len());
+    println!("query id       : {:02}", inst.query_id);
+
+    let mut caches =
+        subgen::model::SequenceCaches::new(generator.spec(), &policy, budget, delta, seed)?;
+    let out = generator.generate(&prompt, answer.len(), &mut caches)?;
+    println!("policy         : {policy} (budget {budget}/head)");
+    println!("cache bytes    : {}", subgen::bench::fmt_bytes(caches.memory_bytes()));
+    println!("expected       : {}", decode(&answer));
+    println!("generated      : {}", decode(&out));
+    println!("correct        : {}", out == answer);
+    Ok(())
+}
+
+fn eval(args: &Args, artifacts: &std::path::Path) -> Result<()> {
+    let policy = args.get_or("policy", "subgen");
+    let budget = args.usize_or("budget", 128);
+    let delta = args.f32_or("delta", 4.0);
+    let n = args.usize_or("n", 384);
+    let questions = args.usize_or("questions", 10);
+    let seed = args.u64_or("seed", 0);
+
+    let rt = Runtime::load(artifacts, None)?;
+    let spec = ModelSpec::from_manifest(rt.manifest())?;
+    let generator = Generator::new(&rt, spec);
+    let mut engine = Engine::new(&generator, EngineConfig::default());
+
+    let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed));
+    let mut expected = Vec::new();
+    for id in 0..questions {
+        let inst = sampler.sample(lines_for_seq_len(n));
+        let (prompt, answer) = inst.tokens();
+        expected.push(answer.clone());
+        engine.submit(Request {
+            id: id as u64,
+            prompt,
+            max_new: answer.len(),
+            policy: policy.clone(),
+            budget,
+            delta,
+        });
+    }
+    engine.run_to_completion()?;
+    let mut responses = engine.take_responses();
+    responses.sort_by_key(|r| r.id);
+    let correct =
+        responses.iter().filter(|r| r.tokens == expected[r.id as usize]).count();
+    println!(
+        "policy={policy} n={n} budget={budget}: accuracy {}/{} = {:.2}",
+        correct,
+        questions,
+        correct as f64 / questions as f64
+    );
+    println!("latency: {}", engine.stats.latency.summary());
+    Ok(())
+}

@@ -1,0 +1,267 @@
+//! Serving metrics: counters, latency histograms, throughput meters.
+//!
+//! Criterion-grade statistics for the serving stack without external
+//! crates. Histograms use logarithmic buckets (HdrHistogram-style) so
+//! p99 at microsecond-to-second range stays accurate with O(1) memory.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Lock-free monotonically increasing counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    /// New counter at zero.
+    pub const fn new() -> Self {
+        Self { value: AtomicU64::new(0) }
+    }
+
+    /// Add `n`.
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Increment by one.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-bucketed latency histogram covering 100ns .. ~100s.
+///
+/// Buckets: 8 per octave over 40 octaves (320 buckets), each recording
+/// counts; quantiles are reconstructed by bucket interpolation with
+/// ≤ ~9% relative error — ample for serving p50/p99 reporting.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    max_ns: AtomicU64,
+    min_ns: AtomicU64,
+}
+
+const BUCKETS_PER_OCTAVE: usize = 8;
+const NUM_OCTAVES: usize = 40;
+const NUM_BUCKETS: usize = BUCKETS_PER_OCTAVE * NUM_OCTAVES;
+const BASE_NS: f64 = 100.0;
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..NUM_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            max_ns: AtomicU64::new(0),
+            min_ns: AtomicU64::new(u64::MAX),
+        }
+    }
+
+    fn bucket_index(ns: u64) -> usize {
+        let x = (ns as f64).max(BASE_NS) / BASE_NS;
+        let idx = (x.log2() * BUCKETS_PER_OCTAVE as f64) as usize;
+        idx.min(NUM_BUCKETS - 1)
+    }
+
+    fn bucket_value(idx: usize) -> f64 {
+        BASE_NS * 2f64.powf((idx as f64 + 0.5) / BUCKETS_PER_OCTAVE as f64)
+    }
+
+    /// Record one duration.
+    pub fn record(&self, d: Duration) {
+        let ns = d.as_nanos().min(u128::from(u64::MAX)) as u64;
+        self.buckets[Self::bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+        self.min_ns.fetch_min(ns, Ordering::Relaxed);
+    }
+
+    /// Number of samples.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency.
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed) / c)
+    }
+
+    /// Max observed.
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_ns.load(Ordering::Relaxed))
+    }
+
+    /// Min observed (ZERO if empty).
+    pub fn min(&self) -> Duration {
+        let v = self.min_ns.load(Ordering::Relaxed);
+        if v == u64::MAX {
+            Duration::ZERO
+        } else {
+            Duration::from_nanos(v)
+        }
+    }
+
+    /// Approximate quantile (q in [0,1]).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((q.clamp(0.0, 1.0)) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_nanos(Self::bucket_value(i) as u64);
+            }
+        }
+        self.max()
+    }
+
+    /// Render a one-line summary: count/mean/p50/p90/p99/max.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:?} p50={:?} p90={:?} p99={:?} max={:?}",
+            self.count(),
+            self.mean(),
+            self.quantile(0.50),
+            self.quantile(0.90),
+            self.quantile(0.99),
+            self.max()
+        )
+    }
+}
+
+/// Wall-clock throughput meter.
+#[derive(Debug)]
+pub struct Throughput {
+    start: Instant,
+    events: Counter,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    /// Start the clock now.
+    pub fn new() -> Self {
+        Self { start: Instant::now(), events: Counter::new() }
+    }
+
+    /// Record `n` completed events.
+    pub fn add(&self, n: u64) {
+        self.events.add(n);
+    }
+
+    /// Events per second since construction.
+    pub fn rate(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            0.0
+        } else {
+            self.events.get() as f64 / secs
+        }
+    }
+
+    /// Total events.
+    pub fn total(&self) -> u64 {
+        self.events.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_quantiles_roughly_correct() {
+        let h = Histogram::new();
+        // 1..=1000 microseconds uniformly.
+        for us in 1..=1000u64 {
+            h.record(Duration::from_micros(us));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5).as_micros() as f64;
+        assert!((p50 - 500.0).abs() / 500.0 < 0.15, "p50={p50}");
+        let p99 = h.quantile(0.99).as_micros() as f64;
+        assert!((p99 - 990.0).abs() / 990.0 < 0.15, "p99={p99}");
+        assert!(h.min() >= Duration::from_nanos(100));
+        assert!(h.max() >= Duration::from_micros(999));
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.min(), Duration::ZERO);
+    }
+
+    #[test]
+    fn histogram_mean_exact() {
+        let h = Histogram::new();
+        h.record(Duration::from_micros(10));
+        h.record(Duration::from_micros(30));
+        assert_eq!(h.mean(), Duration::from_micros(20));
+    }
+
+    #[test]
+    fn histogram_is_send_sync_shared() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let h2 = h.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    h2.record(Duration::from_nanos(1000 + i));
+                }
+            }));
+        }
+        for j in handles {
+            j.join().unwrap();
+        }
+        assert_eq!(h.count(), 4000);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let t = Throughput::new();
+        t.add(10);
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.rate() > 0.0);
+        assert_eq!(t.total(), 10);
+    }
+}

@@ -1,0 +1,306 @@
+//! Per-sequence KV state: one cache policy per (layer, head), plus flat
+//! buffer assembly in the [L, H, C, dh] layout the decode executables
+//! expect.
+
+use crate::kvcache::{build_policy, CachePolicy, PackedCache};
+use crate::model::ModelSpec;
+use anyhow::Result;
+
+/// All per-(layer, head) policies of one sequence.
+pub struct SequenceCaches {
+    policies: Vec<Box<dyn CachePolicy>>, // indexed l * n_heads + h
+    n_layers: usize,
+    n_heads: usize,
+    d_head: usize,
+    /// Reusable per-(l,h) packing buffer.
+    scratch: PackedCache,
+    /// Tokens observed (positions fed so far).
+    len: usize,
+}
+
+/// Flat assembled buffers for one decode call.
+pub struct FlatCaches {
+    /// Capacity used for assembly.
+    pub capacity: usize,
+    /// [L, H, C, dh] row-major.
+    pub keys: Vec<f32>,
+    /// [L, H, C, dh].
+    pub values: Vec<f32>,
+    /// [L, H, C].
+    pub w: Vec<f32>,
+    /// [L, H, C].
+    pub u: Vec<f32>,
+    /// Per-(l,h) count of slots already valid in this buffer — the
+    /// incremental-assembly bookkeeping for append-only policies.
+    packed: Vec<usize>,
+}
+
+impl SequenceCaches {
+    /// One policy instance per (layer, head). `budget` is per-head
+    /// tokens; `delta` the SubGen cluster threshold (in key space).
+    pub fn new(
+        spec: &ModelSpec,
+        policy: &str,
+        budget: usize,
+        delta: f32,
+        seed: u64,
+    ) -> Result<SequenceCaches> {
+        let mut policies = Vec::with_capacity(spec.n_layers * spec.n_heads);
+        for l in 0..spec.n_layers {
+            for h in 0..spec.n_heads {
+                let s = seed ^ ((l as u64) << 32) ^ ((h as u64) << 16);
+                policies.push(build_policy(policy, spec.d_head, budget, delta, s)?);
+            }
+        }
+        // Scratch sized to the largest variant; realloc-free repacking.
+        let cap = spec.cache_variants[0];
+        Ok(SequenceCaches {
+            policies,
+            n_layers: spec.n_layers,
+            n_heads: spec.n_heads,
+            d_head: spec.d_head,
+            scratch: PackedCache::new(spec.d_head, cap),
+            len: 0,
+        })
+    }
+
+    /// Feed one step's per-layer-head q/k/v (each `[L, H, dh]` flat,
+    /// as returned by the prefill/decode executables).
+    pub fn update(&mut self, q: &[f32], k: &[f32], v: &[f32]) {
+        let dh = self.d_head;
+        let expect = self.n_layers * self.n_heads * dh;
+        debug_assert_eq!(q.len(), expect);
+        debug_assert_eq!(k.len(), expect);
+        debug_assert_eq!(v.len(), expect);
+        for i in 0..self.policies.len() {
+            let at = i * dh;
+            self.policies[i].update(&q[at..at + dh], &k[at..at + dh], &v[at..at + dh]);
+        }
+        self.len += 1;
+    }
+
+    /// Max packed slots over all (l, h) policies — drives capacity
+    /// variant selection.
+    pub fn max_slots(&self) -> usize {
+        self.policies.iter().map(|p| p.packed_slots()).max().unwrap_or(0)
+    }
+
+    /// Total retained bytes over all layers/heads (Table-1 cache size).
+    pub fn memory_bytes(&self) -> usize {
+        self.policies.iter().map(|p| p.memory_bytes(self.d_head)).sum()
+    }
+
+    /// Assemble flat [L, H, C, dh] buffers at capacity `c`. History must
+    /// fit in `c - 1` slots (the last slot is the executable's reserved
+    /// new-token slot).
+    pub fn assemble(&mut self, c: usize) -> Result<FlatCaches> {
+        let (l, h, dh) = (self.n_layers, self.n_heads, self.d_head);
+        anyhow::ensure!(
+            self.max_slots() <= c - 1,
+            "history ({} slots) exceeds capacity {} - 1",
+            self.max_slots(),
+            c
+        );
+        let mut flat = FlatCaches {
+            capacity: c,
+            keys: vec![0.0; l * h * c * dh],
+            values: vec![0.0; l * h * c * dh],
+            w: vec![0.0; l * h * c],
+            u: vec![0.0; l * h * c],
+            packed: vec![0; l * h],
+        };
+        self.assemble_into(&mut flat)?;
+        Ok(flat)
+    }
+
+    /// Re-assemble into existing buffers (no allocation). Append-only
+    /// policies (exact) copy only their new slots — O(Δ) instead of
+    /// O(C) per step on the decode hot path.
+    pub fn assemble_into(&mut self, flat: &mut FlatCaches) -> Result<()> {
+        let (lh, dh, c) = (self.policies.len(), self.d_head, flat.capacity);
+        debug_assert_eq!(flat.keys.len(), lh * c * dh);
+        for i in 0..lh {
+            let policy = &self.policies[i];
+            // packed_slots() is an upper bound on what pack may emit.
+            anyhow::ensure!(
+                policy.packed_slots() <= c - 1,
+                "policy {i} overflow: {} > {}",
+                policy.packed_slots(),
+                c - 1
+            );
+            let from =
+                if policy.packed_append_only() { flat.packed[i] } else { 0 };
+            policy.pack_from(&mut self.scratch, from);
+            let new = self.scratch.used();
+            let total = from + new;
+            anyhow::ensure!(total <= c - 1, "policy {i} packed {total} > {}", c - 1);
+            let kv_at = i * c * dh + from * dh;
+            let wu_at = i * c + from;
+            flat.keys[kv_at..kv_at + new * dh]
+                .copy_from_slice(&self.scratch.keys_buffer()[..new * dh]);
+            flat.values[kv_at..kv_at + new * dh]
+                .copy_from_slice(&self.scratch.values_buffer()[..new * dh]);
+            flat.w[wu_at..wu_at + new].copy_from_slice(&self.scratch.w_buffer()[..new]);
+            flat.u[wu_at..wu_at + new].copy_from_slice(&self.scratch.u_buffer()[..new]);
+            // Zero stale weights left behind when the packed set shrank
+            // (K/V contents there are masked by the zero weights).
+            if total < flat.packed[i] {
+                for x in &mut flat.w[i * c + total..i * c + flat.packed[i]] {
+                    *x = 0.0;
+                }
+                for x in &mut flat.u[i * c + total..i * c + flat.packed[i]] {
+                    *x = 0.0;
+                }
+            }
+            flat.packed[i] = total;
+        }
+        Ok(())
+    }
+
+    /// Host-side attention for (layer, head) — used by tests and the
+    /// clusterability harvest, not the serving path.
+    pub fn attention(&self, l: usize, h: usize, q: &[f32]) -> Vec<f32> {
+        self.policies[l * self.n_heads + h].attention(q)
+    }
+
+    /// Tokens observed.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True before any update.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Policy name (same across heads).
+    pub fn policy_name(&self) -> &'static str {
+        self.policies[0].name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::io::Manifest;
+    use crate::rng::{Pcg64, Rng};
+    use std::path::Path;
+
+    fn spec() -> ModelSpec {
+        let cfg = Config::parse(
+            r#"
+[model]
+vocab = 16
+d_model = 64
+n_heads = 2
+n_layers = 2
+d_head = 8
+prefill_t = 64
+decode_batch = 0
+cache_variants = "64,32"
+"#,
+        )
+        .unwrap();
+        ModelSpec::from_manifest(&Manifest::from_config(Path::new("/tmp"), cfg)).unwrap()
+    }
+
+    #[test]
+    fn assemble_layout_matches_policy_packing() {
+        let spec = spec();
+        let mut caches = SequenceCaches::new(&spec, "exact", 64, 0.5, 1).unwrap();
+        let mut rng = Pcg64::seed_from_u64(2);
+        let lh_dh = spec.n_layers * spec.n_heads * spec.d_head;
+        for _ in 0..5 {
+            let q: Vec<f32> = (0..lh_dh).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+            let k: Vec<f32> = (0..lh_dh).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+            let v: Vec<f32> = (0..lh_dh).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+            caches.update(&q, &k, &v);
+        }
+        let flat = caches.assemble(32).unwrap();
+        assert_eq!(flat.keys.len(), 2 * 2 * 32 * 8);
+        // Slot 3 of (l=1, h=0) equals the 4th token's key for that head.
+        // (exact policy preserves order.)
+        let c = 32;
+        let dh = 8;
+        let i = (1 * 2 + 0) * c * dh + 3 * dh;
+        assert!(flat.keys[i..i + dh].iter().any(|&x| x != 0.0));
+        // w/u are 1 on the 5 used slots, 0 beyond.
+        let wu = (1 * 2 + 0) * c;
+        assert_eq!(&flat.w[wu..wu + 6], &[1.0, 1.0, 1.0, 1.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn assemble_rejects_overflow() {
+        let spec = spec();
+        let mut caches = SequenceCaches::new(&spec, "exact", 64, 0.5, 1).unwrap();
+        let lh_dh = spec.n_layers * spec.n_heads * spec.d_head;
+        let zeros = vec![0.1f32; lh_dh];
+        for _ in 0..32 {
+            caches.update(&zeros, &zeros, &zeros);
+        }
+        // 32 history slots need capacity >= 33.
+        assert!(caches.assemble(32).is_err());
+        assert!(caches.assemble(64).is_ok());
+    }
+
+    #[test]
+    fn incremental_assembly_equals_full_assembly() {
+        // The append-only fast path must produce byte-identical buffers
+        // to a from-scratch assemble, for every policy.
+        let spec = spec();
+        for policy in crate::kvcache::POLICY_NAMES {
+            let mut rng = Pcg64::seed_from_u64(7);
+            let mut caches = SequenceCaches::new(&spec, policy, 12, 0.5, 1).unwrap();
+            let lh_dh = spec.n_layers * spec.n_heads * spec.d_head;
+            let mut incr: Option<FlatCaches> = None;
+            for step in 0..40 {
+                let q: Vec<f32> = (0..lh_dh).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+                let k: Vec<f32> = (0..lh_dh).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+                let v: Vec<f32> = (0..lh_dh).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+                caches.update(&q, &k, &v);
+                match &mut incr {
+                    None => incr = Some(caches.assemble(64).unwrap()),
+                    Some(flat) => caches.assemble_into(flat).unwrap(),
+                }
+                if step % 7 == 0 {
+                    let fresh = caches.assemble(64).unwrap();
+                    let flat = incr.as_ref().unwrap();
+                    assert_eq!(flat.w, fresh.w, "{policy} step {step}");
+                    assert_eq!(flat.u, fresh.u, "{policy} step {step}");
+                    // K/V may differ in zero-weight slots; compare the
+                    // weighted regions only.
+                    for i in 0..flat.w.len() {
+                        if flat.w[i] > 0.0 || flat.u[i] > 0.0 {
+                            let dh = spec.d_head;
+                            assert_eq!(
+                                flat.keys[i * dh..(i + 1) * dh],
+                                fresh.keys[i * dh..(i + 1) * dh],
+                                "{policy} step {step} slot {i}"
+                            );
+                            assert_eq!(
+                                flat.values[i * dh..(i + 1) * dh],
+                                fresh.values[i * dh..(i + 1) * dh],
+                                "{policy} step {step} slot {i}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn memory_accounting_sums_heads() {
+        let spec = spec();
+        let mut caches = SequenceCaches::new(&spec, "sliding", 8, 0.5, 1).unwrap();
+        let lh_dh = spec.n_layers * spec.n_heads * spec.d_head;
+        let x = vec![0.5f32; lh_dh];
+        for _ in 0..20 {
+            caches.update(&x, &x, &x);
+        }
+        // 4 heads × 8 slots × bytes_per_slot(8).
+        assert_eq!(caches.memory_bytes(), 4 * 8 * crate::kvcache::bytes_per_slot(8));
+        assert_eq!(caches.len(), 20);
+    }
+}

@@ -1,0 +1,155 @@
+//! Greedy generation driver over the PJRT executables.
+
+use crate::model::{caches::FlatCaches, ModelSpec, SequenceCaches};
+use crate::runtime::{lit_f32, lit_i32, lit_i32_scalar, to_vec_f32, Runtime};
+use crate::tensor::argmax;
+use anyhow::{Context, Result};
+
+/// Prefill results (history embeddings are fed to the cache policies).
+pub struct PrefillOutput {
+    /// Logits at every prompt position, [T, vocab] flat.
+    pub logits: Vec<f32>,
+    /// Per-token per-layer rope'd queries [L, T, H, dh] flat.
+    pub qs: Vec<f32>,
+    /// Keys, same layout.
+    pub ks: Vec<f32>,
+    /// Values, same layout.
+    pub vs: Vec<f32>,
+}
+
+/// One decode step's results.
+pub struct StepOutput {
+    /// Next-token logits [vocab].
+    pub logits: Vec<f32>,
+    /// This step's per-layer-head query [L, H, dh] flat.
+    pub q: Vec<f32>,
+    /// Key.
+    pub k: Vec<f32>,
+    /// Value.
+    pub v: Vec<f32>,
+}
+
+/// Stateless executor binding a [`Runtime`] to a [`ModelSpec`].
+pub struct Generator<'rt> {
+    rt: &'rt Runtime,
+    spec: ModelSpec,
+}
+
+impl<'rt> Generator<'rt> {
+    /// Wrap a runtime (artifacts must already be compiled).
+    pub fn new(rt: &'rt Runtime, spec: ModelSpec) -> Self {
+        Self { rt, spec }
+    }
+
+    /// Model spec.
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// Run the prefill executable over a prompt (padded to prefill_t).
+    pub fn prefill(&self, prompt: &[i32]) -> Result<PrefillOutput> {
+        let t = self.spec.prefill_t;
+        anyhow::ensure!(prompt.len() <= t, "prompt {} > prefill_t {t}", prompt.len());
+        let mut padded = prompt.to_vec();
+        padded.resize(t, 0);
+        let out = self.rt.execute("prefill", &[lit_i32(&padded, &[t])?])?;
+        anyhow::ensure!(out.len() == 4, "prefill returned {} outputs", out.len());
+        Ok(PrefillOutput {
+            logits: to_vec_f32(&out[0])?,
+            qs: to_vec_f32(&out[1])?,
+            ks: to_vec_f32(&out[2])?,
+            vs: to_vec_f32(&out[3])?,
+        })
+    }
+
+    /// Slice one position's [L, H, dh] from a prefill [L, T, H, dh] tensor.
+    pub fn position_slice(&self, full: &[f32], pos: usize) -> Vec<f32> {
+        let (l, t, h, dh) = (
+            self.spec.n_layers,
+            self.spec.prefill_t,
+            self.spec.n_heads,
+            self.spec.d_head,
+        );
+        debug_assert_eq!(full.len(), l * t * h * dh);
+        let mut out = Vec::with_capacity(l * h * dh);
+        for li in 0..l {
+            let at = (li * t + pos) * h * dh;
+            out.extend_from_slice(&full[at..at + h * dh]);
+        }
+        out
+    }
+
+    /// One decode step at `pos` over assembled caches.
+    pub fn decode(&self, token: i32, pos: usize, flat: &FlatCaches) -> Result<StepOutput> {
+        let (l, h, dh, c) = (
+            self.spec.n_layers,
+            self.spec.n_heads,
+            self.spec.d_head,
+            flat.capacity,
+        );
+        let name = self.spec.decode_artifact(c);
+        let out = self
+            .rt
+            .execute(
+                &name,
+                &[
+                    lit_i32_scalar(token),
+                    lit_i32_scalar(pos as i32),
+                    lit_f32(&flat.keys, &[l, h, c, dh])?,
+                    lit_f32(&flat.values, &[l, h, c, dh])?,
+                    lit_f32(&flat.w, &[l, h, c])?,
+                    lit_f32(&flat.u, &[l, h, c])?,
+                ],
+            )
+            .with_context(|| format!("decode step via {name}"))?;
+        anyhow::ensure!(out.len() == 4, "decode returned {} outputs", out.len());
+        Ok(StepOutput {
+            logits: to_vec_f32(&out[0])?,
+            q: to_vec_f32(&out[1])?,
+            k: to_vec_f32(&out[2])?,
+            v: to_vec_f32(&out[3])?,
+        })
+    }
+
+    /// Full greedy generation: prefill the prompt, replay cache-policy
+    /// updates, decode `n_new` tokens. Returns the generated ids.
+    pub fn generate(
+        &self,
+        prompt: &[i32],
+        n_new: usize,
+        caches: &mut SequenceCaches,
+    ) -> Result<Vec<i32>> {
+        let pre = self.prefill(prompt)?;
+        for pos in 0..prompt.len() {
+            let q = self.position_slice(&pre.qs, pos);
+            let k = self.position_slice(&pre.ks, pos);
+            let v = self.position_slice(&pre.vs, pos);
+            caches.update(&q, &k, &v);
+        }
+        let vocab = self.spec.vocab;
+        let last = prompt.len() - 1;
+        let mut next = argmax(&pre.logits[last * vocab..(last + 1) * vocab]) as i32;
+        let mut out = Vec::with_capacity(n_new);
+        // Reuse one flat buffer across steps, re-picking capacity only
+        // when the history no longer fits.
+        let mut c = self.spec.pick_cache_variant(caches.max_slots() + 1);
+        let mut flat = caches.assemble(c)?;
+        for j in 0..n_new {
+            out.push(next);
+            let pos = prompt.len() + j;
+            let step = self.decode(next, pos, &flat)?;
+            caches.update(&step.q, &step.k, &step.v);
+            next = argmax(&step.logits) as i32;
+            if j + 1 < n_new {
+                let needed = caches.max_slots() + 1;
+                if needed + 1 > c {
+                    c = self.spec.pick_cache_variant(needed);
+                    flat = caches.assemble(c)?;
+                } else {
+                    caches.assemble_into(&mut flat)?;
+                }
+            }
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,15 @@
+//! Model orchestration: drive the AOT-compiled executables from rust,
+//! with one cache policy per (layer, head) owning the compressed KV
+//! state between steps.
+//!
+//! Python is gone by now — the executables embed the trained weights;
+//! this module only packs buffers, picks the right cache-capacity
+//! variant, and runs greedy decoding.
+
+pub(crate) mod caches;
+mod generator;
+mod spec;
+
+pub use caches::{FlatCaches, SequenceCaches};
+pub use generator::{Generator, PrefillOutput, StepOutput};
+pub use spec::ModelSpec;

@@ -1,0 +1,126 @@
+//! Model hyperparameters as recorded in the artifact manifest.
+
+use crate::io::Manifest;
+use anyhow::Result;
+
+/// Shapes the executables were lowered with.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Residual width.
+    pub d_model: usize,
+    /// Attention heads.
+    pub n_heads: usize,
+    /// Decoder layers.
+    pub n_layers: usize,
+    /// Per-head dimension.
+    pub d_head: usize,
+    /// Prefill executable sequence length.
+    pub prefill_t: usize,
+    /// Available decode cache capacities, descending.
+    pub cache_variants: Vec<usize>,
+    /// Batched-decode batch size (0 = not lowered).
+    pub decode_batch: usize,
+    /// Training accuracy recorded at export time.
+    pub train_accuracy: f64,
+}
+
+impl ModelSpec {
+    /// Read from a manifest.
+    pub fn from_manifest(m: &Manifest) -> Result<ModelSpec> {
+        let variants: Vec<usize> = m
+            .str_or("model", "cache_variants", "")
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| s.trim().parse::<usize>())
+            .collect::<Result<_, _>>()?;
+        anyhow::ensure!(!variants.is_empty(), "manifest has no cache_variants");
+        Ok(ModelSpec {
+            vocab: m.model_int("vocab")?,
+            d_model: m.model_int("d_model")?,
+            n_heads: m.model_int("n_heads")?,
+            n_layers: m.model_int("n_layers")?,
+            d_head: m.model_int("d_head")?,
+            prefill_t: m.model_int("prefill_t")?,
+            cache_variants: variants,
+            decode_batch: m.int_or("model", "decode_batch", 0).max(0) as usize,
+            train_accuracy: m.model_float("train_accuracy", -1.0),
+        })
+    }
+
+    /// Smallest lowered capacity with `slots` usable history slots
+    /// (capacity − 1: the last slot is reserved for the new token).
+    /// Falls back to the largest variant.
+    pub fn pick_cache_variant(&self, slots: usize) -> usize {
+        let mut best = self.cache_variants[0];
+        for &c in &self.cache_variants {
+            if c >= slots + 1 && c <= best {
+                best = c;
+            }
+        }
+        best
+    }
+
+    /// The decode artifact name for capacity `c`.
+    pub fn decode_artifact(&self, c: usize) -> String {
+        format!("decode_c{c}")
+    }
+
+    /// The batched decode artifact name (largest capacity).
+    pub fn batched_decode_artifact(&self) -> String {
+        format!("decode_b{}_c{}", self.decode_batch, self.cache_variants[0])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use std::path::Path;
+
+    fn spec() -> ModelSpec {
+        let cfg = Config::parse(
+            r#"
+[model]
+vocab = 16
+d_model = 64
+n_heads = 4
+n_layers = 2
+d_head = 16
+prefill_t = 512
+decode_batch = 8
+cache_variants = "640,384,256,128"
+train_accuracy = 0.9
+"#,
+        )
+        .unwrap();
+        ModelSpec::from_manifest(&Manifest::from_config(Path::new("/tmp"), cfg)).unwrap()
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let s = spec();
+        assert_eq!(s.d_head, 16);
+        assert_eq!(s.cache_variants, vec![640, 384, 256, 128]);
+        assert_eq!(s.decode_batch, 8);
+        assert!((s.train_accuracy - 0.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn picks_smallest_sufficient_variant() {
+        let s = spec();
+        assert_eq!(s.pick_cache_variant(100), 128);
+        assert_eq!(s.pick_cache_variant(127), 128);
+        assert_eq!(s.pick_cache_variant(128), 256); // needs 128+1 slots
+        assert_eq!(s.pick_cache_variant(400), 640);
+        assert_eq!(s.pick_cache_variant(10_000), 640); // fallback: largest
+    }
+
+    #[test]
+    fn artifact_names() {
+        let s = spec();
+        assert_eq!(s.decode_artifact(384), "decode_c384");
+        assert_eq!(s.batched_decode_artifact(), "decode_b8_c640");
+    }
+}

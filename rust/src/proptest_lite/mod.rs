@@ -1,0 +1,182 @@
+//! Property-based testing mini-framework (stands in for proptest).
+//!
+//! A property is a closure over generated inputs that must hold for every
+//! case. The runner executes `cases` seeded cases; on failure it retries
+//! with progressively simpler inputs drawn from the generator's
+//! `simplify` ladder (a bounded, generator-directed shrink) and reports
+//! the seed so the exact failure replays deterministically.
+//!
+//! ```no_run
+//! use subgen::proptest_lite::{Gen, Runner};
+//! let mut runner = Runner::new(0xF00D, 200);
+//! runner.run("reverse twice is identity", Gen::vec_f32(0..64, -1.0, 1.0), |xs| {
+//!     let mut twice = xs.clone();
+//!     twice.reverse();
+//!     twice.reverse();
+//!     twice == *xs
+//! });
+//! ```
+
+use crate::rng::{Pcg64, Rng};
+
+/// A generator of values of type `T` plus a simplification ladder.
+pub struct Gen<T> {
+    /// Generate a value at the given size class (0 = simplest).
+    generate: Box<dyn Fn(&mut Pcg64, usize) -> T>,
+    /// Max size class used during generation.
+    max_size: usize,
+}
+
+impl<T: 'static> Gen<T> {
+    /// Build from a raw generation function.
+    pub fn from_fn(max_size: usize, f: impl Fn(&mut Pcg64, usize) -> T + 'static) -> Self {
+        Self { generate: Box::new(f), max_size }
+    }
+
+    /// Map the generated value.
+    pub fn map<U: 'static>(self, f: impl Fn(T) -> U + 'static) -> Gen<U> {
+        let g = self.generate;
+        Gen { generate: Box::new(move |rng, sz| f(g(rng, sz))), max_size: self.max_size }
+    }
+
+    /// Generate one value at a size class.
+    pub fn sample(&self, rng: &mut Pcg64, size: usize) -> T {
+        (self.generate)(rng, size)
+    }
+}
+
+impl Gen<usize> {
+    /// Uniform usize in [lo, hi] — range shrinks toward `lo` with size.
+    pub fn usize_in(lo: usize, hi: usize) -> Gen<usize> {
+        assert!(hi >= lo);
+        Gen::from_fn(16, move |rng, sz| {
+            let span = hi - lo;
+            let scaled = (span * (sz + 1)) / 16;
+            lo + rng.index(scaled.max(1).min(span + 1))
+        })
+    }
+}
+
+impl Gen<f32> {
+    /// Uniform f32 in [lo, hi) — magnitude shrinks with size class.
+    pub fn f32_in(lo: f32, hi: f32) -> Gen<f32> {
+        Gen::from_fn(16, move |rng, sz| {
+            let scale = (sz as f32 + 1.0) / 16.0;
+            let mid = 0.5 * (lo + hi);
+            let half = 0.5 * (hi - lo) * scale;
+            rng.f32_range(mid - half, mid + half)
+        })
+    }
+}
+
+impl Gen<Vec<f32>> {
+    /// Vector of f32 with length in `len` and entries in [lo, hi).
+    pub fn vec_f32(len: std::ops::Range<usize>, lo: f32, hi: f32) -> Gen<Vec<f32>> {
+        Gen::from_fn(16, move |rng, sz| {
+            let span = (len.end - len.start).max(1);
+            let scaled_span = ((span * (sz + 1)) / 16).max(1).min(span);
+            let n = len.start + rng.index(scaled_span);
+            let scale = (sz as f32 + 1.0) / 16.0;
+            (0..n).map(|_| rng.f32_range(lo * scale, hi * scale)).collect()
+        })
+    }
+}
+
+/// Pair two generators.
+pub fn pair<A: 'static, B: 'static>(a: Gen<A>, b: Gen<B>) -> Gen<(A, B)> {
+    let max = a.max_size.max(b.max_size);
+    Gen::from_fn(max, move |rng, sz| (a.sample(rng, sz), b.sample(rng, sz)))
+}
+
+/// Property-test runner.
+pub struct Runner {
+    seed: u64,
+    cases: usize,
+}
+
+impl Runner {
+    /// New runner: `seed` controls all generation, `cases` per property.
+    pub fn new(seed: u64, cases: usize) -> Self {
+        Self { seed, cases }
+    }
+
+    /// Run a property; panics with a replay report on the first failure
+    /// (after attempting to find a simpler failing case).
+    pub fn run<T: std::fmt::Debug + 'static>(
+        &mut self,
+        name: &str,
+        gen: Gen<T>,
+        prop: impl Fn(&T) -> bool,
+    ) {
+        for case in 0..self.cases {
+            // Grow size with case index so early cases are simple.
+            let size = (case * (gen.max_size + 1) / self.cases.max(1)).min(gen.max_size);
+            let mut rng = Pcg64::seed_from_u64(self.seed ^ (case as u64).wrapping_mul(0x9E37_79B9));
+            let value = gen.sample(&mut rng, size);
+            if !prop(&value) {
+                // Shrink: re-generate at smaller size classes with the
+                // same case stream until the property passes.
+                let mut simplest = value;
+                for s in (0..size).rev() {
+                    let mut rng2 =
+                        Pcg64::seed_from_u64(self.seed ^ (case as u64).wrapping_mul(0x9E37_79B9));
+                    let candidate = gen.sample(&mut rng2, s);
+                    if !prop(&candidate) {
+                        simplest = candidate;
+                    }
+                }
+                panic!(
+                    "property {name:?} failed (seed={:#x}, case={case}, size={size}).\n\
+                     simplest failing input: {simplest:?}",
+                    self.seed
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut r = Runner::new(1, 100);
+        r.run("abs is nonneg", Gen::f32_in(-10.0, 10.0), |x| x.abs() >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn failing_property_panics_with_report() {
+        let mut r = Runner::new(2, 100);
+        r.run("all values below 5", Gen::f32_in(-10.0, 10.0), |x| *x < 5.0);
+    }
+
+    #[test]
+    fn vec_generator_respects_bounds() {
+        let g = Gen::vec_f32(0..32, -2.0, 2.0);
+        let mut rng = Pcg64::seed_from_u64(3);
+        for sz in 0..16 {
+            let v = g.sample(&mut rng, sz);
+            assert!(v.len() < 32);
+            assert!(v.iter().all(|x| (-2.0..2.0).contains(x)));
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let g = Gen::vec_f32(1..8, -1.0, 1.0);
+        let mut a = Pcg64::seed_from_u64(5);
+        let mut b = Pcg64::seed_from_u64(5);
+        assert_eq!(g.sample(&mut a, 8), g.sample(&mut b, 8));
+    }
+
+    #[test]
+    fn pair_combines() {
+        let g = pair(Gen::usize_in(1, 10), Gen::f32_in(0.0, 1.0));
+        let mut rng = Pcg64::seed_from_u64(7);
+        let (n, x) = g.sample(&mut rng, 16);
+        assert!((1..=10).contains(&n));
+        assert!((0.0..1.0).contains(&x));
+    }
+}

@@ -1,0 +1,64 @@
+//! Literal packing helpers: rust slices ⇄ XLA literals.
+
+use anyhow::{Context, Result};
+
+/// Build an f32 literal of the given shape from a flat row-major slice.
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = dims.iter().product();
+    anyhow::ensure!(numel == data.len(), "lit_f32: {dims:?} vs len {}", data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::F32, dims, bytes)
+        .context("creating f32 literal")
+}
+
+/// Build an i32 literal of the given shape.
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = dims.iter().product();
+    anyhow::ensure!(numel == data.len(), "lit_i32: {dims:?} vs len {}", data.len());
+    let bytes =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::S32, dims, bytes)
+        .context("creating i32 literal")
+}
+
+/// Scalar i32 literal.
+pub fn lit_i32_scalar(v: i32) -> xla::Literal {
+    xla::Literal::from(v)
+}
+
+/// Extract an f32 literal into a Vec.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().context("literal to f32 vec")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let data = [1.0f32, -2.5, 3.25, 0.0, 7.5, -0.125];
+        let lit = lit_f32(&data, &[2, 3]).unwrap();
+        assert_eq!(to_vec_f32(&lit).unwrap(), data);
+    }
+
+    #[test]
+    fn i32_roundtrip() {
+        let data = [5i32, -7, 0, 123];
+        let lit = lit_i32(&data, &[4]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), data);
+    }
+
+    #[test]
+    fn shape_mismatch_rejected() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        assert!(lit_i32(&[1], &[2, 2]).is_err());
+    }
+
+    #[test]
+    fn scalar_literal() {
+        let lit = lit_i32_scalar(42);
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![42]);
+    }
+}

@@ -1,0 +1,110 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
+//! from the serving hot path.
+//!
+//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! One [`Runtime`] owns the client and a registry of compiled
+//! executables keyed by their manifest name; python never runs here.
+
+mod literal;
+
+pub use literal::{lit_f32, lit_i32, lit_i32_scalar, to_vec_f32};
+
+use crate::io::Manifest;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+/// Compiled-executable registry over a PJRT client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Load the manifest from `artifacts_dir` and compile the named
+    /// executables (pass `None` to compile everything listed).
+    pub fn load(artifacts_dir: &Path, names: Option<&[&str]>) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut rt = Runtime { client, executables: HashMap::new(), manifest };
+        match names {
+            Some(list) => {
+                for name in list {
+                    rt.compile_artifact(name)?;
+                }
+            }
+            None => {
+                for name in rt.manifest_artifact_names() {
+                    rt.compile_artifact(&name)?;
+                }
+            }
+        }
+        Ok(rt)
+    }
+
+    /// Artifact names listed in the manifest (excluding the checkpoint).
+    pub fn manifest_artifact_names(&self) -> Vec<String> {
+        let mut names = vec!["prefill".to_string(), "attn_kernel".to_string()];
+        let variants = self.manifest.str_or("model", "cache_variants", "");
+        for c in variants.split(',').filter(|s| !s.is_empty()) {
+            names.push(format!("decode_c{}", c.trim()));
+        }
+        let b = self.manifest.int_or("model", "decode_batch", 0);
+        if b > 0 {
+            if let Some(c) = variants.split(',').next() {
+                names.push(format!("decode_b{b}_c{}", c.trim()));
+            }
+        }
+        names.retain(|n| self.manifest.hlo_path(n).is_ok());
+        names
+    }
+
+    /// Compile one artifact by manifest name (idempotent).
+    pub fn compile_artifact(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.hlo_path(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name:?}"))?;
+        self.executables.insert(name.to_string(), exe);
+        eprintln!("[runtime] compiled {name} in {:?}", t0.elapsed());
+        Ok(())
+    }
+
+    /// Execute a compiled artifact; returns the flattened tuple outputs.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not compiled"))?;
+        let result = exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: always a tuple.
+        Ok(lit.to_tuple()?)
+    }
+
+    /// The underlying manifest (model hyperparameters etc.).
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// True if an artifact is compiled.
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

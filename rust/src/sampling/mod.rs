@@ -1,0 +1,232 @@
+//! Streaming sampling primitives.
+//!
+//! Two reservoirs drive SubGen:
+//!
+//! * [`UniformReservoir`] — Vitter's algorithm R per slot, as used by
+//!   `UpdateSoftmaxNormalizer` (Algorithm 1, lines 15-18): each of `t`
+//!   slots independently replaces its content with the n-th stream item
+//!   with probability 1/n, so every slot is a uniform sample of the
+//!   stream seen so far (slots are i.i.d., matching Lemma 2(5)).
+//! * [`L2Reservoir`] — the paper's `UpdateMatrixProduct` (lines 24-28):
+//!   each of `s` slots replaces its content with item n with probability
+//!   ‖v_n‖²/Σ_{i≤n}‖v_i‖², yielding i.i.d. row-norm samples
+//!   (Drineas–Kannan) per Lemma 1.
+
+use crate::rng::Rng;
+
+/// `t` i.i.d. uniform samples from a stream (independent per-slot
+/// replacement — *not* classic "reservoir of distinct items", by design:
+/// the estimator needs i.i.d. slots, duplicates allowed).
+#[derive(Debug, Clone)]
+pub struct UniformReservoir<T: Clone> {
+    slots: Vec<T>,
+    count: u64,
+}
+
+impl<T: Clone> UniformReservoir<T> {
+    /// Create with the first stream element filling all `t` slots.
+    pub fn first(t: usize, item: T) -> Self {
+        Self { slots: vec![item; t], count: 1 }
+    }
+
+    /// Reconstruct from existing slots + population count (used when
+    /// merging reservoirs during δ-doubling; the caller is responsible
+    /// for the slots being i.i.d. uniform over the claimed population).
+    pub fn from_parts(slots: Vec<T>, count: u64) -> Self {
+        assert!(!slots.is_empty() && count > 0);
+        Self { slots, count }
+    }
+
+    /// Merge several reservoirs over disjoint populations into one whose
+    /// slots are i.i.d. uniform over the union: each slot picks a source
+    /// reservoir with probability ∝ its population, then a uniform slot
+    /// from it.
+    pub fn merge<R: Rng>(rng: &mut R, parts: &[&UniformReservoir<T>]) -> Self {
+        assert!(!parts.is_empty());
+        let t = parts[0].slots.len();
+        let weights: Vec<f64> = parts.iter().map(|p| p.count as f64).collect();
+        let total: u64 = parts.iter().map(|p| p.count).sum();
+        let mut slots = Vec::with_capacity(t);
+        for _ in 0..t {
+            let src = rng.categorical(&weights).expect("positive counts");
+            let within = rng.index(parts[src].slots.len());
+            slots.push(parts[src].slots[within].clone());
+        }
+        Self { slots, count: total }
+    }
+
+    /// Observe the next stream element.
+    pub fn push<R: Rng>(&mut self, rng: &mut R, item: T) {
+        self.count += 1;
+        let p = 1.0 / self.count as f64;
+        for slot in self.slots.iter_mut() {
+            if rng.coin(p) {
+                *slot = item.clone();
+            }
+        }
+    }
+
+    /// Number of stream elements observed.
+    #[inline]
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Current samples.
+    #[inline]
+    pub fn samples(&self) -> &[T] {
+        &self.slots
+    }
+}
+
+/// `s` i.i.d. samples weighted by squared L2 norm of the value vector.
+#[derive(Debug, Clone)]
+pub struct L2Reservoir<T: Clone> {
+    slots: Vec<Option<T>>,
+    /// Running Σ‖v‖² over the stream (the paper's μ).
+    mass: f64,
+}
+
+impl<T: Clone> L2Reservoir<T> {
+    /// Empty reservoir with `s` slots.
+    pub fn new(s: usize) -> Self {
+        Self { slots: vec![None; s], mass: 0.0 }
+    }
+
+    /// Observe item with weight `w = ‖v‖²` (must be ≥ 0).
+    ///
+    /// Replacement probability is `w / (mass + w)`, exactly the paper's
+    /// `p = ‖v‖²/(μ + ‖v‖²)`; afterwards μ ← μ + w.
+    pub fn push<R: Rng>(&mut self, rng: &mut R, item: T, w: f64) {
+        debug_assert!(w >= 0.0);
+        let total = self.mass + w;
+        if total <= 0.0 {
+            // Zero-mass stream so far: leave slots empty.
+            return;
+        }
+        let p = w / total;
+        for slot in self.slots.iter_mut() {
+            if slot.is_none() || rng.coin(p) {
+                *slot = Some(item.clone());
+            }
+        }
+        self.mass = total;
+    }
+
+    /// Running total mass μ = Σ w.
+    #[inline]
+    pub fn mass(&self) -> f64 {
+        self.mass
+    }
+
+    /// Current samples (slots are `None` until a positive-mass item
+    /// arrives).
+    pub fn samples(&self) -> impl Iterator<Item = &T> {
+        self.slots.iter().filter_map(|s| s.as_ref())
+    }
+
+    /// Number of slots.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// True if no sample has been captured yet.
+    pub fn is_empty(&self) -> bool {
+        self.slots.iter().all(|s| s.is_none())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    /// Empirical marginal of a uniform reservoir slot ≈ 1/n each.
+    #[test]
+    fn uniform_reservoir_marginals() {
+        let n = 20usize;
+        let trials = 20_000;
+        let mut counts = vec![0usize; n];
+        let mut rng = Pcg64::seed_from_u64(42);
+        for _ in 0..trials {
+            let mut r = UniformReservoir::first(1, 0usize);
+            for item in 1..n {
+                r.push(&mut rng, item);
+            }
+            counts[r.samples()[0]] += 1;
+        }
+        let expect = trials as f64 / n as f64;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect).abs() < 6.0 * expect.sqrt(),
+                "item {i}: {c} vs {expect}"
+            );
+        }
+    }
+
+    /// Marginal of an L2 reservoir slot ∝ weight (Lemma 1).
+    #[test]
+    fn l2_reservoir_marginals() {
+        let weights = [1.0, 2.0, 3.0, 4.0];
+        let total: f64 = weights.iter().sum();
+        let trials = 40_000;
+        let mut counts = [0usize; 4];
+        let mut rng = Pcg64::seed_from_u64(7);
+        for _ in 0..trials {
+            let mut r = L2Reservoir::new(1);
+            for (i, &w) in weights.iter().enumerate() {
+                r.push(&mut rng, i, w);
+            }
+            counts[*r.samples().next().unwrap()] += 1;
+        }
+        for (i, &c) in counts.iter().enumerate() {
+            let expect = trials as f64 * weights[i] / total;
+            assert!(
+                (c as f64 - expect).abs() < 6.0 * expect.sqrt(),
+                "item {i}: {c} vs {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn l2_reservoir_mass_tracks_sum() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut r = L2Reservoir::new(3);
+        for w in [0.5, 1.5, 2.0] {
+            r.push(&mut rng, (), w);
+        }
+        assert!((r.mass() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn l2_reservoir_zero_weight_prefix() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut r = L2Reservoir::new(2);
+        r.push(&mut rng, 0usize, 0.0);
+        assert!(r.is_empty());
+        r.push(&mut rng, 1usize, 5.0);
+        // First positive-mass item must occupy all slots.
+        assert_eq!(r.samples().count(), 2);
+        assert!(r.samples().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn uniform_reservoir_slots_independent() {
+        // Two slots should not be perfectly correlated.
+        let mut rng = Pcg64::seed_from_u64(3);
+        let mut equal = 0;
+        let trials = 2_000;
+        for _ in 0..trials {
+            let mut r = UniformReservoir::first(2, 0usize);
+            for item in 1..10 {
+                r.push(&mut rng, item);
+            }
+            if r.samples()[0] == r.samples()[1] {
+                equal += 1;
+            }
+        }
+        // P(equal) = 1/10 for independent slots; allow wide slack.
+        assert!((equal as f64 / trials as f64) < 0.2);
+    }
+}

@@ -1,0 +1,140 @@
+//! Open-loop Poisson load generator + latency capture.
+
+use super::ServerHandle;
+use crate::coordinator::Request;
+use crate::metrics::Histogram;
+use crate::rng::{Pcg64, Rng};
+use std::sync::mpsc::Receiver;
+use std::time::{Duration, Instant};
+
+/// Load-generation parameters.
+pub struct LoadGen {
+    /// Mean request rate (req/s); inter-arrivals are exponential.
+    pub rate: f64,
+    /// Total requests to send.
+    pub requests: usize,
+    /// Request factory (id → request).
+    pub make_request: Box<dyn FnMut(u64) -> Request>,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+/// What the generator measured.
+#[derive(Debug)]
+pub struct LoadGenReport {
+    /// Requests completed.
+    pub completed: usize,
+    /// Requests whose channel was dropped (rejected).
+    pub failed: usize,
+    /// End-to-end latency distribution.
+    pub latency: Histogram,
+    /// Wall time of the whole run.
+    pub wall: Duration,
+    /// Tokens generated in total.
+    pub tokens: u64,
+}
+
+impl LoadGenReport {
+    /// Completed requests per second.
+    pub fn throughput_rps(&self) -> f64 {
+        self.completed as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    /// Generated tokens per second.
+    pub fn throughput_tps(&self) -> f64 {
+        self.tokens as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+impl LoadGen {
+    /// Run the open-loop experiment against a server handle. Arrivals
+    /// are scheduled on the wall clock; responses are collected as they
+    /// land so slow service shows up as latency, not reduced load.
+    pub fn run(mut self, handle: &ServerHandle) -> LoadGenReport {
+        let mut rng = Pcg64::seed_from_u64(self.seed);
+        let start = Instant::now();
+        let mut pending: Vec<(Instant, Receiver<crate::coordinator::Response>)> = Vec::new();
+        let report_latency = Histogram::new();
+        let mut failed = 0usize;
+        let mut completed = 0usize;
+        let mut tokens = 0u64;
+        let mut next_arrival = start;
+
+        for id in 0..self.requests {
+            // Exponential inter-arrival.
+            let gap = -((1.0 - rng.f64()).ln()) / self.rate;
+            next_arrival += Duration::from_secs_f64(gap);
+            let now = Instant::now();
+            if next_arrival > now {
+                std::thread::sleep(next_arrival - now);
+            }
+            let req = (self.make_request)(id as u64);
+            match handle.submit(req) {
+                Ok(rx) => pending.push((Instant::now(), rx)),
+                Err(_) => failed += 1,
+            }
+            // Opportunistically harvest completions.
+            pending.retain(|(sent, rx)| match rx.try_recv() {
+                Ok(resp) => {
+                    report_latency.record(sent.elapsed());
+                    completed += 1;
+                    tokens += resp.tokens.len() as u64;
+                    false
+                }
+                Err(std::sync::mpsc::TryRecvError::Empty) => true,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => {
+                    failed += 1;
+                    false
+                }
+            });
+        }
+        // Drain the tail.
+        for (sent, rx) in pending {
+            match rx.recv() {
+                Ok(resp) => {
+                    report_latency.record(sent.elapsed());
+                    completed += 1;
+                    tokens += resp.tokens.len() as u64;
+                }
+                Err(_) => failed += 1,
+            }
+        }
+        LoadGenReport {
+            completed,
+            failed,
+            latency: report_latency,
+            wall: start.elapsed(),
+            tokens,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{EngineConfig, MockExecutor};
+    use crate::server::{channel, serve};
+
+    #[test]
+    fn loadgen_completes_all_requests() {
+        let (handle, rx) = channel();
+        let t = std::thread::spawn(move || {
+            let exec = MockExecutor::small();
+            serve(&exec, EngineConfig::default(), rx).unwrap()
+        });
+        let report = LoadGen {
+            rate: 500.0,
+            requests: 20,
+            make_request: Box::new(|id| Request::exact(id, vec![(id % 8) as i32], 3)),
+            seed: 1,
+        }
+        .run(&handle);
+        assert_eq!(report.completed, 20);
+        assert_eq!(report.failed, 0);
+        assert_eq!(report.tokens, 60);
+        assert!(report.throughput_rps() > 0.0);
+        assert_eq!(report.latency.count(), 20);
+        handle.shutdown();
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,157 @@
+//! Thread + channel front-end over the engine, plus an open-loop
+//! Poisson load generator for the throughput experiments.
+//!
+//! tokio is unavailable offline; the serving loop is a dedicated engine
+//! thread fed by an mpsc channel — the same architecture (single model
+//! thread, concurrent submitters, continuous batching) at std-lib scale.
+
+mod loadgen;
+
+pub use loadgen::{LoadGen, LoadGenReport};
+
+use crate::coordinator::{Engine, EngineConfig, Request, Response, StepExecutor};
+use anyhow::Result;
+use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+
+/// Messages into the engine thread (public only because it appears in
+/// [`serve`]'s signature; construct via [`ServerHandle`]).
+pub enum Msg {
+    Submit(Request, Sender<Response>),
+    Shutdown,
+}
+
+/// Handle for submitting requests to a running engine loop.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: Sender<Msg>,
+}
+
+impl ServerHandle {
+    /// Submit a request; returns the response receiver.
+    pub fn submit(&self, req: Request) -> Result<Receiver<Response>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Submit(req, tx))
+            .map_err(|_| anyhow::anyhow!("engine loop terminated"))?;
+        Ok(rx)
+    }
+
+    /// Submit and block for the response.
+    pub fn submit_blocking(&self, req: Request) -> Result<Response> {
+        let rx = self.submit(req)?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped the request"))
+    }
+
+    /// Ask the loop to stop after draining in-flight work.
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}
+
+/// Run the engine loop on the *current* thread until shutdown.
+///
+/// The PJRT-backed executor is not `Send`, so callers spawn a thread,
+/// build the runtime inside it, and call this (see
+/// `examples/serving_throughput.rs`). Returns on `Shutdown` after all
+/// in-flight sequences finish.
+pub fn serve<E: StepExecutor>(
+    exec: &E,
+    cfg: EngineConfig,
+    rx: Receiver<Msg>,
+) -> Result<crate::coordinator::EngineStats> {
+    let mut engine = Engine::new(exec, cfg);
+    let mut responders: std::collections::HashMap<u64, Sender<Response>> =
+        std::collections::HashMap::new();
+    let mut shutting_down = false;
+    loop {
+        // Drain the inbox without blocking while work is in flight;
+        // block when idle to avoid spinning.
+        loop {
+            let msg = if engine.pending() == 0 && !shutting_down {
+                match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => return Ok(engine.stats),
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => m,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => {
+                        shutting_down = true;
+                        break;
+                    }
+                }
+            };
+            match msg {
+                Msg::Submit(req, tx) => {
+                    responders.insert(req.id, tx);
+                    if !engine.submit(req) {
+                        // Rejected: report by dropping the sender (the
+                        // caller sees a disconnected receiver).
+                    }
+                }
+                Msg::Shutdown => shutting_down = true,
+            }
+        }
+        engine.tick()?;
+        for resp in engine.take_responses() {
+            if let Some(tx) = responders.remove(&resp.id) {
+                let _ = tx.send(resp);
+            }
+        }
+        if shutting_down && engine.pending() == 0 {
+            return Ok(engine.stats);
+        }
+    }
+}
+
+/// Create the channel pair for [`serve`].
+pub fn channel() -> (ServerHandle, Receiver<Msg>) {
+    let (tx, rx) = mpsc::channel();
+    (ServerHandle { tx }, rx)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MockExecutor;
+
+    #[test]
+    fn serve_loop_round_trips_requests() {
+        let (handle, rx) = channel();
+        let h2 = handle.clone();
+        let t = std::thread::spawn(move || {
+            let exec = MockExecutor::small();
+            serve(&exec, EngineConfig::default(), rx).unwrap()
+        });
+        let resp = h2.submit_blocking(Request::exact(1, vec![3], 3)).unwrap();
+        assert_eq!(resp.tokens, vec![4, 5, 6]);
+        h2.shutdown();
+        let stats = t.join().unwrap();
+        assert_eq!(stats.completed.get(), 1);
+    }
+
+    #[test]
+    fn concurrent_submitters() {
+        let (handle, rx) = channel();
+        let t = std::thread::spawn(move || {
+            let exec = MockExecutor::small();
+            serve(&exec, EngineConfig::default(), rx).unwrap()
+        });
+        let mut joins = Vec::new();
+        for i in 0..6 {
+            let h = handle.clone();
+            joins.push(std::thread::spawn(move || {
+                h.submit_blocking(Request::exact(i, vec![i as i32 % 8], 2)).unwrap()
+            }));
+        }
+        let mut total = 0;
+        for j in joins {
+            let r = j.join().unwrap();
+            total += r.tokens.len();
+        }
+        assert_eq!(total, 12);
+        handle.shutdown();
+        t.join().unwrap();
+    }
+}

@@ -1,0 +1,260 @@
+//! SubGen (Algorithm 1): the paper's streaming attention data structure.
+//!
+//! Two sketches compose the estimator `z/τ`:
+//!
+//! * [`MatrixProductSketch`] — `s` ℓ2-weighted reservoir samples of
+//!   (k, v) pairs estimating `exp(K·q)ᵀ·V` (numerator z);
+//! * [`SoftmaxNormalizerSketch`] — online δ-threshold clustering with `t`
+//!   uniform samples per cluster estimating the partition function τ.
+//!
+//! [`SubGenAttention`] bundles both behind the streaming-DS interface of
+//! §2.1: `update(k, v)` is o(n) (O(md + td + sd)), `query(q)` is o(n)
+//! (O(mtd + sd)), and memory is O((mt + s)·d).
+//!
+//! The query path here is the *host* implementation used by algorithmic
+//! experiments and tests; the serving stack evaluates the same estimator
+//! inside XLA via the packed-buffer kernel (see `kvcache::pack` and the
+//! L1 Pallas kernel).
+
+mod matrix_product;
+mod normalizer;
+
+pub use matrix_product::MatrixProductSketch;
+pub use normalizer::SoftmaxNormalizerSketch;
+
+use crate::rng::Pcg64;
+use crate::tensor::scale;
+
+/// Configuration for the SubGen sketch.
+#[derive(Debug, Clone, Copy)]
+pub struct SubGenConfig {
+    /// Embedding dimension d.
+    pub dim: usize,
+    /// Cluster threshold δ (Definition 1).
+    pub delta: f32,
+    /// Uniform samples per cluster, t = Ω(ε⁻²·e^{2δr}·log n).
+    pub t: usize,
+    /// Matrix-product samples, s = Ω(ε⁻²·d).
+    pub s: usize,
+}
+
+impl SubGenConfig {
+    /// Theorem-1 parameter choice for target error `eps`, query-norm
+    /// bound `r` and horizon `n`. The paper splits ε into ε/3 per
+    /// component (Eq. 5/6), which surfaces as the constant 3 below —
+    /// calibrated empirically so the Eq. 3 bound holds with margin at
+    /// the 0.99 confidence level (see EXPERIMENTS.md §TH1).
+    pub fn for_error(dim: usize, delta: f32, eps: f32, r: f32, n: usize) -> Self {
+        let ln_n = (n.max(2) as f32).ln();
+        let t = (3.0 * (2.0 * delta * r).exp() * ln_n / (eps * eps)).ceil() as usize;
+        let s = (3.0 * dim as f32 / (eps * eps)).ceil() as usize;
+        Self { dim, delta, t: t.max(4), s: s.max(4) }
+    }
+}
+
+/// The full streaming-attention estimator (Algorithm 1).
+#[derive(Debug, Clone)]
+pub struct SubGenAttention {
+    cfg: SubGenConfig,
+    matprod: MatrixProductSketch,
+    normalizer: SoftmaxNormalizerSketch,
+    rng: Pcg64,
+    n: u64,
+}
+
+impl SubGenAttention {
+    /// Fresh sketch; all randomness derives from `seed`.
+    pub fn new(cfg: SubGenConfig, seed: u64) -> Self {
+        Self {
+            matprod: MatrixProductSketch::new(cfg.dim, cfg.s),
+            normalizer: SoftmaxNormalizerSketch::new(cfg.dim, cfg.delta, cfg.t),
+            rng: Pcg64::seed_from_u64(seed),
+            cfg,
+            n: 0,
+        }
+    }
+
+    /// Process one stream token (lines 3–6 of Algorithm 1).
+    pub fn update(&mut self, k: &[f32], v: &[f32]) {
+        debug_assert_eq!(k.len(), self.cfg.dim);
+        debug_assert_eq!(v.len(), self.cfg.dim);
+        self.normalizer.update(&mut self.rng, k);
+        self.matprod.update(&mut self.rng, k, v);
+        self.n += 1;
+    }
+
+    /// Cap the cluster count by δ-doubling (see
+    /// [`SoftmaxNormalizerSketch::enforce_cluster_cap`]); keeps memory
+    /// bounded even on adversarially unclusterable streams at the cost
+    /// of a coarser partition.
+    pub fn enforce_cluster_cap(&mut self, cap: usize) {
+        self.normalizer.enforce_cluster_cap(&mut self.rng, cap);
+    }
+
+    /// `QueryStreamAttn` (lines 29–31): estimator z/τ of
+    /// softmax(K·q)ᵀ·V.
+    pub fn query(&self, q: &[f32]) -> Vec<f32> {
+        debug_assert_eq!(q.len(), self.cfg.dim);
+        let mut z = self.matprod.estimate_numerator(q);
+        let tau = self.normalizer.estimate_partition(q);
+        if tau > 0.0 && tau.is_finite() {
+            scale(&mut z, 1.0 / tau as f32);
+        }
+        z
+    }
+
+    /// Estimated partition function τ alone (for the (1±ε) experiments).
+    pub fn partition_estimate(&self, q: &[f32]) -> f64 {
+        self.normalizer.estimate_partition(q)
+    }
+
+    /// Estimated (unnormalized) numerator z alone.
+    pub fn numerator_estimate(&self, q: &[f32]) -> Vec<f32> {
+        self.matprod.estimate_numerator(q)
+    }
+
+    /// Tokens processed.
+    #[inline]
+    pub fn len(&self) -> u64 {
+        self.n
+    }
+
+    /// True before the first update.
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Clusters discovered so far (m').
+    pub fn num_clusters(&self) -> usize {
+        self.normalizer.num_clusters()
+    }
+
+    /// Total bytes of sketch state — the sublinear-memory claim is
+    /// checked against this accounting.
+    pub fn memory_bytes(&self) -> usize {
+        self.matprod.memory_bytes() + self.normalizer.memory_bytes()
+    }
+
+    /// Access the normalizer sketch (for packing into kernel buffers).
+    pub fn normalizer(&self) -> &SoftmaxNormalizerSketch {
+        &self.normalizer
+    }
+
+    /// Access the matrix-product sketch (for packing into kernel buffers).
+    pub fn matrix_product(&self) -> &MatrixProductSketch {
+        &self.matprod
+    }
+
+    /// Configuration.
+    pub fn config(&self) -> &SubGenConfig {
+        &self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{error_bound_rhs, exact_attention, exact_log_partition};
+    use crate::rng::{Pcg64, Rng};
+    use crate::tensor::Tensor;
+
+    /// Build a clusterable key stream: `m` gaussian blobs of radius ~σ.
+    fn clusterable_stream(
+        n: usize,
+        m: usize,
+        dim: usize,
+        sigma: f32,
+        seed: u64,
+    ) -> (Tensor, Tensor) {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut centers = Vec::new();
+        for _ in 0..m {
+            let c: Vec<f32> = (0..dim).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+            centers.push(c);
+        }
+        let mut keys = Tensor::zeros(0, dim);
+        let mut values = Tensor::zeros(0, dim);
+        for i in 0..n {
+            let c = &centers[i % m];
+            let k: Vec<f32> = c.iter().map(|&x| x + rng.gaussian32(0.0, sigma)).collect();
+            let v: Vec<f32> = (0..dim).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+            keys.push_row(&k);
+            values.push_row(&v);
+        }
+        (keys, values)
+    }
+
+    #[test]
+    fn partition_estimate_within_eps() {
+        let dim = 16;
+        let (keys, values) = clusterable_stream(2000, 8, dim, 0.05, 1);
+        let cfg = SubGenConfig { dim, delta: 0.5, t: 64, s: 64 };
+        let mut sg = SubGenAttention::new(cfg, 7);
+        for i in 0..keys.rows() {
+            sg.update(keys.row(i), values.row(i));
+        }
+        let q: Vec<f32> = (0..dim).map(|i| 0.2 * ((i as f32) * 0.7).sin()).collect();
+        let est = sg.partition_estimate(&q);
+        let exact = exact_log_partition(&q, &keys).exp() as f64;
+        let rel = (est - exact).abs() / exact;
+        assert!(rel < 0.15, "rel={rel} est={est} exact={exact}");
+    }
+
+    #[test]
+    fn attention_error_bound_holds_empirically() {
+        let dim = 16;
+        let (keys, values) = clusterable_stream(1500, 6, dim, 0.05, 2);
+        let cfg = SubGenConfig { dim, delta: 0.5, t: 128, s: 256 };
+        let mut sg = SubGenAttention::new(cfg, 3);
+        for i in 0..keys.rows() {
+            sg.update(keys.row(i), values.row(i));
+        }
+        let q: Vec<f32> = (0..dim).map(|i| 0.3 * ((i as f32) * 1.3).cos()).collect();
+        let z = sg.query(&q);
+        let exact = exact_attention(&q, &keys, &values);
+        let err: f32 = z
+            .iter()
+            .zip(&exact)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum::<f32>()
+            .sqrt();
+        // ε here is generous: the test checks the *bound structure*, the
+        // tight sweep lives in the benches.
+        let rhs = error_bound_rhs(1.0, &q, &keys, &values);
+        assert!(err <= rhs, "err={err} rhs={rhs}");
+    }
+
+    #[test]
+    fn memory_sublinear_in_stream_length() {
+        let dim = 8;
+        let cfg = SubGenConfig { dim, delta: 0.4, t: 16, s: 16 };
+        // m=4 clusters regardless of n => memory must plateau.
+        let (keys, values) = clusterable_stream(4000, 4, dim, 0.02, 3);
+        let mut sg = SubGenAttention::new(cfg, 1);
+        let mut mem_at_1k = 0;
+        for i in 0..keys.rows() {
+            sg.update(keys.row(i), values.row(i));
+            if i == 999 {
+                mem_at_1k = sg.memory_bytes();
+            }
+        }
+        assert_eq!(sg.memory_bytes(), mem_at_1k, "memory grew after clusters stabilized");
+        assert!(sg.num_clusters() <= 8);
+    }
+
+    #[test]
+    fn query_on_empty_sketch_is_zero() {
+        let cfg = SubGenConfig { dim: 4, delta: 0.5, t: 4, s: 4 };
+        let sg = SubGenAttention::new(cfg, 0);
+        assert!(sg.is_empty());
+        assert_eq!(sg.query(&[0.0; 4]), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn config_for_error_scales() {
+        let a = SubGenConfig::for_error(64, 0.5, 0.5, 1.0, 1000);
+        let b = SubGenConfig::for_error(64, 0.5, 0.25, 1.0, 1000);
+        assert!(b.t > a.t && b.s > a.s);
+        assert!(a.t >= 4 && a.s >= 4);
+    }
+}

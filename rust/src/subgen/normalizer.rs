@@ -1,0 +1,243 @@
+//! `UpdateSoftmaxNormalizer` — clustered estimator of the partition
+//! function Σ_i exp(⟨k_i, q⟩).
+
+use crate::clustering::{Assignment, OnlineThresholdClustering};
+use crate::rng::Rng;
+use crate::sampling::UniformReservoir;
+use crate::tensor::dot;
+
+/// The paper's 𝒟 = {(x_i, S_i, n_i)}: online clusters with per-cluster
+/// uniform key samples.
+#[derive(Debug, Clone)]
+pub struct SoftmaxNormalizerSketch {
+    clustering: OnlineThresholdClustering,
+    /// One reservoir of t key samples per cluster (S_i).
+    samples: Vec<UniformReservoir<Vec<f32>>>,
+    t: usize,
+}
+
+impl SoftmaxNormalizerSketch {
+    /// Empty sketch.
+    pub fn new(dim: usize, delta: f32, t: usize) -> Self {
+        assert!(t > 0, "need at least one sample per cluster");
+        Self { clustering: OnlineThresholdClustering::new(dim, delta), samples: Vec::new(), t }
+    }
+
+    /// Observe one key (Algorithm 1, lines 11–22).
+    pub fn update<R: Rng>(&mut self, rng: &mut R, k: &[f32]) {
+        match self.clustering.push(k) {
+            Assignment::Existing(id) => {
+                self.samples[id].push(rng, k.to_vec());
+            }
+            Assignment::New(_) => {
+                self.samples.push(UniformReservoir::first(self.t, k.to_vec()));
+            }
+        }
+    }
+
+    /// Enforce a cluster cap: while more than `cap` clusters exist,
+    /// double δ and merge (Charikar-style doubling). Sample reservoirs
+    /// of merged clusters are combined by population-weighted resampling,
+    /// which preserves the i.i.d.-uniform-over-population invariant.
+    pub fn enforce_cluster_cap<R: Rng>(&mut self, rng: &mut R, cap: usize) {
+        let cap = cap.max(1);
+        while self.clustering.num_clusters() > cap {
+            let mapping = self.clustering.double_delta();
+            let new_m = self.clustering.num_clusters();
+            // Group old reservoirs by their new cluster id.
+            let mut groups: Vec<Vec<usize>> = vec![Vec::new(); new_m];
+            for (old, &new) in mapping.iter().enumerate() {
+                groups[new].push(old);
+            }
+            let old = std::mem::take(&mut self.samples);
+            self.samples = groups
+                .into_iter()
+                .map(|g| {
+                    if g.len() == 1 {
+                        old[g[0]].clone()
+                    } else {
+                        let parts: Vec<&UniformReservoir<Vec<f32>>> =
+                            g.iter().map(|&i| &old[i]).collect();
+                        UniformReservoir::merge(rng, &parts)
+                    }
+                })
+                .collect();
+        }
+    }
+
+    /// Current cluster threshold δ (grows under `enforce_cluster_cap`).
+    pub fn delta(&self) -> f32 {
+        self.clustering.delta()
+    }
+
+    /// Estimate τ = Σ_i exp(⟨k_i, q⟩) via
+    /// Σ_clusters (n_i / t)·Σ_{k∈S_i} exp(⟨q, k⟩) (line 30), computed in
+    /// f64 with a shared max-shift for stability.
+    pub fn estimate_partition(&self, q: &[f32]) -> f64 {
+        let (scaled, shift) = self.estimate_partition_scaled(q);
+        scaled * shift.exp()
+    }
+
+    /// Stable form: returns (τ·e^{-shift}, shift).
+    pub fn estimate_partition_scaled(&self, q: &[f32]) -> (f64, f64) {
+        let m = self.clustering.num_clusters();
+        if m == 0 {
+            return (0.0, 0.0);
+        }
+        // Gather all scores first to find the max exponent.
+        let mut scores: Vec<(usize, f64)> = Vec::new();
+        let mut shift = f64::NEG_INFINITY;
+        for i in 0..m {
+            for s in self.samples[i].samples() {
+                let sc = dot(s, q) as f64;
+                if sc > shift {
+                    shift = sc;
+                }
+                scores.push((i, sc));
+            }
+        }
+        let mut tau = 0.0f64;
+        for (i, sc) in scores {
+            let n_i = self.clustering.count(i) as f64;
+            tau += (n_i / self.t as f64) * (sc - shift).exp();
+        }
+        (tau, shift)
+    }
+
+    /// Number of clusters m'.
+    pub fn num_clusters(&self) -> usize {
+        self.clustering.num_clusters()
+    }
+
+    /// Population count of cluster i (n_i).
+    pub fn cluster_count(&self, i: usize) -> u64 {
+        self.clustering.count(i)
+    }
+
+    /// Sampled keys of cluster i (S_i, exactly t entries).
+    pub fn cluster_samples(&self, i: usize) -> &[Vec<f32>] {
+        self.samples[i].samples()
+    }
+
+    /// Cluster representative x_i.
+    pub fn cluster_center(&self, i: usize) -> &[f32] {
+        self.clustering.center(i)
+    }
+
+    /// Samples per cluster (t).
+    pub fn t(&self) -> usize {
+        self.t
+    }
+
+    /// Total keys processed.
+    pub fn total(&self) -> u64 {
+        self.clustering.total()
+    }
+
+    /// Bytes held by the sketch (centers + counts + t samples/cluster).
+    pub fn memory_bytes(&self) -> usize {
+        let dim = self.clustering.dim();
+        self.clustering.memory_bytes()
+            + self.samples.len() * self.t * dim * std::mem::size_of::<f32>()
+    }
+
+    /// Underlying clustering (read-only).
+    pub fn clustering(&self) -> &OnlineThresholdClustering {
+        &self.clustering
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rel_err;
+    use crate::rng::Pcg64;
+    use crate::tensor::Tensor;
+
+    fn blob_keys(n: usize, m: usize, dim: usize, sigma: f32, seed: u64) -> Tensor {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let centers: Vec<Vec<f32>> = (0..m)
+            .map(|_| (0..dim).map(|_| rng.gaussian32(0.0, 1.0)).collect())
+            .collect();
+        let mut keys = Tensor::zeros(0, dim);
+        for i in 0..n {
+            let c = &centers[i % m];
+            let k: Vec<f32> = c.iter().map(|&x| x + rng.gaussian32(0.0, sigma)).collect();
+            keys.push_row(&k);
+        }
+        keys
+    }
+
+    #[test]
+    fn partition_close_on_clusterable_stream() {
+        let dim = 12;
+        let keys = blob_keys(3000, 5, dim, 0.03, 21);
+        let mut sk = SoftmaxNormalizerSketch::new(dim, 0.4, 48);
+        let mut rng = Pcg64::seed_from_u64(5);
+        for i in 0..keys.rows() {
+            sk.update(&mut rng, keys.row(i));
+        }
+        assert!(sk.num_clusters() <= 10, "m={}", sk.num_clusters());
+        let q: Vec<f32> = (0..dim).map(|i| 0.5 * ((i as f32) * 0.9).sin()).collect();
+        let exact: f64 = (0..keys.rows()).map(|i| (dot(keys.row(i), &q) as f64).exp()).sum();
+        let est = sk.estimate_partition(&q);
+        assert!(
+            rel_err(est as f32, exact as f32) < 0.1,
+            "est={est} exact={exact}"
+        );
+    }
+
+    #[test]
+    fn exact_when_t_exceeds_cluster_sizes_single_point_clusters() {
+        // δ tiny => every key its own cluster => estimate is exact.
+        let dim = 4;
+        let keys = blob_keys(40, 40, dim, 0.0, 3);
+        let mut sk = SoftmaxNormalizerSketch::new(dim, 1e-6, 3);
+        let mut rng = Pcg64::seed_from_u64(9);
+        for i in 0..keys.rows() {
+            sk.update(&mut rng, keys.row(i));
+        }
+        let q = [0.3f32, -0.2, 0.5, 0.1];
+        let exact: f64 = (0..keys.rows()).map(|i| (dot(keys.row(i), &q) as f64).exp()).sum();
+        let est = sk.estimate_partition(&q);
+        assert!((est - exact).abs() < 1e-6 * exact, "est={est} exact={exact}");
+    }
+
+    #[test]
+    fn counts_track_population() {
+        let dim = 4;
+        let mut sk = SoftmaxNormalizerSketch::new(dim, 0.5, 4);
+        let mut rng = Pcg64::seed_from_u64(2);
+        for _ in 0..30 {
+            sk.update(&mut rng, &[0.0, 0.0, 0.0, 0.0]);
+        }
+        for _ in 0..20 {
+            sk.update(&mut rng, &[10.0, 0.0, 0.0, 0.0]);
+        }
+        assert_eq!(sk.num_clusters(), 2);
+        assert_eq!(sk.cluster_count(0), 30);
+        assert_eq!(sk.cluster_count(1), 20);
+        assert_eq!(sk.total(), 50);
+        assert_eq!(sk.cluster_samples(0).len(), 4);
+    }
+
+    #[test]
+    fn empty_partition_is_zero() {
+        let sk = SoftmaxNormalizerSketch::new(4, 0.5, 4);
+        assert_eq!(sk.estimate_partition(&[1.0; 4]), 0.0);
+    }
+
+    #[test]
+    fn stable_under_large_scores() {
+        let dim = 4;
+        let mut sk = SoftmaxNormalizerSketch::new(dim, 0.5, 8);
+        let mut rng = Pcg64::seed_from_u64(4);
+        for _ in 0..10 {
+            sk.update(&mut rng, &[30.0, 0.0, 0.0, 0.0]);
+        }
+        // exp(30*30)=overflow in f32/f64 naive; scaled path must be finite.
+        let (scaled, shift) = sk.estimate_partition_scaled(&[30.0, 0.0, 0.0, 0.0]);
+        assert!(scaled.is_finite() && scaled > 0.0);
+        assert!((shift - 900.0).abs() < 1.0);
+    }
+}

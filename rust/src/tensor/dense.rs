@@ -1,0 +1,195 @@
+//! Dense row-major 2-D tensor.
+
+use crate::rng::{fill_gaussian, Rng};
+
+/// A dense row-major matrix of `f32` (1-D tensors are `rows == 1`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    data: Vec<f32>,
+    rows: usize,
+    cols: usize,
+}
+
+impl Tensor {
+    /// All-zero tensor of the given shape.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { data: vec![0.0; rows * cols], rows, cols }
+    }
+
+    /// Build from an existing buffer; `data.len()` must equal `rows*cols`.
+    pub fn from_vec(data: Vec<f32>, rows: usize, cols: usize) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape mismatch");
+        Self { data, rows, cols }
+    }
+
+    /// I.i.d. gaussian entries with the given std.
+    pub fn randn<R: Rng>(rng: &mut R, rows: usize, cols: usize, std: f32) -> Self {
+        let mut t = Self::zeros(rows, cols);
+        fill_gaussian(rng, &mut t.data, std);
+        t
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutably borrow row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// The whole backing buffer, row-major.
+    #[inline]
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable backing buffer.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the backing buffer.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Element access.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    /// Element assignment.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Append a row (grows the tensor by one row).
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.cols, "row width mismatch");
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Tensor {
+        let mut out = Tensor::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f32 {
+        super::dot(&self.data, &self.data).sqrt()
+    }
+
+    /// Operator (spectral) norm via power iteration; adequate for the
+    /// error-bound checks in tests (‖V‖_op in Eq. 3 of the paper).
+    pub fn op_norm(&self, iters: usize) -> f32 {
+        if self.rows == 0 || self.cols == 0 {
+            return 0.0;
+        }
+        // Power-iterate on AᵀA with a deterministic start vector.
+        let mut v = vec![1.0f32; self.cols];
+        let inv = 1.0 / (self.cols as f32).sqrt();
+        super::scale(&mut v, inv);
+        let mut av = vec![0.0f32; self.rows];
+        for _ in 0..iters.max(1) {
+            // av = A v
+            for i in 0..self.rows {
+                av[i] = super::dot(self.row(i), &v);
+            }
+            // v = Aᵀ av
+            for x in v.iter_mut() {
+                *x = 0.0;
+            }
+            for i in 0..self.rows {
+                super::axpy(av[i], self.row(i), &mut v);
+            }
+            let n = super::norm2(&v);
+            if n == 0.0 {
+                return 0.0;
+            }
+            super::scale(&mut v, 1.0 / n);
+        }
+        for i in 0..self.rows {
+            av[i] = super::dot(self.row(i), &v);
+        }
+        super::norm2(&av)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn shape_and_access() {
+        let mut t = Tensor::zeros(2, 3);
+        t.set(1, 2, 5.0);
+        assert_eq!(t.get(1, 2), 5.0);
+        assert_eq!(t.row(1), &[0.0, 0.0, 5.0]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+    }
+
+    #[test]
+    fn push_row_grows() {
+        let mut t = Tensor::zeros(0, 2);
+        t.push_row(&[1.0, 2.0]);
+        t.push_row(&[3.0, 4.0]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let t = Tensor::from_vec(vec![1., 2., 3., 4., 5., 6.], 2, 3);
+        let tt = t.transpose().transpose();
+        assert_eq!(t, tt);
+        assert_eq!(t.transpose().get(2, 1), 6.0);
+    }
+
+    #[test]
+    fn op_norm_diagonal() {
+        // diag(3, 1) has operator norm 3.
+        let t = Tensor::from_vec(vec![3.0, 0.0, 0.0, 1.0], 2, 2);
+        let n = t.op_norm(50);
+        assert!((n - 3.0).abs() < 1e-3, "n={n}");
+    }
+
+    #[test]
+    fn op_norm_bounds_fro() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let t = Tensor::randn(&mut rng, 8, 5, 1.0);
+        let op = t.op_norm(100);
+        let fro = t.fro_norm();
+        assert!(op <= fro + 1e-4);
+        assert!(op >= fro / (5.0f32).sqrt() - 1e-4);
+    }
+}

@@ -1,0 +1,188 @@
+//! Minimal row-major f32 tensor used on the rust side of the stack.
+//!
+//! The heavy math (model forward) runs inside XLA via the PJRT runtime;
+//! this module covers the *host-side* numerics the coordinator needs on
+//! the decode path: packing cache buffers, distances for clustering,
+//! norms for reservoir sampling, and reference attention for tests.
+//!
+//! Deliberately small: no broadcasting, no autograd, no generic dtypes —
+//! dense row-major `f32` with explicit shapes, tuned for predictable
+//! performance in the L3 hot loop.
+
+mod dense;
+mod ops;
+
+pub use dense::Tensor;
+pub use ops::{matmul, matvec};
+
+/// L2 norm of a vector.
+#[inline]
+pub fn norm2(x: &[f32]) -> f32 {
+    dot(x, x).sqrt()
+}
+
+/// Squared L2 norm of a vector.
+#[inline]
+pub fn norm2_sq(x: &[f32]) -> f32 {
+    dot(x, x)
+}
+
+/// Dot product, manually unrolled 4-wide so LLVM reliably vectorizes it.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// Squared euclidean distance between two vectors.
+#[inline]
+pub fn dist_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        let d0 = a[j] - b[j];
+        let d1 = a[j + 1] - b[j + 1];
+        let d2 = a[j + 2] - b[j + 2];
+        let d3 = a[j + 3] - b[j + 3];
+        s0 += d0 * d0;
+        s1 += d1 * d1;
+        s2 += d2 * d2;
+        s3 += d3 * d3;
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        let d = a[j] - b[j];
+        s += d * d;
+    }
+    s
+}
+
+/// Euclidean distance.
+#[inline]
+pub fn dist(a: &[f32], b: &[f32]) -> f32 {
+    dist_sq(a, b).sqrt()
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * xi;
+    }
+}
+
+/// `x *= alpha` in place.
+#[inline]
+pub fn scale(x: &mut [f32], alpha: f32) {
+    for xi in x.iter_mut() {
+        *xi *= alpha;
+    }
+}
+
+/// In-place numerically stable softmax.
+pub fn softmax_inplace(x: &mut [f32]) {
+    if x.is_empty() {
+        return;
+    }
+    let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut z = 0.0f32;
+    for xi in x.iter_mut() {
+        *xi = (*xi - m).exp();
+        z += *xi;
+    }
+    if z > 0.0 {
+        let inv = 1.0 / z;
+        for xi in x.iter_mut() {
+            *xi *= inv;
+        }
+    }
+}
+
+/// Index of the maximum element (first on ties). Panics on empty input.
+pub fn argmax(x: &[f32]) -> usize {
+    assert!(!x.is_empty(), "argmax of empty slice");
+    let mut best = 0;
+    for (i, &v) in x.iter().enumerate() {
+        if v > x[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..37).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..37).map(|i| (i as f32 - 18.0) * 0.25).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-3);
+    }
+
+    #[test]
+    fn dist_consistency() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [4.0f32, 6.0, 3.0];
+        assert!((dist(&a, &b) - 5.0).abs() < 1e-6);
+        assert!((dist_sq(&a, &b) - 25.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let mut x = vec![1000.0f32, 1001.0, 999.0];
+        softmax_inplace(&mut x);
+        let s: f32 = x.iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        assert!(x.iter().all(|v| v.is_finite()));
+        assert!(x[1] > x[0] && x[0] > x[2]);
+    }
+
+    #[test]
+    fn softmax_empty_noop() {
+        let mut x: Vec<f32> = vec![];
+        softmax_inplace(&mut x);
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn axpy_scale() {
+        let x = [1.0f32, 2.0];
+        let mut y = [10.0f32, 20.0];
+        axpy(2.0, &x, &mut y);
+        assert_eq!(y, [12.0, 24.0]);
+        scale(&mut y, 0.5);
+        assert_eq!(y, [6.0, 12.0]);
+    }
+
+    #[test]
+    fn norms() {
+        let v = [3.0f32, 4.0];
+        assert!((norm2(&v) - 5.0).abs() < 1e-6);
+        assert!((norm2_sq(&v) - 25.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,50 @@
+//! Matrix products on [`Tensor`].
+
+use super::{dot, Tensor};
+
+/// `C = A · B` (naive triple loop with the inner loop vectorized; host-side
+/// matmuls here are small — the big ones run inside XLA).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.cols(), b.rows(), "matmul inner dims");
+    let bt = b.transpose();
+    let mut c = Tensor::zeros(a.rows(), b.cols());
+    for i in 0..a.rows() {
+        for j in 0..b.cols() {
+            c.set(i, j, dot(a.row(i), bt.row(j)));
+        }
+    }
+    c
+}
+
+/// `y = A · x` for a vector `x`.
+pub fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
+    assert_eq!(a.cols(), x.len(), "matvec inner dims");
+    (0..a.rows()).map(|i| dot(a.row(i), x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Tensor::from_vec(vec![1., 2., 3., 4.], 2, 2);
+        let b = Tensor::from_vec(vec![1., 1., 1., 1.], 2, 2);
+        let c = matmul(&a, &b);
+        assert_eq!(c.as_slice(), &[3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matvec_known() {
+        let a = Tensor::from_vec(vec![1., 0., 0., 2.], 2, 2);
+        assert_eq!(matvec(&a, &[3., 4.]), vec![3., 8.]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn matmul_shape_panics() {
+        let a = Tensor::zeros(2, 3);
+        let b = Tensor::zeros(2, 2);
+        let _ = matmul(&a, &b);
+    }
+}

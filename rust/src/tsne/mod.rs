@@ -1,0 +1,252 @@
+//! Exact t-SNE (van der Maaten & Hinton 2008) — the visualization
+//! behind Figure 1, built from scratch.
+//!
+//! O(n²) affinities are fine at Figure-1 scale (n ≈ 1024 cached keys).
+//! Perplexity is calibrated per point by bisection on the conditional
+//! distribution entropy; the embedding is optimized by gradient descent
+//! with momentum and early exaggeration, the standard recipe.
+
+use crate::rng::{Pcg64, Rng};
+use crate::tensor::{dist_sq, Tensor};
+
+/// t-SNE hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct TsneConfig {
+    /// Target perplexity of the conditional distributions.
+    pub perplexity: f64,
+    /// Gradient-descent iterations.
+    pub iters: usize,
+    /// Learning rate (η).
+    pub learning_rate: f64,
+    /// Early-exaggeration factor applied for the first quarter of iters.
+    pub exaggeration: f64,
+    /// RNG seed for the initial embedding.
+    pub seed: u64,
+}
+
+impl Default for TsneConfig {
+    fn default() -> Self {
+        Self { perplexity: 30.0, iters: 300, learning_rate: 100.0, exaggeration: 8.0, seed: 0 }
+    }
+}
+
+/// Embed `points` (rows) into 2-D. Returns an (n × 2) tensor.
+pub fn tsne(points: &Tensor, cfg: &TsneConfig) -> Tensor {
+    let n = points.rows();
+    assert!(n >= 4, "t-SNE needs at least 4 points");
+    let p = joint_affinities(points, cfg.perplexity);
+
+    // Init: small gaussian.
+    let mut rng = Pcg64::seed_from_u64(cfg.seed);
+    let mut y: Vec<[f64; 2]> =
+        (0..n).map(|_| [rng.gaussian() * 1e-2, rng.gaussian() * 1e-2]).collect();
+    let mut vel = vec![[0.0f64; 2]; n];
+    let exag_until = cfg.iters / 4;
+
+    let mut q = vec![0.0f64; n * n];
+    let mut grad = vec![[0.0f64; 2]; n];
+    for it in 0..cfg.iters {
+        // Student-t affinities in embedding space.
+        let mut qsum = 0.0f64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                let dx = y[i][0] - y[j][0];
+                let dy = y[i][1] - y[j][1];
+                let w = 1.0 / (1.0 + dx * dx + dy * dy);
+                q[i * n + j] = w;
+                q[j * n + i] = w;
+                qsum += 2.0 * w;
+            }
+        }
+        let exag = if it < exag_until { cfg.exaggeration } else { 1.0 };
+        for g in grad.iter_mut() {
+            *g = [0.0, 0.0];
+        }
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let w = q[i * n + j];
+                let pij = exag * p[i * n + j];
+                let qij = (w / qsum).max(1e-12);
+                let mult = 4.0 * (pij - qij) * w;
+                grad[i][0] += mult * (y[i][0] - y[j][0]);
+                grad[i][1] += mult * (y[i][1] - y[j][1]);
+            }
+        }
+        let momentum = if it < exag_until { 0.5 } else { 0.8 };
+        for i in 0..n {
+            for d in 0..2 {
+                vel[i][d] = momentum * vel[i][d] - cfg.learning_rate * grad[i][d];
+                y[i][d] += vel[i][d];
+            }
+        }
+        // Re-center to remove drift.
+        let (mut cx, mut cy) = (0.0, 0.0);
+        for yi in &y {
+            cx += yi[0];
+            cy += yi[1];
+        }
+        cx /= n as f64;
+        cy /= n as f64;
+        for yi in y.iter_mut() {
+            yi[0] -= cx;
+            yi[1] -= cy;
+        }
+    }
+
+    let mut out = Tensor::zeros(0, 2);
+    for yi in &y {
+        out.push_row(&[yi[0] as f32, yi[1] as f32]);
+    }
+    out
+}
+
+/// Symmetrized joint affinities P with per-point bandwidth calibrated to
+/// the target perplexity (row-major n×n, diagonal zero, sums to 1).
+fn joint_affinities(points: &Tensor, perplexity: f64) -> Vec<f64> {
+    let n = points.rows();
+    let target_h = perplexity.ln();
+    let mut d2 = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let d = dist_sq(points.row(i), points.row(j)) as f64;
+            d2[i * n + j] = d;
+            d2[j * n + i] = d;
+        }
+    }
+    let mut p = vec![0.0f64; n * n];
+    for i in 0..n {
+        // Bisect beta = 1/(2σ²) to hit the target entropy.
+        let (mut lo, mut hi) = (1e-12f64, 1e12f64);
+        let mut beta = 1.0f64;
+        for _ in 0..64 {
+            let mut sum = 0.0;
+            let mut sum_dp = 0.0;
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                let e = (-beta * d2[i * n + j]).exp();
+                sum += e;
+                sum_dp += e * d2[i * n + j];
+            }
+            if sum <= 0.0 {
+                hi = beta;
+                beta = 0.5 * (lo + hi);
+                continue;
+            }
+            // Entropy H = ln(sum) + beta * E[d²].
+            let h = sum.ln() + beta * sum_dp / sum;
+            if (h - target_h).abs() < 1e-5 {
+                break;
+            }
+            if h > target_h {
+                lo = beta;
+            } else {
+                hi = beta;
+            }
+            beta = 0.5 * (lo + hi);
+        }
+        let mut sum = 0.0;
+        for j in 0..n {
+            if j != i {
+                let e = (-beta * d2[i * n + j]).exp();
+                p[i * n + j] = e;
+                sum += e;
+            }
+        }
+        if sum > 0.0 {
+            for j in 0..n {
+                p[i * n + j] /= sum;
+            }
+        }
+    }
+    // Symmetrize and normalize.
+    let mut joint = vec![0.0f64; n * n];
+    let norm = 1.0 / (2.0 * n as f64);
+    for i in 0..n {
+        for j in 0..n {
+            joint[i * n + j] = (p[i * n + j] + p[j * n + i]) * norm;
+        }
+    }
+    joint
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng};
+
+    fn two_blobs(n_per: usize, sep: f32, seed: u64) -> Tensor {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut t = Tensor::zeros(0, 6);
+        for b in 0..2 {
+            for _ in 0..n_per {
+                let p: Vec<f32> = (0..6)
+                    .map(|_| b as f32 * sep + rng.gaussian32(0.0, 0.2))
+                    .collect();
+                t.push_row(&p);
+            }
+        }
+        t
+    }
+
+    #[test]
+    fn separates_two_blobs() {
+        let pts = two_blobs(20, 8.0, 1);
+        let cfg = TsneConfig { perplexity: 8.0, iters: 200, ..Default::default() };
+        let y = tsne(&pts, &cfg);
+        // Mean embedding of each blob should be far apart relative to
+        // the within-blob spread.
+        let mean = |lo: usize, hi: usize| -> [f32; 2] {
+            let mut m = [0.0f32; 2];
+            for i in lo..hi {
+                m[0] += y.get(i, 0);
+                m[1] += y.get(i, 1);
+            }
+            [m[0] / (hi - lo) as f32, m[1] / (hi - lo) as f32]
+        };
+        let m0 = mean(0, 20);
+        let m1 = mean(20, 40);
+        let between =
+            ((m0[0] - m1[0]).powi(2) + (m0[1] - m1[1]).powi(2)).sqrt();
+        let mut within = 0.0f32;
+        for i in 0..20 {
+            within +=
+                ((y.get(i, 0) - m0[0]).powi(2) + (y.get(i, 1) - m0[1]).powi(2)).sqrt();
+        }
+        within /= 20.0;
+        assert!(between > 2.0 * within, "between={between} within={within}");
+    }
+
+    #[test]
+    fn affinities_are_normalized() {
+        let pts = two_blobs(10, 4.0, 2);
+        let p = joint_affinities(&pts, 5.0);
+        let total: f64 = p.iter().sum();
+        assert!((total - 1.0).abs() < 1e-6, "total={total}");
+        // Diagonal zero, symmetric.
+        let n = 20;
+        for i in 0..n {
+            assert_eq!(p[i * n + i], 0.0);
+            for j in 0..n {
+                assert!((p[i * n + j] - p[j * n + i]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn output_is_centered() {
+        let pts = two_blobs(10, 4.0, 3);
+        let y = tsne(&pts, &TsneConfig { iters: 50, ..Default::default() });
+        let mut c = [0.0f32; 2];
+        for i in 0..y.rows() {
+            c[0] += y.get(i, 0);
+            c[1] += y.get(i, 1);
+        }
+        assert!(c[0].abs() / (y.rows() as f32) < 1e-3);
+        assert!(c[1].abs() / (y.rows() as f32) < 1e-3);
+    }
+}

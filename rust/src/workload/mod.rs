@@ -1,0 +1,23 @@
+//! Workload generation: the synthetic LongEval-analog line-retrieval
+//! task (Table 1), mixed-prompt streams for the clusterability study
+//! (Figure 1), and synthetic clusterable/adversarial token streams for
+//! the Theorem-1 scaling experiments.
+//!
+//! The tokenizer and document format are byte-identical with
+//! `python/compile/tasks.py`; `GOLDEN_*` fixtures are asserted in both
+//! test suites.
+
+mod retrieval;
+mod streams;
+
+pub use retrieval::{
+    decode, encode, golden_example, lines_for_seq_len, seq_len_for_lines, RetrievalInstance,
+    RetrievalSampler, ANSWER_TOKENS, PAD, QUERY_TOKENS, TOKENS_PER_LINE, VOCAB,
+};
+
+/// Golden fixture as (prompt tokens, answer tokens) — parity-checked
+/// against python/compile/tasks.py in both test suites.
+pub fn golden_example_tokens() -> (Vec<i32>, Vec<i32>) {
+    golden_example().tokens()
+}
+pub use streams::{AdversarialStream, ClusterableStream, TokenStream};

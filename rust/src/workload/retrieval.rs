@@ -1,0 +1,189 @@
+//! Line-retrieval documents + character tokenizer (parity with
+//! python/compile/tasks.py).
+
+use crate::rng::Rng;
+
+/// PAD token id (0).
+pub const PAD: i32 = 0;
+/// Surface characters, ids 1..=15 in order.
+pub const CHARS: &str = "0123456789L:;?=";
+/// Vocabulary size (PAD + 15 chars).
+pub const VOCAB: usize = 16;
+/// Tokens per document line: 'L' + 2 id digits + ':' + 2 value digits + ';'.
+pub const TOKENS_PER_LINE: usize = 7;
+/// Tokens in the query suffix: '?' + 2 id digits + '='.
+pub const QUERY_TOKENS: usize = 4;
+/// Answer length in tokens (2 value digits).
+pub const ANSWER_TOKENS: usize = 2;
+
+/// Character → token id; panics on unknown characters (programming error).
+pub fn encode(text: &str) -> Vec<i32> {
+    text.chars()
+        .map(|c| {
+            CHARS
+                .find(c)
+                .unwrap_or_else(|| panic!("unknown character {c:?}")) as i32
+                + 1
+        })
+        .collect()
+}
+
+/// Token ids → text, skipping PAD.
+pub fn decode(ids: &[i32]) -> String {
+    ids.iter()
+        .filter(|&&i| i != PAD)
+        .map(|&i| CHARS.as_bytes()[(i - 1) as usize] as char)
+        .collect()
+}
+
+/// Sequence length (prompt + answer) for a document of `n_lines`.
+pub fn seq_len_for_lines(n_lines: usize) -> usize {
+    n_lines * TOKENS_PER_LINE + QUERY_TOKENS + ANSWER_TOKENS
+}
+
+/// Largest line count fitting in `n` tokens.
+pub fn lines_for_seq_len(n: usize) -> usize {
+    (n - QUERY_TOKENS - ANSWER_TOKENS) / TOKENS_PER_LINE
+}
+
+/// One retrieval document: (id, value) records, a queried id, its value.
+#[derive(Debug, Clone)]
+pub struct RetrievalInstance {
+    /// Records in document order.
+    pub lines: Vec<(u8, u8)>,
+    /// The id asked about.
+    pub query_id: u8,
+    /// Its value (the expected answer).
+    pub answer: u8,
+}
+
+impl RetrievalInstance {
+    /// Render to (prompt text, answer text).
+    pub fn render(&self) -> (String, String) {
+        let mut doc = String::with_capacity(self.lines.len() * TOKENS_PER_LINE);
+        for &(i, v) in &self.lines {
+            doc.push_str(&format!("L{i:02}:{v:02};"));
+        }
+        (format!("{doc}?{:02}=", self.query_id), format!("{:02}", self.answer))
+    }
+
+    /// Render to (prompt tokens, answer tokens).
+    pub fn tokens(&self) -> (Vec<i32>, Vec<i32>) {
+        let (p, a) = self.render();
+        (encode(&p), encode(&a))
+    }
+}
+
+/// Deterministic sampler of retrieval instances.
+pub struct RetrievalSampler<R: Rng> {
+    rng: R,
+}
+
+impl<R: Rng> RetrievalSampler<R> {
+    /// Wrap an RNG.
+    pub fn new(rng: R) -> Self {
+        Self { rng }
+    }
+
+    /// Sample a document with `n_lines` distinct 2-digit ids.
+    pub fn sample(&mut self, n_lines: usize) -> RetrievalInstance {
+        assert!(n_lines >= 1 && n_lines <= 100, "need 1..=100 lines, got {n_lines}");
+        // Distinct ids via partial Fisher-Yates over 0..100.
+        let mut pool: Vec<u8> = (0..100).collect();
+        for i in 0..n_lines {
+            let j = i + self.rng.index(100 - i);
+            pool.swap(i, j);
+        }
+        let lines: Vec<(u8, u8)> =
+            pool[..n_lines].iter().map(|&id| (id, self.rng.index(100) as u8)).collect();
+        let q = self.rng.index(n_lines);
+        RetrievalInstance { query_id: lines[q].0, answer: lines[q].1, lines }
+    }
+}
+
+/// Golden fixture shared with python/compile/tasks.py.
+pub fn golden_example() -> RetrievalInstance {
+    RetrievalInstance { lines: vec![(7, 42), (23, 99)], query_id: 23, answer: 99 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn golden_matches_python_fixture() {
+        let (p, a) = golden_example().tokens();
+        // encode("L07:42;L23:99;?23=") as produced by tasks.py.
+        assert_eq!(decode(&p), "L07:42;L23:99;?23=");
+        assert_eq!(decode(&a), "99");
+        // Spot-check raw ids: 'L' = index 10 + 1 = 11, '0' = 1, '7' = 8.
+        assert_eq!(&p[..4], &[11, 1, 8, 12]); // L 0 7 :
+        assert_eq!(a, vec![10, 10]); // 9 9
+    }
+
+    #[test]
+    fn golden_file_parity_when_artifacts_exist() {
+        // aot.py writes the same fixture; assert byte parity if present.
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden_tokens.txt");
+        if !path.exists() {
+            return; // artifacts not built yet — python tests cover the fixture
+        }
+        let text = std::fs::read_to_string(path).unwrap();
+        let mut lines = text.lines();
+        let prompt: Vec<i32> =
+            lines.next().unwrap().split_whitespace().map(|t| t.parse().unwrap()).collect();
+        let answer: Vec<i32> =
+            lines.next().unwrap().split_whitespace().map(|t| t.parse().unwrap()).collect();
+        let (p, a) = golden_example().tokens();
+        assert_eq!(p, prompt);
+        assert_eq!(a, answer);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let text = "L42:07;?42=";
+        assert_eq!(decode(&encode(text)), text);
+    }
+
+    #[test]
+    fn seq_len_formulas() {
+        assert_eq!(seq_len_for_lines(12), 12 * 7 + 6);
+        assert_eq!(lines_for_seq_len(seq_len_for_lines(12)), 12);
+    }
+
+    #[test]
+    fn sampler_produces_consistent_instances() {
+        let mut s = RetrievalSampler::new(Pcg64::seed_from_u64(3));
+        for _ in 0..20 {
+            let inst = s.sample(10);
+            assert_eq!(inst.lines.len(), 10);
+            // Distinct ids.
+            let mut ids: Vec<u8> = inst.lines.iter().map(|&(i, _)| i).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), 10);
+            // Answer consistent with the queried line.
+            let v = inst.lines.iter().find(|&&(i, _)| i == inst.query_id).unwrap().1;
+            assert_eq!(v, inst.answer);
+            // Token count matches the formula.
+            let (p, a) = inst.tokens();
+            assert_eq!(p.len() + a.len(), seq_len_for_lines(10));
+        }
+    }
+
+    #[test]
+    fn sampler_deterministic_by_seed() {
+        let mut a = RetrievalSampler::new(Pcg64::seed_from_u64(9));
+        let mut b = RetrievalSampler::new(Pcg64::seed_from_u64(9));
+        let (pa, _) = a.sample(5).tokens();
+        let (pb, _) = b.sample(5).tokens();
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown character")]
+    fn encode_rejects_unknown() {
+        encode("x");
+    }
+}

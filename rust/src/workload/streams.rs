@@ -1,0 +1,142 @@
+//! Synthetic (q, k, v) token streams for the Theorem-1 scaling and
+//! error-bound experiments.
+
+use crate::rng::{Pcg64, Rng};
+
+/// A stream of (q, k, v) triplets, the paper's §1.2 abstraction.
+pub trait TokenStream {
+    /// Embedding dimension.
+    fn dim(&self) -> usize;
+    /// Produce the next triplet into the provided buffers.
+    fn next_into(&mut self, q: &mut [f32], k: &mut [f32], v: &mut [f32]);
+
+    /// Convenience: next triplet as owned vectors.
+    fn next_triplet(&mut self) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let d = self.dim();
+        let (mut q, mut k, mut v) = (vec![0.0; d], vec![0.0; d], vec![0.0; d]);
+        self.next_into(&mut q, &mut k, &mut v);
+        (q, k, v)
+    }
+}
+
+/// (m, δ)-clusterable keys: m gaussian blob centers, per-key jitter σ;
+/// queries norm-bounded by `query_norm`; values isotropic gaussian.
+/// This is the regime where Theorem 1 promises sublinear behavior.
+pub struct ClusterableStream {
+    dim: usize,
+    centers: Vec<Vec<f32>>,
+    sigma: f32,
+    query_norm: f32,
+    rng: Pcg64,
+    i: usize,
+}
+
+impl ClusterableStream {
+    /// `m` centers in dimension `dim`, per-point jitter `sigma`.
+    pub fn new(dim: usize, m: usize, sigma: f32, query_norm: f32, seed: u64) -> Self {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let centers = (0..m)
+            .map(|_| (0..dim).map(|_| rng.gaussian32(0.0, 1.0)).collect())
+            .collect();
+        Self { dim, centers, sigma, query_norm, rng, i: 0 }
+    }
+
+    /// Number of blob centers (the planted m).
+    pub fn planted_m(&self) -> usize {
+        self.centers.len()
+    }
+}
+
+impl TokenStream for ClusterableStream {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn next_into(&mut self, q: &mut [f32], k: &mut [f32], v: &mut [f32]) {
+        let c = &self.centers[self.i % self.centers.len()];
+        self.i += 1;
+        for j in 0..self.dim {
+            k[j] = c[j] + self.rng.gaussian32(0.0, self.sigma);
+            v[j] = self.rng.gaussian32(0.0, 1.0);
+            q[j] = self.rng.gaussian32(0.0, 1.0);
+        }
+        // Rescale q to the norm bound r (Theorem 1 precondition).
+        let n = crate::tensor::norm2(q);
+        if n > 0.0 {
+            let scale = self.query_norm / n;
+            for x in q.iter_mut() {
+                *x *= scale;
+            }
+        }
+    }
+}
+
+/// Adversarially unclusterable keys: isotropic gaussian with growing
+/// radius, so every key opens a new cluster at small δ. Exercises the
+/// δ-doubling/budget-cap path.
+pub struct AdversarialStream {
+    dim: usize,
+    rng: Pcg64,
+    i: usize,
+}
+
+impl AdversarialStream {
+    /// New stream.
+    pub fn new(dim: usize, seed: u64) -> Self {
+        Self { dim, rng: Pcg64::seed_from_u64(seed), i: 0 }
+    }
+}
+
+impl TokenStream for AdversarialStream {
+    fn dim(&self) -> usize {
+        self.dim
+    }
+
+    fn next_into(&mut self, q: &mut [f32], k: &mut [f32], v: &mut [f32]) {
+        self.i += 1;
+        let radius = 1.0 + (self.i as f32).sqrt() * 0.1;
+        for j in 0..self.dim {
+            k[j] = self.rng.gaussian32(0.0, radius);
+            v[j] = self.rng.gaussian32(0.0, 1.0);
+            q[j] = self.rng.gaussian32(0.0, 0.3);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::clustering::OnlineThresholdClustering;
+
+    #[test]
+    fn clusterable_stream_is_clusterable() {
+        let mut s = ClusterableStream::new(8, 5, 0.02, 1.0, 1);
+        let mut oc = OnlineThresholdClustering::new(8, 0.5);
+        for _ in 0..500 {
+            let (_, k, _) = s.next_triplet();
+            oc.push(&k);
+        }
+        assert!(oc.num_clusters() <= 8, "m={}", oc.num_clusters());
+    }
+
+    #[test]
+    fn query_norm_bounded() {
+        let mut s = ClusterableStream::new(8, 3, 0.1, 0.7, 2);
+        for _ in 0..100 {
+            let (q, _, _) = s.next_triplet();
+            let n = crate::tensor::norm2(&q);
+            assert!((n - 0.7).abs() < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn adversarial_stream_spawns_many_clusters() {
+        let mut s = AdversarialStream::new(8, 3);
+        let mut oc = OnlineThresholdClustering::new(8, 0.3);
+        for _ in 0..300 {
+            let (_, k, _) = s.next_triplet();
+            oc.push(&k);
+        }
+        assert!(oc.num_clusters() > 100, "m={}", oc.num_clusters());
+    }
+}

@@ -1,0 +1,151 @@
+//! Integration tests: the serving engine over the mock executor —
+//! routing, batching, state-machine and metric invariants at scale.
+
+use subgen::coordinator::{Engine, EngineConfig, MockExecutor, Request};
+use subgen::proptest_lite::{pair, Gen, Runner};
+use subgen::server::{channel, serve, LoadGen};
+
+#[test]
+fn every_submitted_id_completes_exactly_once() {
+    let exec = MockExecutor::small();
+    let mut engine = Engine::new(&exec, EngineConfig { max_active: 3, ..Default::default() });
+    let n = 40;
+    for id in 0..n {
+        assert!(engine.submit(Request::exact(id, vec![(id % 8) as i32, 1], 1 + (id % 4) as usize)));
+    }
+    engine.run_to_completion().unwrap();
+    let responses = engine.take_responses();
+    assert_eq!(responses.len(), n as usize);
+    let mut ids: Vec<u64> = responses.iter().map(|r| r.id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n as usize);
+    // Token counts match max_new.
+    for r in &responses {
+        assert_eq!(r.tokens.len(), 1 + (r.id % 4) as usize);
+    }
+    assert_eq!(engine.stats.completed.get(), n);
+}
+
+#[test]
+fn interleaved_submission_and_ticking() {
+    let exec = MockExecutor::small();
+    let mut engine =
+        Engine::new(&exec, EngineConfig { max_active: 2, prefills_per_tick: 1, ..Default::default() });
+    let mut submitted = 0u64;
+    let mut collected = 0usize;
+    for round in 0..50 {
+        if round % 3 == 0 && submitted < 12 {
+            engine.submit(Request::exact(submitted, vec![2, 3], 3));
+            submitted += 1;
+        }
+        engine.tick().unwrap();
+        collected += engine.take_responses().len();
+        if submitted == 12 && engine.pending() == 0 {
+            break;
+        }
+    }
+    engine.run_to_completion().unwrap();
+    collected += engine.take_responses().len();
+    assert_eq!(collected, 12);
+}
+
+#[test]
+fn property_random_workloads_complete() {
+    let mut runner = Runner::new(0xE16E, 25);
+    runner.run(
+        "engine conservation",
+        pair(Gen::usize_in(1, 20), Gen::usize_in(1, 6)),
+        |&(n_req, max_active)| {
+            let exec = MockExecutor::small();
+            let mut engine = Engine::new(
+                &exec,
+                EngineConfig { max_active, prefills_per_tick: 2, ..Default::default() },
+            );
+            for id in 0..n_req {
+                let prompt_len = 1 + (id * 7) % 5;
+                let prompt: Vec<i32> = (0..prompt_len).map(|i| (i % 8) as i32).collect();
+                engine.submit(Request::exact(id as u64, prompt, 1 + id % 3));
+            }
+            engine.run_to_completion().unwrap();
+            let rs = engine.take_responses();
+            let total_tokens: usize = rs.iter().map(|r| r.tokens.len()).sum();
+            rs.len() == n_req
+                && engine.stats.tokens.get() as usize == total_tokens
+                && engine.pending() == 0
+        },
+    );
+}
+
+#[test]
+fn policies_produce_identical_token_streams_on_mock() {
+    // The mock's logits ignore the cache, so every policy must emit the
+    // same chain — catching any policy-dependent control-flow bug in the
+    // engine (e.g. wrong positions, dropped steps).
+    let mut reference: Option<Vec<i32>> = None;
+    for policy in subgen::kvcache::POLICY_NAMES {
+        let exec = MockExecutor::small();
+        let mut engine = Engine::new(&exec, EngineConfig::default());
+        engine.submit(Request {
+            id: 0,
+            prompt: vec![1, 2, 3],
+            max_new: 5,
+            policy: policy.to_string(),
+            budget: 16,
+            delta: 0.5,
+        });
+        engine.run_to_completion().unwrap();
+        let tokens = engine.take_responses().pop().unwrap().tokens;
+        match &reference {
+            None => reference = Some(tokens),
+            Some(want) => assert_eq!(&tokens, want, "{policy}"),
+        }
+    }
+}
+
+#[test]
+fn server_loop_under_concurrent_load() {
+    let (handle, rx) = channel();
+    let t = std::thread::spawn(move || {
+        let exec = MockExecutor::small();
+        serve(&exec, EngineConfig { max_active: 4, ..Default::default() }, rx).unwrap()
+    });
+    let report = LoadGen {
+        rate: 1000.0,
+        requests: 50,
+        make_request: Box::new(|id| Request::exact(id, vec![(id % 8) as i32], 2)),
+        seed: 3,
+    }
+    .run(&handle);
+    assert_eq!(report.completed, 50);
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.tokens, 100);
+    handle.shutdown();
+    let stats = t.join().unwrap();
+    assert_eq!(stats.completed.get(), 50);
+    assert!(stats.latency.quantile(0.5) > std::time::Duration::ZERO);
+}
+
+#[test]
+fn cache_bytes_reported_smaller_for_compressed_policies() {
+    let exec = MockExecutor::small();
+    let run = |policy: &str, budget: usize| -> usize {
+        let mut engine = Engine::new(&exec, EngineConfig::default());
+        let prompt: Vec<i32> = (0..40).map(|i| (i % 8) as i32).collect();
+        engine.submit(Request {
+            id: 0,
+            prompt,
+            max_new: 4,
+            policy: policy.to_string(),
+            budget,
+            delta: 0.5,
+        });
+        engine.run_to_completion().unwrap();
+        engine.take_responses()[0].cache_bytes
+    };
+    let exact = run("exact", usize::MAX / 4);
+    let sliding = run("sliding", 8);
+    let sink = run("sink", 8);
+    assert!(sliding < exact / 3, "sliding={sliding} exact={exact}");
+    assert!(sink < exact / 3, "sink={sink} exact={exact}");
+}

@@ -1,0 +1,146 @@
+//! Integration tests over the real PJRT runtime + compiled artifacts.
+//!
+//! These only run when `artifacts/manifest.toml` exists (built by
+//! `make artifacts`); otherwise each test is a silent no-op so the suite
+//! stays green on a fresh checkout.
+
+use std::path::{Path, PathBuf};
+use subgen::kvcache::PackedCache;
+use subgen::model::{Generator, ModelSpec, SequenceCaches};
+use subgen::rng::{Pcg64, Rng};
+use subgen::runtime::{lit_f32, to_vec_f32, Runtime};
+use subgen::workload::{golden_example_tokens, lines_for_seq_len, RetrievalSampler};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.toml").exists().then_some(dir)
+}
+
+#[test]
+fn attn_kernel_matches_host_packed_attention() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::load(&dir, Some(&[])).unwrap();
+    rt.compile_artifact("attn_kernel").unwrap();
+    let spec = ModelSpec::from_manifest(rt.manifest()).unwrap();
+    let (h, dh, c) = (spec.n_heads, spec.d_head, spec.cache_variants[0]);
+
+    let mut rng = Pcg64::seed_from_u64(4);
+    let mut bufs: Vec<PackedCache> = Vec::new();
+    let mut q = vec![0.0f32; h * dh];
+    for x in q.iter_mut() {
+        *x = rng.gaussian32(0.0, 0.5);
+    }
+    // Random per-head packed caches with mixed w/u patterns.
+    let mut keys = vec![0.0f32; h * c * dh];
+    let mut values = vec![0.0f32; h * c * dh];
+    let mut w = vec![0.0f32; h * c];
+    let mut u = vec![0.0f32; h * c];
+    for head in 0..h {
+        let mut buf = PackedCache::new(dh, c);
+        let used = 40 + rng.index(100);
+        for _ in 0..used {
+            let k: Vec<f32> = (0..dh).map(|_| rng.gaussian32(0.0, 0.5)).collect();
+            let v: Vec<f32> = (0..dh).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+            let wj = if rng.coin(0.7) { rng.f32_range(0.1, 2.0) } else { 0.0 };
+            let uj = if rng.coin(0.7) { rng.f32_range(0.1, 2.0) } else { 0.0 };
+            buf.push(&k, &v, wj, uj);
+        }
+        let at = head * c * dh;
+        keys[at..at + c * dh].copy_from_slice(buf.keys_buffer());
+        values[at..at + c * dh].copy_from_slice(buf.values_buffer());
+        w[head * c..head * c + c].copy_from_slice(buf.w_buffer());
+        u[head * c..head * c + c].copy_from_slice(buf.u_buffer());
+        bufs.push(buf);
+    }
+    let out = rt
+        .execute(
+            "attn_kernel",
+            &[
+                lit_f32(&q, &[h, dh]).unwrap(),
+                lit_f32(&keys, &[h, c, dh]).unwrap(),
+                lit_f32(&values, &[h, c, dh]).unwrap(),
+                lit_f32(&w, &[h, c]).unwrap(),
+                lit_f32(&u, &[h, c]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let got = to_vec_f32(&out[0]).unwrap();
+    for head in 0..h {
+        let want = bufs[head].attention(&q[head * dh..(head + 1) * dh]);
+        let got_h = &got[head * dh..(head + 1) * dh];
+        let err = subgen::linalg::rel_err_vec(got_h, &want);
+        assert!(err < 1e-3, "head {head}: err={err}");
+    }
+}
+
+#[test]
+fn decode_chain_matches_prefill_logits() {
+    // Exact-policy decode must agree with the prefill executable's
+    // logits position by position — the rust-side analog of the python
+    // decode-vs-prefill consistency test, through real artifacts.
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir, None).unwrap();
+    let spec = ModelSpec::from_manifest(rt.manifest()).unwrap();
+    let generator = Generator::new(&rt, spec.clone());
+
+    let (prompt, _) = golden_example_tokens();
+    let pre = generator.prefill(&prompt).unwrap();
+    let mut caches =
+        SequenceCaches::new(&spec, "exact", usize::MAX / 4, 0.5, 1).unwrap();
+    let vocab = spec.vocab;
+    for pos in 0..prompt.len() {
+        let flat = caches
+            .assemble(spec.pick_cache_variant(caches.max_slots() + 1))
+            .unwrap();
+        let step = generator.decode(prompt[pos], pos, &flat).unwrap();
+        let want = &pre.logits[pos * vocab..(pos + 1) * vocab];
+        let err = subgen::linalg::rel_err_vec(&step.logits, want);
+        assert!(err < 5e-3, "pos {pos}: err={err}");
+        caches.update(&step.q, &step.k, &step.v);
+    }
+}
+
+#[test]
+fn generate_answers_golden_retrieval_when_model_trained() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir, None).unwrap();
+    let spec = ModelSpec::from_manifest(rt.manifest()).unwrap();
+    if spec.train_accuracy < 0.8 {
+        eprintln!("model undertrained (acc {}); skipping", spec.train_accuracy);
+        return;
+    }
+    let generator = Generator::new(&rt, spec.clone());
+    // A mid-size retrieval prompt with the exact policy must answer
+    // correctly most of the time.
+    let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(11));
+    let mut correct = 0;
+    let trials = 10;
+    for _ in 0..trials {
+        let inst = sampler.sample(lines_for_seq_len(256));
+        let (prompt, answer) = inst.tokens();
+        let mut caches =
+            SequenceCaches::new(&spec, "exact", usize::MAX / 4, 0.5, 2).unwrap();
+        let out = generator.generate(&prompt, 2, &mut caches).unwrap();
+        correct += (out == answer) as usize;
+    }
+    assert!(correct >= 6, "exact-policy retrieval {correct}/{trials}");
+}
+
+#[test]
+fn all_cache_variants_execute() {
+    let Some(dir) = artifacts_dir() else { return };
+    let rt = Runtime::load(&dir, None).unwrap();
+    let spec = ModelSpec::from_manifest(rt.manifest()).unwrap();
+    let generator = Generator::new(&rt, spec.clone());
+    for &c in &spec.cache_variants {
+        let mut caches = SequenceCaches::new(&spec, "sliding", 16, 0.5, 3).unwrap();
+        let x = vec![0.1f32; spec.n_layers * spec.n_heads * spec.d_head];
+        for _ in 0..8 {
+            caches.update(&x, &x, &x);
+        }
+        let flat = caches.assemble(c).unwrap();
+        let step = generator.decode(3, 8, &flat).unwrap();
+        assert_eq!(step.logits.len(), spec.vocab, "C={c}");
+        assert!(step.logits.iter().all(|x| x.is_finite()), "C={c}");
+    }
+}

@@ -1,0 +1,136 @@
+//! Property-based tests (proptest_lite) on the algorithm invariants:
+//! Lemma 1/2 bookkeeping, packing equivalence, policy budget discipline.
+
+use subgen::attention::exact_attention;
+use subgen::clustering::OnlineThresholdClustering;
+use subgen::kvcache::{build_policy, bytes_per_slot, PackedCache, POLICY_NAMES};
+use subgen::proptest_lite::{pair, Gen, Runner};
+use subgen::rng::{Pcg64, Rng};
+use subgen::subgen::{SubGenAttention, SubGenConfig};
+use subgen::tensor::Tensor;
+
+const CASES: usize = 60;
+
+/// Random stream spec: (n tokens, dim index) drawn by the framework.
+fn stream_gen() -> Gen<(usize, usize)> {
+    pair(Gen::usize_in(1, 120), Gen::usize_in(2, 16))
+}
+
+fn random_stream(seed: u64, n: usize, dim: usize) -> (Tensor, Tensor, Tensor) {
+    let mut rng = Pcg64::seed_from_u64(seed);
+    (
+        Tensor::randn(&mut rng, n, dim, 0.5),
+        Tensor::randn(&mut rng, n, dim, 0.7),
+        Tensor::randn(&mut rng, n, dim, 1.0),
+    )
+}
+
+#[test]
+fn clustering_invariants_hold_on_any_stream() {
+    let mut runner = Runner::new(0xC1A5, CASES);
+    runner.run("lemma-2 bookkeeping", stream_gen(), |&(n, dim)| {
+        let (_, keys, _) = random_stream(n as u64 * 31 + dim as u64, n, dim);
+        let mut oc = OnlineThresholdClustering::new(dim, 0.8);
+        for i in 0..n {
+            oc.push(keys.row(i));
+        }
+        // counts sum to n; centers pairwise separated; m <= n.
+        oc.counts().iter().sum::<u64>() == n as u64
+            && oc.check_center_separation()
+            && oc.num_clusters() <= n
+    });
+}
+
+#[test]
+fn subgen_memory_never_exceeds_configured_budget_shape() {
+    let mut runner = Runner::new(0xB06E7, CASES);
+    runner.run("memory formula", stream_gen(), |&(n, dim)| {
+        let cfg = SubGenConfig { dim, delta: 0.6, t: 4, s: 8 };
+        let mut sk = SubGenAttention::new(cfg, n as u64);
+        let (_, keys, values) = random_stream(7 + n as u64, n, dim);
+        for i in 0..n {
+            sk.update(keys.row(i), values.row(i));
+        }
+        // memory = s·(2·dim·4+8)+16 + clusters·(dim·4 + 8) + samples.
+        let m = sk.num_clusters();
+        let expect = 8 * (2 * dim * 4 + 8)
+            + 16
+            + (m * dim * 4 + m * 8)
+            + m * 4 * dim * 4;
+        sk.memory_bytes() == expect
+    });
+}
+
+#[test]
+fn packed_unit_weights_equal_exact_attention() {
+    let mut runner = Runner::new(0xA77E, CASES);
+    runner.run("packing ≡ softmax", stream_gen(), |&(n, dim)| {
+        let (queries, keys, values) = random_stream(3 + n as u64, n, dim);
+        let mut buf = PackedCache::new(dim, n);
+        for i in 0..n {
+            buf.push(keys.row(i), values.row(i), 1.0, 1.0);
+        }
+        let q = queries.row(n - 1);
+        let got = buf.attention(q);
+        let want = exact_attention(q, &keys, &values);
+        subgen::linalg::rel_err_vec(&got, &want) < 1e-4
+    });
+}
+
+#[test]
+fn policies_respect_slot_budgets() {
+    let mut runner = Runner::new(0x5EED5, 30);
+    runner.run("budget discipline", stream_gen(), |&(n, dim)| {
+        let budget = 24usize;
+        for policy in POLICY_NAMES {
+            if policy == "exact" {
+                continue;
+            }
+            let mut p = build_policy(policy, dim, budget, 0.5, n as u64).unwrap();
+            let (queries, keys, values) = random_stream(11 + n as u64, n, dim);
+            for i in 0..n {
+                p.update(queries.row(i), keys.row(i), values.row(i));
+            }
+            // Compressed policies may use budget + small slack (subgen:
+            // window + s + m·t with the cluster cap; others exactly).
+            let max_bytes = 2 * budget * bytes_per_slot(dim);
+            if p.memory_bytes(dim) > max_bytes {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn l2_sampling_mass_is_exact_sum() {
+    let mut runner = Runner::new(0xFACE, CASES);
+    runner.run("μ bookkeeping (Lemma 1)", stream_gen(), |&(n, dim)| {
+        let cfg = SubGenConfig { dim, delta: 0.5, t: 2, s: 4 };
+        let mut sk = SubGenAttention::new(cfg, 2);
+        let (_, keys, values) = random_stream(n as u64, n, dim);
+        let mut expect = 0.0f64;
+        for i in 0..n {
+            sk.update(keys.row(i), values.row(i));
+            expect += subgen::tensor::norm2_sq(values.row(i)) as f64;
+        }
+        (sk.matrix_product().mass() - expect).abs() <= 1e-6 * expect.max(1.0)
+    });
+}
+
+#[test]
+fn delta_doubling_preserves_population() {
+    let mut runner = Runner::new(0xD0B1, 30);
+    runner.run("doubling conserves counts", stream_gen(), |&(n, dim)| {
+        let cfg = SubGenConfig { dim, delta: 0.05, t: 3, s: 2 };
+        let mut sk = SubGenAttention::new(cfg, 5);
+        let (_, keys, values) = random_stream(17 + n as u64, n, dim);
+        for i in 0..n {
+            sk.update(keys.row(i), values.row(i));
+        }
+        sk.enforce_cluster_cap(3);
+        let nz = sk.normalizer();
+        let total: u64 = (0..nz.num_clusters()).map(|i| nz.cluster_count(i)).sum();
+        nz.num_clusters() <= 3 && total == n as u64
+    });
+}
