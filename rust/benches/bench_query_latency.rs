@@ -1,19 +1,27 @@
-//! Bench: attention query cost — SubGen sketch vs exact O(n·d) scan —
-//! and the accuracy/ε tradeoff vs the sample counts (s, t).
+//! Bench: attention query cost — SubGen sketch vs exact O(n·d) scan,
+//! the accuracy/ε tradeoff vs the sample counts (s, t), and the
+//! flat-arena + batched-kernel hot path against the legacy
+//! pointer-chasing layout (before/after), at the ISSUE-1 operating
+//! point n = 100k, d = 128, m = 64, batch = 8.
+//!
+//! Machine-readable results land in `BENCH_query.json` at the repo
+//! root — the perf trajectory consumed by ROADMAP.md.
 //!
 //!     cargo bench --bench bench_query_latency
 
-use subgen::attention::exact_attention;
+use std::io::Write as _;
+use subgen::attention::exact_attention_into;
 use subgen::bench::{black_box, Bencher, Table};
 use subgen::linalg::loglog_slope;
-use subgen::subgen::{SubGenAttention, SubGenConfig};
+use subgen::subgen::{LegacyReferenceSketch, SubGenAttention, SubGenConfig};
 use subgen::tensor::Tensor;
 use subgen::workload::{ClusterableStream, TokenStream};
 
-fn main() {
-    let dim = 32;
+fn main() -> std::io::Result<()> {
     let bencher = Bencher::default();
 
+    // ── Section 1: query cost vs n — sketch (o(n)) vs exact (Θ(n)) ──
+    let dim = 32;
     println!("== query cost vs n: sketch (o(n)) vs exact (Θ(n)) ==\n");
     let mut table = Table::new(&["n", "subgen µs", "exact µs", "speedup"]);
     let (mut ns, mut sub_cost, mut ex_cost) = (Vec::new(), Vec::new(), Vec::new());
@@ -21,21 +29,24 @@ fn main() {
         let cfg = SubGenConfig { dim, delta: 0.5, t: 32, s: 64 };
         let mut sketch = SubGenAttention::new(cfg, 1);
         let mut stream = ClusterableStream::new(dim, 16, 0.05, 1.0, 2);
-        let mut keys = Tensor::zeros(0, dim);
-        let mut values = Tensor::zeros(0, dim);
-        let mut q = vec![0.0f32; dim];
+        let mut keys = Tensor::with_row_capacity(n, dim);
+        let mut values = Tensor::with_row_capacity(n, dim);
+        let (mut q, mut k, mut v) = (vec![0.0f32; dim], vec![0.0f32; dim], vec![0.0f32; dim]);
         for _ in 0..n {
-            let (qq, k, v) = stream.next_triplet();
+            stream.next_into(&mut q, &mut k, &mut v);
             sketch.update(&k, &v);
             keys.push_row(&k);
             values.push_row(&v);
-            q = qq;
         }
+        let mut out = vec![0.0f32; dim];
         let rs = bencher.run(&format!("subgen@n={n}"), || {
-            black_box(sketch.query(black_box(&q)));
+            sketch.query_into(black_box(&q), &mut out);
+            black_box(&out);
         });
+        let mut scores = Vec::new();
         let re = bencher.run(&format!("exact@n={n}"), || {
-            black_box(exact_attention(black_box(&q), &keys, &values));
+            exact_attention_into(black_box(&q), &keys, &values, &mut scores, &mut out);
+            black_box(&out);
         });
         table.row(&[
             n.to_string(),
@@ -54,22 +65,24 @@ fn main() {
         loglog_slope(&ns, &ex_cost)
     );
 
+    // ── Section 2: ε tradeoff — error vs (s, t) at n = 8000 ──
     println!("== ε tradeoff: error vs (s, t) at n = 8000 ==\n");
     let mut t2 = Table::new(&["s", "t", "query µs", "rel err (partition)"]);
     for (s, t) in [(16usize, 8usize), (64, 32), (256, 128), (1024, 512)] {
         let cfg = SubGenConfig { dim, delta: 0.5, t, s };
         let mut sketch = SubGenAttention::new(cfg, 1);
         let mut stream = ClusterableStream::new(dim, 8, 0.05, 1.0, 5);
-        let mut keys = Tensor::zeros(0, dim);
-        let mut q = vec![0.0f32; dim];
+        let mut keys = Tensor::with_row_capacity(8_000, dim);
+        let (mut q, mut k, mut v) = (vec![0.0f32; dim], vec![0.0f32; dim], vec![0.0f32; dim]);
         for _ in 0..8_000 {
-            let (qq, k, v) = stream.next_triplet();
+            stream.next_into(&mut q, &mut k, &mut v);
             sketch.update(&k, &v);
             keys.push_row(&k);
-            q = qq;
         }
+        let mut out = vec![0.0f32; dim];
         let r = bencher.run(&format!("query@s={s},t={t}"), || {
-            black_box(sketch.query(black_box(&q)));
+            sketch.query_into(black_box(&q), &mut out);
+            black_box(&out);
         });
         let est = sketch.partition_estimate(&q);
         let exact = subgen::attention::exact_log_partition(&q, &keys).exp() as f64;
@@ -81,4 +94,95 @@ fn main() {
         ]);
     }
     t2.print();
+
+    // ── Section 3: flat arena + batched kernels vs legacy layout ──
+    let (n, dim, m, batch) = (100_000usize, 128usize, 64usize, 8usize);
+    let (t_smp, s_smp) = (32usize, 64usize);
+    println!(
+        "\n== before/after: legacy layout vs flat arena, n={n}, d={dim}, m={m}, batch={batch} ==\n"
+    );
+    let cfg = SubGenConfig { dim, delta: 0.5, t: t_smp, s: s_smp };
+    // Same seed + same stream ⇒ the frozen legacy reference holds
+    // byte-identical sample sets to the arena sketch (this is exactly
+    // the equivalence pinned by tests/property_subgen.rs), so the
+    // measured gap is pure layout + allocation behavior.
+    let mut sketch = SubGenAttention::new(cfg, 7);
+    let mut legacy = LegacyReferenceSketch::new(cfg, 7);
+    let mut stream = ClusterableStream::new(dim, m, 0.05, 1.0, 11);
+    let (mut q, mut k, mut v) = (vec![0.0f32; dim], vec![0.0f32; dim], vec![0.0f32; dim]);
+    let mut qs: Vec<f32> = Vec::with_capacity(batch * dim);
+    for i in 0..n {
+        stream.next_into(&mut q, &mut k, &mut v);
+        sketch.update(&k, &v);
+        legacy.update(&k, &v);
+        if i >= n - batch {
+            qs.extend_from_slice(&q);
+        }
+    }
+    println!(
+        "sketch: {} clusters, {} ℓ2 slots, {} sample rows",
+        sketch.num_clusters(),
+        s_smp,
+        sketch.normalizer().samples_arena().rows()
+    );
+    // Sanity: both layouts hold the same samples ⇒ same estimates.
+    {
+        let new_out = sketch.query(&qs[..dim]);
+        let old_out = legacy.query(&qs[..dim]);
+        let drift = subgen::linalg::rel_err_vec(&new_out, &old_out);
+        assert!(drift < 1e-5, "layout drift {drift}");
+    }
+
+    let r_legacy = bencher.run("legacy per-query ×batch", || {
+        for b in 0..batch {
+            black_box(legacy.query(black_box(&qs[b * dim..(b + 1) * dim])));
+        }
+    });
+    let mut out_one = vec![0.0f32; dim];
+    let r_flat = bencher.run("flat per-query ×batch", || {
+        for b in 0..batch {
+            sketch.query_into(black_box(&qs[b * dim..(b + 1) * dim]), &mut out_one);
+            black_box(&out_one);
+        }
+    });
+    let mut out_batch = vec![0.0f32; batch * dim];
+    let r_batch = bencher.run("flat batched", || {
+        sketch.query_batch_into(black_box(&qs), &mut out_batch);
+        black_box(&out_batch);
+    });
+
+    let legacy_us = r_legacy.mean_ns() / 1e3;
+    let flat_us = r_flat.mean_ns() / 1e3;
+    let batch_us = r_batch.mean_ns() / 1e3;
+    let mut t3 = Table::new(&["path", "µs / 8-query tick", "speedup vs legacy"]);
+    t3.row(&["legacy layout, per-query".into(), format!("{legacy_us:.1}"), "1.0x".into()]);
+    t3.row(&[
+        "flat arena, per-query".into(),
+        format!("{flat_us:.1}"),
+        format!("{:.1}x", legacy_us / flat_us),
+    ]);
+    t3.row(&[
+        "flat arena, batched".into(),
+        format!("{batch_us:.1}"),
+        format!("{:.1}x", legacy_us / batch_us),
+    ]);
+    t3.print();
+
+    // ── Machine-readable output for the perf trajectory ──
+    let json = format!(
+        "{{\n  \"bench\": \"bench_query_latency\",\n  \"config\": {{\"n\": {n}, \"dim\": {dim}, \"m\": {m}, \"t\": {t_smp}, \"s\": {s_smp}, \"batch\": {batch}}},\n  \"tick_us\": {{\"legacy_per_query\": {legacy_us:.2}, \"flat_per_query\": {flat_us:.2}, \"flat_batched\": {batch_us:.2}}},\n  \"speedup_vs_legacy\": {{\"per_query\": {:.3}, \"batched\": {:.3}}},\n  \"speedup_batched_vs_per_query\": {:.3},\n  \"scaling\": {{\"n\": {:?}, \"subgen_query_ns\": {:?}, \"exact_query_ns\": {:?}, \"subgen_slope\": {:.3}, \"exact_slope\": {:.3}}}\n}}\n",
+        legacy_us / flat_us,
+        legacy_us / batch_us,
+        flat_us / batch_us,
+        ns.iter().map(|&x| x as u64).collect::<Vec<_>>(),
+        sub_cost.iter().map(|&x| x as u64).collect::<Vec<_>>(),
+        ex_cost.iter().map(|&x| x as u64).collect::<Vec<_>>(),
+        loglog_slope(&ns, &sub_cost),
+        loglog_slope(&ns, &ex_cost),
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_query.json");
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(json.as_bytes())?;
+    println!("\nwrote {path}");
+    Ok(())
 }

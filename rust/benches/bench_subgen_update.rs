@@ -1,17 +1,24 @@
 //! Bench: SubGen per-token update cost vs stream length (the o(n)
-//! update-time claim of §2.1). Also sweeps δ (cluster count) and t.
+//! update-time claim of §2.1), sweeps of δ (cluster count) and t, and a
+//! before/after of the flat-arena update path against the legacy
+//! allocate-per-sample layout.
+//!
+//! Machine-readable results land in `BENCH_update.json` at the repo
+//! root (companion of `BENCH_query.json`).
 //!
 //!     cargo bench --bench bench_subgen_update
 
+use std::io::Write as _;
 use subgen::bench::{black_box, Bencher, Table};
 use subgen::linalg::loglog_slope;
-use subgen::subgen::{SubGenAttention, SubGenConfig};
+use subgen::subgen::{LegacyReferenceSketch, SubGenAttention, SubGenConfig};
 use subgen::workload::{ClusterableStream, TokenStream};
 
-fn main() {
+fn main() -> std::io::Result<()> {
     let dim = 32;
     let bencher = Bencher::default();
 
+    // ── Section 1: update cost vs prefilled stream length ──
     println!("== update cost vs prefilled stream length (m = 16) ==\n");
     let mut table = Table::new(&["n prefilled", "ns/update", "clusters"]);
     let mut ns = Vec::new();
@@ -20,12 +27,13 @@ fn main() {
         let cfg = SubGenConfig { dim, delta: 0.5, t: 32, s: 64 };
         let mut sketch = SubGenAttention::new(cfg, 1);
         let mut stream = ClusterableStream::new(dim, 16, 0.05, 1.0, 2);
+        let (mut q, mut k, mut v) = (vec![0.0f32; dim], vec![0.0f32; dim], vec![0.0f32; dim]);
         for _ in 0..n {
-            let (_, k, v) = stream.next_triplet();
+            stream.next_into(&mut q, &mut k, &mut v);
             sketch.update(&k, &v);
         }
         let r = bencher.run(&format!("update@n={n}"), || {
-            let (_, k, v) = stream.next_triplet();
+            stream.next_into(&mut q, &mut k, &mut v);
             sketch.update(black_box(&k), black_box(&v));
         });
         table.row(&[
@@ -37,23 +45,25 @@ fn main() {
         costs.push(r.mean_ns());
     }
     table.print();
+    let update_slope = loglog_slope(&ns, &costs);
     println!(
-        "\nupdate-cost log-log slope vs n: {:+.3} (o(n) ⇒ ≈ 0; exact rescan would be 1)\n",
-        loglog_slope(&ns, &costs)
+        "\nupdate-cost log-log slope vs n: {update_slope:+.3} (o(n) ⇒ ≈ 0; exact rescan would be 1)\n"
     );
 
+    // ── Section 2: update cost vs δ (cluster granularity) ──
     println!("== update cost vs δ (cluster granularity), n = 8000 ==\n");
     let mut t2 = Table::new(&["delta", "clusters", "ns/update", "memory KiB"]);
     for delta in [0.1f32, 0.25, 0.5, 1.0, 2.0] {
         let cfg = SubGenConfig { dim, delta, t: 32, s: 64 };
         let mut sketch = SubGenAttention::new(cfg, 1);
         let mut stream = ClusterableStream::new(dim, 16, 0.05, 1.0, 3);
+        let (mut q, mut k, mut v) = (vec![0.0f32; dim], vec![0.0f32; dim], vec![0.0f32; dim]);
         for _ in 0..8_000 {
-            let (_, k, v) = stream.next_triplet();
+            stream.next_into(&mut q, &mut k, &mut v);
             sketch.update(&k, &v);
         }
         let r = bencher.run(&format!("update@delta={delta}"), || {
-            let (_, k, v) = stream.next_triplet();
+            stream.next_into(&mut q, &mut k, &mut v);
             sketch.update(black_box(&k), black_box(&v));
         });
         t2.row(&[
@@ -64,4 +74,70 @@ fn main() {
         ]);
     }
     t2.print();
+
+    // ── Section 3: before/after — legacy layout vs flat arena ──
+    let (big_n, big_dim, big_m) = (100_000usize, 128usize, 64usize);
+    println!(
+        "\n== before/after update path: legacy vs flat arena, n = {big_n}, d = {big_dim} ==\n"
+    );
+    let cfg = SubGenConfig { dim: big_dim, delta: 0.5, t: 32, s: 64 };
+    let mut arena = SubGenAttention::new(cfg, 5);
+    let mut legacy = LegacyReferenceSketch::new(cfg, 5);
+    let mut stream = ClusterableStream::new(big_dim, big_m, 0.05, 1.0, 7);
+    let (mut q, mut k, mut v) =
+        (vec![0.0f32; big_dim], vec![0.0f32; big_dim], vec![0.0f32; big_dim]);
+    for _ in 0..big_n {
+        stream.next_into(&mut q, &mut k, &mut v);
+        arena.update(&k, &v);
+        legacy.update(&k, &v);
+    }
+    let r_arena = bencher.run("arena update", || {
+        stream.next_into(&mut q, &mut k, &mut v);
+        arena.update(black_box(&k), black_box(&v));
+    });
+    let r_legacy = bencher.run("legacy update", || {
+        stream.next_into(&mut q, &mut k, &mut v);
+        legacy.update(black_box(&k), black_box(&v));
+    });
+    let mut t3 = Table::new(&["path", "ns/update", "speedup"]);
+    t3.row(&["legacy layout".into(), format!("{:.0}", r_legacy.mean_ns()), "1.0x".into()]);
+    t3.row(&[
+        "flat arena".into(),
+        format!("{:.0}", r_arena.mean_ns()),
+        format!("{:.2}x", r_legacy.mean_ns() / r_arena.mean_ns()),
+    ]);
+    t3.print();
+
+    // ── Section 4: full 100k-token stream build (push_row amortization) ──
+    println!("\n== full stream build: n = {big_n}, d = {big_dim}, m = {big_m} ==\n");
+    let t0 = std::time::Instant::now();
+    let mut sketch = SubGenAttention::new(cfg, 9);
+    let mut stream = ClusterableStream::new(big_dim, big_m, 0.05, 1.0, 13);
+    for _ in 0..big_n {
+        stream.next_into(&mut q, &mut k, &mut v);
+        sketch.update(&k, &v);
+    }
+    let build = t0.elapsed();
+    let build_ns_per_token = build.as_nanos() as f64 / big_n as f64;
+    println!(
+        "built in {:?} ({:.0} ns/token), {} clusters, {} KiB sketch",
+        build,
+        build_ns_per_token,
+        sketch.num_clusters(),
+        sketch.memory_bytes() / 1024
+    );
+
+    let json = format!(
+        "{{\n  \"bench\": \"bench_subgen_update\",\n  \"update_slope_vs_n\": {update_slope:.3},\n  \"before_after_ns_per_update\": {{\"n\": {big_n}, \"dim\": {big_dim}, \"m\": {big_m}, \"legacy\": {:.0}, \"flat_arena\": {:.0}, \"speedup\": {:.3}}},\n  \"full_build\": {{\"n\": {big_n}, \"dim\": {big_dim}, \"m\": {big_m}, \"ns_per_token\": {build_ns_per_token:.0}, \"clusters\": {}, \"memory_kib\": {}}}\n}}\n",
+        r_legacy.mean_ns(),
+        r_arena.mean_ns(),
+        r_legacy.mean_ns() / r_arena.mean_ns(),
+        sketch.num_clusters(),
+        sketch.memory_bytes() / 1024,
+    );
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_update.json");
+    let mut f = std::fs::File::create(path)?;
+    f.write_all(json.as_bytes())?;
+    println!("\nwrote {path}");
+    Ok(())
 }

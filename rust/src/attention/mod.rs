@@ -7,51 +7,87 @@
 //! algorithmic experiments (error bounds, sublinearity) can run without a
 //! compiled artifact.
 
-use crate::linalg::logsumexp;
-use crate::tensor::{dot, Tensor};
+use crate::tensor::{axpy, scale, scores_max_into, Tensor};
 
 /// Exact attention output `softmax(K·q)ᵀ·V` (numerically stabilized).
+/// Allocating wrapper over [`exact_attention_into`].
 ///
 /// `keys`/`values` are row-stacked histories; `q` is the current query.
 pub fn exact_attention(q: &[f32], keys: &Tensor, values: &Tensor) -> Vec<f32> {
-    assert_eq!(keys.rows(), values.rows(), "K/V length mismatch");
-    assert_eq!(keys.cols(), q.len(), "K/q dim mismatch");
-    let n = keys.rows();
-    let d_out = values.cols();
-    if n == 0 {
-        return vec![0.0; d_out];
-    }
-    let scores: Vec<f32> = (0..n).map(|i| dot(keys.row(i), q)).collect();
-    let lse = logsumexp(&scores);
-    let mut out = vec![0.0f32; d_out];
-    for i in 0..n {
-        let w = (scores[i] - lse).exp();
-        crate::tensor::axpy(w, values.row(i), &mut out);
-    }
+    let mut scores = Vec::new();
+    let mut out = vec![0.0f32; values.cols()];
+    exact_attention_into(q, keys, values, &mut scores, &mut out);
     out
 }
 
+/// Exact attention through one shared score buffer: a fused score+max
+/// sweep over K, then a single exp+accumulate sweep over the scores and
+/// V (`z = Σ e_i`, `out = Σ e_i·v_i`, rescaled by `1/z` at the end) —
+/// instead of scoring, then a second full `logsumexp` pass, then a
+/// third weighting pass. `scores` is reusable scratch; at n = 100k this
+/// oracle is itself a bench bottleneck, so it gets the same treatment
+/// as the sketches.
+pub fn exact_attention_into(
+    q: &[f32],
+    keys: &Tensor,
+    values: &Tensor,
+    scores: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    assert_eq!(keys.rows(), values.rows(), "K/V length mismatch");
+    assert_eq!(keys.cols(), q.len(), "K/q dim mismatch");
+    assert_eq!(values.cols(), out.len(), "V/out dim mismatch");
+    let n = keys.rows();
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    if n == 0 {
+        return;
+    }
+    scores.resize(n, 0.0);
+    let m = scores_max_into(keys.as_slice(), keys.cols(), q, &mut scores[..n]);
+    let mut z = 0.0f32;
+    for i in 0..n {
+        let e = (scores[i] - m).exp();
+        z += e;
+        axpy(e, values.row(i), out);
+    }
+    if z > 0.0 {
+        scale(out, 1.0 / z);
+    }
+}
+
 /// Exact softmax-normalizer (partition function) Σ_i exp(⟨k_i, q⟩),
-/// returned in log space for stability.
+/// returned in log space for stability (fused score+max sweep).
 pub fn exact_log_partition(q: &[f32], keys: &Tensor) -> f32 {
-    let scores: Vec<f32> = (0..keys.rows()).map(|i| dot(keys.row(i), q)).collect();
-    logsumexp(&scores)
+    let n = keys.rows();
+    if n == 0 {
+        return f32::NEG_INFINITY;
+    }
+    let mut scores = vec![0.0f32; n];
+    let m = scores_max_into(keys.as_slice(), keys.cols(), q, &mut scores);
+    let z: f32 = scores.iter().map(|&sc| (sc - m).exp()).sum();
+    m + z.ln()
 }
 
 /// ‖softmax(K·q)‖₂ — the first factor of the paper's error bound (Eq. 3).
+/// One fused score+max sweep, then one pass accumulating Σe and Σe²
+/// together: ‖p‖₂ = √(Σe²)/Σe.
 pub fn softmax_vector_norm(q: &[f32], keys: &Tensor) -> f32 {
     let n = keys.rows();
     if n == 0 {
         return 0.0;
     }
-    let scores: Vec<f32> = (0..n).map(|i| dot(keys.row(i), q)).collect();
-    let lse = logsumexp(&scores);
-    let mut s = 0.0f32;
+    let mut scores = vec![0.0f32; n];
+    let m = scores_max_into(keys.as_slice(), keys.cols(), q, &mut scores);
+    let mut z = 0.0f32;
+    let mut z2 = 0.0f32;
     for &sc in &scores {
-        let p = (sc - lse).exp();
-        s += p * p;
+        let e = (sc - m).exp();
+        z += e;
+        z2 += e * e;
     }
-    s.sqrt()
+    z2.sqrt() / z
 }
 
 /// The right-hand side of the paper's guarantee (Eq. 3):
@@ -65,7 +101,7 @@ pub fn error_bound_rhs(eps: f32, q: &[f32], keys: &Tensor, values: &Tensor) -> f
 mod tests {
     use super::*;
     use crate::rng::Pcg64;
-    use crate::tensor::norm2;
+    use crate::tensor::{dot, norm2};
 
     #[test]
     fn uniform_keys_average_values() {
@@ -91,6 +127,22 @@ mod tests {
         let keys = Tensor::zeros(0, 4);
         let values = Tensor::zeros(0, 4);
         assert_eq!(exact_attention(&[0.0; 4], &keys, &values), vec![0.0; 4]);
+        assert_eq!(exact_log_partition(&[0.0; 4], &keys), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn into_variant_reuses_scratch_and_matches_wrapper() {
+        let mut rng = Pcg64::seed_from_u64(9);
+        let keys = Tensor::randn(&mut rng, 40, 6, 0.4);
+        let values = Tensor::randn(&mut rng, 40, 6, 1.0);
+        let mut scores = Vec::new();
+        let mut out = vec![0.0f32; 6];
+        for trial in 0..3 {
+            let q: Vec<f32> = (0..6).map(|i| (i as f32 + trial as f32) * 0.1).collect();
+            exact_attention_into(&q, &keys, &values, &mut scores, &mut out);
+            assert_eq!(out, exact_attention(&q, &keys, &values), "trial {trial}");
+        }
+        assert_eq!(scores.len(), 40);
     }
 
     #[test]

@@ -1,6 +1,11 @@
 //! Streaming δ-threshold clustering (the paper's Algorithm 1 core).
+//!
+//! Centers live in a contiguous row-major [`Tensor`] arena and the
+//! nearest-center scan runs through the blocked
+//! [`crate::tensor::nearest_row`] kernel — the scan is the whole
+//! per-token update cost (O(m·d)), so its constant factor matters.
 
-use crate::tensor::dist_sq;
+use crate::tensor::{dist_sq, nearest_row, Tensor};
 
 /// Opaque cluster identifier (index into the center table).
 pub type ClusterId = usize;
@@ -21,8 +26,8 @@ pub struct OnlineThresholdClustering {
     dim: usize,
     delta: f32,
     delta_sq: f32,
-    /// Flattened row-major centers (len = centers * dim).
-    centers: Vec<f32>,
+    /// Row-major center arena (m × dim).
+    centers: Tensor,
     counts: Vec<u64>,
     total: u64,
 }
@@ -51,7 +56,14 @@ impl OnlineThresholdClustering {
     pub fn new(dim: usize, delta: f32) -> Self {
         assert!(delta > 0.0, "delta must be positive");
         assert!(dim > 0, "dim must be positive");
-        Self { dim, delta, delta_sq: delta * delta, centers: Vec::new(), counts: Vec::new(), total: 0 }
+        Self {
+            dim,
+            delta,
+            delta_sq: delta * delta,
+            centers: Tensor::zeros(0, dim),
+            counts: Vec::new(),
+            total: 0,
+        }
     }
 
     /// Observe a point; returns its assignment.
@@ -65,32 +77,18 @@ impl OnlineThresholdClustering {
             }
             _ => {
                 let id = self.counts.len();
-                self.centers.extend_from_slice(point);
+                self.centers.push_row(point);
                 self.counts.push(1);
                 Assignment::New(id)
             }
         }
     }
 
-    /// Nearest center and squared distance (linear scan over centers; the
-    /// center count is m = o(n) by assumption, so this is the sublinear
-    /// part of the update cost).
+    /// Nearest center and squared distance (blocked linear scan over the
+    /// contiguous center arena; the center count is m = o(n) by
+    /// assumption, so this is the sublinear part of the update cost).
     pub fn nearest(&self, point: &[f32]) -> Option<(ClusterId, f32)> {
-        let m = self.counts.len();
-        if m == 0 {
-            return None;
-        }
-        let mut best = 0;
-        let mut best_d2 = f32::INFINITY;
-        for i in 0..m {
-            let c = &self.centers[i * self.dim..(i + 1) * self.dim];
-            let d2 = dist_sq(c, point);
-            if d2 < best_d2 {
-                best_d2 = d2;
-                best = i;
-            }
-        }
-        Some((best, best_d2))
+        nearest_row(self.centers.as_slice(), self.dim, point)
     }
 
     /// Number of clusters discovered so far (the paper's m').
@@ -120,7 +118,13 @@ impl OnlineThresholdClustering {
     /// Center (representative) of cluster `id`.
     #[inline]
     pub fn center(&self, id: ClusterId) -> &[f32] {
-        &self.centers[id * self.dim..(id + 1) * self.dim]
+        self.centers.row(id)
+    }
+
+    /// The whole center arena (m × dim, row-major).
+    #[inline]
+    pub fn centers(&self) -> &Tensor {
+        &self.centers
     }
 
     /// Threshold δ.
@@ -138,7 +142,7 @@ impl OnlineThresholdClustering {
     /// Bytes of state held (centers + counts): the memory-accounting
     /// hook used by the sublinearity experiments.
     pub fn memory_bytes(&self) -> usize {
-        self.centers.len() * std::mem::size_of::<f32>()
+        self.centers.as_slice().len() * std::mem::size_of::<f32>()
             + self.counts.len() * std::mem::size_of::<u64>()
     }
 
@@ -155,18 +159,16 @@ impl OnlineThresholdClustering {
         self.delta *= 2.0;
         self.delta_sq = self.delta * self.delta;
         let m = self.counts.len();
-        let mut kept: Vec<ClusterId> = Vec::new();
         let mut mapping = vec![usize::MAX; m];
-        let mut new_centers: Vec<f32> = Vec::new();
+        let mut new_centers = Tensor::with_row_capacity(m, self.dim);
         let mut new_counts: Vec<u64> = Vec::new();
         for i in 0..m {
-            let ci = self.center(i).to_vec();
+            let ci = self.centers.row(i);
             // Nearest kept center within the doubled threshold?
             let mut absorber: Option<usize> = None;
             let mut best = self.delta_sq;
-            for (new_id, &orig) in kept.iter().enumerate() {
-                let d2 = dist_sq(&new_centers[new_id * self.dim..(new_id + 1) * self.dim], &ci);
-                let _ = orig;
+            for new_id in 0..new_centers.rows() {
+                let d2 = dist_sq(new_centers.row(new_id), ci);
                 if d2 <= best {
                     best = d2;
                     absorber = Some(new_id);
@@ -178,9 +180,8 @@ impl OnlineThresholdClustering {
                     mapping[i] = new_id;
                 }
                 None => {
-                    let new_id = kept.len();
-                    kept.push(i);
-                    new_centers.extend_from_slice(&ci);
+                    let new_id = new_counts.len();
+                    new_centers.push_row(ci);
                     new_counts.push(self.counts[i]);
                     mapping[i] = new_id;
                 }

@@ -16,11 +16,23 @@ pub struct EngineConfig {
     pub queue_capacity: usize,
     /// Max prefills admitted per tick (bounds tick latency).
     pub prefills_per_tick: usize,
+    /// Every N ticks, run one host-side sketch probe pass over every
+    /// active sequence's caches (estimator observability). The probe
+    /// evaluates each (layer, head) policy's packed estimator for the
+    /// step's query via `attention_all_into`: one pack + one scoring
+    /// sweep per policy through shared scratch, with zero per-query
+    /// heap allocation — unlike `L·H` independent `attention` calls,
+    /// which each allocate and pack a fresh buffer. (Each head owns a
+    /// distinct sketch, so there is exactly one query per sketch per
+    /// tick; multi-query batching over a single sketch is the
+    /// `query_batch`/`attention_batch` API.) 0 disables the probe
+    /// (default).
+    pub host_probe_every: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        Self { max_active: 8, queue_capacity: 256, prefills_per_tick: 1 }
+        Self { max_active: 8, queue_capacity: 256, prefills_per_tick: 1, host_probe_every: 0 }
     }
 }
 
@@ -37,6 +49,12 @@ pub struct EngineStats {
     pub latency: Histogram,
     /// Per-decode-tick latency.
     pub tick_latency: Histogram,
+    /// Host-probe sweeps executed (see `EngineConfig::host_probe_every`).
+    pub probes: Counter,
+    /// Probe outputs containing non-finite values (estimator drift).
+    pub probe_nonfinite: Counter,
+    /// Per-probe latency (one batched sweep over all active sequences).
+    pub probe_latency: Histogram,
 }
 
 /// One active (decoding) sequence.
@@ -49,6 +67,9 @@ struct Active {
     next: i32,
     pos: usize,
     generated: Vec<i32>,
+    /// Most recent step's per-head queries ([L, H, dh] flat) — what the
+    /// host probe evaluates against this sequence's caches.
+    last_q: Vec<f32>,
 }
 
 /// The serving engine. Single-threaded event loop (PJRT executables are
@@ -59,6 +80,10 @@ pub struct Engine<'e, E: StepExecutor> {
     queue: VecDeque<(Request, Timing)>,
     active: Vec<Active>,
     done: Vec<Response>,
+    /// Ticks executed (drives the probe cadence).
+    ticks: u64,
+    /// Reusable probe output buffer.
+    probe_out: Vec<f32>,
     /// Public metrics.
     pub stats: EngineStats,
 }
@@ -72,13 +97,16 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             queue: VecDeque::new(),
             active: Vec::new(),
             done: Vec::new(),
+            ticks: 0,
+            probe_out: Vec::new(),
             stats: EngineStats::default(),
         }
     }
 
-    /// Enqueue a request; `false` = rejected (backpressure).
+    /// Enqueue a request; `false` = rejected (backpressure, or a
+    /// malformed empty prompt — prefill needs at least one position).
     pub fn submit(&mut self, req: Request) -> bool {
-        if self.queue.len() >= self.cfg.queue_capacity {
+        if req.prompt.is_empty() || self.queue.len() >= self.cfg.queue_capacity {
             self.stats.rejected.inc();
             return false;
         }
@@ -103,10 +131,48 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
         let t0 = std::time::Instant::now();
         self.admit()?;
         let progressed = self.decode_tick()?;
+        self.ticks += 1;
+        if self.cfg.host_probe_every > 0
+            && progressed > 0
+            && self.ticks % self.cfg.host_probe_every as u64 == 0
+        {
+            self.host_probe()?;
+        }
         if progressed > 0 {
             self.stats.tick_latency.record(t0.elapsed());
         }
         Ok(progressed)
+    }
+
+    /// One host-probe pass per tick: every active sequence's step
+    /// queries are evaluated through its caches' packed estimators via
+    /// `attention_all_into` — pack once + one scoring sweep per
+    /// policy through shared scratch, no per-query allocation — where
+    /// `max_active · L · H` independent `attention` evaluations would
+    /// each allocate and pack a fresh buffer.
+    fn host_probe(&mut self) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        let mut out = std::mem::take(&mut self.probe_out);
+        let mut probed = false;
+        let mut nonfinite = 0u64;
+        for seq in &mut self.active {
+            if seq.last_q.is_empty() {
+                continue;
+            }
+            out.resize(seq.last_q.len(), 0.0);
+            seq.caches.attention_all_into(&seq.last_q, &mut out)?;
+            probed = true;
+            if !out.iter().all(|x| x.is_finite()) {
+                nonfinite += 1;
+            }
+        }
+        self.probe_out = out;
+        if probed {
+            self.stats.probes.inc();
+            self.stats.probe_nonfinite.add(nonfinite);
+            self.stats.probe_latency.record(t0.elapsed());
+        }
+        Ok(())
     }
 
     /// Run ticks until all submitted work completes.
@@ -129,11 +195,15 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             let mut caches =
                 SequenceCaches::new(spec, &req.policy, req.budget, req.delta, req.id ^ 0x5EED)?;
             let pre = self.exec.prefill(&req.prompt)?;
+            let mut last_q = Vec::new();
             for pos in 0..req.prompt.len() {
                 let q = self.exec.position_slice(&pre.qs, pos);
                 let k = self.exec.position_slice(&pre.ks, pos);
                 let v = self.exec.position_slice(&pre.vs, pos);
                 caches.update(&q, &k, &v);
+                if pos + 1 == req.prompt.len() {
+                    last_q = q;
+                }
             }
             let vocab = spec.vocab;
             let last = req.prompt.len() - 1;
@@ -150,6 +220,7 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
                 next,
                 pos,
                 generated: Vec::new(),
+                last_q,
             });
             admitted += 1;
         }
@@ -166,6 +237,7 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             let step = self.exec.decode(seq.next, seq.pos, &seq.flat)?;
             seq.caches.update(&step.q, &step.k, &step.v);
             seq.next = crate::tensor::argmax(&step.logits[..spec_vocab]) as i32;
+            seq.last_q = step.q;
             seq.pos += 1;
             progressed += 1;
             self.stats.tokens.inc();
@@ -243,6 +315,17 @@ mod tests {
     }
 
     #[test]
+    fn empty_prompt_rejected_not_panicking() {
+        let exec = MockExecutor::small();
+        let mut e = engine(EngineConfig::default(), &exec);
+        assert!(!e.submit(Request::exact(0, vec![], 2)));
+        assert_eq!(e.stats.rejected.get(), 1);
+        assert_eq!(e.pending(), 0);
+        e.run_to_completion().unwrap();
+        assert!(e.take_responses().is_empty());
+    }
+
+    #[test]
     fn backpressure_rejects_when_full() {
         let exec = MockExecutor::small();
         let mut e = engine(
@@ -293,6 +376,35 @@ mod tests {
             assert_eq!(rs.len(), 1, "{policy}");
             assert_eq!(rs[0].tokens.len(), 6, "{policy}");
         }
+    }
+
+    #[test]
+    fn host_probe_issues_one_batched_sweep_per_tick() {
+        let exec = MockExecutor::small();
+        let mut e = engine(EngineConfig { host_probe_every: 1, ..Default::default() }, &exec);
+        e.submit(Request {
+            id: 0,
+            prompt: vec![1, 2, 3],
+            max_new: 4,
+            policy: "subgen".into(),
+            budget: 16,
+            delta: 0.5,
+        });
+        e.run_to_completion().unwrap();
+        // One probe per progressing tick, each a single batched sweep.
+        assert!(e.stats.probes.get() >= 2, "probes={}", e.stats.probes.get());
+        assert_eq!(e.stats.probe_nonfinite.get(), 0);
+        assert_eq!(e.stats.probe_latency.count(), e.stats.probes.get());
+    }
+
+    #[test]
+    fn host_probe_disabled_by_default() {
+        let exec = MockExecutor::small();
+        let mut e = engine(EngineConfig::default(), &exec);
+        e.submit(Request::exact(0, vec![1], 2));
+        e.run_to_completion().unwrap();
+        assert_eq!(e.stats.probes.get(), 0);
+        assert_eq!(e.stats.probe_latency.count(), 0);
     }
 
     #[test]

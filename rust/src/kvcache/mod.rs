@@ -96,6 +96,21 @@ pub trait CachePolicy: Send {
         self.pack(&mut buf);
         buf.attention(q)
     }
+
+    /// Host-side **batched** attention: `nq` queries (row-major flat)
+    /// answered with one pack and one scoring sweep over the packed
+    /// buffer, instead of `nq` independent pack+evaluate rounds.
+    /// Per-query results are identical to [`CachePolicy::attention`].
+    fn attention_batch(&self, qs: &[f32], nq: usize) -> Vec<f32> {
+        if nq == 0 {
+            return Vec::new();
+        }
+        assert_eq!(qs.len() % nq, 0, "qs must be nq × dim row-major");
+        let dim = qs.len() / nq;
+        let mut buf = PackedCache::new(dim, self.packed_slots().max(1));
+        self.pack(&mut buf);
+        buf.attention_batch(qs, nq)
+    }
 }
 
 /// Construct a policy by name with a uniform "token budget" knob —
@@ -175,6 +190,34 @@ mod tests {
     #[test]
     fn build_policy_rejects_unknown() {
         assert!(build_policy("bogus", 4, 16, 0.5, 0).is_err());
+    }
+
+    /// The batched host path must agree exactly with per-query
+    /// `attention` for every policy (default impl and overrides alike).
+    #[test]
+    fn attention_batch_matches_attention_for_all_policies() {
+        let dim = 8;
+        let n = 60;
+        let mut rng = Pcg64::seed_from_u64(5);
+        let keys = Tensor::randn(&mut rng, n, dim, 0.4);
+        let values = Tensor::randn(&mut rng, n, dim, 1.0);
+        let queries = Tensor::randn(&mut rng, n, dim, 0.4);
+        for name in POLICY_NAMES {
+            let mut p = build_policy(name, dim, 24, 0.5, 3).unwrap();
+            for i in 0..n {
+                p.update(queries.row(i), keys.row(i), values.row(i));
+            }
+            let nq = 4;
+            let mut qs = Vec::new();
+            for b in 0..nq {
+                qs.extend_from_slice(queries.row(b * 7));
+            }
+            let batched = p.attention_batch(&qs, nq);
+            for b in 0..nq {
+                let want = p.attention(&qs[b * dim..(b + 1) * dim]);
+                assert_eq!(&batched[b * dim..(b + 1) * dim], &want[..], "{name} b={b}");
+            }
+        }
     }
 
     #[test]

@@ -1,7 +1,13 @@
 //! The fixed-capacity packed cache buffer shared by every policy and by
 //! the XLA kernel.
 
-use crate::tensor::dot;
+use crate::tensor::{dot, scores_batch_into};
+
+/// Scratch-growth policy: capacity for `slots` rows plus ~50% headroom.
+fn grown_capacity(slots: usize) -> usize {
+    let n = slots.max(1);
+    n + n / 2 + 8
+}
 
 /// C-slot buffer: row-major K and V `[C, d]`, per-slot weights `w`
 /// (value path) and `u` (normalizer path). Unused slots carry zero
@@ -50,6 +56,50 @@ impl PackedCache {
         self.keys[at..at + self.dim].copy_from_slice(k);
         self.values[at..at + self.dim].copy_from_slice(v);
         self.w[self.used] = w;
+        self.u[self.used] = u;
+        self.used += 1;
+    }
+
+    /// Ensure a reusable scratch slot holds a buffer with at least
+    /// `slots` capacity for `dim`-wide rows, rebuilding with ~50%
+    /// headroom when it doesn't (so steadily growing packings don't
+    /// rebuild every call); returns the buffer. This is the one
+    /// growth policy for all batched-attention scratch buffers.
+    pub fn ensure_scratch(
+        slot: &mut Option<PackedCache>,
+        dim: usize,
+        slots: usize,
+    ) -> &mut PackedCache {
+        let needed = slots.max(1);
+        let rebuild = match slot {
+            Some(buf) => buf.capacity < needed || buf.dim != dim,
+            None => true,
+        };
+        if rebuild {
+            *slot = Some(PackedCache::new(dim, grown_capacity(slots)));
+        }
+        slot.as_mut().expect("scratch just ensured")
+    }
+
+    /// In-place variant of [`PackedCache::ensure_scratch`] for a
+    /// non-optional scratch field: grow (with the same headroom
+    /// policy) when `slots` no longer fit. Contents are reset.
+    pub fn ensure_capacity(&mut self, slots: usize) {
+        if self.capacity < slots.max(1) {
+            *self = PackedCache::new(self.dim, grown_capacity(slots));
+        }
+    }
+
+    /// Append a normalizer-only slot: key + `u` weight, zero value row
+    /// and zero `w` — without the caller having to materialize a zero
+    /// value vector.
+    pub fn push_normalizer(&mut self, k: &[f32], u: f32) {
+        assert!(self.used < self.capacity, "packed cache overflow");
+        assert_eq!(k.len(), self.dim);
+        let at = self.used * self.dim;
+        self.keys[at..at + self.dim].copy_from_slice(k);
+        self.values[at..at + self.dim].iter_mut().for_each(|x| *x = 0.0);
+        self.w[self.used] = 0.0;
         self.u[self.used] = u;
         self.used += 1;
     }
@@ -105,46 +155,92 @@ impl PackedCache {
 
     /// Evaluate the weighted-exponential attention estimator over the
     /// buffer (host reference for the L1 kernel; numerically stabilized
-    /// with a max-shift over slots with positive weight).
+    /// with a max-shift over slots with positive weight). Delegates to
+    /// [`PackedCache::attention_batch_into`] with a batch of one so
+    /// there is exactly one estimator implementation.
     pub fn attention(&self, q: &[f32]) -> Vec<f32> {
         assert_eq!(q.len(), self.dim);
         let mut out = vec![0.0f32; self.dim];
-        if self.used == 0 {
-            return out;
+        let mut scores = Vec::new();
+        let mut zacc = Vec::new();
+        self.attention_batch_into(q, 1, &mut scores, &mut zacc, &mut out);
+        out
+    }
+
+    /// Batched estimator evaluation: `nq = qs.len()/dim` queries
+    /// (row-major) answered with **one** scoring sweep over the packed
+    /// buffer — each slot's key is loaded once and scored against the
+    /// whole batch while hot. Per-query results are identical to
+    /// [`PackedCache::attention`]. Allocating wrapper over
+    /// [`PackedCache::attention_batch_into`].
+    pub fn attention_batch(&self, qs: &[f32], nq: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; nq * self.dim];
+        let mut scores = Vec::new();
+        let mut zacc = Vec::new();
+        self.attention_batch_into(qs, nq, &mut scores, &mut zacc, &mut out);
+        out
+    }
+
+    /// Batched estimator evaluation into caller-provided buffers.
+    /// `scores` (f32, `used × nq`) and `zacc` (f64, `dim`) are scratch
+    /// reused across calls — no allocation once warmed; `out` must be
+    /// `nq × dim`.
+    pub fn attention_batch_into(
+        &self,
+        qs: &[f32],
+        nq: usize,
+        scores: &mut Vec<f32>,
+        zacc: &mut Vec<f64>,
+        out: &mut [f32],
+    ) {
+        assert_eq!(qs.len(), nq * self.dim, "qs must be nq × dim");
+        assert_eq!(out.len(), nq * self.dim, "out must be nq × dim");
+        for o in out.iter_mut() {
+            *o = 0.0;
         }
-        // Max score over slots that matter (w or u positive).
-        let mut shift = f32::NEG_INFINITY;
-        let mut scores = vec![0.0f32; self.used];
-        for i in 0..self.used {
-            let sc = dot(self.key(i), q);
-            scores[i] = sc;
-            if (self.w[i] > 0.0 || self.u[i] > 0.0) && sc > shift {
-                shift = sc;
-            }
+        if self.used == 0 || nq == 0 {
+            return;
         }
-        if !shift.is_finite() {
-            return out;
-        }
-        let mut z = vec![0.0f64; self.dim];
-        let mut tau = 0.0f64;
-        for i in 0..self.used {
-            let e = ((scores[i] - shift) as f64).exp();
-            if self.w[i] > 0.0 {
-                let we = self.w[i] as f64 * e;
-                for (zj, &vj) in z.iter_mut().zip(self.value(i)) {
-                    *zj += we * vj as f64;
+        let n = self.used;
+        scores.resize(n * nq, 0.0);
+        zacc.resize(self.dim, 0.0);
+        scores_batch_into(&self.keys[..n * self.dim], self.dim, qs, nq, &mut scores[..n * nq]);
+        for b in 0..nq {
+            // Masked max over slots that matter (w or u positive),
+            // mirroring `attention` exactly.
+            let mut shift = f32::NEG_INFINITY;
+            for i in 0..n {
+                let sc = scores[i * nq + b];
+                if (self.w[i] > 0.0 || self.u[i] > 0.0) && sc > shift {
+                    shift = sc;
                 }
             }
-            if self.u[i] > 0.0 {
-                tau += self.u[i] as f64 * e;
+            if !shift.is_finite() {
+                continue;
+            }
+            for z in zacc.iter_mut() {
+                *z = 0.0;
+            }
+            let mut tau = 0.0f64;
+            for i in 0..n {
+                let e = ((scores[i * nq + b] - shift) as f64).exp();
+                if self.w[i] > 0.0 {
+                    let we = self.w[i] as f64 * e;
+                    for (zj, &vj) in zacc.iter_mut().zip(self.value(i)) {
+                        *zj += we * vj as f64;
+                    }
+                }
+                if self.u[i] > 0.0 {
+                    tau += self.u[i] as f64 * e;
+                }
+            }
+            if tau > 0.0 {
+                let ob = &mut out[b * self.dim..(b + 1) * self.dim];
+                for (o, &zj) in ob.iter_mut().zip(zacc.iter()) {
+                    *o = (zj / tau) as f32;
+                }
             }
         }
-        if tau > 0.0 {
-            for (o, zj) in out.iter_mut().zip(z) {
-                *o = (zj / tau) as f32;
-            }
-        }
-        out
     }
 
     /// Log-space normalizer estimate over the buffer: log Σ u_i·e^{⟨q,k_i⟩}.
@@ -222,6 +318,66 @@ mod tests {
         let out = buf.attention(&q);
         assert!((out[0] - 0.25).abs() < 1e-5, "{out:?}");
         assert!((out[1] - 0.5).abs() < 1e-5, "{out:?}");
+    }
+
+    #[test]
+    fn attention_batch_matches_single_query() {
+        let dim = 6;
+        let n = 24;
+        let mut rng = Pcg64::seed_from_u64(9);
+        let keys = Tensor::randn(&mut rng, n, dim, 0.5);
+        let values = Tensor::randn(&mut rng, n, dim, 1.0);
+        let mut buf = PackedCache::new(dim, n);
+        for i in 0..n {
+            // Mixed slot kinds: value-only, normalizer-only, both, dead.
+            let (w, u) = match i % 4 {
+                0 => (1.0, 1.0),
+                1 => (0.7, 0.0),
+                2 => (0.0, 1.3),
+                _ => (0.0, 0.0),
+            };
+            buf.push(keys.row(i), values.row(i), w, u);
+        }
+        let nq = 5;
+        let qs = Tensor::randn(&mut rng, nq, dim, 0.4);
+        let got = buf.attention_batch(qs.as_slice(), nq);
+        for b in 0..nq {
+            let want = buf.attention(qs.row(b));
+            assert_eq!(&got[b * dim..(b + 1) * dim], &want[..], "b={b}");
+        }
+    }
+
+    #[test]
+    fn scratch_growth_policy() {
+        let mut slot: Option<PackedCache> = None;
+        let buf = PackedCache::ensure_scratch(&mut slot, 4, 10);
+        assert!(buf.capacity() >= 10);
+        assert_eq!(buf.dim(), 4);
+        let cap = slot.as_ref().unwrap().capacity();
+        // No rebuild while the request still fits.
+        PackedCache::ensure_scratch(&mut slot, 4, cap);
+        assert_eq!(slot.as_ref().unwrap().capacity(), cap);
+        // Dim change forces a rebuild.
+        PackedCache::ensure_scratch(&mut slot, 8, 4);
+        assert_eq!(slot.as_ref().unwrap().dim(), 8);
+        // In-place variant grows only when needed.
+        let mut buf2 = PackedCache::new(2, 4);
+        buf2.ensure_capacity(4);
+        assert_eq!(buf2.capacity(), 4);
+        buf2.ensure_capacity(5);
+        assert!(buf2.capacity() >= 5);
+    }
+
+    #[test]
+    fn push_normalizer_equals_zero_value_push() {
+        let dim = 3;
+        let mut a = PackedCache::new(dim, 2);
+        let mut b = PackedCache::new(dim, 2);
+        a.push(&[1.0, 2.0, 3.0], &[0.0; 3], 0.0, 2.5);
+        b.push_normalizer(&[1.0, 2.0, 3.0], 2.5);
+        assert_eq!(a.attention(&[0.5, 0.1, -0.2]), b.attention(&[0.5, 0.1, -0.2]));
+        assert_eq!(a.used(), b.used());
+        assert_eq!(a.u_buffer(), b.u_buffer());
     }
 
     #[test]

@@ -12,6 +12,7 @@
 
 use super::{CachePolicy, PackedCache, SlidingCache};
 use crate::subgen::{SubGenAttention, SubGenConfig};
+use std::cell::RefCell;
 
 /// Configuration for the hybrid SubGen cache.
 #[derive(Debug, Clone, Copy)]
@@ -30,12 +31,23 @@ pub struct SubGenCacheConfig {
     pub max_clusters: Option<usize>,
 }
 
+/// Reusable buffers for the batched host-attention path: one persistent
+/// packed buffer plus kernel scratch, so a per-tick batched evaluation
+/// packs once and allocates nothing after warm-up.
+#[derive(Default)]
+struct BatchScratch {
+    buf: Option<PackedCache>,
+    scores: Vec<f32>,
+    zacc: Vec<f64>,
+}
+
 /// Hybrid recent-window + SubGen-sketch cache policy.
 pub struct SubGenCache {
     cfg: SubGenCacheConfig,
     recent: Option<SlidingCache>,
     sketch: SubGenAttention,
     n: u64,
+    scratch: RefCell<BatchScratch>,
 }
 
 impl SubGenCache {
@@ -48,6 +60,7 @@ impl SubGenCache {
             recent: if cfg.recent > 0 { Some(SlidingCache::new(cfg.dim, cfg.recent)) } else { None },
             sketch: SubGenAttention::new(sketch_cfg, seed),
             n: 0,
+            scratch: RefCell::new(BatchScratch::default()),
         }
     }
 
@@ -59,6 +72,17 @@ impl SubGenCache {
     /// The underlying sketch (diagnostics).
     pub fn sketch(&self) -> &SubGenAttention {
         &self.sketch
+    }
+
+    /// Batched host attention into a caller buffer (`nq × dim`): one
+    /// pack into the persistent scratch buffer, then one batched sweep.
+    /// Allocation-free after warm-up at a stable packed-slot count.
+    pub fn attention_batch_into(&self, qs: &[f32], nq: usize, out: &mut [f32]) {
+        let mut scratch = self.scratch.borrow_mut();
+        let sc = &mut *scratch;
+        let buf = PackedCache::ensure_scratch(&mut sc.buf, self.cfg.dim, self.packed_slots());
+        self.pack(buf);
+        buf.attention_batch_into(qs, nq, &mut sc.scores, &mut sc.zacc, out);
     }
 }
 
@@ -96,23 +120,25 @@ impl CachePolicy for SubGenCache {
                 buf.push(window.key_at(i), window.value_at(i), 1.0, 1.0);
             }
         }
-        // 2. ℓ2 matrix-product samples: numerator only.
+        // 2. ℓ2 matrix-product samples: numerator only (rows stream
+        // straight out of the sketch's contiguous arenas).
         let mp = self.sketch.matrix_product();
         let mu = mp.mass();
         let s = mp.num_slots() as f64;
         for sample in mp.samples() {
             if sample.v_norm_sq > 0.0 {
                 let w = (mu / (s * sample.v_norm_sq)) as f32;
-                buf.push(&sample.k, &sample.v, w, 0.0);
+                buf.push(sample.k, sample.v, w, 0.0);
             }
         }
-        // 3. Cluster samples: normalizer only.
+        // 3. Cluster samples: normalizer only (zero value rows written
+        // in place — no temporary zero vector per slot).
         let nz = self.sketch.normalizer();
         let t = nz.t() as f32;
         for c in 0..nz.num_clusters() {
             let u = nz.cluster_count(c) as f32 / t;
             for key in nz.cluster_samples(c) {
-                buf.push(key, &vec![0.0; self.cfg.dim], 0.0, u);
+                buf.push_normalizer(key, u);
             }
         }
     }
@@ -126,6 +152,16 @@ impl CachePolicy for SubGenCache {
         let mp = self.sketch.matrix_product().num_slots();
         let nz = self.sketch.normalizer();
         window + mp + nz.num_clusters() * nz.t()
+    }
+
+    fn attention_batch(&self, qs: &[f32], nq: usize) -> Vec<f32> {
+        if nq == 0 {
+            return Vec::new();
+        }
+        assert_eq!(qs.len() % nq, 0, "qs must be nq × dim row-major");
+        let mut out = vec![0.0f32; qs.len()];
+        self.attention_batch_into(qs, nq, &mut out);
+        out
     }
 }
 
@@ -242,6 +278,35 @@ mod tests {
         let got = c.attention(q);
         let want = exact_attention(q, &keys, &values);
         assert!(rel_err_vec(&got, &want) < 1e-5);
+    }
+
+    /// The batched path (pack once + one sweep) must agree exactly with
+    /// the per-query `attention` (pack per query).
+    #[test]
+    fn attention_batch_matches_attention_loop() {
+        let dim = 8;
+        let n = 600;
+        let (keys, values, queries) = stream(n, 4, dim, 0.05, 61);
+        let cfg =
+            SubGenCacheConfig { dim, recent: 32, s: 64, t: 8, delta: 0.4, max_clusters: None };
+        let mut c = SubGenCache::new(cfg, 9);
+        for i in 0..n {
+            c.update(queries.row(i), keys.row(i), values.row(i));
+        }
+        let nq = 6;
+        let mut qs = Vec::with_capacity(nq * dim);
+        for b in 0..nq {
+            qs.extend_from_slice(queries.row(n - 1 - b));
+        }
+        let batched = c.attention_batch(&qs, nq);
+        assert_eq!(batched.len(), nq * dim);
+        for b in 0..nq {
+            let want = c.attention(&qs[b * dim..(b + 1) * dim]);
+            assert_eq!(&batched[b * dim..(b + 1) * dim], &want[..], "b={b}");
+        }
+        // Warmed scratch: a second batch call reuses the same buffer.
+        let again = c.attention_batch(&qs, nq);
+        assert_eq!(again, batched);
     }
 
     #[test]

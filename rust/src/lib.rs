@@ -17,8 +17,9 @@
 //!   everything needed to regenerate the paper's Table 1 and Figure 1
 //!   plus the Theorem-1 scaling studies;
 //! * **substrates** — [`rng`], [`tensor`], [`linalg`], [`cli`],
-//!   [`config`], [`io`], [`proptest_lite`]: the utility layer this
-//!   sandbox would normally pull from crates.io, built from scratch.
+//!   [`config`], [`io`], [`proptest_lite`], [`xla`]: the utility layer
+//!   this sandbox would normally pull from crates.io, built from
+//!   scratch (including the host-side PJRT stand-in).
 
 pub mod attention;
 pub mod bench;
@@ -40,6 +41,7 @@ pub mod subgen;
 pub mod tensor;
 pub mod tsne;
 pub mod workload;
+pub mod xla;
 
 /// Crate version string.
 pub fn version() -> &'static str {

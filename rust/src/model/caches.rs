@@ -14,6 +14,9 @@ pub struct SequenceCaches {
     d_head: usize,
     /// Reusable per-(l,h) packing buffer.
     scratch: PackedCache,
+    /// Kernel scratch for the batched host-attention probe.
+    score_scratch: Vec<f32>,
+    zacc_scratch: Vec<f64>,
     /// Tokens observed (positions fed so far).
     len: usize,
 }
@@ -60,6 +63,8 @@ impl SequenceCaches {
             n_heads: spec.n_heads,
             d_head: spec.d_head,
             scratch: PackedCache::new(spec.d_head, cap),
+            score_scratch: Vec::new(),
+            zacc_scratch: Vec::new(),
             len: 0,
         })
     }
@@ -161,6 +166,36 @@ impl SequenceCaches {
     /// clusterability harvest, not the serving path.
     pub fn attention(&self, l: usize, h: usize, q: &[f32]) -> Vec<f32> {
         self.policies[l * self.n_heads + h].attention(q)
+    }
+
+    /// Host-side attention for **every** (layer, head) at once: one
+    /// pack plus one scoring sweep per policy, all through the shared
+    /// scratch buffers — the engine's per-tick batched probe. `q_flat`
+    /// and `out` are `[L, H, dh]` flat (one query per head).
+    ///
+    /// Compared to calling [`SequenceCaches::attention`] per head, this
+    /// allocates nothing after warm-up (no fresh `PackedCache` or
+    /// output vector per head).
+    pub fn attention_all_into(&mut self, q_flat: &[f32], out: &mut [f32]) -> Result<()> {
+        let dh = self.d_head;
+        let expect = self.policies.len() * dh;
+        anyhow::ensure!(q_flat.len() == expect, "q_flat: {} != {expect}", q_flat.len());
+        anyhow::ensure!(out.len() == expect, "out: {} != {expect}", out.len());
+        for i in 0..self.policies.len() {
+            let policy = &self.policies[i];
+            // Rare upgrade: only the exact policy outgrows the largest
+            // cache variant the buffer was sized for.
+            self.scratch.ensure_capacity(policy.packed_slots());
+            policy.pack(&mut self.scratch);
+            self.scratch.attention_batch_into(
+                &q_flat[i * dh..(i + 1) * dh],
+                1,
+                &mut self.score_scratch,
+                &mut self.zacc_scratch,
+                &mut out[i * dh..(i + 1) * dh],
+            );
+        }
+        Ok(())
     }
 
     /// Tokens observed.
@@ -285,6 +320,33 @@ cache_variants = "64,32"
                             );
                         }
                     }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn attention_all_matches_per_head_attention() {
+        let spec = spec();
+        let lh_dh = spec.n_layers * spec.n_heads * spec.d_head;
+        for policy in crate::kvcache::POLICY_NAMES {
+            let mut rng = Pcg64::seed_from_u64(3);
+            let mut caches = SequenceCaches::new(&spec, policy, 16, 0.5, 1).unwrap();
+            for _ in 0..12 {
+                let q: Vec<f32> = (0..lh_dh).map(|_| rng.gaussian32(0.0, 0.6)).collect();
+                let k: Vec<f32> = (0..lh_dh).map(|_| rng.gaussian32(0.0, 0.6)).collect();
+                let v: Vec<f32> = (0..lh_dh).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+                caches.update(&q, &k, &v);
+            }
+            let q: Vec<f32> = (0..lh_dh).map(|_| rng.gaussian32(0.0, 0.5)).collect();
+            let mut out = vec![0.0f32; lh_dh];
+            caches.attention_all_into(&q, &mut out).unwrap();
+            let dh = spec.d_head;
+            for l in 0..spec.n_layers {
+                for h in 0..spec.n_heads {
+                    let i = l * spec.n_heads + h;
+                    let want = caches.attention(l, h, &q[i * dh..(i + 1) * dh]);
+                    assert_eq!(&out[i * dh..(i + 1) * dh], &want[..], "{policy} l={l} h={h}");
                 }
             }
         }

@@ -1,5 +1,6 @@
 //! Literal packing helpers: rust slices ⇄ XLA literals.
 
+use crate::xla;
 use anyhow::{Context, Result};
 
 /// Build an f32 literal of the given shape from a flat row-major slice.

@@ -1,16 +1,21 @@
 //! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them
 //! from the serving hot path.
 //!
-//! Wraps the `xla` crate (PJRT C API): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
-//! One [`Runtime`] owns the client and a registry of compiled
-//! executables keyed by their manifest name; python never runs here.
+//! Wraps the PJRT surface (`PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`)
+//! through [`crate::xla`] — the vendored host stand-in for the external
+//! `xla` crate, which keeps this crate building without the native
+//! library (compilation of artifacts fails loudly until the real crate
+//! is linked). One [`Runtime`] owns the client and a registry of
+//! compiled executables keyed by their manifest name; python never runs
+//! here.
 
 mod literal;
 
 pub use literal::{lit_f32, lit_i32, lit_i32_scalar, to_vec_f32};
 
 use crate::io::Manifest;
+use crate::xla;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::path::Path;

@@ -1,6 +1,12 @@
 //! Streaming sampling primitives.
 //!
-//! Two reservoirs drive SubGen:
+//! The sketches in [`crate::subgen`] inline these reservoir semantics
+//! over flat row arenas for the hot path; the generic implementations
+//! here remain the *reference* the arenas are equivalence-tested
+//! against (identical RNG streams, see `tests/property_subgen.rs`) and
+//! the reusable building blocks for new estimators.
+//!
+//! Two reservoirs define SubGen's sampling:
 //!
 //! * [`UniformReservoir`] — Vitter's algorithm R per slot, as used by
 //!   `UpdateSoftmaxNormalizer` (Algorithm 1, lines 15-18): each of `t`

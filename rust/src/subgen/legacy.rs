@@ -1,0 +1,138 @@
+//! Frozen pre-arena reference implementation of the SubGen sketches.
+//!
+//! This is the layout PR 1 replaced, rebuilt verbatim on the generic
+//! reservoirs of [`crate::sampling`]: one `L2Reservoir` of owned
+//! (k, v) sample vectors for the numerator, one
+//! `UniformReservoir<Vec<f32>>` per cluster for the partition — every
+//! captured sample its own heap allocation, every query allocating its
+//! score buffers. It exists for two reasons:
+//!
+//! 1. **Equivalence oracle** — `tests/property_subgen.rs` pins that
+//!    the flat-arena sketches reproduce this implementation's
+//!    `partition_estimate` and `query` for identical seeds (the RNG
+//!    draw order here is the contract the arenas must honor);
+//! 2. **Before/after baseline** — the benches measure the arena hot
+//!    path against this exact code.
+//!
+//! Consequently: **do not optimize or "fix" this module.** Behavioral
+//! changes here move the goalposts for both.
+
+use crate::clustering::{Assignment, OnlineThresholdClustering};
+use crate::rng::Pcg64;
+use crate::sampling::{L2Reservoir, UniformReservoir};
+use crate::subgen::SubGenConfig;
+use crate::tensor::{dot, norm2_sq};
+
+/// The pre-arena sketch pair behind one interleaved RNG stream
+/// (normalizer draws first, then matrix-product — the same order as
+/// `SubGenAttention::update`).
+pub struct LegacyReferenceSketch {
+    dim: usize,
+    clustering: OnlineThresholdClustering,
+    cluster_samples: Vec<UniformReservoir<Vec<f32>>>,
+    t: usize,
+    kv: L2Reservoir<(Vec<f32>, Vec<f32>, f64)>,
+    rng: Pcg64,
+}
+
+impl LegacyReferenceSketch {
+    /// Fresh reference sketch; seed it exactly like the
+    /// `SubGenAttention` it is compared against.
+    pub fn new(cfg: SubGenConfig, seed: u64) -> Self {
+        Self {
+            dim: cfg.dim,
+            clustering: OnlineThresholdClustering::new(cfg.dim, cfg.delta),
+            cluster_samples: Vec::new(),
+            t: cfg.t,
+            kv: L2Reservoir::new(cfg.s),
+            rng: Pcg64::seed_from_u64(seed),
+        }
+    }
+
+    /// Observe one (k, v) token.
+    pub fn update(&mut self, k: &[f32], v: &[f32]) {
+        match self.clustering.push(k) {
+            Assignment::Existing(id) => {
+                self.cluster_samples[id].push(&mut self.rng, k.to_vec())
+            }
+            Assignment::New(_) => {
+                self.cluster_samples.push(UniformReservoir::first(self.t, k.to_vec()))
+            }
+        }
+        let w = norm2_sq(v) as f64;
+        self.kv.push(&mut self.rng, (k.to_vec(), v.to_vec(), w), w);
+    }
+
+    /// The historical `estimate_partition` (f64 scores gathered into a
+    /// freshly allocated `(cluster, score)` list, shared shift).
+    pub fn partition_estimate(&self, q: &[f32]) -> f64 {
+        let m = self.clustering.num_clusters();
+        if m == 0 {
+            return 0.0;
+        }
+        let mut shift = f64::NEG_INFINITY;
+        let mut scored: Vec<(usize, f64)> = Vec::new();
+        for (c, r) in self.cluster_samples.iter().enumerate() {
+            for s in r.samples() {
+                let sc = dot(s, q) as f64;
+                if sc > shift {
+                    shift = sc;
+                }
+                scored.push((c, sc));
+            }
+        }
+        let mut tau = 0.0f64;
+        for (c, sc) in scored {
+            let n_c = self.clustering.count(c) as f64;
+            tau += (n_c / self.t as f64) * (sc - shift).exp();
+        }
+        tau * shift.exp()
+    }
+
+    /// The historical `query`: f32-shift numerator path over the
+    /// pointer-chased sample vectors, division by the
+    /// re-exponentiated partition.
+    pub fn query(&self, q: &[f32]) -> Vec<f32> {
+        let mu = self.kv.mass();
+        let s = self.kv.len() as f64;
+        let mut out64 = vec![0.0f64; self.dim];
+        if self.kv.samples().next().is_none() || mu <= 0.0 {
+            return vec![0.0; self.dim];
+        }
+        let mut max_sc = f32::NEG_INFINITY;
+        let scores: Vec<f32> = self
+            .kv
+            .samples()
+            .map(|(k, _, _)| {
+                let sc = dot(k, q);
+                if sc > max_sc {
+                    max_sc = sc;
+                }
+                sc
+            })
+            .collect();
+        for ((_, v, vns), &sc) in self.kv.samples().zip(scores.iter()) {
+            if *vns <= 0.0 {
+                continue;
+            }
+            let w = (mu / (s * vns)) * ((sc - max_sc) as f64).exp();
+            for (o, &vi) in out64.iter_mut().zip(v.iter()) {
+                *o += w * vi as f64;
+            }
+        }
+        let back = (max_sc as f64).exp();
+        let mut z: Vec<f32> = out64.iter().map(|&x| (x * back) as f32).collect();
+        let tau = self.partition_estimate(q);
+        if tau > 0.0 && tau.is_finite() {
+            for x in z.iter_mut() {
+                *x *= 1.0 / tau as f32;
+            }
+        }
+        z
+    }
+
+    /// Clusters discovered so far.
+    pub fn num_clusters(&self) -> usize {
+        self.clustering.num_clusters()
+    }
+}

@@ -1,128 +1,260 @@
 //! `UpdateMatrixProduct` — ℓ2-sampled estimator of exp(K·q)ᵀ·V.
+//!
+//! Storage is a flat arena: slot `i`'s key and value live in row `i` of
+//! two contiguous row-major [`Tensor`]s (plus a parallel `‖v‖²` array),
+//! so the query path is a pair of streaming sweeps over dense buffers
+//! instead of a pointer chase through per-sample `Vec<Vec<f32>>`
+//! allocations. Reservoir replacement recycles rows in place.
+//!
+//! The reservoir logic itself is inlined here (rather than going
+//! through the generic [`crate::sampling::L2Reservoir`]) but draws the
+//! *identical* RNG stream: per update, one coin per slot once the
+//! reservoir is filled, nothing before — so estimates are reproducible
+//! against the generic-reservoir reference for the same seed (pinned by
+//! `rust/tests/property_subgen.rs`).
 
 use crate::rng::Rng;
-use crate::sampling::L2Reservoir;
-use crate::tensor::{dot, norm2_sq};
+use crate::tensor::{
+    axpy_rows_f64, norm2_sq, scores_batch_into, scores_max_into, strided_max_into, Tensor,
+};
 
-/// One captured (key, value, ‖v‖²) sample.
-#[derive(Debug, Clone)]
-pub struct KvSample {
-    /// Key vector.
-    pub k: Vec<f32>,
-    /// Value vector.
-    pub v: Vec<f32>,
+/// Borrowed view of one captured (key, value, ‖v‖²) sample.
+#[derive(Debug, Clone, Copy)]
+pub struct KvSampleRef<'a> {
+    /// Key row.
+    pub k: &'a [f32],
+    /// Value row.
+    pub v: &'a [f32],
     /// Cached ‖v‖² (importance weight at capture time).
     pub v_norm_sq: f64,
 }
 
-/// `s` i.i.d. ℓ2-norm samples of the (k, v) stream with running mass μ.
+/// `s` i.i.d. ℓ2-norm samples of the (k, v) stream with running mass μ,
+/// stored in contiguous row-major arenas.
 #[derive(Debug, Clone)]
 pub struct MatrixProductSketch {
     dim: usize,
-    reservoir: L2Reservoir<KvSample>,
+    /// Slot keys: row `i` is slot `i` (shape s × dim).
+    keys: Tensor,
+    /// Slot values (shape s × dim).
+    values: Tensor,
+    /// Cached ‖v‖² per slot.
+    v_norm_sq: Vec<f64>,
+    /// Running Σ‖v‖² over the stream (the paper's μ).
+    mass: f64,
+    /// Occupancy is all-or-nothing: the first positive-mass update
+    /// claims every slot at once (replacement probability degenerates
+    /// to 1), so one flag replaces per-slot `Option`s.
+    filled: bool,
 }
 
 impl MatrixProductSketch {
     /// Empty sketch with `s` slots over `dim`-dimensional tokens.
     pub fn new(dim: usize, s: usize) -> Self {
         assert!(s > 0, "need at least one sample slot");
-        Self { dim, reservoir: L2Reservoir::new(s) }
+        Self {
+            dim,
+            keys: Tensor::zeros(s, dim),
+            values: Tensor::zeros(s, dim),
+            v_norm_sq: vec![0.0; s],
+            mass: 0.0,
+            filled: false,
+        }
     }
 
     /// Observe one (k, v) pair (Algorithm 1, lines 24–28; μ update in
-    /// line 6 is folded into the reservoir).
+    /// line 6 is folded in). Replacement probability per slot is
+    /// `‖v‖²/(μ + ‖v‖²)`; a replaced slot's rows are overwritten in
+    /// place (free-row recycling — the arena never grows).
     pub fn update<R: Rng>(&mut self, rng: &mut R, k: &[f32], v: &[f32]) {
         debug_assert_eq!(k.len(), self.dim);
         debug_assert_eq!(v.len(), self.dim);
         let w = norm2_sq(v) as f64;
-        let sample = KvSample { k: k.to_vec(), v: v.to_vec(), v_norm_sq: w };
-        self.reservoir.push(rng, sample, w);
+        let total = self.mass + w;
+        if total <= 0.0 {
+            // Zero-mass stream so far: leave slots empty.
+            return;
+        }
+        let s = self.v_norm_sq.len();
+        if !self.filled {
+            for i in 0..s {
+                self.keys.set_row(i, k);
+                self.values.set_row(i, v);
+                self.v_norm_sq[i] = w;
+            }
+            self.filled = true;
+        } else {
+            let p = w / total;
+            for i in 0..s {
+                if rng.coin(p) {
+                    self.keys.set_row(i, k);
+                    self.values.set_row(i, v);
+                    self.v_norm_sq[i] = w;
+                }
+            }
+        }
+        self.mass = total;
+    }
+
+    /// Core scaled estimator, allocation-free: writes `z·e^{-shift}`
+    /// into `out` (f64, `dim`-wide) and returns `shift`. The whole call
+    /// is two contiguous sweeps — a fused score+max pass over the key
+    /// arena, then a weighted accumulation pass over the value arena —
+    /// with `scores`/`weights` reused across calls (they stop
+    /// reallocating once warmed to `s` entries).
+    pub fn estimate_numerator_scaled_into(
+        &self,
+        q: &[f32],
+        scores: &mut Vec<f32>,
+        weights: &mut Vec<f64>,
+        out: &mut [f64],
+    ) -> f64 {
+        debug_assert_eq!(q.len(), self.dim);
+        debug_assert_eq!(out.len(), self.dim);
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        if !self.filled || self.mass <= 0.0 {
+            return 0.0;
+        }
+        let s = self.v_norm_sq.len();
+        scores.resize(s, 0.0);
+        weights.resize(s, 0.0);
+        let shift = scores_max_into(self.keys.as_slice(), self.dim, q, &mut scores[..s]) as f64;
+        let denom = s as f64;
+        for i in 0..s {
+            let vns = self.v_norm_sq[i];
+            weights[i] = if vns <= 0.0 {
+                0.0 // zero-norm values contribute nothing
+            } else {
+                (self.mass / (denom * vns)) * ((scores[i] as f64) - shift).exp()
+            };
+        }
+        axpy_rows_f64(self.values.as_slice(), self.dim, &weights[..s], out);
+        shift
+    }
+
+    /// Batched scaled estimator: one sweep over the key arena scores
+    /// every stored row against all `nq` queries while the row is hot,
+    /// then one sweep over the value arena accumulates every query's
+    /// numerator. Results are identical to `nq` independent
+    /// [`Self::estimate_numerator_scaled_into`] calls.
+    ///
+    /// `qs` is `nq × dim` row-major; `out` is `nq × dim` (f64);
+    /// `shifts` is `nq`-wide.
+    pub fn estimate_numerator_batch_scaled_into(
+        &self,
+        qs: &[f32],
+        nq: usize,
+        scores: &mut Vec<f32>,
+        maxes: &mut Vec<f32>,
+        out: &mut [f64],
+        shifts: &mut [f64],
+    ) {
+        debug_assert_eq!(qs.len(), nq * self.dim);
+        debug_assert_eq!(out.len(), nq * self.dim);
+        debug_assert_eq!(shifts.len(), nq);
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        for sh in shifts.iter_mut() {
+            *sh = 0.0;
+        }
+        if !self.filled || self.mass <= 0.0 || nq == 0 {
+            return;
+        }
+        let s = self.v_norm_sq.len();
+        scores.resize(s * nq, 0.0);
+        maxes.resize(nq, 0.0);
+        scores_batch_into(self.keys.as_slice(), self.dim, qs, nq, &mut scores[..s * nq]);
+        strided_max_into(&scores[..s * nq], nq, &mut maxes[..nq]);
+        for b in 0..nq {
+            shifts[b] = maxes[b] as f64;
+        }
+        let denom = s as f64;
+        let vals = self.values.as_slice();
+        for r in 0..s {
+            let vns = self.v_norm_sq[r];
+            if vns <= 0.0 {
+                continue;
+            }
+            let base_w = self.mass / (denom * vns);
+            let row = &vals[r * self.dim..(r + 1) * self.dim];
+            let srow = &scores[r * nq..(r + 1) * nq];
+            for b in 0..nq {
+                let w = base_w * ((srow[b] as f64) - shifts[b]).exp();
+                if w == 0.0 {
+                    continue;
+                }
+                let ob = &mut out[b * self.dim..(b + 1) * self.dim];
+                for (o, &v) in ob.iter_mut().zip(row) {
+                    *o += w * v as f64;
+                }
+            }
+        }
     }
 
     /// Estimator of the numerator (line 29):
-    /// `z = Σ_{(k,v)∈M} μ/(s·‖v‖²)·exp(⟨q,k⟩)·v`.
-    ///
-    /// Accumulates in f64 and rescales by exp(-max score) internally so
-    /// large ⟨q,k⟩ do not overflow; the scaling cancels in z/τ only if
-    /// the caller applies the same max — so here we *return the exact
-    /// unnormalized value* computed via the stable path.
+    /// `z = Σ_{(k,v)∈M} μ/(s·‖v‖²)·exp(⟨q,k⟩)·v`, computed through the
+    /// stable scaled path and re-exponentiated.
     pub fn estimate_numerator(&self, q: &[f32]) -> Vec<f32> {
-        let mu = self.reservoir.mass();
-        let s = self.reservoir.len() as f64;
-        let mut out64 = vec![0.0f64; self.dim];
-        if self.reservoir.is_empty() || mu <= 0.0 {
-            return vec![0.0; self.dim];
-        }
-        // Stability: factor out the max exponent, reapply at the end.
-        let mut max_sc = f32::NEG_INFINITY;
-        let scores: Vec<f32> = self
-            .reservoir
-            .samples()
-            .map(|smp| {
-                let sc = dot(&smp.k, q);
-                if sc > max_sc {
-                    max_sc = sc;
-                }
-                sc
-            })
-            .collect();
-        for (smp, &sc) in self.reservoir.samples().zip(scores.iter()) {
-            if smp.v_norm_sq <= 0.0 {
-                continue; // zero-norm values contribute nothing
-            }
-            let w = (mu / (s * smp.v_norm_sq)) * ((sc - max_sc) as f64).exp();
-            for (o, &vi) in out64.iter_mut().zip(smp.v.iter()) {
-                *o += w * vi as f64;
-            }
-        }
-        let back = (max_sc as f64).exp();
-        out64.iter().map(|&x| (x * back) as f32).collect()
+        let (scaled, shift) = self.estimate_numerator_scaled(q);
+        let back = shift.exp();
+        scaled.iter().map(|&x| (x * back) as f32).collect()
     }
 
-    /// Same estimator but in "log-scaled" form for stable division:
-    /// returns (vector `z·e^{-shift}`, `shift`) so callers can combine
-    /// with a log-space partition estimate without overflow.
+    /// Stable "log-scaled" form: returns (vector `z·e^{-shift}`,
+    /// `shift`) so callers can combine with a log-space partition
+    /// estimate without overflow. Allocating convenience wrapper over
+    /// [`Self::estimate_numerator_scaled_into`].
     pub fn estimate_numerator_scaled(&self, q: &[f32]) -> (Vec<f64>, f64) {
-        let mu = self.reservoir.mass();
-        let s = self.reservoir.len() as f64;
         let mut out = vec![0.0f64; self.dim];
-        if self.reservoir.is_empty() || mu <= 0.0 {
-            return (out, 0.0);
-        }
-        let scores: Vec<f64> =
-            self.reservoir.samples().map(|smp| dot(&smp.k, q) as f64).collect();
-        let shift = scores.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        for (smp, &sc) in self.reservoir.samples().zip(scores.iter()) {
-            if smp.v_norm_sq <= 0.0 {
-                continue;
-            }
-            let w = (mu / (s * smp.v_norm_sq)) * (sc - shift).exp();
-            for (o, &vi) in out.iter_mut().zip(smp.v.iter()) {
-                *o += w * vi as f64;
-            }
-        }
+        let mut scores = Vec::new();
+        let mut weights = Vec::new();
+        let shift = self.estimate_numerator_scaled_into(q, &mut scores, &mut weights, &mut out);
         (out, shift)
     }
 
     /// Running mass μ = Σ‖v_i‖².
     pub fn mass(&self) -> f64 {
-        self.reservoir.mass()
+        self.mass
     }
 
     /// Number of slots s.
     pub fn num_slots(&self) -> usize {
-        self.reservoir.len()
+        self.v_norm_sq.len()
     }
 
-    /// Iterate over captured samples.
-    pub fn samples(&self) -> impl Iterator<Item = &KvSample> {
-        self.reservoir.samples()
+    /// True once the reservoir has captured a positive-mass sample.
+    pub fn is_filled(&self) -> bool {
+        self.filled
+    }
+
+    /// The contiguous key arena (s × dim).
+    pub fn keys(&self) -> &Tensor {
+        &self.keys
+    }
+
+    /// The contiguous value arena (s × dim).
+    pub fn values(&self) -> &Tensor {
+        &self.values
+    }
+
+    /// Iterate over captured samples (empty until the first
+    /// positive-mass update).
+    pub fn samples(&self) -> impl Iterator<Item = KvSampleRef<'_>> + '_ {
+        let n = if self.filled { self.v_norm_sq.len() } else { 0 };
+        (0..n).map(move |i| KvSampleRef {
+            k: self.keys.row(i),
+            v: self.values.row(i),
+            v_norm_sq: self.v_norm_sq[i],
+        })
     }
 
     /// Bytes held by the sketch.
     pub fn memory_bytes(&self) -> usize {
         // s slots × (2 vectors of dim f32 + weight)
-        self.reservoir.len() * (2 * self.dim * std::mem::size_of::<f32>() + 8) + 16
+        self.v_norm_sq.len() * (2 * self.dim * std::mem::size_of::<f32>() + 8) + 16
     }
 }
 
@@ -130,7 +262,8 @@ impl MatrixProductSketch {
 mod tests {
     use super::*;
     use crate::rng::Pcg64;
-    use crate::tensor::Tensor;
+    use crate::sampling::L2Reservoir;
+    use crate::tensor::{dot, Tensor};
 
     fn exact_numerator(keys: &Tensor, values: &Tensor, q: &[f32]) -> Vec<f64> {
         let dim = values.cols();
@@ -235,6 +368,8 @@ mod tests {
         for _ in 0..10 {
             mp.update(&mut rng, &[1.0; 4], &[0.0; 4]);
         }
+        assert!(!mp.is_filled());
+        assert_eq!(mp.samples().count(), 0);
         assert_eq!(mp.estimate_numerator(&[1.0; 4]), vec![0.0; 4]);
     }
 
@@ -254,6 +389,73 @@ mod tests {
         for j in 0..dim {
             let back = (scaled[j] * shift.exp()) as f32;
             assert!((back - direct[j]).abs() <= 1e-4 * direct[j].abs().max(1.0));
+        }
+    }
+
+    /// The arena layout must draw the exact RNG stream of the generic
+    /// `L2Reservoir<(k, v)>` it replaced: same seed ⇒ identical slot
+    /// contents ⇒ identical estimates.
+    #[test]
+    fn arena_reservoir_matches_generic_reference() {
+        let dim = 6;
+        let s = 16;
+        let n = 300;
+        let mut stream_rng = Pcg64::seed_from_u64(77);
+        let keys = Tensor::randn(&mut stream_rng, n, dim, 0.4);
+        let values = Tensor::randn(&mut stream_rng, n, dim, 0.9);
+
+        let mut mp = MatrixProductSketch::new(dim, s);
+        let mut rng_a = Pcg64::seed_from_u64(9);
+        let mut reference: L2Reservoir<(Vec<f32>, Vec<f32>, f64)> = L2Reservoir::new(s);
+        let mut rng_b = Pcg64::seed_from_u64(9);
+        for i in 0..n {
+            mp.update(&mut rng_a, keys.row(i), values.row(i));
+            let w = norm2_sq(values.row(i)) as f64;
+            reference.push(
+                &mut rng_b,
+                (keys.row(i).to_vec(), values.row(i).to_vec(), w),
+                w,
+            );
+        }
+        assert!((mp.mass() - reference.mass()).abs() <= 1e-9 * reference.mass());
+        let ref_slots: Vec<&(Vec<f32>, Vec<f32>, f64)> = reference.samples().collect();
+        assert_eq!(ref_slots.len(), s);
+        for (slot, smp) in mp.samples().enumerate() {
+            assert_eq!(smp.k, &ref_slots[slot].0[..], "slot {slot} key");
+            assert_eq!(smp.v, &ref_slots[slot].1[..], "slot {slot} value");
+            assert_eq!(smp.v_norm_sq, ref_slots[slot].2, "slot {slot} weight");
+        }
+    }
+
+    /// Batched estimation is exactly the per-query loop.
+    #[test]
+    fn batch_matches_single_query_loop() {
+        let dim = 8;
+        let nq = 5;
+        let mut rng = Pcg64::seed_from_u64(21);
+        let mut mp = MatrixProductSketch::new(dim, 24);
+        let keys = Tensor::randn(&mut rng, 150, dim, 0.5);
+        let values = Tensor::randn(&mut rng, 150, dim, 1.0);
+        for i in 0..150 {
+            mp.update(&mut rng, keys.row(i), values.row(i));
+        }
+        let qs = Tensor::randn(&mut rng, nq, dim, 0.4);
+        let mut scores = Vec::new();
+        let mut maxes = Vec::new();
+        let mut out = vec![0.0f64; nq * dim];
+        let mut shifts = vec![0.0f64; nq];
+        mp.estimate_numerator_batch_scaled_into(
+            qs.as_slice(),
+            nq,
+            &mut scores,
+            &mut maxes,
+            &mut out,
+            &mut shifts,
+        );
+        for b in 0..nq {
+            let (want, want_shift) = mp.estimate_numerator_scaled(qs.row(b));
+            assert_eq!(shifts[b], want_shift, "b={b}");
+            assert_eq!(&out[b * dim..(b + 1) * dim], &want[..], "b={b}");
         }
     }
 }

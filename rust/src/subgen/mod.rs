@@ -16,14 +16,72 @@
 //! inside XLA via the packed-buffer kernel (see `kvcache::pack` and the
 //! L1 Pallas kernel).
 
+pub mod legacy;
 mod matrix_product;
 mod normalizer;
 
-pub use matrix_product::MatrixProductSketch;
+pub use legacy::LegacyReferenceSketch;
+pub use matrix_product::{KvSampleRef, MatrixProductSketch};
 pub use normalizer::SoftmaxNormalizerSketch;
 
 use crate::rng::Pcg64;
-use crate::tensor::scale;
+use std::cell::RefCell;
+
+/// Reusable buffers for the allocation-free query paths. One instance
+/// lives inside every [`SubGenAttention`]; after a warm-up call at a
+/// given batch width and sketch size, no query allocates.
+#[derive(Debug, Clone, Default)]
+struct QueryScratch {
+    /// Per-row scores (shared by numerator and partition passes).
+    scores: Vec<f32>,
+    /// Per-query score maxima (batched paths).
+    maxes: Vec<f32>,
+    /// Per-slot numerator weights (single-query path).
+    weights: Vec<f64>,
+    /// Scaled numerator accumulators (nq × dim).
+    acc: Vec<f64>,
+    /// Numerator shifts (nq).
+    shift_z: Vec<f64>,
+    /// Partition shifts (nq).
+    shift_tau: Vec<f64>,
+    /// Scaled partition values (nq).
+    taus: Vec<f64>,
+}
+
+impl QueryScratch {
+    /// Capacities of every internal buffer — stable across calls once
+    /// warmed up (the observable for the zero-allocation tests).
+    fn capacity_signature(&self) -> [usize; 7] {
+        [
+            self.scores.capacity(),
+            self.maxes.capacity(),
+            self.weights.capacity(),
+            self.acc.capacity(),
+            self.shift_z.capacity(),
+            self.shift_tau.capacity(),
+            self.taus.capacity(),
+        ]
+    }
+}
+
+/// Combine a scaled numerator (`z·e^{-shift_z}`) with a scaled
+/// partition (`τ·e^{-shift_tau}`) into `z/τ` without overflow: the two
+/// shifts cancel in log space. Falls back to the re-exponentiated raw
+/// numerator when τ is unusable, matching the historical `query`
+/// semantics on degenerate sketches.
+fn combine_scaled(z_scaled: &[f64], shift_z: f64, tau: f64, shift_tau: f64, out: &mut [f32]) {
+    if tau > 0.0 && tau.is_finite() {
+        let scale = (shift_z - shift_tau).exp() / tau;
+        for (o, &z) in out.iter_mut().zip(z_scaled) {
+            *o = (z * scale) as f32;
+        }
+    } else {
+        let back = shift_z.exp();
+        for (o, &z) in out.iter_mut().zip(z_scaled) {
+            *o = (z * back) as f32;
+        }
+    }
+}
 
 /// Configuration for the SubGen sketch.
 #[derive(Debug, Clone, Copy)]
@@ -60,6 +118,8 @@ pub struct SubGenAttention {
     normalizer: SoftmaxNormalizerSketch,
     rng: Pcg64,
     n: u64,
+    /// Query-path scratch (interior mutability keeps `query` &self).
+    scratch: RefCell<QueryScratch>,
 }
 
 impl SubGenAttention {
@@ -71,6 +131,7 @@ impl SubGenAttention {
             rng: Pcg64::seed_from_u64(seed),
             cfg,
             n: 0,
+            scratch: RefCell::new(QueryScratch::default()),
         }
     }
 
@@ -92,15 +153,91 @@ impl SubGenAttention {
     }
 
     /// `QueryStreamAttn` (lines 29–31): estimator z/τ of
-    /// softmax(K·q)ᵀ·V.
+    /// softmax(K·q)ᵀ·V. Allocating convenience wrapper over
+    /// [`Self::query_into`].
     pub fn query(&self, q: &[f32]) -> Vec<f32> {
-        debug_assert_eq!(q.len(), self.cfg.dim);
-        let mut z = self.matprod.estimate_numerator(q);
-        let tau = self.normalizer.estimate_partition(q);
-        if tau > 0.0 && tau.is_finite() {
-            scale(&mut z, 1.0 / tau as f32);
+        let mut out = vec![0.0f32; self.cfg.dim];
+        self.query_into(q, &mut out);
+        out
+    }
+
+    /// Allocation-free query: two streaming sweeps per sketch arena
+    /// (fused score+max, then weighted accumulation), combined in log
+    /// space so the division by τ never overflows. Zero heap
+    /// allocations per call once the internal scratch has warmed up.
+    pub fn query_into(&self, q: &[f32], out: &mut [f32]) {
+        let dim = self.cfg.dim;
+        debug_assert_eq!(q.len(), dim);
+        debug_assert_eq!(out.len(), dim);
+        let mut scratch = self.scratch.borrow_mut();
+        let sc = &mut *scratch;
+        sc.acc.resize(dim, 0.0);
+        let shift_z = self.matprod.estimate_numerator_scaled_into(
+            q,
+            &mut sc.scores,
+            &mut sc.weights,
+            &mut sc.acc[..dim],
+        );
+        let (tau, shift_tau) = self.normalizer.estimate_partition_scaled_into(q, &mut sc.scores);
+        combine_scaled(&sc.acc[..dim], shift_z, tau, shift_tau, out);
+    }
+
+    /// Batched query: evaluates the estimator for `nq = qs.len()/dim`
+    /// queries (`qs` row-major) with **one** sweep over each sketch
+    /// arena — every stored row is loaded once and scored against the
+    /// whole batch while hot, amortizing sketch memory traffic across
+    /// the batch. Results are identical to `nq` independent
+    /// [`Self::query_into`] calls. Zero heap allocations per call after
+    /// warm-up at a given batch width.
+    pub fn query_batch_into(&self, qs: &[f32], out: &mut [f32]) {
+        let dim = self.cfg.dim;
+        assert_eq!(qs.len() % dim, 0, "qs must be nq × dim row-major");
+        let nq = qs.len() / dim;
+        assert_eq!(out.len(), nq * dim, "out must be nq × dim");
+        if nq == 0 {
+            return;
         }
-        z
+        let mut scratch = self.scratch.borrow_mut();
+        let sc = &mut *scratch;
+        sc.acc.resize(nq * dim, 0.0);
+        sc.shift_z.resize(nq, 0.0);
+        sc.shift_tau.resize(nq, 0.0);
+        sc.taus.resize(nq, 0.0);
+        self.matprod.estimate_numerator_batch_scaled_into(
+            qs,
+            nq,
+            &mut sc.scores,
+            &mut sc.maxes,
+            &mut sc.acc[..nq * dim],
+            &mut sc.shift_z[..nq],
+        );
+        self.normalizer.estimate_partition_batch_scaled_into(
+            qs,
+            nq,
+            &mut sc.scores,
+            &mut sc.maxes,
+            &mut sc.taus[..nq],
+            &mut sc.shift_tau[..nq],
+        );
+        for b in 0..nq {
+            combine_scaled(
+                &sc.acc[b * dim..(b + 1) * dim],
+                sc.shift_z[b],
+                sc.taus[b],
+                sc.shift_tau[b],
+                &mut out[b * dim..(b + 1) * dim],
+            );
+        }
+    }
+
+    /// Batched query, allocating wrapper: one output row per query.
+    pub fn query_batch(&self, qs: &[f32]) -> Vec<Vec<f32>> {
+        let dim = self.cfg.dim;
+        assert_eq!(qs.len() % dim, 0, "qs must be nq × dim row-major");
+        let nq = qs.len() / dim;
+        let mut flat = vec![0.0f32; nq * dim];
+        self.query_batch_into(qs, &mut flat);
+        flat.chunks(dim).map(|c| c.to_vec()).collect()
     }
 
     /// Estimated partition function τ alone (for the (1±ε) experiments).
@@ -248,6 +385,63 @@ mod tests {
         let sg = SubGenAttention::new(cfg, 0);
         assert!(sg.is_empty());
         assert_eq!(sg.query(&[0.0; 4]), vec![0.0; 4]);
+        assert_eq!(sg.query_batch(&[0.0; 8]), vec![vec![0.0; 4]; 2]);
+    }
+
+    /// `query_batch` must be *exactly* the per-query loop: the batched
+    /// kernels reuse the same per-row dot reduction, so no tolerance is
+    /// needed.
+    #[test]
+    fn query_batch_equals_query_loop() {
+        let dim = 16;
+        let (keys, values) = clusterable_stream(1000, 6, dim, 0.05, 9);
+        let cfg = SubGenConfig { dim, delta: 0.5, t: 32, s: 64 };
+        let mut sg = SubGenAttention::new(cfg, 11);
+        for i in 0..keys.rows() {
+            sg.update(keys.row(i), values.row(i));
+        }
+        let mut rng = Pcg64::seed_from_u64(77);
+        let nq = 8;
+        let qs = Tensor::randn(&mut rng, nq, dim, 0.3);
+        let batched = sg.query_batch(qs.as_slice());
+        assert_eq!(batched.len(), nq);
+        for b in 0..nq {
+            let single = sg.query(qs.row(b));
+            assert_eq!(batched[b], single, "b={b}");
+        }
+    }
+
+    /// After one warm-up call, neither query path may grow any scratch
+    /// buffer — the observable proxy for "zero heap allocation per
+    /// query" (all buffers are reused, outputs are caller-provided).
+    #[test]
+    fn query_paths_allocate_only_during_warmup() {
+        let dim = 8;
+        let (keys, values) = clusterable_stream(600, 4, dim, 0.05, 5);
+        let cfg = SubGenConfig { dim, delta: 0.5, t: 16, s: 32 };
+        let mut sg = SubGenAttention::new(cfg, 3);
+        for i in 0..keys.rows() {
+            sg.update(keys.row(i), values.row(i));
+        }
+        let q: Vec<f32> = (0..dim).map(|i| 0.2 * (i as f32).sin()).collect();
+        let mut out = vec![0.0f32; dim];
+        sg.query_into(&q, &mut out); // warm-up
+        let sig = sg.scratch.borrow().capacity_signature();
+        for _ in 0..10 {
+            sg.query_into(&q, &mut out);
+            assert_eq!(sg.scratch.borrow().capacity_signature(), sig);
+        }
+        let nq = 8;
+        let mut rng = Pcg64::seed_from_u64(2);
+        let qs = Tensor::randn(&mut rng, nq, dim, 0.3);
+        let mut bout = vec![0.0f32; nq * dim];
+        sg.query_batch_into(qs.as_slice(), &mut bout); // warm-up at width nq
+        let sig_b = sg.scratch.borrow().capacity_signature();
+        for _ in 0..10 {
+            sg.query_batch_into(qs.as_slice(), &mut bout);
+            assert_eq!(sg.scratch.borrow().capacity_signature(), sig_b);
+        }
+        assert!(bout.iter().all(|x| x.is_finite()));
     }
 
     #[test]

@@ -1,18 +1,30 @@
 //! `UpdateSoftmaxNormalizer` — clustered estimator of the partition
 //! function Σ_i exp(⟨k_i, q⟩).
+//!
+//! The paper's 𝒟 = {(x_i, S_i, n_i)}: online clusters with per-cluster
+//! uniform key samples. Samples live in one flat row-major arena —
+//! cluster `i`'s `t` slots occupy rows `[i·t, (i+1)·t)` of a single
+//! [`Tensor`] — so `estimate_partition_scaled` is a two-pass streaming
+//! scan over one contiguous buffer. Slot replacement recycles rows in
+//! place; δ-doubling merges compact the arena.
+//!
+//! The per-slot reservoir logic is inlined (instead of one
+//! [`crate::sampling::UniformReservoir`] per cluster) but draws the
+//! identical RNG stream, so estimates reproduce the generic-reservoir
+//! reference for the same seed (pinned by
+//! `rust/tests/property_subgen.rs`).
 
 use crate::clustering::{Assignment, OnlineThresholdClustering};
 use crate::rng::Rng;
-use crate::sampling::UniformReservoir;
-use crate::tensor::dot;
+use crate::tensor::{scores_batch_into, scores_max_into, strided_max_into, Tensor};
 
-/// The paper's 𝒟 = {(x_i, S_i, n_i)}: online clusters with per-cluster
-/// uniform key samples.
+/// Clustered partition-function sketch over a flat sample arena.
 #[derive(Debug, Clone)]
 pub struct SoftmaxNormalizerSketch {
     clustering: OnlineThresholdClustering,
-    /// One reservoir of t key samples per cluster (S_i).
-    samples: Vec<UniformReservoir<Vec<f32>>>,
+    /// Flat sample arena: cluster `i`'s `t` key samples are rows
+    /// `[i·t, (i+1)·t)`.
+    samples: Tensor,
     t: usize,
 }
 
@@ -20,48 +32,81 @@ impl SoftmaxNormalizerSketch {
     /// Empty sketch.
     pub fn new(dim: usize, delta: f32, t: usize) -> Self {
         assert!(t > 0, "need at least one sample per cluster");
-        Self { clustering: OnlineThresholdClustering::new(dim, delta), samples: Vec::new(), t }
+        Self {
+            clustering: OnlineThresholdClustering::new(dim, delta),
+            samples: Tensor::zeros(0, dim),
+            t,
+        }
     }
 
     /// Observe one key (Algorithm 1, lines 11–22).
+    ///
+    /// Per-slot Vitter replacement: after the clustering has counted
+    /// this key, each of the cluster's `t` slots independently replaces
+    /// its row with probability `1/n_i` — i.i.d.-uniform slots over the
+    /// cluster population, exactly the generic reservoir's behavior.
     pub fn update<R: Rng>(&mut self, rng: &mut R, k: &[f32]) {
         match self.clustering.push(k) {
             Assignment::Existing(id) => {
-                self.samples[id].push(rng, k.to_vec());
+                let p = 1.0 / self.clustering.count(id) as f64;
+                let base = id * self.t;
+                for slot in 0..self.t {
+                    if rng.coin(p) {
+                        self.samples.set_row(base + slot, k);
+                    }
+                }
             }
             Assignment::New(_) => {
-                self.samples.push(UniformReservoir::first(self.t, k.to_vec()));
+                // New cluster: its t rows are appended at the arena tail
+                // (cluster ids are assigned densely, so the tail is
+                // exactly rows [id·t, (id+1)·t)).
+                for _ in 0..self.t {
+                    self.samples.push_row(k);
+                }
             }
         }
     }
 
     /// Enforce a cluster cap: while more than `cap` clusters exist,
-    /// double δ and merge (Charikar-style doubling). Sample reservoirs
-    /// of merged clusters are combined by population-weighted resampling,
-    /// which preserves the i.i.d.-uniform-over-population invariant.
+    /// double δ and merge (Charikar-style doubling). Sample blocks of
+    /// merged clusters are combined by population-weighted resampling —
+    /// each merged slot picks a source cluster ∝ its population, then a
+    /// uniform slot within it — which preserves the
+    /// i.i.d.-uniform-over-population invariant. The arena is compacted
+    /// to exactly `m'·t` rows afterwards.
     pub fn enforce_cluster_cap<R: Rng>(&mut self, rng: &mut R, cap: usize) {
         let cap = cap.max(1);
         while self.clustering.num_clusters() > cap {
+            // Populations before the merge weight the resampling.
+            let old_counts: Vec<u64> = self.clustering.counts().to_vec();
             let mapping = self.clustering.double_delta();
             let new_m = self.clustering.num_clusters();
-            // Group old reservoirs by their new cluster id.
+            // Group old clusters by their new cluster id.
             let mut groups: Vec<Vec<usize>> = vec![Vec::new(); new_m];
             for (old, &new) in mapping.iter().enumerate() {
                 groups[new].push(old);
             }
-            let old = std::mem::take(&mut self.samples);
-            self.samples = groups
-                .into_iter()
-                .map(|g| {
-                    if g.len() == 1 {
-                        old[g[0]].clone()
-                    } else {
-                        let parts: Vec<&UniformReservoir<Vec<f32>>> =
-                            g.iter().map(|&i| &old[i]).collect();
-                        UniformReservoir::merge(rng, &parts)
+            let dim = self.clustering.dim();
+            let old =
+                std::mem::replace(&mut self.samples, Tensor::with_row_capacity(new_m * self.t, dim));
+            let mut weights: Vec<f64> = Vec::new();
+            for g in &groups {
+                if g.len() == 1 {
+                    let base = g[0] * self.t;
+                    for slot in 0..self.t {
+                        self.samples.push_row(old.row(base + slot));
                     }
-                })
-                .collect();
+                } else {
+                    weights.clear();
+                    weights.extend(g.iter().map(|&i| old_counts[i] as f64));
+                    for _ in 0..self.t {
+                        let src = rng.categorical(&weights).expect("positive counts");
+                        let within = rng.index(self.t);
+                        self.samples.push_row(old.row(g[src] * self.t + within));
+                    }
+                }
+            }
+            debug_assert_eq!(self.samples.rows(), new_m * self.t);
         }
     }
 
@@ -78,30 +123,81 @@ impl SoftmaxNormalizerSketch {
         scaled * shift.exp()
     }
 
-    /// Stable form: returns (τ·e^{-shift}, shift).
+    /// Stable form: returns (τ·e^{-shift}, shift). Allocating wrapper
+    /// over [`Self::estimate_partition_scaled_into`].
     pub fn estimate_partition_scaled(&self, q: &[f32]) -> (f64, f64) {
+        let mut scores = Vec::new();
+        self.estimate_partition_scaled_into(q, &mut scores)
+    }
+
+    /// Core scaled estimator, allocation-free after warm-up: a fused
+    /// score+max sweep over the contiguous sample arena, then one pass
+    /// over the (L1-resident) score buffer — no per-query heap
+    /// allocation once `scores` has warmed to `m·t` entries.
+    pub fn estimate_partition_scaled_into(&self, q: &[f32], scores: &mut Vec<f32>) -> (f64, f64) {
         let m = self.clustering.num_clusters();
         if m == 0 {
             return (0.0, 0.0);
         }
-        // Gather all scores first to find the max exponent.
-        let mut scores: Vec<(usize, f64)> = Vec::new();
-        let mut shift = f64::NEG_INFINITY;
-        for i in 0..m {
-            for s in self.samples[i].samples() {
-                let sc = dot(s, q) as f64;
-                if sc > shift {
-                    shift = sc;
-                }
-                scores.push((i, sc));
+        let rows = m * self.t;
+        scores.resize(rows, 0.0);
+        let shift =
+            scores_max_into(self.samples.as_slice(), self.clustering.dim(), q, &mut scores[..rows])
+                as f64;
+        let mut tau = 0.0f64;
+        for c in 0..m {
+            let n_c = self.clustering.count(c) as f64 / self.t as f64;
+            for slot in 0..self.t {
+                tau += n_c * (((scores[c * self.t + slot]) as f64) - shift).exp();
             }
         }
-        let mut tau = 0.0f64;
-        for (i, sc) in scores {
-            let n_i = self.clustering.count(i) as f64;
-            tau += (n_i / self.t as f64) * (sc - shift).exp();
-        }
         (tau, shift)
+    }
+
+    /// Batched scaled estimator: one sweep over the sample arena scores
+    /// every row against all `nq` queries; per-query τ and shift land
+    /// in `taus`/`shifts`. Identical results to `nq` independent
+    /// [`Self::estimate_partition_scaled_into`] calls.
+    pub fn estimate_partition_batch_scaled_into(
+        &self,
+        qs: &[f32],
+        nq: usize,
+        scores: &mut Vec<f32>,
+        maxes: &mut Vec<f32>,
+        taus: &mut [f64],
+        shifts: &mut [f64],
+    ) {
+        debug_assert_eq!(taus.len(), nq);
+        debug_assert_eq!(shifts.len(), nq);
+        for x in taus.iter_mut() {
+            *x = 0.0;
+        }
+        for x in shifts.iter_mut() {
+            *x = 0.0;
+        }
+        let m = self.clustering.num_clusters();
+        if m == 0 || nq == 0 {
+            return;
+        }
+        let dim = self.clustering.dim();
+        debug_assert_eq!(qs.len(), nq * dim);
+        let rows = m * self.t;
+        scores.resize(rows * nq, 0.0);
+        maxes.resize(nq, 0.0);
+        scores_batch_into(self.samples.as_slice(), dim, qs, nq, &mut scores[..rows * nq]);
+        strided_max_into(&scores[..rows * nq], nq, &mut maxes[..nq]);
+        for b in 0..nq {
+            shifts[b] = maxes[b] as f64;
+        }
+        for c in 0..m {
+            let n_c = self.clustering.count(c) as f64 / self.t as f64;
+            for slot in 0..self.t {
+                let srow = &scores[(c * self.t + slot) * nq..(c * self.t + slot + 1) * nq];
+                for b in 0..nq {
+                    taus[b] += n_c * ((srow[b] as f64) - shifts[b]).exp();
+                }
+            }
+        }
     }
 
     /// Number of clusters m'.
@@ -114,9 +210,21 @@ impl SoftmaxNormalizerSketch {
         self.clustering.count(i)
     }
 
-    /// Sampled keys of cluster i (S_i, exactly t entries).
-    pub fn cluster_samples(&self, i: usize) -> &[Vec<f32>] {
-        self.samples[i].samples()
+    /// Sampled keys of cluster i (S_i, exactly t rows).
+    pub fn cluster_samples(&self, i: usize) -> impl Iterator<Item = &[f32]> + '_ {
+        let base = i * self.t;
+        (base..base + self.t).map(move |r| self.samples.row(r))
+    }
+
+    /// One sampled key of cluster i (slot j of t).
+    pub fn cluster_sample(&self, i: usize, j: usize) -> &[f32] {
+        debug_assert!(j < self.t);
+        self.samples.row(i * self.t + j)
+    }
+
+    /// The whole flat sample arena ((m·t) × dim).
+    pub fn samples_arena(&self) -> &Tensor {
+        &self.samples
     }
 
     /// Cluster representative x_i.
@@ -136,9 +244,8 @@ impl SoftmaxNormalizerSketch {
 
     /// Bytes held by the sketch (centers + counts + t samples/cluster).
     pub fn memory_bytes(&self) -> usize {
-        let dim = self.clustering.dim();
         self.clustering.memory_bytes()
-            + self.samples.len() * self.t * dim * std::mem::size_of::<f32>()
+            + self.samples.rows() * self.clustering.dim() * std::mem::size_of::<f32>()
     }
 
     /// Underlying clustering (read-only).
@@ -152,7 +259,8 @@ mod tests {
     use super::*;
     use crate::linalg::rel_err;
     use crate::rng::Pcg64;
-    use crate::tensor::Tensor;
+    use crate::sampling::UniformReservoir;
+    use crate::tensor::{dot, Tensor};
 
     fn blob_keys(n: usize, m: usize, dim: usize, sigma: f32, seed: u64) -> Tensor {
         let mut rng = Pcg64::seed_from_u64(seed);
@@ -218,7 +326,8 @@ mod tests {
         assert_eq!(sk.cluster_count(0), 30);
         assert_eq!(sk.cluster_count(1), 20);
         assert_eq!(sk.total(), 50);
-        assert_eq!(sk.cluster_samples(0).len(), 4);
+        assert_eq!(sk.cluster_samples(0).count(), 4);
+        assert_eq!(sk.samples_arena().rows(), 2 * 4);
     }
 
     #[test]
@@ -239,5 +348,149 @@ mod tests {
         let (scaled, shift) = sk.estimate_partition_scaled(&[30.0, 0.0, 0.0, 0.0]);
         assert!(scaled.is_finite() && scaled > 0.0);
         assert!((shift - 900.0).abs() < 1.0);
+    }
+
+    /// The flat arena must draw the exact RNG stream of the
+    /// one-`UniformReservoir`-per-cluster layout it replaced: same seed
+    /// ⇒ identical sample rows in every cluster.
+    #[test]
+    fn arena_matches_generic_reservoir_reference() {
+        let dim = 6;
+        let t = 5;
+        let keys = blob_keys(400, 7, dim, 0.05, 13);
+
+        let mut sk = SoftmaxNormalizerSketch::new(dim, 0.6, t);
+        let mut rng_a = Pcg64::seed_from_u64(31);
+
+        // Reference: generic reservoirs driven off an identical
+        // clustering.
+        let mut clustering = OnlineThresholdClustering::new(dim, 0.6);
+        let mut reservoirs: Vec<UniformReservoir<Vec<f32>>> = Vec::new();
+        let mut rng_b = Pcg64::seed_from_u64(31);
+
+        for i in 0..keys.rows() {
+            let k = keys.row(i);
+            sk.update(&mut rng_a, k);
+            match clustering.push(k) {
+                Assignment::Existing(id) => reservoirs[id].push(&mut rng_b, k.to_vec()),
+                Assignment::New(_) => reservoirs.push(UniformReservoir::first(t, k.to_vec())),
+            }
+        }
+        assert_eq!(sk.num_clusters(), reservoirs.len());
+        for c in 0..sk.num_clusters() {
+            for (j, row) in sk.cluster_samples(c).enumerate() {
+                assert_eq!(row, &reservoirs[c].samples()[j][..], "cluster {c} slot {j}");
+            }
+        }
+        // And therefore identical partition estimates.
+        let q: Vec<f32> = (0..dim).map(|i| 0.3 * (i as f32).cos()).collect();
+        let mut reference_tau = 0.0f64;
+        let mut shift = f64::NEG_INFINITY;
+        let mut scored: Vec<(usize, f64)> = Vec::new();
+        for (c, r) in reservoirs.iter().enumerate() {
+            for s in r.samples() {
+                let sc = dot(s, &q) as f64;
+                if sc > shift {
+                    shift = sc;
+                }
+                scored.push((c, sc));
+            }
+        }
+        for (c, sc) in scored {
+            reference_tau +=
+                (clustering.count(c) as f64 / t as f64) * (sc - shift).exp();
+        }
+        let (tau, got_shift) = sk.estimate_partition_scaled(&q);
+        assert_eq!(got_shift, shift);
+        assert!((tau - reference_tau).abs() <= 1e-12 * reference_tau.abs().max(1.0));
+    }
+
+    /// Batched estimation is exactly the per-query loop.
+    #[test]
+    fn batch_matches_single_query_loop() {
+        let dim = 8;
+        let nq = 4;
+        let keys = blob_keys(500, 6, dim, 0.05, 23);
+        let mut sk = SoftmaxNormalizerSketch::new(dim, 0.5, 12);
+        let mut rng = Pcg64::seed_from_u64(3);
+        for i in 0..keys.rows() {
+            sk.update(&mut rng, keys.row(i));
+        }
+        let qs = Tensor::randn(&mut rng, nq, dim, 0.4);
+        let mut scores = Vec::new();
+        let mut maxes = Vec::new();
+        let mut taus = vec![0.0f64; nq];
+        let mut shifts = vec![0.0f64; nq];
+        sk.estimate_partition_batch_scaled_into(
+            qs.as_slice(),
+            nq,
+            &mut scores,
+            &mut maxes,
+            &mut taus,
+            &mut shifts,
+        );
+        for b in 0..nq {
+            let (want_tau, want_shift) = sk.estimate_partition_scaled(qs.row(b));
+            assert_eq!(shifts[b], want_shift, "b={b}");
+            assert_eq!(taus[b], want_tau, "b={b}");
+        }
+    }
+
+    /// Satellite coverage: δ-doubling under a cap keeps exactly t rows
+    /// per surviving cluster, conserves population counts, and shrinks
+    /// `memory_bytes()` monotonically under repeated capping.
+    #[test]
+    fn cluster_cap_preserves_arena_invariants() {
+        let dim = 5;
+        let t = 6;
+        let keys = blob_keys(600, 24, dim, 0.02, 41);
+        let mut sk = SoftmaxNormalizerSketch::new(dim, 0.05, t);
+        let mut rng = Pcg64::seed_from_u64(8);
+        for i in 0..keys.rows() {
+            sk.update(&mut rng, keys.row(i));
+        }
+        let total = sk.total();
+        assert!(sk.num_clusters() > 8, "m={}", sk.num_clusters());
+
+        let mut last_mem = sk.memory_bytes();
+        for cap in [8usize, 4, 2, 1] {
+            sk.enforce_cluster_cap(&mut rng, cap);
+            let m = sk.num_clusters();
+            assert!(m <= cap, "cap {cap}: m={m}");
+            // Merged blocks keep exactly t rows per cluster.
+            assert_eq!(sk.samples_arena().rows(), m * t, "cap {cap}");
+            for c in 0..m {
+                assert_eq!(sk.cluster_samples(c).count(), t, "cap {cap} cluster {c}");
+            }
+            // Populations are conserved across merges.
+            let pop: u64 = (0..m).map(|c| sk.cluster_count(c)).sum();
+            assert_eq!(pop, total, "cap {cap}");
+            // Memory shrinks monotonically as clusters merge away.
+            let mem = sk.memory_bytes();
+            assert!(mem <= last_mem, "cap {cap}: {mem} > {last_mem}");
+            last_mem = mem;
+        }
+        // Estimates stay finite and positive after heavy merging.
+        let q = vec![0.1f32; dim];
+        let est = sk.estimate_partition(&q);
+        assert!(est.is_finite() && est > 0.0);
+    }
+
+    /// Repeated capping at the same cap is a no-op (no RNG drift).
+    #[test]
+    fn cap_is_idempotent_once_satisfied() {
+        let dim = 4;
+        let keys = blob_keys(200, 10, dim, 0.02, 51);
+        let mut sk = SoftmaxNormalizerSketch::new(dim, 0.05, 3);
+        let mut rng = Pcg64::seed_from_u64(6);
+        for i in 0..keys.rows() {
+            sk.update(&mut rng, keys.row(i));
+        }
+        sk.enforce_cluster_cap(&mut rng, 4);
+        let arena_before = sk.samples_arena().clone();
+        let delta_before = sk.delta();
+        sk.enforce_cluster_cap(&mut rng, 4);
+        assert_eq!(sk.samples_arena(), &arena_before);
+        assert_eq!(sk.delta(), delta_before);
     }
 }

@@ -22,6 +22,37 @@ impl Tensor {
         Self { data, rows, cols }
     }
 
+    /// Empty (0-row) tensor with backing storage preallocated for
+    /// `rows` rows — streams that `push_row` up to that many rows never
+    /// reallocate.
+    pub fn with_row_capacity(rows: usize, cols: usize) -> Self {
+        Self { data: Vec::with_capacity(rows * cols), rows: 0, cols }
+    }
+
+    /// Ensure capacity for `additional` more rows beyond the current
+    /// row count (single allocation; see [`Tensor::push_row`]).
+    pub fn reserve_rows(&mut self, additional: usize) {
+        self.data.reserve(additional * self.cols);
+    }
+
+    /// Rows currently representable without reallocation.
+    pub fn row_capacity(&self) -> usize {
+        if self.cols == 0 {
+            usize::MAX
+        } else {
+            self.data.capacity() / self.cols
+        }
+    }
+
+    /// Drop rows from the end, keeping `rows` (no-op when already
+    /// shorter). Capacity is retained for reuse.
+    pub fn truncate_rows(&mut self, rows: usize) {
+        if rows < self.rows {
+            self.data.truncate(rows * self.cols);
+            self.rows = rows;
+        }
+    }
+
     /// I.i.d. gaussian entries with the given std.
     pub fn randn<R: Rng>(rng: &mut R, rows: usize, cols: usize, std: f32) -> Self {
         let mut t = Self::zeros(rows, cols);
@@ -85,10 +116,26 @@ impl Tensor {
     }
 
     /// Append a row (grows the tensor by one row).
+    ///
+    /// Growth is explicitly amortized: when the backing buffer is full
+    /// it doubles (with a small floor), so streaming 100k-row builds in
+    /// the benches cost O(n) total copying instead of trusting the
+    /// allocator's growth policy at every push.
     pub fn push_row(&mut self, row: &[f32]) {
         assert_eq!(row.len(), self.cols, "row width mismatch");
+        let need = self.data.len() + self.cols;
+        if need > self.data.capacity() {
+            let target = need.max(self.data.capacity() * 2).max(8 * self.cols.max(1));
+            self.data.reserve_exact(target - self.data.len());
+        }
         self.data.extend_from_slice(row);
         self.rows += 1;
+    }
+
+    /// Overwrite row `i` from a slice.
+    #[inline]
+    pub fn set_row(&mut self, i: usize, row: &[f32]) {
+        self.row_mut(i).copy_from_slice(row);
     }
 
     /// Transposed copy.
@@ -165,6 +212,43 @@ mod tests {
         t.push_row(&[3.0, 4.0]);
         assert_eq!(t.rows(), 2);
         assert_eq!(t.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn push_row_growth_is_amortized() {
+        // Doubling growth: pushing n rows performs O(log n) allocations,
+        // observable as capacity jumps rather than per-push tight fits.
+        let mut t = Tensor::zeros(0, 4);
+        t.push_row(&[0.0; 4]);
+        assert!(t.row_capacity() >= 8, "floor capacity, got {}", t.row_capacity());
+        let mut grows = 0;
+        let mut last_cap = t.row_capacity();
+        for i in 0..10_000 {
+            t.push_row(&[i as f32; 4]);
+            if t.row_capacity() != last_cap {
+                grows += 1;
+                last_cap = t.row_capacity();
+            }
+        }
+        assert!(grows <= 14, "too many reallocations: {grows}");
+        assert_eq!(t.rows(), 10_001);
+    }
+
+    #[test]
+    fn row_capacity_prealloc_and_truncate() {
+        let mut t = Tensor::with_row_capacity(64, 3);
+        assert_eq!(t.rows(), 0);
+        assert!(t.row_capacity() >= 64);
+        for i in 0..64 {
+            t.push_row(&[i as f32; 3]);
+        }
+        t.set_row(5, &[9.0, 9.0, 9.0]);
+        assert_eq!(t.row(5), &[9.0, 9.0, 9.0]);
+        t.truncate_rows(10);
+        assert_eq!(t.rows(), 10);
+        assert!(t.row_capacity() >= 64, "truncate must keep capacity");
+        t.reserve_rows(128);
+        assert!(t.row_capacity() >= 138);
     }
 
     #[test]

@@ -1,0 +1,266 @@
+//! Blocked, SIMD-friendly kernels over flat row-major buffers.
+//!
+//! The SubGen query hot path is a handful of streaming sweeps over
+//! contiguous arenas: score every stored row against one (or a batch
+//! of) queries, reduce a max, and accumulate weighted rows. These
+//! kernels express exactly those sweeps, allocation-free, over raw
+//! `&[f32]` row-major data so the sketches, the packed cache and the
+//! oracle all share one code path.
+//!
+//! Per-row reductions are performed by [`super::dot`] /
+//! [`super::dist_sq`] (4-wide accumulator splits), so results are
+//! bit-identical to the scalar per-row code they replace — only the row
+//! loop is restructured (4-row unrolling for load reuse and ILP).
+
+use super::{dist_sq, dot};
+
+/// `out[r] = ⟨row_r, x⟩` for every row of `data`; 4-row-unrolled so the
+/// compiler can interleave the four dot reductions and reuse `x` loads.
+///
+/// `out.len()` defines the row count; `data` must hold exactly
+/// `out.len() * cols` elements.
+pub fn matvec_into(data: &[f32], cols: usize, x: &[f32], out: &mut [f32]) {
+    let rows = out.len();
+    debug_assert_eq!(data.len(), rows * cols, "matvec_into shape mismatch");
+    debug_assert_eq!(x.len(), cols, "matvec_into vector width");
+    let mut r = 0;
+    while r + 4 <= rows {
+        let base = r * cols;
+        out[r] = dot(&data[base..base + cols], x);
+        out[r + 1] = dot(&data[base + cols..base + 2 * cols], x);
+        out[r + 2] = dot(&data[base + 2 * cols..base + 3 * cols], x);
+        out[r + 3] = dot(&data[base + 3 * cols..base + 4 * cols], x);
+        r += 4;
+    }
+    while r < rows {
+        out[r] = dot(&data[r * cols..(r + 1) * cols], x);
+        r += 1;
+    }
+}
+
+/// Fused score+max pass: `out[r] = ⟨row_r, x⟩` and the maximum score is
+/// reduced in the same sweep (no second pass over the buffer). Returns
+/// `f32::NEG_INFINITY` when there are no rows.
+pub fn scores_max_into(data: &[f32], cols: usize, x: &[f32], out: &mut [f32]) -> f32 {
+    matvec_into(data, cols, x, out);
+    let mut m = f32::NEG_INFINITY;
+    for &sc in out.iter() {
+        if sc > m {
+            m = sc;
+        }
+    }
+    m
+}
+
+/// Batched scores: `out[r * nq + b] = ⟨row_r, q_b⟩` with `qs` holding
+/// `nq` queries row-major. One sweep over `data` serves every query —
+/// each stored row is loaded once and scored against the whole batch
+/// while hot, which is what makes `query_batch` amortize sketch memory
+/// traffic.
+pub fn scores_batch_into(data: &[f32], cols: usize, qs: &[f32], nq: usize, out: &mut [f32]) {
+    debug_assert_eq!(qs.len(), nq * cols, "scores_batch_into query shape");
+    debug_assert_eq!(out.len() * cols, data.len() * nq, "scores_batch_into out shape");
+    let rows = if cols == 0 { 0 } else { data.len() / cols };
+    for r in 0..rows {
+        let row = &data[r * cols..(r + 1) * cols];
+        let out_row = &mut out[r * nq..(r + 1) * nq];
+        let mut b = 0;
+        while b + 2 <= nq {
+            out_row[b] = dot(row, &qs[b * cols..(b + 1) * cols]);
+            out_row[b + 1] = dot(row, &qs[(b + 1) * cols..(b + 2) * cols]);
+            b += 2;
+        }
+        if b < nq {
+            out_row[b] = dot(row, &qs[b * cols..(b + 1) * cols]);
+        }
+    }
+}
+
+/// Column-strided max over a batched score buffer laid out as
+/// `scores[r * nq + b]`: writes `max_r scores[r][b]` into `out[b]`
+/// (`NEG_INFINITY` for empty row sets).
+pub fn strided_max_into(scores: &[f32], nq: usize, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), nq);
+    for m in out.iter_mut() {
+        *m = f32::NEG_INFINITY;
+    }
+    if nq == 0 {
+        return;
+    }
+    for chunk in scores.chunks_exact(nq) {
+        for (m, &sc) in out.iter_mut().zip(chunk) {
+            if sc > *m {
+                *m = sc;
+            }
+        }
+    }
+}
+
+/// Allocation-free weighted row accumulation in f64:
+/// `acc[j] += Σ_r w[r] · data[r][j]`. Rows with zero weight are
+/// skipped without touching their data.
+pub fn axpy_rows_f64(data: &[f32], cols: usize, w: &[f64], acc: &mut [f64]) {
+    debug_assert_eq!(data.len(), w.len() * cols, "axpy_rows_f64 shape mismatch");
+    debug_assert_eq!(acc.len(), cols, "axpy_rows_f64 accumulator width");
+    for (r, &wr) in w.iter().enumerate() {
+        if wr == 0.0 {
+            continue;
+        }
+        let row = &data[r * cols..(r + 1) * cols];
+        for (a, &v) in acc.iter_mut().zip(row) {
+            *a += wr * v as f64;
+        }
+    }
+}
+
+/// Nearest row of `data` to `point` by squared euclidean distance
+/// (first row wins ties, matching a sequential scan). Returns `None`
+/// when there are no rows. Distances are computed four rows at a time;
+/// the comparison order stays sequential so tie-breaking is identical
+/// to the scalar loop this replaces.
+pub fn nearest_row(data: &[f32], cols: usize, point: &[f32]) -> Option<(usize, f32)> {
+    debug_assert_eq!(point.len(), cols);
+    if cols == 0 || data.len() < cols {
+        return None;
+    }
+    let rows = data.len() / cols;
+    let mut best = 0usize;
+    let mut best_d2 = f32::INFINITY;
+    let mut r = 0;
+    while r + 4 <= rows {
+        let base = r * cols;
+        let d = [
+            dist_sq(&data[base..base + cols], point),
+            dist_sq(&data[base + cols..base + 2 * cols], point),
+            dist_sq(&data[base + 2 * cols..base + 3 * cols], point),
+            dist_sq(&data[base + 3 * cols..base + 4 * cols], point),
+        ];
+        for (i, &d2) in d.iter().enumerate() {
+            if d2 < best_d2 {
+                best_d2 = d2;
+                best = r + i;
+            }
+        }
+        r += 4;
+    }
+    while r < rows {
+        let d2 = dist_sq(&data[r * cols..(r + 1) * cols], point);
+        if d2 < best_d2 {
+            best_d2 = d2;
+            best = r;
+        }
+        r += 1;
+    }
+    Some((best, best_d2))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng};
+
+    fn random_flat(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.gaussian32(0.0, 1.0)).collect()
+    }
+
+    #[test]
+    fn matvec_matches_per_row_dot() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        for rows in [0usize, 1, 3, 4, 7, 16, 21] {
+            let cols = 9;
+            let data = random_flat(&mut rng, rows * cols);
+            let x = random_flat(&mut rng, cols);
+            let mut out = vec![0.0f32; rows];
+            matvec_into(&data, cols, &x, &mut out);
+            for r in 0..rows {
+                let want = dot(&data[r * cols..(r + 1) * cols], &x);
+                assert_eq!(out[r], want, "rows={rows} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn scores_max_is_fused_max() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        let (rows, cols) = (13, 5);
+        let data = random_flat(&mut rng, rows * cols);
+        let x = random_flat(&mut rng, cols);
+        let mut out = vec![0.0f32; rows];
+        let m = scores_max_into(&data, cols, &x, &mut out);
+        let want = out.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert_eq!(m, want);
+        let mut empty: [f32; 0] = [];
+        assert_eq!(scores_max_into(&[], cols, &x, &mut empty), f32::NEG_INFINITY);
+    }
+
+    #[test]
+    fn batch_scores_match_query_loop() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let (rows, cols, nq) = (11, 6, 5);
+        let data = random_flat(&mut rng, rows * cols);
+        let qs = random_flat(&mut rng, nq * cols);
+        let mut batched = vec![0.0f32; rows * nq];
+        scores_batch_into(&data, cols, &qs, nq, &mut batched);
+        for b in 0..nq {
+            let q = &qs[b * cols..(b + 1) * cols];
+            let mut single = vec![0.0f32; rows];
+            matvec_into(&data, cols, q, &mut single);
+            for r in 0..rows {
+                assert_eq!(batched[r * nq + b], single[r], "b={b} r={r}");
+            }
+        }
+        let mut maxes = vec![0.0f32; nq];
+        strided_max_into(&batched, nq, &mut maxes);
+        for b in 0..nq {
+            let want = (0..rows).map(|r| batched[r * nq + b]).fold(f32::NEG_INFINITY, f32::max);
+            assert_eq!(maxes[b], want, "b={b}");
+        }
+    }
+
+    #[test]
+    fn axpy_rows_matches_naive() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        let (rows, cols) = (9, 4);
+        let data = random_flat(&mut rng, rows * cols);
+        let w: Vec<f64> = (0..rows).map(|r| if r % 3 == 0 { 0.0 } else { r as f64 * 0.5 }).collect();
+        let mut acc = vec![1.0f64; cols];
+        axpy_rows_f64(&data, cols, &w, &mut acc);
+        for j in 0..cols {
+            let mut want = 1.0f64;
+            for r in 0..rows {
+                want += w[r] * data[r * cols + j] as f64;
+            }
+            assert!((acc[j] - want).abs() < 1e-12, "j={j}");
+        }
+    }
+
+    #[test]
+    fn nearest_row_matches_scan_with_ties() {
+        let cols = 3;
+        // Rows 1 and 3 are identical: the first must win.
+        let data = vec![
+            5.0, 5.0, 5.0, //
+            1.0, 0.0, 0.0, //
+            2.0, 2.0, 2.0, //
+            1.0, 0.0, 0.0,
+        ];
+        let (idx, d2) = nearest_row(&data, cols, &[1.0, 0.0, 0.0]).unwrap();
+        assert_eq!(idx, 1);
+        assert_eq!(d2, 0.0);
+        assert!(nearest_row(&[], cols, &[0.0; 3]).is_none());
+        let mut rng = Pcg64::seed_from_u64(5);
+        for rows in [1usize, 2, 5, 8, 13] {
+            let data = random_flat(&mut rng, rows * cols);
+            let p = random_flat(&mut rng, cols);
+            let got = nearest_row(&data, cols, &p).unwrap();
+            let mut best = (0usize, f32::INFINITY);
+            for r in 0..rows {
+                let d2 = dist_sq(&data[r * cols..(r + 1) * cols], &p);
+                if d2 < best.1 {
+                    best = (r, d2);
+                }
+            }
+            assert_eq!(got, best, "rows={rows}");
+        }
+    }
+}

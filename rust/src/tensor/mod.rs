@@ -10,9 +10,13 @@
 //! performance in the L3 hot loop.
 
 mod dense;
+mod kernels;
 mod ops;
 
 pub use dense::Tensor;
+pub use kernels::{
+    axpy_rows_f64, matvec_into, nearest_row, scores_batch_into, scores_max_into, strided_max_into,
+};
 pub use ops::{matmul, matvec};
 
 /// L2 norm of a vector.

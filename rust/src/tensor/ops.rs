@@ -16,10 +16,13 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     c
 }
 
-/// `y = A · x` for a vector `x`.
+/// `y = A · x` for a vector `x` (delegates to the blocked
+/// [`super::matvec_into`] kernel).
 pub fn matvec(a: &Tensor, x: &[f32]) -> Vec<f32> {
     assert_eq!(a.cols(), x.len(), "matvec inner dims");
-    (0..a.rows()).map(|i| dot(a.row(i), x)).collect()
+    let mut out = vec![0.0f32; a.rows()];
+    super::matvec_into(a.as_slice(), a.cols(), x, &mut out);
+    out
 }
 
 #[cfg(test)]

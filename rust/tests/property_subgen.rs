@@ -1,12 +1,13 @@
 //! Property-based tests (proptest_lite) on the algorithm invariants:
-//! Lemma 1/2 bookkeeping, packing equivalence, policy budget discipline.
+//! Lemma 1/2 bookkeeping, packing equivalence, policy budget discipline,
+//! and flat-arena ⇔ legacy-layout estimator equivalence.
 
 use subgen::attention::exact_attention;
 use subgen::clustering::OnlineThresholdClustering;
 use subgen::kvcache::{build_policy, bytes_per_slot, PackedCache, POLICY_NAMES};
 use subgen::proptest_lite::{pair, Gen, Runner};
 use subgen::rng::{Pcg64, Rng};
-use subgen::subgen::{SubGenAttention, SubGenConfig};
+use subgen::subgen::{LegacyReferenceSketch, SubGenAttention, SubGenConfig};
 use subgen::tensor::Tensor;
 
 const CASES: usize = 60;
@@ -115,6 +116,58 @@ fn l2_sampling_mass_is_exact_sum() {
             expect += subgen::tensor::norm2_sq(values.row(i)) as f64;
         }
         (sk.matrix_product().mass() - expect).abs() <= 1e-6 * expect.max(1.0)
+    });
+}
+
+/// Acceptance pin for the arena refactor: for identical seeds, the
+/// flat-arena estimators reproduce the previous layout's
+/// `partition_estimate` and `query` outputs (frozen in
+/// `subgen::legacy`) within 1e-5 relative error on arbitrary random
+/// streams.
+#[test]
+fn flat_arena_reproduces_legacy_layout_estimates() {
+    let mut runner = Runner::new(0xA2E7A, 40);
+    runner.run("arena ≡ legacy estimators", stream_gen(), |&(n, dim)| {
+        let cfg = SubGenConfig { dim, delta: 0.6, t: 4, s: 8 };
+        let seed = (n * 131 + dim) as u64;
+        let mut sk = SubGenAttention::new(cfg, seed);
+        let mut legacy = LegacyReferenceSketch::new(cfg, seed);
+        let (queries, keys, values) = random_stream(23 + n as u64, n, dim);
+        for i in 0..n {
+            sk.update(keys.row(i), values.row(i));
+            legacy.update(keys.row(i), values.row(i));
+        }
+        let q = queries.row(n - 1);
+        let tau_new = sk.partition_estimate(q);
+        let tau_old = legacy.partition_estimate(q);
+        if (tau_new - tau_old).abs() > 1e-5 * tau_old.abs().max(1e-12) {
+            return false;
+        }
+        let out_new = sk.query(q);
+        let out_old = legacy.query(q);
+        subgen::linalg::rel_err_vec(&out_new, &out_old) < 1e-5
+    });
+}
+
+/// The batched query path is the per-query loop, exactly, for every
+/// policy-relevant batch width.
+#[test]
+fn query_batch_is_pointwise_query() {
+    let mut runner = Runner::new(0xBA7C4, 30);
+    runner.run("batch ≡ loop", stream_gen(), |&(n, dim)| {
+        let cfg = SubGenConfig { dim, delta: 0.5, t: 4, s: 8 };
+        let mut sk = SubGenAttention::new(cfg, 3 + n as u64);
+        let (queries, keys, values) = random_stream(5 + n as u64, n, dim);
+        for i in 0..n {
+            sk.update(keys.row(i), values.row(i));
+        }
+        let nq = 1 + n % 7;
+        let mut qs = Vec::with_capacity(nq * dim);
+        for b in 0..nq {
+            qs.extend_from_slice(queries.row(b % n));
+        }
+        let batched = sk.query_batch(&qs);
+        (0..nq).all(|b| batched[b] == sk.query(&qs[b * dim..(b + 1) * dim]))
     });
 }
 
