@@ -13,6 +13,8 @@ use std::io::Write as _;
 use subgen::attention::exact_attention_into;
 use subgen::bench::{black_box, Bencher, Table};
 use subgen::linalg::loglog_slope;
+use subgen::model::{HostExecutor, ModelSpec, SequenceCaches};
+use subgen::rng::{fill_gaussian, Pcg64};
 use subgen::subgen::{LegacyReferenceSketch, SubGenAttention, SubGenConfig};
 use subgen::tensor::Tensor;
 use subgen::workload::{ClusterableStream, TokenStream};
@@ -168,9 +170,61 @@ fn main() -> std::io::Result<()> {
     ]);
     t3.print();
 
+    // ── Section 4: full decode loop through the host executor ──
+    // The end-to-end operating point: one real transformer decode step
+    // (projections + RoPE + packed-cache attention + MLP + logits) over
+    // caches pre-filled to n_ctx tokens, exact vs subgen.
+    let n_ctx = 4_096usize;
+    println!("\n== host decode step at n = {n_ctx}: exact vs subgen cache ==\n");
+    let spec = ModelSpec {
+        vocab: 16,
+        d_model: 32,
+        n_heads: 2,
+        n_layers: 2,
+        d_head: 16,
+        prefill_t: 64,
+        cache_variants: vec![n_ctx + 66, 1024, 320],
+        decode_batch: 0,
+        train_accuracy: -1.0,
+    };
+    let exec = HostExecutor::new(spec.clone(), 7).expect("demo spec");
+    let mut decode_ns = [0.0f64; 2];
+    let mut t4 = Table::new(&["policy", "µs / decode step", "cache slots (max head)"]);
+    for (pi, policy) in ["exact", "subgen"].iter().enumerate() {
+        let budget = if *policy == "exact" { usize::MAX / 4 } else { 192 };
+        let mut caches = SequenceCaches::new(&spec, policy, budget, 4.0, 3).expect("policy");
+        let lh_dh = spec.n_layers * spec.n_heads * spec.d_head;
+        let mut rng = Pcg64::seed_from_u64(17);
+        let mut q = vec![0.0f32; lh_dh];
+        let mut k = vec![0.0f32; lh_dh];
+        let mut v = vec![0.0f32; lh_dh];
+        for _ in 0..n_ctx {
+            fill_gaussian(&mut rng, &mut q, 0.3);
+            fill_gaussian(&mut rng, &mut k, 0.3);
+            fill_gaussian(&mut rng, &mut v, 1.0);
+            caches.update(&q, &k, &v);
+        }
+        let c = spec.pick_cache_variant(caches.max_slots() + 1);
+        let flat = caches.assemble(c).expect("assemble");
+        let r = bencher.run(&format!("host-decode/{policy}"), || {
+            black_box(exec.decode(3, n_ctx, &flat).expect("decode"));
+        });
+        decode_ns[pi] = r.mean_ns();
+        t4.row(&[
+            policy.to_string(),
+            format!("{:.1}", r.mean_ns() / 1e3),
+            caches.max_slots().to_string(),
+        ]);
+    }
+    t4.print();
+    println!(
+        "decode speedup subgen vs exact at n={n_ctx}: {:.1}x",
+        decode_ns[0] / decode_ns[1]
+    );
+
     // ── Machine-readable output for the perf trajectory ──
     let json = format!(
-        "{{\n  \"bench\": \"bench_query_latency\",\n  \"config\": {{\"n\": {n}, \"dim\": {dim}, \"m\": {m}, \"t\": {t_smp}, \"s\": {s_smp}, \"batch\": {batch}}},\n  \"tick_us\": {{\"legacy_per_query\": {legacy_us:.2}, \"flat_per_query\": {flat_us:.2}, \"flat_batched\": {batch_us:.2}}},\n  \"speedup_vs_legacy\": {{\"per_query\": {:.3}, \"batched\": {:.3}}},\n  \"speedup_batched_vs_per_query\": {:.3},\n  \"scaling\": {{\"n\": {:?}, \"subgen_query_ns\": {:?}, \"exact_query_ns\": {:?}, \"subgen_slope\": {:.3}, \"exact_slope\": {:.3}}}\n}}\n",
+        "{{\n  \"bench\": \"bench_query_latency\",\n  \"config\": {{\"n\": {n}, \"dim\": {dim}, \"m\": {m}, \"t\": {t_smp}, \"s\": {s_smp}, \"batch\": {batch}}},\n  \"tick_us\": {{\"legacy_per_query\": {legacy_us:.2}, \"flat_per_query\": {flat_us:.2}, \"flat_batched\": {batch_us:.2}}},\n  \"speedup_vs_legacy\": {{\"per_query\": {:.3}, \"batched\": {:.3}}},\n  \"speedup_batched_vs_per_query\": {:.3},\n  \"scaling\": {{\"n\": {:?}, \"subgen_query_ns\": {:?}, \"exact_query_ns\": {:?}, \"subgen_slope\": {:.3}, \"exact_slope\": {:.3}}},\n  \"host_decode_loop\": {{\"n_ctx\": {n_ctx}, \"exact_step_ns\": {:.0}, \"subgen_step_ns\": {:.0}, \"speedup\": {:.3}}}\n}}\n",
         legacy_us / flat_us,
         legacy_us / batch_us,
         flat_us / batch_us,
@@ -179,6 +233,9 @@ fn main() -> std::io::Result<()> {
         ex_cost.iter().map(|&x| x as u64).collect::<Vec<_>>(),
         loglog_slope(&ns, &sub_cost),
         loglog_slope(&ns, &ex_cost),
+        decode_ns[0],
+        decode_ns[1],
+        decode_ns[0] / decode_ns[1],
     );
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_query.json");
     let mut f = std::fs::File::create(path)?;

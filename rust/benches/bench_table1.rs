@@ -104,8 +104,7 @@ fn ablation_window_fraction() {
             use subgen::rng::Rng as _;
             for _ in 0..n {
                 let (qq, k, _) = stream.next_triplet();
-                let v: Vec<f32> =
-                    base.iter().map(|&b| b + vrng.gaussian32(0.0, 0.1)).collect();
+                let v: Vec<f32> = base.iter().map(|&b| b + vrng.gaussian32(0.0, 0.1)).collect();
                 policy.update(&qq, &k, &v);
                 keys.push_row(&k);
                 values.push_row(&v);

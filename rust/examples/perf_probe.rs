@@ -1,20 +1,47 @@
-//! L3 perf probe: per-step assemble_into cost for exact policy at large C.
+//! L3 perf probe: per-step assemble_into cost for exact policy at large
+//! C, plus one host-executor decode step — the two serving hot-path
+//! costs CI watches on every PR.
 fn main() {
-    use subgen::model::{ModelSpec, SequenceCaches};
+    use subgen::model::{HostExecutor, ModelSpec, SequenceCaches};
     let spec = ModelSpec {
-        vocab: 16, d_model: 64, n_heads: 4, n_layers: 2, d_head: 16,
-        prefill_t: 512, cache_variants: vec![640, 384, 256, 128],
-        decode_batch: 8, train_accuracy: -1.0,
+        vocab: 16,
+        d_model: 64,
+        n_heads: 4,
+        n_layers: 2,
+        d_head: 16,
+        prefill_t: 512,
+        cache_variants: vec![640, 384, 256, 128],
+        decode_batch: 8,
+        train_accuracy: -1.0,
     };
-    let mut caches = SequenceCaches::new(&spec, "exact", usize::MAX/4, 0.5, 1).unwrap();
-    let x = vec![0.1f32; 2*4*16];
-    for _ in 0..100 { caches.update(&x, &x, &x); }
+    let mut caches = SequenceCaches::new(&spec, "exact", usize::MAX / 4, 0.5, 1).unwrap();
+    let x = vec![0.1f32; 2 * 4 * 16];
+    for _ in 0..100 {
+        caches.update(&x, &x, &x);
+    }
     let mut flat = caches.assemble(640).unwrap();
     let t0 = std::time::Instant::now();
-    let iters = 500;
+    let iters = 500usize;
     for _ in 0..iters {
         caches.update(&x, &x, &x);
         caches.assemble_into(&mut flat).unwrap();
     }
-    println!("exact assemble_into: {:.1} µs/step", t0.elapsed().as_micros() as f64 / iters as f64);
+    println!(
+        "exact assemble_into: {:.1} µs/step",
+        t0.elapsed().as_micros() as f64 / iters as f64
+    );
+
+    // One decode step through the pure-rust transformer over the same
+    // packed buffers (cache state from the loop above).
+    let exec = HostExecutor::new(spec, 1).unwrap();
+    let t1 = std::time::Instant::now();
+    let iters = 200usize;
+    for j in 0..iters {
+        let step = exec.decode((j % 16) as i32, 600 + j, &flat).unwrap();
+        assert!(step.logits.iter().all(|v| v.is_finite()));
+    }
+    println!(
+        "host decode step   : {:.1} µs/step",
+        t1.elapsed().as_micros() as f64 / iters as f64
+    );
 }

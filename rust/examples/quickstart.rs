@@ -1,21 +1,32 @@
 //! Quickstart: the SubGen streaming-attention data structure on its own
-//! (no model, no artifacts) — Algorithm 1 against exact attention.
+//! (no model, no artifacts) — Algorithm 1 against exact attention —
+//! followed by a short end-to-end decode through the serving engine
+//! over the pure-rust host executor.
 //!
 //!     cargo run --release --example quickstart
+//!     cargo run --release --example quickstart -- --executor none   # sketch only
 //!
 //! Streams an (m, δ)-clusterable sequence of (q, k, v) tokens through
 //! [`subgen::subgen::SubGenAttention`], then compares the estimator's
 //! output, memory and the paper's error bound (Eq. 3) to the exact
-//! softmax attention kept alongside.
+//! softmax attention kept alongside. With `--executor host` (the
+//! default) it finishes by serving a few requests per cache policy
+//! through `Engine` + `HostExecutor` — a real transformer decode loop,
+//! still artifact-free.
 
 use subgen::attention::{error_bound_rhs, exact_attention};
 use subgen::bench::fmt_bytes;
+use subgen::cli::Args;
+use subgen::coordinator::{Engine, EngineConfig, HostExecutor, Request};
 use subgen::kvcache::bytes_per_slot;
 use subgen::subgen::{SubGenAttention, SubGenConfig};
 use subgen::tensor::Tensor;
 use subgen::workload::{ClusterableStream, TokenStream};
 
 fn main() -> anyhow::Result<()> {
+    let args = Args::from_env("SubGen quickstart: sketch accuracy + host-executor decode")
+        .describe("executor", Some("host"), "decode demo executor (host|none)");
+    args.exit_on_help();
     let dim = 32;
     let n = 32_768;
     let m = 12; // planted clusters
@@ -43,8 +54,7 @@ fn main() -> anyhow::Result<()> {
 
     let est = sketch.query(&last_q);
     let exact = exact_attention(&last_q, &keys, &values);
-    let err: f32 =
-        est.iter().zip(&exact).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+    let err: f32 = est.iter().zip(&exact).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
     let bound = error_bound_rhs(0.5, &last_q, &keys, &values);
 
     println!("\nclusters found : {} (planted {m})", sketch.num_clusters());
@@ -67,5 +77,38 @@ fn main() -> anyhow::Result<()> {
         "\npartition fn   : est {tau:.3e} vs exact {exact_tau:.3e} (rel {:.3}%)",
         100.0 * (tau - exact_tau).abs() / exact_tau
     );
+
+    match args.get_or("executor", "host").as_str() {
+        "host" => host_decode_demo()?,
+        "none" => {}
+        other => anyhow::bail!("unknown executor {other:?} (host|none)"),
+    }
+    Ok(())
+}
+
+/// A taste of the serving stack: the same estimator running inside a
+/// real (pure-rust, artifact-free) transformer decode loop, one request
+/// per cache policy.
+fn host_decode_demo() -> anyhow::Result<()> {
+    println!("\n== engine decode over the host executor (no artifacts) ==\n");
+    let exec = HostExecutor::small(42);
+    for policy in subgen::kvcache::POLICY_NAMES {
+        let mut engine = Engine::new(&exec, EngineConfig::default());
+        engine.submit(Request {
+            id: 0,
+            prompt: vec![1, 2, 3, 4, 5],
+            max_new: 8,
+            policy: policy.to_string(),
+            budget: 16,
+            delta: 0.5,
+        });
+        engine.run_to_completion()?;
+        let resp = engine.take_responses().pop().expect("one response");
+        println!(
+            "policy {policy:<8}: {} tokens, cache {}",
+            resp.tokens.len(),
+            fmt_bytes(resp.cache_bytes)
+        );
+    }
     Ok(())
 }

@@ -1,20 +1,26 @@
 //! Table 1 reproduction: line-retrieval accuracy under matched KV-cache
 //! budgets, across context lengths and compression policies.
 //!
-//!     make artifacts            # once: trains + lowers the model
 //!     cargo run --release --example serve_longeval [-- --questions 50]
+//!     make artifacts && cargo run --release --example serve_longeval -- --executor artifact
 //!
 //! Paper (LongEval, longchat-7B): n ∈ {5k, 7k, 9k}, cache reductions
 //! {35%, 42%, 50%}, policies Exact / Sink / H2O / SubGen. Scaled to this
 //! testbed (DESIGN.md §Substitutions): n ∈ {128, 256, 384} on the
 //! from-scratch retrieval model, same reduction schedule, same metric
 //! (exact-answer accuracy), cache bytes from real buffer accounting.
+//!
+//! `--executor host` (the default) runs the whole grid on the pure-rust
+//! [`HostExecutor`] — random weights, so accuracy is chance-level, but
+//! every cache policy serves a genuine decode loop with no artifacts.
+//! `--executor artifact` restores the trained PJRT path (requires
+//! `make artifacts` and the real `xla` crate).
 
 use anyhow::Result;
 use std::path::PathBuf;
 use subgen::bench::{fmt_bytes, Table};
 use subgen::cli::Args;
-use subgen::coordinator::{Engine, EngineConfig, Request};
+use subgen::coordinator::{Engine, EngineConfig, HostExecutor, Request, StepExecutor};
 use subgen::model::{Generator, ModelSpec};
 use subgen::rng::Pcg64;
 use subgen::runtime::Runtime;
@@ -28,23 +34,40 @@ const POLICIES: [&str; 4] = ["exact", "sink", "h2o", "subgen"];
 
 fn main() -> Result<()> {
     let args = Args::from_env("Table 1: retrieval accuracy under KV compression")
-        .describe("artifacts", Some("artifacts"), "artifacts directory")
+        .describe("executor", Some("host"), "decode backend (host|artifact)")
+        .describe("artifacts", Some("artifacts"), "artifacts directory (artifact executor)")
         .describe("questions", Some("50"), "questions per cell")
         .describe("delta", Some("4.0"), "subgen cluster threshold δ")
         .describe("seed", Some("0"), "rng seed");
     args.exit_on_help();
-    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let questions = args.usize_or("questions", 50);
     let delta = args.f32_or("delta", 4.0);
     let seed = args.u64_or("seed", 0);
 
-    let rt = Runtime::load(&artifacts, None)?;
-    let spec = ModelSpec::from_manifest(rt.manifest())?;
+    match args.get_or("executor", "host").as_str() {
+        "host" => {
+            let exec = HostExecutor::retrieval(seed ^ 0xBEEF);
+            println!("executor: host (pure-rust transformer, untrained weights)");
+            run_grid(&exec, questions, delta, seed)
+        }
+        "artifact" => {
+            let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+            let rt = Runtime::load(&artifacts, None)?;
+            let spec = ModelSpec::from_manifest(rt.manifest())?;
+            let generator = Generator::new(&rt, spec);
+            println!("executor: artifact (PJRT)");
+            run_grid(&generator, questions, delta, seed)
+        }
+        other => anyhow::bail!("unknown executor {other:?} (host|artifact)"),
+    }
+}
+
+fn run_grid<E: StepExecutor>(exec: &E, questions: usize, delta: f32, seed: u64) -> Result<()> {
+    let spec = exec.spec();
     println!(
         "model: {} layers, {} heads, d_head {}, trained answer-digit acc {:.3}\n",
         spec.n_layers, spec.n_heads, spec.d_head, spec.train_accuracy
     );
-    let generator = Generator::new(&rt, spec);
 
     let mut table = Table::new(&[
         "n", "policy", "budget/head", "cache bytes", "reduction", "accuracy",
@@ -57,8 +80,7 @@ fn main() -> Result<()> {
         let mut exact_bytes = 0usize;
         for &policy in &POLICIES {
             let b = if policy == "exact" { usize::MAX / 4 } else { budget };
-            let (acc, bytes) =
-                run_cell(&generator, n, questions, policy, b, delta, seed)?;
+            let (acc, bytes) = run_cell(exec, n, questions, policy, b, delta, seed)?;
             if policy == "exact" {
                 exact_bytes = bytes;
             }
@@ -79,14 +101,14 @@ fn main() -> Result<()> {
     }
     println!();
     table.print();
-    println!("\n(paper Table 1 shape: SubGen > H2O ≥ Sink at every length; exact is the ceiling)");
+    println!("\n(paper Table 1 shape: SubGen > H2O ≥ Sink per length; exact is the ceiling)");
     Ok(())
 }
 
 /// One (length, policy) cell: accuracy over `questions` + cache bytes of
 /// the last sequence.
-fn run_cell(
-    generator: &Generator,
+fn run_cell<E: StepExecutor>(
+    exec: &E,
     n: usize,
     questions: usize,
     policy: &str,
@@ -95,7 +117,7 @@ fn run_cell(
     seed: u64,
 ) -> Result<(f64, usize)> {
     let mut engine = Engine::new(
-        generator,
+        exec,
         EngineConfig { max_active: 4, prefills_per_tick: 2, ..Default::default() },
     );
     // Same question set across policies (same seed).

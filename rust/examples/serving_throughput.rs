@@ -8,12 +8,16 @@
 //! caches keep decode latency flat as contexts grow; compressed policies
 //! run on smaller cache-capacity executables, so the per-step buffer
 //! traffic scales with the *budget*, not the context.
+//!
+//! `--executor host` (the default) serves the load from the pure-rust
+//! [`subgen::model::HostExecutor`] — no PJRT artifacts required;
+//! `--executor artifact` restores the compiled-executable path.
 
 use anyhow::Result;
 use std::path::PathBuf;
 use subgen::bench::Table;
 use subgen::cli::Args;
-use subgen::coordinator::{EngineConfig, Request};
+use subgen::coordinator::{EngineConfig, HostExecutor, Request};
 use subgen::model::{Generator, ModelSpec};
 use subgen::rng::Pcg64;
 use subgen::runtime::Runtime;
@@ -22,7 +26,8 @@ use subgen::workload::{lines_for_seq_len, RetrievalSampler};
 
 fn main() -> Result<()> {
     let args = Args::from_env("serving throughput under Poisson load")
-        .describe("artifacts", Some("artifacts"), "artifacts directory")
+        .describe("executor", Some("host"), "decode backend (host|artifact)")
+        .describe("artifacts", Some("artifacts"), "artifacts directory (artifact executor)")
         .describe("requests", Some("24"), "requests per policy")
         .describe("rate", Some("4.0"), "mean arrival rate (req/s)")
         .describe("n", Some("384"), "prompt length (tokens)")
@@ -30,6 +35,11 @@ fn main() -> Result<()> {
         .describe("budget", Some("192"), "per-head budget for compressed policies")
         .describe("seed", Some("0"), "rng seed");
     args.exit_on_help();
+    let executor = args.get_or("executor", "host");
+    anyhow::ensure!(
+        executor == "host" || executor == "artifact",
+        "unknown executor {executor:?} (host|artifact)"
+    );
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     let requests = args.usize_or("requests", 24);
     let rate = args.f64_or("rate", 4.0);
@@ -38,12 +48,11 @@ fn main() -> Result<()> {
     let budget = args.usize_or("budget", 192);
     let seed = args.u64_or("seed", 0);
 
-    let mut table = Table::new(&[
-        "policy", "completed", "tok/s", "p50", "p90", "p99", "max",
-    ]);
+    println!("executor: {executor}");
+    let mut table = Table::new(&["policy", "completed", "tok/s", "p50", "p90", "p99", "max"]);
     for policy in ["exact", "sink", "h2o", "subgen"] {
         let report = run_policy(
-            &artifacts, policy, requests, rate, n, max_new, budget, seed,
+            &executor, &artifacts, policy, requests, rate, n, max_new, budget, seed,
         )?;
         table.row(&[
             policy.to_string(),
@@ -62,6 +71,7 @@ fn main() -> Result<()> {
 
 #[allow(clippy::too_many_arguments)]
 fn run_policy(
+    executor: &str,
     artifacts: &std::path::Path,
     policy: &str,
     requests: usize,
@@ -72,17 +82,20 @@ fn run_policy(
     seed: u64,
 ) -> Result<subgen::server::LoadGenReport> {
     let (handle, rx) = channel();
+    let executor = executor.to_string();
     let artifacts = artifacts.to_path_buf();
     let engine_thread = std::thread::spawn(move || -> Result<_> {
-        // PJRT types are not Send: build the runtime inside the thread.
-        let rt = Runtime::load(&artifacts, None)?;
-        let spec = ModelSpec::from_manifest(rt.manifest())?;
-        let generator = Generator::new(&rt, spec);
-        serve(
-            &generator,
-            EngineConfig { max_active: 4, prefills_per_tick: 1, ..Default::default() },
-            rx,
-        )
+        let cfg = EngineConfig { max_active: 4, prefills_per_tick: 1, ..Default::default() };
+        if executor == "host" {
+            let exec = HostExecutor::retrieval(seed ^ 0xBEEF);
+            serve(&exec, cfg, rx)
+        } else {
+            // PJRT types are not Send: build the runtime inside the thread.
+            let rt = Runtime::load(&artifacts, None)?;
+            let spec = ModelSpec::from_manifest(rt.manifest())?;
+            let generator = Generator::new(&rt, spec);
+            serve(&generator, cfg, rx)
+        }
     });
 
     let policy_owned = policy.to_string();

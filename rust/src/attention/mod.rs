@@ -150,8 +150,7 @@ mod tests {
         let mut rng = Pcg64::seed_from_u64(3);
         let keys = Tensor::randn(&mut rng, 20, 4, 0.5);
         let q = [0.3f32, -0.1, 0.2, 0.4];
-        let naive: f32 =
-            (0..20).map(|i| dot(keys.row(i), &q).exp()).sum::<f32>().ln();
+        let naive: f32 = (0..20).map(|i| dot(keys.row(i), &q).exp()).sum::<f32>().ln();
         assert!((exact_log_partition(&q, &keys) - naive).abs() < 1e-4);
     }
 

@@ -98,9 +98,9 @@ impl Args {
     pub fn get_parsed_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
         match self.get(key) {
             None => default,
-            Some(s) => s
-                .parse()
-                .unwrap_or_else(|_| panic!("--{key}: cannot parse {s:?} as {}", std::any::type_name::<T>())),
+            Some(s) => s.parse().unwrap_or_else(|_| {
+                panic!("--{key}: cannot parse {s:?} as {}", std::any::type_name::<T>())
+            }),
         }
     }
 

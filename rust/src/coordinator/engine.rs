@@ -2,6 +2,7 @@
 
 use super::{Request, Response, StepExecutor};
 use super::request::Timing;
+use crate::kvcache::attention_flat_into;
 use crate::model::{caches::FlatCaches, SequenceCaches};
 use crate::metrics::{Counter, Histogram};
 use anyhow::Result;
@@ -19,10 +20,10 @@ pub struct EngineConfig {
     /// Every N ticks, run one host-side sketch probe pass over every
     /// active sequence's caches (estimator observability). The probe
     /// evaluates each (layer, head) policy's packed estimator for the
-    /// step's query via `attention_all_into`: one pack + one scoring
-    /// sweep per policy through shared scratch, with zero per-query
-    /// heap allocation — unlike `L·H` independent `attention` calls,
-    /// which each allocate and pack a fresh buffer. (Each head owns a
+    /// step's query directly over the sequence's assembled flat buffers
+    /// (`FlatCaches::head_slices` + `attention_flat_into`) — the decode
+    /// path keeps those in sync every tick, so the probe does no
+    /// packing and no per-query heap allocation. (Each head owns a
     /// distinct sketch, so there is exactly one query per sketch per
     /// tick; multi-query batching over a single sketch is the
     /// `query_batch`/`attention_batch` API.) 0 disables the probe
@@ -84,6 +85,9 @@ pub struct Engine<'e, E: StepExecutor> {
     ticks: u64,
     /// Reusable probe output buffer.
     probe_out: Vec<f32>,
+    /// Probe kernel scratch (scores / f64 accumulator).
+    probe_scores: Vec<f32>,
+    probe_zacc: Vec<f64>,
     /// Public metrics.
     pub stats: EngineStats,
 }
@@ -99,6 +103,8 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             done: Vec::new(),
             ticks: 0,
             probe_out: Vec::new(),
+            probe_scores: Vec::new(),
+            probe_zacc: Vec::new(),
             stats: EngineStats::default(),
         }
     }
@@ -145,22 +151,41 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
     }
 
     /// One host-probe pass per tick: every active sequence's step
-    /// queries are evaluated through its caches' packed estimators via
-    /// `attention_all_into` — pack once + one scoring sweep per
-    /// policy through shared scratch, no per-query allocation — where
-    /// `max_active · L · H` independent `attention` evaluations would
-    /// each allocate and pack a fresh buffer.
+    /// queries are evaluated through the *already assembled* flat
+    /// buffers (`FlatCaches::head_slices` + `attention_flat_into`) —
+    /// zero packing and zero allocation after warm-up. The decode path
+    /// keeps `seq.flat` in sync each tick via `reassemble`, so probing
+    /// the flat buffers evaluates exactly the policies' current packed
+    /// estimators without re-packing `L · H` buffers per sequence.
     fn host_probe(&mut self) -> Result<()> {
         let t0 = std::time::Instant::now();
         let mut out = std::mem::take(&mut self.probe_out);
         let mut probed = false;
         let mut nonfinite = 0u64;
-        for seq in &mut self.active {
+        for seq in &self.active {
             if seq.last_q.is_empty() {
                 continue;
             }
+            let lh = seq.flat.num_heads();
+            anyhow::ensure!(lh > 0 && seq.last_q.len() % lh == 0, "probe query shape");
+            let dh = seq.last_q.len() / lh;
             out.resize(seq.last_q.len(), 0.0);
-            seq.caches.attention_all_into(&seq.last_q, &mut out)?;
+            for i in 0..lh {
+                let (kk, vv, ww, uu) = seq.flat.head_slices(i);
+                attention_flat_into(
+                    kk,
+                    vv,
+                    ww,
+                    uu,
+                    dh,
+                    &seq.last_q[i * dh..(i + 1) * dh],
+                    1,
+                    None,
+                    &mut self.probe_scores,
+                    &mut self.probe_zacc,
+                    &mut out[i * dh..(i + 1) * dh],
+                );
+            }
             probed = true;
             if !out.iter().all(|x| x.is_finite()) {
                 nonfinite += 1;
@@ -207,8 +232,7 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             }
             let vocab = spec.vocab;
             let last = req.prompt.len() - 1;
-            let next =
-                crate::tensor::argmax(&pre.logits[last * vocab..(last + 1) * vocab]) as i32;
+            let next = crate::tensor::argmax(&pre.logits[last * vocab..(last + 1) * vocab]) as i32;
             let c = spec.pick_cache_variant(caches.max_slots() + 1);
             let flat = caches.assemble(c)?;
             let pos = req.prompt.len();
@@ -259,13 +283,7 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             } else {
                 // Re-assemble caches for the next step (capacity upgrade
                 // only when the history outgrows the current buffer).
-                let needed = seq.caches.max_slots() + 1;
-                if needed + 1 > seq.flat.capacity {
-                    let c = self.exec.spec().pick_cache_variant(needed);
-                    seq.flat = seq.caches.assemble(c)?;
-                } else {
-                    seq.caches.assemble_into(&mut seq.flat)?;
-                }
+                seq.caches.reassemble(self.exec.spec(), &mut seq.flat)?;
                 still_active.push(seq);
             }
         }
@@ -375,6 +393,30 @@ mod tests {
             let rs = e.take_responses();
             assert_eq!(rs.len(), 1, "{policy}");
             assert_eq!(rs[0].tokens.len(), 6, "{policy}");
+        }
+    }
+
+    #[test]
+    fn policies_flow_through_engine_on_host_executor() {
+        // Same routing test as above, but over the real pure-rust
+        // transformer: every policy's packed buffers feed genuine
+        // attention on the decode path.
+        let exec = crate::model::HostExecutor::small(3);
+        for policy in crate::kvcache::POLICY_NAMES {
+            let mut e = Engine::new(&exec, EngineConfig::default());
+            e.submit(Request {
+                id: 1,
+                prompt: vec![1, 2, 3, 4],
+                max_new: 6,
+                policy: policy.into(),
+                budget: 16,
+                delta: 0.5,
+            });
+            e.run_to_completion().unwrap();
+            let rs = e.take_responses();
+            assert_eq!(rs.len(), 1, "{policy}");
+            assert_eq!(rs[0].tokens.len(), 6, "{policy}");
+            assert!(rs[0].cache_bytes > 0, "{policy}");
         }
     }
 

@@ -1,6 +1,17 @@
 //! The executor abstraction + a deterministic mock for scheduler tests.
+//!
+//! Three executors implement [`StepExecutor`]:
+//!
+//! * [`MockExecutor`] — hash-based fake for scheduler unit tests;
+//! * [`crate::model::HostExecutor`] — pure-rust deterministic small
+//!   transformer (no artifacts needed): real attention through the
+//!   packed cache policies;
+//! * [`crate::model::Generator`] — the PJRT-artifact path (requires
+//!   the real `xla` crate to be linked).
 
-use crate::model::{caches::FlatCaches, Generator, ModelSpec, PrefillOutput, StepOutput};
+use crate::model::{
+    caches::FlatCaches, Generator, HostExecutor, ModelSpec, PrefillOutput, StepOutput,
+};
 use crate::rng::SplitMix64;
 use anyhow::Result;
 
@@ -14,6 +25,26 @@ pub trait StepExecutor {
     fn decode(&self, token: i32, pos: usize, flat: &FlatCaches) -> Result<StepOutput>;
     /// Slice helper: one position's [L, H, dh] out of a prefill tensor.
     fn position_slice(&self, full: &[f32], pos: usize) -> Vec<f32>;
+}
+
+/// References delegate, so `Engine` can run over `&dyn StepExecutor`
+/// (the CLI picks its backend at runtime).
+impl<T: StepExecutor + ?Sized> StepExecutor for &T {
+    fn spec(&self) -> &ModelSpec {
+        (**self).spec()
+    }
+
+    fn prefill(&self, prompt: &[i32]) -> Result<PrefillOutput> {
+        (**self).prefill(prompt)
+    }
+
+    fn decode(&self, token: i32, pos: usize, flat: &FlatCaches) -> Result<StepOutput> {
+        (**self).decode(token, pos, flat)
+    }
+
+    fn position_slice(&self, full: &[f32], pos: usize) -> Vec<f32> {
+        (**self).position_slice(full, pos)
+    }
 }
 
 impl<'rt> StepExecutor for Generator<'rt> {
@@ -31,6 +62,24 @@ impl<'rt> StepExecutor for Generator<'rt> {
 
     fn position_slice(&self, full: &[f32], pos: usize) -> Vec<f32> {
         Generator::position_slice(self, full, pos)
+    }
+}
+
+impl StepExecutor for HostExecutor {
+    fn spec(&self) -> &ModelSpec {
+        HostExecutor::spec(self)
+    }
+
+    fn prefill(&self, prompt: &[i32]) -> Result<PrefillOutput> {
+        HostExecutor::prefill(self, prompt)
+    }
+
+    fn decode(&self, token: i32, pos: usize, flat: &FlatCaches) -> Result<StepOutput> {
+        HostExecutor::decode(self, token, pos, flat)
+    }
+
+    fn position_slice(&self, full: &[f32], pos: usize) -> Vec<f32> {
+        HostExecutor::position_slice(self, full, pos)
     }
 }
 
@@ -67,9 +116,8 @@ impl MockExecutor {
         let (l, h, dh) = (self.spec.n_layers, self.spec.n_heads, self.spec.d_head);
         (0..l * h * dh)
             .map(|i| {
-                let bits =
-                    SplitMix64::mix(salt ^ ((token as u64) << 32) ^ ((pos as u64) << 16) ^ i as u64);
-                ((bits % 1000) as f32 / 500.0) - 1.0
+                let x = salt ^ ((token as u64) << 32) ^ ((pos as u64) << 16) ^ i as u64;
+                ((SplitMix64::mix(x) % 1000) as f32 / 500.0) - 1.0
             })
             .collect()
     }

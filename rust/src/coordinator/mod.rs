@@ -17,3 +17,8 @@ mod request;
 pub use engine::{Engine, EngineConfig, EngineStats};
 pub use executor::{MockExecutor, StepExecutor};
 pub use request::{Request, Response};
+
+// The pure-rust transformer executor lives in `model` (it is a model);
+// re-exported here so serving code imports every executor from one
+// place, next to the trait they implement.
+pub use crate::model::HostExecutor;

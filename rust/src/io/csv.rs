@@ -26,7 +26,12 @@ impl CsvWriter {
 
     /// Write one row of string fields.
     pub fn write_row(&mut self, fields: &[String]) -> Result<()> {
-        anyhow::ensure!(fields.len() == self.cols, "expected {} fields, got {}", self.cols, fields.len());
+        anyhow::ensure!(
+            fields.len() == self.cols,
+            "expected {} fields, got {}",
+            self.cols,
+            fields.len()
+        );
         let mut first = true;
         for f in fields {
             if !first {

@@ -30,7 +30,7 @@ mod subgen_policy;
 
 pub use exact::ExactCache;
 pub use h2o::H2OCache;
-pub use packed::PackedCache;
+pub use packed::{attention_flat_into, PackedCache};
 pub use sink::SinkCache;
 pub use sliding::SlidingCache;
 pub use subgen_policy::{SubGenCache, SubGenCacheConfig};

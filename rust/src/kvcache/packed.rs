@@ -9,6 +9,97 @@ fn grown_capacity(slots: usize) -> usize {
     n + n / 2 + 8
 }
 
+/// The weighted-exponential estimator evaluated over *borrowed* flat
+/// buffers — the single implementation behind every host attention
+/// path. `keys`/`values` are `[n, dim]` row-major with per-slot weights
+/// `w` (value path) and `u` (normalizer path), `n = w.len()`; `qs`
+/// holds `nq` queries row-major; `extra` optionally appends one more
+/// (key, value) slot with `w = u = 1` — the decode step's own token,
+/// which lives in the executable's reserved slot rather than in the
+/// packed history. `scores` (`n × nq` f32) and `zacc` (`dim` f64) are
+/// caller scratch reused across calls; `out` must be `nq × dim`.
+///
+/// [`PackedCache::attention_batch_into`] delegates here with
+/// `extra = None`, so the owned-buffer and borrowed-buffer paths (the
+/// cache policies and the host executor's decode over [`FlatCaches`])
+/// compute bit-identical math.
+///
+/// [`FlatCaches`]: crate::model::FlatCaches
+pub fn attention_flat_into(
+    keys: &[f32],
+    values: &[f32],
+    w: &[f32],
+    u: &[f32],
+    dim: usize,
+    qs: &[f32],
+    nq: usize,
+    extra: Option<(&[f32], &[f32])>,
+    scores: &mut Vec<f32>,
+    zacc: &mut Vec<f64>,
+    out: &mut [f32],
+) {
+    let n = w.len();
+    debug_assert_eq!(keys.len(), n * dim, "keys must be n × dim");
+    debug_assert_eq!(values.len(), n * dim, "values must be n × dim");
+    debug_assert_eq!(u.len(), n, "w/u length mismatch");
+    assert_eq!(qs.len(), nq * dim, "qs must be nq × dim");
+    assert_eq!(out.len(), nq * dim, "out must be nq × dim");
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    if (n == 0 && extra.is_none()) || nq == 0 {
+        return;
+    }
+    scores.resize(n * nq, 0.0);
+    zacc.resize(dim, 0.0);
+    scores_batch_into(keys, dim, qs, nq, &mut scores[..n * nq]);
+    for b in 0..nq {
+        let q = &qs[b * dim..(b + 1) * dim];
+        let extra_score = extra.map(|(k_new, _)| dot(k_new, q));
+        // Masked max over slots that matter (w or u positive), with the
+        // extra slot (unit weights) always participating.
+        let mut shift = extra_score.unwrap_or(f32::NEG_INFINITY);
+        for i in 0..n {
+            let sc = scores[i * nq + b];
+            if (w[i] > 0.0 || u[i] > 0.0) && sc > shift {
+                shift = sc;
+            }
+        }
+        if !shift.is_finite() {
+            continue;
+        }
+        for z in zacc.iter_mut() {
+            *z = 0.0;
+        }
+        let mut tau = 0.0f64;
+        for i in 0..n {
+            let e = ((scores[i * nq + b] - shift) as f64).exp();
+            if w[i] > 0.0 {
+                let we = w[i] as f64 * e;
+                for (zj, &vj) in zacc.iter_mut().zip(&values[i * dim..(i + 1) * dim]) {
+                    *zj += we * vj as f64;
+                }
+            }
+            if u[i] > 0.0 {
+                tau += u[i] as f64 * e;
+            }
+        }
+        if let (Some(sc), Some((_, v_new))) = (extra_score, extra) {
+            let e = ((sc - shift) as f64).exp();
+            for (zj, &vj) in zacc.iter_mut().zip(v_new) {
+                *zj += e * vj as f64;
+            }
+            tau += e;
+        }
+        if tau > 0.0 {
+            let ob = &mut out[b * dim..(b + 1) * dim];
+            for (o, &zj) in ob.iter_mut().zip(zacc.iter()) {
+                *o = (zj / tau) as f32;
+            }
+        }
+    }
+}
+
 /// C-slot buffer: row-major K and V `[C, d]`, per-slot weights `w`
 /// (value path) and `u` (normalizer path). Unused slots carry zero
 /// weights so the kernel can always run at full capacity.
@@ -184,7 +275,8 @@ impl PackedCache {
     /// Batched estimator evaluation into caller-provided buffers.
     /// `scores` (f32, `used × nq`) and `zacc` (f64, `dim`) are scratch
     /// reused across calls — no allocation once warmed; `out` must be
-    /// `nq × dim`.
+    /// `nq × dim`. Delegates to [`attention_flat_into`] over the used
+    /// prefix of the owned buffers.
     pub fn attention_batch_into(
         &self,
         qs: &[f32],
@@ -193,54 +285,19 @@ impl PackedCache {
         zacc: &mut Vec<f64>,
         out: &mut [f32],
     ) {
-        assert_eq!(qs.len(), nq * self.dim, "qs must be nq × dim");
-        assert_eq!(out.len(), nq * self.dim, "out must be nq × dim");
-        for o in out.iter_mut() {
-            *o = 0.0;
-        }
-        if self.used == 0 || nq == 0 {
-            return;
-        }
-        let n = self.used;
-        scores.resize(n * nq, 0.0);
-        zacc.resize(self.dim, 0.0);
-        scores_batch_into(&self.keys[..n * self.dim], self.dim, qs, nq, &mut scores[..n * nq]);
-        for b in 0..nq {
-            // Masked max over slots that matter (w or u positive),
-            // mirroring `attention` exactly.
-            let mut shift = f32::NEG_INFINITY;
-            for i in 0..n {
-                let sc = scores[i * nq + b];
-                if (self.w[i] > 0.0 || self.u[i] > 0.0) && sc > shift {
-                    shift = sc;
-                }
-            }
-            if !shift.is_finite() {
-                continue;
-            }
-            for z in zacc.iter_mut() {
-                *z = 0.0;
-            }
-            let mut tau = 0.0f64;
-            for i in 0..n {
-                let e = ((scores[i * nq + b] - shift) as f64).exp();
-                if self.w[i] > 0.0 {
-                    let we = self.w[i] as f64 * e;
-                    for (zj, &vj) in zacc.iter_mut().zip(self.value(i)) {
-                        *zj += we * vj as f64;
-                    }
-                }
-                if self.u[i] > 0.0 {
-                    tau += self.u[i] as f64 * e;
-                }
-            }
-            if tau > 0.0 {
-                let ob = &mut out[b * self.dim..(b + 1) * self.dim];
-                for (o, &zj) in ob.iter_mut().zip(zacc.iter()) {
-                    *o = (zj / tau) as f32;
-                }
-            }
-        }
+        attention_flat_into(
+            &self.keys[..self.used * self.dim],
+            &self.values[..self.used * self.dim],
+            &self.w[..self.used],
+            &self.u[..self.used],
+            self.dim,
+            qs,
+            nq,
+            None,
+            scores,
+            zacc,
+            out,
+        );
     }
 
     /// Log-space normalizer estimate over the buffer: log Σ u_i·e^{⟨q,k_i⟩}.
@@ -345,6 +402,67 @@ mod tests {
             let want = buf.attention(qs.row(b));
             assert_eq!(&got[b * dim..(b + 1) * dim], &want[..], "b={b}");
         }
+    }
+
+    #[test]
+    fn extra_slot_equals_pushed_slot() {
+        // The decode path's reserved new-token slot (extra) must be
+        // bit-identical to physically pushing that slot with w = u = 1.
+        let dim = 5;
+        let n = 10;
+        let mut rng = Pcg64::seed_from_u64(21);
+        let keys = Tensor::randn(&mut rng, n + 1, dim, 0.5);
+        let values = Tensor::randn(&mut rng, n + 1, dim, 1.0);
+        let mut with = PackedCache::new(dim, n + 1);
+        let mut without = PackedCache::new(dim, n);
+        for i in 0..n {
+            let (w, u) = if i % 3 == 0 { (0.6, 0.0) } else { (1.0, 1.0) };
+            with.push(keys.row(i), values.row(i), w, u);
+            without.push(keys.row(i), values.row(i), w, u);
+        }
+        with.push(keys.row(n), values.row(n), 1.0, 1.0);
+        let q: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.3).sin()).collect();
+        let want = with.attention(&q);
+        let mut out = vec![0.0f32; dim];
+        let (mut scores, mut zacc) = (Vec::new(), Vec::new());
+        attention_flat_into(
+            &without.keys_buffer()[..n * dim],
+            &without.values_buffer()[..n * dim],
+            &without.w_buffer()[..n],
+            &without.u_buffer()[..n],
+            dim,
+            &q,
+            1,
+            Some((keys.row(n), values.row(n))),
+            &mut scores,
+            &mut zacc,
+            &mut out,
+        );
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn extra_slot_over_empty_history_is_identity() {
+        // Softmax over a single token returns that token's value.
+        let dim = 3;
+        let k_new = [0.4f32, -0.2, 0.1];
+        let v_new = [2.0f32, -1.0, 0.5];
+        let mut out = vec![0.0f32; dim];
+        let (mut scores, mut zacc) = (Vec::new(), Vec::new());
+        attention_flat_into(
+            &[],
+            &[],
+            &[],
+            &[],
+            dim,
+            &[0.1, 0.2, 0.3],
+            1,
+            Some((&k_new, &v_new)),
+            &mut scores,
+            &mut zacc,
+            &mut out,
+        );
+        assert_eq!(out, v_new.to_vec());
     }
 
     #[test]

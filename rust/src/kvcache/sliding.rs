@@ -49,7 +49,11 @@ impl SlidingCache {
         let r = self.retained();
         debug_assert!(i < r);
         // Oldest retained token's ring position.
-        let start = if (self.n as usize) <= self.window { 0 } else { self.n as usize % self.window };
+        let start = if (self.n as usize) <= self.window {
+            0
+        } else {
+            self.n as usize % self.window
+        };
         (start + i) % self.window
     }
 }

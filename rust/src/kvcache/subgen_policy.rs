@@ -53,11 +53,15 @@ pub struct SubGenCache {
 impl SubGenCache {
     /// Build with explicit parameters; `seed` drives all sampling.
     pub fn new(cfg: SubGenCacheConfig, seed: u64) -> Self {
-        let sketch_cfg =
-            SubGenConfig { dim: cfg.dim, delta: cfg.delta.max(1e-9), t: cfg.t.max(1), s: cfg.s.max(1) };
+        let sketch_cfg = SubGenConfig {
+            dim: cfg.dim,
+            delta: cfg.delta.max(1e-9),
+            t: cfg.t.max(1),
+            s: cfg.s.max(1),
+        };
         Self {
             cfg,
-            recent: if cfg.recent > 0 { Some(SlidingCache::new(cfg.dim, cfg.recent)) } else { None },
+            recent: (cfg.recent > 0).then(|| SlidingCache::new(cfg.dim, cfg.recent)),
             sketch: SubGenAttention::new(sketch_cfg, seed),
             n: 0,
             scratch: RefCell::new(BatchScratch::default()),
@@ -206,8 +210,7 @@ mod tests {
         let q = queries.row(n - 1);
         let got = c.attention(q);
         let want = exact_attention(q, &keys, &values);
-        let err: f32 =
-            got.iter().zip(&want).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+        let err: f32 = got.iter().zip(&want).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
         let rhs = crate::attention::error_bound_rhs(0.5, q, &keys, &values);
         assert!(err <= rhs, "err={err} rhs={rhs}");
         assert!(c.num_clusters() <= 12, "m={}", c.num_clusters());
@@ -267,8 +270,7 @@ mod tests {
     fn window_only_prefix_is_exact() {
         let dim = 8;
         let (keys, values, queries) = stream(40, 4, dim, 0.1, 32);
-        let cfg =
-            SubGenCacheConfig { dim, recent: 64, s: 8, t: 4, delta: 0.5, max_clusters: None };
+        let cfg = SubGenCacheConfig { dim, recent: 64, s: 8, t: 4, delta: 0.5, max_clusters: None };
         let mut c = SubGenCache::new(cfg, 1);
         for i in 0..40 {
             c.update(queries.row(i), keys.row(i), values.row(i));
@@ -338,8 +340,7 @@ mod tests {
         let q = queries.row(499);
         let got = c.attention(q);
         let want = exact_attention(q, &keys, &values);
-        let err: f32 =
-            got.iter().zip(&want).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
+        let err: f32 = got.iter().zip(&want).map(|(a, b)| (a - b) * (a - b)).sum::<f32>().sqrt();
         let rhs = crate::attention::error_bound_rhs(0.75, q, &keys, &values);
         assert!(err <= rhs, "err={err} rhs={rhs}");
         assert_eq!(c.len(), 500);

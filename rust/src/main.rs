@@ -1,16 +1,19 @@
 //! `subgen` CLI — leader entrypoint for the serving stack.
 //!
 //! Subcommands:
-//!   info      — print artifact manifest + platform details
+//!   info      — print model/executor details (+ artifact manifest)
 //!   generate  — answer a single synthetic retrieval prompt
 //!   eval      — mini Table-1 run (accuracy per policy at one length)
 //!
-//! The full experiment drivers live in examples/ (see README).
+//! `--executor host` (the default) runs everything on the pure-rust
+//! [`subgen::model::HostExecutor`] — no PJRT artifacts needed;
+//! `--executor artifact` uses the compiled executables. The full
+//! experiment drivers live in examples/ (see README.md).
 
 use anyhow::Result;
 use std::path::PathBuf;
 use subgen::cli::Args;
-use subgen::coordinator::{Engine, EngineConfig, Request};
+use subgen::coordinator::{Engine, EngineConfig, HostExecutor, Request, StepExecutor};
 use subgen::model::{Generator, ModelSpec};
 use subgen::rng::Pcg64;
 use subgen::runtime::Runtime;
@@ -18,7 +21,8 @@ use subgen::workload::{decode, lines_for_seq_len, RetrievalSampler};
 
 fn main() -> Result<()> {
     let args = Args::from_env("subgen — sublinear KV-cache token generation")
-        .describe("artifacts", Some("artifacts"), "artifacts directory")
+        .describe("executor", Some("host"), "decode backend (host|artifact)")
+        .describe("artifacts", Some("artifacts"), "artifacts directory (artifact executor)")
         .describe("policy", Some("subgen"), "cache policy (exact|sink|h2o|sliding|subgen)")
         .describe("budget", Some("128"), "per-head token budget")
         .describe("delta", Some("4.0"), "subgen cluster threshold")
@@ -27,11 +31,10 @@ fn main() -> Result<()> {
         .describe("seed", Some("0"), "rng seed");
     args.exit_on_help();
 
-    let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
     match args.subcommand().unwrap_or("info") {
-        "info" => info(&artifacts),
-        "generate" => generate(&args, &artifacts),
-        "eval" => eval(&args, &artifacts),
+        "info" => info(&args),
+        "generate" => generate(&args),
+        "eval" => eval(&args),
         other => {
             eprintln!("unknown subcommand {other:?}\n{}", args.usage());
             std::process::exit(2);
@@ -39,10 +42,44 @@ fn main() -> Result<()> {
     }
 }
 
-fn info(artifacts: &std::path::Path) -> Result<()> {
-    let rt = Runtime::load(artifacts, Some(&[]))?;
-    let spec = ModelSpec::from_manifest(rt.manifest())?;
-    println!("platform        : {}", rt.platform());
+/// Build the requested executor and hand it to `f` (the PJRT runtime is
+/// not `Send`/`'static`, so everything runs inside this scope).
+fn with_executor<T>(args: &Args, f: impl FnOnce(&dyn StepExecutor) -> Result<T>) -> Result<T> {
+    let seed = args.u64_or("seed", 0);
+    match args.get_or("executor", "host").as_str() {
+        "host" => f(&HostExecutor::retrieval(seed ^ 0xBEEF)),
+        "artifact" => {
+            let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+            let rt = Runtime::load(&artifacts, None)?;
+            let spec = ModelSpec::from_manifest(rt.manifest())?;
+            let generator = Generator::new(&rt, spec);
+            f(&generator)
+        }
+        other => anyhow::bail!("unknown executor {other:?} (host|artifact)"),
+    }
+}
+
+fn info(args: &Args) -> Result<()> {
+    // The artifact branch only needs the manifest (no executable
+    // compilation) and additionally reports platform + artifact names.
+    if args.get_or("executor", "host") == "artifact" {
+        let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+        let rt = Runtime::load(&artifacts, Some(&[]))?;
+        let spec = ModelSpec::from_manifest(rt.manifest())?;
+        println!("executor        : artifact");
+        println!("platform        : {}", rt.platform());
+        print_spec(&spec);
+        println!("artifacts       : {:?}", rt.manifest_artifact_names());
+        return Ok(());
+    }
+    with_executor(args, |exec| {
+        println!("executor        : {}", args.get_or("executor", "host"));
+        print_spec(exec.spec());
+        Ok(())
+    })
+}
+
+fn print_spec(spec: &ModelSpec) {
     println!(
         "model           : d_model={} layers={} heads={} d_head={} vocab={}",
         spec.d_model, spec.n_layers, spec.n_heads, spec.d_head, spec.vocab
@@ -50,39 +87,43 @@ fn info(artifacts: &std::path::Path) -> Result<()> {
     println!("prefill_t       : {}", spec.prefill_t);
     println!("cache variants  : {:?}", spec.cache_variants);
     println!("train accuracy  : {:.3}", spec.train_accuracy);
-    println!("artifacts       : {:?}", rt.manifest_artifact_names());
-    Ok(())
 }
 
-fn generate(args: &Args, artifacts: &std::path::Path) -> Result<()> {
+fn generate(args: &Args) -> Result<()> {
     let policy = args.get_or("policy", "subgen");
     let budget = args.usize_or("budget", 128);
     let delta = args.f32_or("delta", 4.0);
     let n = args.usize_or("n", 384);
     let seed = args.u64_or("seed", 0);
 
-    let rt = Runtime::load(artifacts, None)?;
-    let spec = ModelSpec::from_manifest(rt.manifest())?;
-    let generator = Generator::new(&rt, spec);
+    with_executor(args, |exec| {
+        let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed));
+        let inst = sampler.sample(lines_for_seq_len(n));
+        let (prompt, answer) = inst.tokens();
+        println!("prompt tokens  : {}", prompt.len());
+        println!("query id       : {:02}", inst.query_id);
 
-    let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed));
-    let inst = sampler.sample(lines_for_seq_len(n));
-    let (prompt, answer) = inst.tokens();
-    println!("prompt tokens  : {}", prompt.len());
-    println!("query id       : {:02}", inst.query_id);
-
-    let mut caches =
-        subgen::model::SequenceCaches::new(generator.spec(), &policy, budget, delta, seed)?;
-    let out = generator.generate(&prompt, answer.len(), &mut caches)?;
-    println!("policy         : {policy} (budget {budget}/head)");
-    println!("cache bytes    : {}", subgen::bench::fmt_bytes(caches.memory_bytes()));
-    println!("expected       : {}", decode(&answer));
-    println!("generated      : {}", decode(&out));
-    println!("correct        : {}", out == answer);
-    Ok(())
+        let mut engine = Engine::new(&exec, EngineConfig::default());
+        engine.submit(Request {
+            id: 0,
+            prompt,
+            max_new: answer.len(),
+            policy: policy.clone(),
+            budget,
+            delta,
+        });
+        engine.run_to_completion()?;
+        let resp = engine.take_responses().pop().expect("one response");
+        println!("policy         : {policy} (budget {budget}/head)");
+        println!("cache bytes    : {}", subgen::bench::fmt_bytes(resp.cache_bytes));
+        println!("expected       : {}", decode(&answer));
+        println!("generated      : {}", decode(&resp.tokens));
+        println!("correct        : {}", resp.tokens == answer);
+        Ok(())
+    })
 }
 
-fn eval(args: &Args, artifacts: &std::path::Path) -> Result<()> {
+fn eval(args: &Args) -> Result<()> {
     let policy = args.get_or("policy", "subgen");
     let budget = args.usize_or("budget", 128);
     let delta = args.f32_or("delta", 4.0);
@@ -90,37 +131,37 @@ fn eval(args: &Args, artifacts: &std::path::Path) -> Result<()> {
     let questions = args.usize_or("questions", 10);
     let seed = args.u64_or("seed", 0);
 
-    let rt = Runtime::load(artifacts, None)?;
-    let spec = ModelSpec::from_manifest(rt.manifest())?;
-    let generator = Generator::new(&rt, spec);
-    let mut engine = Engine::new(&generator, EngineConfig::default());
-
-    let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed));
-    let mut expected = Vec::new();
-    for id in 0..questions {
-        let inst = sampler.sample(lines_for_seq_len(n));
-        let (prompt, answer) = inst.tokens();
-        expected.push(answer.clone());
-        engine.submit(Request {
-            id: id as u64,
-            prompt,
-            max_new: answer.len(),
-            policy: policy.clone(),
-            budget,
-            delta,
-        });
-    }
-    engine.run_to_completion()?;
-    let mut responses = engine.take_responses();
-    responses.sort_by_key(|r| r.id);
-    let correct =
-        responses.iter().filter(|r| r.tokens == expected[r.id as usize]).count();
-    println!(
-        "policy={policy} n={n} budget={budget}: accuracy {}/{} = {:.2}",
-        correct,
-        questions,
-        correct as f64 / questions as f64
-    );
-    println!("latency: {}", engine.stats.latency.summary());
-    Ok(())
+    with_executor(args, |exec| {
+        let mut engine = Engine::new(&exec, EngineConfig::default());
+        let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed));
+        let mut expected = Vec::new();
+        for id in 0..questions {
+            let inst = sampler.sample(lines_for_seq_len(n));
+            let (prompt, answer) = inst.tokens();
+            expected.push(answer.clone());
+            engine.submit(Request {
+                id: id as u64,
+                prompt,
+                max_new: answer.len(),
+                policy: policy.clone(),
+                budget,
+                delta,
+            });
+        }
+        engine.run_to_completion()?;
+        let mut responses = engine.take_responses();
+        responses.sort_by_key(|r| r.id);
+        let correct = responses
+            .iter()
+            .filter(|r| r.tokens == expected[r.id as usize])
+            .count();
+        println!(
+            "policy={policy} n={n} budget={budget}: accuracy {}/{} = {:.2}",
+            correct,
+            questions,
+            correct as f64 / questions as f64
+        );
+        println!("latency: {}", engine.stats.latency.summary());
+        Ok(())
+    })
 }

@@ -38,6 +38,37 @@ pub struct FlatCaches {
     packed: Vec<usize>,
 }
 
+impl FlatCaches {
+    /// Number of (layer, head) buffers held.
+    pub fn num_heads(&self) -> usize {
+        self.packed.len()
+    }
+
+    /// Valid (weight-carrying) slots of flat head index
+    /// `i = l · n_heads + h`.
+    pub fn packed_len(&self, i: usize) -> usize {
+        self.packed[i]
+    }
+
+    /// Borrow head `i`'s valid packed region as
+    /// `(keys, values, w, u)` — keys/values `[packed_len(i), dh]`
+    /// row-major, weights `[packed_len(i)]`. This is the borrowed-buffer
+    /// form consumed by [`crate::kvcache::attention_flat_into`] on the
+    /// host executor's decode hot path.
+    pub fn head_slices(&self, i: usize) -> (&[f32], &[f32], &[f32], &[f32]) {
+        let dh = self.keys.len() / (self.packed.len() * self.capacity);
+        let n = self.packed[i];
+        let kv = i * self.capacity * dh;
+        let wu = i * self.capacity;
+        (
+            &self.keys[kv..kv + n * dh],
+            &self.values[kv..kv + n * dh],
+            &self.w[wu..wu + n],
+            &self.u[wu..wu + n],
+        )
+    }
+}
+
 impl SequenceCaches {
     /// One policy instance per (layer, head). `budget` is per-head
     /// tokens; `delta` the SubGen cluster threshold (in key space).
@@ -133,8 +164,7 @@ impl SequenceCaches {
                 policy.packed_slots(),
                 c - 1
             );
-            let from =
-                if policy.packed_append_only() { flat.packed[i] } else { 0 };
+            let from = if policy.packed_append_only() { flat.packed[i] } else { 0 };
             policy.pack_from(&mut self.scratch, from);
             let new = self.scratch.used();
             let total = from + new;
@@ -158,6 +188,21 @@ impl SequenceCaches {
                 }
             }
             flat.packed[i] = total;
+        }
+        Ok(())
+    }
+
+    /// Re-assemble `flat` for the next decode step: upgrade to a larger
+    /// cache variant only when the history (plus the reserved new-token
+    /// slot) outgrows the current buffer, otherwise reuse it in place.
+    /// The one implementation of the capacity-upgrade invariant shared
+    /// by the engine, the generator loop, and the decode examples.
+    pub fn reassemble(&mut self, spec: &ModelSpec, flat: &mut FlatCaches) -> Result<()> {
+        let needed = self.max_slots() + 1;
+        if needed + 1 > flat.capacity {
+            *flat = self.assemble(spec.pick_cache_variant(needed))?;
+        } else {
+            self.assemble_into(flat)?;
         }
         Ok(())
     }

@@ -132,7 +132,7 @@ impl<'rt> Generator<'rt> {
         let mut out = Vec::with_capacity(n_new);
         // Reuse one flat buffer across steps, re-picking capacity only
         // when the history no longer fits.
-        let mut c = self.spec.pick_cache_variant(caches.max_slots() + 1);
+        let c = self.spec.pick_cache_variant(caches.max_slots() + 1);
         let mut flat = caches.assemble(c)?;
         for j in 0..n_new {
             out.push(next);
@@ -141,13 +141,7 @@ impl<'rt> Generator<'rt> {
             caches.update(&step.q, &step.k, &step.v);
             next = argmax(&step.logits) as i32;
             if j + 1 < n_new {
-                let needed = caches.max_slots() + 1;
-                if needed + 1 > c {
-                    c = self.spec.pick_cache_variant(needed);
-                    flat = caches.assemble(c)?;
-                } else {
-                    caches.assemble_into(&mut flat)?;
-                }
+                caches.reassemble(&self.spec, &mut flat)?;
             }
         }
         Ok(out)

@@ -1,0 +1,567 @@
+//! Pure-rust host decode executor — a real (if small) transformer step
+//! with no PJRT artifacts.
+//!
+//! The vendored `crate::xla` stub makes compiled-artifact execution
+//! unavailable in a source checkout, which left the serving stack with
+//! only the hash-based `MockExecutor`: no genuine attention ever ran
+//! through the cache policies. [`HostExecutor`] closes that gap with a
+//! deterministic small transformer — embeddings, RoPE, multi-head
+//! attention, SiLU MLP, RMSNorm, tied logits — whose weights are drawn
+//! from a [`SplitMix64`] stream, so any two builds from the same
+//! (spec, seed) are bit-identical without shipping checkpoints.
+//!
+//! The attention path is the point of the exercise:
+//!
+//! * **prefill** runs exact causal attention over the prompt through
+//!   [`attention_flat_into`] with unit weights — the same estimator
+//!   kernel the packed caches use — and emits the per-position
+//!   (q, k, v) streams that fill `FlatCaches` via the engine;
+//! * **decode** routes every (layer, head) through the *assembled
+//!   policy buffers*: [`FlatCaches::head_slices`] borrows the packed
+//!   K/V/w/u region and [`attention_flat_into`] evaluates the
+//!   weighted-exponential estimator with the step's own token in the
+//!   reserved extra slot. Every cache policy (exact, sliding, sink,
+//!   H2O, SubGen) is therefore exercised by a real autoregressive
+//!   loop, with the batched `tensor::kernels` sweeps on the hot path.
+//!
+//! Queries are pre-scaled by `1/√d_head` before caching and scoring, so
+//! the policies' raw-dot-product estimator computes standard
+//! `softmax(qᵀk/√d)` attention.
+
+use super::{FlatCaches, ModelSpec, PrefillOutput, StepOutput};
+use crate::kvcache::attention_flat_into;
+use crate::rng::SplitMix64;
+use crate::tensor::{dot, matvec_into, Tensor};
+use anyhow::Result;
+use std::cell::RefCell;
+
+/// RoPE base frequency (the standard 10⁴).
+const ROPE_BASE: f32 = 10_000.0;
+/// RMSNorm stabilizer.
+const NORM_EPS: f32 = 1e-6;
+/// MLP expansion factor (d_ff = FF_MULT · d_model).
+const FF_MULT: usize = 2;
+
+/// One decoder layer's weights.
+struct Layer {
+    /// Pre-attention RMSNorm gain, `[d_model]`.
+    g_attn: Vec<f32>,
+    /// Pre-MLP RMSNorm gain, `[d_model]`.
+    g_mlp: Vec<f32>,
+    /// Query projection, `[H·dh, d_model]` (row per output unit).
+    wq: Tensor,
+    /// Key projection, same shape.
+    wk: Tensor,
+    /// Value projection, same shape.
+    wv: Tensor,
+    /// Output projection, `[d_model, H·dh]`.
+    wo: Tensor,
+    /// MLP up projection, `[d_ff, d_model]`.
+    w1: Tensor,
+    /// MLP down projection, `[d_model, d_ff]`.
+    w2: Tensor,
+}
+
+/// Reusable per-step buffers (one borrow per decode call; nothing
+/// allocates after warm-up).
+#[derive(Default)]
+struct Scratch {
+    /// Residual stream, `[d_model]`.
+    x: Vec<f32>,
+    /// Normed activations, `[d_model]`.
+    hn: Vec<f32>,
+    /// Per-layer query/key/value, `[H·dh]`.
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Concatenated head outputs, `[H·dh]`.
+    attn: Vec<f32>,
+    /// MLP hidden, `[d_ff]`.
+    ff1: Vec<f32>,
+    /// Residual delta, `[d_model]`.
+    tmp: Vec<f32>,
+    /// Estimator score scratch.
+    scores: Vec<f32>,
+    /// Estimator accumulator scratch.
+    zacc: Vec<f64>,
+    /// One head's attention output, `[dh]`.
+    out_head: Vec<f32>,
+}
+
+impl Scratch {
+    fn ensure(&mut self, d_model: usize, hd: usize, d_ff: usize, dh: usize) {
+        self.x.resize(d_model, 0.0);
+        self.hn.resize(d_model, 0.0);
+        self.q.resize(hd, 0.0);
+        self.k.resize(hd, 0.0);
+        self.v.resize(hd, 0.0);
+        self.attn.resize(hd, 0.0);
+        self.ff1.resize(d_ff, 0.0);
+        self.tmp.resize(d_model, 0.0);
+        self.out_head.resize(dh, 0.0);
+    }
+}
+
+/// Deterministic pure-rust transformer executor over packed caches.
+pub struct HostExecutor {
+    spec: ModelSpec,
+    /// Token embeddings (tied with the output head), `[vocab, d_model]`.
+    embed: Tensor,
+    layers: Vec<Layer>,
+    /// Final RMSNorm gain, `[d_model]`.
+    g_final: Vec<f32>,
+    /// RoPE per-pair frequencies `base^(-2i/dh)`, `[dh/2]` — position-
+    /// invariant, so the decode hot path never calls `powf`.
+    rope_freqs: Vec<f32>,
+    scratch: RefCell<Scratch>,
+}
+
+/// `y = x · g / √(mean(x²) + ε)`.
+fn rmsnorm(x: &[f32], g: &[f32], out: &mut [f32]) {
+    let inv = 1.0 / (dot(x, x) / x.len() as f32 + NORM_EPS).sqrt();
+    for ((o, &xi), &gi) in out.iter_mut().zip(x).zip(g) {
+        *o = xi * inv * gi;
+    }
+}
+
+/// Rotary position embedding over `n_heads` heads of width
+/// `2 · freqs.len()` (consecutive pairs rotated by `pos · freqs[i]`).
+fn rope_inplace(x: &mut [f32], n_heads: usize, freqs: &[f32], pos: usize) {
+    let dh = 2 * freqs.len();
+    for h in 0..n_heads {
+        let head = &mut x[h * dh..(h + 1) * dh];
+        for (i, &f) in freqs.iter().enumerate() {
+            let (sin, cos) = (pos as f32 * f).sin_cos();
+            let a = head[2 * i];
+            let b = head[2 * i + 1];
+            head[2 * i] = a * cos - b * sin;
+            head[2 * i + 1] = a * sin + b * cos;
+        }
+    }
+}
+
+/// The per-pair RoPE frequency table for head width `dh`.
+fn rope_freqs(dh: usize) -> Vec<f32> {
+    (0..dh / 2).map(|i| ROPE_BASE.powf(-2.0 * i as f32 / dh as f32)).collect()
+}
+
+/// `x · sigmoid(x)` elementwise.
+fn silu_inplace(x: &mut [f32]) {
+    for xi in x.iter_mut() {
+        *xi /= 1.0 + (-*xi).exp();
+    }
+}
+
+/// One weight matrix from the executor's SplitMix64 stream: the `tag`
+/// names the matrix, so layouts are stable under refactors.
+fn gen_matrix(seed: u64, tag: u64, rows: usize, cols: usize, std: f32) -> Tensor {
+    let mut rng = SplitMix64::new(SplitMix64::mix(seed ^ tag));
+    Tensor::randn(&mut rng, rows, cols, std)
+}
+
+impl HostExecutor {
+    /// Build the model for `spec`, drawing all weights from `seed`.
+    pub fn new(spec: ModelSpec, seed: u64) -> Result<HostExecutor> {
+        anyhow::ensure!(spec.vocab > 0 && spec.d_model > 0, "degenerate spec");
+        anyhow::ensure!(spec.n_layers > 0 && spec.n_heads > 0, "degenerate spec");
+        anyhow::ensure!(spec.d_head % 2 == 0, "RoPE needs an even d_head");
+        anyhow::ensure!(!spec.cache_variants.is_empty(), "spec has no cache variants");
+        let (dm, hd) = (spec.d_model, spec.n_heads * spec.d_head);
+        let d_ff = FF_MULT * dm;
+        let proj_std = 1.0 / (dm as f32).sqrt();
+        let mut layers = Vec::with_capacity(spec.n_layers);
+        for l in 0..spec.n_layers {
+            let tag = 0x100 + 0x10 * l as u64;
+            layers.push(Layer {
+                g_attn: vec![1.0; dm],
+                g_mlp: vec![1.0; dm],
+                wq: gen_matrix(seed, tag + 1, hd, dm, proj_std),
+                wk: gen_matrix(seed, tag + 2, hd, dm, proj_std),
+                wv: gen_matrix(seed, tag + 3, hd, dm, proj_std),
+                wo: gen_matrix(seed, tag + 4, dm, hd, 1.0 / (hd as f32).sqrt()),
+                w1: gen_matrix(seed, tag + 5, d_ff, dm, proj_std),
+                w2: gen_matrix(seed, tag + 6, dm, d_ff, 1.0 / (d_ff as f32).sqrt()),
+            });
+        }
+        Ok(HostExecutor {
+            embed: gen_matrix(seed, 0x01, spec.vocab, dm, 1.0),
+            layers,
+            g_final: vec![1.0; dm],
+            rope_freqs: rope_freqs(spec.d_head),
+            spec,
+            scratch: RefCell::new(Scratch::default()),
+        })
+    }
+
+    /// A small default model for tests (same shapes as
+    /// `MockExecutor::small`).
+    pub fn small(seed: u64) -> HostExecutor {
+        Self::new(
+            ModelSpec {
+                vocab: 16,
+                d_model: 16,
+                n_heads: 2,
+                n_layers: 2,
+                d_head: 8,
+                prefill_t: 64,
+                cache_variants: vec![64, 32],
+                decode_batch: 0,
+                train_accuracy: -1.0,
+            },
+            seed,
+        )
+        .expect("small spec is valid")
+    }
+
+    /// The model shape the serving examples use against the retrieval
+    /// workload (vocab matches `workload::VOCAB`); artifact-free.
+    pub fn retrieval(seed: u64) -> HostExecutor {
+        Self::new(
+            ModelSpec {
+                vocab: crate::workload::VOCAB,
+                d_model: 64,
+                n_heads: 4,
+                n_layers: 2,
+                d_head: 16,
+                prefill_t: 512,
+                cache_variants: vec![640, 384, 256, 128],
+                decode_batch: 0,
+                train_accuracy: -1.0,
+            },
+            seed,
+        )
+        .expect("retrieval spec is valid")
+    }
+
+    /// Model shapes.
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// Full-prompt causal forward pass. Emits logits at every prompt
+    /// position plus the per-position (q, k, v) streams — `[L, T, H,
+    /// dh]` flat, positions past the prompt zero — that the engine
+    /// feeds into the cache policies. Queries are pre-scaled by
+    /// `1/√d_head`; keys/queries are RoPE'd.
+    pub fn prefill(&self, prompt: &[i32]) -> Result<PrefillOutput> {
+        let s = &self.spec;
+        let (l, t_full, h, dh, v) = (s.n_layers, s.prefill_t, s.n_heads, s.d_head, s.vocab);
+        let t = prompt.len();
+        anyhow::ensure!(t >= 1, "empty prompt");
+        anyhow::ensure!(t <= t_full, "prompt {} > prefill_t {t_full}", t);
+        let (dm, hd) = (s.d_model, h * dh);
+        let q_scale = 1.0 / (dh as f32).sqrt();
+
+        let mut logits = vec![0.0f32; t_full * v];
+        let mut qs = vec![0.0f32; l * t_full * hd];
+        let mut ks = qs.clone();
+        let mut vs = qs.clone();
+
+        // Residual stream for the whole prompt, [t, dm].
+        let mut x = vec![0.0f32; t * dm];
+        for (p, &tok) in prompt.iter().enumerate() {
+            anyhow::ensure!((0..v as i32).contains(&tok), "token {tok} outside vocab {v}");
+            x[p * dm..(p + 1) * dm].copy_from_slice(self.embed.row(tok as usize));
+        }
+
+        // Per-layer scratch: per-head contiguous K/V slabs ([H, t, dh])
+        // so the causal sweep streams each head's keys in row order,
+        // plus unit weights for the exact-softmax estimator form.
+        let mut k_heads = vec![0.0f32; h * t * dh];
+        let mut v_heads = vec![0.0f32; h * t * dh];
+        let ones = vec![1.0f32; t];
+        let mut hn = vec![0.0f32; dm];
+        let mut ff1 = vec![0.0f32; FF_MULT * dm];
+        let mut tmp = vec![0.0f32; dm];
+        let mut attn = vec![0.0f32; hd];
+        let mut out_head = vec![0.0f32; dh];
+        let mut scores = Vec::new();
+        let mut zacc = Vec::new();
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            // Projections + RoPE for every position, from layer input x.
+            for p in 0..t {
+                let at = (li * t_full + p) * hd;
+                rmsnorm(&x[p * dm..(p + 1) * dm], &layer.g_attn, &mut hn);
+                let (q_out, k_out, v_out) = (
+                    &mut qs[at..at + hd],
+                    &mut ks[at..at + hd],
+                    &mut vs[at..at + hd],
+                );
+                matvec_into(layer.wq.as_slice(), dm, &hn, q_out);
+                matvec_into(layer.wk.as_slice(), dm, &hn, k_out);
+                matvec_into(layer.wv.as_slice(), dm, &hn, v_out);
+                rope_inplace(q_out, h, &self.rope_freqs, p);
+                rope_inplace(k_out, h, &self.rope_freqs, p);
+                for qi in q_out.iter_mut() {
+                    *qi *= q_scale;
+                }
+                for hi in 0..h {
+                    let row = (hi * t + p) * dh;
+                    k_heads[row..row + dh].copy_from_slice(&k_out[hi * dh..(hi + 1) * dh]);
+                    v_heads[row..row + dh].copy_from_slice(&v_out[hi * dh..(hi + 1) * dh]);
+                }
+            }
+            // Causal attention + MLP, position by position.
+            for p in 0..t {
+                let at = (li * t_full + p) * hd;
+                for hi in 0..h {
+                    let base = hi * t * dh;
+                    attention_flat_into(
+                        &k_heads[base..base + (p + 1) * dh],
+                        &v_heads[base..base + (p + 1) * dh],
+                        &ones[..p + 1],
+                        &ones[..p + 1],
+                        dh,
+                        &qs[at + hi * dh..at + (hi + 1) * dh],
+                        1,
+                        None,
+                        &mut scores,
+                        &mut zacc,
+                        &mut out_head,
+                    );
+                    attn[hi * dh..(hi + 1) * dh].copy_from_slice(&out_head);
+                }
+                let xp = &mut x[p * dm..(p + 1) * dm];
+                matvec_into(layer.wo.as_slice(), hd, &attn, &mut tmp);
+                for (xi, &ti) in xp.iter_mut().zip(&tmp) {
+                    *xi += ti;
+                }
+                rmsnorm(xp, &layer.g_mlp, &mut hn);
+                matvec_into(layer.w1.as_slice(), dm, &hn, &mut ff1);
+                silu_inplace(&mut ff1);
+                matvec_into(layer.w2.as_slice(), FF_MULT * dm, &ff1, &mut tmp);
+                for (xi, &ti) in xp.iter_mut().zip(&tmp) {
+                    *xi += ti;
+                }
+            }
+        }
+
+        // Tied output head over the final norm.
+        for p in 0..t {
+            rmsnorm(&x[p * dm..(p + 1) * dm], &self.g_final, &mut hn);
+            matvec_into(self.embed.as_slice(), dm, &hn, &mut logits[p * v..(p + 1) * v]);
+        }
+        Ok(PrefillOutput { logits, qs, ks, vs })
+    }
+
+    /// One decode step at `pos`: embed `token`, then per (layer, head)
+    /// evaluate the policy-packed estimator over `flat` with this
+    /// step's (k, v) in the reserved extra slot.
+    pub fn decode(&self, token: i32, pos: usize, flat: &FlatCaches) -> Result<StepOutput> {
+        let s = &self.spec;
+        let (l, h, dh, v) = (s.n_layers, s.n_heads, s.d_head, s.vocab);
+        let (dm, hd) = (s.d_model, h * dh);
+        anyhow::ensure!((0..v as i32).contains(&token), "token {token} outside vocab {v}");
+        anyhow::ensure!(flat.num_heads() == l * h, "flat caches shaped for a different model");
+        let q_scale = 1.0 / (dh as f32).sqrt();
+
+        let mut step_q = vec![0.0f32; l * hd];
+        let mut step_k = step_q.clone();
+        let mut step_v = step_q.clone();
+        let mut logits = vec![0.0f32; v];
+
+        let mut scratch = self.scratch.borrow_mut();
+        let sc = &mut *scratch;
+        sc.ensure(dm, hd, FF_MULT * dm, dh);
+        sc.x.copy_from_slice(self.embed.row(token as usize));
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            rmsnorm(&sc.x, &layer.g_attn, &mut sc.hn);
+            matvec_into(layer.wq.as_slice(), dm, &sc.hn, &mut sc.q);
+            matvec_into(layer.wk.as_slice(), dm, &sc.hn, &mut sc.k);
+            matvec_into(layer.wv.as_slice(), dm, &sc.hn, &mut sc.v);
+            rope_inplace(&mut sc.q, h, &self.rope_freqs, pos);
+            rope_inplace(&mut sc.k, h, &self.rope_freqs, pos);
+            for qi in sc.q.iter_mut() {
+                *qi *= q_scale;
+            }
+            step_q[li * hd..(li + 1) * hd].copy_from_slice(&sc.q);
+            step_k[li * hd..(li + 1) * hd].copy_from_slice(&sc.k);
+            step_v[li * hd..(li + 1) * hd].copy_from_slice(&sc.v);
+
+            for hi in 0..h {
+                let (kk, vv, ww, uu) = flat.head_slices(li * h + hi);
+                attention_flat_into(
+                    kk,
+                    vv,
+                    ww,
+                    uu,
+                    dh,
+                    &sc.q[hi * dh..(hi + 1) * dh],
+                    1,
+                    Some((&sc.k[hi * dh..(hi + 1) * dh], &sc.v[hi * dh..(hi + 1) * dh])),
+                    &mut sc.scores,
+                    &mut sc.zacc,
+                    &mut sc.out_head,
+                );
+                sc.attn[hi * dh..(hi + 1) * dh].copy_from_slice(&sc.out_head);
+            }
+            matvec_into(layer.wo.as_slice(), hd, &sc.attn, &mut sc.tmp);
+            for (xi, &ti) in sc.x.iter_mut().zip(&sc.tmp) {
+                *xi += ti;
+            }
+            rmsnorm(&sc.x, &layer.g_mlp, &mut sc.hn);
+            matvec_into(layer.w1.as_slice(), dm, &sc.hn, &mut sc.ff1);
+            silu_inplace(&mut sc.ff1);
+            matvec_into(layer.w2.as_slice(), FF_MULT * dm, &sc.ff1, &mut sc.tmp);
+            for (xi, &ti) in sc.x.iter_mut().zip(&sc.tmp) {
+                *xi += ti;
+            }
+        }
+        rmsnorm(&sc.x, &self.g_final, &mut sc.hn);
+        matvec_into(self.embed.as_slice(), dm, &sc.hn, &mut logits);
+        Ok(StepOutput { logits, q: step_q, k: step_k, v: step_v })
+    }
+
+    /// Slice one position's `[L, H, dh]` out of a prefill
+    /// `[L, T, H, dh]` tensor.
+    pub fn position_slice(&self, full: &[f32], pos: usize) -> Vec<f32> {
+        let s = &self.spec;
+        let (l, t, hd) = (s.n_layers, s.prefill_t, s.n_heads * s.d_head);
+        debug_assert_eq!(full.len(), l * t * hd);
+        let mut out = Vec::with_capacity(l * hd);
+        for li in 0..l {
+            let at = (li * t + pos) * hd;
+            out.extend_from_slice(&full[at..at + hd]);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::SequenceCaches;
+    use crate::tensor::argmax;
+
+    #[test]
+    fn prefill_is_deterministic_and_finite() {
+        let a = HostExecutor::small(7);
+        let b = HostExecutor::small(7);
+        let pa = a.prefill(&[1, 2, 3, 4]).unwrap();
+        let pb = b.prefill(&[1, 2, 3, 4]).unwrap();
+        assert_eq!(pa.logits, pb.logits);
+        assert_eq!(pa.ks, pb.ks);
+        assert!(pa.logits.iter().all(|x| x.is_finite()));
+        // A different seed is a different model.
+        let c = HostExecutor::small(8);
+        assert_ne!(c.prefill(&[1, 2, 3, 4]).unwrap().logits, pa.logits);
+    }
+
+    #[test]
+    fn prefill_is_causal() {
+        // Changing a later token must not change earlier positions.
+        let m = HostExecutor::small(3);
+        let v = m.spec().vocab;
+        let full = m.prefill(&[1, 2, 3, 4, 5]).unwrap();
+        let edited = m.prefill(&[1, 2, 3, 9, 5]).unwrap();
+        assert_eq!(full.logits[..3 * v], edited.logits[..3 * v]);
+        assert_ne!(full.logits[3 * v..5 * v], edited.logits[3 * v..5 * v]);
+    }
+
+    #[test]
+    fn queries_are_scaled_keys_are_roped() {
+        // The cached q must already include the 1/√dh factor: feeding
+        // identical tokens at different positions yields different keys
+        // (RoPE) but norms stay in a sane range.
+        let m = HostExecutor::small(5);
+        let pre = m.prefill(&[3, 3, 3]).unwrap();
+        let k0 = m.position_slice(&pre.ks, 0);
+        let k1 = m.position_slice(&pre.ks, 1);
+        assert_ne!(k0, k1, "RoPE must distinguish positions");
+        let q0 = m.position_slice(&pre.qs, 0);
+        let norm = crate::tensor::norm2(&q0);
+        assert!(norm.is_finite() && norm > 0.0);
+    }
+
+    #[test]
+    fn decode_over_exact_cache_matches_prefill() {
+        // Teacher-forced decode with the exact policy must reproduce
+        // the full causal forward pass position by position.
+        let m = HostExecutor::small(11);
+        let v = m.spec().vocab;
+        let tokens: Vec<i32> = vec![1, 5, 2, 7, 3, 0, 4, 9, 6, 8, 1, 2];
+        let prompt = &tokens[..4];
+        let full = m.prefill(&tokens).unwrap();
+
+        let mut caches = SequenceCaches::new(m.spec(), "exact", usize::MAX / 4, 0.5, 1).unwrap();
+        let pre = m.prefill(prompt).unwrap();
+        for p in 0..prompt.len() {
+            caches.update(
+                &m.position_slice(&pre.qs, p),
+                &m.position_slice(&pre.ks, p),
+                &m.position_slice(&pre.vs, p),
+            );
+        }
+        let mut flat = caches.assemble(32).unwrap();
+        for (p, &tok) in tokens.iter().enumerate().skip(prompt.len()) {
+            let step = m.decode(tok, p, &flat).unwrap();
+            let want = &full.logits[p * v..(p + 1) * v];
+            let err = crate::linalg::rel_err_vec(&step.logits, want);
+            assert!(err < 1e-4, "pos {p}: err={err}");
+            caches.update(&step.q, &step.k, &step.v);
+            caches.assemble_into(&mut flat).unwrap();
+        }
+    }
+
+    #[test]
+    fn decode_is_deterministic_and_bounded() {
+        let m = HostExecutor::small(2);
+        let mut caches = SequenceCaches::new(m.spec(), "exact", usize::MAX / 4, 0.5, 1).unwrap();
+        let pre = m.prefill(&[1, 2]).unwrap();
+        for p in 0..2 {
+            caches.update(
+                &m.position_slice(&pre.qs, p),
+                &m.position_slice(&pre.ks, p),
+                &m.position_slice(&pre.vs, p),
+            );
+        }
+        let flat = caches.assemble(32).unwrap();
+        let a = m.decode(4, 2, &flat).unwrap();
+        let b = m.decode(4, 2, &flat).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.k, b.k);
+        assert!(argmax(&a.logits) < m.spec().vocab);
+        assert!(a.logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn rejects_out_of_vocab_and_overlong() {
+        let m = HostExecutor::small(1);
+        assert!(m.prefill(&[99]).is_err());
+        assert!(m.prefill(&[1; 65]).is_err());
+        let flat = {
+            let mut c = SequenceCaches::new(m.spec(), "exact", 64, 0.5, 1).unwrap();
+            let pre = m.prefill(&[1]).unwrap();
+            c.update(
+                &m.position_slice(&pre.qs, 0),
+                &m.position_slice(&pre.ks, 0),
+                &m.position_slice(&pre.vs, 0),
+            );
+            c.assemble(32).unwrap()
+        };
+        assert!(m.decode(-1, 1, &flat).is_err());
+        assert!(m.decode(16, 1, &flat).is_err());
+    }
+
+    #[test]
+    fn rope_rotation_preserves_norm() {
+        let mut x: Vec<f32> = (0..16).map(|i| (i as f32 * 0.7).cos()).collect();
+        let before = crate::tensor::norm2(&x);
+        rope_inplace(&mut x, 2, &rope_freqs(8), 1234);
+        let after = crate::tensor::norm2(&x);
+        assert!((before - after).abs() < 1e-4, "{before} vs {after}");
+    }
+
+    #[test]
+    fn rmsnorm_unit_scale() {
+        let x = vec![3.0f32; 8];
+        let g = vec![1.0f32; 8];
+        let mut out = vec![0.0f32; 8];
+        rmsnorm(&x, &g, &mut out);
+        for &o in &out {
+            assert!((o - 1.0).abs() < 1e-3, "{o}");
+        }
+    }
+}

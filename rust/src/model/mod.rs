@@ -8,8 +8,10 @@
 
 pub(crate) mod caches;
 mod generator;
+mod host;
 mod spec;
 
 pub use caches::{FlatCaches, SequenceCaches};
 pub use generator::{Generator, PrefillOutput, StepOutput};
+pub use host::HostExecutor;
 pub use spec::ModelSpec;

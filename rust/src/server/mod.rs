@@ -132,6 +132,33 @@ mod tests {
     }
 
     #[test]
+    fn serve_loop_runs_host_executor() {
+        // The serving loop over the pure-rust transformer: requests
+        // decode through real attention with no artifacts on disk.
+        let (handle, rx) = channel();
+        let h2 = handle.clone();
+        let t = std::thread::spawn(move || {
+            let exec = crate::model::HostExecutor::small(9);
+            serve(&exec, EngineConfig::default(), rx).unwrap()
+        });
+        let req = Request {
+            id: 4,
+            prompt: vec![2, 5, 7],
+            max_new: 5,
+            policy: "subgen".into(),
+            budget: 16,
+            delta: 0.5,
+        };
+        let resp = h2.submit_blocking(req).unwrap();
+        assert_eq!(resp.tokens.len(), 5);
+        assert!(resp.cache_bytes > 0);
+        h2.shutdown();
+        let stats = t.join().unwrap();
+        assert_eq!(stats.completed.get(), 1);
+        assert_eq!(stats.tokens.get(), 5);
+    }
+
+    #[test]
     fn concurrent_submitters() {
         let (handle, rx) = channel();
         let t = std::thread::spawn(move || {

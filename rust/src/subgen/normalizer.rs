@@ -87,8 +87,8 @@ impl SoftmaxNormalizerSketch {
                 groups[new].push(old);
             }
             let dim = self.clustering.dim();
-            let old =
-                std::mem::replace(&mut self.samples, Tensor::with_row_capacity(new_m * self.t, dim));
+            let arena = Tensor::with_row_capacity(new_m * self.t, dim);
+            let old = std::mem::replace(&mut self.samples, arena);
             let mut weights: Vec<f64> = Vec::new();
             for g in &groups {
                 if g.len() == 1 {

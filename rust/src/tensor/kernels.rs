@@ -222,7 +222,8 @@ mod tests {
         let mut rng = Pcg64::seed_from_u64(4);
         let (rows, cols) = (9, 4);
         let data = random_flat(&mut rng, rows * cols);
-        let w: Vec<f64> = (0..rows).map(|r| if r % 3 == 0 { 0.0 } else { r as f64 * 0.5 }).collect();
+        let w: Vec<f64> =
+            (0..rows).map(|r| if r % 3 == 0 { 0.0 } else { r as f64 * 0.5 }).collect();
         let mut acc = vec![1.0f64; cols];
         axpy_rows_f64(&data, cols, &w, &mut acc);
         for j in 0..cols {

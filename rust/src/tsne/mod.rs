@@ -210,8 +210,7 @@ mod tests {
         };
         let m0 = mean(0, 20);
         let m1 = mean(20, 40);
-        let between =
-            ((m0[0] - m1[0]).powi(2) + (m0[1] - m1[1]).powi(2)).sqrt();
+        let between = ((m0[0] - m1[0]).powi(2) + (m0[1] - m1[1]).powi(2)).sqrt();
         let mut within = 0.0f32;
         for i in 0..20 {
             within +=

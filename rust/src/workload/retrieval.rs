@@ -125,7 +125,8 @@ mod tests {
     #[test]
     fn golden_file_parity_when_artifacts_exist() {
         // aot.py writes the same fixture; assert byte parity if present.
-        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden_tokens.txt");
+        let path =
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden_tokens.txt");
         if !path.exists() {
             return; // artifacts not built yet — python tests cover the fixture
         }

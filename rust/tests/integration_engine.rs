@@ -30,8 +30,10 @@ fn every_submitted_id_completes_exactly_once() {
 #[test]
 fn interleaved_submission_and_ticking() {
     let exec = MockExecutor::small();
-    let mut engine =
-        Engine::new(&exec, EngineConfig { max_active: 2, prefills_per_tick: 1, ..Default::default() });
+    let mut engine = Engine::new(
+        &exec,
+        EngineConfig { max_active: 2, prefills_per_tick: 1, ..Default::default() },
+    );
     let mut submitted = 0u64;
     let mut collected = 0usize;
     for round in 0..50 {

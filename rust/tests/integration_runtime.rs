@@ -85,8 +85,7 @@ fn decode_chain_matches_prefill_logits() {
 
     let (prompt, _) = golden_example_tokens();
     let pre = generator.prefill(&prompt).unwrap();
-    let mut caches =
-        SequenceCaches::new(&spec, "exact", usize::MAX / 4, 0.5, 1).unwrap();
+    let mut caches = SequenceCaches::new(&spec, "exact", usize::MAX / 4, 0.5, 1).unwrap();
     let vocab = spec.vocab;
     for pos in 0..prompt.len() {
         let flat = caches
@@ -118,8 +117,7 @@ fn generate_answers_golden_retrieval_when_model_trained() {
     for _ in 0..trials {
         let inst = sampler.sample(lines_for_seq_len(256));
         let (prompt, answer) = inst.tokens();
-        let mut caches =
-            SequenceCaches::new(&spec, "exact", usize::MAX / 4, 0.5, 2).unwrap();
+        let mut caches = SequenceCaches::new(&spec, "exact", usize::MAX / 4, 0.5, 2).unwrap();
         let out = generator.generate(&prompt, 2, &mut caches).unwrap();
         correct += (out == answer) as usize;
     }
