@@ -96,6 +96,7 @@ fn host_decode_demo() -> anyhow::Result<()> {
         let mut engine = Engine::new(&exec, EngineConfig::default());
         engine.submit(Request {
             id: 0,
+            session_id: None,
             prompt: vec![1, 2, 3, 4, 5],
             max_new: 8,
             policy: policy.to_string(),

@@ -129,6 +129,7 @@ fn run_cell<E: StepExecutor>(
         expected.push(answer.clone());
         engine.submit(Request {
             id: id as u64,
+            session_id: None,
             prompt,
             max_new: 2,
             policy: policy.to_string(),

@@ -1,17 +1,26 @@
 //! End-to-end serving driver (the serving-paper e2e requirement):
-//! batched requests against the engine under open-loop Poisson load,
-//! reporting latency percentiles and throughput per cache policy.
+//! open-loop Poisson load against the **sharded cluster router** —
+//! `--workers` engine threads behind one front door — reporting latency
+//! percentiles, per-worker utilization, and aggregate tokens/sec per
+//! cache policy.
 //!
-//!     cargo run --release --example serving_throughput [-- --requests 24]
+//!     cargo run --release --example serving_throughput -- --workers 2
 //!
 //! The headline serving claim of a KV-compression paper is that smaller
-//! caches keep decode latency flat as contexts grow; compressed policies
-//! run on smaller cache-capacity executables, so the per-step buffer
-//! traffic scales with the *budget*, not the context.
+//! caches keep decode latency flat as contexts grow *and* let one
+//! machine hold more concurrent sequences; the router turns N cores
+//! into N continuous-batching engines, so the aggregate tokens/sec
+//! scales with workers while per-sequence cache memory stays bounded.
 //!
-//! `--executor host` (the default) serves the load from the pure-rust
-//! [`subgen::model::HostExecutor`] — no PJRT artifacts required;
-//! `--executor artifact` restores the compiled-executable path.
+//! Output per policy: one `cluster policy=<p> worker=<i> ...` line per
+//! worker (CI greps these) and one `cluster policy=<p> aggregate
+//! tokens_per_sec=...` line, plus the latency table.
+//!
+//! `--executor host` (the default) builds one pure-rust
+//! [`subgen::model::HostExecutor`] per worker; `--executor artifact`
+//! restores the compiled-executable path (single worker — the PJRT
+//! runtime is thread-bound, so it cannot be built from a `Send`
+//! factory).
 
 use anyhow::Result;
 use std::path::PathBuf;
@@ -21,13 +30,14 @@ use subgen::coordinator::{EngineConfig, HostExecutor, Request};
 use subgen::model::{Generator, ModelSpec};
 use subgen::rng::Pcg64;
 use subgen::runtime::Runtime;
-use subgen::server::{channel, serve, LoadGen};
+use subgen::server::{channel, serve, ClusterSnapshot, LoadGen, LoadGenReport, Router};
 use subgen::workload::{lines_for_seq_len, RetrievalSampler};
 
 fn main() -> Result<()> {
-    let args = Args::from_env("serving throughput under Poisson load")
+    let args = Args::from_env("serving throughput under Poisson load (sharded router)")
         .describe("executor", Some("host"), "decode backend (host|artifact)")
         .describe("artifacts", Some("artifacts"), "artifacts directory (artifact executor)")
+        .describe("workers", Some("2"), "worker engines behind the router (host executor)")
         .describe("requests", Some("24"), "requests per policy")
         .describe("rate", Some("4.0"), "mean arrival rate (req/s)")
         .describe("n", Some("384"), "prompt length (tokens)")
@@ -41,6 +51,7 @@ fn main() -> Result<()> {
         "unknown executor {executor:?} (host|artifact)"
     );
     let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let workers = args.usize_or("workers", 2).max(1);
     let requests = args.usize_or("requests", 24);
     let rate = args.f64_or("rate", 4.0);
     let n = args.usize_or("n", 384);
@@ -48,11 +59,11 @@ fn main() -> Result<()> {
     let budget = args.usize_or("budget", 192);
     let seed = args.u64_or("seed", 0);
 
-    println!("executor: {executor}");
+    println!("executor: {executor} workers: {workers}");
     let mut table = Table::new(&["policy", "completed", "tok/s", "p50", "p90", "p99", "max"]);
     for policy in ["exact", "sink", "h2o", "subgen"] {
-        let report = run_policy(
-            &executor, &artifacts, policy, requests, rate, n, max_new, budget, seed,
+        let (report, snap) = run_policy(
+            &executor, &artifacts, workers, policy, requests, rate, n, max_new, budget, seed,
         )?;
         table.row(&[
             policy.to_string(),
@@ -63,16 +74,36 @@ fn main() -> Result<()> {
             format!("{:?}", report.latency.quantile(0.99)),
             format!("{:?}", report.latency.max()),
         ]);
+        let total = snap.completed.max(1);
+        for w in &snap.workers {
+            println!(
+                "cluster policy={policy} worker={} dispatched={} completed={} rejected={} \
+                 tokens={} share={:.2}",
+                w.worker,
+                w.dispatched,
+                w.completed,
+                w.rejected,
+                w.tokens,
+                w.completed as f64 / total as f64
+            );
+        }
+        println!(
+            "cluster policy={policy} aggregate tokens_per_sec={:.1} completed={} rejected={} \
+             p50={:?} p99={:?}",
+            snap.tokens_per_sec, snap.completed, snap.rejected, snap.latency.p50, snap.latency.p99
+        );
     }
     println!();
     table.print();
     Ok(())
 }
 
-#[allow(clippy::too_many_arguments)]
+/// One policy's run: spawn the serving backend, drive the open-loop
+/// load, drain, and return (load report, final cluster snapshot).
 fn run_policy(
     executor: &str,
     artifacts: &std::path::Path,
+    workers: usize,
     policy: &str,
     requests: usize,
     rate: f64,
@@ -80,24 +111,7 @@ fn run_policy(
     max_new: usize,
     budget: usize,
     seed: u64,
-) -> Result<subgen::server::LoadGenReport> {
-    let (handle, rx) = channel();
-    let executor = executor.to_string();
-    let artifacts = artifacts.to_path_buf();
-    let engine_thread = std::thread::spawn(move || -> Result<_> {
-        let cfg = EngineConfig { max_active: 4, prefills_per_tick: 1, ..Default::default() };
-        if executor == "host" {
-            let exec = HostExecutor::retrieval(seed ^ 0xBEEF);
-            serve(&exec, cfg, rx)
-        } else {
-            // PJRT types are not Send: build the runtime inside the thread.
-            let rt = Runtime::load(&artifacts, None)?;
-            let spec = ModelSpec::from_manifest(rt.manifest())?;
-            let generator = Generator::new(&rt, spec);
-            serve(&generator, cfg, rx)
-        }
-    });
-
+) -> Result<(LoadGenReport, ClusterSnapshot)> {
     let policy_owned = policy.to_string();
     let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed));
     let mut prompts = Vec::with_capacity(requests);
@@ -105,21 +119,48 @@ fn run_policy(
         let inst = sampler.sample(lines_for_seq_len(n));
         prompts.push(inst.tokens().0);
     }
-    let report = LoadGen {
-        rate,
-        requests,
-        make_request: Box::new(move |id| Request {
-            id,
-            prompt: prompts[id as usize].clone(),
-            max_new,
-            policy: policy_owned.clone(),
-            budget,
-            delta: 4.0,
-        }),
-        seed,
+    let make_request = Box::new(move |id: u64| Request {
+        id,
+        session_id: None,
+        prompt: prompts[id as usize].clone(),
+        max_new,
+        policy: policy_owned.clone(),
+        budget,
+        delta: 4.0,
+    });
+    let cfg = EngineConfig { max_active: 4, prefills_per_tick: 1, ..Default::default() };
+    let loadgen = LoadGen { rate, requests, make_request, seed };
+
+    if executor == "host" {
+        // Same model seed on every worker: identical responses
+        // regardless of placement.
+        let model_seed = seed ^ 0xBEEF;
+        let router = Router::spawn(workers, cfg, move |_w| HostExecutor::retrieval(model_seed))?;
+        let report = loadgen.run(&router);
+        let snap = router.shutdown()?;
+        Ok((report, snap))
+    } else {
+        // PJRT types are not Send: single engine thread, runtime built
+        // inside it; wrap the snapshot from its one stats block.
+        let (handle, rx) = channel();
+        let artifacts = artifacts.to_path_buf();
+        let engine_thread = std::thread::spawn(move || -> Result<_> {
+            let rt = Runtime::load(&artifacts, None)?;
+            let spec = ModelSpec::from_manifest(rt.manifest())?;
+            let generator = Generator::new(&rt, spec);
+            serve(&generator, cfg, rx)
+        });
+        let report = loadgen.run(&handle);
+        handle.shutdown();
+        let stats = engine_thread.join().unwrap()?;
+        // After the drain, the engine settled exactly what it received.
+        let received = stats.completed.get() + stats.rejected.get();
+        let snap = ClusterSnapshot::from_engine_stats(
+            &stats,
+            received,
+            report.throughput_tps(),
+            report.wall,
+        );
+        Ok((report, snap))
     }
-    .run(&handle);
-    handle.shutdown();
-    engine_thread.join().unwrap()?;
-    Ok(report)
 }

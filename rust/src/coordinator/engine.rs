@@ -4,9 +4,14 @@ use super::{Request, Response, StepExecutor};
 use super::request::Timing;
 use crate::kvcache::attention_flat_into;
 use crate::model::{caches::FlatCaches, SequenceCaches};
-use crate::metrics::{Counter, Histogram};
+use crate::metrics::{Counter, Gauge, Histogram};
 use anyhow::Result;
 use std::collections::VecDeque;
+use std::sync::Arc;
+
+/// Per-token hook: `(request id, token index, token)`, called as
+/// `decode_tick` emits each token — the streaming-response tap.
+pub type TokenSink<'e> = Box<dyn FnMut(u64, usize, i32) + 'e>;
 
 /// Engine tuning knobs.
 #[derive(Debug, Clone)]
@@ -56,6 +61,28 @@ pub struct EngineStats {
     pub probe_nonfinite: Counter,
     /// Per-probe latency (one batched sweep over all active sequences).
     pub probe_latency: Histogram,
+    /// Requests waiting for admission (gauge, updated each tick).
+    pub queue_depth: Gauge,
+    /// Sequences actively decoding (gauge, updated each tick).
+    pub active: Gauge,
+}
+
+impl EngineStats {
+    /// Fold `other`'s counts and distributions into `self` — the
+    /// cluster-wide aggregation: counters and gauges add, histograms
+    /// merge bucket-exactly (see [`Histogram::merge_from`]).
+    pub fn merge_from(&self, other: &EngineStats) {
+        self.completed.add(other.completed.get());
+        self.rejected.add(other.rejected.get());
+        self.tokens.add(other.tokens.get());
+        self.latency.merge_from(&other.latency);
+        self.tick_latency.merge_from(&other.tick_latency);
+        self.probes.add(other.probes.get());
+        self.probe_nonfinite.add(other.probe_nonfinite.get());
+        self.probe_latency.merge_from(&other.probe_latency);
+        self.queue_depth.add(other.queue_depth.get());
+        self.active.add(other.active.get());
+    }
 }
 
 /// One active (decoding) sequence.
@@ -88,13 +115,23 @@ pub struct Engine<'e, E: StepExecutor> {
     /// Probe kernel scratch (scores / f64 accumulator).
     probe_scores: Vec<f32>,
     probe_zacc: Vec<f64>,
-    /// Public metrics.
-    pub stats: EngineStats,
+    /// Per-token streaming hook (see [`TokenSink`]); `None` = silent.
+    sink: Option<TokenSink<'e>>,
+    /// Public metrics. Shared (`Arc`) so a router or metrics exporter on
+    /// another thread can observe counters while the engine runs — every
+    /// field is atomic, so `&self` access is lock-free both sides.
+    pub stats: Arc<EngineStats>,
 }
 
 impl<'e, E: StepExecutor> Engine<'e, E> {
     /// New engine over an executor.
     pub fn new(exec: &'e E, cfg: EngineConfig) -> Self {
+        Self::with_stats(exec, cfg, Arc::new(EngineStats::default()))
+    }
+
+    /// New engine recording into caller-owned stats — how the cluster
+    /// router watches per-worker counters without channel round-trips.
+    pub fn with_stats(exec: &'e E, cfg: EngineConfig, stats: Arc<EngineStats>) -> Self {
         Self {
             exec,
             cfg,
@@ -105,18 +142,28 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             probe_out: Vec::new(),
             probe_scores: Vec::new(),
             probe_zacc: Vec::new(),
-            stats: EngineStats::default(),
+            sink: None,
+            stats,
         }
     }
 
+    /// Install the per-token hook ([`TokenSink`]) feeding streaming
+    /// responses; replaces any previous sink.
+    pub fn set_token_sink(&mut self, sink: TokenSink<'e>) {
+        self.sink = Some(sink);
+    }
+
     /// Enqueue a request; `false` = rejected (backpressure, or a
-    /// malformed empty prompt — prefill needs at least one position).
+    /// malformed request: an empty prompt — prefill needs at least one
+    /// position — or `max_new == 0`, which has nothing to generate).
     pub fn submit(&mut self, req: Request) -> bool {
-        if req.prompt.is_empty() || self.queue.len() >= self.cfg.queue_capacity {
+        if req.prompt.is_empty() || req.max_new == 0 || self.queue.len() >= self.cfg.queue_capacity
+        {
             self.stats.rejected.inc();
             return false;
         }
         self.queue.push_back((req, Timing::now()));
+        self.stats.queue_depth.set(self.queue.len() as u64);
         true
     }
 
@@ -147,6 +194,8 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
         if progressed > 0 {
             self.stats.tick_latency.record(t0.elapsed());
         }
+        self.stats.queue_depth.set(self.queue.len() as u64);
+        self.stats.active.set(self.active.len() as u64);
         Ok(progressed)
     }
 
@@ -258,6 +307,9 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
         for mut seq in std::mem::take(&mut self.active) {
             // Emit the pending token, then run the step that consumes it.
             seq.generated.push(seq.next);
+            if let Some(sink) = self.sink.as_mut() {
+                sink(seq.req.id, seq.generated.len() - 1, seq.next);
+            }
             let step = self.exec.decode(seq.next, seq.pos, &seq.flat)?;
             seq.caches.update(&step.q, &step.k, &step.v);
             seq.next = crate::tensor::argmax(&step.logits[..spec_vocab]) as i32;
@@ -344,6 +396,80 @@ mod tests {
     }
 
     #[test]
+    fn zero_max_new_rejected_at_submit() {
+        // Regression: decode_tick emits `seq.next` before checking the
+        // limit, so an admitted max_new == 0 request would generate one
+        // token anyway. It must be rejected up front, like empty prompts.
+        let exec = MockExecutor::small();
+        let mut e = engine(EngineConfig::default(), &exec);
+        assert!(!e.submit(Request::exact(0, vec![1, 2], 0)));
+        assert_eq!(e.stats.rejected.get(), 1);
+        assert_eq!(e.pending(), 0);
+        e.run_to_completion().unwrap();
+        assert!(e.take_responses().is_empty());
+        assert_eq!(e.stats.tokens.get(), 0);
+    }
+
+    #[test]
+    fn token_sink_sees_every_token_in_order() {
+        let exec = MockExecutor::small();
+        let mut e = engine(EngineConfig::default(), &exec);
+        let streamed = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let tap = std::rc::Rc::clone(&streamed);
+        e.set_token_sink(Box::new(move |id, index, token| {
+            tap.borrow_mut().push((id, index, token));
+        }));
+        e.submit(Request::exact(9, vec![3], 4));
+        e.run_to_completion().unwrap();
+        let resp = e.take_responses().pop().unwrap();
+        let events = streamed.borrow();
+        assert_eq!(events.len(), resp.tokens.len());
+        for (i, (id, index, token)) in events.iter().enumerate() {
+            assert_eq!(*id, 9);
+            assert_eq!(*index, i);
+            assert_eq!(*token, resp.tokens[i]);
+        }
+    }
+
+    #[test]
+    fn stats_merge_adds_counters_and_histograms() {
+        let exec = MockExecutor::small();
+        let mut a = engine(EngineConfig::default(), &exec);
+        a.submit(Request::exact(0, vec![1], 3));
+        a.run_to_completion().unwrap();
+        let mut b = engine(EngineConfig::default(), &exec);
+        b.submit(Request::exact(1, vec![2], 2));
+        b.submit(Request::exact(2, vec![], 2)); // rejected
+        b.run_to_completion().unwrap();
+        let merged = EngineStats::default();
+        merged.merge_from(&a.stats);
+        merged.merge_from(&b.stats);
+        assert_eq!(merged.completed.get(), 2);
+        assert_eq!(merged.rejected.get(), 1);
+        assert_eq!(merged.tokens.get(), 5);
+        assert_eq!(merged.latency.count(), a.stats.latency.count() + b.stats.latency.count());
+        assert!(merged.latency.max() >= a.stats.latency.max().max(b.stats.latency.max()));
+    }
+
+    #[test]
+    fn queue_and_active_gauges_track_tick_state() {
+        let exec = MockExecutor::small();
+        let mut e = engine(
+            EngineConfig { max_active: 1, prefills_per_tick: 1, ..Default::default() },
+            &exec,
+        );
+        e.submit(Request::exact(0, vec![1], 3));
+        e.submit(Request::exact(1, vec![1], 3));
+        assert_eq!(e.stats.queue_depth.get(), 2);
+        e.tick().unwrap();
+        assert_eq!(e.stats.queue_depth.get(), 1);
+        assert_eq!(e.stats.active.get(), 1);
+        e.run_to_completion().unwrap();
+        assert_eq!(e.stats.queue_depth.get(), 0);
+        assert_eq!(e.stats.active.get(), 0);
+    }
+
+    #[test]
     fn backpressure_rejects_when_full() {
         let exec = MockExecutor::small();
         let mut e = engine(
@@ -383,6 +509,7 @@ mod tests {
             let mut e = engine(EngineConfig::default(), &exec);
             e.submit(Request {
                 id: 7,
+                session_id: None,
                 prompt: vec![1, 2, 3, 4],
                 max_new: 6,
                 policy: policy.into(),
@@ -406,6 +533,7 @@ mod tests {
             let mut e = Engine::new(&exec, EngineConfig::default());
             e.submit(Request {
                 id: 1,
+                session_id: None,
                 prompt: vec![1, 2, 3, 4],
                 max_new: 6,
                 policy: policy.into(),
@@ -426,6 +554,7 @@ mod tests {
         let mut e = engine(EngineConfig { host_probe_every: 1, ..Default::default() }, &exec);
         e.submit(Request {
             id: 0,
+            session_id: None,
             prompt: vec![1, 2, 3],
             max_new: 4,
             policy: "subgen".into(),

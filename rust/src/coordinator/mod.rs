@@ -14,7 +14,7 @@ mod engine;
 mod executor;
 mod request;
 
-pub use engine::{Engine, EngineConfig, EngineStats};
+pub use engine::{Engine, EngineConfig, EngineStats, TokenSink};
 pub use executor::{MockExecutor, StepExecutor};
 pub use request::{Request, Response};
 

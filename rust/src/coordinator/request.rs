@@ -7,6 +7,10 @@ use std::time::{Duration, Instant};
 pub struct Request {
     /// Caller-assigned id (echoed in the response).
     pub id: u64,
+    /// Sticky-routing key: multi-turn conversations reuse one session id
+    /// so the cluster router keeps them on the worker holding their
+    /// state. `None` = stateless, balance freely.
+    pub session_id: Option<u64>,
     /// Prompt token ids.
     pub prompt: Vec<i32>,
     /// Tokens to generate.
@@ -22,7 +26,21 @@ pub struct Request {
 impl Request {
     /// Convenience constructor with the exact policy.
     pub fn exact(id: u64, prompt: Vec<i32>, max_new: usize) -> Self {
-        Self { id, prompt, max_new, policy: "exact".into(), budget: usize::MAX / 2, delta: 0.5 }
+        Self {
+            id,
+            session_id: None,
+            prompt,
+            max_new,
+            policy: "exact".into(),
+            budget: usize::MAX / 2,
+            delta: 0.5,
+        }
+    }
+
+    /// Attach a sticky-session routing key (builder style).
+    pub fn with_session(mut self, session_id: u64) -> Self {
+        self.session_id = Some(session_id);
+        self
     }
 }
 

@@ -4,6 +4,9 @@
 //!   info      — print model/executor details (+ artifact manifest)
 //!   generate  — answer a single synthetic retrieval prompt
 //!   eval      — mini Table-1 run (accuracy per policy at one length)
+//!   serve     — sharded multi-worker serving run (`--workers N`,
+//!               `--stream` for per-token delivery, `--metrics-port`
+//!               for a live Prometheus endpoint)
 //!
 //! `--executor host` (the default) runs everything on the pure-rust
 //! [`subgen::model::HostExecutor`] — no PJRT artifacts needed;
@@ -17,6 +20,7 @@ use subgen::coordinator::{Engine, EngineConfig, HostExecutor, Request, StepExecu
 use subgen::model::{Generator, ModelSpec};
 use subgen::rng::Pcg64;
 use subgen::runtime::Runtime;
+use subgen::server::{drain_stream, MetricsServer, Router};
 use subgen::workload::{decode, lines_for_seq_len, RetrievalSampler};
 
 fn main() -> Result<()> {
@@ -26,8 +30,14 @@ fn main() -> Result<()> {
         .describe("policy", Some("subgen"), "cache policy (exact|sink|h2o|sliding|subgen)")
         .describe("budget", Some("128"), "per-head token budget")
         .describe("delta", Some("4.0"), "subgen cluster threshold")
-        .describe("n", Some("384"), "context length in tokens (eval)")
+        .describe("n", Some("384"), "context length in tokens (eval/serve)")
         .describe("questions", Some("10"), "questions to evaluate (eval)")
+        .describe("workers", Some("2"), "worker engines (serve)")
+        .describe("requests", Some("16"), "requests to serve (serve)")
+        .describe("new", Some("8"), "tokens generated per request (serve)")
+        .describe("sessions", Some("4"), "distinct sticky session ids, 0 = none (serve)")
+        .describe("stream", None, "per-token streaming responses (serve)")
+        .describe("metrics-port", None, "bind 127.0.0.1:PORT for Prometheus scrapes (serve)")
         .describe("seed", Some("0"), "rng seed");
     args.exit_on_help();
 
@@ -35,6 +45,7 @@ fn main() -> Result<()> {
         "info" => info(&args),
         "generate" => generate(&args),
         "eval" => eval(&args),
+        "serve" => serve_cluster(&args),
         other => {
             eprintln!("unknown subcommand {other:?}\n{}", args.usage());
             std::process::exit(2);
@@ -106,6 +117,7 @@ fn generate(args: &Args) -> Result<()> {
         let mut engine = Engine::new(&exec, EngineConfig::default());
         engine.submit(Request {
             id: 0,
+            session_id: None,
             prompt,
             max_new: answer.len(),
             policy: policy.clone(),
@@ -141,6 +153,7 @@ fn eval(args: &Args) -> Result<()> {
             expected.push(answer.clone());
             engine.submit(Request {
                 id: id as u64,
+                session_id: None,
                 prompt,
                 max_new: answer.len(),
                 policy: policy.clone(),
@@ -164,4 +177,105 @@ fn eval(args: &Args) -> Result<()> {
         println!("latency: {}", engine.stats.latency.summary());
         Ok(())
     })
+}
+
+/// Sharded serving run: a [`Router`] over `--workers` host-executor
+/// engines serves `--requests` synthetic retrieval prompts (sticky
+/// sessions via `--sessions`, per-token streaming via `--stream`),
+/// then drains and prints the merged cluster snapshot.
+fn serve_cluster(args: &Args) -> Result<()> {
+    anyhow::ensure!(
+        args.get_or("executor", "host") == "host",
+        "serve shards per-worker executors and needs them constructible on worker \
+         threads; the PJRT runtime is thread-bound — use examples/serve_longeval \
+         for the artifact path"
+    );
+    let workers = args.usize_or("workers", 2).max(1);
+    let requests = args.usize_or("requests", 16);
+    let max_new = args.usize_or("new", 8).max(1);
+    let n = args.usize_or("n", 384);
+    let sessions = args.usize_or("sessions", 4);
+    let stream = args.flag("stream");
+    let policy = args.get_or("policy", "subgen");
+    let budget = args.usize_or("budget", 128);
+    let delta = args.f32_or("delta", 4.0);
+    let seed = args.u64_or("seed", 0);
+
+    // Every worker hosts the *same* model (same seed): responses are
+    // identical no matter which worker a request lands on.
+    let model_seed = seed ^ 0xBEEF;
+    let cfg = EngineConfig { max_active: 4, ..Default::default() };
+    let router = Router::spawn(workers, cfg, move |_w| HostExecutor::retrieval(model_seed))?;
+    let exporter = match args.get("metrics-port") {
+        Some(port) => {
+            let server = MetricsServer::bind(&format!("127.0.0.1:{port}"), router.metrics())?;
+            println!("metrics: http://{}/metrics", server.addr());
+            Some(server)
+        }
+        None => None,
+    };
+    println!("serving: workers={workers} policy={policy} requests={requests} stream={stream}");
+
+    let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed));
+    let mut reqs = Vec::with_capacity(requests);
+    for id in 0..requests {
+        let inst = sampler.sample(lines_for_seq_len(n));
+        let (prompt, _answer) = inst.tokens();
+        let session_id = if sessions > 0 { Some((id % sessions) as u64) } else { None };
+        reqs.push(Request {
+            id: id as u64,
+            session_id,
+            prompt,
+            max_new,
+            policy: policy.clone(),
+            budget,
+            delta,
+        });
+    }
+
+    let (mut completed, mut rejected, mut tokens) = (0usize, 0usize, 0u64);
+    if stream {
+        // Submit everything, then drain the token streams.
+        let rxs: Vec<_> = reqs.into_iter().map(|r| router.submit_streaming(r)).collect();
+        for (id, rx) in rxs.into_iter().enumerate() {
+            match rx.and_then(|rx| drain_stream(&rx)) {
+                Ok((streamed, resp)) => {
+                    anyhow::ensure!(streamed == resp.tokens, "stream/response mismatch");
+                    completed += 1;
+                    tokens += streamed.len() as u64;
+                    println!("request id={id} tokens={} (streamed)", streamed.len());
+                }
+                Err(_) => rejected += 1,
+            }
+        }
+        println!("streamed requests={completed} tokens={tokens} rejected={rejected}");
+    } else {
+        let rxs: Vec<_> = reqs.into_iter().map(|r| router.submit(r)).collect();
+        for rx in rxs {
+            match rx.and_then(|rx| subgen::server::recv_reply(&rx)) {
+                Ok(resp) => {
+                    completed += 1;
+                    tokens += resp.tokens.len() as u64;
+                }
+                Err(_) => rejected += 1,
+            }
+        }
+        println!("completed requests={completed} tokens={tokens} rejected={rejected}");
+    }
+
+    let snap = router.shutdown()?;
+    drop(exporter);
+    for w in &snap.workers {
+        println!(
+            "cluster worker={} dispatched={} completed={} rejected={} tokens={}",
+            w.worker, w.dispatched, w.completed, w.rejected, w.tokens
+        );
+    }
+    let lat = &snap.latency;
+    println!(
+        "cluster aggregate tokens_per_sec={:.1} completed={} rejected={} p50={:?} p95={:?} \
+         p99={:?}",
+        snap.tokens_per_sec, snap.completed, snap.rejected, lat.p50, lat.p95, lat.p99
+    );
+    Ok(())
 }

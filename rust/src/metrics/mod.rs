@@ -37,6 +37,36 @@ impl Counter {
     }
 }
 
+/// Lock-free last-value gauge (queue depths, active sequences).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    value: AtomicU64,
+}
+
+impl Gauge {
+    /// New gauge at zero.
+    pub const fn new() -> Self {
+        Self { value: AtomicU64::new(0) }
+    }
+
+    /// Overwrite the current value.
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.value.store(v, Ordering::Relaxed);
+    }
+
+    /// Add `n` (merging gauges across workers).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
 /// Log-bucketed latency histogram covering 100ns .. ~100s.
 ///
 /// Buckets: 8 per octave over 40 octaves (320 buckets), each recording
@@ -123,6 +153,11 @@ impl Histogram {
         }
     }
 
+    /// Total recorded time.
+    pub fn sum(&self) -> Duration {
+        Duration::from_nanos(self.sum_ns.load(Ordering::Relaxed))
+    }
+
     /// Approximate quantile (q in [0,1]).
     pub fn quantile(&self, q: f64) -> Duration {
         let total = self.count();
@@ -140,6 +175,51 @@ impl Histogram {
         self.max()
     }
 
+    /// Median latency.
+    pub fn p50(&self) -> Duration {
+        self.quantile(0.50)
+    }
+
+    /// 95th-percentile latency.
+    pub fn p95(&self) -> Duration {
+        self.quantile(0.95)
+    }
+
+    /// 99th-percentile latency.
+    pub fn p99(&self) -> Duration {
+        self.quantile(0.99)
+    }
+
+    /// Fold `other`'s samples into `self` (cluster-wide aggregation).
+    /// Bucket counts add exactly, so merged quantiles are the quantiles
+    /// of the union stream (same ≤ ~9% bucket-interpolation error).
+    pub fn merge_from(&self, other: &Histogram) {
+        for (mine, theirs) in self.buckets.iter().zip(other.buckets.iter()) {
+            let v = theirs.load(Ordering::Relaxed);
+            if v > 0 {
+                mine.fetch_add(v, Ordering::Relaxed);
+            }
+        }
+        self.count.fetch_add(other.count.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.sum_ns.fetch_add(other.sum_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.max_ns.fetch_max(other.max_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.min_ns.fetch_min(other.min_ns.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of the distribution's headline statistics
+    /// (what snapshots and the Prometheus exporter report).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            count: self.count(),
+            sum: self.sum(),
+            mean: self.mean(),
+            p50: self.p50(),
+            p95: self.p95(),
+            p99: self.p99(),
+            max: self.max(),
+        }
+    }
+
     /// Render a one-line summary: count/mean/p50/p90/p99/max.
     pub fn summary(&self) -> String {
         format!(
@@ -152,6 +232,27 @@ impl Histogram {
             self.max()
         )
     }
+}
+
+/// Frozen headline statistics of a [`Histogram`] — plain data, safe to
+/// ship across threads or format into reports after the histogram
+/// itself has moved on.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HistogramSnapshot {
+    /// Number of samples.
+    pub count: u64,
+    /// Total recorded time.
+    pub sum: Duration,
+    /// Mean latency.
+    pub mean: Duration,
+    /// Median.
+    pub p50: Duration,
+    /// 95th percentile.
+    pub p95: Duration,
+    /// 99th percentile.
+    pub p99: Duration,
+    /// Max observed.
+    pub max: Duration,
 }
 
 /// Wall-clock throughput meter.
@@ -254,6 +355,68 @@ mod tests {
             j.join().unwrap();
         }
         assert_eq!(h.count(), 4000);
+    }
+
+    #[test]
+    fn gauge_set_and_add() {
+        let g = Gauge::new();
+        g.set(7);
+        assert_eq!(g.get(), 7);
+        g.add(3);
+        assert_eq!(g.get(), 10);
+        g.set(1);
+        assert_eq!(g.get(), 1);
+    }
+
+    #[test]
+    fn histogram_merge_matches_union_stream() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let union = Histogram::new();
+        for us in 1..=500u64 {
+            a.record(Duration::from_micros(us));
+            union.record(Duration::from_micros(us));
+        }
+        for us in 501..=1000u64 {
+            b.record(Duration::from_micros(us));
+            union.record(Duration::from_micros(us));
+        }
+        a.merge_from(&b);
+        assert_eq!(a.count(), union.count());
+        assert_eq!(a.sum(), union.sum());
+        assert_eq!(a.max(), union.max());
+        assert_eq!(a.min(), union.min());
+        for q in [0.5, 0.95, 0.99] {
+            assert_eq!(a.quantile(q), union.quantile(q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn histogram_merge_from_empty_keeps_stats() {
+        let a = Histogram::new();
+        a.record(Duration::from_micros(5));
+        a.merge_from(&Histogram::new());
+        assert_eq!(a.count(), 1);
+        assert_eq!(a.min(), Duration::from_micros(5));
+        assert_eq!(a.max(), Duration::from_micros(5));
+    }
+
+    #[test]
+    fn snapshot_carries_quantiles() {
+        let h = Histogram::new();
+        for us in 1..=100u64 {
+            h.record(Duration::from_micros(us));
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.p50, h.quantile(0.5));
+        assert_eq!(s.p95, h.quantile(0.95));
+        assert_eq!(s.p99, h.quantile(0.99));
+        assert_eq!(s.max, h.max());
+        assert!(s.sum >= Duration::from_micros(5050));
+        let empty = Histogram::new().snapshot();
+        assert_eq!(empty.count, 0);
+        assert_eq!(empty.p99, Duration::ZERO);
     }
 
     #[test]

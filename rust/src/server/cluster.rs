@@ -1,0 +1,549 @@
+//! Sharded multi-worker serving runtime: a [`Router`] in front of `W`
+//! worker threads, each running the single-threaded [`super::serve`]
+//! loop over its own executor instance.
+//!
+//! Executors are not `Send` (the PJRT runtime is thread-bound), so the
+//! router never moves one across threads: it ships an
+//! [`ExecutorFactory`] closure to each worker, which builds its own
+//! executor locally. Dispatch is pluggable ([`Balancer`];
+//! least-outstanding-work by default, round-robin on ties) with sticky
+//! session affinity layered on top: a request carrying
+//! `Request::session_id` always hashes to the same worker, so
+//! multi-turn traffic lands on the engine holding its state.
+//!
+//! Observability is lock-free: each worker's engine records into an
+//! `Arc<EngineStats>` (atomic counters/histograms) that the router and
+//! the Prometheus exporter ([`super::metrics_export`]) read live —
+//! no snapshot channels, no pauses. [`Router::shutdown`] stops
+//! admission, drains every worker's queued + in-flight sequences, joins
+//! the threads, and returns the final merged [`ClusterSnapshot`].
+
+use super::{
+    channel, serve_with_stats, ServerHandle, ServerReply, StreamEvent, SubmitError, SubmitTarget,
+};
+use crate::coordinator::{EngineConfig, EngineStats, Request, Response, StepExecutor};
+use crate::metrics::HistogramSnapshot;
+use crate::rng::SplitMix64;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Per-worker executor factory: called once on each worker thread with
+/// the worker index, so non-`Send` executors are built where they run.
+pub trait ExecutorFactory<E>: Fn(usize) -> E + Send + Sync {}
+
+impl<E, F: Fn(usize) -> E + Send + Sync> ExecutorFactory<E> for F {}
+
+/// Pluggable dispatch policy for session-less requests. The router
+/// calls [`Balancer::pick`] with each worker's outstanding request
+/// count (dispatched − completed − rejected).
+pub trait Balancer: Send {
+    /// Choose a worker index in `0..outstanding.len()`.
+    fn pick(&mut self, outstanding: &[u64], req: &Request) -> usize;
+}
+
+/// Least-outstanding-work balancing with a rotating tie-break, so an
+/// idle cluster still spreads sequential traffic instead of piling
+/// everything on worker 0.
+pub struct LeastOutstanding {
+    next: usize,
+}
+
+impl LeastOutstanding {
+    /// Fresh balancer (tie-break starts at worker 0).
+    pub fn new() -> Self {
+        Self { next: 0 }
+    }
+}
+
+impl Balancer for LeastOutstanding {
+    fn pick(&mut self, outstanding: &[u64], _req: &Request) -> usize {
+        let w = outstanding.len();
+        let mut best = self.next % w;
+        for off in 0..w {
+            let i = (self.next + off) % w;
+            if outstanding[i] < outstanding[best] {
+                best = i;
+            }
+        }
+        self.next = (best + 1) % w;
+        best
+    }
+}
+
+/// Plain round-robin dispatch (ignores load).
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    /// Fresh round-robin state.
+    pub fn new() -> Self {
+        Self { next: 0 }
+    }
+}
+
+impl Balancer for RoundRobin {
+    fn pick(&mut self, outstanding: &[u64], _req: &Request) -> usize {
+        let i = self.next % outstanding.len();
+        self.next = self.next.wrapping_add(1);
+        i
+    }
+}
+
+/// One worker's shared observability state.
+struct WorkerMetrics {
+    stats: Arc<EngineStats>,
+    /// Requests the router has handed to this worker's channel.
+    dispatched: AtomicU64,
+}
+
+/// Live, lock-free view of every worker's counters. `Send + Sync`:
+/// clone the `Arc` into a metrics exporter thread and read while the
+/// cluster serves.
+pub struct ClusterMetrics {
+    workers: Vec<WorkerMetrics>,
+    started: Instant,
+}
+
+impl ClusterMetrics {
+    /// Number of workers.
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// One worker's engine stats (live).
+    pub fn worker_stats(&self, w: usize) -> &Arc<EngineStats> {
+        &self.workers[w].stats
+    }
+
+    /// Requests dispatched to worker `w` whose terminal reply has not
+    /// been produced yet (the balancing signal).
+    pub fn outstanding(&self, w: usize) -> u64 {
+        let m = &self.workers[w];
+        let settled = m.stats.completed.get() + m.stats.rejected.get();
+        m.dispatched.load(Ordering::Relaxed).saturating_sub(settled)
+    }
+
+    /// Point-in-time aggregate across all workers: per-worker stats plus
+    /// merged counters/histograms and wall-clock tokens/sec. The merge
+    /// itself is [`EngineStats::merge_from`] — one implementation for
+    /// every cluster-wide aggregation.
+    pub fn snapshot(&self) -> ClusterSnapshot {
+        let merged = EngineStats::default();
+        let mut workers = Vec::with_capacity(self.workers.len());
+        let mut dispatched = 0u64;
+        for (i, m) in self.workers.iter().enumerate() {
+            let s = &m.stats;
+            merged.merge_from(s);
+            let stat = WorkerStat {
+                worker: i,
+                dispatched: m.dispatched.load(Ordering::Relaxed),
+                completed: s.completed.get(),
+                rejected: s.rejected.get(),
+                tokens: s.tokens.get(),
+                queued: s.queue_depth.get(),
+                active: s.active.get(),
+                outstanding: self.outstanding(i),
+                latency: s.latency.snapshot(),
+                tick_latency: s.tick_latency.snapshot(),
+            };
+            dispatched += stat.dispatched;
+            workers.push(stat);
+        }
+        let uptime = self.started.elapsed();
+        ClusterSnapshot {
+            workers,
+            dispatched,
+            completed: merged.completed.get(),
+            rejected: merged.rejected.get(),
+            tokens: merged.tokens.get(),
+            queued: merged.queue_depth.get(),
+            active: merged.active.get(),
+            latency: merged.latency.snapshot(),
+            tick_latency: merged.tick_latency.snapshot(),
+            tokens_per_sec: merged.tokens.get() as f64 / uptime.as_secs_f64().max(1e-9),
+            uptime,
+        }
+    }
+}
+
+/// One worker's counters at snapshot time.
+#[derive(Debug, Clone)]
+pub struct WorkerStat {
+    /// Worker index.
+    pub worker: usize,
+    /// Requests the router dispatched here.
+    pub dispatched: u64,
+    /// Requests completed.
+    pub completed: u64,
+    /// Requests rejected (backpressure / malformed).
+    pub rejected: u64,
+    /// Tokens generated.
+    pub tokens: u64,
+    /// Requests queued for admission (gauge).
+    pub queued: u64,
+    /// Sequences actively decoding (gauge).
+    pub active: u64,
+    /// Dispatched − completed − rejected.
+    pub outstanding: u64,
+    /// End-to-end request latency.
+    pub latency: HistogramSnapshot,
+    /// Per-decode-tick latency.
+    pub tick_latency: HistogramSnapshot,
+}
+
+/// Cluster-wide aggregate: per-worker stats plus exact merges (counter
+/// sums; histograms merged bucket-wise, so quantiles are quantiles of
+/// the union stream).
+#[derive(Debug, Clone)]
+pub struct ClusterSnapshot {
+    /// Per-worker breakdown.
+    pub workers: Vec<WorkerStat>,
+    /// Σ dispatched.
+    pub dispatched: u64,
+    /// Σ completed.
+    pub completed: u64,
+    /// Σ rejected.
+    pub rejected: u64,
+    /// Σ tokens generated.
+    pub tokens: u64,
+    /// Σ queued (gauge).
+    pub queued: u64,
+    /// Σ actively decoding (gauge).
+    pub active: u64,
+    /// Merged end-to-end latency distribution.
+    pub latency: HistogramSnapshot,
+    /// Merged per-tick latency distribution.
+    pub tick_latency: HistogramSnapshot,
+    /// Generated tokens per wall-clock second since spawn.
+    pub tokens_per_sec: f64,
+    /// Wall time since the router spawned.
+    pub uptime: Duration,
+}
+
+impl ClusterSnapshot {
+    /// Shape one engine's stats as a 1-worker cluster snapshot — for
+    /// single-engine serving paths (e.g. the non-`Send` PJRT executor)
+    /// that want to print the same report as a router. `dispatched` is
+    /// the front-end's own count of requests handed to the engine.
+    pub fn from_engine_stats(
+        stats: &EngineStats,
+        dispatched: u64,
+        tokens_per_sec: f64,
+        uptime: Duration,
+    ) -> ClusterSnapshot {
+        let settled = stats.completed.get() + stats.rejected.get();
+        let stat = WorkerStat {
+            worker: 0,
+            dispatched,
+            completed: stats.completed.get(),
+            rejected: stats.rejected.get(),
+            tokens: stats.tokens.get(),
+            queued: stats.queue_depth.get(),
+            active: stats.active.get(),
+            outstanding: dispatched.saturating_sub(settled),
+            latency: stats.latency.snapshot(),
+            tick_latency: stats.tick_latency.snapshot(),
+        };
+        ClusterSnapshot {
+            dispatched: stat.dispatched,
+            completed: stat.completed,
+            rejected: stat.rejected,
+            tokens: stat.tokens,
+            queued: stat.queued,
+            active: stat.active,
+            latency: stat.latency,
+            tick_latency: stat.tick_latency,
+            workers: vec![stat],
+            tokens_per_sec,
+            uptime,
+        }
+    }
+}
+
+/// One worker thread: its inbox handle and join handle.
+struct Worker {
+    handle: ServerHandle,
+    join: JoinHandle<Result<Arc<EngineStats>>>,
+}
+
+/// Front door of the sharded serving runtime. Spawn with
+/// [`Router::spawn`], submit via [`Router::submit`] /
+/// [`Router::submit_streaming`] (or through [`SubmitTarget`] for
+/// `LoadGen`), observe via [`Router::snapshot`], and retire with
+/// [`Router::shutdown`].
+pub struct Router {
+    workers: Vec<Worker>,
+    metrics: Arc<ClusterMetrics>,
+    balancer: Mutex<Box<dyn Balancer>>,
+}
+
+impl Router {
+    /// Spawn `workers` worker threads, each building its own executor
+    /// via `factory(worker_index)` and running the serve loop over it
+    /// with a clone of `cfg`. Default dispatch is [`LeastOutstanding`].
+    pub fn spawn<E, F>(workers: usize, cfg: EngineConfig, factory: F) -> Result<Router>
+    where
+        E: StepExecutor + 'static,
+        F: ExecutorFactory<E> + 'static,
+    {
+        anyhow::ensure!(workers >= 1, "router needs at least one worker");
+        let factory = Arc::new(factory);
+        let mut ws = Vec::with_capacity(workers);
+        let mut wm = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (handle, rx) = channel();
+            let stats = Arc::new(EngineStats::default());
+            let worker_stats = Arc::clone(&stats);
+            let worker_cfg = cfg.clone();
+            let worker_factory = Arc::clone(&factory);
+            let join = std::thread::Builder::new()
+                .name(format!("subgen-worker-{w}"))
+                .spawn(move || {
+                    let exec = (*worker_factory)(w);
+                    serve_with_stats(&exec, worker_cfg, rx, worker_stats)
+                })?;
+            ws.push(Worker { handle, join });
+            wm.push(WorkerMetrics { stats, dispatched: AtomicU64::new(0) });
+        }
+        Ok(Router {
+            workers: ws,
+            metrics: Arc::new(ClusterMetrics { workers: wm, started: Instant::now() }),
+            balancer: Mutex::new(Box::new(LeastOutstanding::new())),
+        })
+    }
+
+    /// Replace the dispatch policy (builder style).
+    pub fn with_balancer(self, balancer: Box<dyn Balancer>) -> Self {
+        *self.balancer.lock().unwrap() = balancer;
+        self
+    }
+
+    /// Number of workers.
+    pub fn num_workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Shareable live metrics (hand a clone to a [`super::MetricsServer`]).
+    pub fn metrics(&self) -> Arc<ClusterMetrics> {
+        Arc::clone(&self.metrics)
+    }
+
+    /// Point-in-time cluster aggregate.
+    pub fn snapshot(&self) -> ClusterSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// The worker a session id sticks to (stable for the router's
+    /// lifetime: a pure hash of the id modulo the worker count).
+    pub fn worker_for_session(&self, session_id: u64) -> usize {
+        (SplitMix64::mix(session_id) % self.workers.len() as u64) as usize
+    }
+
+    /// Route a request: sticky by session hash when `session_id` is
+    /// set, otherwise whatever the balancer picks from live
+    /// outstanding-work counts.
+    fn route(&self, req: &Request) -> usize {
+        if let Some(sid) = req.session_id {
+            return self.worker_for_session(sid);
+        }
+        if self.workers.len() == 1 {
+            return 0;
+        }
+        let outstanding: Vec<u64> =
+            (0..self.workers.len()).map(|w| self.metrics.outstanding(w)).collect();
+        self.balancer.lock().unwrap().pick(&outstanding, req)
+    }
+
+    /// Count a dispatch to `w` *before* handing the request over, so a
+    /// fast worker can never make completed+rejected exceed dispatched
+    /// in a concurrent snapshot; unwound if the send fails.
+    fn dispatch<T>(
+        &self,
+        w: usize,
+        send: impl FnOnce() -> Result<T, SubmitError>,
+    ) -> Result<T, SubmitError> {
+        let counter = &self.metrics.workers[w].dispatched;
+        counter.fetch_add(1, Ordering::Relaxed);
+        let res = send();
+        if res.is_err() {
+            counter.fetch_sub(1, Ordering::Relaxed);
+        }
+        res
+    }
+
+    /// Submit on the blocking path; returns the terminal-reply receiver.
+    pub fn submit(&self, req: Request) -> Result<Receiver<ServerReply>, SubmitError> {
+        let w = self.route(&req);
+        self.dispatch(w, || self.workers[w].handle.submit(req))
+    }
+
+    /// Submit and block for the response.
+    pub fn submit_blocking(&self, req: Request) -> Result<Response, SubmitError> {
+        super::recv_reply(&self.submit(req)?)
+    }
+
+    /// Submit on the streaming path; tokens arrive as the worker's
+    /// engine emits them, then a terminal `Done`/`Rejected`.
+    pub fn submit_streaming(&self, req: Request) -> Result<Receiver<StreamEvent>, SubmitError> {
+        let w = self.route(&req);
+        self.dispatch(w, || self.workers[w].handle.submit_streaming(req))
+    }
+
+    /// Graceful drain: stop admission (consumes the router), ask every
+    /// worker to finish its queued + in-flight sequences, join the
+    /// threads, and return the final merged snapshot. Requests
+    /// dispatched before this call still complete — their `Shutdown`
+    /// message is ordered behind them in each worker's inbox.
+    pub fn shutdown(self) -> Result<ClusterSnapshot> {
+        let Router { workers, metrics, balancer: _ } = self;
+        for w in &workers {
+            w.handle.shutdown();
+        }
+        for w in workers {
+            match w.join.join() {
+                Ok(res) => {
+                    res?;
+                }
+                Err(_) => anyhow::bail!("worker thread panicked"),
+            }
+        }
+        Ok(metrics.snapshot())
+    }
+}
+
+impl SubmitTarget for Router {
+    fn submit(&self, req: Request) -> Result<Receiver<ServerReply>, SubmitError> {
+        Router::submit(self, req)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::MockExecutor;
+
+    fn mock_router(workers: usize) -> Router {
+        Router::spawn(workers, EngineConfig::default(), |_w| MockExecutor::small()).unwrap()
+    }
+
+    #[test]
+    fn router_round_trips_requests() {
+        let router = mock_router(2);
+        for id in 0..6 {
+            let resp = router.submit_blocking(Request::exact(id, vec![3], 2)).unwrap();
+            assert_eq!(resp.tokens, vec![4, 5]);
+        }
+        let snap = router.shutdown().unwrap();
+        assert_eq!(snap.completed, 6);
+        assert_eq!(snap.dispatched, 6);
+        assert_eq!(snap.tokens, 12);
+    }
+
+    #[test]
+    fn idle_ties_rotate_across_workers() {
+        // Sequential (closed-loop) traffic still spreads: the
+        // least-outstanding balancer rotates its tie-break.
+        let router = mock_router(2);
+        for id in 0..8 {
+            router.submit_blocking(Request::exact(id, vec![1], 1)).unwrap();
+        }
+        let snap = router.shutdown().unwrap();
+        assert_eq!(snap.workers[0].dispatched, 4);
+        assert_eq!(snap.workers[1].dispatched, 4);
+    }
+
+    #[test]
+    fn session_affinity_is_sticky_and_hash_stable() {
+        let router = mock_router(3);
+        let w = router.worker_for_session(42);
+        for id in 0..5 {
+            let req = Request::exact(id, vec![1], 1).with_session(42);
+            router.submit_blocking(req).unwrap();
+        }
+        let snap = router.shutdown().unwrap();
+        for stat in &snap.workers {
+            let want = if stat.worker == w { 5 } else { 0 };
+            assert_eq!(stat.dispatched, want, "worker {}", stat.worker);
+        }
+    }
+
+    #[test]
+    fn balancers_pick_in_range_and_prefer_idle() {
+        let mut lo = LeastOutstanding::new();
+        let req = Request::exact(0, vec![1], 1);
+        assert_eq!(lo.pick(&[3, 0, 2], &req), 1);
+        // Tie rotates past the previous pick.
+        let first = lo.pick(&[1, 1, 1], &req);
+        let second = lo.pick(&[1, 1, 1], &req);
+        assert_ne!(first, second);
+        let mut rr = RoundRobin::new();
+        let picks: Vec<usize> = (0..4).map(|_| rr.pick(&[0, 0], &req)).collect();
+        assert_eq!(picks, vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn router_streaming_matches_blocking() {
+        let router = mock_router(2);
+        let blocking = router.submit_blocking(Request::exact(0, vec![3], 3)).unwrap();
+        let rx = router.submit_streaming(Request::exact(1, vec![3], 3)).unwrap();
+        let (tokens, resp) = crate::server::drain_stream(&rx).unwrap();
+        assert_eq!(tokens, blocking.tokens);
+        assert_eq!(resp.tokens, tokens);
+        router.shutdown().unwrap();
+    }
+
+    #[test]
+    fn rejections_surface_through_router() {
+        let router = mock_router(2);
+        let err = router.submit_blocking(Request::exact(0, vec![], 2)).unwrap_err();
+        assert_eq!(err, SubmitError::Rejected);
+        let snap = router.shutdown().unwrap();
+        assert_eq!(snap.rejected, 1);
+        assert_eq!(snap.completed, 0);
+    }
+
+    #[test]
+    fn shutdown_drains_dispatched_work() {
+        let router = mock_router(2);
+        let mut rxs = Vec::new();
+        for id in 0..10 {
+            rxs.push(router.submit(Request::exact(id, vec![2], 3)).unwrap());
+        }
+        // Shut down immediately: everything already dispatched must
+        // still complete (drain), nothing may hang.
+        let snap = router.shutdown().unwrap();
+        for rx in &rxs {
+            let resp = crate::server::recv_reply(rx).unwrap();
+            assert_eq!(resp.tokens.len(), 3);
+        }
+        assert_eq!(snap.completed, 10);
+        assert_eq!(snap.queued, 0);
+        assert_eq!(snap.active, 0);
+        // Merged counters equal the per-worker sums.
+        let sum: u64 = snap.workers.iter().map(|w| w.completed).sum();
+        assert_eq!(snap.completed, sum);
+        let tok: u64 = snap.workers.iter().map(|w| w.tokens).sum();
+        assert_eq!(snap.tokens, tok);
+        assert_eq!(snap.latency.count, sum);
+    }
+
+    #[test]
+    fn snapshot_merges_latency_counts() {
+        let router = mock_router(2);
+        for id in 0..6 {
+            router.submit_blocking(Request::exact(id, vec![1], 2)).unwrap();
+        }
+        let snap = router.snapshot();
+        let per_worker: u64 = snap.workers.iter().map(|w| w.latency.count).sum();
+        assert_eq!(snap.latency.count, per_worker);
+        assert_eq!(snap.latency.count, 6);
+        assert!(snap.tokens_per_sec > 0.0);
+        assert!(snap.latency.p99 >= snap.latency.p50);
+        router.shutdown().unwrap();
+    }
+}

@@ -1,6 +1,6 @@
 //! Open-loop Poisson load generator + latency capture.
 
-use super::ServerHandle;
+use super::{ServerReply, SubmitTarget};
 use crate::coordinator::Request;
 use crate::metrics::Histogram;
 use crate::rng::{Pcg64, Rng};
@@ -24,7 +24,7 @@ pub struct LoadGen {
 pub struct LoadGenReport {
     /// Requests completed.
     pub completed: usize,
-    /// Requests whose channel was dropped (rejected).
+    /// Requests rejected (backpressure) or dropped by the server.
     pub failed: usize,
     /// End-to-end latency distribution.
     pub latency: Histogram,
@@ -47,13 +47,14 @@ impl LoadGenReport {
 }
 
 impl LoadGen {
-    /// Run the open-loop experiment against a server handle. Arrivals
-    /// are scheduled on the wall clock; responses are collected as they
-    /// land so slow service shows up as latency, not reduced load.
-    pub fn run(mut self, handle: &ServerHandle) -> LoadGenReport {
+    /// Run the open-loop experiment against any [`SubmitTarget`] — one
+    /// engine loop or a sharded router. Arrivals are scheduled on the
+    /// wall clock; responses are collected as they land so slow service
+    /// shows up as latency, not reduced load.
+    pub fn run(mut self, target: &impl SubmitTarget) -> LoadGenReport {
         let mut rng = Pcg64::seed_from_u64(self.seed);
         let start = Instant::now();
-        let mut pending: Vec<(Instant, Receiver<crate::coordinator::Response>)> = Vec::new();
+        let mut pending: Vec<(Instant, Receiver<ServerReply>)> = Vec::new();
         let report_latency = Histogram::new();
         let mut failed = 0usize;
         let mut completed = 0usize;
@@ -69,16 +70,20 @@ impl LoadGen {
                 std::thread::sleep(next_arrival - now);
             }
             let req = (self.make_request)(id as u64);
-            match handle.submit(req) {
+            match target.submit(req) {
                 Ok(rx) => pending.push((Instant::now(), rx)),
                 Err(_) => failed += 1,
             }
             // Opportunistically harvest completions.
             pending.retain(|(sent, rx)| match rx.try_recv() {
-                Ok(resp) => {
+                Ok(ServerReply::Done(resp)) => {
                     report_latency.record(sent.elapsed());
                     completed += 1;
                     tokens += resp.tokens.len() as u64;
+                    false
+                }
+                Ok(ServerReply::Rejected) => {
+                    failed += 1;
                     false
                 }
                 Err(std::sync::mpsc::TryRecvError::Empty) => true,
@@ -91,12 +96,12 @@ impl LoadGen {
         // Drain the tail.
         for (sent, rx) in pending {
             match rx.recv() {
-                Ok(resp) => {
+                Ok(ServerReply::Done(resp)) => {
                     report_latency.record(sent.elapsed());
                     completed += 1;
                     tokens += resp.tokens.len() as u64;
                 }
-                Err(_) => failed += 1,
+                Ok(ServerReply::Rejected) | Err(_) => failed += 1,
             }
         }
         LoadGenReport {
@@ -134,6 +139,30 @@ mod tests {
         assert_eq!(report.tokens, 60);
         assert!(report.throughput_rps() > 0.0);
         assert_eq!(report.latency.count(), 20);
+        handle.shutdown();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn loadgen_counts_rejections_as_failed() {
+        let (handle, rx) = channel();
+        let t = std::thread::spawn(move || {
+            let exec = MockExecutor::small();
+            serve(&exec, EngineConfig::default(), rx).unwrap()
+        });
+        // Every third request is malformed (empty prompt) → rejected.
+        let report = LoadGen {
+            rate: 500.0,
+            requests: 9,
+            make_request: Box::new(|id| {
+                let prompt = if id % 3 == 0 { vec![] } else { vec![(id % 8) as i32] };
+                Request::exact(id, prompt, 2)
+            }),
+            seed: 2,
+        }
+        .run(&handle);
+        assert_eq!(report.completed, 6);
+        assert_eq!(report.failed, 3);
         handle.shutdown();
         t.join().unwrap();
     }

@@ -1,0 +1,244 @@
+//! Cluster observability export: Prometheus text format (0.0.4) over a
+//! minimal std-lib HTTP endpoint.
+//!
+//! [`prometheus_text`] renders a [`ClusterSnapshot`] — per-worker
+//! counters with a `worker` label, cluster totals, and latency
+//! summaries with real p50/p95/p99 quantiles from the log-bucketed
+//! [`crate::metrics::Histogram`]. [`MetricsServer`] binds a TCP port
+//! and answers every request with a fresh snapshot, so `curl
+//! localhost:PORT/metrics` (or a Prometheus scrape) works while the
+//! cluster serves; no external crates, no tokio.
+
+use super::cluster::{ClusterMetrics, ClusterSnapshot};
+use anyhow::Result;
+use std::fmt::Write as _;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Render a snapshot in Prometheus text exposition format.
+///
+/// Per-worker series live under `subgen_worker_*` (labelled
+/// `{worker="i"}`); cluster aggregates are *separate families* under
+/// `subgen_*`, so `sum()` over either family never double-counts.
+pub fn prometheus_text(snap: &ClusterSnapshot) -> String {
+    let mut s = String::with_capacity(2048);
+    let _ = writeln!(s, "# HELP subgen_workers Worker engines in the cluster.");
+    let _ = writeln!(s, "# TYPE subgen_workers gauge");
+    let _ = writeln!(s, "subgen_workers {}", snap.workers.len());
+    let _ = writeln!(s, "# HELP subgen_uptime_seconds Wall time since the router spawned.");
+    let _ = writeln!(s, "# TYPE subgen_uptime_seconds gauge");
+    let _ = writeln!(s, "subgen_uptime_seconds {:.3}", snap.uptime.as_secs_f64());
+    let _ = writeln!(s, "# HELP subgen_tokens_per_second Generated tokens per second.");
+    let _ = writeln!(s, "# TYPE subgen_tokens_per_second gauge");
+    let _ = writeln!(s, "subgen_tokens_per_second {:.3}", snap.tokens_per_sec);
+
+    let counters: [(&str, &str, fn(&super::WorkerStat) -> u64, u64); 4] = [
+        ("dispatched_total", "Requests dispatched.", |w| w.dispatched, snap.dispatched),
+        ("completed_total", "Requests completed.", |w| w.completed, snap.completed),
+        ("rejected_total", "Requests rejected.", |w| w.rejected, snap.rejected),
+        ("tokens_total", "Tokens generated.", |w| w.tokens, snap.tokens),
+    ];
+    for (stem, help, get, total) in counters {
+        family(&mut s, "counter", stem, help, snap, get, total);
+    }
+    let gauges: [(&str, &str, fn(&super::WorkerStat) -> u64, u64); 2] = [
+        ("queue_depth", "Requests queued for admission.", |w| w.queued, snap.queued),
+        ("active_sequences", "Sequences actively decoding.", |w| w.active, snap.active),
+    ];
+    for (stem, help, get, total) in gauges {
+        family(&mut s, "gauge", stem, help, snap, get, total);
+    }
+
+    // Latency summaries: per-worker distributions under the worker
+    // family, the bucket-merged union distribution under the cluster
+    // family.
+    let name = "subgen_worker_request_latency_seconds";
+    let _ = writeln!(s, "# HELP {name} End-to-end request latency per worker.");
+    let _ = writeln!(s, "# TYPE {name} summary");
+    for w in &snap.workers {
+        let label = format!("worker=\"{}\",", w.worker);
+        summary_lines(&mut s, name, &label, &w.latency);
+    }
+    let name = "subgen_request_latency_seconds";
+    let _ = writeln!(s, "# HELP {name} End-to-end request latency (cluster-merged).");
+    let _ = writeln!(s, "# TYPE {name} summary");
+    summary_lines(&mut s, name, "", &snap.latency);
+    let name = "subgen_tick_latency_seconds";
+    let _ = writeln!(s, "# HELP {name} Per-decode-tick latency (cluster-merged).");
+    let _ = writeln!(s, "# TYPE {name} summary");
+    summary_lines(&mut s, name, "", &snap.tick_latency);
+    s
+}
+
+/// One metric stem as two families: `subgen_worker_<stem>{worker="i"}`
+/// per worker and the unlabelled `subgen_<stem>` cluster total.
+fn family(
+    s: &mut String,
+    kind: &str,
+    stem: &str,
+    help: &str,
+    snap: &ClusterSnapshot,
+    get: fn(&super::WorkerStat) -> u64,
+    total: u64,
+) {
+    let _ = writeln!(s, "# HELP subgen_worker_{stem} {help} (per worker)");
+    let _ = writeln!(s, "# TYPE subgen_worker_{stem} {kind}");
+    for w in &snap.workers {
+        let _ = writeln!(s, "subgen_worker_{stem}{{worker=\"{}\"}} {}", w.worker, get(w));
+    }
+    let _ = writeln!(s, "# HELP subgen_{stem} {help} (cluster total)");
+    let _ = writeln!(s, "# TYPE subgen_{stem} {kind}");
+    let _ = writeln!(s, "subgen_{stem} {total}");
+}
+
+fn summary_lines(
+    s: &mut String,
+    name: &str,
+    label_prefix: &str,
+    h: &crate::metrics::HistogramSnapshot,
+) {
+    for (q, v) in [("0.5", h.p50), ("0.95", h.p95), ("0.99", h.p99)] {
+        let _ = writeln!(s, "{name}{{{label_prefix}quantile=\"{q}\"}} {:.9}", v.as_secs_f64());
+    }
+    let suffix = if label_prefix.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", label_prefix.trim_end_matches(','))
+    };
+    let _ = writeln!(s, "{name}_sum{suffix} {:.9}", h.sum.as_secs_f64());
+    let _ = writeln!(s, "{name}_count{suffix} {}", h.count);
+}
+
+/// Minimal HTTP/1.1 responder serving a fresh Prometheus snapshot on
+/// every request (any path). Bind with port 0 to let the OS pick; the
+/// accept loop polls non-blockingly so [`MetricsServer::stop`] (or
+/// `Drop`) shuts it down promptly.
+pub struct MetricsServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:9184"`) and serve `metrics` until
+    /// stopped.
+    pub fn bind(addr: &str, metrics: Arc<ClusterMetrics>) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let join = std::thread::Builder::new().name("subgen-metrics".into()).spawn(move || {
+            while !stop_flag.load(Ordering::Relaxed) {
+                match listener.accept() {
+                    Ok((mut sock, _peer)) => {
+                        let _ = sock.set_nonblocking(false);
+                        let _ = sock.set_read_timeout(Some(Duration::from_millis(500)));
+                        // Read (and ignore) the request head; one buffer
+                        // is ample for a scrape's GET line + headers.
+                        let mut buf = [0u8; 2048];
+                        let _ = sock.read(&mut buf);
+                        let body = prometheus_text(&metrics.snapshot());
+                        let resp = format!(
+                            "HTTP/1.1 200 OK\r\nContent-Type: text/plain; version=0.0.4; \
+                             charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+                            body.len(),
+                            body
+                        );
+                        let _ = sock.write_all(resp.as_bytes());
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
+                    // Transient accept errors (ECONNABORTED, EMFILE, …)
+                    // must not kill the endpoint for the process
+                    // lifetime; only the stop flag ends the loop.
+                    Err(_) => std::thread::sleep(Duration::from_millis(10)),
+                }
+            }
+        })?;
+        Ok(MetricsServer { addr: local, stop, join: Some(join) })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop the accept loop and join the thread.
+    pub fn stop(mut self) {
+        self.halt();
+    }
+
+    fn halt(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.halt();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{EngineConfig, MockExecutor, Request};
+    use crate::server::Router;
+
+    fn served_router() -> Router {
+        let router =
+            Router::spawn(2, EngineConfig::default(), |_w| MockExecutor::small()).unwrap();
+        for id in 0..4 {
+            router.submit_blocking(Request::exact(id, vec![3], 2)).unwrap();
+        }
+        router
+    }
+
+    #[test]
+    fn prometheus_text_has_workers_totals_and_quantiles() {
+        let router = served_router();
+        let text = prometheus_text(&router.snapshot());
+        assert!(text.contains("subgen_workers 2"), "{text}");
+        // Per-worker and cluster series are separate families, so
+        // sum() over either never double-counts.
+        assert!(text.contains("subgen_worker_completed_total{worker=\"0\"}"), "{text}");
+        assert!(text.contains("subgen_worker_completed_total{worker=\"1\"}"), "{text}");
+        assert!(text.contains("\nsubgen_completed_total 4"), "{text}");
+        assert!(text.contains("\nsubgen_tokens_total 8"), "{text}");
+        assert!(!text.contains("subgen_completed_total{worker"), "{text}");
+        assert!(text.contains("subgen_request_latency_seconds{quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("subgen_request_latency_seconds{quantile=\"0.95\"}"), "{text}");
+        assert!(text.contains("subgen_request_latency_seconds{quantile=\"0.99\"}"), "{text}");
+        assert!(text.contains("subgen_request_latency_seconds_count 4"), "{text}");
+        assert!(
+            text.contains("subgen_worker_request_latency_seconds{worker=\"0\",quantile=\"0.5\"}"),
+            "{text}"
+        );
+        router.shutdown().unwrap();
+    }
+
+    #[test]
+    fn metrics_endpoint_serves_scrapes() {
+        let router = served_router();
+        let server = MetricsServer::bind("127.0.0.1:0", router.metrics()).unwrap();
+        let mut sock = std::net::TcpStream::connect(server.addr()).unwrap();
+        sock.write_all(b"GET /metrics HTTP/1.1\r\nHost: localhost\r\n\r\n").unwrap();
+        let mut raw = String::new();
+        sock.read_to_string(&mut raw).unwrap();
+        drop(sock);
+        assert!(raw.starts_with("HTTP/1.1 200 OK"), "{raw}");
+        let body = raw.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+        assert!(body.contains("subgen_workers 2"), "{body}");
+        assert!(body.contains("subgen_completed_total 4"), "{body}");
+        server.stop();
+        router.shutdown().unwrap();
+    }
+}

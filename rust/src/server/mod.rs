@@ -1,23 +1,96 @@
-//! Thread + channel front-end over the engine, plus an open-loop
-//! Poisson load generator for the throughput experiments.
+//! Thread + channel front-end over the engine, the sharded multi-worker
+//! cluster runtime, and an open-loop Poisson load generator for the
+//! throughput experiments.
 //!
 //! tokio is unavailable offline; the serving loop is a dedicated engine
 //! thread fed by an mpsc channel — the same architecture (single model
 //! thread, concurrent submitters, continuous batching) at std-lib scale.
+//! [`cluster::Router`] shards that loop across `W` worker threads (one
+//! executor + engine each) behind one front door.
 
+pub mod cluster;
 mod loadgen;
+pub mod metrics_export;
 
+pub use cluster::{Balancer, ClusterMetrics, ClusterSnapshot, Router, WorkerStat};
 pub use loadgen::{LoadGen, LoadGenReport};
+pub use metrics_export::{prometheus_text, MetricsServer};
 
-use crate::coordinator::{Engine, EngineConfig, Request, Response, StepExecutor};
+use crate::coordinator::{Engine, EngineConfig, EngineStats, Request, Response, StepExecutor};
 use anyhow::Result;
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
 use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
+use std::sync::Arc;
 
 /// Messages into the engine thread (public only because it appears in
 /// [`serve`]'s signature; construct via [`ServerHandle`]).
 pub enum Msg {
-    Submit(Request, Sender<Response>),
+    /// Blocking-path submission: one terminal [`ServerReply`].
+    Submit(Request, Sender<ServerReply>),
+    /// Streaming-path submission: per-token [`StreamEvent`]s, then a
+    /// terminal `Done`/`Rejected`, then the sender is dropped.
+    SubmitStreaming(Request, Sender<StreamEvent>),
+    /// Stop admission and drain in-flight work.
     Shutdown,
+}
+
+/// Terminal reply on the blocking path. Explicit — the old protocol
+/// signalled rejection by dropping the sender, which leaked the
+/// responder entry and left `submit_blocking` hanging forever.
+#[derive(Debug, Clone)]
+pub enum ServerReply {
+    /// The request completed.
+    Done(Response),
+    /// The engine refused the request (backpressure or malformed).
+    Rejected,
+}
+
+/// One event on a streaming response channel.
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    /// One generated token, in emission order (`index` counts from 0).
+    Token {
+        /// Position in the generated sequence.
+        index: usize,
+        /// The token id.
+        token: i32,
+    },
+    /// Terminal: the full response (tokens repeated for convenience).
+    Done(Response),
+    /// Terminal: the engine refused the request.
+    Rejected,
+}
+
+/// Typed submission failure surfaced by [`ServerHandle`] and
+/// [`cluster::Router`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The engine refused the request: queue backpressure, an empty
+    /// prompt, or `max_new == 0`.
+    Rejected,
+    /// The serve loop is gone (shutdown or thread death).
+    EngineGone,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Rejected => write!(f, "request rejected by the engine"),
+            SubmitError::EngineGone => write!(f, "engine loop terminated"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Anything that accepts a request and hands back a terminal-reply
+/// receiver: a single engine loop ([`ServerHandle`]) or a sharded
+/// [`cluster::Router`]. [`LoadGen`] drives either.
+pub trait SubmitTarget {
+    /// Dispatch a request; `Err` only when the serving loop is gone.
+    fn submit(&self, req: Request) -> Result<Receiver<ServerReply>, SubmitError>;
 }
 
 /// Handle for submitting requests to a running engine loop.
@@ -27,19 +100,28 @@ pub struct ServerHandle {
 }
 
 impl ServerHandle {
-    /// Submit a request; returns the response receiver.
-    pub fn submit(&self, req: Request) -> Result<Receiver<Response>> {
+    /// Submit a request; returns the terminal-reply receiver.
+    ///
+    /// `req.id` must be unique among this loop's *in-flight* requests:
+    /// a duplicate of an id still queued or decoding is rejected
+    /// (completed ids may be reused).
+    pub fn submit(&self, req: Request) -> Result<Receiver<ServerReply>, SubmitError> {
         let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Msg::Submit(req, tx))
-            .map_err(|_| anyhow::anyhow!("engine loop terminated"))?;
+        self.tx.send(Msg::Submit(req, tx)).map_err(|_| SubmitError::EngineGone)?;
+        Ok(rx)
+    }
+
+    /// Submit for per-token streaming; returns the event receiver. The
+    /// channel closes cleanly after the terminal `Done`/`Rejected`.
+    pub fn submit_streaming(&self, req: Request) -> Result<Receiver<StreamEvent>, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Msg::SubmitStreaming(req, tx)).map_err(|_| SubmitError::EngineGone)?;
         Ok(rx)
     }
 
     /// Submit and block for the response.
-    pub fn submit_blocking(&self, req: Request) -> Result<Response> {
-        let rx = self.submit(req)?;
-        rx.recv().map_err(|_| anyhow::anyhow!("engine dropped the request"))
+    pub fn submit_blocking(&self, req: Request) -> Result<Response, SubmitError> {
+        recv_reply(&self.submit(req)?)
     }
 
     /// Ask the loop to stop after draining in-flight work.
@@ -48,20 +130,78 @@ impl ServerHandle {
     }
 }
 
+impl SubmitTarget for ServerHandle {
+    fn submit(&self, req: Request) -> Result<Receiver<ServerReply>, SubmitError> {
+        ServerHandle::submit(self, req)
+    }
+}
+
+/// Block on a terminal-reply receiver (the blocking path's tail).
+pub fn recv_reply(rx: &Receiver<ServerReply>) -> Result<Response, SubmitError> {
+    match rx.recv() {
+        Ok(ServerReply::Done(resp)) => Ok(resp),
+        Ok(ServerReply::Rejected) => Err(SubmitError::Rejected),
+        Err(_) => Err(SubmitError::EngineGone),
+    }
+}
+
+/// Drain a streaming channel to its terminal event, returning the
+/// streamed tokens and the final response. The token list must (and
+/// does) match `response.tokens` — pinned by tests.
+pub fn drain_stream(rx: &Receiver<StreamEvent>) -> Result<(Vec<i32>, Response), SubmitError> {
+    let mut tokens = Vec::new();
+    loop {
+        match rx.recv() {
+            Ok(StreamEvent::Token { index, token }) => {
+                debug_assert_eq!(index, tokens.len());
+                tokens.push(token);
+            }
+            Ok(StreamEvent::Done(resp)) => return Ok((tokens, resp)),
+            Ok(StreamEvent::Rejected) => return Err(SubmitError::Rejected),
+            Err(_) => return Err(SubmitError::EngineGone),
+        }
+    }
+}
+
+/// Where a pending request's reply goes (blocking or streaming).
+enum Responder {
+    Blocking(Sender<ServerReply>),
+    Streaming(Sender<StreamEvent>),
+}
+
 /// Run the engine loop on the *current* thread until shutdown.
 ///
 /// The PJRT-backed executor is not `Send`, so callers spawn a thread,
 /// build the runtime inside it, and call this (see
-/// `examples/serving_throughput.rs`). Returns on `Shutdown` after all
-/// in-flight sequences finish.
+/// [`cluster::Router`]). Returns on `Shutdown` after all in-flight
+/// sequences finish.
 pub fn serve<E: StepExecutor>(
     exec: &E,
     cfg: EngineConfig,
     rx: Receiver<Msg>,
-) -> Result<crate::coordinator::EngineStats> {
-    let mut engine = Engine::new(exec, cfg);
-    let mut responders: std::collections::HashMap<u64, Sender<Response>> =
-        std::collections::HashMap::new();
+) -> Result<Arc<EngineStats>> {
+    serve_with_stats(exec, cfg, rx, Arc::new(EngineStats::default()))
+}
+
+/// [`serve`] recording into caller-owned stats, so a router or metrics
+/// exporter on another thread can watch the counters live.
+pub fn serve_with_stats<E: StepExecutor>(
+    exec: &E,
+    cfg: EngineConfig,
+    rx: Receiver<Msg>,
+    stats: Arc<EngineStats>,
+) -> Result<Arc<EngineStats>> {
+    let mut engine = Engine::with_stats(exec, cfg, Arc::clone(&stats));
+    // Shared between the loop and the engine's token sink (same thread;
+    // the sink only fires inside `engine.tick()`, never while the loop
+    // holds a borrow).
+    let responders: Rc<RefCell<HashMap<u64, Responder>>> = Rc::new(RefCell::new(HashMap::new()));
+    let sink_map = Rc::clone(&responders);
+    engine.set_token_sink(Box::new(move |id, index, token| {
+        if let Some(Responder::Streaming(tx)) = sink_map.borrow().get(&id) {
+            let _ = tx.send(StreamEvent::Token { index, token });
+        }
+    }));
     let mut shutting_down = false;
     loop {
         // Drain the inbox without blocking while work is in flight;
@@ -70,7 +210,7 @@ pub fn serve<E: StepExecutor>(
             let msg = if engine.pending() == 0 && !shutting_down {
                 match rx.recv() {
                     Ok(m) => m,
-                    Err(_) => return Ok(engine.stats),
+                    Err(_) => return Ok(stats),
                 }
             } else {
                 match rx.try_recv() {
@@ -84,10 +224,30 @@ pub fn serve<E: StepExecutor>(
             };
             match msg {
                 Msg::Submit(req, tx) => {
-                    responders.insert(req.id, tx);
-                    if !engine.submit(req) {
-                        // Rejected: report by dropping the sender (the
-                        // caller sees a disconnected receiver).
+                    let id = req.id;
+                    // A duplicate of an in-flight id would overwrite its
+                    // responder and cross-deliver responses — reject it
+                    // (counted in stats so router accounting conserves).
+                    if responders.borrow().contains_key(&id) {
+                        stats.rejected.inc();
+                        let _ = tx.send(ServerReply::Rejected);
+                    } else if engine.submit(req) {
+                        responders.borrow_mut().insert(id, Responder::Blocking(tx));
+                    } else {
+                        // Explicit rejection; the sender then drops, so
+                        // the caller never hangs on a leaked responder.
+                        let _ = tx.send(ServerReply::Rejected);
+                    }
+                }
+                Msg::SubmitStreaming(req, tx) => {
+                    let id = req.id;
+                    if responders.borrow().contains_key(&id) {
+                        stats.rejected.inc();
+                        let _ = tx.send(StreamEvent::Rejected);
+                    } else if engine.submit(req) {
+                        responders.borrow_mut().insert(id, Responder::Streaming(tx));
+                    } else {
+                        let _ = tx.send(StreamEvent::Rejected);
                     }
                 }
                 Msg::Shutdown => shutting_down = true,
@@ -95,12 +255,18 @@ pub fn serve<E: StepExecutor>(
         }
         engine.tick()?;
         for resp in engine.take_responses() {
-            if let Some(tx) = responders.remove(&resp.id) {
-                let _ = tx.send(resp);
+            match responders.borrow_mut().remove(&resp.id) {
+                Some(Responder::Blocking(tx)) => {
+                    let _ = tx.send(ServerReply::Done(resp));
+                }
+                Some(Responder::Streaming(tx)) => {
+                    let _ = tx.send(StreamEvent::Done(resp));
+                }
+                None => {}
             }
         }
         if shutting_down && engine.pending() == 0 {
-            return Ok(engine.stats);
+            return Ok(stats);
         }
     }
 }
@@ -143,6 +309,7 @@ mod tests {
         });
         let req = Request {
             id: 4,
+            session_id: None,
             prompt: vec![2, 5, 7],
             max_new: 5,
             policy: "subgen".into(),
@@ -180,5 +347,128 @@ mod tests {
         assert_eq!(total, 12);
         handle.shutdown();
         t.join().unwrap();
+    }
+
+    #[test]
+    fn invalid_request_rejected_with_typed_error_not_hang() {
+        // Regression for the responder leak: a rejected request used to
+        // leave its sender in the map, so the blocking caller hung on a
+        // channel that would never close.
+        let (handle, rx) = channel();
+        let t = std::thread::spawn(move || {
+            let exec = MockExecutor::small();
+            serve(&exec, EngineConfig::default(), rx).unwrap()
+        });
+        let err = handle.submit_blocking(Request::exact(1, vec![], 2)).unwrap_err();
+        assert_eq!(err, SubmitError::Rejected);
+        let err = handle.submit_blocking(Request::exact(2, vec![1], 0)).unwrap_err();
+        assert_eq!(err, SubmitError::Rejected);
+        // The loop is still healthy afterwards.
+        let resp = handle.submit_blocking(Request::exact(3, vec![3], 2)).unwrap();
+        assert_eq!(resp.tokens, vec![4, 5]);
+        handle.shutdown();
+        let stats = t.join().unwrap();
+        assert_eq!(stats.rejected.get(), 2);
+        assert_eq!(stats.completed.get(), 1);
+    }
+
+    #[test]
+    fn queue_full_rejects_surplus_without_hanging() {
+        // Fill the channel *before* the serve thread starts: the drain
+        // loop then processes the whole burst before the first tick, so
+        // with queue_capacity 1 exactly one request is admitted and the
+        // surplus is rejected — deterministically.
+        let (handle, rx) = channel();
+        let mut receivers = Vec::new();
+        for id in 0..6 {
+            receivers.push(handle.submit(Request::exact(id, vec![1], 2)).unwrap());
+        }
+        let t = std::thread::spawn(move || {
+            let exec = MockExecutor::small();
+            let cfg = EngineConfig { queue_capacity: 1, ..Default::default() };
+            serve(&exec, cfg, rx).unwrap()
+        });
+        let (mut done, mut rejected) = (0, 0);
+        for rx in &receivers {
+            match recv_reply(rx) {
+                Ok(_) => done += 1,
+                Err(SubmitError::Rejected) => rejected += 1,
+                Err(SubmitError::EngineGone) => panic!("request dropped without a reply"),
+            }
+        }
+        assert_eq!(done, 1);
+        assert_eq!(rejected, 5);
+        handle.shutdown();
+        let stats = t.join().unwrap();
+        assert_eq!(stats.completed.get(), 1);
+        assert_eq!(stats.rejected.get(), 5);
+    }
+
+    #[test]
+    fn streaming_tokens_match_blocking_response() {
+        let (handle, rx) = channel();
+        let t = std::thread::spawn(move || {
+            let exec = MockExecutor::small();
+            serve(&exec, EngineConfig::default(), rx).unwrap()
+        });
+        let blocking = handle.submit_blocking(Request::exact(1, vec![3], 4)).unwrap();
+        let srx = handle.submit_streaming(Request::exact(2, vec![3], 4)).unwrap();
+        let (tokens, resp) = drain_stream(&srx).unwrap();
+        assert_eq!(tokens, blocking.tokens);
+        assert_eq!(resp.tokens, tokens);
+        // Terminal event closes the channel cleanly.
+        assert!(srx.recv().is_err());
+        handle.shutdown();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn streaming_rejection_closes_channel_cleanly() {
+        let (handle, rx) = channel();
+        let t = std::thread::spawn(move || {
+            let exec = MockExecutor::small();
+            serve(&exec, EngineConfig::default(), rx).unwrap()
+        });
+        let srx = handle.submit_streaming(Request::exact(1, vec![], 2)).unwrap();
+        assert_eq!(drain_stream(&srx).unwrap_err(), SubmitError::Rejected);
+        assert!(srx.recv().is_err());
+        handle.shutdown();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn duplicate_in_flight_id_rejected_not_cross_delivered() {
+        // Two clients racing on the same id: the second must be
+        // rejected, not overwrite the first one's responder (which
+        // would deliver client A's tokens to client B).
+        let (handle, rx) = channel();
+        let rx_a = handle.submit(Request::exact(7, vec![3], 2)).unwrap();
+        let rx_b = handle.submit(Request::exact(7, vec![5], 2)).unwrap();
+        let t = std::thread::spawn(move || {
+            let exec = MockExecutor::small();
+            serve(&exec, EngineConfig::default(), rx).unwrap()
+        });
+        assert_eq!(recv_reply(&rx_a).unwrap().tokens, vec![4, 5]);
+        assert_eq!(recv_reply(&rx_b).unwrap_err(), SubmitError::Rejected);
+        // The id is reusable once the first request completed.
+        let resp = handle.submit_blocking(Request::exact(7, vec![1], 1)).unwrap();
+        assert_eq!(resp.tokens, vec![2]);
+        handle.shutdown();
+        let stats = t.join().unwrap();
+        assert_eq!(stats.completed.get(), 2);
+        assert_eq!(stats.rejected.get(), 1);
+    }
+
+    #[test]
+    fn submit_after_shutdown_reports_engine_gone() {
+        let (handle, rx) = channel();
+        let t = std::thread::spawn(move || {
+            let exec = MockExecutor::small();
+            serve(&exec, EngineConfig::default(), rx).unwrap()
+        });
+        handle.shutdown();
+        t.join().unwrap();
+        let err = handle.submit_blocking(Request::exact(1, vec![1], 1)).unwrap_err();
+        assert_eq!(err, SubmitError::EngineGone);
     }
 }

@@ -1,0 +1,167 @@
+//! Integration tests: the sharded cluster router over real
+//! `HostExecutor` workers — concurrent mixed-policy load, streaming vs
+//! blocking equivalence, sticky sessions, graceful drain, and snapshot
+//! conservation (ISSUE 3 acceptance criteria).
+
+use subgen::coordinator::{EngineConfig, HostExecutor, Request};
+use subgen::kvcache::POLICY_NAMES;
+use subgen::server::{drain_stream, Router, SubmitError};
+
+/// 2-worker router over the small host transformer; every worker hosts
+/// the same model (same seed), so placement never changes a response.
+fn host_router(workers: usize, cfg: EngineConfig) -> Router {
+    Router::spawn(workers, cfg, |_w| HostExecutor::small(11)).unwrap()
+}
+
+fn policy_request(id: u64, policy: &str, max_new: usize) -> Request {
+    Request {
+        id,
+        session_id: None,
+        prompt: vec![2, 5, 7, 3],
+        max_new,
+        policy: policy.into(),
+        budget: 16,
+        delta: 0.5,
+    }
+}
+
+#[test]
+fn sixteen_concurrent_mixed_policy_requests_settle() {
+    // ≥16 concurrent requests across all five policies against 2 real
+    // workers: every request completes or is *explicitly* rejected —
+    // no hangs — and the merged snapshot equals the per-worker sums.
+    let router = host_router(2, EngineConfig { max_active: 4, ..Default::default() });
+    let n_req = 20usize;
+    let (mut completed, mut rejected, mut tokens) = (0u64, 0u64, 0u64);
+    std::thread::scope(|scope| {
+        let mut joins = Vec::new();
+        for id in 0..n_req as u64 {
+            let router = &router;
+            joins.push(scope.spawn(move || {
+                let policy = POLICY_NAMES[id as usize % POLICY_NAMES.len()];
+                router.submit_blocking(policy_request(id, policy, 3))
+            }));
+        }
+        for j in joins {
+            match j.join().unwrap() {
+                Ok(resp) => {
+                    assert_eq!(resp.tokens.len(), 3);
+                    completed += 1;
+                    tokens += resp.tokens.len() as u64;
+                }
+                Err(SubmitError::Rejected) => rejected += 1,
+                Err(SubmitError::EngineGone) => panic!("worker died"),
+            }
+        }
+    });
+    assert_eq!(completed + rejected, n_req as u64);
+    assert!(completed > 0);
+
+    let snap = router.shutdown().unwrap();
+    assert_eq!(snap.completed, completed);
+    assert_eq!(snap.rejected, rejected);
+    assert_eq!(snap.tokens, tokens);
+    assert_eq!(snap.dispatched, n_req as u64);
+    // Merged counters are exactly the per-worker sums.
+    assert_eq!(snap.completed, snap.workers.iter().map(|w| w.completed).sum::<u64>());
+    assert_eq!(snap.rejected, snap.workers.iter().map(|w| w.rejected).sum::<u64>());
+    assert_eq!(snap.tokens, snap.workers.iter().map(|w| w.tokens).sum::<u64>());
+    assert_eq!(snap.latency.count, snap.workers.iter().map(|w| w.latency.count).sum::<u64>());
+    // Drained: nothing queued or decoding anywhere.
+    assert_eq!(snap.queued, 0);
+    assert_eq!(snap.active, 0);
+}
+
+#[test]
+fn streaming_order_matches_blocking_response() {
+    // Same request (same prompt/policy/seeded model) down both paths:
+    // the streamed token order must equal the blocking response.
+    let router = host_router(2, EngineConfig::default());
+    for (i, policy) in ["exact", "subgen"].iter().enumerate() {
+        let base = 10 * (i as u64 + 1);
+        let blocking = router.submit_blocking(policy_request(base, policy, 6)).unwrap();
+        let rx = router.submit_streaming(policy_request(base + 1, policy, 6)).unwrap();
+        let (streamed, resp) = drain_stream(&rx).unwrap();
+        assert_eq!(streamed, blocking.tokens, "{policy}");
+        assert_eq!(resp.tokens, streamed, "{policy}");
+        assert!(rx.recv().is_err(), "channel must close after Done");
+    }
+    router.shutdown().unwrap();
+}
+
+#[test]
+fn sticky_sessions_pin_to_one_worker() {
+    let router = host_router(2, EngineConfig::default());
+    let sid = 0xC0FFEE;
+    let expect = router.worker_for_session(sid);
+    for id in 0..6 {
+        let req = policy_request(id, "exact", 2).with_session(sid);
+        router.submit_blocking(req).unwrap();
+    }
+    let snap = router.shutdown().unwrap();
+    for w in &snap.workers {
+        let want = if w.worker == expect { 6 } else { 0 };
+        assert_eq!(w.dispatched, want, "worker {}", w.worker);
+    }
+}
+
+#[test]
+fn sessionless_load_spreads_across_workers() {
+    let router = host_router(2, EngineConfig::default());
+    for id in 0..8 {
+        router.submit_blocking(policy_request(id, "exact", 2)).unwrap();
+    }
+    let snap = router.shutdown().unwrap();
+    assert!(snap.workers.iter().all(|w| w.dispatched > 0), "{:?}", snap.workers);
+}
+
+#[test]
+fn shutdown_drains_in_flight_work() {
+    // Dispatch without reading any reply, then shut down immediately:
+    // drain must complete everything already admitted to worker inboxes.
+    let router = host_router(2, EngineConfig { max_active: 2, ..Default::default() });
+    let rxs: Vec<_> =
+        (0..10).map(|id| router.submit(policy_request(id, "sliding", 2)).unwrap()).collect();
+    let snap = router.shutdown().unwrap();
+    let mut completed = 0;
+    for rx in &rxs {
+        match subgen::server::recv_reply(rx) {
+            Ok(resp) => {
+                assert_eq!(resp.tokens.len(), 2);
+                completed += 1;
+            }
+            Err(SubmitError::Rejected) => {}
+            Err(SubmitError::EngineGone) => panic!("request dropped without a reply"),
+        }
+    }
+    assert_eq!(snap.completed, completed);
+    assert_eq!(snap.completed + snap.rejected, 10);
+    assert_eq!(snap.queued, 0);
+    assert_eq!(snap.active, 0);
+}
+
+#[test]
+fn rejection_is_explicit_on_both_paths() {
+    // queue_capacity 1 + a burst dispatched before any tick: surplus is
+    // rejected with a typed reply (blocking) or a terminal event
+    // (streaming) — never a hang.
+    let router = host_router(1, EngineConfig { queue_capacity: 1, ..Default::default() });
+    let blocking: Vec<_> =
+        (0..5).map(|id| router.submit(policy_request(id, "exact", 2)).unwrap()).collect();
+    let srx = router.submit_streaming(policy_request(99, "exact", 0)).unwrap();
+    let (mut done, mut rejected) = (0, 0);
+    for rx in &blocking {
+        match subgen::server::recv_reply(rx) {
+            Ok(_) => done += 1,
+            Err(SubmitError::Rejected) => rejected += 1,
+            Err(SubmitError::EngineGone) => panic!("no reply"),
+        }
+    }
+    assert!(done >= 1);
+    assert_eq!(done + rejected, 5);
+    // max_new == 0 is rejected at submit; the stream closes cleanly.
+    assert_eq!(drain_stream(&srx).unwrap_err(), SubmitError::Rejected);
+    assert!(srx.recv().is_err());
+    let snap = router.shutdown().unwrap();
+    assert_eq!(snap.rejected, rejected as u64 + 1);
+}

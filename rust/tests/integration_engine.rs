@@ -90,6 +90,7 @@ fn policies_produce_identical_token_streams_on_mock() {
         let mut engine = Engine::new(&exec, EngineConfig::default());
         engine.submit(Request {
             id: 0,
+            session_id: None,
             prompt: vec![1, 2, 3],
             max_new: 5,
             policy: policy.to_string(),
@@ -136,6 +137,7 @@ fn cache_bytes_reported_smaller_for_compressed_policies() {
         let prompt: Vec<i32> = (0..40).map(|i| (i % 8) as i32).collect();
         engine.submit(Request {
             id: 0,
+            session_id: None,
             prompt,
             max_new: 4,
             policy: policy.to_string(),

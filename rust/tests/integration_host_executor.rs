@@ -107,6 +107,7 @@ fn all_policies_complete_through_engine_on_host_executor() {
             let prompt: Vec<i32> = (0..96).map(|i| (1 + i % 15) as i32).collect();
             assert!(engine.submit(Request {
                 id,
+                session_id: None,
                 prompt,
                 max_new: 4,
                 policy: policy.to_string(),

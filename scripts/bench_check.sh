@@ -1,0 +1,62 @@
+#!/usr/bin/env bash
+# Perf-regression gate over the committed bench baseline.
+#
+# Re-runs `cargo bench --bench bench_query_latency` (which rewrites
+# BENCH_query.json at the repo root) and compares every `*_ns` timing
+# against the previously committed baseline. Exits non-zero when a
+# timing regresses beyond the tolerance (BENCH_TOLERANCE, default 0.25
+# = 25%). Per the ROADMAP open item, the baseline does not exist until
+# the first CI bench run commits it — a missing baseline is a clean
+# skip, not a failure, so this script can gate CI from day one.
+set -euo pipefail
+
+ROOT="$(cd "$(dirname "$0")/.." && pwd)"
+BASELINE="$ROOT/BENCH_query.json"
+TOLERANCE="${BENCH_TOLERANCE:-0.25}"
+
+if [ ! -f "$BASELINE" ]; then
+  echo "bench_check: no committed BENCH_query.json baseline yet — skipping" \
+       "(trigger the CI bench job and commit the artifact to arm this gate)"
+  exit 0
+fi
+
+SAVED="$(mktemp /tmp/bench_baseline.XXXXXX.json)"
+cp "$BASELINE" "$SAVED"
+trap 'rm -f "$SAVED"' EXIT
+
+(cd "$ROOT/rust" && cargo bench --bench bench_query_latency)
+
+python3 - "$ROOT/BENCH_query.json" "$SAVED" "$TOLERANCE" <<'EOF'
+import json
+import sys
+
+fresh = json.load(open(sys.argv[1]))
+base = json.load(open(sys.argv[2]))
+tol = float(sys.argv[3])
+
+
+def walk(node, prefix=""):
+    if isinstance(node, dict):
+        for key, val in node.items():
+            yield from walk(val, f"{prefix}{key}.")
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        yield prefix.rstrip("."), float(node)
+
+
+base_vals = dict(walk(base))
+regressions = []
+for key, val in walk(fresh):
+    if not key.endswith("_ns") or base_vals.get(key, 0) <= 0:
+        continue
+    ratio = val / base_vals[key]
+    status = "REGRESSION" if ratio > 1 + tol else "ok"
+    print(f"bench_check: {key}: {base_vals[key]:.0f} -> {val:.0f} ns (x{ratio:.2f}) {status}")
+    if ratio > 1 + tol:
+        regressions.append(key)
+if regressions:
+    sys.exit(
+        f"bench_check: {len(regressions)} timing(s) regressed beyond "
+        f"{tol:.0%}: {', '.join(regressions)}"
+    )
+print("bench_check: all timings within tolerance")
+EOF
