@@ -1,29 +1,156 @@
-//! Bench: end-to-end decode step through PJRT per cache-capacity
-//! variant and per policy — the serving-side payoff of sublinear caches
-//! (smaller buffers ⇒ less per-step traffic ⇒ flatter decode latency).
+//! Bench: end-to-end decode steps — the serving-side payoff of
+//! sublinear caches (smaller buffers ⇒ less per-step traffic ⇒ flatter
+//! decode latency) and of **batched cross-sequence decode** (one
+//! `decode_batch` call per tick ⇒ weight rows and shared cache rows
+//! loaded once per tick instead of once per sequence).
 //!
-//! Requires artifacts (`make artifacts`); prints a notice and exits
-//! cleanly when they are missing so `cargo bench` stays green.
+//! Section 1 runs on the pure-rust [`HostExecutor`] (no artifacts):
+//! B ∈ {1, 4, 16} parallel branches decoding over one shared 4096-token
+//! context, batched vs per-sequence, with the per-token timings merged
+//! into `BENCH_query.json` (key `batched_decode`) so the CI perf gate
+//! covers them. Section 2 is the PJRT per-policy/per-capacity step
+//! bench; it requires artifacts (`make artifacts`) and prints a notice
+//! instead when they are missing so `cargo bench` stays green.
 //!
 //!     cargo bench --bench bench_e2e_decode
 
 use std::path::Path;
 use subgen::bench::{black_box, Bencher, Table};
-use subgen::model::{Generator, ModelSpec, SequenceCaches};
-use subgen::rng::Pcg64;
+use subgen::model::{DecodeStep, Generator, HostExecutor, ModelSpec, SequenceCaches};
+use subgen::rng::{fill_gaussian, Pcg64};
 use subgen::runtime::Runtime;
 use subgen::workload::{lines_for_seq_len, RetrievalSampler};
 
+/// The batched-decode operating point: context length per branch.
+const N_CTX: usize = 4_096;
+/// Batch widths measured (1 is the per-sequence baseline shape).
+const BATCHES: [usize; 3] = [1, 4, 16];
+
+/// Merge one `"batched_decode": {...}` line into `BENCH_query.json` at
+/// the repo root without disturbing the sections `bench_query_latency`
+/// wrote (the file is a flat object with one nested object per line, so
+/// a line-based splice is exact). Creates the file when absent.
+fn merge_into_bench_query(entry_line: &str) -> anyhow::Result<()> {
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_query.json");
+    let body = std::fs::read_to_string(path).unwrap_or_else(|_| "{\n}\n".to_string());
+    let mut kept: Vec<&str> = body
+        .lines()
+        .filter(|l| !l.trim_start().starts_with("\"batched_decode\""))
+        .collect();
+    // Drop the final close brace, splice the entry, close again.
+    while kept.last().is_some_and(|l| l.trim().is_empty()) {
+        kept.pop();
+    }
+    anyhow::ensure!(kept.last().is_some_and(|l| l.trim() == "}"), "malformed {path}");
+    kept.pop();
+    let mut out = String::new();
+    let last = kept.len().saturating_sub(1);
+    for (i, l) in kept.iter().enumerate() {
+        out.push_str(l);
+        if i == last && !l.trim_end().ends_with(',') && !l.trim_end().ends_with('{') {
+            out.push(',');
+        }
+        out.push('\n');
+    }
+    out.push_str(entry_line);
+    out.push_str("\n}\n");
+    std::fs::write(path, out)?;
+    println!("\nmerged batched_decode into {path}");
+    Ok(())
+}
+
+/// Section 1: B branches decoding over one shared-context cache,
+/// batched (`decode_batch`, one grouped sweep per (layer, head)) vs the
+/// per-sequence path (B independent `decode` calls).
+fn host_batched_section(bencher: &Bencher) -> anyhow::Result<()> {
+    let spec = ModelSpec {
+        vocab: 16,
+        d_model: 32,
+        n_heads: 2,
+        n_layers: 2,
+        d_head: 16,
+        prefill_t: 64,
+        cache_variants: vec![N_CTX + 66, 1024, 320],
+        decode_batch: 0,
+        train_accuracy: -1.0,
+    };
+    let exec = HostExecutor::new(spec.clone(), 7)?;
+    let mut caches = SequenceCaches::new(&spec, "exact", usize::MAX / 4, 4.0, 3)?;
+    let lh_dh = spec.n_layers * spec.n_heads * spec.d_head;
+    let mut rng = Pcg64::seed_from_u64(17);
+    let (mut q, mut k, mut v) = (vec![0.0f32; lh_dh], vec![0.0f32; lh_dh], vec![0.0f32; lh_dh]);
+    for _ in 0..N_CTX {
+        fill_gaussian(&mut rng, &mut q, 0.3);
+        fill_gaussian(&mut rng, &mut k, 0.3);
+        fill_gaussian(&mut rng, &mut v, 1.0);
+        caches.update(&q, &k, &v);
+    }
+    let flat = caches.assemble(spec.pick_cache_variant(caches.max_slots() + 1))?;
+
+    println!("== batched cross-sequence decode over a shared {N_CTX}-token context ==\n");
+    let mut table =
+        Table::new(&["B", "batched ns/token", "per-seq ns/token", "speedup", "vs B=1 per-seq"]);
+    let mut json = format!("  \"batched_decode\": {{\"n_ctx\": {N_CTX}");
+    let mut base_per_seq = 0.0f64;
+    let mut last_batched = 0.0f64;
+    for &b in &BATCHES {
+        let steps: Vec<DecodeStep<'_>> = (0..b)
+            .map(|i| DecodeStep { token: (i % spec.vocab) as i32, pos: N_CTX, flat: &flat })
+            .collect();
+        // Pin: the grouped path reproduces per-sequence decode exactly.
+        let batched_out = exec.decode_batch(&steps)?;
+        for (st, out) in steps.iter().zip(&batched_out) {
+            let want = exec.decode(st.token, st.pos, st.flat)?;
+            anyhow::ensure!(out.logits == want.logits, "batched decode drifted at B={b}");
+        }
+        let r_batch = bencher.run(&format!("decode_batch/b{b}"), || {
+            black_box(exec.decode_batch(black_box(&steps)).expect("decode_batch"));
+        });
+        let r_seq = bencher.run(&format!("decode_per_seq/b{b}"), || {
+            for st in &steps {
+                black_box(exec.decode(st.token, st.pos, st.flat).expect("decode"));
+            }
+        });
+        let batched_ns = r_batch.mean_ns() / b as f64;
+        let per_seq_ns = r_seq.mean_ns() / b as f64;
+        if b == 1 {
+            base_per_seq = per_seq_ns;
+        }
+        last_batched = batched_ns;
+        table.row(&[
+            b.to_string(),
+            format!("{batched_ns:.0}"),
+            format!("{per_seq_ns:.0}"),
+            format!("{:.2}x", per_seq_ns / batched_ns),
+            format!("{:.2}x", base_per_seq / batched_ns),
+        ]);
+        json.push_str(&format!(
+            ", \"b{b}_batched_per_token_ns\": {batched_ns:.0}, \
+             \"b{b}_per_seq_per_token_ns\": {per_seq_ns:.0}"
+        ));
+    }
+    json.push_str(&format!(
+        ", \"b16_speedup_vs_b1\": {:.3}}}",
+        base_per_seq / last_batched.max(1e-9)
+    ));
+    table.print();
+    println!("\n(branches share one context: batched decode loads each cached row once per tick)");
+    merge_into_bench_query(&json)?;
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
+    let bencher = Bencher { budget: std::time::Duration::from_millis(800), ..Default::default() };
+    host_batched_section(&bencher)?;
+
     let artifacts = Path::new("artifacts");
     if !artifacts.join("manifest.toml").exists() {
-        println!("bench_e2e_decode: artifacts/ missing — run `make artifacts` first; skipping.");
+        println!("\nbench_e2e_decode: artifacts/ missing — PJRT section skipped.");
         return Ok(());
     }
     let rt = Runtime::load(artifacts, None)?;
     let spec = ModelSpec::from_manifest(rt.manifest())?;
     let generator = Generator::new(&rt, spec.clone());
-    let bencher = Bencher { budget: std::time::Duration::from_millis(800), ..Default::default() };
 
     // Shared prompt + per-policy caches at n = 384.
     let n = 384;

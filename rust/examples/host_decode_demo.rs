@@ -11,6 +11,11 @@
 //!    retained cache footprint and ns/token (decode + cache update +
 //!    flat-buffer reassembly, i.e. the whole serving step). One
 //!    `footprint policy=...` line per policy is emitted for CI to grep.
+//!    `--batch B` decodes B parallel branches sharing one assembled
+//!    cache through one `decode_batch` call per step — the grouped
+//!    shared-context path, per-branch reserved slots included; every
+//!    branch must produce the same tokens, which the demo asserts, and
+//!    ns/token is per generated token across the batch.
 //! 2. **scaling** — per-token decode cost at context length
 //!    n ∈ `--points` (default 1k/10k/100k): caches are pre-filled to n
 //!    and a handful of decode steps are timed, showing exact growing
@@ -21,7 +26,7 @@ use std::time::Instant;
 use subgen::bench::{fmt_bytes, Table};
 use subgen::cli::Args;
 use subgen::kvcache::POLICY_NAMES;
-use subgen::model::{HostExecutor, ModelSpec, SequenceCaches};
+use subgen::model::{DecodeStep, HostExecutor, ModelSpec, SequenceCaches};
 use subgen::rng::{fill_gaussian, Pcg64};
 use subgen::tensor::argmax;
 
@@ -31,6 +36,7 @@ const SCALING_STEPS: usize = 12;
 fn main() -> Result<()> {
     let args = Args::from_env("host-executor decode loop: footprint + ns/token per policy")
         .describe("tokens", Some("512"), "tokens to decode per policy (section 1)")
+        .describe("batch", Some("1"), "sequences decoded per batched step (section 1)")
         .describe("prompt", Some("32"), "prompt length (section 1)")
         .describe("budget", Some("192"), "per-head budget for compressed policies")
         .describe("delta", Some("4.0"), "subgen cluster threshold δ")
@@ -38,6 +44,7 @@ fn main() -> Result<()> {
         .describe("seed", Some("7"), "rng seed");
     args.exit_on_help();
     let tokens = args.usize_or("tokens", 512).max(1);
+    let batch = args.usize_or("batch", 1).max(1);
     let prompt_len = args.usize_or("prompt", 32).max(1);
     let budget = args.usize_or("budget", 192);
     let delta = args.f32_or("delta", 4.0);
@@ -76,13 +83,16 @@ fn main() -> Result<()> {
     );
 
     // ── Section 1: real decode loop per policy ──
-    println!("== decode loop: {tokens} tokens per policy (budget {budget}/head) ==\n");
+    println!(
+        "== decode loop: {tokens} tokens × batch {batch} per policy (budget {budget}/head) ==\n"
+    );
     let mut table = Table::new(&["policy", "cache bytes", "ns/token", "tok/s"]);
     for &policy in &POLICY_NAMES {
         let (bytes, ns) =
-            decode_loop(&exec, &spec, policy, prompt_len, tokens, budget, delta, seed)?;
+            decode_loop(&exec, &spec, policy, prompt_len, tokens, batch, budget, delta, seed)?;
         println!(
-            "footprint policy={policy} tokens={tokens} cache_bytes={bytes} ns_per_token={ns:.0}"
+            "footprint policy={policy} tokens={tokens} batch={batch} cache_bytes={bytes} \
+             ns_per_token={ns:.0}"
         );
         table.row(&[
             policy.to_string(),
@@ -128,15 +138,21 @@ fn main() -> Result<()> {
 }
 
 /// Section 1 body: prefill, then a full greedy decode loop (decode +
-/// cache update + flat reassembly per step). Returns (cache bytes at
-/// completion, mean ns/token).
-#[allow(clippy::too_many_arguments)]
+/// cache update + flat reassembly per step). With `batch > 1` the
+/// decode runs as `batch` parallel branches **sharing one assembled
+/// `FlatCaches`** through a single `decode_batch` call per step — the
+/// shared-context form that drives the grouped nq > 1 attention sweep
+/// with per-branch reserved slots, not just the batched matvecs. The
+/// branches are identical by construction, so their outputs must agree
+/// bit-for-bit (asserted). Returns (cache bytes at completion, mean ns
+/// per generated token across the batch).
 fn decode_loop(
     exec: &HostExecutor,
     spec: &ModelSpec,
     policy: &str,
     prompt_len: usize,
     tokens: usize,
+    batch: usize,
     budget: usize,
     delta: f32,
     seed: u64,
@@ -158,12 +174,20 @@ fn decode_loop(
     let mut flat = caches.assemble(c)?;
     let t0 = Instant::now();
     for j in 0..tokens {
-        let step = exec.decode(next, prompt_len + j, &flat)?;
+        let steps: Vec<DecodeStep<'_>> = (0..batch)
+            .map(|_| DecodeStep { token: next, pos: prompt_len + j, flat: &flat })
+            .collect();
+        let outs = exec.decode_batch(&steps)?;
+        drop(steps);
+        for out in &outs[1..] {
+            assert_eq!(out.logits, outs[0].logits, "{policy}: branches diverged at step {j}");
+        }
+        let step = &outs[0];
         caches.update(&step.q, &step.k, &step.v);
         next = argmax(&step.logits) as i32;
         caches.reassemble(spec, &mut flat)?;
     }
-    let ns = t0.elapsed().as_nanos() as f64 / tokens as f64;
+    let ns = t0.elapsed().as_nanos() as f64 / (tokens * batch) as f64;
     Ok((caches.memory_bytes(), ns))
 }
 

@@ -78,12 +78,13 @@ fn main() -> Result<()> {
         for w in &snap.workers {
             println!(
                 "cluster policy={policy} worker={} dispatched={} completed={} rejected={} \
-                 tokens={} share={:.2}",
+                 tokens={} batch={:.2} share={:.2}",
                 w.worker,
                 w.dispatched,
                 w.completed,
                 w.rejected,
                 w.tokens,
+                w.mean_batch(),
                 w.completed as f64 / total as f64
             );
         }

@@ -3,7 +3,7 @@
 use super::{Request, Response, StepExecutor};
 use super::request::Timing;
 use crate::kvcache::attention_flat_into;
-use crate::model::{caches::FlatCaches, SequenceCaches};
+use crate::model::{caches::FlatCaches, DecodeStep, SequenceCaches, StepOutput};
 use crate::metrics::{Counter, Gauge, Histogram};
 use anyhow::Result;
 use std::collections::VecDeque;
@@ -34,11 +34,25 @@ pub struct EngineConfig {
     /// `query_batch`/`attention_batch` API.) 0 disables the probe
     /// (default).
     pub host_probe_every: usize,
+    /// Decode each tick as batched [`StepExecutor::decode_batch`] calls
+    /// — sequences sharing a step shape (flat-cache capacity) are
+    /// grouped and dispatched together, so a batched executor amortizes
+    /// weight and cache sweeps across the continuous batch. `false`
+    /// falls back to one `decode` call per sequence. Token streams are
+    /// identical either way (the batched paths are pinned bit-identical
+    /// per executor); default `true`.
+    pub batched_decode: bool,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        Self { max_active: 8, queue_capacity: 256, prefills_per_tick: 1, host_probe_every: 0 }
+        Self {
+            max_active: 8,
+            queue_capacity: 256,
+            prefills_per_tick: 1,
+            host_probe_every: 0,
+            batched_decode: true,
+        }
     }
 }
 
@@ -65,6 +79,16 @@ pub struct EngineStats {
     pub queue_depth: Gauge,
     /// Sequences actively decoding (gauge, updated each tick).
     pub active: Gauge,
+    /// Batched decode calls dispatched (one per step-shape group per
+    /// tick; see [`EngineConfig::batched_decode`]).
+    pub batched_calls: Counter,
+    /// Sequences dispatched through batched calls (Σ group widths);
+    /// the ratio over `batched_calls` is the engine-side dispatch
+    /// group width. Whether those sequences were *evaluated* batched
+    /// depends on the executor: `HostExecutor` has a native
+    /// `decode_batch`, while executors on the trait's per-sequence
+    /// fallback (mock, PJRT) decode them one at a time.
+    pub batched_sequences: Counter,
 }
 
 impl EngineStats {
@@ -82,6 +106,8 @@ impl EngineStats {
         self.probe_latency.merge_from(&other.probe_latency);
         self.queue_depth.add(other.queue_depth.get());
         self.active.add(other.active.get());
+        self.batched_calls.add(other.batched_calls.get());
+        self.batched_sequences.add(other.batched_sequences.get());
     }
 }
 
@@ -302,15 +328,31 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
 
     fn decode_tick(&mut self) -> Result<usize> {
         let spec_vocab = self.exec.spec().vocab;
-        let mut progressed = 0;
-        let mut still_active = Vec::with_capacity(self.active.len());
-        for mut seq in std::mem::take(&mut self.active) {
-            // Emit the pending token, then run the step that consumes it.
+        let mut active = std::mem::take(&mut self.active);
+        if active.is_empty() {
+            return Ok(0);
+        }
+        // Emit every sequence's pending token first, in admission order
+        // — the streamed token order is identical whether the tick then
+        // decodes batched or sequence-at-a-time.
+        for seq in &mut active {
             seq.generated.push(seq.next);
             if let Some(sink) = self.sink.as_mut() {
                 sink(seq.req.id, seq.generated.len() - 1, seq.next);
             }
-            let step = self.exec.decode(seq.next, seq.pos, &seq.flat)?;
+        }
+        let steps = if self.cfg.batched_decode {
+            self.decode_grouped(&active)?
+        } else {
+            let mut outs = Vec::with_capacity(active.len());
+            for seq in &active {
+                outs.push(self.exec.decode(seq.next, seq.pos, &seq.flat)?);
+            }
+            outs
+        };
+        let mut progressed = 0;
+        let mut still_active = Vec::with_capacity(active.len());
+        for (mut seq, step) in active.into_iter().zip(steps) {
             seq.caches.update(&step.q, &step.k, &step.v);
             seq.next = crate::tensor::argmax(&step.logits[..spec_vocab]) as i32;
             seq.last_q = step.q;
@@ -341,6 +383,51 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
         }
         self.active = still_active;
         Ok(progressed)
+    }
+
+    /// Decode one tick as batched executor calls: sequences sharing a
+    /// step shape (flat-cache capacity — what a lowered `decode_b*`
+    /// artifact is specialized on) are grouped in first-seen order and
+    /// each group goes through one [`StepExecutor::decode_batch`].
+    /// Returns one [`StepOutput`] per active sequence, in order.
+    fn decode_grouped(&self, active: &[Active]) -> Result<Vec<StepOutput>> {
+        let mut caps: Vec<usize> = Vec::new();
+        for seq in active {
+            if !caps.contains(&seq.flat.capacity) {
+                caps.push(seq.flat.capacity);
+            }
+        }
+        let mut outputs: Vec<Option<StepOutput>> = Vec::with_capacity(active.len());
+        outputs.resize_with(active.len(), || None);
+        for cap in caps {
+            let idx: Vec<usize> =
+                (0..active.len()).filter(|&i| active[i].flat.capacity == cap).collect();
+            let batch: Vec<DecodeStep<'_>> = idx
+                .iter()
+                .map(|&i| DecodeStep {
+                    token: active[i].next,
+                    pos: active[i].pos,
+                    flat: &active[i].flat,
+                })
+                .collect();
+            let outs = self.exec.decode_batch(&batch)?;
+            anyhow::ensure!(
+                outs.len() == idx.len(),
+                "decode_batch returned {} outputs for {} sequences",
+                outs.len(),
+                idx.len()
+            );
+            self.stats.batched_calls.inc();
+            self.stats.batched_sequences.add(idx.len() as u64);
+            for (&i, out) in idx.iter().zip(outs) {
+                outputs[i] = Some(out);
+            }
+        }
+        let mut steps = Vec::with_capacity(outputs.len());
+        for out in outputs {
+            steps.push(out.ok_or_else(|| anyhow::anyhow!("decode_batch missed a sequence"))?);
+        }
+        Ok(steps)
     }
 }
 
@@ -546,6 +633,70 @@ mod tests {
             assert_eq!(rs[0].tokens.len(), 6, "{policy}");
             assert!(rs[0].cache_bytes > 0, "{policy}");
         }
+    }
+
+    #[test]
+    fn batched_tick_groups_sequences_into_one_call() {
+        // Two sequences admitted before the first decode tick share a
+        // step shape (same spec ⇒ same starting capacity), so the tick
+        // dispatches exactly one decode_batch over both.
+        let exec = MockExecutor::small();
+        let mut e = engine(
+            EngineConfig { max_active: 4, prefills_per_tick: 2, ..Default::default() },
+            &exec,
+        );
+        e.submit(Request::exact(0, vec![1], 3));
+        e.submit(Request::exact(1, vec![2], 3));
+        e.tick().unwrap();
+        assert_eq!(e.stats.batched_calls.get(), 1);
+        assert_eq!(e.stats.batched_sequences.get(), 2);
+        e.run_to_completion().unwrap();
+        assert_eq!(e.stats.batched_sequences.get(), e.stats.tokens.get());
+    }
+
+    #[test]
+    fn sequential_decode_records_no_batched_calls() {
+        let exec = MockExecutor::small();
+        let mut e = engine(EngineConfig { batched_decode: false, ..Default::default() }, &exec);
+        e.submit(Request::exact(0, vec![1], 3));
+        e.run_to_completion().unwrap();
+        assert_eq!(e.stats.batched_calls.get(), 0);
+        assert_eq!(e.take_responses()[0].tokens, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn batched_and_sequential_engines_agree_on_host_executor() {
+        // The real transformer path: identical multi-request workloads
+        // must produce identical responses (tokens and cache bytes)
+        // whether ticks decode batched or sequence-at-a-time.
+        let exec = crate::model::HostExecutor::small(19);
+        let run = |batched: bool| {
+            let mut e = Engine::new(
+                &exec,
+                EngineConfig {
+                    max_active: 3,
+                    prefills_per_tick: 2,
+                    batched_decode: batched,
+                    ..Default::default()
+                },
+            );
+            for id in 0..5u64 {
+                e.submit(Request {
+                    id,
+                    session_id: None,
+                    prompt: vec![1 + id as i32, 2, 3],
+                    max_new: 2 + (id as usize % 3),
+                    policy: crate::kvcache::POLICY_NAMES[id as usize % 5].into(),
+                    budget: 16,
+                    delta: 0.5,
+                });
+            }
+            e.run_to_completion().unwrap();
+            let mut rs = e.take_responses();
+            rs.sort_by_key(|r| r.id);
+            rs.iter().map(|r| (r.id, r.tokens.clone(), r.cache_bytes)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(true), run(false));
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //!   the real `xla` crate to be linked).
 
 use crate::model::{
-    caches::FlatCaches, Generator, HostExecutor, ModelSpec, PrefillOutput, StepOutput,
+    caches::FlatCaches, DecodeStep, Generator, HostExecutor, ModelSpec, PrefillOutput, StepOutput,
 };
 use crate::rng::SplitMix64;
 use anyhow::Result;
@@ -23,6 +23,15 @@ pub trait StepExecutor {
     fn prefill(&self, prompt: &[i32]) -> Result<PrefillOutput>;
     /// One decode step for one sequence.
     fn decode(&self, token: i32, pos: usize, flat: &FlatCaches) -> Result<StepOutput>;
+    /// One decode step for each of a batch of sequences — an entire
+    /// engine tick in one call, outputs in step order. The default
+    /// falls back to per-sequence [`StepExecutor::decode`] calls, so
+    /// executors without a batched path (mock, PJRT) stay correct;
+    /// [`HostExecutor`] overrides it with a genuinely batched
+    /// evaluation pinned bit-identical to this fallback.
+    fn decode_batch(&self, steps: &[DecodeStep<'_>]) -> Result<Vec<StepOutput>> {
+        steps.iter().map(|st| self.decode(st.token, st.pos, st.flat)).collect()
+    }
     /// Slice helper: one position's [L, H, dh] out of a prefill tensor.
     fn position_slice(&self, full: &[f32], pos: usize) -> Vec<f32>;
 }
@@ -40,6 +49,10 @@ impl<T: StepExecutor + ?Sized> StepExecutor for &T {
 
     fn decode(&self, token: i32, pos: usize, flat: &FlatCaches) -> Result<StepOutput> {
         (**self).decode(token, pos, flat)
+    }
+
+    fn decode_batch(&self, steps: &[DecodeStep<'_>]) -> Result<Vec<StepOutput>> {
+        (**self).decode_batch(steps)
     }
 
     fn position_slice(&self, full: &[f32], pos: usize) -> Vec<f32> {
@@ -76,6 +89,10 @@ impl StepExecutor for HostExecutor {
 
     fn decode(&self, token: i32, pos: usize, flat: &FlatCaches) -> Result<StepOutput> {
         HostExecutor::decode(self, token, pos, flat)
+    }
+
+    fn decode_batch(&self, steps: &[DecodeStep<'_>]) -> Result<Vec<StepOutput>> {
+        HostExecutor::decode_batch(self, steps)
     }
 
     fn position_slice(&self, full: &[f32], pos: usize) -> Vec<f32> {

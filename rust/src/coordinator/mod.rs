@@ -20,5 +20,6 @@ pub use request::{Request, Response};
 
 // The pure-rust transformer executor lives in `model` (it is a model);
 // re-exported here so serving code imports every executor from one
-// place, next to the trait they implement.
-pub use crate::model::HostExecutor;
+// place, next to the trait they implement. `DecodeStep` rides along:
+// it is the unit of `StepExecutor::decode_batch`.
+pub use crate::model::{DecodeStep, HostExecutor};

@@ -14,10 +14,20 @@ fn grown_capacity(slots: usize) -> usize {
 /// path. `keys`/`values` are `[n, dim]` row-major with per-slot weights
 /// `w` (value path) and `u` (normalizer path), `n = w.len()`; `qs`
 /// holds `nq` queries row-major; `extra` optionally appends one more
-/// (key, value) slot with `w = u = 1` — the decode step's own token,
-/// which lives in the executable's reserved slot rather than in the
-/// packed history. `scores` (`n × nq` f32) and `zacc` (`dim` f64) are
-/// caller scratch reused across calls; `out` must be `nq × dim`.
+/// (key, value) slot *per query* with `w = u = 1` — each slice is
+/// `[nq, dim]` row-major, query `b` seeing slot `b` — the decode step's
+/// own token, which lives in the executable's reserved slot rather than
+/// in the packed history. `scores` and `zacc` are caller scratch reused
+/// across calls; `out` must be `nq × dim`.
+///
+/// The evaluation is batched row-major: every K row is scored once
+/// against the whole query batch ([`scores_batch_into`]) and every V
+/// row is loaded once and accumulated into all `nq` per-query f64
+/// accumulators while hot — so a group of queries sharing one packed
+/// buffer (parallel branches decoding over a shared context) pays for
+/// each cached row once per call instead of once per query. Each
+/// query's accumulation still walks slots in index order, so per-query
+/// results are bit-identical to `nq` independent single-query calls.
 ///
 /// [`PackedCache::attention_batch_into`] delegates here with
 /// `extra = None`, so the owned-buffer and borrowed-buffer paths (the
@@ -44,57 +54,87 @@ pub fn attention_flat_into(
     debug_assert_eq!(u.len(), n, "w/u length mismatch");
     assert_eq!(qs.len(), nq * dim, "qs must be nq × dim");
     assert_eq!(out.len(), nq * dim, "out must be nq × dim");
+    if let Some((k_new, v_new)) = extra {
+        assert_eq!(k_new.len(), nq * dim, "extra keys must be nq × dim");
+        assert_eq!(v_new.len(), nq * dim, "extra values must be nq × dim");
+    }
     for o in out.iter_mut() {
         *o = 0.0;
     }
     if (n == 0 && extra.is_none()) || nq == 0 {
         return;
     }
-    scores.resize(n * nq, 0.0);
-    zacc.resize(dim, 0.0);
-    scores_batch_into(keys, dim, qs, nq, &mut scores[..n * nq]);
+    // Scratch layout: `scores` holds the n × nq history scores plus, at
+    // the tail, nq extra-slot scores and nq per-query max shifts;
+    // `zacc` holds nq per-query dim-wide accumulators plus nq
+    // normalizers at the tail.
+    scores.resize(n * nq + 2 * nq, 0.0);
+    let (hist, tail) = scores.split_at_mut(n * nq);
+    let (extra_scores, shifts) = tail.split_at_mut(nq);
+    scores_batch_into(keys, dim, qs, nq, hist);
     for b in 0..nq {
         let q = &qs[b * dim..(b + 1) * dim];
-        let extra_score = extra.map(|(k_new, _)| dot(k_new, q));
+        extra_scores[b] = match extra {
+            Some((k_new, _)) => dot(&k_new[b * dim..(b + 1) * dim], q),
+            None => f32::NEG_INFINITY,
+        };
         // Masked max over slots that matter (w or u positive), with the
         // extra slot (unit weights) always participating.
-        let mut shift = extra_score.unwrap_or(f32::NEG_INFINITY);
+        let mut shift = extra_scores[b];
         for i in 0..n {
-            let sc = scores[i * nq + b];
+            let sc = hist[i * nq + b];
             if (w[i] > 0.0 || u[i] > 0.0) && sc > shift {
                 shift = sc;
             }
         }
-        if !shift.is_finite() {
+        shifts[b] = shift;
+    }
+    zacc.resize(nq * dim + nq, 0.0);
+    for z in zacc.iter_mut() {
+        *z = 0.0;
+    }
+    let (zrows, taus) = zacc.split_at_mut(nq * dim);
+    // One pass over the packed slots: each V row is read once and folded
+    // into every query's accumulator. Dead slots (w = u = 0) contribute
+    // nothing and are skipped without touching their rows.
+    for i in 0..n {
+        let (wi, ui) = (w[i], u[i]);
+        if wi <= 0.0 && ui <= 0.0 {
             continue;
         }
-        for z in zacc.iter_mut() {
-            *z = 0.0;
-        }
-        let mut tau = 0.0f64;
-        for i in 0..n {
-            let e = ((scores[i * nq + b] - shift) as f64).exp();
-            if w[i] > 0.0 {
-                let we = w[i] as f64 * e;
-                for (zj, &vj) in zacc.iter_mut().zip(&values[i * dim..(i + 1) * dim]) {
+        let vrow = &values[i * dim..(i + 1) * dim];
+        for b in 0..nq {
+            if !shifts[b].is_finite() {
+                continue;
+            }
+            let e = ((hist[i * nq + b] - shifts[b]) as f64).exp();
+            if wi > 0.0 {
+                let we = wi as f64 * e;
+                for (zj, &vj) in zrows[b * dim..(b + 1) * dim].iter_mut().zip(vrow) {
                     *zj += we * vj as f64;
                 }
             }
-            if u[i] > 0.0 {
-                tau += u[i] as f64 * e;
+            if ui > 0.0 {
+                taus[b] += ui as f64 * e;
             }
         }
-        if let (Some(sc), Some((_, v_new))) = (extra_score, extra) {
-            let e = ((sc - shift) as f64).exp();
-            for (zj, &vj) in zacc.iter_mut().zip(v_new) {
+    }
+    for b in 0..nq {
+        if !shifts[b].is_finite() {
+            continue;
+        }
+        if let Some((_, v_new)) = extra {
+            let e = ((extra_scores[b] - shifts[b]) as f64).exp();
+            let zb = &mut zrows[b * dim..(b + 1) * dim];
+            for (zj, &vj) in zb.iter_mut().zip(&v_new[b * dim..(b + 1) * dim]) {
                 *zj += e * vj as f64;
             }
-            tau += e;
+            taus[b] += e;
         }
-        if tau > 0.0 {
+        if taus[b] > 0.0 {
             let ob = &mut out[b * dim..(b + 1) * dim];
-            for (o, &zj) in ob.iter_mut().zip(zacc.iter()) {
-                *o = (zj / tau) as f32;
+            for (o, &zj) in ob.iter_mut().zip(&zrows[b * dim..(b + 1) * dim]) {
+                *o = (zj / taus[b]) as f32;
             }
         }
     }
@@ -439,6 +479,68 @@ mod tests {
             &mut out,
         );
         assert_eq!(out, want);
+    }
+
+    #[test]
+    fn batched_queries_with_per_query_extras_match_single_calls() {
+        // The cross-sequence decode path: nq queries over one shared
+        // packed buffer, each carrying its own reserved new-token slot.
+        // Every per-query result must be bit-identical to evaluating
+        // that query alone with its own extra.
+        let dim = 6;
+        let n = 17;
+        let nq = 4;
+        let mut rng = Pcg64::seed_from_u64(33);
+        let keys = Tensor::randn(&mut rng, n, dim, 0.5);
+        let values = Tensor::randn(&mut rng, n, dim, 1.0);
+        let mut buf = PackedCache::new(dim, n);
+        for i in 0..n {
+            // Mixed slot kinds, including dead slots.
+            let (w, u) = match i % 4 {
+                0 => (1.0, 1.0),
+                1 => (0.7, 0.0),
+                2 => (0.0, 1.3),
+                _ => (0.0, 0.0),
+            };
+            buf.push(keys.row(i), values.row(i), w, u);
+        }
+        let qs = Tensor::randn(&mut rng, nq, dim, 0.4);
+        let k_new = Tensor::randn(&mut rng, nq, dim, 0.5);
+        let v_new = Tensor::randn(&mut rng, nq, dim, 1.0);
+        let (kk, vv) = (&buf.keys_buffer()[..n * dim], &buf.values_buffer()[..n * dim]);
+        let (ww, uu) = (&buf.w_buffer()[..n], &buf.u_buffer()[..n]);
+        let mut batched = vec![0.0f32; nq * dim];
+        let (mut scores, mut zacc) = (Vec::new(), Vec::new());
+        attention_flat_into(
+            kk,
+            vv,
+            ww,
+            uu,
+            dim,
+            qs.as_slice(),
+            nq,
+            Some((k_new.as_slice(), v_new.as_slice())),
+            &mut scores,
+            &mut zacc,
+            &mut batched,
+        );
+        for b in 0..nq {
+            let mut single = vec![0.0f32; dim];
+            attention_flat_into(
+                kk,
+                vv,
+                ww,
+                uu,
+                dim,
+                qs.row(b),
+                1,
+                Some((k_new.row(b), v_new.row(b))),
+                &mut scores,
+                &mut zacc,
+                &mut single,
+            );
+            assert_eq!(&batched[b * dim..(b + 1) * dim], &single[..], "b={b}");
+        }
     }
 
     #[test]

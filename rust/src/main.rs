@@ -267,8 +267,13 @@ fn serve_cluster(args: &Args) -> Result<()> {
     drop(exporter);
     for w in &snap.workers {
         println!(
-            "cluster worker={} dispatched={} completed={} rejected={} tokens={}",
-            w.worker, w.dispatched, w.completed, w.rejected, w.tokens
+            "cluster worker={} dispatched={} completed={} rejected={} tokens={} batch={:.2}",
+            w.worker,
+            w.dispatched,
+            w.completed,
+            w.rejected,
+            w.tokens,
+            w.mean_batch()
         );
     }
     let lat = &snap.latency;

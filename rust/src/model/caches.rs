@@ -21,6 +21,20 @@ pub struct SequenceCaches {
     len: usize,
 }
 
+/// One sequence's inputs to a batched decode call: the pending token,
+/// its stream position, and the sequence's assembled flat buffers.
+/// Several steps may borrow the *same* [`FlatCaches`] — parallel
+/// branches decoding over a shared context — and batched executors
+/// answer such a group with one sweep over the shared buffers.
+pub struct DecodeStep<'a> {
+    /// Token to feed this step.
+    pub token: i32,
+    /// Stream position of `token`.
+    pub pos: usize,
+    /// The sequence's assembled per-(layer, head) cache buffers.
+    pub flat: &'a FlatCaches,
+}
+
 /// Flat assembled buffers for one decode call.
 pub struct FlatCaches {
     /// Capacity used for assembly.

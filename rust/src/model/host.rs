@@ -27,11 +27,23 @@
 //! Queries are pre-scaled by `1/√d_head` before caching and scoring, so
 //! the policies' raw-dot-product estimator computes standard
 //! `softmax(qᵀk/√d)` attention.
+//!
+//! **Batched cross-sequence decode.** [`HostExecutor::decode_batch`]
+//! evaluates an entire engine tick as one batch: all sequences' hidden
+//! states live in contiguous `[B, ·]` slabs, every weight matrix runs
+//! through [`matvec_batch_into`] (each weight row loaded once per tick
+//! instead of once per sequence), and sequences borrowing the *same*
+//! [`FlatCaches`] — parallel branches over a shared context — are
+//! answered per (layer, head) by a single [`attention_flat_into`] sweep
+//! with per-query extra slots, loading each cached row once for the
+//! whole group. Results are bit-identical to per-sequence
+//! [`HostExecutor::decode`] calls (same kernels, same accumulation
+//! order), which the integration tests pin.
 
-use super::{FlatCaches, ModelSpec, PrefillOutput, StepOutput};
+use super::{DecodeStep, FlatCaches, ModelSpec, PrefillOutput, StepOutput};
 use crate::kvcache::attention_flat_into;
 use crate::rng::SplitMix64;
-use crate::tensor::{dot, matvec_into, Tensor};
+use crate::tensor::{dot, matvec_batch_into, matvec_into, Tensor};
 use anyhow::Result;
 use std::cell::RefCell;
 
@@ -102,6 +114,56 @@ impl Scratch {
     }
 }
 
+/// Reusable `[B, ·]` slabs for the batched decode path
+/// ([`HostExecutor::decode_batch`]); grown to the largest batch seen,
+/// nothing allocates after warm-up.
+#[derive(Default)]
+struct BatchScratch {
+    /// Residual stream, `[B, d_model]`.
+    x: Vec<f32>,
+    /// Normed activations, `[B, d_model]`.
+    hn: Vec<f32>,
+    /// Per-layer query/key/value, `[B, H·dh]`.
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    /// Concatenated head outputs, `[B, H·dh]`.
+    attn: Vec<f32>,
+    /// MLP hidden, `[B, d_ff]`.
+    ff1: Vec<f32>,
+    /// Residual delta, `[B, d_model]`.
+    tmp: Vec<f32>,
+    /// Output logits, `[B, vocab]`.
+    logits: Vec<f32>,
+    /// One (layer, head)'s gathered queries / extra slots / outputs for
+    /// a shared-cache group, `[B, dh]` each.
+    qs_head: Vec<f32>,
+    k_extra: Vec<f32>,
+    v_extra: Vec<f32>,
+    out_heads: Vec<f32>,
+    /// Estimator scratch.
+    scores: Vec<f32>,
+    zacc: Vec<f64>,
+}
+
+impl BatchScratch {
+    fn ensure(&mut self, nb: usize, d_model: usize, hd: usize, d_ff: usize, dh: usize, v: usize) {
+        self.x.resize(nb * d_model, 0.0);
+        self.hn.resize(nb * d_model, 0.0);
+        self.q.resize(nb * hd, 0.0);
+        self.k.resize(nb * hd, 0.0);
+        self.v.resize(nb * hd, 0.0);
+        self.attn.resize(nb * hd, 0.0);
+        self.ff1.resize(nb * d_ff, 0.0);
+        self.tmp.resize(nb * d_model, 0.0);
+        self.logits.resize(nb * v, 0.0);
+        self.qs_head.resize(nb * dh, 0.0);
+        self.k_extra.resize(nb * dh, 0.0);
+        self.v_extra.resize(nb * dh, 0.0);
+        self.out_heads.resize(nb * dh, 0.0);
+    }
+}
+
 /// Deterministic pure-rust transformer executor over packed caches.
 pub struct HostExecutor {
     spec: ModelSpec,
@@ -114,6 +176,7 @@ pub struct HostExecutor {
     /// invariant, so the decode hot path never calls `powf`.
     rope_freqs: Vec<f32>,
     scratch: RefCell<Scratch>,
+    batch_scratch: RefCell<BatchScratch>,
 }
 
 /// `y = x · g / √(mean(x²) + ε)`.
@@ -190,6 +253,7 @@ impl HostExecutor {
             rope_freqs: rope_freqs(spec.d_head),
             spec,
             scratch: RefCell::new(Scratch::default()),
+            batch_scratch: RefCell::new(BatchScratch::default()),
         })
     }
 
@@ -414,6 +478,174 @@ impl HostExecutor {
         Ok(StepOutput { logits, q: step_q, k: step_k, v: step_v })
     }
 
+    /// One decode step for each of `steps`' sequences, evaluated as a
+    /// single batch — the model-layer form of an entire engine tick.
+    ///
+    /// All hidden states live in contiguous `[B, ·]` slabs and every
+    /// projection runs as one [`matvec_batch_into`] sweep, so each
+    /// weight row is loaded once per tick instead of once per sequence.
+    /// Steps borrowing the *same* [`FlatCaches`] (parallel branches
+    /// decoding over a shared context) are grouped, and each (layer,
+    /// head) answers the whole group with one [`attention_flat_into`]
+    /// call carrying per-query reserved-slot (k, v) — each cached row
+    /// is loaded once per group. Outputs are bit-identical to calling
+    /// [`HostExecutor::decode`] once per step, in order.
+    pub fn decode_batch(&self, steps: &[DecodeStep<'_>]) -> Result<Vec<StepOutput>> {
+        let nb = steps.len();
+        if nb == 0 {
+            return Ok(Vec::new());
+        }
+        let s = &self.spec;
+        let (l, h, dh, vocab) = (s.n_layers, s.n_heads, s.d_head, s.vocab);
+        let (dm, hd) = (s.d_model, h * dh);
+        let d_ff = FF_MULT * dm;
+        let q_scale = 1.0 / (dh as f32).sqrt();
+        for st in steps {
+            anyhow::ensure!(
+                (0..vocab as i32).contains(&st.token),
+                "token {} outside vocab {vocab}",
+                st.token
+            );
+            anyhow::ensure!(
+                st.flat.num_heads() == l * h,
+                "flat caches shaped for a different model"
+            );
+        }
+        // Steps sharing one FlatCaches form a batch group per (layer,
+        // head); distinct caches get their own (correct, unamortized)
+        // estimator call. Grouping is by buffer identity, first-seen
+        // order, and is the same for every layer.
+        let mut groups: Vec<Vec<usize>> = Vec::new();
+        for (b, st) in steps.iter().enumerate() {
+            match groups.iter_mut().find(|g| std::ptr::eq(steps[g[0]].flat, st.flat)) {
+                Some(g) => g.push(b),
+                None => groups.push(vec![b]),
+            }
+        }
+
+        let mut outs: Vec<StepOutput> = steps
+            .iter()
+            .map(|_| StepOutput {
+                logits: vec![0.0; vocab],
+                q: vec![0.0; l * hd],
+                k: vec![0.0; l * hd],
+                v: vec![0.0; l * hd],
+            })
+            .collect();
+
+        let mut scratch = self.batch_scratch.borrow_mut();
+        let sc = &mut *scratch;
+        sc.ensure(nb, dm, hd, d_ff, dh, vocab);
+        for (b, st) in steps.iter().enumerate() {
+            sc.x[b * dm..(b + 1) * dm].copy_from_slice(self.embed.row(st.token as usize));
+        }
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            for b in 0..nb {
+                rmsnorm(
+                    &sc.x[b * dm..(b + 1) * dm],
+                    &layer.g_attn,
+                    &mut sc.hn[b * dm..(b + 1) * dm],
+                );
+            }
+            // Slabs are sliced to the live batch: the scratch may be
+            // larger from an earlier, wider tick.
+            matvec_batch_into(layer.wq.as_slice(), dm, &sc.hn[..nb * dm], nb, &mut sc.q[..nb * hd]);
+            matvec_batch_into(layer.wk.as_slice(), dm, &sc.hn[..nb * dm], nb, &mut sc.k[..nb * hd]);
+            matvec_batch_into(layer.wv.as_slice(), dm, &sc.hn[..nb * dm], nb, &mut sc.v[..nb * hd]);
+            for (b, st) in steps.iter().enumerate() {
+                let qb = &mut sc.q[b * hd..(b + 1) * hd];
+                rope_inplace(qb, h, &self.rope_freqs, st.pos);
+                for qi in qb.iter_mut() {
+                    *qi *= q_scale;
+                }
+                rope_inplace(&mut sc.k[b * hd..(b + 1) * hd], h, &self.rope_freqs, st.pos);
+                outs[b].q[li * hd..(li + 1) * hd].copy_from_slice(&sc.q[b * hd..(b + 1) * hd]);
+                outs[b].k[li * hd..(li + 1) * hd].copy_from_slice(&sc.k[b * hd..(b + 1) * hd]);
+                outs[b].v[li * hd..(li + 1) * hd].copy_from_slice(&sc.v[b * hd..(b + 1) * hd]);
+            }
+            for hi in 0..h {
+                let at = hi * dh;
+                for g in &groups {
+                    let nq = g.len();
+                    for (j, &b) in g.iter().enumerate() {
+                        let (from, to) = (b * hd + at, j * dh);
+                        sc.qs_head[to..to + dh].copy_from_slice(&sc.q[from..from + dh]);
+                        sc.k_extra[to..to + dh].copy_from_slice(&sc.k[from..from + dh]);
+                        sc.v_extra[to..to + dh].copy_from_slice(&sc.v[from..from + dh]);
+                    }
+                    let (kk, vv, ww, uu) = steps[g[0]].flat.head_slices(li * h + hi);
+                    attention_flat_into(
+                        kk,
+                        vv,
+                        ww,
+                        uu,
+                        dh,
+                        &sc.qs_head[..nq * dh],
+                        nq,
+                        Some((&sc.k_extra[..nq * dh], &sc.v_extra[..nq * dh])),
+                        &mut sc.scores,
+                        &mut sc.zacc,
+                        &mut sc.out_heads[..nq * dh],
+                    );
+                    for (j, &b) in g.iter().enumerate() {
+                        sc.attn[b * hd + at..b * hd + at + dh]
+                            .copy_from_slice(&sc.out_heads[j * dh..(j + 1) * dh]);
+                    }
+                }
+            }
+            matvec_batch_into(
+                layer.wo.as_slice(),
+                hd,
+                &sc.attn[..nb * hd],
+                nb,
+                &mut sc.tmp[..nb * dm],
+            );
+            for (xi, &ti) in sc.x[..nb * dm].iter_mut().zip(&sc.tmp[..nb * dm]) {
+                *xi += ti;
+            }
+            for b in 0..nb {
+                rmsnorm(
+                    &sc.x[b * dm..(b + 1) * dm],
+                    &layer.g_mlp,
+                    &mut sc.hn[b * dm..(b + 1) * dm],
+                );
+            }
+            matvec_batch_into(
+                layer.w1.as_slice(),
+                dm,
+                &sc.hn[..nb * dm],
+                nb,
+                &mut sc.ff1[..nb * d_ff],
+            );
+            silu_inplace(&mut sc.ff1[..nb * d_ff]);
+            matvec_batch_into(
+                layer.w2.as_slice(),
+                d_ff,
+                &sc.ff1[..nb * d_ff],
+                nb,
+                &mut sc.tmp[..nb * dm],
+            );
+            for (xi, &ti) in sc.x[..nb * dm].iter_mut().zip(&sc.tmp[..nb * dm]) {
+                *xi += ti;
+            }
+        }
+        for b in 0..nb {
+            rmsnorm(&sc.x[b * dm..(b + 1) * dm], &self.g_final, &mut sc.hn[b * dm..(b + 1) * dm]);
+        }
+        matvec_batch_into(
+            self.embed.as_slice(),
+            dm,
+            &sc.hn[..nb * dm],
+            nb,
+            &mut sc.logits[..nb * vocab],
+        );
+        for (b, out) in outs.iter_mut().enumerate() {
+            out.logits.copy_from_slice(&sc.logits[b * vocab..(b + 1) * vocab]);
+        }
+        Ok(outs)
+    }
+
     /// Slice one position's `[L, H, dh]` out of a prefill
     /// `[L, T, H, dh]` tensor.
     pub fn position_slice(&self, full: &[f32], pos: usize) -> Vec<f32> {
@@ -524,6 +756,96 @@ mod tests {
         assert_eq!(a.k, b.k);
         assert!(argmax(&a.logits) < m.spec().vocab);
         assert!(a.logits.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn decode_batch_matches_per_sequence_decode() {
+        // Distinct sequences (own caches, different tokens/positions):
+        // the batched path must be bit-identical to per-sequence decode.
+        let m = HostExecutor::small(13);
+        let prompts: [&[i32]; 3] = [&[1, 2, 3], &[4, 5], &[6, 7, 8, 9]];
+        let mut flats = Vec::new();
+        for (i, prompt) in prompts.iter().enumerate() {
+            let mut c =
+                SequenceCaches::new(m.spec(), "exact", usize::MAX / 4, 0.5, i as u64).unwrap();
+            let pre = m.prefill(prompt).unwrap();
+            for p in 0..prompt.len() {
+                c.update(
+                    &m.position_slice(&pre.qs, p),
+                    &m.position_slice(&pre.ks, p),
+                    &m.position_slice(&pre.vs, p),
+                );
+            }
+            flats.push(c.assemble(32).unwrap());
+        }
+        let steps: Vec<DecodeStep<'_>> = flats
+            .iter()
+            .enumerate()
+            .map(|(i, flat)| DecodeStep { token: (i + 2) as i32, pos: prompts[i].len(), flat })
+            .collect();
+        let batched = m.decode_batch(&steps).unwrap();
+        assert_eq!(batched.len(), 3);
+        for (st, got) in steps.iter().zip(&batched) {
+            let want = m.decode(st.token, st.pos, st.flat).unwrap();
+            assert_eq!(got.logits, want.logits);
+            assert_eq!(got.q, want.q);
+            assert_eq!(got.k, want.k);
+            assert_eq!(got.v, want.v);
+        }
+        // A batch of one is exactly decode.
+        let one = m.decode_batch(&steps[..1]).unwrap();
+        let want = m.decode(steps[0].token, steps[0].pos, steps[0].flat).unwrap();
+        assert_eq!(one[0].logits, want.logits);
+        assert!(m.decode_batch(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn decode_batch_shared_context_group_matches_per_branch_decode() {
+        // Several branches borrowing ONE FlatCaches (parallel sampling
+        // over a shared prefix) take the grouped path — a single sweep
+        // per (layer, head) with per-query extra slots — and must still
+        // be bit-identical to per-branch decode.
+        let m = HostExecutor::small(17);
+        let prompt = [1, 2, 3, 4, 5];
+        let mut c = SequenceCaches::new(m.spec(), "exact", usize::MAX / 4, 0.5, 3).unwrap();
+        let pre = m.prefill(&prompt).unwrap();
+        for p in 0..prompt.len() {
+            c.update(
+                &m.position_slice(&pre.qs, p),
+                &m.position_slice(&pre.ks, p),
+                &m.position_slice(&pre.vs, p),
+            );
+        }
+        let flat = c.assemble(32).unwrap();
+        let steps: Vec<DecodeStep<'_>> = (0..4)
+            .map(|b| DecodeStep { token: (b * 3 + 1) as i32, pos: prompt.len(), flat: &flat })
+            .collect();
+        let batched = m.decode_batch(&steps).unwrap();
+        for (st, got) in steps.iter().zip(&batched) {
+            let want = m.decode(st.token, st.pos, st.flat).unwrap();
+            assert_eq!(got.logits, want.logits, "token {}", st.token);
+            assert_eq!(got.q, want.q);
+            assert_eq!(got.k, want.k);
+            assert_eq!(got.v, want.v);
+        }
+    }
+
+    #[test]
+    fn decode_batch_rejects_bad_tokens() {
+        let m = HostExecutor::small(1);
+        let mut c = SequenceCaches::new(m.spec(), "exact", 64, 0.5, 1).unwrap();
+        let pre = m.prefill(&[1]).unwrap();
+        c.update(
+            &m.position_slice(&pre.qs, 0),
+            &m.position_slice(&pre.ks, 0),
+            &m.position_slice(&pre.vs, 0),
+        );
+        let flat = c.assemble(32).unwrap();
+        let steps = [
+            DecodeStep { token: 2, pos: 1, flat: &flat },
+            DecodeStep { token: 99, pos: 1, flat: &flat },
+        ];
+        assert!(m.decode_batch(&steps).is_err());
     }
 
     #[test]

@@ -11,7 +11,7 @@ mod generator;
 mod host;
 mod spec;
 
-pub use caches::{FlatCaches, SequenceCaches};
+pub use caches::{DecodeStep, FlatCaches, SequenceCaches};
 pub use generator::{Generator, PrefillOutput, StepOutput};
 pub use host::HostExecutor;
 pub use spec::ModelSpec;

@@ -148,6 +148,8 @@ impl ClusterMetrics {
                 queued: s.queue_depth.get(),
                 active: s.active.get(),
                 outstanding: self.outstanding(i),
+                batched_calls: s.batched_calls.get(),
+                batched_sequences: s.batched_sequences.get(),
                 latency: s.latency.snapshot(),
                 tick_latency: s.tick_latency.snapshot(),
             };
@@ -163,6 +165,8 @@ impl ClusterMetrics {
             tokens: merged.tokens.get(),
             queued: merged.queue_depth.get(),
             active: merged.active.get(),
+            batched_calls: merged.batched_calls.get(),
+            batched_sequences: merged.batched_sequences.get(),
             latency: merged.latency.snapshot(),
             tick_latency: merged.tick_latency.snapshot(),
             tokens_per_sec: merged.tokens.get() as f64 / uptime.as_secs_f64().max(1e-9),
@@ -190,10 +194,31 @@ pub struct WorkerStat {
     pub active: u64,
     /// Dispatched − completed − rejected.
     pub outstanding: u64,
+    /// Batched decode calls dispatched by this worker's engine.
+    pub batched_calls: u64,
+    /// Sequences dispatched through batched calls (Σ group widths).
+    /// Engine-side grouping: evaluation is only genuinely batched on
+    /// executors with a native `decode_batch` (see
+    /// [`crate::coordinator::EngineStats::batched_sequences`]).
+    pub batched_sequences: u64,
     /// End-to-end request latency.
     pub latency: HistogramSnapshot,
     /// Per-decode-tick latency.
     pub tick_latency: HistogramSnapshot,
+}
+
+impl WorkerStat {
+    /// Mean decode dispatch-group width: sequences per batched call (0
+    /// when no batched call ran — e.g. `batched_decode` disabled).
+    /// Reflects engine grouping; per-call evaluation is batched only on
+    /// executors with a native `decode_batch`.
+    pub fn mean_batch(&self) -> f64 {
+        if self.batched_calls == 0 {
+            0.0
+        } else {
+            self.batched_sequences as f64 / self.batched_calls as f64
+        }
+    }
 }
 
 /// Cluster-wide aggregate: per-worker stats plus exact merges (counter
@@ -215,6 +240,10 @@ pub struct ClusterSnapshot {
     pub queued: u64,
     /// Σ actively decoding (gauge).
     pub active: u64,
+    /// Σ batched decode calls.
+    pub batched_calls: u64,
+    /// Σ sequences decoded through batched calls.
+    pub batched_sequences: u64,
     /// Merged end-to-end latency distribution.
     pub latency: HistogramSnapshot,
     /// Merged per-tick latency distribution.
@@ -246,6 +275,8 @@ impl ClusterSnapshot {
             queued: stats.queue_depth.get(),
             active: stats.active.get(),
             outstanding: dispatched.saturating_sub(settled),
+            batched_calls: stats.batched_calls.get(),
+            batched_sequences: stats.batched_sequences.get(),
             latency: stats.latency.snapshot(),
             tick_latency: stats.tick_latency.snapshot(),
         };
@@ -256,6 +287,8 @@ impl ClusterSnapshot {
             tokens: stat.tokens,
             queued: stat.queued,
             active: stat.active,
+            batched_calls: stat.batched_calls,
+            batched_sequences: stat.batched_sequences,
             latency: stat.latency,
             tick_latency: stat.tick_latency,
             workers: vec![stat],

@@ -35,11 +35,23 @@ pub fn prometheus_text(snap: &ClusterSnapshot) -> String {
     let _ = writeln!(s, "# TYPE subgen_tokens_per_second gauge");
     let _ = writeln!(s, "subgen_tokens_per_second {:.3}", snap.tokens_per_sec);
 
-    let counters: [(&str, &str, fn(&super::WorkerStat) -> u64, u64); 4] = [
+    let counters: [(&str, &str, fn(&super::WorkerStat) -> u64, u64); 6] = [
         ("dispatched_total", "Requests dispatched.", |w| w.dispatched, snap.dispatched),
         ("completed_total", "Requests completed.", |w| w.completed, snap.completed),
         ("rejected_total", "Requests rejected.", |w| w.rejected, snap.rejected),
         ("tokens_total", "Tokens generated.", |w| w.tokens, snap.tokens),
+        (
+            "decode_batch_calls_total",
+            "Batched decode calls dispatched.",
+            |w| w.batched_calls,
+            snap.batched_calls,
+        ),
+        (
+            "decode_batch_sequences_total",
+            "Sequences decoded through batched calls.",
+            |w| w.batched_sequences,
+            snap.batched_sequences,
+        ),
     ];
     for (stem, help, get, total) in counters {
         family(&mut s, "counter", stem, help, snap, get, total);
@@ -213,6 +225,9 @@ mod tests {
         assert!(text.contains("subgen_worker_completed_total{worker=\"1\"}"), "{text}");
         assert!(text.contains("\nsubgen_completed_total 4"), "{text}");
         assert!(text.contains("\nsubgen_tokens_total 8"), "{text}");
+        // Batched decode utilization is exported per worker + summed.
+        assert!(text.contains("subgen_worker_decode_batch_calls_total{worker=\"0\"}"), "{text}");
+        assert!(text.contains("\nsubgen_decode_batch_sequences_total 8"), "{text}");
         assert!(!text.contains("subgen_completed_total{worker"), "{text}");
         assert!(text.contains("subgen_request_latency_seconds{quantile=\"0.5\"}"), "{text}");
         assert!(text.contains("subgen_request_latency_seconds{quantile=\"0.95\"}"), "{text}");

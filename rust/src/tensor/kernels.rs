@@ -38,6 +38,29 @@ pub fn matvec_into(data: &[f32], cols: usize, x: &[f32], out: &mut [f32]) {
     }
 }
 
+/// Batched matvec over one shared matrix: `nb` input vectors (row-major
+/// in `xs`) scored against every row of `data`, with
+/// `out[b * rows + r] = ⟨row_r, x_b⟩` — the same per-vector layout (and
+/// bit-identical results, same [`super::dot`]) as `nb` independent
+/// [`matvec_into`] calls, but each matrix row is loaded once and scored
+/// against the whole batch while hot, like [`scores_batch_into`]. This
+/// is what lets the host executor's batched decode pay for each weight
+/// row once per engine tick instead of once per sequence.
+pub fn matvec_batch_into(data: &[f32], cols: usize, xs: &[f32], nb: usize, out: &mut [f32]) {
+    debug_assert_eq!(xs.len(), nb * cols, "matvec_batch_into input shape");
+    debug_assert_eq!(out.len() * cols, data.len() * nb, "matvec_batch_into out shape");
+    if nb == 0 {
+        return;
+    }
+    let rows = out.len() / nb;
+    for r in 0..rows {
+        let row = &data[r * cols..(r + 1) * cols];
+        for b in 0..nb {
+            out[b * rows + r] = dot(row, &xs[b * cols..(b + 1) * cols]);
+        }
+    }
+}
+
 /// Fused score+max pass: `out[r] = ⟨row_r, x⟩` and the maximum score is
 /// reduced in the same sweep (no second pass over the buffer). Returns
 /// `f32::NEG_INFINITY` when there are no rows.
@@ -175,6 +198,23 @@ mod tests {
             for r in 0..rows {
                 let want = dot(&data[r * cols..(r + 1) * cols], &x);
                 assert_eq!(out[r], want, "rows={rows} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_batch_matches_per_vector_matvec() {
+        let mut rng = Pcg64::seed_from_u64(11);
+        let (rows, cols) = (13, 7);
+        let data = random_flat(&mut rng, rows * cols);
+        for nb in [0usize, 1, 2, 5] {
+            let xs = random_flat(&mut rng, nb * cols);
+            let mut batched = vec![0.0f32; nb * rows];
+            matvec_batch_into(&data, cols, &xs, nb, &mut batched);
+            for b in 0..nb {
+                let mut single = vec![0.0f32; rows];
+                matvec_into(&data, cols, &xs[b * cols..(b + 1) * cols], &mut single);
+                assert_eq!(&batched[b * rows..(b + 1) * rows], &single[..], "nb={nb} b={b}");
             }
         }
     }

@@ -15,7 +15,8 @@ mod ops;
 
 pub use dense::Tensor;
 pub use kernels::{
-    axpy_rows_f64, matvec_into, nearest_row, scores_batch_into, scores_max_into, strided_max_into,
+    axpy_rows_f64, matvec_batch_into, matvec_into, nearest_row, scores_batch_into,
+    scores_max_into, strided_max_into,
 };
 pub use ops::{matmul, matvec};
 

@@ -73,6 +73,39 @@ fn sixteen_concurrent_mixed_policy_requests_settle() {
 }
 
 #[test]
+fn batched_and_sequential_clusters_serve_identical_responses() {
+    // Session-sticky and balanced traffic through 2-worker routers must
+    // produce the same tokens whether the workers' engines decode ticks
+    // batched or sequence-at-a-time, and the batched cluster must
+    // actually report batched-call utilization in its snapshot.
+    let run = |batched: bool| {
+        let router = host_router(
+            2,
+            EngineConfig { max_active: 4, batched_decode: batched, ..Default::default() },
+        );
+        let mut out = Vec::new();
+        for id in 0..10u64 {
+            let policy = POLICY_NAMES[id as usize % POLICY_NAMES.len()];
+            let mut req = policy_request(id, policy, 4);
+            if id % 3 == 0 {
+                req = req.with_session(id / 3);
+            }
+            let resp = router.submit_blocking(req).unwrap();
+            out.push((id, resp.tokens));
+        }
+        let snap = router.shutdown().unwrap();
+        if batched {
+            assert!(snap.batched_calls > 0, "batched cluster recorded no batched calls");
+            assert_eq!(snap.batched_sequences, snap.tokens);
+        } else {
+            assert_eq!(snap.batched_calls, 0);
+        }
+        out
+    };
+    assert_eq!(run(true), run(false));
+}
+
+#[test]
 fn streaming_order_matches_blocking_response() {
     // Same request (same prompt/policy/seeded model) down both paths:
     // the streamed token order must equal the blocking response.

@@ -4,7 +4,7 @@
 
 use subgen::coordinator::{Engine, EngineConfig, HostExecutor, MockExecutor, Request};
 use subgen::linalg::rel_err_vec;
-use subgen::model::{ModelSpec, SequenceCaches};
+use subgen::model::{DecodeStep, ModelSpec, SequenceCaches};
 
 /// The spec used for long teacher-forced decode chains.
 fn chain_spec() -> ModelSpec {
@@ -92,6 +92,61 @@ fn subgen_512_token_decode_matches_exact_cache() {
     }
     let mean_err = total_err / compressed.len() as f64;
     assert!(mean_err < 1.0, "compressed decode drifted: mean rel err {mean_err}");
+}
+
+#[test]
+fn decode_batch_reproduces_sequential_decode_over_full_chains() {
+    // The tentpole invariant: decode_batch over B sequences is
+    // bit-identical to B independent decode calls — same logits, same
+    // q/k/v streams, hence the same cache mutations — sustained over a
+    // multi-step autoregressive chain with mixed policies and
+    // out-of-phase prompt lengths.
+    let m = HostExecutor::new(chain_spec(), 41).unwrap();
+    let mixes: [(&str, usize, &[i32]); 3] = [
+        ("exact", usize::MAX / 4, &[1, 2, 3]),
+        ("subgen", 64, &[4, 5, 6, 7, 8]),
+        ("h2o", 32, &[9, 10]),
+    ];
+    let mut caches = Vec::new();
+    let mut flats = Vec::new();
+    let mut toks = Vec::new();
+    let mut poss = Vec::new();
+    for (i, (policy, budget, prompt)) in mixes.iter().enumerate() {
+        let mut c = SequenceCaches::new(m.spec(), policy, *budget, 4.0, i as u64 ^ 0x5EED).unwrap();
+        let pre = m.prefill(prompt).unwrap();
+        for p in 0..prompt.len() {
+            c.update(
+                &m.position_slice(&pre.qs, p),
+                &m.position_slice(&pre.ks, p),
+                &m.position_slice(&pre.vs, p),
+            );
+        }
+        let cap = m.spec().pick_cache_variant(c.max_slots() + 1);
+        flats.push(c.assemble(cap).unwrap());
+        caches.push(c);
+        toks.push((i + 1) as i32);
+        poss.push(prompt.len());
+    }
+    for step in 0..16 {
+        let steps: Vec<DecodeStep<'_>> = (0..3)
+            .map(|b| DecodeStep { token: toks[b], pos: poss[b], flat: &flats[b] })
+            .collect();
+        let batched = m.decode_batch(&steps).unwrap();
+        for (b, st) in steps.iter().enumerate() {
+            let single = m.decode(st.token, st.pos, st.flat).unwrap();
+            assert_eq!(batched[b].logits, single.logits, "step {step} seq {b}");
+            assert_eq!(batched[b].q, single.q, "step {step} seq {b}");
+            assert_eq!(batched[b].k, single.k, "step {step} seq {b}");
+            assert_eq!(batched[b].v, single.v, "step {step} seq {b}");
+        }
+        drop(steps);
+        for b in 0..3 {
+            caches[b].update(&batched[b].q, &batched[b].k, &batched[b].v);
+            toks[b] = subgen::tensor::argmax(&batched[b].logits) as i32;
+            poss[b] += 1;
+            caches[b].reassemble(m.spec(), &mut flats[b]).unwrap();
+        }
+    }
 }
 
 #[test]

@@ -1,13 +1,19 @@
 #!/usr/bin/env bash
 # Perf-regression gate over the committed bench baseline.
 #
-# Re-runs `cargo bench --bench bench_query_latency` (which rewrites
-# BENCH_query.json at the repo root) and compares every `*_ns` timing
-# against the previously committed baseline. Exits non-zero when a
-# timing regresses beyond the tolerance (BENCH_TOLERANCE, default 0.25
-# = 25%). Per the ROADMAP open item, the baseline does not exist until
-# the first CI bench run commits it — a missing baseline is a clean
-# skip, not a failure, so this script can gate CI from day one.
+# Re-runs the BENCH_query.json emitters — `cargo bench --bench
+# bench_query_latency` (rewrites the file) then `cargo bench --bench
+# bench_e2e_decode` (merges its `batched_decode` operating point into
+# it) — and compares every `*_ns` timing against the previously
+# committed baseline. Exits non-zero when a timing regresses beyond the
+# tolerance (BENCH_TOLERANCE, default 0.25 = 25%) **or when a `*_ns`
+# key present in the baseline is missing from the fresh run** — a
+# silently dropped operating point must fail the gate, not skip it.
+# A per-key before/after table is printed either way.
+#
+# The baseline does not exist until the first CI bench run commits it —
+# a missing baseline *file* is a clean skip, so this script can gate CI
+# from day one.
 set -euo pipefail
 
 ROOT="$(cd "$(dirname "$0")/.." && pwd)"
@@ -16,7 +22,7 @@ TOLERANCE="${BENCH_TOLERANCE:-0.25}"
 
 if [ ! -f "$BASELINE" ]; then
   echo "bench_check: no committed BENCH_query.json baseline yet — skipping" \
-       "(trigger the CI bench job and commit the artifact to arm this gate)"
+       "(the CI bench job on main produces and commits it)"
   exit 0
 fi
 
@@ -25,6 +31,7 @@ cp "$BASELINE" "$SAVED"
 trap 'rm -f "$SAVED"' EXIT
 
 (cd "$ROOT/rust" && cargo bench --bench bench_query_latency)
+(cd "$ROOT/rust" && cargo bench --bench bench_e2e_decode)
 
 python3 - "$ROOT/BENCH_query.json" "$SAVED" "$TOLERANCE" <<'EOF'
 import json
@@ -43,16 +50,38 @@ def walk(node, prefix=""):
         yield prefix.rstrip("."), float(node)
 
 
-base_vals = dict(walk(base))
+base_vals = {k: v for k, v in walk(base) if k.endswith("_ns")}
+fresh_vals = {k: v for k, v in walk(fresh) if k.endswith("_ns")}
+
+rows = []
 regressions = []
-for key, val in walk(fresh):
-    if not key.endswith("_ns") or base_vals.get(key, 0) <= 0:
+missing = []
+for key in sorted(base_vals.keys() | fresh_vals.keys()):
+    b, f = base_vals.get(key), fresh_vals.get(key)
+    if f is None:
+        missing.append(key)
+        rows.append((key, f"{b:.0f}", "MISSING", "-", "MISSING"))
         continue
-    ratio = val / base_vals[key]
+    if b is None or b <= 0:
+        rows.append((key, "-", f"{f:.0f}", "-", "new (no baseline)"))
+        continue
+    ratio = f / b
     status = "REGRESSION" if ratio > 1 + tol else "ok"
-    print(f"bench_check: {key}: {base_vals[key]:.0f} -> {val:.0f} ns (x{ratio:.2f}) {status}")
     if ratio > 1 + tol:
         regressions.append(key)
+    rows.append((key, f"{b:.0f}", f"{f:.0f}", f"x{ratio:.2f}", status))
+
+widths = [max(len(r[i]) for r in rows + [("key", "baseline ns", "current ns", "ratio", "status")])
+          for i in range(5)]
+header = ("key", "baseline ns", "current ns", "ratio", "status")
+for row in [header] + rows:
+    print("bench_check: " + "  ".join(c.ljust(w) for c, w in zip(row, widths)))
+
+if missing:
+    sys.exit(
+        f"bench_check: {len(missing)} baseline timing(s) missing from the fresh "
+        f"run (dropped operating point?): {', '.join(missing)}"
+    )
 if regressions:
     sys.exit(
         f"bench_check: {len(regressions)} timing(s) regressed beyond "
