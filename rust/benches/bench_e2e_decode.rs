@@ -19,7 +19,7 @@ use subgen::bench::{black_box, Bencher, Table};
 use subgen::model::{DecodeStep, Generator, HostExecutor, ModelSpec, SequenceCaches};
 use subgen::rng::{fill_gaussian, Pcg64};
 use subgen::runtime::Runtime;
-use subgen::workload::{lines_for_seq_len, RetrievalSampler};
+use subgen::workload::{lines_for_seq_len_clamped, RetrievalSampler};
 
 /// The batched-decode operating point: context length per branch.
 const N_CTX: usize = 4_096;
@@ -155,7 +155,7 @@ fn main() -> anyhow::Result<()> {
     // Shared prompt + per-policy caches at n = 384.
     let n = 384;
     let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(1));
-    let inst = sampler.sample(lines_for_seq_len(n));
+    let inst = sampler.sample(lines_for_seq_len_clamped(n));
     let (prompt, _) = inst.tokens();
     let pre = generator.prefill(&prompt)?;
 

@@ -23,7 +23,7 @@ use subgen::rng::{Pcg64, Rng};
 use subgen::runtime::Runtime;
 use subgen::tensor::Tensor;
 use subgen::tsne::{tsne, TsneConfig};
-use subgen::workload::{lines_for_seq_len, RetrievalSampler};
+use subgen::workload::{lines_for_seq_len_clamped, RetrievalSampler};
 
 fn main() -> Result<()> {
     let args = Args::from_env("Figure 1: key/value clusterability")
@@ -133,7 +133,7 @@ fn harvest(
         // Vary document length for diversity (the MT-Bench analog).
         let lines = 8 + ((round * 13) % 48) as usize;
         let n = subgen::workload::seq_len_for_lines(lines).min(spec.prefill_t);
-        let inst = sampler.sample(lines_for_seq_len(n));
+        let inst = sampler.sample(lines_for_seq_len_clamped(n));
         let (prompt, answer) = inst.tokens();
         let mut caches = SequenceCaches::new(spec, "exact", usize::MAX / 4, 0.5, seed)?;
         let _ = generator.generate(&prompt, answer.len(), &mut caches)?;

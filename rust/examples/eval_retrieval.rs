@@ -1,0 +1,139 @@
+//! Table-1-shaped retrieval accuracy run, end to end on the pure-rust
+//! stack: train (or load) a host transformer, then decode held-out
+//! line-retrieval documents through the serving engine under **all five
+//! cache policies at matched per-head budgets** and print the accuracy
+//! table the paper's headline claim is about.
+//!
+//!     cargo run --release --example eval_retrieval -- --steps 1500
+//!     cargo run --release --example eval_retrieval -- --checkpoint subgen_host.ck
+//!
+//! One `accuracy policy=<p> budget=<b> …` line per table cell is
+//! emitted for CI/grep consumption, and the whole sweep lands in
+//! `BENCH_accuracy.json` (trend tracking; no `*_ns` keys, so the perf
+//! gate ignores it).
+
+use anyhow::Result;
+use std::path::Path;
+use subgen::bench::Table;
+use subgen::cli::Args;
+use subgen::io::Checkpoint;
+use subgen::kvcache::POLICY_NAMES;
+use subgen::model::{HostExecutor, ModelSpec};
+use subgen::train::{accuracy_json, evaluate_policies, EvalConfig, TrainConfig, Trainer};
+use subgen::workload::seq_len_for_lines;
+
+fn main() -> Result<()> {
+    let args = Args::from_env("per-policy retrieval accuracy at matched budgets")
+        .describe("checkpoint", None, "trained checkpoint to evaluate (skips training)")
+        .describe("steps", Some("5000"), "max optimizer steps when training here")
+        .describe("batch", Some("16"), "documents per optimizer step")
+        .describe("lr", Some("0.002"), "peak learning rate")
+        .describe("lines-min", Some("2"), "min training document lines")
+        .describe("lines-max", Some("4"), "max training document lines")
+        .describe("lines", Some("4"), "held-out document lines (eval)")
+        .describe("questions", Some("50"), "held-out documents per policy")
+        .describe("budgets", Some("24,32,48"), "per-head budgets to sweep")
+        .describe("delta", Some("4.0"), "subgen cluster threshold δ")
+        .describe("json", None, "output path (default ../BENCH_accuracy.json)")
+        .describe("seed", Some("0"), "rng seed");
+    args.exit_on_help();
+    let lines = args.usize_or("lines", 4).clamp(1, 100);
+    let questions = args.usize_or("questions", 50);
+    let delta = args.f32_or("delta", 4.0);
+    let seed = args.u64_or("seed", 0);
+    let budgets: Vec<usize> = args
+        .get_or("budgets", "24,32,48")
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| s.trim().parse().expect("--budgets must be comma-separated integers"))
+        .collect();
+
+    // ── Model: load a checkpoint or train one right here ──
+    let ck = match args.get("checkpoint") {
+        Some(path) => Checkpoint::load(Path::new(path))?,
+        None => {
+            let spec = ModelSpec {
+                vocab: subgen::workload::VOCAB,
+                d_model: 48,
+                n_heads: 4,
+                n_layers: 2,
+                d_head: 12,
+                prefill_t: 512,
+                cache_variants: vec![640, 384, 256, 128],
+                decode_batch: 0,
+                train_accuracy: -1.0,
+            };
+            let cfg = TrainConfig {
+                lines_min: args.usize_or("lines-min", 2),
+                lines_max: args.usize_or("lines-max", 4).max(lines),
+                batch: args.usize_or("batch", 16),
+                steps: args.usize_or("steps", 5000),
+                lr: args.f32_or("lr", 2e-3),
+                seed,
+                log: true,
+                ..Default::default()
+            };
+            // Pre-flight before spending the training run: the longest
+            // training document must fit the exported spec's prefill.
+            anyhow::ensure!(
+                seq_len_for_lines(cfg.lines_max) <= spec.prefill_t,
+                "--lines {} needs {} tokens, beyond prefill_t {}",
+                cfg.lines_max,
+                seq_len_for_lines(cfg.lines_max),
+                spec.prefill_t
+            );
+            let mut trainer = Trainer::new(spec, cfg)?;
+            let report = trainer.run()?;
+            println!(
+                "trained: steps={} loss={:.4} held-out accuracy={:.3}\n",
+                report.steps, report.final_loss, report.accuracy
+            );
+            trainer.into_model().to_checkpoint()
+        }
+    };
+    let exec = HostExecutor::from_checkpoint(&ck)?;
+    let train_acc = exec.spec().train_accuracy;
+    println!(
+        "eval: {} lines/doc ({} tokens), {questions} docs/policy, budgets {budgets:?}, \
+         train_accuracy={train_acc:.3}\n",
+        lines,
+        seq_len_for_lines(lines)
+    );
+
+    // ── The sweep: every policy × every budget, identical documents ──
+    let headers: Vec<String> = std::iter::once("policy".to_string())
+        .chain(budgets.iter().map(|b| format!("b={b}")))
+        .collect();
+    let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table = Table::new(&header_refs);
+    let mut sweeps = Vec::with_capacity(budgets.len());
+    for &budget in &budgets {
+        let cfg = EvalConfig { questions, n_lines: lines, budget, delta, seed: seed ^ 0x5EED_E7A1 };
+        let rows = evaluate_policies(&exec, &POLICY_NAMES, &cfg)?;
+        for r in &rows {
+            println!(
+                "accuracy policy={} budget={budget} lines={lines} correct={}/{} acc={:.3} \
+                 cache_bytes={:.0}",
+                r.policy, r.correct, r.total, r.accuracy(), r.mean_cache_bytes
+            );
+        }
+        sweeps.push((budget, rows));
+    }
+    for (pi, &policy) in POLICY_NAMES.iter().enumerate() {
+        let mut cells = vec![policy.to_string()];
+        for (_, rows) in &sweeps {
+            cells.push(format!("{:.3}", rows[pi].accuracy()));
+        }
+        table.row(&cells);
+    }
+    println!();
+    table.print();
+    println!("\n(exact is the uncompressed reference; compressed rows share each budget)");
+
+    let json = accuracy_json(&sweeps, lines, questions, delta, train_acc);
+    let default_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_accuracy.json");
+    let path = args.get_or("json", default_path);
+    std::fs::write(&path, json)?;
+    println!("\nwrote {path}");
+    Ok(())
+}

@@ -24,7 +24,7 @@ use subgen::coordinator::{Engine, EngineConfig, HostExecutor, Request, StepExecu
 use subgen::model::{Generator, ModelSpec};
 use subgen::rng::Pcg64;
 use subgen::runtime::Runtime;
-use subgen::workload::{lines_for_seq_len, RetrievalSampler};
+use subgen::workload::{lines_for_seq_len_clamped, RetrievalSampler};
 
 /// Paper's Table-1 cache-reduction schedule per context length (lengths
 /// scaled to where the CPU-trained model retrieves reliably; the paper's
@@ -124,7 +124,7 @@ fn run_cell<E: StepExecutor>(
     let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed ^ n as u64));
     let mut expected = Vec::new();
     for id in 0..questions {
-        let inst = sampler.sample(lines_for_seq_len(n));
+        let inst = sampler.sample(lines_for_seq_len_clamped(n));
         let (prompt, answer) = inst.tokens();
         expected.push(answer.clone());
         engine.submit(Request {

@@ -31,7 +31,7 @@ use subgen::model::{Generator, ModelSpec};
 use subgen::rng::Pcg64;
 use subgen::runtime::Runtime;
 use subgen::server::{channel, serve, ClusterSnapshot, LoadGen, LoadGenReport, Router};
-use subgen::workload::{lines_for_seq_len, RetrievalSampler};
+use subgen::workload::{lines_for_seq_len_clamped, RetrievalSampler};
 
 fn main() -> Result<()> {
     let args = Args::from_env("serving throughput under Poisson load (sharded router)")
@@ -117,7 +117,7 @@ fn run_policy(
     let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed));
     let mut prompts = Vec::with_capacity(requests);
     for _ in 0..requests {
-        let inst = sampler.sample(lines_for_seq_len(n));
+        let inst = sampler.sample(lines_for_seq_len_clamped(n));
         prompts.push(inst.tokens().0);
     }
     let make_request = Box::new(move |id: u64| Request {

@@ -13,9 +13,10 @@
 //!   [`runtime`], [`model`]: a vLLM-style rust serving stack with cache
 //!   policies as a first-class feature, running AOT-compiled JAX/Pallas
 //!   artifacts via PJRT;
-//! * **experiments** — [`workload`], [`tsne`], [`bench`], [`metrics`]:
-//!   everything needed to regenerate the paper's Table 1 and Figure 1
-//!   plus the Theorem-1 scaling studies;
+//! * **experiments** — [`workload`], [`train`], [`tsne`], [`bench`],
+//!   [`metrics`]: everything needed to regenerate the paper's Table 1
+//!   and Figure 1 plus the Theorem-1 scaling studies, including pure-
+//!   rust training of the host transformer on the retrieval task;
 //! * **substrates** — [`rng`], [`tensor`], [`linalg`], [`cli`],
 //!   [`config`], [`io`], [`proptest_lite`], [`xla`]: the utility layer
 //!   this sandbox would normally pull from crates.io, built from
@@ -39,6 +40,7 @@ pub mod sampling;
 pub mod server;
 pub mod subgen;
 pub mod tensor;
+pub mod train;
 pub mod tsne;
 pub mod workload;
 pub mod xla;

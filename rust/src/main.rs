@@ -3,35 +3,58 @@
 //! Subcommands:
 //!   info      — print model/executor details (+ artifact manifest)
 //!   generate  — answer a single synthetic retrieval prompt
-//!   eval      — mini Table-1 run (accuracy per policy at one length)
+//!   train     — fit the host transformer on line retrieval (pure-rust
+//!               backprop) and save a checkpoint
+//!   eval      — Table-1 run: per-policy retrieval accuracy at one
+//!               matched budget (all five cache policies)
 //!   serve     — sharded multi-worker serving run (`--workers N`,
 //!               `--stream` for per-token delivery, `--metrics-port`
 //!               for a live Prometheus endpoint)
 //!
 //! `--executor host` (the default) runs everything on the pure-rust
 //! [`subgen::model::HostExecutor`] — no PJRT artifacts needed;
-//! `--executor artifact` uses the compiled executables. The full
-//! experiment drivers live in examples/ (see README.md).
+//! `--checkpoint path.ck` serves/evaluates trained weights from
+//! `subgen train`; `--executor artifact` uses the compiled executables.
+//! The full experiment drivers live in examples/ (see README.md).
 
 use anyhow::Result;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use subgen::cli::Args;
 use subgen::coordinator::{Engine, EngineConfig, HostExecutor, Request, StepExecutor};
+use subgen::io::Checkpoint;
+use subgen::kvcache::POLICY_NAMES;
 use subgen::model::{Generator, ModelSpec};
 use subgen::rng::Pcg64;
 use subgen::runtime::Runtime;
 use subgen::server::{drain_stream, MetricsServer, Router};
-use subgen::workload::{decode, lines_for_seq_len, RetrievalSampler};
+use subgen::train::{accuracy_json, evaluate_policies, EvalConfig, TrainConfig, Trainer};
+use subgen::workload::{decode, lines_for_seq_len_clamped, RetrievalSampler};
 
 fn main() -> Result<()> {
     let args = Args::from_env("subgen — sublinear KV-cache token generation")
         .describe("executor", Some("host"), "decode backend (host|artifact)")
         .describe("artifacts", Some("artifacts"), "artifacts directory (artifact executor)")
-        .describe("policy", Some("subgen"), "cache policy (exact|sink|h2o|sliding|subgen)")
+        .describe("checkpoint", None, "trained checkpoint for the host executor (eval/serve)")
+        .describe("policy", None, "cache policy (exact|sink|h2o|sliding|subgen); generate/serve \
+                   default subgen, eval defaults to all five")
         .describe("budget", Some("128"), "per-head token budget")
         .describe("delta", Some("4.0"), "subgen cluster threshold")
         .describe("n", Some("384"), "context length in tokens (eval/serve)")
         .describe("questions", Some("10"), "questions to evaluate (eval)")
+        .describe("json", None, "write the per-policy accuracy JSON here (eval)")
+        .describe("steps", Some("5000"), "max optimizer steps (train)")
+        .describe("batch", Some("16"), "documents per step (train)")
+        .describe("lr", Some("0.002"), "peak learning rate (train)")
+        .describe("optimizer", Some("adam"), "update rule: adam|sgd (train)")
+        .describe("lines-min", Some("2"), "min document lines (train)")
+        .describe("lines-max", Some("4"), "max document lines (train)")
+        .describe("target-acc", Some("0.95"), "early-stop held-out accuracy (train)")
+        .describe("eval-docs", Some("32"), "held-out documents per evaluation (train)")
+        .describe("d-model", Some("48"), "residual width (train)")
+        .describe("heads", Some("4"), "attention heads (train)")
+        .describe("d-head", Some("12"), "per-head dimension (train)")
+        .describe("layers", Some("2"), "decoder layers (train)")
+        .describe("out", Some("subgen_host.ck"), "checkpoint output path (train)")
         .describe("workers", Some("2"), "worker engines (serve)")
         .describe("requests", Some("16"), "requests to serve (serve)")
         .describe("new", Some("8"), "tokens generated per request (serve)")
@@ -44,6 +67,7 @@ fn main() -> Result<()> {
     match args.subcommand().unwrap_or("info") {
         "info" => info(&args),
         "generate" => generate(&args),
+        "train" => train(&args),
         "eval" => eval(&args),
         "serve" => serve_cluster(&args),
         other => {
@@ -54,11 +78,16 @@ fn main() -> Result<()> {
 }
 
 /// Build the requested executor and hand it to `f` (the PJRT runtime is
-/// not `Send`/`'static`, so everything runs inside this scope).
+/// not `Send`/`'static`, so everything runs inside this scope). With
+/// `--checkpoint` the host executor loads trained weights instead of
+/// drawing them from the seed.
 fn with_executor<T>(args: &Args, f: impl FnOnce(&dyn StepExecutor) -> Result<T>) -> Result<T> {
     let seed = args.u64_or("seed", 0);
     match args.get_or("executor", "host").as_str() {
-        "host" => f(&HostExecutor::retrieval(seed ^ 0xBEEF)),
+        "host" => match args.get("checkpoint") {
+            Some(path) => f(&HostExecutor::load(Path::new(path))?),
+            None => f(&HostExecutor::retrieval(seed ^ 0xBEEF)),
+        },
         "artifact" => {
             let artifacts = PathBuf::from(args.get_or("artifacts", "artifacts"));
             let rt = Runtime::load(&artifacts, None)?;
@@ -109,7 +138,7 @@ fn generate(args: &Args) -> Result<()> {
 
     with_executor(args, |exec| {
         let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed));
-        let inst = sampler.sample(lines_for_seq_len(n));
+        let inst = sampler.sample(lines_for_seq_len_clamped(n));
         let (prompt, answer) = inst.tokens();
         println!("prompt tokens  : {}", prompt.len());
         println!("query id       : {:02}", inst.query_id);
@@ -135,46 +164,120 @@ fn generate(args: &Args) -> Result<()> {
     })
 }
 
+/// Fit the host transformer on line retrieval with the pure-rust
+/// trainer and save the weights as a checkpoint `subgen eval` /
+/// `subgen serve --checkpoint` can load.
+fn train(args: &Args) -> Result<()> {
+    // d_model 48 with 4 heads of 12 is the smallest shape that reliably
+    // forms the retrieval circuit within a few thousand steps.
+    let spec = ModelSpec {
+        vocab: subgen::workload::VOCAB,
+        d_model: args.usize_or("d-model", 48),
+        n_heads: args.usize_or("heads", 4),
+        n_layers: args.usize_or("layers", 2),
+        d_head: args.usize_or("d-head", 12),
+        prefill_t: 512,
+        cache_variants: vec![640, 384, 256, 128],
+        decode_batch: 0,
+        train_accuracy: -1.0,
+    };
+    let cfg = TrainConfig {
+        lines_min: args.usize_or("lines-min", 2),
+        lines_max: args.usize_or("lines-max", 4),
+        batch: args.usize_or("batch", 16),
+        steps: args.usize_or("steps", 5000),
+        lr: args.f32_or("lr", 2e-3),
+        optimizer: args.get_or("optimizer", "adam").parse()?,
+        seed: args.u64_or("seed", 0),
+        eval_docs: args.usize_or("eval-docs", 32),
+        target_accuracy: args.f64_or("target-acc", 0.95),
+        log: true,
+        ..Default::default()
+    };
+    // The exported spec must be able to evaluate/serve what it was
+    // trained on: the longest training document has to fit a prefill.
+    anyhow::ensure!(
+        subgen::workload::seq_len_for_lines(cfg.lines_max) <= spec.prefill_t,
+        "--lines-max {} needs {} tokens, beyond the spec's prefill_t {}",
+        cfg.lines_max,
+        subgen::workload::seq_len_for_lines(cfg.lines_max),
+        spec.prefill_t
+    );
+    println!(
+        "training: d_model={} layers={} heads={} d_head={} lines={}..{} batch={} {:?}",
+        spec.d_model,
+        spec.n_layers,
+        spec.n_heads,
+        spec.d_head,
+        cfg.lines_min,
+        cfg.lines_max,
+        cfg.batch,
+        cfg.optimizer
+    );
+    let mut trainer = Trainer::new(spec, cfg)?;
+    let report = trainer.run()?;
+    let model = trainer.into_model();
+    let out = PathBuf::from(args.get_or("out", "subgen_host.ck"));
+    model.to_checkpoint().save(&out)?;
+    println!(
+        "train done steps={} loss={:.4} accuracy={:.3} params={} checkpoint={}",
+        report.steps, report.final_loss, report.accuracy, model.params().len(), out.display()
+    );
+    Ok(())
+}
+
+/// Table-1 run: decode held-out documents through every cache policy at
+/// one matched budget and print the per-policy accuracy table (plus
+/// machine-readable JSON via `--json`). `--policy` restricts to one
+/// row; `--checkpoint` evaluates trained weights.
 fn eval(args: &Args) -> Result<()> {
-    let policy = args.get_or("policy", "subgen");
     let budget = args.usize_or("budget", 128);
     let delta = args.f32_or("delta", 4.0);
     let n = args.usize_or("n", 384);
     let questions = args.usize_or("questions", 10);
     let seed = args.u64_or("seed", 0);
+    let n_lines = lines_for_seq_len_clamped(n);
+    let single = args.get("policy").map(|p| p.to_string());
+    let policies: Vec<&str> = match &single {
+        Some(p) => vec![p.as_str()],
+        None => POLICY_NAMES.to_vec(),
+    };
+
+    // Report the realized document size, not the requested --n: the
+    // sampler rounds down to whole lines, and trend lines keyed on the
+    // raw request would differ across runs of identical workloads.
+    let n_tokens = subgen::workload::seq_len_for_lines(n_lines);
 
     with_executor(args, |exec| {
-        let mut engine = Engine::new(&exec, EngineConfig::default());
-        let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed));
-        let mut expected = Vec::new();
-        for id in 0..questions {
-            let inst = sampler.sample(lines_for_seq_len(n));
-            let (prompt, answer) = inst.tokens();
-            expected.push(answer.clone());
-            engine.submit(Request {
-                id: id as u64,
-                session_id: None,
-                prompt,
-                max_new: answer.len(),
-                policy: policy.clone(),
-                budget,
-                delta,
-            });
-        }
-        engine.run_to_completion()?;
-        let mut responses = engine.take_responses();
-        responses.sort_by_key(|r| r.id);
-        let correct = responses
-            .iter()
-            .filter(|r| r.tokens == expected[r.id as usize])
-            .count();
+        let train_acc = exec.spec().train_accuracy;
         println!(
-            "policy={policy} n={n} budget={budget}: accuracy {}/{} = {:.2}",
-            correct,
-            questions,
-            correct as f64 / questions as f64
+            "eval: lines={n_lines} ({} prompt tokens) questions={questions} budget={budget} \
+             train_accuracy={train_acc:.3}",
+            n_tokens - subgen::workload::ANSWER_TOKENS
         );
-        println!("latency: {}", engine.stats.latency.summary());
+        let cfg = EvalConfig { questions, n_lines, budget, delta, seed: seed ^ 0x5EED_E7A1 };
+        let rows = evaluate_policies(&exec, &policies, &cfg)?;
+        let mut table = subgen::bench::Table::new(&["policy", "accuracy", "correct", "cache KiB"]);
+        for r in &rows {
+            println!(
+                "accuracy policy={} lines={n_lines} n={n_tokens} budget={budget} \
+                 correct={}/{} acc={:.3} cache_bytes={:.0}",
+                r.policy, r.correct, r.total, r.accuracy(), r.mean_cache_bytes
+            );
+            table.row(&[
+                r.policy.clone(),
+                format!("{:.3}", r.accuracy()),
+                format!("{}/{}", r.correct, r.total),
+                format!("{:.1}", r.mean_cache_bytes / 1024.0),
+            ]);
+        }
+        println!();
+        table.print();
+        if let Some(path) = args.get("json") {
+            let json = accuracy_json(&[(budget, rows)], n_lines, questions, delta, train_acc);
+            std::fs::write(path, json)?;
+            println!("\nwrote {path}");
+        }
         Ok(())
     })
 }
@@ -201,11 +304,25 @@ fn serve_cluster(args: &Args) -> Result<()> {
     let delta = args.f32_or("delta", 4.0);
     let seed = args.u64_or("seed", 0);
 
-    // Every worker hosts the *same* model (same seed): responses are
-    // identical no matter which worker a request lands on.
+    // Every worker hosts the *same* model (same seed or the same
+    // trained checkpoint): responses are identical no matter which
+    // worker a request lands on.
     let model_seed = seed ^ 0xBEEF;
+    let ck = match args.get("checkpoint") {
+        Some(path) => {
+            let ck = Checkpoint::load(Path::new(path))?;
+            // Pre-flight on the main thread so a bad file is a clean
+            // error, not a worker-thread panic.
+            HostExecutor::from_checkpoint(&ck)?;
+            Some(ck)
+        }
+        None => None,
+    };
     let cfg = EngineConfig { max_active: 4, ..Default::default() };
-    let router = Router::spawn(workers, cfg, move |_w| HostExecutor::retrieval(model_seed))?;
+    let router = Router::spawn(workers, cfg, move |_w| match &ck {
+        Some(ck) => HostExecutor::from_checkpoint(ck).expect("checkpoint validated above"),
+        None => HostExecutor::retrieval(model_seed),
+    })?;
     let exporter = match args.get("metrics-port") {
         Some(port) => {
             let server = MetricsServer::bind(&format!("127.0.0.1:{port}"), router.metrics())?;
@@ -219,7 +336,7 @@ fn serve_cluster(args: &Args) -> Result<()> {
     let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed));
     let mut reqs = Vec::with_capacity(requests);
     for id in 0..requests {
-        let inst = sampler.sample(lines_for_seq_len(n));
+        let inst = sampler.sample(lines_for_seq_len_clamped(n));
         let (prompt, _answer) = inst.tokens();
         let session_id = if sessions > 0 { Some((id % sessions) as u64) } else { None };
         reqs.push(Request {

@@ -40,7 +40,9 @@
 //! [`HostExecutor::decode`] calls (same kernels, same accumulation
 //! order), which the integration tests pin.
 
+use super::spec::FF_MULT;
 use super::{DecodeStep, FlatCaches, ModelSpec, PrefillOutput, StepOutput};
+use crate::io::Checkpoint;
 use crate::kvcache::attention_flat_into;
 use crate::rng::SplitMix64;
 use crate::tensor::{dot, matvec_batch_into, matvec_into, Tensor};
@@ -49,10 +51,8 @@ use std::cell::RefCell;
 
 /// RoPE base frequency (the standard 10⁴).
 const ROPE_BASE: f32 = 10_000.0;
-/// RMSNorm stabilizer.
-const NORM_EPS: f32 = 1e-6;
-/// MLP expansion factor (d_ff = FF_MULT · d_model).
-const FF_MULT: usize = 2;
+/// RMSNorm stabilizer (shared with the trainer's backward pass).
+pub(crate) const NORM_EPS: f32 = 1e-6;
 
 /// One decoder layer's weights.
 struct Layer {
@@ -180,7 +180,7 @@ pub struct HostExecutor {
 }
 
 /// `y = x · g / √(mean(x²) + ε)`.
-fn rmsnorm(x: &[f32], g: &[f32], out: &mut [f32]) {
+pub(crate) fn rmsnorm(x: &[f32], g: &[f32], out: &mut [f32]) {
     let inv = 1.0 / (dot(x, x) / x.len() as f32 + NORM_EPS).sqrt();
     for ((o, &xi), &gi) in out.iter_mut().zip(x).zip(g) {
         *o = xi * inv * gi;
@@ -189,7 +189,7 @@ fn rmsnorm(x: &[f32], g: &[f32], out: &mut [f32]) {
 
 /// Rotary position embedding over `n_heads` heads of width
 /// `2 · freqs.len()` (consecutive pairs rotated by `pos · freqs[i]`).
-fn rope_inplace(x: &mut [f32], n_heads: usize, freqs: &[f32], pos: usize) {
+pub(crate) fn rope_inplace(x: &mut [f32], n_heads: usize, freqs: &[f32], pos: usize) {
     let dh = 2 * freqs.len();
     for h in 0..n_heads {
         let head = &mut x[h * dh..(h + 1) * dh];
@@ -204,12 +204,12 @@ fn rope_inplace(x: &mut [f32], n_heads: usize, freqs: &[f32], pos: usize) {
 }
 
 /// The per-pair RoPE frequency table for head width `dh`.
-fn rope_freqs(dh: usize) -> Vec<f32> {
+pub(crate) fn rope_freqs(dh: usize) -> Vec<f32> {
     (0..dh / 2).map(|i| ROPE_BASE.powf(-2.0 * i as f32 / dh as f32)).collect()
 }
 
 /// `x · sigmoid(x)` elementwise.
-fn silu_inplace(x: &mut [f32]) {
+pub(crate) fn silu_inplace(x: &mut [f32]) {
     for xi in x.iter_mut() {
         *xi /= 1.0 + (-*xi).exp();
     }
@@ -225,10 +225,6 @@ fn gen_matrix(seed: u64, tag: u64, rows: usize, cols: usize, std: f32) -> Tensor
 impl HostExecutor {
     /// Build the model for `spec`, drawing all weights from `seed`.
     pub fn new(spec: ModelSpec, seed: u64) -> Result<HostExecutor> {
-        anyhow::ensure!(spec.vocab > 0 && spec.d_model > 0, "degenerate spec");
-        anyhow::ensure!(spec.n_layers > 0 && spec.n_heads > 0, "degenerate spec");
-        anyhow::ensure!(spec.d_head % 2 == 0, "RoPE needs an even d_head");
-        anyhow::ensure!(!spec.cache_variants.is_empty(), "spec has no cache variants");
         let (dm, hd) = (spec.d_model, spec.n_heads * spec.d_head);
         let d_ff = FF_MULT * dm;
         let proj_std = 1.0 / (dm as f32).sqrt();
@@ -246,15 +242,110 @@ impl HostExecutor {
                 w2: gen_matrix(seed, tag + 6, dm, d_ff, 1.0 / (d_ff as f32).sqrt()),
             });
         }
+        let embed = gen_matrix(seed, 0x01, spec.vocab, dm, 1.0);
+        let g_final = vec![1.0; dm];
+        Self::from_parts(spec, embed, layers, g_final)
+    }
+
+    /// Assemble an executor from explicit weights, validating shapes.
+    fn from_parts(
+        spec: ModelSpec,
+        embed: Tensor,
+        layers: Vec<Layer>,
+        g_final: Vec<f32>,
+    ) -> Result<HostExecutor> {
+        anyhow::ensure!(spec.vocab > 0 && spec.d_model > 0, "degenerate spec");
+        anyhow::ensure!(spec.n_layers > 0 && spec.n_heads > 0, "degenerate spec");
+        anyhow::ensure!(spec.d_head % 2 == 0, "RoPE needs an even d_head");
+        anyhow::ensure!(!spec.cache_variants.is_empty(), "spec has no cache variants");
+        anyhow::ensure!(layers.len() == spec.n_layers, "layer count mismatch");
+        anyhow::ensure!(
+            embed.rows() == spec.vocab && embed.cols() == spec.d_model,
+            "embed shaped {}×{}, spec wants {}×{}",
+            embed.rows(),
+            embed.cols(),
+            spec.vocab,
+            spec.d_model
+        );
+        anyhow::ensure!(g_final.len() == spec.d_model, "g_final width mismatch");
         Ok(HostExecutor {
-            embed: gen_matrix(seed, 0x01, spec.vocab, dm, 1.0),
+            embed,
             layers,
-            g_final: vec![1.0; dm],
+            g_final,
             rope_freqs: rope_freqs(spec.d_head),
             spec,
             scratch: RefCell::new(Scratch::default()),
             batch_scratch: RefCell::new(BatchScratch::default()),
         })
+    }
+
+    /// Export all weights plus spec metadata as a [`Checkpoint`] — the
+    /// interchange format between the trainer, disk, and executors.
+    /// [`HostExecutor::from_checkpoint`] rebuilds a bit-identical model.
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        let (v, dm) = (self.spec.vocab, self.spec.d_model);
+        let (hd, d_ff) = (self.spec.n_heads * self.spec.d_head, self.spec.d_ff());
+        let mut ck = Checkpoint::new();
+        self.spec.write_checkpoint_meta(&mut ck);
+        ck.insert("embed", vec![v, dm], self.embed.as_slice().to_vec());
+        ck.insert("g_final", vec![dm], self.g_final.clone());
+        for (l, layer) in self.layers.iter().enumerate() {
+            let name = |f: &str| format!("layers.{l}.{f}");
+            ck.insert(&name("g_attn"), vec![dm], layer.g_attn.clone());
+            ck.insert(&name("g_mlp"), vec![dm], layer.g_mlp.clone());
+            ck.insert(&name("wq"), vec![hd, dm], layer.wq.as_slice().to_vec());
+            ck.insert(&name("wk"), vec![hd, dm], layer.wk.as_slice().to_vec());
+            ck.insert(&name("wv"), vec![hd, dm], layer.wv.as_slice().to_vec());
+            ck.insert(&name("wo"), vec![dm, hd], layer.wo.as_slice().to_vec());
+            ck.insert(&name("w1"), vec![d_ff, dm], layer.w1.as_slice().to_vec());
+            ck.insert(&name("w2"), vec![dm, d_ff], layer.w2.as_slice().to_vec());
+        }
+        ck
+    }
+
+    /// Build from a checkpoint written by [`HostExecutor::to_checkpoint`]
+    /// or the trainer (`subgen train`). The checkpoint carries its own
+    /// spec metadata; every tensor's shape is validated against it.
+    pub fn from_checkpoint(ck: &Checkpoint) -> Result<HostExecutor> {
+        let spec = ModelSpec::read_checkpoint_meta(ck)?;
+        let (v, dm) = (spec.vocab, spec.d_model);
+        let (hd, d_ff) = (spec.n_heads * spec.d_head, spec.d_ff());
+        let tensor = |name: String, rows: usize, cols: usize| -> Result<Tensor> {
+            let t = ck.require(&name)?;
+            anyhow::ensure!(
+                t.dims == [rows, cols],
+                "{name}: shaped {:?}, want [{rows}, {cols}]",
+                t.dims
+            );
+            Ok(Tensor::from_vec(t.data.clone(), rows, cols))
+        };
+        let gain = |name: String| -> Result<Vec<f32>> {
+            let t = ck.require(&name)?;
+            anyhow::ensure!(t.dims == [dm], "{name}: shaped {:?}, want [{dm}]", t.dims);
+            Ok(t.data.clone())
+        };
+        let mut layers = Vec::with_capacity(spec.n_layers);
+        for l in 0..spec.n_layers {
+            let name = |f: &str| format!("layers.{l}.{f}");
+            layers.push(Layer {
+                g_attn: gain(name("g_attn"))?,
+                g_mlp: gain(name("g_mlp"))?,
+                wq: tensor(name("wq"), hd, dm)?,
+                wk: tensor(name("wk"), hd, dm)?,
+                wv: tensor(name("wv"), hd, dm)?,
+                wo: tensor(name("wo"), dm, hd)?,
+                w1: tensor(name("w1"), d_ff, dm)?,
+                w2: tensor(name("w2"), dm, d_ff)?,
+            });
+        }
+        let embed = tensor("embed".to_string(), v, dm)?;
+        let g_final = gain("g_final".to_string())?;
+        Self::from_parts(spec, embed, layers, g_final)
+    }
+
+    /// Load a checkpoint file (see [`HostExecutor::from_checkpoint`]).
+    pub fn load(path: &std::path::Path) -> Result<HostExecutor> {
+        Self::from_checkpoint(&Checkpoint::load(path)?)
     }
 
     /// A small default model for tests (same shapes as
@@ -865,6 +956,41 @@ mod tests {
         };
         assert!(m.decode(-1, 1, &flat).is_err());
         assert!(m.decode(16, 1, &flat).is_err());
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_is_bit_identical() {
+        // to_checkpoint → from_checkpoint must reproduce the exact same
+        // model: identical spec and bit-identical prefill logits and
+        // q/k/v streams.
+        let m = HostExecutor::small(23);
+        let ck = m.to_checkpoint();
+        // Weights plus the spec metadata tensors (7 + variants + 1).
+        let weights = 16 * 16 + 16 + 2 * (2 * 16 + 4 * 16 * 16 + 2 * 16 * 32);
+        assert_eq!(ck.total_params(), weights + 7 + m.spec().cache_variants.len() + 1);
+        let back = HostExecutor::from_checkpoint(&ck).unwrap();
+        assert_eq!(back.spec().vocab, m.spec().vocab);
+        assert_eq!(back.spec().cache_variants, m.spec().cache_variants);
+        let a = m.prefill(&[1, 2, 3, 4, 5]).unwrap();
+        let b = back.prefill(&[1, 2, 3, 4, 5]).unwrap();
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.qs, b.qs);
+        assert_eq!(a.ks, b.ks);
+        assert_eq!(a.vs, b.vs);
+    }
+
+    #[test]
+    fn from_checkpoint_rejects_bad_shapes() {
+        let m = HostExecutor::small(1);
+        let ck = m.to_checkpoint();
+        // Missing a tensor.
+        let mut missing = Checkpoint::new();
+        m.spec().write_checkpoint_meta(&mut missing);
+        assert!(HostExecutor::from_checkpoint(&missing).is_err());
+        // Wrong shape for a weight.
+        let mut bad = ck.clone();
+        bad.insert("layers.0.wq", vec![2, 2], vec![0.0; 4]);
+        assert!(HostExecutor::from_checkpoint(&bad).is_err());
     }
 
     #[test]

@@ -14,4 +14,8 @@ mod spec;
 pub use caches::{DecodeStep, FlatCaches, SequenceCaches};
 pub use generator::{Generator, PrefillOutput, StepOutput};
 pub use host::HostExecutor;
-pub use spec::ModelSpec;
+pub use spec::{ModelSpec, FF_MULT};
+
+// Forward-pass primitives shared with the trainer (`crate::train`), so
+// the trained math is definitionally the served math.
+pub(crate) use host::{rope_freqs, rope_inplace, silu_inplace, NORM_EPS};

@@ -1,7 +1,11 @@
 //! Model hyperparameters as recorded in the artifact manifest.
 
-use crate::io::Manifest;
+use crate::io::{Checkpoint, Manifest};
 use anyhow::Result;
+
+/// MLP expansion factor shared by every executor and the trainer
+/// (`d_ff = FF_MULT · d_model`).
+pub const FF_MULT: usize = 2;
 
 /// Shapes the executables were lowered with.
 #[derive(Debug, Clone)]
@@ -71,6 +75,56 @@ impl ModelSpec {
     pub fn batched_decode_artifact(&self) -> String {
         format!("decode_b{}_c{}", self.decode_batch, self.cache_variants[0])
     }
+
+    /// MLP hidden width.
+    pub fn d_ff(&self) -> usize {
+        FF_MULT * self.d_model
+    }
+
+    /// Record the spec inside a checkpoint as metadata tensors
+    /// (`spec`, `spec.cache_variants`, `spec.train_accuracy`), so a
+    /// checkpoint is self-describing: [`ModelSpec::read_checkpoint_meta`]
+    /// rebuilds the spec with no manifest. All fields are small integers,
+    /// exact in f32.
+    pub fn write_checkpoint_meta(&self, ck: &mut Checkpoint) {
+        let fields = vec![
+            self.vocab as f32,
+            self.d_model as f32,
+            self.n_heads as f32,
+            self.n_layers as f32,
+            self.d_head as f32,
+            self.prefill_t as f32,
+            self.decode_batch as f32,
+        ];
+        ck.insert("spec", vec![fields.len()], fields);
+        let variants: Vec<f32> = self.cache_variants.iter().map(|&c| c as f32).collect();
+        ck.insert("spec.cache_variants", vec![variants.len()], variants);
+        ck.insert("spec.train_accuracy", vec![1], vec![self.train_accuracy as f32]);
+    }
+
+    /// Rebuild a spec from checkpoint metadata tensors (the inverse of
+    /// [`ModelSpec::write_checkpoint_meta`]).
+    pub fn read_checkpoint_meta(ck: &Checkpoint) -> Result<ModelSpec> {
+        let spec = ck.require("spec")?;
+        anyhow::ensure!(spec.data.len() == 7, "spec meta has {} fields, want 7", spec.data.len());
+        let field = |i: usize| spec.data[i] as usize;
+        let variants: Vec<usize> =
+            ck.require("spec.cache_variants")?.data.iter().map(|&c| c as usize).collect();
+        anyhow::ensure!(!variants.is_empty(), "checkpoint spec has no cache_variants");
+        let acc = ck.require("spec.train_accuracy")?;
+        anyhow::ensure!(acc.data.len() == 1, "spec.train_accuracy must be a scalar");
+        Ok(ModelSpec {
+            vocab: field(0),
+            d_model: field(1),
+            n_heads: field(2),
+            n_layers: field(3),
+            d_head: field(4),
+            prefill_t: field(5),
+            decode_batch: field(6),
+            cache_variants: variants,
+            train_accuracy: acc.data[0] as f64,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -122,5 +176,29 @@ train_accuracy = 0.9
         let s = spec();
         assert_eq!(s.decode_artifact(384), "decode_c384");
         assert_eq!(s.batched_decode_artifact(), "decode_b8_c640");
+    }
+
+    #[test]
+    fn checkpoint_meta_roundtrip() {
+        let s = spec();
+        let mut ck = Checkpoint::new();
+        s.write_checkpoint_meta(&mut ck);
+        let back = ModelSpec::read_checkpoint_meta(&ck).unwrap();
+        assert_eq!(back.vocab, s.vocab);
+        assert_eq!(back.d_model, s.d_model);
+        assert_eq!(back.n_heads, s.n_heads);
+        assert_eq!(back.n_layers, s.n_layers);
+        assert_eq!(back.d_head, s.d_head);
+        assert_eq!(back.prefill_t, s.prefill_t);
+        assert_eq!(back.decode_batch, s.decode_batch);
+        assert_eq!(back.cache_variants, s.cache_variants);
+        assert!((back.train_accuracy - s.train_accuracy).abs() < 1e-6);
+        assert_eq!(back.d_ff(), FF_MULT * s.d_model);
+    }
+
+    #[test]
+    fn checkpoint_meta_missing_rejected() {
+        let ck = Checkpoint::new();
+        assert!(ModelSpec::read_checkpoint_meta(&ck).is_err());
     }
 }

@@ -46,6 +46,24 @@ impl LoadGenReport {
     }
 }
 
+/// Exponential inter-arrival gap in seconds for a uniform draw
+/// `u ∈ [0, 1]` at `rate` req/s: `-ln(1 - u) / rate`. The raw formula
+/// is `+inf` at `u = 1` — a latent `Duration::from_secs_f64` panic for
+/// any RNG whose `f64()` can reach 1.0 — so the draw is capped at the
+/// 1 − 1e-12 quantile (≈ 27.6 mean gaps): the distribution is untouched
+/// except on the pathological boundary, and stays exponential at every
+/// rate. A degenerate `rate ≤ 0` yields gap 0 rather than a non-finite
+/// value.
+fn exp_gap(u: f64, rate: f64) -> f64 {
+    let capped = u.clamp(0.0, 1.0 - 1e-12);
+    let gap = -(1.0 - capped).ln() / rate;
+    if gap.is_finite() {
+        gap.max(0.0)
+    } else {
+        0.0
+    }
+}
+
 impl LoadGen {
     /// Run the open-loop experiment against any [`SubmitTarget`] — one
     /// engine loop or a sharded router. Arrivals are scheduled on the
@@ -62,8 +80,8 @@ impl LoadGen {
         let mut next_arrival = start;
 
         for id in 0..self.requests {
-            // Exponential inter-arrival.
-            let gap = -((1.0 - rng.f64()).ln()) / self.rate;
+            // Exponential inter-arrival (clamped; see `exp_gap`).
+            let gap = exp_gap(rng.f64(), self.rate);
             next_arrival += Duration::from_secs_f64(gap);
             let now = Instant::now();
             if next_arrival > now {
@@ -141,6 +159,27 @@ mod tests {
         assert_eq!(report.latency.count(), 20);
         handle.shutdown();
         t.join().unwrap();
+    }
+
+    #[test]
+    fn exp_gap_survives_boundary_draws() {
+        // Regression: the raw formula yields +inf at u = 1 and
+        // Duration::from_secs_f64 panics on non-finite input.
+        for (u, rate) in [(1.0, 100.0), (1.0, 0.0), (0.0, 0.0), (0.5, 0.0), (1.0, 1e-9)] {
+            let gap = exp_gap(u, rate);
+            assert!(gap.is_finite() && gap >= 0.0, "u={u} rate={rate}");
+            let _ = Duration::from_secs_f64(gap); // must not panic
+        }
+        // The boundary cap is ~27.6 mean gaps — huge but finite.
+        assert!((exp_gap(1.0, 1.0) - 27.6).abs() < 0.1);
+        // Ordinary draws keep their exponential shape at any rate: the
+        // quantile cap must not distort legitimate low-rate gaps.
+        assert_eq!(exp_gap(0.0, 100.0), 0.0);
+        let g1 = exp_gap(0.5, 100.0);
+        let g2 = exp_gap(0.9, 100.0);
+        assert!(g1 > 0.0 && g2 > g1, "monotone in u: {g1} {g2}");
+        assert!((g1 - 0.5f64.ln().abs() / 100.0).abs() < 1e-12);
+        assert!((exp_gap(0.5, 0.01) - 0.5f64.ln().abs() / 0.01).abs() < 1e-9);
     }
 
     #[test]

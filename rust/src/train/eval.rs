@@ -1,0 +1,209 @@
+//! Table-1-shaped accuracy evaluation: decode held-out retrieval
+//! documents through the serving engine under **every cache policy at a
+//! matched per-head token budget**, and report exact-match accuracy per
+//! policy.
+//!
+//! Every policy answers the *same* documents (the sampler is re-seeded
+//! per policy), so rows differ only by what each cache retains. The
+//! exact row is the uncompressed reference; compressed policies share
+//! one budget knob (`kvcache::build_policy`'s cross-policy matching).
+
+use crate::coordinator::{Engine, EngineConfig, Request, StepExecutor};
+use crate::rng::Pcg64;
+use crate::workload::{seq_len_for_lines, RetrievalSampler};
+use anyhow::Result;
+
+/// One policy's row of the accuracy table.
+#[derive(Debug, Clone)]
+pub struct PolicyAccuracy {
+    /// Cache policy name.
+    pub policy: String,
+    /// Exactly-matched answers.
+    pub correct: usize,
+    /// Documents evaluated.
+    pub total: usize,
+    /// Mean retained cache bytes per sequence at completion.
+    pub mean_cache_bytes: f64,
+}
+
+impl PolicyAccuracy {
+    /// Exact-match accuracy in [0, 1].
+    pub fn accuracy(&self) -> f64 {
+        self.correct as f64 / self.total.max(1) as f64
+    }
+}
+
+/// What to evaluate.
+#[derive(Debug, Clone)]
+pub struct EvalConfig {
+    /// Held-out documents per policy.
+    pub questions: usize,
+    /// Lines per document.
+    pub n_lines: usize,
+    /// Per-head token budget for the compressed policies.
+    pub budget: usize,
+    /// SubGen cluster threshold δ.
+    pub delta: f32,
+    /// Document stream seed (disjoint from training streams).
+    pub seed: u64,
+}
+
+impl Default for EvalConfig {
+    fn default() -> Self {
+        Self { questions: 50, n_lines: 8, budget: 48, delta: 4.0, seed: 0x5EED_E7A1 }
+    }
+}
+
+/// Decode `cfg.questions` documents through `exec` once per policy and
+/// return the per-policy rows, in the given policy order.
+pub fn evaluate_policies<E: StepExecutor>(
+    exec: &E,
+    policies: &[&str],
+    cfg: &EvalConfig,
+) -> Result<Vec<PolicyAccuracy>> {
+    anyhow::ensure!(cfg.questions >= 1, "need at least one question");
+    anyhow::ensure!((1..=100).contains(&cfg.n_lines), "n_lines must be 1..=100");
+    let prompt_len = seq_len_for_lines(cfg.n_lines) - crate::workload::ANSWER_TOKENS;
+    anyhow::ensure!(
+        prompt_len <= exec.spec().prefill_t,
+        "prompt of {} tokens exceeds prefill_t {}",
+        prompt_len,
+        exec.spec().prefill_t
+    );
+    let mut rows = Vec::with_capacity(policies.len());
+    for &policy in policies {
+        let mut engine = Engine::new(
+            exec,
+            EngineConfig { queue_capacity: cfg.questions + 1, ..Default::default() },
+        );
+        // Same seed per policy ⇒ every row answers identical documents.
+        let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(cfg.seed));
+        let mut expected = Vec::with_capacity(cfg.questions);
+        for id in 0..cfg.questions {
+            let inst = sampler.sample(cfg.n_lines);
+            let (prompt, answer) = inst.tokens();
+            let max_new = answer.len();
+            expected.push(answer);
+            let accepted = engine.submit(Request {
+                id: id as u64,
+                session_id: None,
+                prompt,
+                max_new,
+                policy: policy.to_string(),
+                budget: cfg.budget,
+                delta: cfg.delta,
+            });
+            anyhow::ensure!(accepted, "engine rejected eval request {id}");
+        }
+        engine.run_to_completion()?;
+        let responses = engine.take_responses();
+        anyhow::ensure!(responses.len() == cfg.questions, "{policy}: lost responses");
+        let mut correct = 0usize;
+        let mut bytes = 0u64;
+        for r in &responses {
+            if r.tokens == expected[r.id as usize] {
+                correct += 1;
+            }
+            bytes += r.cache_bytes as u64;
+        }
+        rows.push(PolicyAccuracy {
+            policy: policy.to_string(),
+            correct,
+            total: cfg.questions,
+            mean_cache_bytes: bytes as f64 / cfg.questions as f64,
+        });
+    }
+    Ok(rows)
+}
+
+/// Render budget-sweep results as `BENCH_query.json`-style JSON for
+/// trend tracking (no `*_ns` keys — the perf gate only guards those).
+pub fn accuracy_json(
+    sweeps: &[(usize, Vec<PolicyAccuracy>)],
+    n_lines: usize,
+    questions: usize,
+    delta: f32,
+    train_accuracy: f64,
+) -> String {
+    let mut out = String::from("{\n  \"bench\": \"eval_retrieval\",\n");
+    out.push_str(&format!(
+        "  \"config\": {{\"n_lines\": {n_lines}, \"questions\": {questions}, \
+         \"delta\": {delta}, \"train_accuracy\": {train_accuracy:.4}}},\n"
+    ));
+    out.push_str("  \"budgets\": [\n");
+    for (i, (budget, rows)) in sweeps.iter().enumerate() {
+        let acc: Vec<String> =
+            rows.iter().map(|r| format!("\"{}\": {:.4}", r.policy, r.accuracy())).collect();
+        let bytes: Vec<String> = rows
+            .iter()
+            .map(|r| format!("\"{}\": {:.0}", r.policy, r.mean_cache_bytes))
+            .collect();
+        let comma = if i + 1 < sweeps.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"budget\": {budget}, \"accuracy\": {{{}}}, \"cache_bytes\": {{{}}}}}{comma}\n",
+            acc.join(", "),
+            bytes.join(", ")
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::POLICY_NAMES;
+    use crate::model::HostExecutor;
+
+    #[test]
+    fn evaluates_every_policy_on_identical_documents() {
+        // An untrained model scores near zero, but the harness contract
+        // holds: one row per policy, all totals equal, deterministic.
+        let exec = HostExecutor::small(3);
+        let cfg = EvalConfig { questions: 5, n_lines: 3, budget: 16, ..Default::default() };
+        let rows = evaluate_policies(&exec, &POLICY_NAMES, &cfg).unwrap();
+        assert_eq!(rows.len(), POLICY_NAMES.len());
+        for (r, &name) in rows.iter().zip(&POLICY_NAMES) {
+            assert_eq!(r.policy, name);
+            assert_eq!(r.total, 5);
+            assert!(r.correct <= 5);
+            assert!(r.mean_cache_bytes > 0.0);
+            assert!((0.0..=1.0).contains(&r.accuracy()));
+        }
+        let again = evaluate_policies(&exec, &POLICY_NAMES, &cfg).unwrap();
+        for (a, b) in rows.iter().zip(&again) {
+            assert_eq!(a.correct, b.correct);
+        }
+        // Exact retains the most; compressed rows must not exceed it.
+        let exact = &rows[0];
+        for r in &rows[1..] {
+            assert!(r.mean_cache_bytes <= exact.mean_cache_bytes + 1e-6, "{}", r.policy);
+        }
+    }
+
+    #[test]
+    fn rejects_prompts_beyond_prefill() {
+        let exec = HostExecutor::small(3); // prefill_t = 64
+        let cfg = EvalConfig { questions: 1, n_lines: 20, budget: 16, ..Default::default() };
+        assert!(evaluate_policies(&exec, &["exact"], &cfg).is_err());
+    }
+
+    #[test]
+    fn json_contains_every_policy_and_budget() {
+        let row = |policy: &str, correct: usize, bytes: f64| PolicyAccuracy {
+            policy: policy.into(),
+            correct,
+            total: 10,
+            mean_cache_bytes: bytes,
+        };
+        let rows = vec![row("exact", 9, 1024.0), row("subgen", 8, 512.0)];
+        let json = accuracy_json(&[(32, rows.clone()), (64, rows)], 8, 10, 4.0, 0.95);
+        assert!(json.contains("\"bench\": \"eval_retrieval\""));
+        assert!(json.contains("\"budget\": 32"));
+        assert!(json.contains("\"budget\": 64"));
+        assert!(json.contains("\"exact\": 0.9000"));
+        assert!(json.contains("\"subgen\": 0.8000"));
+        assert!(json.contains("\"train_accuracy\": 0.9500"));
+        assert!(!json.contains("_ns"), "accuracy JSON must not trip the perf gate");
+    }
+}

@@ -1,0 +1,41 @@
+//! Pure-rust training for the host transformer — the closing of the
+//! loop between the serving stack and the paper's empirical claim.
+//!
+//! The `HostExecutor` gave the engine a real autoregressive model, but
+//! with random weights every policy scored chance-level on retrieval:
+//! the repo could measure *fidelity to the exact cache*, never task
+//! accuracy. This module fits those same weights on the line-retrieval
+//! workload so the pure-rust stack reproduces the shape of the paper's
+//! Table 1 (per-policy accuracy at matched memory budgets) end to end,
+//! with no PJRT artifacts:
+//!
+//! * [`ParamSet`] — all weights in one flat arena with named segments,
+//!   exchanged with executors and disk via [`crate::io::Checkpoint`];
+//! * [`TrainModel`] — forward pass mirroring `HostExecutor::prefill`
+//!   op for op, plus a hand-derived backward (finite-difference
+//!   verified over every parameter);
+//! * [`Optimizer`] — SGD-with-momentum and Adam as flat elementwise
+//!   sweeps; [`clip_grad_norm`] for stability;
+//! * [`Trainer`] — mini-batches over [`crate::workload::RetrievalSampler`]
+//!   documents, cross-entropy masked to the answer tokens, greedy
+//!   held-out accuracy with early stopping;
+//! * [`evaluate_policies`] — the Table-1 harness: the trained model
+//!   decodes held-out documents through the serving engine under every
+//!   cache policy at matched budgets ([`accuracy_json`] emits the
+//!   trend-tracking JSON).
+//!
+//! Driven by `subgen train` / `subgen eval` and
+//! `examples/eval_retrieval.rs`; the end-to-end accuracy bar lives in
+//! `rust/tests/integration_train.rs`.
+
+mod eval;
+mod model;
+mod optim;
+mod params;
+mod trainer;
+
+pub use eval::{accuracy_json, evaluate_policies, EvalConfig, PolicyAccuracy};
+pub use model::{Tape, TrainModel};
+pub use optim::{clip_grad_norm, OptimKind, Optimizer};
+pub use params::ParamSet;
+pub use trainer::{greedy_accuracy, TrainConfig, TrainReport, Trainer};

@@ -1,0 +1,684 @@
+//! The trainable form of the host transformer: a full-sequence forward
+//! pass that records every activation on a [`Tape`], and a manual
+//! backward pass producing exact gradients for all parameters.
+//!
+//! The forward math mirrors [`crate::model::HostExecutor::prefill`]
+//! operation for operation — embeddings, pre-norm RMSNorm, q/k/v
+//! projections, RoPE (shared frequency table), `1/√d_head` query
+//! scaling, causal softmax attention, SiLU MLP, tied output logits — so
+//! weights trained here and exported through
+//! [`crate::io::Checkpoint`] *are* the serving model
+//! (`tests` pin trainer-forward ≡ executor-prefill). The backward pass
+//! is hand-derived per block (RMSNorm, RoPE rotation transpose,
+//! softmax-attention, SiLU, tied embeddings) and verified against
+//! central finite differences over every parameter.
+
+use super::params::ParamSet;
+use crate::io::Checkpoint;
+use crate::model::{rope_freqs, rope_inplace, silu_inplace, ModelSpec, NORM_EPS};
+use crate::tensor::{argmax, axpy, dot, matvec_into};
+use anyhow::Result;
+
+/// Activation record of one forward pass, plus reusable backward
+/// scratch. Grown to the largest sequence seen; reused across calls.
+#[derive(Default)]
+pub struct Tape {
+    t: usize,
+    tokens: Vec<i32>,
+    /// Residual stream entering each layer plus the final one,
+    /// `n_layers + 1` buffers of `[T, dm]`.
+    xs: Vec<Vec<f32>>,
+    /// Pre-attention RMSNorm outputs, per layer `[T, dm]`.
+    a_norm: Vec<Vec<f32>>,
+    /// Pre-attention RMSNorm `1/rms` per row, per layer `[T]`.
+    inv_attn: Vec<Vec<f32>>,
+    /// Post-RoPE (and, for q, post-scale) projections, per layer `[T, hd]`.
+    q: Vec<Vec<f32>>,
+    k: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+    /// Causal softmax weights, per layer `[H, T, T]` (rows past the
+    /// diagonal unused).
+    probs: Vec<Vec<f32>>,
+    /// Concatenated head outputs, per layer `[T, hd]`.
+    att: Vec<Vec<f32>>,
+    /// Residual after the attention block, per layer `[T, dm]`.
+    x_mid: Vec<Vec<f32>>,
+    /// Pre-MLP RMSNorm outputs / inverse rms, per layer.
+    b_norm: Vec<Vec<f32>>,
+    inv_mlp: Vec<Vec<f32>>,
+    /// MLP hidden pre-/post-SiLU, per layer `[T, d_ff]`.
+    ff_pre: Vec<Vec<f32>>,
+    ff_act: Vec<Vec<f32>>,
+    /// Final RMSNorm outputs `[T, dm]` and inverse rms `[T]`.
+    hfin: Vec<f32>,
+    inv_fin: Vec<f32>,
+    /// Output logits `[T, vocab]`.
+    logits: Vec<f32>,
+    // ── backward scratch (sized with the forward buffers) ──
+    dxs: Vec<f32>,
+    dmid: Vec<f32>,
+    datt: Vec<f32>,
+    dq: Vec<f32>,
+    dk: Vec<f32>,
+    dv: Vec<f32>,
+    vec_dm: Vec<f32>,
+    vec_dm2: Vec<f32>,
+    vec_ff: Vec<f32>,
+    vec_ff2: Vec<f32>,
+    vec_vocab: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+impl Tape {
+    /// Fresh empty tape.
+    pub fn new() -> Tape {
+        Tape::default()
+    }
+
+    /// Sequence length of the recorded pass.
+    pub fn len(&self) -> usize {
+        self.t
+    }
+
+    /// True before any forward pass.
+    pub fn is_empty(&self) -> bool {
+        self.t == 0
+    }
+
+    /// All logits of the recorded pass, `[T, vocab]` row-major.
+    pub fn logits(&self) -> &[f32] {
+        &self.logits
+    }
+
+    /// Logits at one position.
+    pub fn logits_at(&self, pos: usize, vocab: usize) -> &[f32] {
+        &self.logits[pos * vocab..(pos + 1) * vocab]
+    }
+
+    fn ensure(&mut self, spec: &ModelSpec, t: usize) {
+        let (l, dm, v) = (spec.n_layers, spec.d_model, spec.vocab);
+        let (h, hd, d_ff) = (spec.n_heads, spec.n_heads * spec.d_head, spec.d_ff());
+        let grow = |bufs: &mut Vec<Vec<f32>>, n: usize, len: usize| {
+            bufs.resize_with(n, Vec::new);
+            for b in bufs.iter_mut() {
+                b.resize(len, 0.0);
+            }
+        };
+        grow(&mut self.xs, l + 1, t * dm);
+        grow(&mut self.a_norm, l, t * dm);
+        grow(&mut self.inv_attn, l, t);
+        grow(&mut self.q, l, t * hd);
+        grow(&mut self.k, l, t * hd);
+        grow(&mut self.v, l, t * hd);
+        grow(&mut self.probs, l, h * t * t);
+        grow(&mut self.att, l, t * hd);
+        grow(&mut self.x_mid, l, t * dm);
+        grow(&mut self.b_norm, l, t * dm);
+        grow(&mut self.inv_mlp, l, t);
+        grow(&mut self.ff_pre, l, t * d_ff);
+        grow(&mut self.ff_act, l, t * d_ff);
+        self.hfin.resize(t * dm, 0.0);
+        self.inv_fin.resize(t, 0.0);
+        self.logits.resize(t * v, 0.0);
+        self.dxs.resize(t * dm, 0.0);
+        self.dmid.resize(t * dm, 0.0);
+        self.datt.resize(t * hd, 0.0);
+        self.dq.resize(t * hd, 0.0);
+        self.dk.resize(t * hd, 0.0);
+        self.dv.resize(t * hd, 0.0);
+        self.vec_dm.resize(dm, 0.0);
+        self.vec_dm2.resize(dm, 0.0);
+        self.vec_ff.resize(d_ff, 0.0);
+        self.vec_ff2.resize(d_ff, 0.0);
+        self.vec_vocab.resize(v, 0.0);
+        self.scores.resize(t, 0.0);
+        self.t = t;
+    }
+}
+
+/// `out = x · g / rms`, returning `1/rms` for the backward pass.
+fn rmsnorm_fwd(x: &[f32], g: &[f32], out: &mut [f32]) -> f32 {
+    let inv = 1.0 / (dot(x, x) / x.len() as f32 + NORM_EPS).sqrt();
+    for ((o, &xi), &gi) in out.iter_mut().zip(x).zip(g) {
+        *o = xi * inv * gi;
+    }
+    inv
+}
+
+/// RMSNorm backward: given `dy` for `y = x·g·inv`, overwrite `dx` and
+/// accumulate `dg`. `c = Σ dy·g·x` folds the `1/rms` dependence on `x`.
+fn rmsnorm_bwd(x: &[f32], g: &[f32], inv: f32, dy: &[f32], dx: &mut [f32], dg: &mut [f32]) {
+    let n = x.len() as f32;
+    let mut c = 0.0f32;
+    for ((&dyi, &gi), &xi) in dy.iter().zip(g).zip(x) {
+        c += dyi * gi * xi;
+    }
+    let k = c * inv * inv * inv / n;
+    for (j, dxj) in dx.iter_mut().enumerate() {
+        *dxj = inv * dy[j] * g[j] - x[j] * k;
+        dg[j] += dy[j] * x[j] * inv;
+    }
+}
+
+/// Transpose (inverse) of the RoPE rotation at `pos`, in place — the
+/// backward of [`rope_inplace`].
+fn rope_bwd(x: &mut [f32], n_heads: usize, freqs: &[f32], pos: usize) {
+    let dh = 2 * freqs.len();
+    for h in 0..n_heads {
+        let head = &mut x[h * dh..(h + 1) * dh];
+        for (i, &f) in freqs.iter().enumerate() {
+            let (sin, cos) = (pos as f32 * f).sin_cos();
+            let a = head[2 * i];
+            let b = head[2 * i + 1];
+            head[2 * i] = a * cos + b * sin;
+            head[2 * i + 1] = -a * sin + b * cos;
+        }
+    }
+}
+
+/// `dx = Wᵀ dy` for row-major `W [rows(dy), cols]` (overwrites `dx`).
+fn matvec_t_into(w: &[f32], cols: usize, dy: &[f32], dx: &mut [f32]) {
+    dx.fill(0.0);
+    matvec_t_accum(w, cols, dy, dx);
+}
+
+/// `dx += Wᵀ dy`.
+fn matvec_t_accum(w: &[f32], cols: usize, dy: &[f32], dx: &mut [f32]) {
+    for (i, &g) in dy.iter().enumerate() {
+        if g != 0.0 {
+            axpy(g, &w[i * cols..(i + 1) * cols], dx);
+        }
+    }
+}
+
+/// `dW += dy ⊗ x` for row-major `dW [rows(dy), cols(x)]`.
+fn accum_outer(dw: &mut [f32], dy: &[f32], x: &[f32]) {
+    let cols = x.len();
+    for (i, &g) in dy.iter().enumerate() {
+        if g != 0.0 {
+            axpy(g, x, &mut dw[i * cols..(i + 1) * cols]);
+        }
+    }
+}
+
+/// The trainable host transformer.
+pub struct TrainModel {
+    params: ParamSet,
+    rope: Vec<f32>,
+}
+
+impl TrainModel {
+    /// Fresh training init (see [`ParamSet::init`]).
+    pub fn init(spec: ModelSpec, seed: u64) -> Result<TrainModel> {
+        Ok(Self::from_params(ParamSet::init(spec, seed)?))
+    }
+
+    /// Wrap an existing parameter set.
+    pub fn from_params(params: ParamSet) -> TrainModel {
+        let rope = rope_freqs(params.spec().d_head);
+        TrainModel { params, rope }
+    }
+
+    /// Rebuild from a checkpoint (trainer- or executor-written).
+    pub fn from_checkpoint(ck: &Checkpoint) -> Result<TrainModel> {
+        Ok(Self::from_params(ParamSet::from_checkpoint(ck)?))
+    }
+
+    /// Export weights + spec metadata.
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        self.params.to_checkpoint()
+    }
+
+    /// Model shapes.
+    pub fn spec(&self) -> &ModelSpec {
+        self.params.spec()
+    }
+
+    /// The parameter arena.
+    pub fn params(&self) -> &ParamSet {
+        &self.params
+    }
+
+    /// The parameter arena, mutable (optimizer updates).
+    pub fn params_mut(&mut self) -> &mut ParamSet {
+        &mut self.params
+    }
+
+    /// Full-sequence causal forward pass, recording activations on
+    /// `tape` (logits at every position land in [`Tape::logits`]).
+    pub fn forward(&self, tokens: &[i32], tape: &mut Tape) -> Result<()> {
+        let spec = self.params.spec().clone();
+        let (t, dm, vocab) = (tokens.len(), spec.d_model, spec.vocab);
+        let (h, dh, d_ff) = (spec.n_heads, spec.d_head, spec.d_ff());
+        let hd = h * dh;
+        anyhow::ensure!(t >= 1, "empty sequence");
+        let q_scale = 1.0 / (dh as f32).sqrt();
+        tape.ensure(&spec, t);
+        tape.tokens.clear();
+        tape.tokens.extend_from_slice(tokens);
+        let p = self.params.data();
+        let embed = self.params.embed.of(p);
+
+        for (pos, &tok) in tokens.iter().enumerate() {
+            anyhow::ensure!((0..vocab as i32).contains(&tok), "token {tok} outside vocab {vocab}");
+            let row = tok as usize * dm;
+            tape.xs[0][pos * dm..(pos + 1) * dm].copy_from_slice(&embed[row..row + dm]);
+        }
+
+        for (l, seg) in self.params.layers.iter().enumerate() {
+            let (g_attn, g_mlp) = (seg.g_attn.of(p), seg.g_mlp.of(p));
+            let (wq, wk, wv, wo) = (seg.wq.of(p), seg.wk.of(p), seg.wv.of(p), seg.wo.of(p));
+            let (w1, w2) = (seg.w1.of(p), seg.w2.of(p));
+            // Split disjoint tape buffers for simultaneous borrows.
+            let (xs_in, xs_rest) = tape.xs.split_at_mut(l + 1);
+            let x = &xs_in[l];
+            let x_next = &mut xs_rest[0];
+            for pos in 0..t {
+                let a = &mut tape.a_norm[l][pos * dm..(pos + 1) * dm];
+                tape.inv_attn[l][pos] = rmsnorm_fwd(&x[pos * dm..(pos + 1) * dm], g_attn, a);
+                let qp = &mut tape.q[l][pos * hd..(pos + 1) * hd];
+                matvec_into(wq, dm, a, qp);
+                rope_inplace(qp, h, &self.rope, pos);
+                for qi in qp.iter_mut() {
+                    *qi *= q_scale;
+                }
+                let kp = &mut tape.k[l][pos * hd..(pos + 1) * hd];
+                matvec_into(wk, dm, a, kp);
+                rope_inplace(kp, h, &self.rope, pos);
+                matvec_into(wv, dm, a, &mut tape.v[l][pos * hd..(pos + 1) * hd]);
+            }
+            // Causal softmax attention per (head, position).
+            for hi in 0..h {
+                for pos in 0..t {
+                    let qrow = &tape.q[l][pos * hd + hi * dh..pos * hd + (hi + 1) * dh];
+                    let mut m = f32::NEG_INFINITY;
+                    for tt in 0..=pos {
+                        let krow = &tape.k[l][tt * hd + hi * dh..tt * hd + (hi + 1) * dh];
+                        tape.scores[tt] = dot(qrow, krow);
+                        m = m.max(tape.scores[tt]);
+                    }
+                    let mut z = 0.0f64;
+                    for tt in 0..=pos {
+                        tape.scores[tt] = (tape.scores[tt] - m).exp();
+                        z += tape.scores[tt] as f64;
+                    }
+                    let invz = (1.0 / z) as f32;
+                    let prow = &mut tape.probs[l][(hi * t + pos) * t..(hi * t + pos) * t + t];
+                    let mut acc = [0.0f64; 64];
+                    debug_assert!(dh <= 64, "head width above scratch bound");
+                    for tt in 0..=pos {
+                        let w = tape.scores[tt] * invz;
+                        prow[tt] = w;
+                        let vrow = &tape.v[l][tt * hd + hi * dh..tt * hd + (hi + 1) * dh];
+                        for (aj, &vj) in acc[..dh].iter_mut().zip(vrow) {
+                            *aj += w as f64 * vj as f64;
+                        }
+                    }
+                    let orow = &mut tape.att[l][pos * hd + hi * dh..pos * hd + (hi + 1) * dh];
+                    for (oj, &aj) in orow.iter_mut().zip(&acc[..dh]) {
+                        *oj = aj as f32;
+                    }
+                }
+            }
+            // Output projection + residual, then the MLP block.
+            for pos in 0..t {
+                let tmp = &mut tape.vec_dm;
+                matvec_into(wo, hd, &tape.att[l][pos * hd..(pos + 1) * hd], tmp);
+                let xm = &mut tape.x_mid[l][pos * dm..(pos + 1) * dm];
+                for (j, xj) in xm.iter_mut().enumerate() {
+                    *xj = x[pos * dm + j] + tmp[j];
+                }
+                let b = &mut tape.b_norm[l][pos * dm..(pos + 1) * dm];
+                tape.inv_mlp[l][pos] = rmsnorm_fwd(xm, g_mlp, b);
+                let pre = &mut tape.ff_pre[l][pos * d_ff..(pos + 1) * d_ff];
+                matvec_into(w1, dm, b, pre);
+                let act = &mut tape.ff_act[l][pos * d_ff..(pos + 1) * d_ff];
+                act.copy_from_slice(pre);
+                silu_inplace(act);
+                matvec_into(w2, d_ff, act, tmp);
+                let xn = &mut x_next[pos * dm..(pos + 1) * dm];
+                for (j, xj) in xn.iter_mut().enumerate() {
+                    *xj = tape.x_mid[l][pos * dm + j] + tmp[j];
+                }
+            }
+        }
+
+        // Final norm + tied logits.
+        let g_final = self.params.g_final.of(p);
+        let x_last = &tape.xs[spec.n_layers];
+        for pos in 0..t {
+            let hf = &mut tape.hfin[pos * dm..(pos + 1) * dm];
+            tape.inv_fin[pos] = rmsnorm_fwd(&x_last[pos * dm..(pos + 1) * dm], g_final, hf);
+            matvec_into(embed, dm, hf, &mut tape.logits[pos * vocab..(pos + 1) * vocab]);
+        }
+        Ok(())
+    }
+
+    /// Backward pass for summed cross-entropy at `targets`
+    /// (`(position, target token)` pairs): accumulates parameter
+    /// gradients into `grads` (same layout as the arena, **not**
+    /// zeroed here) and returns the summed loss. Callers average by
+    /// scaling `grads` afterwards.
+    pub fn backward(
+        &self,
+        tape: &mut Tape,
+        targets: &[(usize, i32)],
+        grads: &mut [f32],
+    ) -> Result<f64> {
+        let spec = self.params.spec().clone();
+        let (t, dm, vocab) = (tape.t, spec.d_model, spec.vocab);
+        let (h, dh, d_ff) = (spec.n_heads, spec.d_head, spec.d_ff());
+        let hd = h * dh;
+        anyhow::ensure!(t >= 1, "backward before forward");
+        anyhow::ensure!(grads.len() == self.params.len(), "gradient buffer length mismatch");
+        let q_scale = 1.0 / (dh as f32).sqrt();
+        let p = self.params.data();
+        let embed = self.params.embed.of(p);
+        let g_final = self.params.g_final.of(p);
+
+        // ── Head: CE → logits → tied embed → final norm ──
+        tape.dxs.fill(0.0);
+        let mut loss = 0.0f64;
+        for &(pos, target) in targets {
+            anyhow::ensure!(pos < t, "target position {pos} ≥ sequence length {t}");
+            anyhow::ensure!((0..vocab as i32).contains(&target), "target {target} outside vocab");
+            let logits = &tape.logits[pos * vocab..(pos + 1) * vocab];
+            let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f64;
+            for &x in logits {
+                z += ((x - m) as f64).exp();
+            }
+            loss += z.ln() - (logits[target as usize] - m) as f64;
+            let dlog = &mut tape.vec_vocab;
+            for (i, dl) in dlog.iter_mut().enumerate() {
+                *dl = (((logits[i] - m) as f64).exp() / z) as f32;
+            }
+            dlog[target as usize] -= 1.0;
+            let hf = &tape.hfin[pos * dm..(pos + 1) * dm];
+            // d hfin = Eᵀ dlogits; dE += dlogits ⊗ hfin.
+            matvec_t_into(embed, dm, dlog, &mut tape.vec_dm);
+            accum_outer(self.params.embed.of_mut(grads), dlog, hf);
+            let x_last = &tape.xs[spec.n_layers][pos * dm..(pos + 1) * dm];
+            rmsnorm_bwd(
+                x_last,
+                g_final,
+                tape.inv_fin[pos],
+                &tape.vec_dm,
+                &mut tape.vec_dm2,
+                self.params.g_final.of_mut(grads),
+            );
+            for (j, &d) in tape.vec_dm2.iter().enumerate() {
+                tape.dxs[pos * dm + j] += d;
+            }
+        }
+
+        // ── Layers in reverse ──
+        for l in (0..spec.n_layers).rev() {
+            let seg = self.params.layers[l];
+            let (g_attn, g_mlp) = (seg.g_attn.of(p), seg.g_mlp.of(p));
+            let (wq, wk, wv, wo) = (seg.wq.of(p), seg.wk.of(p), seg.wv.of(p), seg.wo.of(p));
+            let (w1, w2) = (seg.w1.of(p), seg.w2.of(p));
+            // MLP block backward (dxs currently holds d xs[l+1]).
+            for pos in 0..t {
+                let dx3 = &tape.dxs[pos * dm..(pos + 1) * dm];
+                let act = &tape.ff_act[l][pos * d_ff..(pos + 1) * d_ff];
+                matvec_t_into(w2, d_ff, dx3, &mut tape.vec_ff);
+                accum_outer(seg.w2.of_mut(grads), dx3, act);
+                let pre = &tape.ff_pre[l][pos * d_ff..(pos + 1) * d_ff];
+                for (j, dfp) in tape.vec_ff2.iter_mut().enumerate() {
+                    let s = 1.0 / (1.0 + (-pre[j]).exp());
+                    *dfp = tape.vec_ff[j] * s * (1.0 + pre[j] * (1.0 - s));
+                }
+                let b = &tape.b_norm[l][pos * dm..(pos + 1) * dm];
+                accum_outer(seg.w1.of_mut(grads), &tape.vec_ff2, b);
+                matvec_t_into(w1, dm, &tape.vec_ff2, &mut tape.vec_dm);
+                let xm = &tape.x_mid[l][pos * dm..(pos + 1) * dm];
+                rmsnorm_bwd(
+                    xm,
+                    g_mlp,
+                    tape.inv_mlp[l][pos],
+                    &tape.vec_dm,
+                    &mut tape.vec_dm2,
+                    seg.g_mlp.of_mut(grads),
+                );
+                let dmid = &mut tape.dmid[pos * dm..(pos + 1) * dm];
+                for (j, dj) in dmid.iter_mut().enumerate() {
+                    *dj = dx3[j] + tape.vec_dm2[j];
+                }
+            }
+            // Attention output projection backward.
+            for pos in 0..t {
+                let dmid = &tape.dmid[pos * dm..(pos + 1) * dm];
+                matvec_t_into(wo, hd, dmid, &mut tape.datt[pos * hd..(pos + 1) * hd]);
+                accum_outer(seg.wo.of_mut(grads), dmid, &tape.att[l][pos * hd..(pos + 1) * hd]);
+            }
+            // Softmax attention backward per (head, position).
+            tape.dq.fill(0.0);
+            tape.dk.fill(0.0);
+            tape.dv.fill(0.0);
+            for hi in 0..h {
+                let at = hi * dh;
+                for pos in 0..t {
+                    let dout = {
+                        let s = &tape.datt[pos * hd + at..pos * hd + at + dh];
+                        let mut buf = [0.0f32; 64];
+                        buf[..dh].copy_from_slice(s);
+                        buf
+                    };
+                    let dout = &dout[..dh];
+                    let prow = &tape.probs[l][(hi * t + pos) * t..(hi * t + pos) * t + t];
+                    let mut sum = 0.0f32;
+                    for tt in 0..=pos {
+                        let vrow = &tape.v[l][tt * hd + at..tt * hd + at + dh];
+                        tape.scores[tt] = dot(dout, vrow);
+                        sum += prow[tt] * tape.scores[tt];
+                    }
+                    let qrow = {
+                        let s = &tape.q[l][pos * hd + at..pos * hd + at + dh];
+                        let mut buf = [0.0f32; 64];
+                        buf[..dh].copy_from_slice(s);
+                        buf
+                    };
+                    for tt in 0..=pos {
+                        let ds = prow[tt] * (tape.scores[tt] - sum);
+                        let krow = &tape.k[l][tt * hd + at..tt * hd + at + dh];
+                        axpy(ds, krow, &mut tape.dq[pos * hd + at..pos * hd + at + dh]);
+                        axpy(ds, &qrow[..dh], &mut tape.dk[tt * hd + at..tt * hd + at + dh]);
+                        axpy(prow[tt], dout, &mut tape.dv[tt * hd + at..tt * hd + at + dh]);
+                    }
+                }
+            }
+            // Undo query scale + RoPE, then project back to the norm.
+            for pos in 0..t {
+                let dqp = &mut tape.dq[pos * hd..(pos + 1) * hd];
+                for d in dqp.iter_mut() {
+                    *d *= q_scale;
+                }
+                rope_bwd(dqp, h, &self.rope, pos);
+                rope_bwd(&mut tape.dk[pos * hd..(pos + 1) * hd], h, &self.rope, pos);
+            }
+            let x = &tape.xs[l];
+            for pos in 0..t {
+                let a = &tape.a_norm[l][pos * dm..(pos + 1) * dm];
+                let dqp = &tape.dq[pos * hd..(pos + 1) * hd];
+                let dkp = &tape.dk[pos * hd..(pos + 1) * hd];
+                let dvp = &tape.dv[pos * hd..(pos + 1) * hd];
+                accum_outer(seg.wq.of_mut(grads), dqp, a);
+                accum_outer(seg.wk.of_mut(grads), dkp, a);
+                accum_outer(seg.wv.of_mut(grads), dvp, a);
+                matvec_t_into(wq, dm, dqp, &mut tape.vec_dm);
+                matvec_t_accum(wk, dm, dkp, &mut tape.vec_dm);
+                matvec_t_accum(wv, dm, dvp, &mut tape.vec_dm);
+                rmsnorm_bwd(
+                    &x[pos * dm..(pos + 1) * dm],
+                    g_attn,
+                    tape.inv_attn[l][pos],
+                    &tape.vec_dm,
+                    &mut tape.vec_dm2,
+                    seg.g_attn.of_mut(grads),
+                );
+                let dxp = &mut tape.dxs[pos * dm..(pos + 1) * dm];
+                for (j, dj) in dxp.iter_mut().enumerate() {
+                    *dj = tape.dmid[pos * dm + j] + tape.vec_dm2[j];
+                }
+            }
+        }
+
+        // ── Embedding lookup backward (tied with the output head) ──
+        let de = self.params.embed.of_mut(grads);
+        for pos in 0..t {
+            let row = tape.tokens[pos] as usize * dm;
+            axpy(1.0, &tape.dxs[pos * dm..(pos + 1) * dm], &mut de[row..row + dm]);
+        }
+        Ok(loss)
+    }
+
+    /// Greedy autoregressive answer: feed `prompt`, then argmax-extend
+    /// for `n_answer` tokens (teacher-free — the trainer's own
+    /// exact-cache accuracy metric).
+    pub fn greedy_answer(
+        &self,
+        prompt: &[i32],
+        n_answer: usize,
+        tape: &mut Tape,
+    ) -> Result<Vec<i32>> {
+        let vocab = self.spec().vocab;
+        let mut seq = prompt.to_vec();
+        let mut out = Vec::with_capacity(n_answer);
+        for _ in 0..n_answer {
+            self.forward(&seq, tape)?;
+            let next = argmax(tape.logits_at(seq.len() - 1, vocab)) as i32;
+            out.push(next);
+            seq.push(next);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::rel_err_vec;
+    use crate::model::HostExecutor;
+
+    fn tiny_spec() -> ModelSpec {
+        ModelSpec {
+            vocab: 16,
+            d_model: 8,
+            n_heads: 1,
+            n_layers: 2,
+            d_head: 4,
+            prefill_t: 16,
+            cache_variants: vec![16],
+            decode_batch: 0,
+            train_accuracy: -1.0,
+        }
+    }
+
+    fn loss_of(model: &TrainModel, tokens: &[i32], targets: &[(usize, i32)]) -> f64 {
+        let mut tape = Tape::new();
+        model.forward(tokens, &mut tape).unwrap();
+        let vocab = model.spec().vocab;
+        let mut loss = 0.0f64;
+        for &(pos, target) in targets {
+            let logits = tape.logits_at(pos, vocab);
+            let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0f64;
+            for &x in logits {
+                z += ((x - m) as f64).exp();
+            }
+            loss += z.ln() - (logits[target as usize] - m) as f64;
+        }
+        loss
+    }
+
+    #[test]
+    fn forward_matches_host_executor_prefill() {
+        // The trainer's forward and the serving prefill are the same
+        // function of the same checkpoint.
+        let host = HostExecutor::small(31);
+        let model = TrainModel::from_checkpoint(&host.to_checkpoint()).unwrap();
+        let tokens = [1, 7, 3, 0, 12, 5, 9];
+        let pre = host.prefill(&tokens).unwrap();
+        let mut tape = Tape::new();
+        model.forward(&tokens, &mut tape).unwrap();
+        let v = host.spec().vocab;
+        for pos in 0..tokens.len() {
+            let want = &pre.logits[pos * v..(pos + 1) * v];
+            let err = rel_err_vec(tape.logits_at(pos, v), want);
+            assert!(err < 1e-4, "pos {pos}: err={err}");
+        }
+    }
+
+    #[test]
+    fn backward_matches_finite_differences_on_every_parameter() {
+        // Central differences over the full parameter arena — the one
+        // test that certifies the hand-derived backward (RMSNorm, RoPE
+        // transpose, softmax attention, SiLU, tied embeddings).
+        let mut model = TrainModel::init(tiny_spec(), 3).unwrap();
+        let tokens = [1, 3, 5, 2, 7, 4];
+        let targets = [(2usize, 5i32), (4, 9), (5, 1)];
+        let mut tape = Tape::new();
+        model.forward(&tokens, &mut tape).unwrap();
+        let mut grads = vec![0.0f32; model.params().len()];
+        let loss = model.backward(&mut tape, &targets, &mut grads).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+
+        let eps = 3e-3f32;
+        for i in 0..model.params().len() {
+            let orig = model.params().data()[i];
+            model.params_mut().data_mut()[i] = orig + eps;
+            let up = loss_of(&model, &tokens, &targets);
+            model.params_mut().data_mut()[i] = orig - eps;
+            let down = loss_of(&model, &tokens, &targets);
+            model.params_mut().data_mut()[i] = orig;
+            let numeric = ((up - down) / (2.0 * eps as f64)) as f32;
+            let analytic = grads[i];
+            let tol = 1e-2 + 0.06 * analytic.abs().max(numeric.abs());
+            assert!(
+                (analytic - numeric).abs() <= tol,
+                "param {i}: analytic={analytic} numeric={numeric}"
+            );
+        }
+    }
+
+    #[test]
+    fn backward_is_zero_without_targets() {
+        let model = TrainModel::init(tiny_spec(), 1).unwrap();
+        let mut tape = Tape::new();
+        model.forward(&[1, 2, 3], &mut tape).unwrap();
+        let mut grads = vec![0.0f32; model.params().len()];
+        let loss = model.backward(&mut tape, &[], &mut grads).unwrap();
+        assert_eq!(loss, 0.0);
+        assert!(grads.iter().all(|&g| g == 0.0));
+    }
+
+    #[test]
+    fn backward_rejects_bad_targets() {
+        let model = TrainModel::init(tiny_spec(), 1).unwrap();
+        let mut tape = Tape::new();
+        model.forward(&[1, 2, 3], &mut tape).unwrap();
+        let mut grads = vec![0.0f32; model.params().len()];
+        assert!(model.backward(&mut tape, &[(9, 1)], &mut grads).is_err());
+        assert!(model.backward(&mut tape, &[(1, 99)], &mut grads).is_err());
+    }
+
+    #[test]
+    fn greedy_answer_is_deterministic() {
+        let model = TrainModel::init(tiny_spec(), 5).unwrap();
+        let mut tape = Tape::new();
+        let a = model.greedy_answer(&[1, 2, 3], 2, &mut tape).unwrap();
+        let b = model.greedy_answer(&[1, 2, 3], 2, &mut tape).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 2);
+        assert!(a.iter().all(|&t| (0..16).contains(&t)));
+    }
+
+    #[test]
+    fn forward_rejects_out_of_vocab() {
+        let model = TrainModel::init(tiny_spec(), 1).unwrap();
+        let mut tape = Tape::new();
+        assert!(model.forward(&[99], &mut tape).is_err());
+        assert!(model.forward(&[], &mut tape).is_err());
+    }
+}

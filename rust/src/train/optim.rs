@@ -1,0 +1,189 @@
+//! First-order optimizers over the flat parameter arena.
+//!
+//! Both update rules are elementwise sweeps over `(params, grads,
+//! state)` — the payoff of keeping every weight in one contiguous
+//! buffer ([`crate::train::ParamSet`]). State buffers are lazily sized
+//! on the first step.
+
+/// Which update rule an [`Optimizer`] applies.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptimKind {
+    /// SGD with (optional) momentum.
+    Sgd,
+    /// Adam with bias correction.
+    Adam,
+}
+
+impl std::str::FromStr for OptimKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "sgd" => Ok(OptimKind::Sgd),
+            "adam" => Ok(OptimKind::Adam),
+            other => anyhow::bail!("unknown optimizer {other:?} (sgd|adam)"),
+        }
+    }
+}
+
+/// SGD-with-momentum / Adam over flat buffers.
+pub struct Optimizer {
+    kind: OptimKind,
+    /// Learning rate; mutable so schedules (warmup) can drive it.
+    pub lr: f32,
+    /// SGD momentum coefficient (ignored by Adam).
+    pub momentum: f32,
+    /// Adam β₁ / β₂ / ε.
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    /// First-moment / momentum buffer.
+    m: Vec<f32>,
+    /// Second-moment buffer (Adam only).
+    v: Vec<f32>,
+    /// Steps taken (Adam bias correction).
+    t: u32,
+}
+
+impl Optimizer {
+    /// SGD with momentum (`momentum = 0` is plain SGD).
+    pub fn sgd(lr: f32, momentum: f32) -> Optimizer {
+        Optimizer {
+            kind: OptimKind::Sgd,
+            lr,
+            momentum,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: Vec::new(),
+            v: Vec::new(),
+            t: 0,
+        }
+    }
+
+    /// Adam with the standard (0.9, 0.999, 1e-8) moments.
+    pub fn adam(lr: f32) -> Optimizer {
+        Optimizer { kind: OptimKind::Adam, ..Optimizer::sgd(lr, 0.0) }
+    }
+
+    /// Build by kind (CLI plumbing).
+    pub fn new(kind: OptimKind, lr: f32, momentum: f32) -> Optimizer {
+        match kind {
+            OptimKind::Sgd => Optimizer::sgd(lr, momentum),
+            OptimKind::Adam => Optimizer::adam(lr),
+        }
+    }
+
+    /// The update rule in use.
+    pub fn kind(&self) -> OptimKind {
+        self.kind
+    }
+
+    /// Apply one update: `params -= lr · direction(grads)`.
+    pub fn step(&mut self, params: &mut [f32], grads: &[f32]) {
+        assert_eq!(params.len(), grads.len(), "param/grad length mismatch");
+        if self.m.len() != params.len() {
+            self.m = vec![0.0; params.len()];
+            if self.kind == OptimKind::Adam {
+                self.v = vec![0.0; params.len()];
+            }
+        }
+        match self.kind {
+            OptimKind::Sgd => {
+                for ((p, &g), m) in params.iter_mut().zip(grads).zip(&mut self.m) {
+                    *m = self.momentum * *m + g;
+                    *p -= self.lr * *m;
+                }
+            }
+            OptimKind::Adam => {
+                self.t += 1;
+                let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+                let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+                for (((p, &g), m), v) in
+                    params.iter_mut().zip(grads).zip(&mut self.m).zip(&mut self.v)
+                {
+                    *m = self.beta1 * *m + (1.0 - self.beta1) * g;
+                    *v = self.beta2 * *v + (1.0 - self.beta2) * g * g;
+                    let mhat = *m / bc1;
+                    let vhat = *v / bc2;
+                    *p -= self.lr * mhat / (vhat.sqrt() + self.eps);
+                }
+            }
+        }
+    }
+}
+
+/// Scale `grads` down so their global L2 norm is at most `max_norm`
+/// (no-op when `max_norm <= 0`). Returns the pre-clip norm.
+pub fn clip_grad_norm(grads: &mut [f32], max_norm: f32) -> f64 {
+    let norm = grads.iter().map(|&g| g as f64 * g as f64).sum::<f64>().sqrt();
+    if max_norm > 0.0 && norm > max_norm as f64 {
+        let scale = (max_norm as f64 / norm) as f32;
+        for g in grads.iter_mut() {
+            *g *= scale;
+        }
+    }
+    norm
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Minimize ‖p − c‖² from zero; both rules must converge to c.
+    fn converges(mut opt: Optimizer, steps: usize, tol: f32) {
+        let c = [1.0f32, -2.0, 0.5, 3.0];
+        let mut p = [0.0f32; 4];
+        for _ in 0..steps {
+            let g: Vec<f32> = p.iter().zip(&c).map(|(&pi, &ci)| 2.0 * (pi - ci)).collect();
+            opt.step(&mut p, &g);
+        }
+        for (pi, ci) in p.iter().zip(&c) {
+            assert!((pi - ci).abs() < tol, "{p:?} vs {c:?}");
+        }
+    }
+
+    #[test]
+    fn sgd_converges_on_quadratic() {
+        converges(Optimizer::sgd(0.1, 0.0), 200, 1e-3);
+        converges(Optimizer::sgd(0.05, 0.9), 300, 1e-2);
+    }
+
+    #[test]
+    fn adam_converges_on_quadratic() {
+        converges(Optimizer::adam(0.1), 800, 1e-2);
+    }
+
+    #[test]
+    fn adam_first_step_is_lr_sized() {
+        // Bias correction makes the first Adam update ≈ lr·sign(g).
+        let mut opt = Optimizer::adam(0.01);
+        let mut p = [0.0f32; 2];
+        opt.step(&mut p, &[3.0, -0.5]);
+        assert!((p[0] + 0.01).abs() < 1e-4, "{p:?}");
+        assert!((p[1] - 0.01).abs() < 1e-4, "{p:?}");
+    }
+
+    #[test]
+    fn clip_bounds_global_norm() {
+        let mut g = [3.0f32, 4.0];
+        let norm = clip_grad_norm(&mut g, 1.0);
+        assert!((norm - 5.0).abs() < 1e-6);
+        let after = (g[0] * g[0] + g[1] * g[1]).sqrt();
+        assert!((after - 1.0).abs() < 1e-5);
+        // No-op when under the bound or disabled.
+        let mut h = [0.3f32, 0.4];
+        clip_grad_norm(&mut h, 1.0);
+        assert_eq!(h, [0.3, 0.4]);
+        let mut k = [3.0f32, 4.0];
+        clip_grad_norm(&mut k, 0.0);
+        assert_eq!(k, [3.0, 4.0]);
+    }
+
+    #[test]
+    fn kind_parses_from_str() {
+        assert_eq!("sgd".parse::<OptimKind>().unwrap(), OptimKind::Sgd);
+        assert_eq!("adam".parse::<OptimKind>().unwrap(), OptimKind::Adam);
+        assert!("bogus".parse::<OptimKind>().is_err());
+    }
+}

@@ -1,0 +1,263 @@
+//! Flat parameter arena for the trainable host transformer.
+//!
+//! All weights live in **one** contiguous `Vec<f32>` with named
+//! segments, mirroring the [`crate::model::HostExecutor`] layout
+//! (embeddings, per-layer attention + MLP weights, final norm gain).
+//! The flat layout is what makes the optimizer trivial — SGD/Adam are
+//! elementwise sweeps over three same-length buffers — and checkpoint
+//! export is a walk over the named segments, so the trainer, disk, and
+//! the serving executor all exchange the same
+//! [`crate::io::Checkpoint`] tensors.
+
+use crate::io::Checkpoint;
+use crate::model::ModelSpec;
+use crate::rng::{fill_gaussian, Pcg64};
+use anyhow::Result;
+
+/// Embedding init std (tied output head: small init keeps the initial
+/// logits near-uniform under RMSNorm, which trains stably).
+const EMBED_STD: f32 = 0.1;
+
+/// One named segment of the arena.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct Seg {
+    /// Offset into the arena.
+    pub at: usize,
+    /// Element count.
+    pub len: usize,
+}
+
+impl Seg {
+    /// Borrow this segment of `data`.
+    #[inline]
+    pub fn of<'a>(&self, data: &'a [f32]) -> &'a [f32] {
+        &data[self.at..self.at + self.len]
+    }
+
+    /// Mutably borrow this segment of `data`.
+    #[inline]
+    pub fn of_mut<'a>(&self, data: &'a mut [f32]) -> &'a mut [f32] {
+        &mut data[self.at..self.at + self.len]
+    }
+}
+
+/// Per-layer segments, in arena order.
+#[derive(Clone, Copy, Debug)]
+pub(crate) struct LayerSegs {
+    pub g_attn: Seg,
+    pub wq: Seg,
+    pub wk: Seg,
+    pub wv: Seg,
+    pub wo: Seg,
+    pub g_mlp: Seg,
+    pub w1: Seg,
+    pub w2: Seg,
+}
+
+/// All parameters of one model, flat.
+pub struct ParamSet {
+    spec: ModelSpec,
+    data: Vec<f32>,
+    pub(crate) embed: Seg,
+    pub(crate) g_final: Seg,
+    pub(crate) layers: Vec<LayerSegs>,
+}
+
+impl ParamSet {
+    /// Zero-initialized arena with the layout for `spec`.
+    pub fn zeros(spec: ModelSpec) -> Result<ParamSet> {
+        anyhow::ensure!(spec.vocab > 0 && spec.d_model > 0, "degenerate spec");
+        anyhow::ensure!(spec.n_layers > 0 && spec.n_heads > 0, "degenerate spec");
+        anyhow::ensure!(spec.d_head % 2 == 0, "RoPE needs an even d_head");
+        anyhow::ensure!(!spec.cache_variants.is_empty(), "spec has no cache variants");
+        let (dm, hd, d_ff) = (spec.d_model, spec.n_heads * spec.d_head, spec.d_ff());
+        let mut at = 0usize;
+        let mut seg = |len: usize| {
+            let s = Seg { at, len };
+            at += len;
+            s
+        };
+        let embed = seg(spec.vocab * dm);
+        let layers: Vec<LayerSegs> = (0..spec.n_layers)
+            .map(|_| LayerSegs {
+                g_attn: seg(dm),
+                wq: seg(hd * dm),
+                wk: seg(hd * dm),
+                wv: seg(hd * dm),
+                wo: seg(dm * hd),
+                g_mlp: seg(dm),
+                w1: seg(d_ff * dm),
+                w2: seg(dm * d_ff),
+            })
+            .collect();
+        let g_final = seg(dm);
+        Ok(ParamSet { spec, data: vec![0.0; at], embed, g_final, layers })
+    }
+
+    /// Training init: gaussian weights from `seed` (scaled-down output
+    /// projections for residual stability), unit norm gains.
+    pub fn init(spec: ModelSpec, seed: u64) -> Result<ParamSet> {
+        let mut p = Self::zeros(spec)?;
+        let spec = p.spec.clone();
+        let (dm, hd, d_ff) = (spec.d_model, spec.n_heads * spec.d_head, spec.d_ff());
+        let proj_std = 1.0 / (dm as f32).sqrt();
+        let resid = 1.0 / (2.0 * spec.n_layers as f32).sqrt();
+        let mut rng = Pcg64::seed_from_u64(seed ^ 0x7121_1EA4);
+        fill_gaussian(&mut rng, p.embed.of_mut(&mut p.data), EMBED_STD);
+        for l in 0..spec.n_layers {
+            let s = p.layers[l];
+            p.data[s.g_attn.at..s.g_attn.at + s.g_attn.len].fill(1.0);
+            p.data[s.g_mlp.at..s.g_mlp.at + s.g_mlp.len].fill(1.0);
+            fill_gaussian(&mut rng, s.wq.of_mut(&mut p.data), proj_std);
+            fill_gaussian(&mut rng, s.wk.of_mut(&mut p.data), proj_std);
+            fill_gaussian(&mut rng, s.wv.of_mut(&mut p.data), proj_std);
+            fill_gaussian(&mut rng, s.wo.of_mut(&mut p.data), resid / (hd as f32).sqrt());
+            fill_gaussian(&mut rng, s.w1.of_mut(&mut p.data), proj_std);
+            fill_gaussian(&mut rng, s.w2.of_mut(&mut p.data), resid / (d_ff as f32).sqrt());
+        }
+        p.data[p.g_final.at..p.g_final.at + p.g_final.len].fill(1.0);
+        Ok(p)
+    }
+
+    /// Model shapes.
+    pub fn spec(&self) -> &ModelSpec {
+        &self.spec
+    }
+
+    /// Record the trained accuracy carried into exported checkpoints.
+    pub fn set_train_accuracy(&mut self, acc: f64) {
+        self.spec.train_accuracy = acc;
+    }
+
+    /// Total parameter count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// The flat arena.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// The flat arena, mutable (optimizer updates).
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Named segments in arena order: `(name, dims, segment)` — the
+    /// checkpoint schema shared with `HostExecutor::to_checkpoint`.
+    pub(crate) fn entries(&self) -> Vec<(String, Vec<usize>, Seg)> {
+        let (v, dm) = (self.spec.vocab, self.spec.d_model);
+        let (hd, d_ff) = (self.spec.n_heads * self.spec.d_head, self.spec.d_ff());
+        let mut out = vec![("embed".to_string(), vec![v, dm], self.embed)];
+        for (l, s) in self.layers.iter().enumerate() {
+            let name = |f: &str| format!("layers.{l}.{f}");
+            out.push((name("g_attn"), vec![dm], s.g_attn));
+            out.push((name("wq"), vec![hd, dm], s.wq));
+            out.push((name("wk"), vec![hd, dm], s.wk));
+            out.push((name("wv"), vec![hd, dm], s.wv));
+            out.push((name("wo"), vec![dm, hd], s.wo));
+            out.push((name("g_mlp"), vec![dm], s.g_mlp));
+            out.push((name("w1"), vec![d_ff, dm], s.w1));
+            out.push((name("w2"), vec![dm, d_ff], s.w2));
+        }
+        out.push(("g_final".to_string(), vec![dm], self.g_final));
+        out
+    }
+
+    /// Export as a checkpoint (weights + spec metadata).
+    pub fn to_checkpoint(&self) -> Checkpoint {
+        let mut ck = Checkpoint::new();
+        self.spec.write_checkpoint_meta(&mut ck);
+        for (name, dims, seg) in self.entries() {
+            ck.insert(&name, dims, seg.of(&self.data).to_vec());
+        }
+        ck
+    }
+
+    /// Rebuild from a checkpoint (spec metadata + every named tensor,
+    /// shape-checked) — accepts both trainer- and executor-written
+    /// checkpoints; they share one schema.
+    pub fn from_checkpoint(ck: &Checkpoint) -> Result<ParamSet> {
+        let spec = ModelSpec::read_checkpoint_meta(ck)?;
+        let mut p = Self::zeros(spec)?;
+        for (name, dims, seg) in p.entries() {
+            let t = ck.require(&name)?;
+            anyhow::ensure!(t.dims == dims, "{name}: shaped {:?}, want {:?}", t.dims, dims);
+            p.data[seg.at..seg.at + seg.len].copy_from_slice(&t.data);
+        }
+        Ok(p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::HostExecutor;
+
+    fn spec() -> ModelSpec {
+        ModelSpec {
+            vocab: 16,
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 2,
+            d_head: 8,
+            prefill_t: 64,
+            cache_variants: vec![64, 32],
+            decode_batch: 0,
+            train_accuracy: -1.0,
+        }
+    }
+
+    #[test]
+    fn layout_covers_arena_exactly() {
+        let p = ParamSet::zeros(spec()).unwrap();
+        let mut seen = vec![false; p.len()];
+        for (_, dims, seg) in p.entries() {
+            assert_eq!(dims.iter().product::<usize>(), seg.len);
+            for s in &mut seen[seg.at..seg.at + seg.len] {
+                assert!(!*s, "overlapping segments");
+                *s = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "arena has unnamed gaps");
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_preserves_bits() {
+        let mut p = ParamSet::init(spec(), 5).unwrap();
+        p.set_train_accuracy(0.875);
+        let back = ParamSet::from_checkpoint(&p.to_checkpoint()).unwrap();
+        assert_eq!(back.data(), p.data());
+        assert!((back.spec().train_accuracy - 0.875).abs() < 1e-6);
+    }
+
+    #[test]
+    fn checkpoint_schema_matches_host_executor() {
+        // A host-executor checkpoint loads as a ParamSet and vice versa
+        // (one schema both directions).
+        let m = HostExecutor::small(9);
+        let p = ParamSet::from_checkpoint(&m.to_checkpoint()).unwrap();
+        let again = HostExecutor::from_checkpoint(&p.to_checkpoint()).unwrap();
+        let a = m.prefill(&[1, 2, 3]).unwrap();
+        let b = again.prefill(&[1, 2, 3]).unwrap();
+        assert_eq!(a.logits, b.logits);
+    }
+
+    #[test]
+    fn init_is_deterministic_by_seed() {
+        let a = ParamSet::init(spec(), 3).unwrap();
+        let b = ParamSet::init(spec(), 3).unwrap();
+        let c = ParamSet::init(spec(), 4).unwrap();
+        assert_eq!(a.data(), b.data());
+        assert_ne!(a.data(), c.data());
+        assert!(a.data().iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn rejects_odd_d_head() {
+        let mut s = spec();
+        s.d_head = 7;
+        assert!(ParamSet::zeros(s).is_err());
+    }
+}

@@ -11,8 +11,9 @@ mod retrieval;
 mod streams;
 
 pub use retrieval::{
-    decode, encode, golden_example, lines_for_seq_len, seq_len_for_lines, RetrievalInstance,
-    RetrievalSampler, ANSWER_TOKENS, PAD, QUERY_TOKENS, TOKENS_PER_LINE, VOCAB,
+    decode, encode, golden_example, lines_for_seq_len, lines_for_seq_len_clamped,
+    seq_len_for_lines, RetrievalInstance, RetrievalSampler, ANSWER_TOKENS, PAD, QUERY_TOKENS,
+    REPLACEMENT, TOKENS_PER_LINE, VOCAB,
 };
 
 /// Golden fixture as (prompt tokens, answer tokens) — parity-checked

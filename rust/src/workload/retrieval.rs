@@ -28,11 +28,23 @@ pub fn encode(text: &str) -> Vec<i32> {
         .collect()
 }
 
-/// Token ids → text, skipping PAD.
+/// Replacement character emitted by [`decode`] for out-of-vocab ids.
+pub const REPLACEMENT: char = '\u{fffd}';
+
+/// Token ids → text, skipping PAD. Ids outside `1..=15` render as
+/// [`REPLACEMENT`] instead of panicking: the eval harness decodes raw
+/// model argmax output, which an (untrained or lossy-cached) model may
+/// place anywhere in logit space.
 pub fn decode(ids: &[i32]) -> String {
     ids.iter()
         .filter(|&&i| i != PAD)
-        .map(|&i| CHARS.as_bytes()[(i - 1) as usize] as char)
+        .map(|&i| {
+            // Widen before the -1: `i32::MIN - 1` would overflow.
+            usize::try_from(i64::from(i) - 1)
+                .ok()
+                .and_then(|ix| CHARS.as_bytes().get(ix))
+                .map_or(REPLACEMENT, |&b| b as char)
+        })
         .collect()
 }
 
@@ -41,9 +53,18 @@ pub fn seq_len_for_lines(n_lines: usize) -> usize {
     n_lines * TOKENS_PER_LINE + QUERY_TOKENS + ANSWER_TOKENS
 }
 
-/// Largest line count fitting in `n` tokens.
+/// Largest line count fitting in `n` tokens (0 when `n` cannot even
+/// hold the query + answer overhead — callers clamp as needed rather
+/// than this underflowing).
 pub fn lines_for_seq_len(n: usize) -> usize {
-    (n - QUERY_TOKENS - ANSWER_TOKENS) / TOKENS_PER_LINE
+    n.saturating_sub(QUERY_TOKENS + ANSWER_TOKENS) / TOKENS_PER_LINE
+}
+
+/// [`lines_for_seq_len`] clamped to [`RetrievalSampler::sample`]'s
+/// 1..=100 domain — the structural form of "give me a document sized
+/// for roughly `n` tokens" that can never trip the sampler's assert.
+pub fn lines_for_seq_len_clamped(n: usize) -> usize {
+    lines_for_seq_len(n).clamp(1, 100)
 }
 
 /// One retrieval document: (id, value) records, a queried id, its value.
@@ -151,6 +172,34 @@ mod tests {
     fn seq_len_formulas() {
         assert_eq!(seq_len_for_lines(12), 12 * 7 + 6);
         assert_eq!(lines_for_seq_len(seq_len_for_lines(12)), 12);
+    }
+
+    #[test]
+    fn lines_for_short_sequences_is_zero_not_underflow() {
+        // Regression: n < QUERY_TOKENS + ANSWER_TOKENS used to underflow
+        // (debug panic / release wrap to a huge line count).
+        for n in 0..QUERY_TOKENS + ANSWER_TOKENS {
+            assert_eq!(lines_for_seq_len(n), 0, "n={n}");
+        }
+        assert_eq!(lines_for_seq_len(QUERY_TOKENS + ANSWER_TOKENS), 0);
+        assert_eq!(lines_for_seq_len(QUERY_TOKENS + ANSWER_TOKENS + TOKENS_PER_LINE - 1), 0);
+        assert_eq!(lines_for_seq_len(QUERY_TOKENS + ANSWER_TOKENS + TOKENS_PER_LINE), 1);
+        // The clamped form stays inside the sampler's 1..=100 domain at
+        // both extremes.
+        assert_eq!(lines_for_seq_len_clamped(0), 1);
+        assert_eq!(lines_for_seq_len_clamped(27), 3);
+        assert_eq!(lines_for_seq_len_clamped(100_000), 100);
+    }
+
+    #[test]
+    fn decode_maps_out_of_vocab_to_replacement() {
+        // Regression: raw model argmax output may fall outside 1..=15;
+        // decode must render it, not panic. PAD stays skipped, encode
+        // stays strict.
+        let want = format!("{REPLACEMENT}0{REPLACEMENT}{REPLACEMENT}");
+        assert_eq!(decode(&[-3, 0, 1, 16, 99]), want);
+        assert_eq!(decode(&[15]), "=");
+        assert_eq!(decode(&[i32::MIN, i32::MAX]), format!("{REPLACEMENT}{REPLACEMENT}"));
     }
 
     #[test]

