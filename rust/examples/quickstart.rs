@@ -102,6 +102,7 @@ fn host_decode_demo() -> anyhow::Result<()> {
             policy: policy.to_string(),
             budget: 16,
             delta: 0.5,
+            deadline: None,
         });
         engine.run_to_completion()?;
         let resp = engine.take_responses().pop().expect("one response");

@@ -135,6 +135,7 @@ fn run_cell<E: StepExecutor>(
             policy: policy.to_string(),
             budget,
             delta,
+            deadline: None,
         });
     }
     engine.run_to_completion()?;

@@ -26,11 +26,14 @@ use anyhow::Result;
 use std::path::PathBuf;
 use subgen::bench::Table;
 use subgen::cli::Args;
-use subgen::coordinator::{EngineConfig, HostExecutor, Request};
+use subgen::coordinator::{EngineConfig, FaultPlan, HostExecutor, Request};
 use subgen::model::{Generator, ModelSpec};
 use subgen::rng::Pcg64;
 use subgen::runtime::Runtime;
-use subgen::server::{channel, serve, ClusterSnapshot, LoadGen, LoadGenReport, Router};
+use subgen::server::{
+    channel, prometheus_text, serve, ChaosReport, ClusterSnapshot, LoadGen, LoadGenReport, Router,
+    RouterConfig,
+};
 use subgen::workload::{lines_for_seq_len_clamped, RetrievalSampler};
 
 fn main() -> Result<()> {
@@ -43,6 +46,7 @@ fn main() -> Result<()> {
         .describe("n", Some("384"), "prompt length (tokens)")
         .describe("new", Some("8"), "tokens generated per request")
         .describe("budget", Some("192"), "per-head budget for compressed policies")
+        .describe("chaos", None, "inject a worker kill and report recovery (kill-one)")
         .describe("seed", Some("0"), "rng seed");
     args.exit_on_help();
     let executor = args.get_or("executor", "host");
@@ -58,6 +62,12 @@ fn main() -> Result<()> {
     let max_new = args.usize_or("new", 8);
     let budget = args.usize_or("budget", 192);
     let seed = args.u64_or("seed", 0);
+
+    if let Some(scenario) = args.get("chaos") {
+        anyhow::ensure!(scenario == "kill-one", "unknown chaos scenario {scenario:?} (kill-one)");
+        anyhow::ensure!(executor == "host", "chaos scenarios need the host executor");
+        return run_chaos(workers, requests, n, max_new, budget, seed);
+    }
 
     println!("executor: {executor} workers: {workers}");
     let mut table = Table::new(&["policy", "completed", "tok/s", "p50", "p90", "p99", "max"]);
@@ -99,6 +109,93 @@ fn main() -> Result<()> {
     Ok(())
 }
 
+/// Chaos scenario `kill-one`: the same streaming workload twice — an
+/// undisturbed baseline, then a run where worker 0 is killed by an
+/// injected panic mid-decode and the supervisor restores its sessions
+/// from per-tick snapshots. Reports worker restarts, recovered
+/// sessions, and TTFT/TPOT degradation (faulted p95 / baseline p95),
+/// then dumps the faulted run's Prometheus families so scrapes and CI
+/// greps see the same counters. Arrivals are a burst (the configured
+/// rate is ignored) so the killed worker deterministically holds
+/// in-flight sessions when the fault fires.
+fn run_chaos(
+    workers: usize,
+    requests: usize,
+    n: usize,
+    max_new: usize,
+    budget: usize,
+    seed: u64,
+) -> Result<()> {
+    let model_seed = seed ^ 0xBEEF;
+    let cfg = EngineConfig {
+        max_active: 4,
+        prefills_per_tick: 1,
+        snapshot_every: 1,
+        ..Default::default()
+    };
+    // Identical prompts in both runs so the latency comparison is
+    // workload-for-workload.
+    let load = || {
+        let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed));
+        let mut prompts = Vec::with_capacity(requests);
+        for _ in 0..requests {
+            let inst = sampler.sample(lines_for_seq_len_clamped(n));
+            prompts.push(inst.tokens().0);
+        }
+        let make_request = Box::new(move |id: u64| Request {
+            id,
+            session_id: None,
+            prompt: prompts[id as usize].clone(),
+            max_new,
+            policy: "subgen".into(),
+            budget,
+            delta: 4.0,
+            deadline: None,
+        });
+        LoadGen { rate: 1e6, requests, make_request, seed }
+    };
+
+    let baseline_router =
+        Router::spawn(workers, cfg.clone(), move |_w| HostExecutor::retrieval(model_seed))?;
+    let baseline = load().run_streaming(&baseline_router);
+    baseline_router.shutdown()?;
+
+    let rcfg = RouterConfig {
+        fault_plans: vec![(0, FaultPlan { panic_at_tick: Some(8), ..Default::default() })],
+        ..Default::default()
+    };
+    let router =
+        Router::spawn_with(workers, cfg, rcfg, move |_w| HostExecutor::retrieval(model_seed))?;
+    let faulted = load().run_streaming(&router);
+    let snap = router.shutdown()?;
+
+    let chaos = ChaosReport {
+        baseline,
+        faulted,
+        restarts: snap.restarts,
+        recovered_sessions: snap.recovered_sessions,
+    };
+    println!(
+        "chaos scenario=kill-one restarts={} recovered_sessions={} completed={}/{requests} \
+         failed={} ttft_degradation={:.2} tpot_degradation={:.2}",
+        chaos.restarts,
+        chaos.recovered_sessions,
+        chaos.faulted.completed,
+        chaos.faulted.failed,
+        chaos.ttft_degradation(),
+        chaos.tpot_degradation()
+    );
+    println!(
+        "chaos baseline ttft_p95={:?} tpot_p95={:?}; faulted ttft_p95={:?} tpot_p95={:?}",
+        chaos.baseline.ttft.p95(),
+        chaos.baseline.tpot.p95(),
+        chaos.faulted.ttft.p95(),
+        chaos.faulted.tpot.p95()
+    );
+    print!("{}", prometheus_text(&snap));
+    Ok(())
+}
+
 /// One policy's run: spawn the serving backend, drive the open-loop
 /// load, drain, and return (load report, final cluster snapshot).
 fn run_policy(
@@ -128,6 +225,7 @@ fn run_policy(
         policy: policy_owned.clone(),
         budget,
         delta: 4.0,
+        deadline: None,
     });
     let cfg = EngineConfig { max_active: 4, prefills_per_tick: 1, ..Default::default() };
     let loadgen = LoadGen { rate, requests, make_request, seed };

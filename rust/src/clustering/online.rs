@@ -66,6 +66,24 @@ impl OnlineThresholdClustering {
         }
     }
 
+    /// Rebuild from serialized parts (snapshot restore). `delta` must
+    /// be the *current* threshold — under δ-doubling it can exceed the
+    /// construction-time value, and restoring the original would let
+    /// the cluster count regrow past its cap.
+    pub fn from_parts(
+        dim: usize,
+        delta: f32,
+        centers: Tensor,
+        counts: Vec<u64>,
+        total: u64,
+    ) -> Self {
+        assert!(delta > 0.0, "delta must be positive");
+        assert!(dim > 0, "dim must be positive");
+        assert_eq!(centers.cols(), dim, "center arena width mismatch");
+        assert_eq!(centers.rows(), counts.len(), "centers/counts length mismatch");
+        Self { dim, delta, delta_sq: delta * delta, centers, counts, total }
+    }
+
     /// Observe a point; returns its assignment.
     pub fn push(&mut self, point: &[f32]) -> Assignment {
         assert_eq!(point.len(), self.dim, "dimension mismatch");

@@ -2,6 +2,7 @@
 
 use super::{Request, Response, StepExecutor};
 use super::request::Timing;
+use super::snapshot::{FaultPlan, SessionSnapshot};
 use crate::kvcache::attention_flat_into;
 use crate::model::{caches::FlatCaches, DecodeStep, SequenceCaches, StepOutput};
 use crate::metrics::{Counter, Gauge, Histogram};
@@ -12,6 +13,11 @@ use std::sync::Arc;
 /// Per-token hook: `(request id, token index, token)`, called as
 /// `decode_tick` emits each token — the streaming-response tap.
 pub type TokenSink<'e> = Box<dyn FnMut(u64, usize, i32) + 'e>;
+
+/// Per-session snapshot hook, called with each snapshot published on
+/// the [`EngineConfig::snapshot_every`] cadence — the recovery tap the
+/// cluster router persists so sessions survive worker deaths.
+pub type SnapshotSink<'e> = Box<dyn FnMut(SessionSnapshot) + 'e>;
 
 /// Engine tuning knobs.
 #[derive(Debug, Clone)]
@@ -42,6 +48,15 @@ pub struct EngineConfig {
     /// identical either way (the batched paths are pinned bit-identical
     /// per executor); default `true`.
     pub batched_decode: bool,
+    /// Every N progressing ticks, publish a [`SessionSnapshot`] of
+    /// every active sequence through the snapshot sink (see
+    /// [`Engine::set_snapshot_sink`]) — the recovery feed the cluster
+    /// router persists so sessions survive worker deaths. 0 disables
+    /// snapshots (default).
+    pub snapshot_every: usize,
+    /// Deterministic fault-injection schedule for chaos testing; the
+    /// default injects nothing.
+    pub fault: FaultPlan,
 }
 
 impl Default for EngineConfig {
@@ -52,6 +67,8 @@ impl Default for EngineConfig {
             prefills_per_tick: 1,
             host_probe_every: 0,
             batched_decode: true,
+            snapshot_every: 0,
+            fault: FaultPlan::default(),
         }
     }
 }
@@ -89,6 +106,15 @@ pub struct EngineStats {
     /// `decode_batch`, while executors on the trait's per-sequence
     /// fallback (mock, PJRT) decode them one at a time.
     pub batched_sequences: Counter,
+    /// Requests dropped past their deadline (queued or mid-decode);
+    /// ids surface through [`Engine::take_expired`].
+    pub deadline_exceeded: Counter,
+    /// Session snapshots published through the snapshot sink.
+    pub snapshots: Counter,
+    /// Session snapshots that failed to publish (fault-injected or
+    /// storage errors) — the session keeps decoding, but recovery
+    /// would restart from an older snapshot.
+    pub snapshot_failures: Counter,
 }
 
 impl EngineStats {
@@ -108,6 +134,9 @@ impl EngineStats {
         self.active.add(other.active.get());
         self.batched_calls.add(other.batched_calls.get());
         self.batched_sequences.add(other.batched_sequences.get());
+        self.deadline_exceeded.add(other.deadline_exceeded.get());
+        self.snapshots.add(other.snapshots.get());
+        self.snapshot_failures.add(other.snapshot_failures.get());
     }
 }
 
@@ -143,6 +172,10 @@ pub struct Engine<'e, E: StepExecutor> {
     probe_zacc: Vec<f64>,
     /// Per-token streaming hook (see [`TokenSink`]); `None` = silent.
     sink: Option<TokenSink<'e>>,
+    /// Snapshot publication hook (see [`SnapshotSink`]); `None` = off.
+    snap_sink: Option<SnapshotSink<'e>>,
+    /// Ids dropped past their deadline since the last `take_expired`.
+    expired: Vec<u64>,
     /// Public metrics. Shared (`Arc`) so a router or metrics exporter on
     /// another thread can observe counters while the engine runs — every
     /// field is atomic, so `&self` access is lock-free both sides.
@@ -169,6 +202,8 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             probe_scores: Vec::new(),
             probe_zacc: Vec::new(),
             sink: None,
+            snap_sink: None,
+            expired: Vec::new(),
             stats,
         }
     }
@@ -177,6 +212,53 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
     /// responses; replaces any previous sink.
     pub fn set_token_sink(&mut self, sink: TokenSink<'e>) {
         self.sink = Some(sink);
+    }
+
+    /// Install the snapshot hook ([`SnapshotSink`]) receiving session
+    /// snapshots on the [`EngineConfig::snapshot_every`] cadence;
+    /// replaces any previous sink.
+    pub fn set_snapshot_sink(&mut self, sink: SnapshotSink<'e>) {
+        self.snap_sink = Some(sink);
+    }
+
+    /// Re-admit a snapshotted session, bypassing `max_active` — a
+    /// recovered session must not be bounced by admission control on a
+    /// surviving worker. Decoding continues bit-identically from the
+    /// snapshot (the cache codecs are exact); tokens already in
+    /// `snap.generated` are re-counted into the resumed response, and
+    /// the deadline clock restarts at resume (recovery time is not
+    /// charged to the request).
+    pub fn resume(&mut self, snap: SessionSnapshot) -> Result<()> {
+        anyhow::ensure!(
+            snap.generated.len() < snap.req.max_new,
+            "snapshot for request {} is already complete",
+            snap.req.id
+        );
+        let spec = self.exec.spec();
+        let mut caches = snap.restore_caches(spec)?;
+        let c = spec.pick_cache_variant(caches.max_slots() + 1);
+        let flat = caches.assemble(c)?;
+        let mut timing = Timing::now();
+        timing.admitted = Some(timing.submitted);
+        self.active.push(Active {
+            req: snap.req,
+            timing,
+            caches,
+            flat,
+            next: snap.next,
+            pos: snap.pos,
+            generated: snap.generated,
+            last_q: Vec::new(),
+        });
+        self.stats.active.set(self.active.len() as u64);
+        Ok(())
+    }
+
+    /// Drain the ids of requests dropped past their deadline since the
+    /// last call — the serving layer turns these into typed expiration
+    /// events instead of leaving callers hanging.
+    pub fn take_expired(&mut self) -> Vec<u64> {
+        std::mem::take(&mut self.expired)
     }
 
     /// Enqueue a request; `false` = rejected (backpressure, or a
@@ -208,9 +290,25 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
     /// that made progress.
     pub fn tick(&mut self) -> Result<usize> {
         let t0 = std::time::Instant::now();
+        let tick_no = self.ticks;
+        if let Some((at, dur)) = self.cfg.fault.stall_at_tick {
+            if tick_no == at {
+                std::thread::sleep(dur);
+            }
+        }
+        if self.cfg.fault.panic_at_tick == Some(tick_no) {
+            panic!("fault injection: panic at tick {tick_no}");
+        }
+        self.expire_deadlines();
         self.admit()?;
         let progressed = self.decode_tick()?;
         self.ticks += 1;
+        if self.cfg.snapshot_every > 0
+            && progressed > 0
+            && self.ticks % self.cfg.snapshot_every as u64 == 0
+        {
+            self.publish_snapshots(tick_no);
+        }
         if self.cfg.host_probe_every > 0
             && progressed > 0
             && self.ticks % self.cfg.host_probe_every as u64 == 0
@@ -223,6 +321,58 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
         self.stats.queue_depth.set(self.queue.len() as u64);
         self.stats.active.set(self.active.len() as u64);
         Ok(progressed)
+    }
+
+    /// Drop queued and active work past its deadline. Dropped ids are
+    /// surfaced through [`Self::take_expired`]; the counter feeds the
+    /// `subgen_worker_deadline_exceeded` metric family.
+    fn expire_deadlines(&mut self) {
+        let now = std::time::Instant::now();
+        let stats = &self.stats;
+        let expired = &mut self.expired;
+        self.queue.retain(|(req, timing)| {
+            let over = req.deadline.is_some_and(|d| now.duration_since(timing.submitted) > d);
+            if over {
+                stats.deadline_exceeded.inc();
+                expired.push(req.id);
+            }
+            !over
+        });
+        self.active.retain(|seq| {
+            let over =
+                seq.req.deadline.is_some_and(|d| now.duration_since(seq.timing.submitted) > d);
+            if over {
+                stats.deadline_exceeded.inc();
+                expired.push(seq.req.id);
+            }
+            !over
+        });
+    }
+
+    /// Publish one snapshot per active sequence through the snapshot
+    /// sink. Runs after `decode_tick`, so each snapshot's `generated`
+    /// holds exactly the tokens already emitted and `next` the pending
+    /// one — the boundary [`SessionSnapshot`] documents. A fault plan
+    /// can fail writes from a given tick; failed snapshots are counted
+    /// and skipped (decoding is never blocked on snapshot storage).
+    fn publish_snapshots(&mut self, tick_no: u64) {
+        let Some(sink) = self.snap_sink.as_mut() else {
+            return;
+        };
+        if self.cfg.fault.snapshot_fail_from_tick.is_some_and(|t| tick_no >= t) {
+            self.stats.snapshot_failures.add(self.active.len() as u64);
+            return;
+        }
+        for seq in &self.active {
+            sink(SessionSnapshot::capture(
+                &seq.req,
+                &seq.generated,
+                seq.next,
+                seq.pos,
+                &seq.caches,
+            ));
+            self.stats.snapshots.inc();
+        }
     }
 
     /// One host-probe pass per tick: every active sequence's step
@@ -602,6 +752,7 @@ mod tests {
                 policy: policy.into(),
                 budget: 8,
                 delta: 0.5,
+                deadline: None,
             });
             e.run_to_completion().unwrap();
             let rs = e.take_responses();
@@ -626,6 +777,7 @@ mod tests {
                 policy: policy.into(),
                 budget: 16,
                 delta: 0.5,
+                deadline: None,
             });
             e.run_to_completion().unwrap();
             let rs = e.take_responses();
@@ -689,6 +841,7 @@ mod tests {
                     policy: crate::kvcache::POLICY_NAMES[id as usize % 5].into(),
                     budget: 16,
                     delta: 0.5,
+                    deadline: None,
                 });
             }
             e.run_to_completion().unwrap();
@@ -711,6 +864,7 @@ mod tests {
             policy: "subgen".into(),
             budget: 16,
             delta: 0.5,
+            deadline: None,
         });
         e.run_to_completion().unwrap();
         // One probe per progressing tick, each a single batched sweep.
@@ -737,5 +891,168 @@ mod tests {
         e.run_to_completion().unwrap();
         assert_eq!(e.stats.latency.count(), 1);
         assert!(e.stats.tick_latency.count() >= 1);
+    }
+
+    #[test]
+    fn expired_queued_request_is_dropped_with_typed_id() {
+        let exec = MockExecutor::small();
+        let mut e = engine(EngineConfig::default(), &exec);
+        e.submit(Request::exact(5, vec![1], 3).with_deadline(std::time::Duration::ZERO));
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        e.tick().unwrap();
+        assert_eq!(e.take_expired(), vec![5]);
+        assert_eq!(e.stats.deadline_exceeded.get(), 1);
+        assert_eq!(e.pending(), 0);
+        e.run_to_completion().unwrap();
+        assert!(e.take_responses().is_empty());
+    }
+
+    #[test]
+    fn expired_active_sequence_is_dropped_mid_decode() {
+        let exec = MockExecutor::small();
+        let mut e = engine(EngineConfig::default(), &exec);
+        let dl = std::time::Duration::from_millis(5);
+        e.submit(Request::exact(3, vec![1], 1000).with_deadline(dl));
+        e.tick().unwrap();
+        assert_eq!(e.pending(), 1);
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        e.tick().unwrap();
+        assert_eq!(e.take_expired(), vec![3]);
+        assert_eq!(e.pending(), 0);
+        assert_eq!(e.stats.completed.get(), 0);
+    }
+
+    #[test]
+    fn deadline_far_in_the_future_never_expires() {
+        let exec = MockExecutor::small();
+        let mut e = engine(EngineConfig::default(), &exec);
+        e.submit(Request::exact(1, vec![1], 3).with_deadline(std::time::Duration::from_secs(60)));
+        e.run_to_completion().unwrap();
+        assert!(e.take_expired().is_empty());
+        assert_eq!(e.take_responses().len(), 1);
+        assert_eq!(e.stats.deadline_exceeded.get(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "fault injection")]
+    fn fault_plan_panics_at_exact_tick() {
+        let exec = MockExecutor::small();
+        let cfg = EngineConfig {
+            fault: FaultPlan { panic_at_tick: Some(2), ..Default::default() },
+            ..Default::default()
+        };
+        let mut e = engine(cfg, &exec);
+        e.submit(Request::exact(0, vec![1], 8));
+        e.tick().unwrap();
+        e.tick().unwrap();
+        e.tick().unwrap(); // enters tick 2 → injected panic
+    }
+
+    #[test]
+    fn fault_plan_stalls_for_configured_duration() {
+        let exec = MockExecutor::small();
+        let stall = std::time::Duration::from_millis(20);
+        let cfg = EngineConfig {
+            fault: FaultPlan { stall_at_tick: Some((0, stall)), ..Default::default() },
+            ..Default::default()
+        };
+        let mut e = engine(cfg, &exec);
+        e.submit(Request::exact(0, vec![1], 1));
+        let t0 = std::time::Instant::now();
+        e.tick().unwrap();
+        assert!(t0.elapsed() >= stall);
+        e.run_to_completion().unwrap();
+        assert_eq!(e.take_responses().len(), 1);
+    }
+
+    #[test]
+    fn snapshot_cadence_publishes_per_active_sequence() {
+        let exec = MockExecutor::small();
+        let cfg = EngineConfig { snapshot_every: 2, ..Default::default() };
+        let mut e = engine(cfg, &exec);
+        let count = std::rc::Rc::new(std::cell::Cell::new(0u64));
+        let tap = std::rc::Rc::clone(&count);
+        e.set_snapshot_sink(Box::new(move |_| tap.set(tap.get() + 1)));
+        e.submit(Request::exact(0, vec![1], 6));
+        e.run_to_completion().unwrap();
+        // 6 progressing ticks, cadence 2 → snapshots on ticks 2 and 4
+        // (the sequence completes during tick 6 and is gone by then).
+        assert_eq!(count.get(), 2);
+        assert_eq!(e.stats.snapshots.get(), 2);
+        assert_eq!(e.stats.snapshot_failures.get(), 0);
+    }
+
+    #[test]
+    fn snapshot_write_failures_are_counted_not_fatal() {
+        let exec = MockExecutor::small();
+        let cfg = EngineConfig {
+            snapshot_every: 1,
+            fault: FaultPlan { snapshot_fail_from_tick: Some(0), ..Default::default() },
+            ..Default::default()
+        };
+        let mut e = engine(cfg, &exec);
+        e.set_snapshot_sink(Box::new(|_| panic!("failed snapshot must not reach the sink")));
+        e.submit(Request::exact(0, vec![1], 3));
+        e.run_to_completion().unwrap();
+        assert_eq!(e.stats.snapshots.get(), 0);
+        assert!(e.stats.snapshot_failures.get() > 0);
+        assert_eq!(e.take_responses()[0].tokens.len(), 3);
+    }
+
+    #[test]
+    fn snapshot_resume_continues_bit_identically() {
+        // The acceptance-bar property at engine level: kill an engine
+        // mid-decode, restore its session from the latest snapshot on a
+        // fresh engine over the same model, and the full token stream
+        // matches the uninterrupted run exactly — including the subgen
+        // sketch policy, whose state is RNG- and clustering-dependent.
+        let exec = crate::model::HostExecutor::small(7);
+        let req = || Request {
+            id: 1,
+            session_id: None,
+            prompt: vec![1, 2, 3],
+            max_new: 10,
+            policy: "subgen".into(),
+            budget: 16,
+            delta: 0.5,
+            deadline: None,
+        };
+        let mut a = Engine::new(&exec, EngineConfig::default());
+        a.submit(req());
+        a.run_to_completion().unwrap();
+        let want = a.take_responses().pop().unwrap().tokens;
+        assert_eq!(want.len(), 10);
+
+        let snaps = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let tap = std::rc::Rc::clone(&snaps);
+        let mut b = Engine::new(&exec, EngineConfig { snapshot_every: 1, ..Default::default() });
+        b.set_snapshot_sink(Box::new(move |s| tap.borrow_mut().push(s)));
+        b.submit(req());
+        for _ in 0..4 {
+            b.tick().unwrap();
+        }
+        drop(b); // the "crashed" worker
+        let bytes = snaps.borrow().last().unwrap().to_bytes();
+        let snap = SessionSnapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(snap.generated, want[..snap.generated.len()]);
+        assert!(!snap.generated.is_empty() && snap.generated.len() < want.len());
+
+        let mut c = Engine::new(&exec, EngineConfig::default());
+        c.resume(snap).unwrap();
+        c.run_to_completion().unwrap();
+        let resp = c.take_responses().pop().unwrap();
+        assert_eq!(resp.tokens, want);
+    }
+
+    #[test]
+    fn resume_rejects_already_complete_snapshot() {
+        let exec = crate::model::HostExecutor::small(7);
+        let req = Request::exact(4, vec![1, 2], 2);
+        let caches =
+            SequenceCaches::new(exec.spec(), &req.policy, req.budget, req.delta, 1).unwrap();
+        let snap = SessionSnapshot::capture(&req, &[9, 9], 9, 4, &caches);
+        let mut e = Engine::new(&exec, EngineConfig::default());
+        assert!(e.resume(snap).is_err());
+        assert_eq!(e.pending(), 0);
     }
 }

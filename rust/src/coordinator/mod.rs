@@ -13,10 +13,12 @@
 mod engine;
 mod executor;
 mod request;
+mod snapshot;
 
-pub use engine::{Engine, EngineConfig, EngineStats, TokenSink};
+pub use engine::{Engine, EngineConfig, EngineStats, SnapshotSink, TokenSink};
 pub use executor::{MockExecutor, StepExecutor};
 pub use request::{Request, Response};
+pub use snapshot::{FaultPlan, SessionSnapshot};
 
 // The pure-rust transformer executor lives in `model` (it is a model);
 // re-exported here so serving code imports every executor from one

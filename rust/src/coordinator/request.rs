@@ -21,6 +21,10 @@ pub struct Request {
     pub budget: usize,
     /// SubGen cluster threshold δ.
     pub delta: f32,
+    /// Completion deadline, measured from submission. Work past the
+    /// deadline is shed with a typed error/event rather than decoded to
+    /// completion; `None` = no deadline.
+    pub deadline: Option<Duration>,
 }
 
 impl Request {
@@ -34,12 +38,19 @@ impl Request {
             policy: "exact".into(),
             budget: usize::MAX / 2,
             delta: 0.5,
+            deadline: None,
         }
     }
 
     /// Attach a sticky-session routing key (builder style).
     pub fn with_session(mut self, session_id: u64) -> Self {
         self.session_id = Some(session_id);
+        self
+    }
+
+    /// Attach a completion deadline (builder style).
+    pub fn with_deadline(mut self, deadline: Duration) -> Self {
+        self.deadline = Some(deadline);
         self
     }
 }

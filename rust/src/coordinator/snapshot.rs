@@ -1,0 +1,266 @@
+//! Session snapshots + deterministic fault injection.
+//!
+//! A [`SessionSnapshot`] freezes one in-flight sequence — its request,
+//! emitted tokens, pending token, and the full per-(layer, head) cache
+//! state — into the same versioned tensor container model checkpoints
+//! use ([`Checkpoint`]). Restoring on any worker hosting the same model
+//! continues decoding **bit-identically** to the uninterrupted run:
+//! cache state rides the exact codecs (`f32` verbatim, `f64`/`u64`/RNG
+//! state as 16-bit limbs), so the resumed softmax sees the same bits.
+//!
+//! [`FaultPlan`] is the matching chaos knob: a deterministic schedule of
+//! injected failures (panic at tick N, stall for a duration, snapshot
+//! write failures) the engine consults every tick. Plans are plain data
+//! — the same plan replays the same failure on every run, which is what
+//! makes the chaos integration tests assertable.
+
+use super::Request;
+use crate::io::Checkpoint;
+use crate::model::{ModelSpec, SequenceCaches};
+use anyhow::{bail, ensure, Result};
+use std::time::Duration;
+
+/// Snapshot wire-format version (bumped on layout changes).
+const SNAPSHOT_VERSION: u64 = 1;
+
+/// A deterministic schedule of injected faults, consulted by
+/// [`super::Engine::tick`]. Default = no faults. Tick numbers count the
+/// engine's own `tick()` calls from zero, so a plan replays identically
+/// on every run — chaos tests assert exact recovery, not probabilities.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// Panic (simulating a worker crash) on entering this tick.
+    pub panic_at_tick: Option<u64>,
+    /// Sleep for the duration on entering this tick (a hung worker —
+    /// trips the router's heartbeat watchdog when one is armed).
+    pub stall_at_tick: Option<(u64, Duration)>,
+    /// From this tick on, every snapshot write fails (skipped and
+    /// counted in `EngineStats::snapshot_failures`).
+    pub snapshot_fail_from_tick: Option<u64>,
+}
+
+impl FaultPlan {
+    /// True when the plan injects nothing (the default).
+    pub fn is_benign(&self) -> bool {
+        *self == FaultPlan::default()
+    }
+}
+
+/// One in-flight sequence, frozen mid-decode.
+///
+/// Boundary semantics: `generated` holds the tokens already emitted to
+/// the token sink at capture time; `next` is the pending token the next
+/// tick would emit at index `generated.len()`. A resume from a fresh
+/// snapshot therefore continues the stream with no duplicates and no
+/// gaps; a resume from a *stale* snapshot re-emits a suffix the
+/// streaming client deduplicates by token index (see
+/// `server::drain_stream`).
+#[derive(Debug, Clone)]
+pub struct SessionSnapshot {
+    /// The original request (replayed deadline and all).
+    pub req: Request,
+    /// Tokens already emitted at capture time.
+    pub generated: Vec<i32>,
+    /// Pending (not yet emitted) next token.
+    pub next: i32,
+    /// Absolute decode position of `next`.
+    pub pos: usize,
+    /// Combined tensor container: `session/*` metadata + the
+    /// `caches/*` tensors written by [`SequenceCaches::save_into`].
+    pub tensors: Checkpoint,
+}
+
+impl SessionSnapshot {
+    /// Freeze a sequence. `generated`/`next`/`pos` must reflect the
+    /// post-emission state of the current tick (see boundary semantics
+    /// above).
+    pub fn capture(
+        req: &Request,
+        generated: &[i32],
+        next: i32,
+        pos: usize,
+        caches: &SequenceCaches,
+    ) -> SessionSnapshot {
+        let mut ck = Checkpoint::new();
+        caches.save_into(&mut ck);
+        let deadline_nanos =
+            req.deadline.map(|d| d.as_nanos().min(u64::MAX as u128) as u64).unwrap_or(0);
+        ck.insert_u64s(
+            "session/meta",
+            &[
+                SNAPSHOT_VERSION,
+                req.id,
+                req.session_id.is_some() as u64,
+                req.session_id.unwrap_or(0),
+                req.max_new as u64,
+                req.budget as u64,
+                pos as u64,
+                next as u32 as u64,
+                req.deadline.is_some() as u64,
+                deadline_nanos,
+            ],
+        );
+        ck.insert("session/delta", vec![1], vec![req.delta]);
+        ck.insert("session/policy", vec![req.policy.len()], str_to_f32(&req.policy));
+        ck.insert("session/prompt", vec![req.prompt.len()], tokens_to_f32(&req.prompt));
+        ck.insert("session/generated", vec![generated.len()], tokens_to_f32(generated));
+        SessionSnapshot {
+            req: req.clone(),
+            generated: generated.to_vec(),
+            next,
+            pos,
+            tensors: ck,
+        }
+    }
+
+    /// Serialize to the checkpoint wire format (see `io::checkpoint`).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.tensors.to_bytes()
+    }
+
+    /// Parse a snapshot serialized by [`Self::to_bytes`].
+    pub fn from_bytes(bytes: &[u8]) -> Result<SessionSnapshot> {
+        let ck = Checkpoint::from_bytes(bytes)?;
+        let meta = ck.require_u64s("session/meta")?;
+        ensure!(meta.len() == 10, "session/meta: expected 10 entries, got {}", meta.len());
+        ensure!(
+            meta[0] == SNAPSHOT_VERSION,
+            "unsupported snapshot version {} (expected {SNAPSHOT_VERSION})",
+            meta[0]
+        );
+        let delta = ck.require("session/delta")?;
+        ensure!(delta.data.len() == 1, "session/delta: expected 1 entry");
+        let policy = f32_to_str("session/policy", &ck.require("session/policy")?.data)?;
+        let prompt = f32_to_tokens("session/prompt", &ck.require("session/prompt")?.data)?;
+        let generated = f32_to_tokens("session/generated", &ck.require("session/generated")?.data)?;
+        let req = Request {
+            id: meta[1],
+            session_id: (meta[2] != 0).then_some(meta[3]),
+            prompt,
+            max_new: meta[4] as usize,
+            policy,
+            budget: meta[5] as usize,
+            delta: delta.data[0],
+            deadline: (meta[8] != 0).then(|| Duration::from_nanos(meta[9])),
+        };
+        Ok(SessionSnapshot {
+            req,
+            generated,
+            next: meta[7] as u32 as i32,
+            pos: meta[6] as usize,
+            tensors: ck,
+        })
+    }
+
+    /// Rebuild the sequence's cache state against a model spec. The spec
+    /// must match the one the snapshot was captured under (every worker
+    /// hosts the same model) — shape mismatches are typed errors.
+    pub fn restore_caches(&self, spec: &ModelSpec) -> Result<SequenceCaches> {
+        SequenceCaches::restore(spec, &self.tensors)
+    }
+}
+
+fn tokens_to_f32(toks: &[i32]) -> Vec<f32> {
+    toks.iter().map(|&t| t as f32).collect()
+}
+
+fn f32_to_tokens(name: &str, data: &[f32]) -> Result<Vec<i32>> {
+    data.iter()
+        .map(|&x| {
+            if x.fract() != 0.0 || x.abs() > (1 << 24) as f32 {
+                bail!("{name}: {x} is not a token id");
+            }
+            Ok(x as i32)
+        })
+        .collect()
+}
+
+fn str_to_f32(s: &str) -> Vec<f32> {
+    s.bytes().map(|b| b as f32).collect()
+}
+
+fn f32_to_str(name: &str, data: &[f32]) -> Result<String> {
+    let bytes: Vec<u8> = data
+        .iter()
+        .map(|&x| {
+            if !(0.0..=255.0).contains(&x) || x.fract() != 0.0 {
+                bail!("{name}: {x} is not a byte");
+            }
+            Ok(x as u8)
+        })
+        .collect::<Result<_>>()?;
+    String::from_utf8(bytes).map_err(|_| anyhow::anyhow!("{name}: not utf-8"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::HostExecutor;
+
+    #[test]
+    fn snapshot_roundtrips_request_and_progress() {
+        let exec = HostExecutor::small(5);
+        let spec = exec.spec();
+        let req = Request {
+            id: 42,
+            session_id: Some(7),
+            prompt: vec![1, 2, 3],
+            max_new: 9,
+            policy: "subgen".into(),
+            budget: 16,
+            delta: 0.5,
+            deadline: Some(Duration::from_millis(1500)),
+        };
+        let mut caches = SequenceCaches::new(spec, &req.policy, req.budget, req.delta, 99).unwrap();
+        let dims = spec.n_layers * spec.n_heads * spec.d_head;
+        for i in 0..12 {
+            let x: Vec<f32> = (0..dims).map(|j| ((i * 31 + j) as f32 * 0.37).sin()).collect();
+            caches.update(&x, &x, &x);
+        }
+        let snap = SessionSnapshot::capture(&req, &[5, 6, 7], 8, 6, &caches);
+        let back = SessionSnapshot::from_bytes(&snap.to_bytes()).unwrap();
+        assert_eq!(back.req.id, 42);
+        assert_eq!(back.req.session_id, Some(7));
+        assert_eq!(back.req.prompt, vec![1, 2, 3]);
+        assert_eq!(back.req.max_new, 9);
+        assert_eq!(back.req.policy, "subgen");
+        assert_eq!(back.req.budget, 16);
+        assert_eq!(back.req.delta, 0.5);
+        assert_eq!(back.req.deadline, Some(Duration::from_millis(1500)));
+        assert_eq!(back.generated, vec![5, 6, 7]);
+        assert_eq!(back.next, 8);
+        assert_eq!(back.pos, 6);
+        // Cache state restores bit-identically (continuation equivalence
+        // is covered by engine + property tests).
+        let mut restored = back.restore_caches(spec).unwrap();
+        let mut original = caches;
+        let q: Vec<f32> = (0..dims).map(|j| (j as f32 * 0.11).cos()).collect();
+        let mut a = vec![0.0; dims];
+        let mut b = vec![0.0; dims];
+        original.attention_all_into(&q, &mut a).unwrap();
+        restored.attention_all_into(&q, &mut b).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a), bits(&b));
+    }
+
+    #[test]
+    fn corrupt_snapshot_is_a_typed_error_not_a_panic() {
+        assert!(SessionSnapshot::from_bytes(b"garbage").is_err());
+        let exec = HostExecutor::small(5);
+        let req = Request::exact(1, vec![1, 2], 4);
+        let caches =
+            SequenceCaches::new(exec.spec(), &req.policy, req.budget, req.delta, 1).unwrap();
+        let snap = SessionSnapshot::capture(&req, &[3], 4, 3, &caches);
+        let mut bytes = snap.to_bytes();
+        let n = bytes.len();
+        bytes.truncate(n - 5);
+        assert!(SessionSnapshot::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn fault_plan_default_is_benign() {
+        assert!(FaultPlan::default().is_benign());
+        let p = FaultPlan { panic_at_tick: Some(3), ..Default::default() };
+        assert!(!p.is_benign());
+    }
+}

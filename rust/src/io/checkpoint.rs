@@ -116,28 +116,102 @@ impl Checkpoint {
         Ok(ck)
     }
 
+    /// Serialize to the on-disk byte format (what [`Self::load`] /
+    /// [`Self::from_bytes`] parse). Used directly for in-memory
+    /// snapshots that never touch a file.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&VERSION.to_le_bytes());
+        out.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, t) in &self.tensors {
+            out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+            out.extend_from_slice(name.as_bytes());
+            out.extend_from_slice(&(t.dims.len() as u32).to_le_bytes());
+            for &d in &t.dims {
+                out.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &x in &t.data {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        out
+    }
+
     /// Write to a file.
     pub fn save(&self, path: &Path) -> Result<()> {
         let mut f = std::fs::File::create(path)
             .with_context(|| format!("creating checkpoint {}", path.display()))?;
-        f.write_all(MAGIC)?;
-        f.write_all(&VERSION.to_le_bytes())?;
-        f.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
-        for (name, t) in &self.tensors {
-            f.write_all(&(name.len() as u32).to_le_bytes())?;
-            f.write_all(name.as_bytes())?;
-            f.write_all(&(t.dims.len() as u32).to_le_bytes())?;
-            for &d in &t.dims {
-                f.write_all(&(d as u32).to_le_bytes())?;
-            }
-            // Bulk-convert for speed.
-            let mut raw = Vec::with_capacity(t.data.len() * 4);
-            for &x in &t.data {
-                raw.extend_from_slice(&x.to_le_bytes());
-            }
-            f.write_all(&raw)?;
-        }
+        f.write_all(&self.to_bytes())?;
         Ok(())
+    }
+
+    /// Store a slice of `u64` exactly as an `[n, 4]` tensor of 16-bit
+    /// limbs (f32 represents every integer below 2^24, so each limb is
+    /// exact). Lets non-weight state ride the same container as model
+    /// tensors without a second wire format.
+    pub fn insert_u64s(&mut self, name: &str, vals: &[u64]) {
+        let mut data = Vec::with_capacity(vals.len() * 4);
+        for &v in vals {
+            for limb in 0..4 {
+                data.push(((v >> (16 * limb)) & 0xFFFF) as f32);
+            }
+        }
+        self.insert(name, vec![vals.len(), 4], data);
+    }
+
+    /// Read back a tensor written by [`Self::insert_u64s`].
+    pub fn require_u64s(&self, name: &str) -> Result<Vec<u64>> {
+        let t = self.require(name)?;
+        if t.dims.len() != 2 || t.dims[1] != 4 {
+            bail!("{name}: expected [n, 4] limb tensor, got {:?}", t.dims);
+        }
+        t.data
+            .chunks_exact(4)
+            .map(|limbs| {
+                let mut v = 0u64;
+                for (i, &l) in limbs.iter().enumerate() {
+                    if !(0.0..=65535.0).contains(&l) || l.fract() != 0.0 {
+                        bail!("{name}: limb {l} is not a 16-bit integer");
+                    }
+                    v |= (l as u64) << (16 * i);
+                }
+                Ok(v)
+            })
+            .collect()
+    }
+
+    /// Store a slice of `f64` bit-exactly (via `to_bits` + u64 limbs).
+    pub fn insert_f64s(&mut self, name: &str, vals: &[f64]) {
+        let bits: Vec<u64> = vals.iter().map(|v| v.to_bits()).collect();
+        self.insert_u64s(name, &bits);
+    }
+
+    /// Read back a tensor written by [`Self::insert_f64s`].
+    pub fn require_f64s(&self, name: &str) -> Result<Vec<f64>> {
+        Ok(self.require_u64s(name)?.into_iter().map(f64::from_bits).collect())
+    }
+
+    /// Store one `u128` exactly (eight 16-bit limbs, little-endian).
+    pub fn insert_u128(&mut self, name: &str, v: u128) {
+        let data: Vec<f32> = (0..8).map(|limb| ((v >> (16 * limb)) & 0xFFFF) as f32).collect();
+        self.insert(name, vec![8], data);
+    }
+
+    /// Read back a value written by [`Self::insert_u128`].
+    pub fn require_u128(&self, name: &str) -> Result<u128> {
+        let t = self.require(name)?;
+        if t.data.len() != 8 {
+            bail!("{name}: expected 8 limbs, got {}", t.data.len());
+        }
+        let mut v = 0u128;
+        for (i, &l) in t.data.iter().enumerate() {
+            if !(0.0..=65535.0).contains(&l) || l.fract() != 0.0 {
+                bail!("{name}: limb {l} is not a 16-bit integer");
+            }
+            v |= (l as u128) << (16 * i);
+        }
+        Ok(v)
     }
 }
 
@@ -217,5 +291,44 @@ mod tests {
     fn insert_validates_shape() {
         let mut ck = Checkpoint::new();
         ck.insert("bad", vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn to_bytes_matches_save() {
+        let mut ck = Checkpoint::new();
+        ck.insert("w", vec![2, 2], vec![1.0, -2.0, 3.5, 0.0]);
+        let dir = std::env::temp_dir().join("subgen_ck_test3");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.ck");
+        ck.save(&path).unwrap();
+        assert_eq!(std::fs::read(&path).unwrap(), ck.to_bytes());
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.get("w").unwrap().data, ck.get("w").unwrap().data);
+    }
+
+    #[test]
+    fn limb_codecs_are_exact() {
+        let mut ck = Checkpoint::new();
+        let u64s = [0u64, 1, 0xFFFF, 0x1_0000, u64::MAX, 0xDEAD_BEEF_CAFE_F00D];
+        let f64s = [0.0f64, -0.0, 1.5, f64::MIN_POSITIVE, -1e308, std::f64::consts::PI];
+        ck.insert_u64s("u", &u64s);
+        ck.insert_f64s("f", &f64s);
+        ck.insert_u128("s", u128::MAX - 12345);
+        let back = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.require_u64s("u").unwrap(), u64s);
+        let f_back = back.require_f64s("f").unwrap();
+        for (a, b) in f_back.iter().zip(f64s.iter()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.require_u128("s").unwrap(), u128::MAX - 12345);
+    }
+
+    #[test]
+    fn limb_codec_rejects_non_integral() {
+        let mut ck = Checkpoint::new();
+        ck.insert("u", vec![1, 4], vec![0.5, 0.0, 0.0, 0.0]);
+        assert!(ck.require_u64s("u").is_err());
+        ck.insert("s", vec![8], vec![70000.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert!(ck.require_u128("s").is_err());
     }
 }

@@ -2,6 +2,7 @@
 //! and the correctness oracle for every other policy.
 
 use super::{CachePolicy, PackedCache};
+use crate::io::Checkpoint;
 use crate::tensor::Tensor;
 
 /// Stores every (k, v) pair; O(n·d) memory, the baseline SubGen beats.
@@ -62,6 +63,26 @@ impl CachePolicy for ExactCache {
 
     fn packed_slots(&self) -> usize {
         self.keys.rows()
+    }
+
+    fn save_state(&self, ck: &mut Checkpoint, prefix: &str) {
+        let dim = self.keys.cols();
+        let rows = self.keys.rows();
+        ck.insert(&format!("{prefix}/keys"), vec![rows, dim], self.keys.as_slice().into());
+        ck.insert(&format!("{prefix}/values"), vec![rows, dim], self.values.as_slice().into());
+    }
+
+    fn restore_state(&mut self, ck: &Checkpoint, prefix: &str) -> anyhow::Result<()> {
+        let dim = self.keys.cols();
+        let keys = ck.require(&format!("{prefix}/keys"))?;
+        let values = ck.require(&format!("{prefix}/values"))?;
+        anyhow::ensure!(
+            keys.dims.len() == 2 && keys.dims[1] == dim && values.dims == keys.dims,
+            "{prefix}: history shape mismatch (dim {dim})"
+        );
+        self.keys = Tensor::from_vec(keys.data.clone(), keys.dims[0], dim);
+        self.values = Tensor::from_vec(values.data.clone(), values.dims[0], dim);
+        Ok(())
     }
 }
 

@@ -9,6 +9,7 @@
 //! the original system.
 
 use super::{CachePolicy, PackedCache, SlidingCache};
+use crate::io::Checkpoint;
 use crate::tensor::dot;
 
 /// One retained heavy-hitter candidate.
@@ -122,6 +123,52 @@ impl CachePolicy for H2OCache {
 
     fn packed_slots(&self) -> usize {
         self.entries.len() + self.recent.retained()
+    }
+
+    fn save_state(&self, ck: &mut Checkpoint, prefix: &str) {
+        // Entry order matters (swap_remove shapes it), so entries are
+        // stored positionally; scores ride the exact f64 codec since
+        // future evictions compare them.
+        let dim = self.recent.dim();
+        let m = self.entries.len();
+        let mut keys = Vec::with_capacity(m * dim);
+        let mut values = Vec::with_capacity(m * dim);
+        let mut scores = Vec::with_capacity(m);
+        for e in &self.entries {
+            keys.extend_from_slice(&e.k);
+            values.extend_from_slice(&e.v);
+            scores.push(e.score);
+        }
+        ck.insert(&format!("{prefix}/hh_keys"), vec![m, dim], keys);
+        ck.insert(&format!("{prefix}/hh_values"), vec![m, dim], values);
+        ck.insert_f64s(&format!("{prefix}/hh_scores"), &scores);
+        ck.insert_u64s(&format!("{prefix}/n"), &[self.n]);
+        self.recent.save_state(ck, &format!("{prefix}/recent"));
+    }
+
+    fn restore_state(&mut self, ck: &Checkpoint, prefix: &str) -> anyhow::Result<()> {
+        let dim = self.recent.dim();
+        let keys = ck.require(&format!("{prefix}/hh_keys"))?;
+        let values = ck.require(&format!("{prefix}/hh_values"))?;
+        let scores = ck.require_f64s(&format!("{prefix}/hh_scores"))?;
+        let m = scores.len();
+        anyhow::ensure!(
+            keys.dims == [m, dim] && values.dims == [m, dim],
+            "{prefix}: heavy-hitter shape mismatch (m {m}, dim {dim})"
+        );
+        let budget = self.budget;
+        anyhow::ensure!(m <= budget, "{prefix}: {m} heavy hitters over budget {budget}");
+        self.entries = (0..m)
+            .map(|i| Entry {
+                k: keys.data[i * dim..(i + 1) * dim].to_vec(),
+                v: values.data[i * dim..(i + 1) * dim].to_vec(),
+                score: scores[i],
+            })
+            .collect();
+        let n = ck.require_u64s(&format!("{prefix}/n"))?;
+        anyhow::ensure!(n.len() == 1, "{prefix}/n: expected 1 entry");
+        self.n = n[0];
+        self.recent.restore_state(ck, &format!("{prefix}/recent"))
     }
 }
 

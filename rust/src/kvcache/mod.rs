@@ -35,6 +35,8 @@ pub use sink::SinkCache;
 pub use sliding::SlidingCache;
 pub use subgen_policy::{SubGenCache, SubGenCacheConfig};
 
+use crate::io::Checkpoint;
+
 /// Bytes per packed slot: K row + V row + w + u, all f32.
 pub fn bytes_per_slot(dim: usize) -> usize {
     (2 * dim + 2) * std::mem::size_of::<f32>()
@@ -96,6 +98,18 @@ pub trait CachePolicy: Send {
         self.pack(&mut buf);
         buf.attention(q)
     }
+
+    /// Serialize the policy's complete dynamic state under `prefix` —
+    /// everything `update` mutates, including any sampling-RNG state —
+    /// so a restored policy continues the token stream bit-for-bit.
+    /// Construction parameters (dim, budget, …) are NOT stored; the
+    /// restore side rebuilds the policy with identical parameters
+    /// first, then calls [`Self::restore_state`].
+    fn save_state(&self, ck: &mut Checkpoint, prefix: &str);
+
+    /// Restore state written by [`Self::save_state`] into a freshly
+    /// constructed policy with identical construction parameters.
+    fn restore_state(&mut self, ck: &Checkpoint, prefix: &str) -> anyhow::Result<()>;
 
     /// Host-side **batched** attention: `nq` queries (row-major flat)
     /// answered with one pack and one scoring sweep over the packed
@@ -242,6 +256,38 @@ mod tests {
             } else {
                 assert_eq!(bytes, 200 * bytes_per_slot(dim));
             }
+        }
+    }
+
+    /// Snapshot → restore → continue must be indistinguishable from an
+    /// uninterrupted run for every policy: same attention bits, same
+    /// lengths, same packed footprint.
+    #[test]
+    fn save_restore_continues_bit_identically_for_all_policies() {
+        let dim = 8;
+        let mut rng = Pcg64::seed_from_u64(17);
+        let qs = Tensor::randn(&mut rng, 150, dim, 0.4);
+        let ks = Tensor::randn(&mut rng, 150, dim, 0.4);
+        let vs = Tensor::randn(&mut rng, 150, dim, 1.0);
+        for name in POLICY_NAMES {
+            let mut live = build_policy(name, dim, 24, 0.5, 9).unwrap();
+            for i in 0..100 {
+                live.update(qs.row(i), ks.row(i), vs.row(i));
+            }
+            let mut ck = Checkpoint::new();
+            live.save_state(&mut ck, "p");
+            let ck = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+            let mut restored = build_policy(name, dim, 24, 0.5, 9).unwrap();
+            restored.restore_state(&ck, "p").unwrap();
+            assert_eq!(restored.len(), live.len(), "{name}");
+            for i in 100..150 {
+                live.update(qs.row(i), ks.row(i), vs.row(i));
+                restored.update(qs.row(i), ks.row(i), vs.row(i));
+            }
+            let q = qs.row(149);
+            assert_eq!(live.attention(q), restored.attention(q), "{name}");
+            assert_eq!(live.packed_slots(), restored.packed_slots(), "{name}");
+            assert_eq!(live.memory_bytes(dim), restored.memory_bytes(dim), "{name}");
         }
     }
 

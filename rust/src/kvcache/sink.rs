@@ -3,6 +3,7 @@
 //! sliding window of the most recent tokens.
 
 use super::{CachePolicy, PackedCache, SlidingCache};
+use crate::io::Checkpoint;
 
 /// First-`n_sink` + recent-`window` eviction policy.
 #[derive(Debug, Clone)]
@@ -70,6 +71,40 @@ impl CachePolicy for SinkCache {
 
     fn packed_slots(&self) -> usize {
         self.stored_sinks + self.recent.retained()
+    }
+
+    fn save_state(&self, ck: &mut Checkpoint, prefix: &str) {
+        ck.insert(
+            &format!("{prefix}/sink_keys"),
+            vec![self.n_sink, self.dim],
+            self.sink_keys.clone(),
+        );
+        ck.insert(
+            &format!("{prefix}/sink_values"),
+            vec![self.n_sink, self.dim],
+            self.sink_values.clone(),
+        );
+        ck.insert_u64s(&format!("{prefix}/meta"), &[self.stored_sinks as u64, self.n]);
+        self.recent.save_state(ck, &format!("{prefix}/recent"));
+    }
+
+    fn restore_state(&mut self, ck: &Checkpoint, prefix: &str) -> anyhow::Result<()> {
+        let keys = ck.require(&format!("{prefix}/sink_keys"))?;
+        let values = ck.require(&format!("{prefix}/sink_values"))?;
+        anyhow::ensure!(
+            keys.dims == [self.n_sink, self.dim] && values.dims == [self.n_sink, self.dim],
+            "{prefix}: sink shape mismatch (n_sink {}, dim {})",
+            self.n_sink,
+            self.dim
+        );
+        self.sink_keys.copy_from_slice(&keys.data);
+        self.sink_values.copy_from_slice(&values.data);
+        let meta = ck.require_u64s(&format!("{prefix}/meta"))?;
+        anyhow::ensure!(meta.len() == 2, "{prefix}/meta: expected 2 entries");
+        anyhow::ensure!(meta[0] as usize <= self.n_sink, "{prefix}: stored_sinks over capacity");
+        self.stored_sinks = meta[0] as usize;
+        self.n = meta[1];
+        self.recent.restore_state(ck, &format!("{prefix}/recent"))
     }
 }
 

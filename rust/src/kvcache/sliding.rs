@@ -3,6 +3,7 @@
 //! by Sink, H2O and the practical SubGen variant.
 
 use super::{CachePolicy, PackedCache};
+use crate::io::Checkpoint;
 
 /// Ring buffer of the last `window` (k, v) pairs.
 #[derive(Debug, Clone)]
@@ -31,6 +32,11 @@ impl SlidingCache {
     /// Configured window capacity.
     pub fn window(&self) -> usize {
         self.window
+    }
+
+    /// Embedding dimension.
+    pub fn dim(&self) -> usize {
+        self.dim
     }
 
     /// Key of the i-th *oldest* retained token.
@@ -83,6 +89,32 @@ impl CachePolicy for SlidingCache {
 
     fn packed_slots(&self) -> usize {
         self.retained()
+    }
+
+    fn save_state(&self, ck: &mut Checkpoint, prefix: &str) {
+        // The raw ring buffers go in as-is; together with `n` (which
+        // fixes the write cursor and the oldest-token position) they
+        // reproduce the ring exactly.
+        ck.insert(&format!("{prefix}/keys"), vec![self.window, self.dim], self.keys.clone());
+        ck.insert(&format!("{prefix}/values"), vec![self.window, self.dim], self.values.clone());
+        ck.insert_u64s(&format!("{prefix}/n"), &[self.n]);
+    }
+
+    fn restore_state(&mut self, ck: &Checkpoint, prefix: &str) -> anyhow::Result<()> {
+        let keys = ck.require(&format!("{prefix}/keys"))?;
+        let values = ck.require(&format!("{prefix}/values"))?;
+        anyhow::ensure!(
+            keys.dims == [self.window, self.dim] && values.dims == [self.window, self.dim],
+            "{prefix}: ring shape mismatch (window {}, dim {})",
+            self.window,
+            self.dim
+        );
+        self.keys.copy_from_slice(&keys.data);
+        self.values.copy_from_slice(&values.data);
+        let n = ck.require_u64s(&format!("{prefix}/n"))?;
+        anyhow::ensure!(n.len() == 1, "{prefix}/n: expected 1 entry");
+        self.n = n[0];
+        Ok(())
     }
 }
 

@@ -11,6 +11,7 @@
 //! * cluster samples: w = 0,           u = n_i/t
 
 use super::{CachePolicy, PackedCache, SlidingCache};
+use crate::io::Checkpoint;
 use crate::subgen::{SubGenAttention, SubGenConfig};
 use std::cell::RefCell;
 
@@ -166,6 +167,28 @@ impl CachePolicy for SubGenCache {
         let mut out = vec![0.0f32; qs.len()];
         self.attention_batch_into(qs, nq, &mut out);
         out
+    }
+
+    fn save_state(&self, ck: &mut Checkpoint, prefix: &str) {
+        ck.insert_u64s(&format!("{prefix}/n"), &[self.n]);
+        if let Some(window) = &self.recent {
+            window.save_state(ck, &format!("{prefix}/recent"));
+        }
+        self.sketch.save_state(ck, &format!("{prefix}/sketch"));
+    }
+
+    fn restore_state(&mut self, ck: &Checkpoint, prefix: &str) -> anyhow::Result<()> {
+        let n = ck.require_u64s(&format!("{prefix}/n"))?;
+        anyhow::ensure!(n.len() == 1, "{prefix}/n: expected 1 entry");
+        self.n = n[0];
+        if let Some(window) = &mut self.recent {
+            window.restore_state(ck, &format!("{prefix}/recent"))?;
+        }
+        // The sketch config re-derives from this cache's own config (the
+        // same clamping `new` applied), so only dynamic state is stored.
+        self.sketch =
+            SubGenAttention::restore_state(*self.sketch.config(), ck, &format!("{prefix}/sketch"))?;
+        Ok(())
     }
 }
 

@@ -19,6 +19,7 @@
 
 use anyhow::Result;
 use std::path::{Path, PathBuf};
+use std::time::Duration;
 use subgen::cli::Args;
 use subgen::coordinator::{Engine, EngineConfig, HostExecutor, Request, StepExecutor};
 use subgen::io::Checkpoint;
@@ -26,7 +27,7 @@ use subgen::kvcache::POLICY_NAMES;
 use subgen::model::{Generator, ModelSpec};
 use subgen::rng::Pcg64;
 use subgen::runtime::Runtime;
-use subgen::server::{drain_stream, MetricsServer, Router};
+use subgen::server::{drain_stream, MetricsServer, Router, SubmitError};
 use subgen::train::{accuracy_json, evaluate_policies, EvalConfig, TrainConfig, Trainer};
 use subgen::workload::{decode, lines_for_seq_len_clamped, RetrievalSampler};
 
@@ -61,6 +62,8 @@ fn main() -> Result<()> {
         .describe("sessions", Some("4"), "distinct sticky session ids, 0 = none (serve)")
         .describe("stream", None, "per-token streaming responses (serve)")
         .describe("metrics-port", None, "bind 127.0.0.1:PORT for Prometheus scrapes (serve)")
+        .describe("snapshot-every", Some("0"), "snapshot cadence in ticks, 0 = off (serve)")
+        .describe("deadline-ms", Some("0"), "per-request deadline in ms, 0 = none (serve)")
         .describe("seed", Some("0"), "rng seed");
     args.exit_on_help();
 
@@ -152,6 +155,7 @@ fn generate(args: &Args) -> Result<()> {
             policy: policy.clone(),
             budget,
             delta,
+            deadline: None,
         });
         engine.run_to_completion()?;
         let resp = engine.take_responses().pop().expect("one response");
@@ -303,6 +307,9 @@ fn serve_cluster(args: &Args) -> Result<()> {
     let budget = args.usize_or("budget", 128);
     let delta = args.f32_or("delta", 4.0);
     let seed = args.u64_or("seed", 0);
+    let snapshot_every = args.usize_or("snapshot-every", 0);
+    let deadline_ms = args.u64_or("deadline-ms", 0);
+    let deadline = (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms));
 
     // Every worker hosts the *same* model (same seed or the same
     // trained checkpoint): responses are identical no matter which
@@ -318,7 +325,7 @@ fn serve_cluster(args: &Args) -> Result<()> {
         }
         None => None,
     };
-    let cfg = EngineConfig { max_active: 4, ..Default::default() };
+    let cfg = EngineConfig { max_active: 4, snapshot_every, ..Default::default() };
     let router = Router::spawn(workers, cfg, move |_w| match &ck {
         Some(ck) => HostExecutor::from_checkpoint(ck).expect("checkpoint validated above"),
         None => HostExecutor::retrieval(model_seed),
@@ -347,10 +354,11 @@ fn serve_cluster(args: &Args) -> Result<()> {
             policy: policy.clone(),
             budget,
             delta,
+            deadline,
         });
     }
 
-    let (mut completed, mut rejected, mut tokens) = (0usize, 0usize, 0u64);
+    let (mut completed, mut rejected, mut expired, mut tokens) = (0usize, 0usize, 0usize, 0u64);
     if stream {
         // Submit everything, then drain the token streams.
         let rxs: Vec<_> = reqs.into_iter().map(|r| router.submit_streaming(r)).collect();
@@ -362,10 +370,13 @@ fn serve_cluster(args: &Args) -> Result<()> {
                     tokens += streamed.len() as u64;
                     println!("request id={id} tokens={} (streamed)", streamed.len());
                 }
+                Err(SubmitError::DeadlineExceeded) => expired += 1,
                 Err(_) => rejected += 1,
             }
         }
-        println!("streamed requests={completed} tokens={tokens} rejected={rejected}");
+        println!(
+            "streamed requests={completed} tokens={tokens} rejected={rejected} expired={expired}"
+        );
     } else {
         let rxs: Vec<_> = reqs.into_iter().map(|r| router.submit(r)).collect();
         for rx in rxs {
@@ -374,10 +385,13 @@ fn serve_cluster(args: &Args) -> Result<()> {
                     completed += 1;
                     tokens += resp.tokens.len() as u64;
                 }
+                Err(SubmitError::DeadlineExceeded) => expired += 1,
                 Err(_) => rejected += 1,
             }
         }
-        println!("completed requests={completed} tokens={tokens} rejected={rejected}");
+        println!(
+            "completed requests={completed} tokens={tokens} rejected={rejected} expired={expired}"
+        );
     }
 
     let snap = router.shutdown()?;
@@ -395,9 +409,17 @@ fn serve_cluster(args: &Args) -> Result<()> {
     }
     let lat = &snap.latency;
     println!(
-        "cluster aggregate tokens_per_sec={:.1} completed={} rejected={} p50={:?} p95={:?} \
-         p99={:?}",
-        snap.tokens_per_sec, snap.completed, snap.rejected, lat.p50, lat.p95, lat.p99
+        "cluster aggregate tokens_per_sec={:.1} completed={} rejected={} deadline_exceeded={} \
+         restarts={} snapshots={} p50={:?} p95={:?} p99={:?}",
+        snap.tokens_per_sec,
+        snap.completed,
+        snap.rejected,
+        snap.deadline_exceeded,
+        snap.restarts,
+        snap.snapshots,
+        lat.p50,
+        lat.p95,
+        lat.p99
     );
     Ok(())
 }

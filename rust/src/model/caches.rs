@@ -2,7 +2,8 @@
 //! buffer assembly in the [L, H, C, dh] layout the decode executables
 //! expect.
 
-use crate::kvcache::{build_policy, CachePolicy, PackedCache};
+use crate::io::Checkpoint;
+use crate::kvcache::{build_policy, CachePolicy, PackedCache, POLICY_NAMES};
 use crate::model::ModelSpec;
 use anyhow::Result;
 
@@ -12,6 +13,11 @@ pub struct SequenceCaches {
     n_layers: usize,
     n_heads: usize,
     d_head: usize,
+    /// Construction parameters, recorded so a snapshot can rebuild the
+    /// same policies before restoring their dynamic state.
+    budget: usize,
+    delta: f32,
+    seed: u64,
     /// Reusable per-(l,h) packing buffer.
     scratch: PackedCache,
     /// Kernel scratch for the batched host-attention probe.
@@ -107,11 +113,80 @@ impl SequenceCaches {
             n_layers: spec.n_layers,
             n_heads: spec.n_heads,
             d_head: spec.d_head,
+            budget,
+            delta,
+            seed,
             scratch: PackedCache::new(spec.d_head, cap),
             score_scratch: Vec::new(),
             zacc_scratch: Vec::new(),
             len: 0,
         })
+    }
+
+    /// Serialize the whole per-sequence cache state into `ck` under
+    /// `caches/…`: one meta tensor (policy, budget, seed, shape, length
+    /// — the PR-5 meta-tensor scheme) plus every (layer, head) policy's
+    /// dynamic state. [`Self::restore`] rebuilds a sequence that
+    /// continues decoding bit-for-bit.
+    pub fn save_into(&self, ck: &mut Checkpoint) {
+        let idx = POLICY_NAMES
+            .iter()
+            .position(|&n| n == self.policy_name())
+            .expect("policy name always from POLICY_NAMES") as u64;
+        ck.insert_u64s(
+            "caches/meta",
+            &[
+                idx,
+                self.budget as u64,
+                self.len as u64,
+                self.n_layers as u64,
+                self.n_heads as u64,
+                self.d_head as u64,
+                self.seed,
+            ],
+        );
+        ck.insert("caches/delta", vec![1], vec![self.delta]);
+        for l in 0..self.n_layers {
+            for h in 0..self.n_heads {
+                self.policies[l * self.n_heads + h].save_state(ck, &format!("caches/l{l}/h{h}"));
+            }
+        }
+    }
+
+    /// Rebuild a sequence cache saved by [`Self::save_into`]. The
+    /// snapshot must have been taken under the same `spec` (shape is
+    /// cross-checked against the meta tensor).
+    pub fn restore(spec: &ModelSpec, ck: &Checkpoint) -> Result<SequenceCaches> {
+        let meta = ck.require_u64s("caches/meta")?;
+        anyhow::ensure!(meta.len() == 7, "caches/meta: expected 7 entries, got {}", meta.len());
+        let policy = POLICY_NAMES
+            .get(meta[0] as usize)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("caches/meta: bad policy index {}", meta[0]))?;
+        anyhow::ensure!(
+            meta[3] as usize == spec.n_layers
+                && meta[4] as usize == spec.n_heads
+                && meta[5] as usize == spec.d_head,
+            "snapshot shape {}x{}x{} does not match spec {}x{}x{}",
+            meta[3],
+            meta[4],
+            meta[5],
+            spec.n_layers,
+            spec.n_heads,
+            spec.d_head
+        );
+        let delta = ck.require("caches/delta")?;
+        anyhow::ensure!(delta.data.len() == 1, "caches/delta: expected 1 entry");
+        let mut caches =
+            SequenceCaches::new(spec, policy, meta[1] as usize, delta.data[0], meta[6])?;
+        caches.len = meta[2] as usize;
+        for l in 0..caches.n_layers {
+            for h in 0..caches.n_heads {
+                caches.policies[l * caches.n_heads + h]
+                    .restore_state(ck, &format!("caches/l{l}/h{h}"))?;
+            }
+        }
+        Ok(caches)
     }
 
     /// Feed one step's per-layer-head q/k/v (each `[L, H, dh]` flat,
@@ -408,6 +483,42 @@ cache_variants = "64,32"
                     assert_eq!(&out[i * dh..(i + 1) * dh], &want[..], "{policy} l={l} h={h}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrip_restores_equivalent_caches() {
+        let spec = spec();
+        let lh_dh = spec.n_layers * spec.n_heads * spec.d_head;
+        for policy in crate::kvcache::POLICY_NAMES {
+            let mut rng = Pcg64::seed_from_u64(13);
+            let mut live = SequenceCaches::new(&spec, policy, 12, 0.5, 5).unwrap();
+            for _ in 0..20 {
+                let q: Vec<f32> = (0..lh_dh).map(|_| rng.gaussian32(0.0, 0.6)).collect();
+                let k: Vec<f32> = (0..lh_dh).map(|_| rng.gaussian32(0.0, 0.6)).collect();
+                let v: Vec<f32> = (0..lh_dh).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+                live.update(&q, &k, &v);
+            }
+            let mut ck = Checkpoint::new();
+            live.save_into(&mut ck);
+            let ck = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+            let mut restored = SequenceCaches::restore(&spec, &ck).unwrap();
+            assert_eq!(restored.len(), live.len(), "{policy}");
+            assert_eq!(restored.policy_name(), live.policy_name());
+            for _ in 0..10 {
+                let q: Vec<f32> = (0..lh_dh).map(|_| rng.gaussian32(0.0, 0.6)).collect();
+                let k: Vec<f32> = (0..lh_dh).map(|_| rng.gaussian32(0.0, 0.6)).collect();
+                let v: Vec<f32> = (0..lh_dh).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+                live.update(&q, &k, &v);
+                restored.update(&q, &k, &v);
+            }
+            let q: Vec<f32> = (0..lh_dh).map(|_| rng.gaussian32(0.0, 0.5)).collect();
+            let (mut a, mut b) = (vec![0.0f32; lh_dh], vec![0.0f32; lh_dh]);
+            live.attention_all_into(&q, &mut a).unwrap();
+            restored.attention_all_into(&q, &mut b).unwrap();
+            assert_eq!(a, b, "{policy}");
+            assert_eq!(live.max_slots(), restored.max_slots(), "{policy}");
+            assert_eq!(live.memory_bytes(), restored.memory_bytes(), "{policy}");
         }
     }
 

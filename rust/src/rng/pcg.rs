@@ -37,6 +37,19 @@ impl Pcg64 {
         Self::new((a << 64) | b, (c << 64) | d)
     }
 
+    /// Raw `(state, inc)` pair for exact serialization. Restore with
+    /// [`Self::from_state_parts`] — NOT [`Self::new`], whose seeding
+    /// mix steps would land on a different point of the stream.
+    pub fn state_parts(&self) -> (u128, u128) {
+        (self.state, self.inc)
+    }
+
+    /// Rebuild from a [`Self::state_parts`] capture; the restored
+    /// generator continues the exact output stream of the original.
+    pub fn from_state_parts(state: u128, inc: u128) -> Self {
+        Self { state, inc }
+    }
+
     /// Derive a child RNG for a named subsystem: deterministic but
     /// decorrelated from the parent stream. Used to give each layer /
     /// head / policy its own stream from one experiment seed.
@@ -78,6 +91,19 @@ mod tests {
         let mut c1 = parent.fork(0);
         let mut c2 = parent.fork(0); // same tag, later parent state -> different
         assert_ne!(c1.next_u64(), c2.next_u64());
+    }
+
+    #[test]
+    fn state_parts_restore_continues_stream() {
+        let mut r = Pcg64::seed_from_u64(42);
+        for _ in 0..17 {
+            r.next_u64();
+        }
+        let (state, inc) = r.state_parts();
+        let mut restored = Pcg64::from_state_parts(state, inc);
+        for _ in 0..64 {
+            assert_eq!(restored.next_u64(), r.next_u64());
+        }
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Sharded multi-worker serving runtime: a [`Router`] in front of `W`
-//! worker threads, each running the single-threaded [`super::serve`]
-//! loop over its own executor instance.
+//! worker threads, each running the single-threaded serve loop over its
+//! own executor instance.
 //!
 //! Executors are not `Send` (the PJRT runtime is thread-bound), so the
 //! router never moves one across threads: it ships an
@@ -11,6 +11,29 @@
 //! `Request::session_id` always hashes to the same worker, so
 //! multi-turn traffic lands on the engine holding its state.
 //!
+//! The router is also a supervisor. Every worker runs under
+//! [`super::serve_supervised`] with per-incarnation [`ServeHooks`]
+//! (heartbeat, fence, snapshot + settled stores), and a dedicated
+//! supervisor thread polls for two failure signals: a dead thread
+//! (panic — injected or real — detected through its join handle) and a
+//! frozen heartbeat past [`RouterConfig::hang_timeout`] (a hung tick).
+//! Either way the old incarnation is fenced off, a replacement is
+//! spawned from the same factory reusing the same `Arc<EngineStats>`
+//! (so counters and histograms continue), and the sessions that were in
+//! flight on the dead incarnation are re-admitted: from their last
+//! [`crate::coordinator::SessionSnapshot`] when one exists (decode
+//! continues bit-identically; streaming clients deduplicate any
+//! replayed suffix by token index), else by re-dispatching the original
+//! request. Callers never observe the failure as a hang — a session
+//! that cannot be recovered surfaces a typed [`SubmitError`] because
+//! its reply channel closes.
+//!
+//! Overload protection is layered in front: past
+//! [`RouterConfig::shed_watermark`] aggregate outstanding work, new
+//! submissions are shed with [`SubmitError::Overloaded`] before they
+//! touch a worker. Transient dispatch failures (a worker mid-restart)
+//! are retried with bounded, deterministically jittered backoff.
+//!
 //! Observability is lock-free: each worker's engine records into an
 //! `Arc<EngineStats>` (atomic counters/histograms) that the router and
 //! the Prometheus exporter ([`super::metrics_export`]) read live —
@@ -19,23 +42,36 @@
 //! the threads, and returns the final merged [`ClusterSnapshot`].
 
 use super::{
-    channel, serve_with_stats, ServerHandle, ServerReply, StreamEvent, SubmitError, SubmitTarget,
+    channel, serve_supervised, Msg, Responder, ResumeMsg, ServeHooks, ServerHandle, ServerReply,
+    StreamEvent, SubmitError, SubmitTarget,
 };
-use crate::coordinator::{EngineConfig, EngineStats, Request, Response, StepExecutor};
+use crate::coordinator::{EngineConfig, EngineStats, FaultPlan, Request, Response, StepExecutor};
 use crate::metrics::HistogramSnapshot;
 use crate::rng::SplitMix64;
 use anyhow::Result;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::mpsc::Receiver;
-use std::sync::{Arc, Mutex};
+use std::collections::HashMap;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// Per-worker executor factory: called once on each worker thread with
 /// the worker index, so non-`Send` executors are built where they run.
+/// Called again (same index) when the supervisor respawns a worker.
 pub trait ExecutorFactory<E>: Fn(usize) -> E + Send + Sync {}
 
 impl<E, F: Fn(usize) -> E + Send + Sync> ExecutorFactory<E> for F {}
+
+/// Lock a mutex, recovering from poisoning. A panicking thread (e.g. a
+/// fault-injected worker crash, or a `Balancer::pick` that panics) must
+/// not take the whole router down with it: every critical section here
+/// leaves the guarded state consistent before any call that can panic,
+/// so the data under a poisoned lock is still valid.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Pluggable dispatch policy for session-less requests. The router
 /// calls [`Balancer::pick`] with each worker's outstanding request
@@ -94,11 +130,61 @@ impl Balancer for RoundRobin {
     }
 }
 
+/// Supervision and admission-control knobs for [`Router::spawn_with`].
+/// [`Router::spawn`] uses the default: supervision on, restarts capped
+/// at 3 per worker, no hang watchdog, no shedding, no injected faults.
+#[derive(Debug, Clone)]
+pub struct RouterConfig {
+    /// Automatic restarts allowed per worker slot before the supervisor
+    /// gives up on it (its sessions then surface `EngineGone`).
+    pub max_restarts: u64,
+    /// Declare a worker hung (and restart it) when its loop heartbeat
+    /// has been frozen this long. `None` disables the watchdog. The
+    /// serve loop heartbeats on every iteration including idle waits,
+    /// so only a genuinely stuck tick freezes it — size the timeout
+    /// above the slowest legitimate tick (prefill included).
+    pub hang_timeout: Option<Duration>,
+    /// Supervisor poll period (failure-detection latency floor).
+    pub poll_every: Duration,
+    /// Bounded retry budget for transient dispatch failures (a worker
+    /// mid-restart). At least 1; the final failure is `EngineGone`.
+    pub retry_attempts: u32,
+    /// Base backoff between dispatch retries; attempt `k` waits
+    /// `base * 2^k` plus a deterministic per-(request, attempt) jitter
+    /// of up to `base / 2`.
+    pub retry_base: Duration,
+    /// Shed new submissions with [`SubmitError::Overloaded`] when the
+    /// aggregate outstanding request count is at or past this
+    /// watermark. `None` disables shedding.
+    pub shed_watermark: Option<u64>,
+    /// Deterministic fault injection: `(worker index, plan)` applied to
+    /// that worker's *first* incarnation only — respawned incarnations
+    /// always run a benign plan, so an injected crash fires once
+    /// instead of crash-looping.
+    pub fault_plans: Vec<(usize, FaultPlan)>,
+}
+
+impl Default for RouterConfig {
+    fn default() -> Self {
+        Self {
+            max_restarts: 3,
+            hang_timeout: None,
+            poll_every: Duration::from_millis(10),
+            retry_attempts: 3,
+            retry_base: Duration::from_millis(5),
+            shed_watermark: None,
+            fault_plans: Vec::new(),
+        }
+    }
+}
+
 /// One worker's shared observability state.
 struct WorkerMetrics {
     stats: Arc<EngineStats>,
     /// Requests the router has handed to this worker's channel.
     dispatched: AtomicU64,
+    /// Times the supervisor replaced this worker after a death/hang.
+    restarts: AtomicU64,
 }
 
 /// Live, lock-free view of every worker's counters. `Send + Sync`:
@@ -107,6 +193,10 @@ struct WorkerMetrics {
 pub struct ClusterMetrics {
     workers: Vec<WorkerMetrics>,
     started: Instant,
+    /// Submissions shed at the watermark (router-level, pre-dispatch).
+    shed: AtomicU64,
+    /// Sessions re-admitted after a worker death/hang.
+    recovered_sessions: AtomicU64,
 }
 
 impl ClusterMetrics {
@@ -115,7 +205,8 @@ impl ClusterMetrics {
         self.workers.len()
     }
 
-    /// One worker's engine stats (live).
+    /// One worker's engine stats (live). Restarted incarnations record
+    /// into the same stats, so counters continue across a recovery.
     pub fn worker_stats(&self, w: usize) -> &Arc<EngineStats> {
         &self.workers[w].stats
     }
@@ -124,8 +215,30 @@ impl ClusterMetrics {
     /// been produced yet (the balancing signal).
     pub fn outstanding(&self, w: usize) -> u64 {
         let m = &self.workers[w];
-        let settled = m.stats.completed.get() + m.stats.rejected.get();
+        let settled =
+            m.stats.completed.get() + m.stats.rejected.get() + m.stats.deadline_exceeded.get();
         m.dispatched.load(Ordering::Relaxed).saturating_sub(settled)
+    }
+
+    /// Times worker `w` was restarted by the supervisor.
+    pub fn restarts(&self, w: usize) -> u64 {
+        self.workers[w].restarts.load(Ordering::Relaxed)
+    }
+
+    /// Σ restarts across workers.
+    pub fn total_restarts(&self) -> u64 {
+        self.workers.iter().map(|m| m.restarts.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Submissions shed at the overload watermark.
+    pub fn shed(&self) -> u64 {
+        self.shed.load(Ordering::Relaxed)
+    }
+
+    /// Sessions re-admitted (snapshot resume or re-dispatch) after a
+    /// worker death/hang.
+    pub fn recovered_sessions(&self) -> u64 {
+        self.recovered_sessions.load(Ordering::Relaxed)
     }
 
     /// Point-in-time aggregate across all workers: per-worker stats plus
@@ -136,6 +249,7 @@ impl ClusterMetrics {
         let merged = EngineStats::default();
         let mut workers = Vec::with_capacity(self.workers.len());
         let mut dispatched = 0u64;
+        let mut restarts = 0u64;
         for (i, m) in self.workers.iter().enumerate() {
             let s = &m.stats;
             merged.merge_from(s);
@@ -150,10 +264,15 @@ impl ClusterMetrics {
                 outstanding: self.outstanding(i),
                 batched_calls: s.batched_calls.get(),
                 batched_sequences: s.batched_sequences.get(),
+                restarts: m.restarts.load(Ordering::Relaxed),
+                deadline_exceeded: s.deadline_exceeded.get(),
+                snapshots: s.snapshots.get(),
+                snapshot_failures: s.snapshot_failures.get(),
                 latency: s.latency.snapshot(),
                 tick_latency: s.tick_latency.snapshot(),
             };
             dispatched += stat.dispatched;
+            restarts += stat.restarts;
             workers.push(stat);
         }
         let uptime = self.started.elapsed();
@@ -167,6 +286,12 @@ impl ClusterMetrics {
             active: merged.active.get(),
             batched_calls: merged.batched_calls.get(),
             batched_sequences: merged.batched_sequences.get(),
+            restarts,
+            recovered_sessions: self.recovered_sessions.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            deadline_exceeded: merged.deadline_exceeded.get(),
+            snapshots: merged.snapshots.get(),
+            snapshot_failures: merged.snapshot_failures.get(),
             latency: merged.latency.snapshot(),
             tick_latency: merged.tick_latency.snapshot(),
             tokens_per_sec: merged.tokens.get() as f64 / uptime.as_secs_f64().max(1e-9),
@@ -192,7 +317,7 @@ pub struct WorkerStat {
     pub queued: u64,
     /// Sequences actively decoding (gauge).
     pub active: u64,
-    /// Dispatched − completed − rejected.
+    /// Dispatched − completed − rejected − expired.
     pub outstanding: u64,
     /// Batched decode calls dispatched by this worker's engine.
     pub batched_calls: u64,
@@ -201,6 +326,14 @@ pub struct WorkerStat {
     /// executors with a native `decode_batch` (see
     /// [`crate::coordinator::EngineStats::batched_sequences`]).
     pub batched_sequences: u64,
+    /// Times the supervisor restarted this worker.
+    pub restarts: u64,
+    /// Requests dropped past their deadline.
+    pub deadline_exceeded: u64,
+    /// Session snapshots published for recovery.
+    pub snapshots: u64,
+    /// Snapshot writes skipped by injected failures.
+    pub snapshot_failures: u64,
     /// End-to-end request latency.
     pub latency: HistogramSnapshot,
     /// Per-decode-tick latency.
@@ -244,6 +377,18 @@ pub struct ClusterSnapshot {
     pub batched_calls: u64,
     /// Σ sequences decoded through batched calls.
     pub batched_sequences: u64,
+    /// Σ supervisor restarts across workers.
+    pub restarts: u64,
+    /// Sessions re-admitted after worker deaths/hangs.
+    pub recovered_sessions: u64,
+    /// Submissions shed at the overload watermark.
+    pub shed: u64,
+    /// Σ requests dropped past their deadline.
+    pub deadline_exceeded: u64,
+    /// Σ session snapshots published.
+    pub snapshots: u64,
+    /// Σ snapshot writes skipped by injected failures.
+    pub snapshot_failures: u64,
     /// Merged end-to-end latency distribution.
     pub latency: HistogramSnapshot,
     /// Merged per-tick latency distribution.
@@ -259,13 +404,15 @@ impl ClusterSnapshot {
     /// single-engine serving paths (e.g. the non-`Send` PJRT executor)
     /// that want to print the same report as a router. `dispatched` is
     /// the front-end's own count of requests handed to the engine.
+    /// Router-level counters (restarts, recoveries, shedding) are zero:
+    /// there is no supervisor on this path.
     pub fn from_engine_stats(
         stats: &EngineStats,
         dispatched: u64,
         tokens_per_sec: f64,
         uptime: Duration,
     ) -> ClusterSnapshot {
-        let settled = stats.completed.get() + stats.rejected.get();
+        let settled = stats.completed.get() + stats.rejected.get() + stats.deadline_exceeded.get();
         let stat = WorkerStat {
             worker: 0,
             dispatched,
@@ -277,6 +424,10 @@ impl ClusterSnapshot {
             outstanding: dispatched.saturating_sub(settled),
             batched_calls: stats.batched_calls.get(),
             batched_sequences: stats.batched_sequences.get(),
+            restarts: 0,
+            deadline_exceeded: stats.deadline_exceeded.get(),
+            snapshots: stats.snapshots.get(),
+            snapshot_failures: stats.snapshot_failures.get(),
             latency: stats.latency.snapshot(),
             tick_latency: stats.tick_latency.snapshot(),
         };
@@ -289,8 +440,14 @@ impl ClusterSnapshot {
             active: stat.active,
             batched_calls: stat.batched_calls,
             batched_sequences: stat.batched_sequences,
-            latency: stat.latency,
-            tick_latency: stat.tick_latency,
+            restarts: 0,
+            recovered_sessions: 0,
+            shed: 0,
+            deadline_exceeded: stat.deadline_exceeded,
+            snapshots: stat.snapshots,
+            snapshot_failures: stat.snapshot_failures,
+            latency: stat.latency.clone(),
+            tick_latency: stat.tick_latency.clone(),
             workers: vec![stat],
             tokens_per_sec,
             uptime,
@@ -298,67 +455,187 @@ impl ClusterSnapshot {
     }
 }
 
-/// One worker thread: its inbox handle and join handle.
-struct Worker {
+/// A worker thread's join handle (the serve loop's result).
+type WorkerJoin = JoinHandle<Result<Arc<EngineStats>>>;
+
+/// A worker slot's current inbox plus its incarnation number (bumped on
+/// every supervisor restart). The epoch partitions recovery ownership:
+/// an in-flight entry delivered to epoch `e` is the supervisor's to
+/// re-admit once the slot moves past `e`; an entry not yet delivered
+/// belongs to its submitter's retry loop. Neither can duplicate the
+/// other's send.
+struct HandleSlot {
     handle: ServerHandle,
-    join: JoinHandle<Result<Arc<EngineStats>>>,
+    epoch: u64,
+}
+
+/// One respawnable worker slot. `handle`/`hooks`/`join` always point at
+/// the *current* incarnation; the supervisor swaps all three on
+/// restart (a hung incarnation's join handle is dropped — the fenced
+/// zombie exits on its own and is never joined).
+struct Slot {
+    handle: Mutex<HandleSlot>,
+    hooks: Mutex<ServeHooks>,
+    join: Mutex<Option<WorkerJoin>>,
+}
+
+/// One dispatched request the supervisor can recover: the original
+/// request, the worker it lives on, and a clone of the caller's reply
+/// channel to re-attach.
+struct InFlight {
+    worker: usize,
+    req: Request,
+    responder: Responder,
+    /// Epoch of the incarnation this request was last delivered to
+    /// (recorded atomically with the successful send, under the table
+    /// lock). `None` = not delivered yet — the submitter's retry loop
+    /// still owns it and the supervisor leaves it alone.
+    delivered_epoch: Option<u64>,
+}
+
+/// State shared between the router front-end and the supervisor thread.
+struct Shared {
+    slots: Vec<Slot>,
+    inflight: Mutex<HashMap<u64, InFlight>>,
+    stop: AtomicBool,
 }
 
 /// Front door of the sharded serving runtime. Spawn with
-/// [`Router::spawn`], submit via [`Router::submit`] /
-/// [`Router::submit_streaming`] (or through [`SubmitTarget`] for
-/// `LoadGen`), observe via [`Router::snapshot`], and retire with
-/// [`Router::shutdown`].
+/// [`Router::spawn`] (or [`Router::spawn_with`] for supervision knobs),
+/// submit via [`Router::submit`] / [`Router::submit_streaming`] (or
+/// through [`SubmitTarget`] for `LoadGen`), observe via
+/// [`Router::snapshot`], and retire with [`Router::shutdown`].
 pub struct Router {
-    workers: Vec<Worker>,
+    shared: Arc<Shared>,
     metrics: Arc<ClusterMetrics>,
     balancer: Mutex<Box<dyn Balancer>>,
+    rcfg: RouterConfig,
+    supervisor: Option<JoinHandle<()>>,
+}
+
+/// Spawn one worker incarnation: its inbox, hooks, and thread. The
+/// thread runs the supervised serve loop under `catch_unwind` so a
+/// panic (injected or real) surfaces as a typed `Err` through the join
+/// handle instead of only an abort message.
+fn spawn_worker<E, F>(
+    w: usize,
+    cfg: EngineConfig,
+    fault: FaultPlan,
+    factory: Arc<F>,
+    stats: Arc<EngineStats>,
+) -> Result<(ServerHandle, ServeHooks, WorkerJoin)>
+where
+    E: StepExecutor + 'static,
+    F: ExecutorFactory<E> + 'static,
+{
+    let (handle, rx) = channel();
+    let hooks = ServeHooks::new();
+    let worker_hooks = hooks.clone();
+    let join = std::thread::Builder::new().name(format!("subgen-worker-{w}")).spawn(move || {
+        let cfg = EngineConfig { fault, ..cfg };
+        match std::panic::catch_unwind(AssertUnwindSafe(|| {
+            let exec = (*factory)(w);
+            serve_supervised(&exec, cfg, rx, stats, worker_hooks)
+        })) {
+            Ok(res) => res,
+            Err(_) => anyhow::bail!("worker {w} panicked"),
+        }
+    })?;
+    Ok((handle, hooks, join))
 }
 
 impl Router {
     /// Spawn `workers` worker threads, each building its own executor
     /// via `factory(worker_index)` and running the serve loop over it
-    /// with a clone of `cfg`. Default dispatch is [`LeastOutstanding`].
+    /// with a clone of `cfg`. Default dispatch is [`LeastOutstanding`];
+    /// default supervision is [`RouterConfig::default`].
     pub fn spawn<E, F>(workers: usize, cfg: EngineConfig, factory: F) -> Result<Router>
+    where
+        E: StepExecutor + 'static,
+        F: ExecutorFactory<E> + 'static,
+    {
+        Router::spawn_with(workers, cfg, RouterConfig::default(), factory)
+    }
+
+    /// [`Router::spawn`] with explicit supervision/admission knobs.
+    pub fn spawn_with<E, F>(
+        workers: usize,
+        cfg: EngineConfig,
+        rcfg: RouterConfig,
+        factory: F,
+    ) -> Result<Router>
     where
         E: StepExecutor + 'static,
         F: ExecutorFactory<E> + 'static,
     {
         anyhow::ensure!(workers >= 1, "router needs at least one worker");
         let factory = Arc::new(factory);
-        let mut ws = Vec::with_capacity(workers);
+        let mut slots = Vec::with_capacity(workers);
         let mut wm = Vec::with_capacity(workers);
         for w in 0..workers {
-            let (handle, rx) = channel();
             let stats = Arc::new(EngineStats::default());
-            let worker_stats = Arc::clone(&stats);
-            let worker_cfg = cfg.clone();
-            let worker_factory = Arc::clone(&factory);
-            let join = std::thread::Builder::new()
-                .name(format!("subgen-worker-{w}"))
-                .spawn(move || {
-                    let exec = (*worker_factory)(w);
-                    serve_with_stats(&exec, worker_cfg, rx, worker_stats)
-                })?;
-            ws.push(Worker { handle, join });
-            wm.push(WorkerMetrics { stats, dispatched: AtomicU64::new(0) });
+            let fault = rcfg
+                .fault_plans
+                .iter()
+                .find(|(i, _)| *i == w)
+                .map(|(_, p)| p.clone())
+                .unwrap_or_else(|| cfg.fault.clone());
+            let (handle, hooks, join) = spawn_worker::<E, F>(
+                w,
+                cfg.clone(),
+                fault,
+                Arc::clone(&factory),
+                Arc::clone(&stats),
+            )?;
+            slots.push(Slot {
+                handle: Mutex::new(HandleSlot { handle, epoch: 0 }),
+                hooks: Mutex::new(hooks),
+                join: Mutex::new(Some(join)),
+            });
+            wm.push(WorkerMetrics {
+                stats,
+                dispatched: AtomicU64::new(0),
+                restarts: AtomicU64::new(0),
+            });
         }
+        let shared = Arc::new(Shared {
+            slots,
+            inflight: Mutex::new(HashMap::new()),
+            stop: AtomicBool::new(false),
+        });
+        let metrics = Arc::new(ClusterMetrics {
+            workers: wm,
+            started: Instant::now(),
+            shed: AtomicU64::new(0),
+            recovered_sessions: AtomicU64::new(0),
+        });
+        let supervisor = spawn_supervisor::<E, F>(
+            Arc::clone(&shared),
+            Arc::clone(&metrics),
+            cfg,
+            rcfg.clone(),
+            factory,
+        )?;
         Ok(Router {
-            workers: ws,
-            metrics: Arc::new(ClusterMetrics { workers: wm, started: Instant::now() }),
+            shared,
+            metrics,
             balancer: Mutex::new(Box::new(LeastOutstanding::new())),
+            rcfg,
+            supervisor: Some(supervisor),
         })
     }
 
-    /// Replace the dispatch policy (builder style).
+    /// Replace the dispatch policy (builder style). Recovers from a
+    /// poisoned balancer lock — a panic inside a previous `pick` must
+    /// not wedge routing forever.
     pub fn with_balancer(self, balancer: Box<dyn Balancer>) -> Self {
-        *self.balancer.lock().unwrap() = balancer;
+        *lock_recover(&self.balancer) = balancer;
         self
     }
 
     /// Number of workers.
     pub fn num_workers(&self) -> usize {
-        self.workers.len()
+        self.shared.slots.len()
     }
 
     /// Shareable live metrics (hand a clone to a [`super::MetricsServer`]).
@@ -374,7 +651,7 @@ impl Router {
     /// The worker a session id sticks to (stable for the router's
     /// lifetime: a pure hash of the id modulo the worker count).
     pub fn worker_for_session(&self, session_id: u64) -> usize {
-        (SplitMix64::mix(session_id) % self.workers.len() as u64) as usize
+        (SplitMix64::mix(session_id) % self.shared.slots.len() as u64) as usize
     }
 
     /// Route a request: sticky by session hash when `session_id` is
@@ -384,12 +661,21 @@ impl Router {
         if let Some(sid) = req.session_id {
             return self.worker_for_session(sid);
         }
-        if self.workers.len() == 1 {
+        if self.shared.slots.len() == 1 {
             return 0;
         }
         let outstanding: Vec<u64> =
-            (0..self.workers.len()).map(|w| self.metrics.outstanding(w)).collect();
-        self.balancer.lock().unwrap().pick(&outstanding, req)
+            (0..self.shared.slots.len()).map(|w| self.metrics.outstanding(w)).collect();
+        lock_recover(&self.balancer).pick(&outstanding, req)
+    }
+
+    /// True when aggregate outstanding work is at/past the watermark.
+    fn over_watermark(&self) -> bool {
+        self.rcfg.shed_watermark.is_some_and(|wm| {
+            let total: u64 =
+                (0..self.metrics.num_workers()).map(|w| self.metrics.outstanding(w)).sum();
+            total >= wm
+        })
     }
 
     /// Count a dispatch to `w` *before* handing the request over, so a
@@ -409,10 +695,79 @@ impl Router {
         res
     }
 
+    /// Send `msg` to worker `w`, retrying transient failures (a worker
+    /// mid-restart has a dead inbox until the supervisor swaps in the
+    /// replacement) with bounded, deterministically jittered backoff.
+    /// A successful send records the delivery epoch on the in-flight
+    /// entry *atomically with the send* (same table-lock critical
+    /// section), so the supervisor's recovery pass can tell delivered
+    /// sessions (its to re-admit) from undelivered ones (ours to
+    /// retry) without ever duplicating either.
+    fn send_with_retry(&self, w: usize, mut msg: Msg, req_id: u64) -> Result<(), SubmitError> {
+        let attempts = self.rcfg.retry_attempts.max(1);
+        for attempt in 0..attempts {
+            {
+                let mut inflight = lock_recover(&self.shared.inflight);
+                // Entry gone mid-retry: the supervisor gave this worker
+                // up and dropped its sessions.
+                let Some(entry) = inflight.get_mut(&req_id) else {
+                    return Err(SubmitError::EngineGone);
+                };
+                let (handle, epoch) = {
+                    let hs = lock_recover(&self.shared.slots[w].handle);
+                    (hs.handle.clone(), hs.epoch)
+                };
+                match handle.tx.send(msg) {
+                    Ok(()) => {
+                        entry.delivered_epoch = Some(epoch);
+                        return Ok(());
+                    }
+                    Err(back) => msg = back.0,
+                }
+            }
+            if attempt + 1 < attempts {
+                let base = self.rcfg.retry_base.as_nanos() as u64;
+                let backoff = base.saturating_mul(1u64 << attempt.min(20));
+                let jitter = SplitMix64::mix(req_id ^ ((attempt as u64) << 32)) % (base / 2 + 1);
+                std::thread::sleep(Duration::from_nanos(backoff.saturating_add(jitter)));
+            }
+        }
+        Err(SubmitError::EngineGone)
+    }
+
+    /// Shared submit tail: shed check, route, register for recovery,
+    /// dispatch with retry. The in-flight entry is registered *before*
+    /// the send so a worker death in between cannot orphan the session.
+    fn dispatch_request(&self, req: Request, responder: Responder) -> Result<(), SubmitError> {
+        if self.over_watermark() {
+            self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            return Err(SubmitError::Overloaded);
+        }
+        let w = self.route(&req);
+        let id = req.id;
+        let entry = InFlight {
+            worker: w,
+            req: req.clone(),
+            responder: responder.clone(),
+            delivered_epoch: None,
+        };
+        lock_recover(&self.shared.inflight).insert(id, entry);
+        let msg = match responder {
+            Responder::Blocking(tx) => Msg::Submit(req, tx),
+            Responder::Streaming(tx) => Msg::SubmitStreaming(req, tx),
+        };
+        let res = self.dispatch(w, || self.send_with_retry(w, msg, id));
+        if res.is_err() {
+            lock_recover(&self.shared.inflight).remove(&id);
+        }
+        res
+    }
+
     /// Submit on the blocking path; returns the terminal-reply receiver.
     pub fn submit(&self, req: Request) -> Result<Receiver<ServerReply>, SubmitError> {
-        let w = self.route(&req);
-        self.dispatch(w, || self.workers[w].handle.submit(req))
+        let (tx, rx) = mpsc::channel();
+        self.dispatch_request(req, Responder::Blocking(tx))?;
+        Ok(rx)
     }
 
     /// Submit and block for the response.
@@ -423,35 +778,226 @@ impl Router {
     /// Submit on the streaming path; tokens arrive as the worker's
     /// engine emits them, then a terminal `Done`/`Rejected`.
     pub fn submit_streaming(&self, req: Request) -> Result<Receiver<StreamEvent>, SubmitError> {
-        let w = self.route(&req);
-        self.dispatch(w, || self.workers[w].handle.submit_streaming(req))
+        let (tx, rx) = mpsc::channel();
+        self.dispatch_request(req, Responder::Streaming(tx))?;
+        Ok(rx)
     }
 
-    /// Graceful drain: stop admission (consumes the router), ask every
-    /// worker to finish its queued + in-flight sequences, join the
-    /// threads, and return the final merged snapshot. Requests
-    /// dispatched before this call still complete — their `Shutdown`
-    /// message is ordered behind them in each worker's inbox.
-    pub fn shutdown(self) -> Result<ClusterSnapshot> {
-        let Router { workers, metrics, balancer: _ } = self;
-        for w in &workers {
-            w.handle.shutdown();
+    /// Graceful drain: stop the supervisor and admission (consumes the
+    /// router), ask every worker to finish its queued + in-flight
+    /// sequences, join the threads, and return the final merged
+    /// snapshot. Requests dispatched before this call still complete —
+    /// their `Shutdown` message is ordered behind them in each worker's
+    /// inbox. A worker that died at the very end (no supervisor left to
+    /// restart it) does not wedge shutdown: its callers see a typed
+    /// `EngineGone` and the snapshot still reports the cluster.
+    pub fn shutdown(mut self) -> Result<ClusterSnapshot> {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(sup) = self.supervisor.take() {
+            let _ = sup.join();
         }
-        for w in workers {
-            match w.join.join() {
-                Ok(res) => {
-                    res?;
-                }
-                Err(_) => anyhow::bail!("worker thread panicked"),
+        for slot in &self.shared.slots {
+            lock_recover(&slot.handle).handle.shutdown();
+        }
+        for slot in &self.shared.slots {
+            let join = lock_recover(&slot.join).take();
+            if let Some(j) = join {
+                let _ = j.join();
             }
         }
-        Ok(metrics.snapshot())
+        Ok(self.metrics.snapshot())
+    }
+}
+
+impl Drop for Router {
+    /// A router dropped without [`Router::shutdown`] (e.g. on a test
+    /// panic) must not leak the supervisor: stop it, then let the slot
+    /// handles drop so workers drain and exit on their own.
+    fn drop(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        if let Some(sup) = self.supervisor.take() {
+            let _ = sup.join();
+        }
+    }
+}
+
+/// The supervisor thread: polls every slot for a dead thread (join
+/// handle finished — panic or unexpected return) or a frozen heartbeat
+/// past the hang timeout, then fences the old incarnation, spawns a
+/// replacement reusing the same stats, and re-admits the sessions that
+/// were in flight there — from their last snapshot when one exists,
+/// else by re-dispatching the original request.
+fn spawn_supervisor<E, F>(
+    shared: Arc<Shared>,
+    metrics: Arc<ClusterMetrics>,
+    cfg: EngineConfig,
+    rcfg: RouterConfig,
+    factory: Arc<F>,
+) -> Result<JoinHandle<()>>
+where
+    E: StepExecutor + 'static,
+    F: ExecutorFactory<E> + 'static,
+{
+    let join = std::thread::Builder::new().name("subgen-supervisor".into()).spawn(move || {
+        let n = shared.slots.len();
+        let mut beats: Vec<(u64, Instant)> = (0..n).map(|_| (0, Instant::now())).collect();
+        let mut gave_up = vec![false; n];
+        while !shared.stop.load(Ordering::SeqCst) {
+            std::thread::sleep(rcfg.poll_every);
+            for w in 0..n {
+                if shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                if gave_up[w] {
+                    // Late submissions may still register sessions on a
+                    // failed worker; drop them so their reply channels
+                    // close (typed EngineGone) instead of hanging.
+                    lock_recover(&shared.inflight).retain(|_, e| e.worker != w);
+                    continue;
+                }
+                prune_settled(&shared, w);
+                let dead =
+                    lock_recover(&shared.slots[w].join).as_ref().is_some_and(|j| j.is_finished());
+                let mut hung = false;
+                if !dead {
+                    let hooks = lock_recover(&shared.slots[w].hooks);
+                    let hb = hooks.heartbeat.load(Ordering::Relaxed);
+                    drop(hooks);
+                    if hb != beats[w].0 {
+                        beats[w] = (hb, Instant::now());
+                    }
+                    hung = rcfg.hang_timeout.is_some_and(|t| beats[w].1.elapsed() > t);
+                }
+                if !(dead || hung) {
+                    continue;
+                }
+                if metrics.workers[w].restarts.load(Ordering::Relaxed) >= rcfg.max_restarts {
+                    gave_up[w] = true;
+                    lock_recover(&shared.inflight).retain(|_, e| e.worker != w);
+                    continue;
+                }
+                metrics.workers[w].restarts.fetch_add(1, Ordering::Relaxed);
+                restart_worker::<E, F>(&shared, &metrics, &cfg, &factory, w, dead);
+                beats[w] = (0, Instant::now());
+            }
+        }
+    })?;
+    Ok(join)
+}
+
+/// Drain worker `w`'s settled-outcome list into the in-flight table
+/// (sessions with a terminal reply no longer need recovery).
+fn prune_settled(shared: &Shared, w: usize) {
+    let settled: Vec<u64> = {
+        let hooks = lock_recover(&shared.slots[w].hooks);
+        let mut s = lock_recover(&hooks.settled);
+        std::mem::take(&mut *s)
+    };
+    if !settled.is_empty() {
+        let mut inflight = lock_recover(&shared.inflight);
+        for id in settled {
+            inflight.remove(&id);
+        }
+    }
+}
+
+/// Replace slot `w`'s incarnation and re-admit its lost sessions.
+fn restart_worker<E, F>(
+    shared: &Shared,
+    metrics: &ClusterMetrics,
+    cfg: &EngineConfig,
+    factory: &Arc<F>,
+    w: usize,
+    dead: bool,
+) where
+    E: StepExecutor + 'static,
+    F: ExecutorFactory<E> + 'static,
+{
+    let slot = &shared.slots[w];
+    // Fence the old incarnation first (idempotent for a dead one): a
+    // merely-hung zombie must stop touching reply channels and its
+    // snapshot store before the replacement takes over the sessions.
+    let old_hooks = {
+        let hooks = lock_recover(&slot.hooks);
+        hooks.fence.store(true, Ordering::SeqCst);
+        hooks.clone()
+    };
+    // Terminal outcomes recorded just before death settle first, so a
+    // completed session is not replayed to a caller that saw its Done.
+    prune_settled(shared, w);
+    let mut snaps = std::mem::take(&mut *lock_recover(&old_hooks.snapshots));
+    let stats = Arc::clone(&metrics.workers[w].stats);
+    // Respawn with a benign fault plan: an injected crash fires once.
+    let spawned =
+        spawn_worker::<E, F>(w, cfg.clone(), FaultPlan::default(), Arc::clone(factory), stats);
+    let Ok((handle, hooks, join)) = spawned else {
+        // Could not spawn a replacement thread: give the sessions up so
+        // their channels close rather than hang.
+        lock_recover(&shared.inflight).retain(|_, e| e.worker != w);
+        return;
+    };
+    let old_join = lock_recover(&slot.join).replace(join);
+    if dead {
+        // Reap the finished thread (non-blocking). A hung thread is
+        // abandoned instead: it exits via the fence on its own, and
+        // joining it here would block the whole supervisor.
+        if let Some(j) = old_join {
+            let _ = j.join();
+        }
+    }
+    let new_epoch = {
+        let mut hs = lock_recover(&slot.handle);
+        let epoch = hs.epoch + 1;
+        *hs = HandleSlot { handle, epoch };
+        epoch
+    };
+    *lock_recover(&slot.hooks) = hooks;
+    // Re-admit the sessions delivered to a *previous* incarnation.
+    // Entries with no delivery epoch are still owned by their
+    // submitter's retry loop (which will land on the fresh inbox);
+    // touching them here could send a duplicate. Advancing each
+    // harvested entry's epoch under the table lock makes this pass
+    // idempotent if the replacement also dies later.
+    let lost: Vec<(u64, Request, Responder)> = {
+        let mut inflight = lock_recover(&shared.inflight);
+        inflight
+            .iter_mut()
+            .filter(|(_, e)| e.worker == w && e.delivered_epoch.is_some_and(|ep| ep < new_epoch))
+            .map(|(id, e)| {
+                e.delivered_epoch = Some(new_epoch);
+                (*id, e.req.clone(), e.responder.clone())
+            })
+            .collect()
+    };
+    let new_handle = lock_recover(&slot.handle).handle.clone();
+    for (id, req, responder) in lost {
+        let msg = match snaps.remove(&id) {
+            // Last snapshot: decode continues from the frozen cache
+            // state, bit-identical to the uninterrupted run; streaming
+            // clients dedupe any replayed suffix by index.
+            Some(snapshot) => Msg::Resume(Box::new(ResumeMsg { snapshot, responder })),
+            // Never snapshotted (still queued, or cadence not reached):
+            // re-dispatch the original request from scratch.
+            None => match responder {
+                Responder::Blocking(tx) => Msg::Submit(req, tx),
+                Responder::Streaming(tx) => Msg::SubmitStreaming(req, tx),
+            },
+        };
+        if new_handle.tx.send(msg).is_ok() {
+            metrics.recovered_sessions.fetch_add(1, Ordering::Relaxed);
+        } else {
+            lock_recover(&shared.inflight).remove(&id);
+        }
     }
 }
 
 impl SubmitTarget for Router {
     fn submit(&self, req: Request) -> Result<Receiver<ServerReply>, SubmitError> {
         Router::submit(self, req)
+    }
+
+    fn submit_streaming(&self, req: Request) -> Result<Receiver<StreamEvent>, SubmitError> {
+        Router::submit_streaming(self, req)
     }
 }
 
@@ -475,6 +1021,9 @@ mod tests {
         assert_eq!(snap.completed, 6);
         assert_eq!(snap.dispatched, 6);
         assert_eq!(snap.tokens, 12);
+        assert_eq!(snap.restarts, 0);
+        assert_eq!(snap.recovered_sessions, 0);
+        assert_eq!(snap.shed, 0);
     }
 
     #[test]
@@ -578,5 +1127,143 @@ mod tests {
         assert!(snap.tokens_per_sec > 0.0);
         assert!(snap.latency.p99 >= snap.latency.p50);
         router.shutdown().unwrap();
+    }
+
+    #[test]
+    fn poisoned_balancer_mutex_recovers() {
+        // Regression: routing and the balancer builder used to
+        // `unwrap()` the balancer lock, so one panicking `pick` wedged
+        // every future session-less submit with a poison panic.
+        let router = mock_router(2);
+        let poisoner = std::thread::scope(|s| {
+            s.spawn(|| {
+                let _guard = router.balancer.lock().unwrap();
+                panic!("poison the balancer lock");
+            })
+            .join()
+        });
+        assert!(poisoner.is_err());
+        assert!(router.balancer.is_poisoned());
+        // Session-less routing (the balancer path) still works…
+        for id in 0..4 {
+            let resp = router.submit_blocking(Request::exact(id, vec![3], 2)).unwrap();
+            assert_eq!(resp.tokens, vec![4, 5]);
+        }
+        // …and so does swapping the policy afterwards.
+        let router = router.with_balancer(Box::new(RoundRobin::new()));
+        let resp = router.submit_blocking(Request::exact(9, vec![1], 1)).unwrap();
+        assert_eq!(resp.tokens.len(), 1);
+        let snap = router.shutdown().unwrap();
+        assert_eq!(snap.completed, 5);
+    }
+
+    #[test]
+    fn worker_panic_restarts_and_recovers_blocking_session() {
+        // Worker 0 crashes (injected panic) mid-decode; the supervisor
+        // restarts it, resumes the lost session from its last snapshot,
+        // and the blocking caller still receives the full response.
+        let rcfg = RouterConfig {
+            poll_every: Duration::from_millis(2),
+            fault_plans: vec![(0, FaultPlan { panic_at_tick: Some(3), ..Default::default() })],
+            ..Default::default()
+        };
+        let cfg = EngineConfig { snapshot_every: 1, ..Default::default() };
+        let router = Router::spawn_with(1, cfg, rcfg, |_w| MockExecutor::small()).unwrap();
+        let resp = router.submit_blocking(Request::exact(1, vec![3], 8)).unwrap();
+        assert_eq!(resp.tokens, vec![4, 5, 6, 7, 8, 9, 10, 11]);
+        assert_eq!(router.metrics().restarts(0), 1);
+        assert!(router.metrics().recovered_sessions() >= 1);
+        let snap = router.shutdown().unwrap();
+        assert_eq!(snap.restarts, 1);
+        assert!(snap.recovered_sessions >= 1);
+        assert_eq!(snap.completed, 1);
+    }
+
+    #[test]
+    fn worker_panic_mid_stream_recovers_gap_free() {
+        // A streamed session killed mid-decode resumes from its
+        // snapshot; the client-side drain sees one exactly-once,
+        // gap-free stream identical to the undisturbed run.
+        let rcfg = RouterConfig {
+            poll_every: Duration::from_millis(2),
+            fault_plans: vec![(0, FaultPlan { panic_at_tick: Some(3), ..Default::default() })],
+            ..Default::default()
+        };
+        let cfg = EngineConfig { snapshot_every: 1, ..Default::default() };
+        let router = Router::spawn_with(1, cfg, rcfg, |_w| MockExecutor::small()).unwrap();
+        let rx = router.submit_streaming(Request::exact(1, vec![3], 8)).unwrap();
+        let (tokens, resp) = crate::server::drain_stream(&rx).unwrap();
+        assert_eq!(tokens, vec![4, 5, 6, 7, 8, 9, 10, 11]);
+        assert_eq!(resp.tokens, tokens);
+        let snap = router.shutdown().unwrap();
+        assert_eq!(snap.restarts, 1);
+        assert_eq!(snap.completed, 1);
+    }
+
+    #[test]
+    fn hung_worker_trips_watchdog_and_restarts() {
+        // A stalled tick freezes the heartbeat; the watchdog fences the
+        // zombie and the replacement finishes the session long before
+        // the stall would have ended.
+        let rcfg = RouterConfig {
+            poll_every: Duration::from_millis(2),
+            hang_timeout: Some(Duration::from_millis(40)),
+            fault_plans: vec![(
+                0,
+                FaultPlan {
+                    stall_at_tick: Some((3, Duration::from_millis(400))),
+                    ..Default::default()
+                },
+            )],
+            ..Default::default()
+        };
+        let cfg = EngineConfig { snapshot_every: 1, ..Default::default() };
+        let router = Router::spawn_with(1, cfg, rcfg, |_w| MockExecutor::small()).unwrap();
+        let started = Instant::now();
+        let resp = router.submit_blocking(Request::exact(1, vec![3], 8)).unwrap();
+        assert_eq!(resp.tokens, vec![4, 5, 6, 7, 8, 9, 10, 11]);
+        assert!(started.elapsed() < Duration::from_millis(400), "waited out the stall");
+        let snap = router.shutdown().unwrap();
+        assert_eq!(snap.restarts, 1);
+        assert!(snap.recovered_sessions >= 1);
+    }
+
+    #[test]
+    fn shed_watermark_rejects_with_typed_overload() {
+        let rcfg = RouterConfig { shed_watermark: Some(0), ..Default::default() };
+        let router =
+            Router::spawn_with(2, EngineConfig::default(), rcfg, |_w| MockExecutor::small())
+                .unwrap();
+        let err = router.submit_blocking(Request::exact(1, vec![3], 2)).unwrap_err();
+        assert_eq!(err, SubmitError::Overloaded);
+        assert_eq!(router.metrics().shed(), 1);
+        let snap = router.shutdown().unwrap();
+        assert_eq!(snap.shed, 1);
+        assert_eq!(snap.dispatched, 0);
+    }
+
+    #[test]
+    fn dead_worker_without_restart_budget_yields_typed_errors_not_hangs() {
+        // Regression for the blocking-submit hang window: a worker that
+        // dies before replying must close the reply channel (typed
+        // EngineGone), never strand the caller — including the clone of
+        // the responder held in the recovery table.
+        let rcfg = RouterConfig {
+            poll_every: Duration::from_millis(2),
+            max_restarts: 0,
+            retry_attempts: 1,
+            fault_plans: vec![(0, FaultPlan { panic_at_tick: Some(2), ..Default::default() })],
+            ..Default::default()
+        };
+        let router =
+            Router::spawn_with(1, EngineConfig::default(), rcfg, |_w| MockExecutor::small())
+                .unwrap();
+        let err = router.submit_blocking(Request::exact(1, vec![3], 50)).unwrap_err();
+        assert_eq!(err, SubmitError::EngineGone);
+        // Subsequent submits fail fast with the same typed error.
+        let err = router.submit_blocking(Request::exact(2, vec![3], 2)).unwrap_err();
+        assert_eq!(err, SubmitError::EngineGone);
+        let snap = router.shutdown().unwrap();
+        assert_eq!(snap.restarts, 0);
     }
 }

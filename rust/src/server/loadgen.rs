@@ -1,6 +1,6 @@
 //! Open-loop Poisson load generator + latency capture.
 
-use super::{ServerReply, SubmitTarget};
+use super::{ServerReply, StreamEvent, SubmitTarget};
 use crate::coordinator::Request;
 use crate::metrics::Histogram;
 use crate::rng::{Pcg64, Rng};
@@ -43,6 +43,121 @@ impl LoadGenReport {
     /// Generated tokens per second.
     pub fn throughput_tps(&self) -> f64 {
         self.tokens as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+}
+
+/// Streaming-path measurement from [`LoadGen::run_streaming`]:
+/// time-to-first-token and per-token inter-arrival latency — the two
+/// quantities a worker kill/restart degrades, which the blocking-path
+/// end-to-end histogram cannot separate.
+#[derive(Debug)]
+pub struct StreamingReport {
+    /// Requests whose stream reached its terminal `Done`.
+    pub completed: usize,
+    /// Requests rejected, expired, or cut off mid-stream.
+    pub failed: usize,
+    /// Time from submission to the first token (TTFT).
+    pub ttft: Histogram,
+    /// Inter-arrival gap between consecutive *new* tokens (TPOT). A
+    /// worker restart lands here: the recovery pause shows up as one
+    /// large gap before the first post-restore token.
+    pub tpot: Histogram,
+    /// Wall time of the whole run.
+    pub wall: Duration,
+    /// Distinct tokens received (recovery replays deduplicated).
+    pub tokens: u64,
+}
+
+/// Baseline-vs-fault comparison from a chaos scenario (see
+/// `examples/serving_throughput --chaos`): the same workload run on an
+/// undisturbed cluster and on one with an injected worker kill.
+#[derive(Debug)]
+pub struct ChaosReport {
+    /// The undisturbed run.
+    pub baseline: StreamingReport,
+    /// The fault-injected run.
+    pub faulted: StreamingReport,
+    /// Worker restarts the supervisor performed during the faulted run.
+    pub restarts: u64,
+    /// Sessions the supervisor re-admitted after those restarts.
+    pub recovered_sessions: u64,
+}
+
+impl ChaosReport {
+    /// p95 TTFT under fault relative to baseline (1.0 = no degradation).
+    pub fn ttft_degradation(&self) -> f64 {
+        ratio(self.faulted.ttft.p95(), self.baseline.ttft.p95())
+    }
+
+    /// p95 TPOT under fault relative to baseline (1.0 = no degradation).
+    pub fn tpot_degradation(&self) -> f64 {
+        ratio(self.faulted.tpot.p95(), self.baseline.tpot.p95())
+    }
+}
+
+fn ratio(faulted: Duration, baseline: Duration) -> f64 {
+    faulted.as_secs_f64() / baseline.as_secs_f64().max(1e-9)
+}
+
+/// One in-flight stream being harvested by [`LoadGen::run_streaming`].
+struct OpenStream {
+    sent: Instant,
+    last: Instant,
+    got: Vec<i32>,
+    rx: Receiver<StreamEvent>,
+}
+
+/// Terminal state of one [`pump`] pass over a stream.
+enum Verdict {
+    /// Channel drained but not terminal yet — keep the stream open.
+    Open,
+    /// Stream completed; carries the deduplicated token count.
+    Done(u64),
+    /// Rejected, expired, disconnected, or a token-index gap.
+    Failed,
+}
+
+/// Drain available events from one stream, recording TTFT on the first
+/// new token and TPOT on every following one. Replayed indices after a
+/// worker recovery are verified and skipped (at-least-once delivery →
+/// exactly-once accounting, mirroring [`super::drain_stream`]); an
+/// index *ahead* of the received prefix is a protocol violation and
+/// fails the stream rather than passing off a gap as success.
+fn pump(s: &mut OpenStream, ttft: &Histogram, tpot: &Histogram, block: bool) -> Verdict {
+    loop {
+        let ev = if block {
+            match s.rx.recv() {
+                Ok(ev) => ev,
+                Err(_) => return Verdict::Failed,
+            }
+        } else {
+            match s.rx.try_recv() {
+                Ok(ev) => ev,
+                Err(std::sync::mpsc::TryRecvError::Empty) => return Verdict::Open,
+                Err(std::sync::mpsc::TryRecvError::Disconnected) => return Verdict::Failed,
+            }
+        };
+        match ev {
+            StreamEvent::Token { index, token } => {
+                if index < s.got.len() {
+                    debug_assert_eq!(s.got[index], token, "replay diverged at index {index}");
+                    continue;
+                }
+                if index > s.got.len() {
+                    return Verdict::Failed;
+                }
+                let now = Instant::now();
+                if s.got.is_empty() {
+                    ttft.record(now - s.sent);
+                } else {
+                    tpot.record(now - s.last);
+                }
+                s.last = now;
+                s.got.push(token);
+            }
+            StreamEvent::Done(_) => return Verdict::Done(s.got.len() as u64),
+            StreamEvent::Rejected | StreamEvent::Expired => return Verdict::Failed,
+        }
     }
 }
 
@@ -130,6 +245,64 @@ impl LoadGen {
             tokens,
         }
     }
+
+    /// Run the same open-loop experiment on the streaming path,
+    /// measuring TTFT and TPOT instead of end-to-end latency. This is
+    /// the probe chaos scenarios use: a worker kill/restart mid-run
+    /// surfaces as a TPOT outlier on recovered streams, while the
+    /// dedupe in [`pump`] keeps token accounting exactly-once.
+    pub fn run_streaming(mut self, target: &impl SubmitTarget) -> StreamingReport {
+        let mut rng = Pcg64::seed_from_u64(self.seed);
+        let start = Instant::now();
+        let ttft = Histogram::new();
+        let tpot = Histogram::new();
+        let mut open: Vec<OpenStream> = Vec::new();
+        let mut failed = 0usize;
+        let mut completed = 0usize;
+        let mut tokens = 0u64;
+        let mut next_arrival = start;
+
+        for id in 0..self.requests {
+            let gap = exp_gap(rng.f64(), self.rate);
+            next_arrival += Duration::from_secs_f64(gap);
+            let now = Instant::now();
+            if next_arrival > now {
+                std::thread::sleep(next_arrival - now);
+            }
+            let req = (self.make_request)(id as u64);
+            match target.submit_streaming(req) {
+                Ok(rx) => {
+                    let now = Instant::now();
+                    open.push(OpenStream { sent: now, last: now, got: Vec::new(), rx });
+                }
+                Err(_) => failed += 1,
+            }
+            // Opportunistically harvest whatever has streamed so far.
+            open.retain_mut(|s| match pump(s, &ttft, &tpot, false) {
+                Verdict::Open => true,
+                Verdict::Done(n) => {
+                    completed += 1;
+                    tokens += n;
+                    false
+                }
+                Verdict::Failed => {
+                    failed += 1;
+                    false
+                }
+            });
+        }
+        // Drain the tail.
+        for mut s in open {
+            match pump(&mut s, &ttft, &tpot, true) {
+                Verdict::Done(n) => {
+                    completed += 1;
+                    tokens += n;
+                }
+                Verdict::Open | Verdict::Failed => failed += 1,
+            }
+        }
+        StreamingReport { completed, failed, ttft, tpot, wall: start.elapsed(), tokens }
+    }
 }
 
 #[cfg(test)]
@@ -157,6 +330,30 @@ mod tests {
         assert_eq!(report.tokens, 60);
         assert!(report.throughput_rps() > 0.0);
         assert_eq!(report.latency.count(), 20);
+        handle.shutdown();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn loadgen_streaming_measures_ttft_and_tpot() {
+        let (handle, rx) = channel();
+        let t = std::thread::spawn(move || {
+            let exec = MockExecutor::small();
+            serve(&exec, EngineConfig::default(), rx).unwrap()
+        });
+        let report = LoadGen {
+            rate: 500.0,
+            requests: 10,
+            make_request: Box::new(|id| Request::exact(id, vec![(id % 8) as i32], 4)),
+            seed: 3,
+        }
+        .run_streaming(&handle);
+        assert_eq!(report.completed, 10);
+        assert_eq!(report.failed, 0);
+        assert_eq!(report.tokens, 40);
+        // One TTFT sample per stream; max_new − 1 inter-token gaps.
+        assert_eq!(report.ttft.count(), 10);
+        assert_eq!(report.tpot.count(), 30);
         handle.shutdown();
         t.join().unwrap();
     }

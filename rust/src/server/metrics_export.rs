@@ -35,7 +35,7 @@ pub fn prometheus_text(snap: &ClusterSnapshot) -> String {
     let _ = writeln!(s, "# TYPE subgen_tokens_per_second gauge");
     let _ = writeln!(s, "subgen_tokens_per_second {:.3}", snap.tokens_per_sec);
 
-    let counters: [(&str, &str, fn(&super::WorkerStat) -> u64, u64); 6] = [
+    let counters: [(&str, &str, fn(&super::WorkerStat) -> u64, u64); 10] = [
         ("dispatched_total", "Requests dispatched.", |w| w.dispatched, snap.dispatched),
         ("completed_total", "Requests completed.", |w| w.completed, snap.completed),
         ("rejected_total", "Requests rejected.", |w| w.rejected, snap.rejected),
@@ -52,9 +52,38 @@ pub fn prometheus_text(snap: &ClusterSnapshot) -> String {
             |w| w.batched_sequences,
             snap.batched_sequences,
         ),
+        ("restarts_total", "Worker restarts by the supervisor.", |w| w.restarts, snap.restarts),
+        (
+            "deadline_exceeded_total",
+            "Requests shed past their completion deadline.",
+            |w| w.deadline_exceeded,
+            snap.deadline_exceeded,
+        ),
+        ("snapshots_total", "Session snapshots published.", |w| w.snapshots, snap.snapshots),
+        (
+            "snapshot_failures_total",
+            "Session snapshot write failures.",
+            |w| w.snapshot_failures,
+            snap.snapshot_failures,
+        ),
     ];
     for (stem, help, get, total) in counters {
         family(&mut s, "counter", stem, help, snap, get, total);
+    }
+    // Router-level recovery counters: these count router decisions
+    // (requests shed at the overload watermark, sessions re-admitted
+    // after a restart), so they have no per-worker family.
+    for (stem, help, v) in [
+        (
+            "recovered_sessions_total",
+            "Sessions re-admitted after a worker restart.",
+            snap.recovered_sessions,
+        ),
+        ("shed_total", "Requests shed at the overload watermark.", snap.shed),
+    ] {
+        let _ = writeln!(s, "# HELP subgen_{stem} {help}");
+        let _ = writeln!(s, "# TYPE subgen_{stem} counter");
+        let _ = writeln!(s, "subgen_{stem} {v}");
     }
     let gauges: [(&str, &str, fn(&super::WorkerStat) -> u64, u64); 2] = [
         ("queue_depth", "Requests queued for admission.", |w| w.queued, snap.queued),
@@ -229,6 +258,15 @@ mod tests {
         assert!(text.contains("subgen_worker_decode_batch_calls_total{worker=\"0\"}"), "{text}");
         assert!(text.contains("\nsubgen_decode_batch_sequences_total 8"), "{text}");
         assert!(!text.contains("subgen_completed_total{worker"), "{text}");
+        // Fault-tolerance families are present even when idle, so
+        // dashboards and the CI chaos smoke can rely on them.
+        assert!(text.contains("subgen_worker_restarts_total{worker=\"0\"} 0"), "{text}");
+        assert!(text.contains("\nsubgen_restarts_total 0"), "{text}");
+        assert!(text.contains("\nsubgen_recovered_sessions_total 0"), "{text}");
+        assert!(text.contains("\nsubgen_shed_total 0"), "{text}");
+        assert!(text.contains("\nsubgen_deadline_exceeded_total 0"), "{text}");
+        assert!(text.contains("\nsubgen_snapshots_total 0"), "{text}");
+        assert!(text.contains("\nsubgen_snapshot_failures_total 0"), "{text}");
         assert!(text.contains("subgen_request_latency_seconds{quantile=\"0.5\"}"), "{text}");
         assert!(text.contains("subgen_request_latency_seconds{quantile=\"0.95\"}"), "{text}");
         assert!(text.contains("subgen_request_latency_seconds{quantile=\"0.99\"}"), "{text}");

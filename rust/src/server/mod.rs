@@ -12,17 +12,20 @@ pub mod cluster;
 mod loadgen;
 pub mod metrics_export;
 
-pub use cluster::{Balancer, ClusterMetrics, ClusterSnapshot, Router, WorkerStat};
-pub use loadgen::{LoadGen, LoadGenReport};
+pub use cluster::{Balancer, ClusterMetrics, ClusterSnapshot, Router, RouterConfig, WorkerStat};
+pub use loadgen::{ChaosReport, LoadGen, LoadGenReport, StreamingReport};
 pub use metrics_export::{prometheus_text, MetricsServer};
 
-use crate::coordinator::{Engine, EngineConfig, EngineStats, Request, Response, StepExecutor};
+use crate::coordinator::{
+    Engine, EngineConfig, EngineStats, Request, Response, SessionSnapshot, StepExecutor,
+};
 use anyhow::Result;
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::rc::Rc;
-use std::sync::mpsc::{self, Receiver, Sender, TryRecvError};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
 
 /// Messages into the engine thread (public only because it appears in
 /// [`serve`]'s signature; construct via [`ServerHandle`]).
@@ -32,8 +35,22 @@ pub enum Msg {
     /// Streaming-path submission: per-token [`StreamEvent`]s, then a
     /// terminal `Done`/`Rejected`, then the sender is dropped.
     SubmitStreaming(Request, Sender<StreamEvent>),
+    /// Recovery-path re-admission of a snapshotted session on this
+    /// worker, re-attaching the caller's original responder. Sent by
+    /// the cluster supervisor after a worker death — not part of the
+    /// client-facing API.
+    Resume(Box<ResumeMsg>),
     /// Stop admission and drain in-flight work.
     Shutdown,
+}
+
+/// Payload of [`Msg::Resume`]: the frozen session plus the surviving
+/// reply channel to re-attach.
+pub struct ResumeMsg {
+    /// The session state to restore (see [`SessionSnapshot`]).
+    pub snapshot: SessionSnapshot,
+    /// The original caller's reply channel.
+    pub responder: Responder,
 }
 
 /// Terminal reply on the blocking path. Explicit — the old protocol
@@ -45,6 +62,9 @@ pub enum ServerReply {
     Done(Response),
     /// The engine refused the request (backpressure or malformed).
     Rejected,
+    /// The request was dropped past its deadline (see
+    /// [`Request::deadline`]).
+    Expired,
 }
 
 /// One event on a streaming response channel.
@@ -61,6 +81,8 @@ pub enum StreamEvent {
     Done(Response),
     /// Terminal: the engine refused the request.
     Rejected,
+    /// Terminal: the request was dropped past its deadline.
+    Expired,
 }
 
 /// Typed submission failure surfaced by [`ServerHandle`] and
@@ -72,6 +94,12 @@ pub enum SubmitError {
     Rejected,
     /// The serve loop is gone (shutdown or thread death).
     EngineGone,
+    /// The request was dropped past its deadline (see
+    /// [`Request::deadline`]).
+    DeadlineExceeded,
+    /// The cluster shed the request before dispatch: aggregate
+    /// outstanding work is past the router's shed watermark.
+    Overloaded,
 }
 
 impl std::fmt::Display for SubmitError {
@@ -79,6 +107,8 @@ impl std::fmt::Display for SubmitError {
         match self {
             SubmitError::Rejected => write!(f, "request rejected by the engine"),
             SubmitError::EngineGone => write!(f, "engine loop terminated"),
+            SubmitError::DeadlineExceeded => write!(f, "request dropped past its deadline"),
+            SubmitError::Overloaded => write!(f, "cluster shed the request (over watermark)"),
         }
     }
 }
@@ -91,6 +121,9 @@ impl std::error::Error for SubmitError {}
 pub trait SubmitTarget {
     /// Dispatch a request; `Err` only when the serving loop is gone.
     fn submit(&self, req: Request) -> Result<Receiver<ServerReply>, SubmitError>;
+    /// Dispatch for per-token streaming; the event stream ends with a
+    /// terminal `Done`/`Rejected`/`Expired`.
+    fn submit_streaming(&self, req: Request) -> Result<Receiver<StreamEvent>, SubmitError>;
 }
 
 /// Handle for submitting requests to a running engine loop.
@@ -134,6 +167,10 @@ impl SubmitTarget for ServerHandle {
     fn submit(&self, req: Request) -> Result<Receiver<ServerReply>, SubmitError> {
         ServerHandle::submit(self, req)
     }
+
+    fn submit_streaming(&self, req: Request) -> Result<Receiver<StreamEvent>, SubmitError> {
+        ServerHandle::submit_streaming(self, req)
+    }
 }
 
 /// Block on a terminal-reply receiver (the blocking path's tail).
@@ -141,6 +178,7 @@ pub fn recv_reply(rx: &Receiver<ServerReply>) -> Result<Response, SubmitError> {
     match rx.recv() {
         Ok(ServerReply::Done(resp)) => Ok(resp),
         Ok(ServerReply::Rejected) => Err(SubmitError::Rejected),
+        Ok(ServerReply::Expired) => Err(SubmitError::DeadlineExceeded),
         Err(_) => Err(SubmitError::EngineGone),
     }
 }
@@ -148,25 +186,60 @@ pub fn recv_reply(rx: &Receiver<ServerReply>) -> Result<Response, SubmitError> {
 /// Drain a streaming channel to its terminal event, returning the
 /// streamed tokens and the final response. The token list must (and
 /// does) match `response.tokens` — pinned by tests.
+///
+/// Delivery across worker recovery is at-least-once: a session resumed
+/// from a stale snapshot re-emits a suffix of the stream. This drain
+/// deduplicates by token index (replays are verified against what was
+/// already received), so callers observe an exactly-once, gap-free
+/// stream. An index *ahead* of the received prefix would mean lost
+/// tokens — that is a protocol violation and surfaces as
+/// [`SubmitError::EngineGone`] rather than a silent gap.
 pub fn drain_stream(rx: &Receiver<StreamEvent>) -> Result<(Vec<i32>, Response), SubmitError> {
     let mut tokens = Vec::new();
     loop {
         match rx.recv() {
             Ok(StreamEvent::Token { index, token }) => {
-                debug_assert_eq!(index, tokens.len());
+                if index < tokens.len() {
+                    // Replayed suffix after a recovery; verify and skip.
+                    debug_assert_eq!(tokens[index], token, "replay diverged at index {index}");
+                    continue;
+                }
+                if index > tokens.len() {
+                    return Err(SubmitError::EngineGone);
+                }
                 tokens.push(token);
             }
             Ok(StreamEvent::Done(resp)) => return Ok((tokens, resp)),
             Ok(StreamEvent::Rejected) => return Err(SubmitError::Rejected),
+            Ok(StreamEvent::Expired) => return Err(SubmitError::DeadlineExceeded),
             Err(_) => return Err(SubmitError::EngineGone),
         }
     }
 }
 
 /// Where a pending request's reply goes (blocking or streaming).
-enum Responder {
+/// Public so the cluster supervisor can re-attach a surviving reply
+/// channel when it resumes a session on another worker.
+#[derive(Clone)]
+pub enum Responder {
+    /// Terminal-reply channel (one [`ServerReply`]).
     Blocking(Sender<ServerReply>),
+    /// Per-token channel ([`StreamEvent`]s then a terminal).
     Streaming(Sender<StreamEvent>),
+}
+
+impl Responder {
+    /// Deliver a terminal rejection on either path.
+    fn reject(&self) {
+        match self {
+            Responder::Blocking(tx) => {
+                let _ = tx.send(ServerReply::Rejected);
+            }
+            Responder::Streaming(tx) => {
+                let _ = tx.send(StreamEvent::Rejected);
+            }
+        }
+    }
 }
 
 /// Run the engine loop on the *current* thread until shutdown.
@@ -191,26 +264,141 @@ pub fn serve_with_stats<E: StepExecutor>(
     rx: Receiver<Msg>,
     stats: Arc<EngineStats>,
 ) -> Result<Arc<EngineStats>> {
+    serve_inner(exec, cfg, rx, stats, None)
+}
+
+/// Supervision context a watchdog hands to [`serve_supervised`].
+#[derive(Clone)]
+pub struct ServeHooks {
+    /// Bumped every loop iteration (including idle waits); a supervisor
+    /// that sees it frozen past its hang timeout declares the worker
+    /// dead and fences this incarnation off.
+    pub heartbeat: Arc<AtomicU64>,
+    /// Set by the supervisor when this incarnation is abandoned (hung
+    /// tick, restart in progress). The loop stops delivering replies
+    /// and returns at the next check, so a zombie thread can never
+    /// race the replacement worker for the same reply channels.
+    pub fence: Arc<AtomicBool>,
+    /// Latest snapshot per in-flight request id, published on the
+    /// engine's [`EngineConfig::snapshot_every`] cadence and pruned on
+    /// completion. The supervisor re-admits lost sessions from here
+    /// after a worker death.
+    pub snapshots: Arc<Mutex<HashMap<u64, SessionSnapshot>>>,
+    /// Request ids that reached a terminal outcome (done, rejected, or
+    /// expired) — the supervisor drains this to prune its in-flight
+    /// recovery table.
+    pub settled: Arc<Mutex<Vec<u64>>>,
+}
+
+impl ServeHooks {
+    /// Fresh hooks (zero heartbeat, open fence, empty stores).
+    pub fn new() -> Self {
+        Self {
+            heartbeat: Arc::new(AtomicU64::new(0)),
+            fence: Arc::new(AtomicBool::new(false)),
+            snapshots: Arc::new(Mutex::new(HashMap::new())),
+            settled: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+}
+
+impl Default for ServeHooks {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// [`serve_with_stats`] under supervision: heartbeats every loop
+/// iteration, publishes session snapshots into the shared store, honors
+/// the fence, and never blocks indefinitely on an idle inbox (so a
+/// fenced or shut-down incarnation always exits promptly).
+pub fn serve_supervised<E: StepExecutor>(
+    exec: &E,
+    cfg: EngineConfig,
+    rx: Receiver<Msg>,
+    stats: Arc<EngineStats>,
+    hooks: ServeHooks,
+) -> Result<Arc<EngineStats>> {
+    serve_inner(exec, cfg, rx, stats, Some(hooks))
+}
+
+fn serve_inner<E: StepExecutor>(
+    exec: &E,
+    cfg: EngineConfig,
+    rx: Receiver<Msg>,
+    stats: Arc<EngineStats>,
+    hooks: Option<ServeHooks>,
+) -> Result<Arc<EngineStats>> {
     let mut engine = Engine::with_stats(exec, cfg, Arc::clone(&stats));
     // Shared between the loop and the engine's token sink (same thread;
     // the sink only fires inside `engine.tick()`, never while the loop
     // holds a borrow).
     let responders: Rc<RefCell<HashMap<u64, Responder>>> = Rc::new(RefCell::new(HashMap::new()));
     let sink_map = Rc::clone(&responders);
+    let sink_fence = hooks.as_ref().map(|h| Arc::clone(&h.fence));
     engine.set_token_sink(Box::new(move |id, index, token| {
+        if sink_fence.as_ref().is_some_and(|f| f.load(Ordering::SeqCst)) {
+            return;
+        }
         if let Some(Responder::Streaming(tx)) = sink_map.borrow().get(&id) {
             let _ = tx.send(StreamEvent::Token { index, token });
         }
     }));
+    if let Some(h) = &hooks {
+        let store = Arc::clone(&h.snapshots);
+        let fence = Arc::clone(&h.fence);
+        engine.set_snapshot_sink(Box::new(move |snap| {
+            // Fenced incarnations must not publish: the engine records
+            // tokens into `generated` even when the (fenced) token sink
+            // suppressed their delivery, so a post-fence snapshot could
+            // run AHEAD of what the client received and resuming from
+            // it would open a gap in the stream. The fence is
+            // monotonic, so an unfenced write here implies the tick's
+            // emissions were delivered — store state never passes
+            // client state.
+            if fence.load(Ordering::SeqCst) {
+                return;
+            }
+            // A poisoned store only loses snapshot freshness (recovery
+            // falls back to an older snapshot or a full re-decode).
+            let mut m = store.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+            m.insert(snap.req.id, snap);
+        }));
+    }
+    // Records terminal outcomes for the supervisor's in-flight table.
+    // No-op when unsupervised.
+    let settle = {
+        let store = hooks.as_ref().map(|h| Arc::clone(&h.settled));
+        move |id: u64| {
+            if let Some(s) = &store {
+                s.lock().unwrap_or_else(std::sync::PoisonError::into_inner).push(id);
+            }
+        }
+    };
     let mut shutting_down = false;
     loop {
+        if let Some(h) = &hooks {
+            h.heartbeat.fetch_add(1, Ordering::Relaxed);
+            if h.fence.load(Ordering::SeqCst) {
+                return Ok(stats);
+            }
+        }
         // Drain the inbox without blocking while work is in flight;
-        // block when idle to avoid spinning.
+        // wait when idle to avoid spinning (bounded under supervision so
+        // heartbeats keep flowing and the fence is noticed).
         loop {
             let msg = if engine.pending() == 0 && !shutting_down {
-                match rx.recv() {
-                    Ok(m) => m,
-                    Err(_) => return Ok(stats),
+                if hooks.is_some() {
+                    match rx.recv_timeout(std::time::Duration::from_millis(25)) {
+                        Ok(m) => m,
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => return Ok(stats),
+                    }
+                } else {
+                    match rx.recv() {
+                        Ok(m) => m,
+                        Err(_) => return Ok(stats),
+                    }
                 }
             } else {
                 match rx.try_recv() {
@@ -231,12 +419,14 @@ pub fn serve_with_stats<E: StepExecutor>(
                     if responders.borrow().contains_key(&id) {
                         stats.rejected.inc();
                         let _ = tx.send(ServerReply::Rejected);
+                        settle(id);
                     } else if engine.submit(req) {
                         responders.borrow_mut().insert(id, Responder::Blocking(tx));
                     } else {
                         // Explicit rejection; the sender then drops, so
                         // the caller never hangs on a leaked responder.
                         let _ = tx.send(ServerReply::Rejected);
+                        settle(id);
                     }
                 }
                 Msg::SubmitStreaming(req, tx) => {
@@ -244,18 +434,74 @@ pub fn serve_with_stats<E: StepExecutor>(
                     if responders.borrow().contains_key(&id) {
                         stats.rejected.inc();
                         let _ = tx.send(StreamEvent::Rejected);
+                        settle(id);
                     } else if engine.submit(req) {
                         responders.borrow_mut().insert(id, Responder::Streaming(tx));
                     } else {
                         let _ = tx.send(StreamEvent::Rejected);
+                        settle(id);
+                    }
+                }
+                Msg::Resume(r) => {
+                    let ResumeMsg { snapshot, responder } = *r;
+                    let id = snapshot.req.id;
+                    if responders.borrow().contains_key(&id) {
+                        stats.rejected.inc();
+                        responder.reject();
+                        settle(id);
+                    } else {
+                        match engine.resume(snapshot) {
+                            Ok(()) => {
+                                responders.borrow_mut().insert(id, responder);
+                            }
+                            Err(_) => {
+                                stats.rejected.inc();
+                                responder.reject();
+                                settle(id);
+                            }
+                        }
                     }
                 }
                 Msg::Shutdown => shutting_down = true,
             }
         }
         engine.tick()?;
-        for resp in engine.take_responses() {
-            match responders.borrow_mut().remove(&resp.id) {
+        if let Some(h) = &hooks {
+            if h.fence.load(Ordering::SeqCst) {
+                // Fenced mid-tick (e.g. a hung tick the supervisor gave
+                // up on): deliver nothing — the replacement worker owns
+                // these sessions now.
+                return Ok(stats);
+            }
+        }
+        let expired = engine.take_expired();
+        for id in &expired {
+            match responders.borrow_mut().remove(id) {
+                Some(Responder::Blocking(tx)) => {
+                    let _ = tx.send(ServerReply::Expired);
+                }
+                Some(Responder::Streaming(tx)) => {
+                    let _ = tx.send(StreamEvent::Expired);
+                }
+                None => {}
+            }
+            settle(*id);
+        }
+        let responses = engine.take_responses();
+        if let Some(h) = &hooks {
+            if !expired.is_empty() || !responses.is_empty() {
+                let mut m = h.snapshots.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+                for id in &expired {
+                    m.remove(id);
+                }
+                for resp in &responses {
+                    m.remove(&resp.id);
+                }
+            }
+        }
+        for resp in responses {
+            let id = resp.id;
+            match responders.borrow_mut().remove(&id) {
                 Some(Responder::Blocking(tx)) => {
                     let _ = tx.send(ServerReply::Done(resp));
                 }
@@ -264,6 +510,7 @@ pub fn serve_with_stats<E: StepExecutor>(
                 }
                 None => {}
             }
+            settle(id);
         }
         if shutting_down && engine.pending() == 0 {
             return Ok(stats);
@@ -315,6 +562,7 @@ mod tests {
             policy: "subgen".into(),
             budget: 16,
             delta: 0.5,
+            deadline: None,
         };
         let resp = h2.submit_blocking(req).unwrap();
         assert_eq!(resp.tokens.len(), 5);
@@ -393,7 +641,7 @@ mod tests {
             match recv_reply(rx) {
                 Ok(_) => done += 1,
                 Err(SubmitError::Rejected) => rejected += 1,
-                Err(SubmitError::EngineGone) => panic!("request dropped without a reply"),
+                Err(e) => panic!("request dropped without a reply: {e}"),
             }
         }
         assert_eq!(done, 1);
@@ -470,5 +718,179 @@ mod tests {
         t.join().unwrap();
         let err = handle.submit_blocking(Request::exact(1, vec![1], 1)).unwrap_err();
         assert_eq!(err, SubmitError::EngineGone);
+    }
+
+    #[test]
+    fn expired_request_gets_typed_reply_on_both_paths() {
+        let (handle, rx) = channel();
+        let t = std::thread::spawn(move || {
+            let exec = MockExecutor::small();
+            serve(&exec, EngineConfig::default(), rx).unwrap()
+        });
+        let dl = std::time::Duration::ZERO;
+        let err = handle
+            .submit_blocking(Request::exact(1, vec![1], 500).with_deadline(dl))
+            .unwrap_err();
+        assert_eq!(err, SubmitError::DeadlineExceeded);
+        let srx = handle
+            .submit_streaming(Request::exact(2, vec![1], 500).with_deadline(dl))
+            .unwrap();
+        assert_eq!(drain_stream(&srx).unwrap_err(), SubmitError::DeadlineExceeded);
+        // The loop is still healthy afterwards.
+        let resp = handle.submit_blocking(Request::exact(3, vec![3], 2)).unwrap();
+        assert_eq!(resp.tokens, vec![4, 5]);
+        handle.shutdown();
+        let stats = t.join().unwrap();
+        assert_eq!(stats.deadline_exceeded.get(), 2);
+        assert_eq!(stats.completed.get(), 1);
+    }
+
+    #[test]
+    fn drain_stream_dedupes_replayed_suffix() {
+        // At-least-once delivery across a recovery: the resumed worker
+        // re-emits part of the stream; the client-side drain must
+        // deliver exactly-once semantics by index.
+        let (tx, rx) = mpsc::channel();
+        for (index, token) in [(0, 5), (1, 6), (0, 5), (1, 6), (2, 7)] {
+            tx.send(StreamEvent::Token { index, token }).unwrap();
+        }
+        let resp = Response {
+            id: 1,
+            tokens: vec![5, 6, 7],
+            latency: std::time::Duration::ZERO,
+            queue_time: std::time::Duration::ZERO,
+            cache_bytes: 1,
+        };
+        tx.send(StreamEvent::Done(resp)).unwrap();
+        drop(tx);
+        let (tokens, resp) = drain_stream(&rx).unwrap();
+        assert_eq!(tokens, vec![5, 6, 7]);
+        assert_eq!(resp.tokens, tokens);
+    }
+
+    #[test]
+    fn drain_stream_flags_a_gap_instead_of_silently_skipping() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(StreamEvent::Token { index: 0, token: 5 }).unwrap();
+        tx.send(StreamEvent::Token { index: 2, token: 7 }).unwrap();
+        drop(tx);
+        assert_eq!(drain_stream(&rx).unwrap_err(), SubmitError::EngineGone);
+    }
+
+    #[test]
+    fn supervised_loop_heartbeats_and_honors_fence() {
+        let (handle, rx) = channel();
+        let hooks = ServeHooks::new();
+        let h = hooks.clone();
+        let t = std::thread::spawn(move || {
+            let exec = MockExecutor::small();
+            serve_supervised(&exec, EngineConfig::default(), rx, Default::default(), h).unwrap()
+        });
+        let resp = handle.submit_blocking(Request::exact(1, vec![3], 3)).unwrap();
+        assert_eq!(resp.tokens, vec![4, 5, 6]);
+        // Idle loop keeps beating…
+        let hb0 = hooks.heartbeat.load(Ordering::Relaxed);
+        std::thread::sleep(std::time::Duration::from_millis(80));
+        assert!(hooks.heartbeat.load(Ordering::Relaxed) > hb0);
+        // …and the fence shuts it down without a Shutdown message.
+        hooks.fence.store(true, Ordering::SeqCst);
+        t.join().unwrap();
+        let err = handle.submit_blocking(Request::exact(2, vec![1], 1)).unwrap_err();
+        assert_eq!(err, SubmitError::EngineGone);
+    }
+
+    #[test]
+    fn supervised_loop_publishes_and_prunes_snapshots() {
+        let (handle, rx) = channel();
+        let hooks = ServeHooks::new();
+        let h = hooks.clone();
+        let t = std::thread::spawn(move || {
+            let exec = MockExecutor::small();
+            let cfg = EngineConfig { snapshot_every: 1, ..Default::default() };
+            serve_supervised(&exec, cfg, rx, Default::default(), h).unwrap()
+        });
+        let resp = handle.submit_blocking(Request::exact(1, vec![3], 4)).unwrap();
+        assert_eq!(resp.tokens.len(), 4);
+        // Completed sessions are pruned from the recovery store.
+        assert!(hooks.snapshots.lock().unwrap().is_empty());
+        handle.shutdown();
+        let stats = t.join().unwrap();
+        assert!(stats.snapshots.get() > 0);
+    }
+
+    #[test]
+    fn resume_message_reattaches_responder_mid_stream() {
+        // Simulate what the supervisor does: snapshot a session on one
+        // loop, fence that loop mid-stream, resume the session on a
+        // second loop with the caller's original reply sender — the
+        // client sees one gap-free, exactly-once stream equal to the
+        // uninterrupted run.
+        use crate::coordinator::FaultPlan;
+        let req = Request {
+            id: 6,
+            session_id: None,
+            prompt: vec![2, 5, 7],
+            max_new: 8,
+            policy: "subgen".into(),
+            budget: 16,
+            delta: 0.5,
+            deadline: None,
+        };
+
+        // Reference: uninterrupted run.
+        let (h1, rx1) = channel();
+        let e1 = crate::model::HostExecutor::small(9);
+        let t1 = std::thread::spawn(move || serve(&e1, EngineConfig::default(), rx1).unwrap());
+        let want = h1.submit_blocking(req.clone()).unwrap().tokens;
+        assert_eq!(want.len(), 8);
+        h1.shutdown();
+        t1.join().unwrap();
+
+        // Interrupted run. The fault plan stalls tick 5 for long enough
+        // that the fence deterministically lands before completion; the
+        // message is dispatched by hand so the test holds the
+        // router-side clone of the reply sender.
+        let (h2, rx2) = channel();
+        let hooks = ServeHooks::new();
+        let hk = hooks.clone();
+        let e2 = crate::model::HostExecutor::small(9);
+        let t2 = std::thread::spawn(move || {
+            let cfg = EngineConfig {
+                snapshot_every: 1,
+                fault: FaultPlan {
+                    stall_at_tick: Some((5, std::time::Duration::from_millis(500))),
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            serve_supervised(&e2, cfg, rx2, Default::default(), hk).unwrap()
+        });
+        let (ev_tx, ev_rx) = mpsc::channel();
+        h2.tx.send(Msg::SubmitStreaming(req, ev_tx.clone())).unwrap();
+        let t0 = std::time::Instant::now();
+        loop {
+            if hooks.snapshots.lock().unwrap().contains_key(&6) {
+                break;
+            }
+            assert!(t0.elapsed() < std::time::Duration::from_secs(5), "no snapshot published");
+            std::thread::yield_now();
+        }
+        hooks.fence.store(true, Ordering::SeqCst);
+        t2.join().unwrap();
+        let snapshot = hooks.snapshots.lock().unwrap().remove(&6).unwrap();
+        assert!(!snapshot.generated.is_empty());
+        assert!(snapshot.generated.len() < want.len());
+
+        // A second worker resumes with the surviving sender clone.
+        let (h3, rx3) = channel();
+        let e3 = crate::model::HostExecutor::small(9);
+        let t3 = std::thread::spawn(move || serve(&e3, EngineConfig::default(), rx3).unwrap());
+        let resume = ResumeMsg { snapshot, responder: Responder::Streaming(ev_tx) };
+        h3.tx.send(Msg::Resume(Box::new(resume))).unwrap();
+        let (tokens, resp) = drain_stream(&ev_rx).unwrap();
+        assert_eq!(tokens, want);
+        assert_eq!(resp.tokens, want);
+        h3.shutdown();
+        t3.join().unwrap();
     }
 }

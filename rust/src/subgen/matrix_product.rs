@@ -62,6 +62,32 @@ impl MatrixProductSketch {
         }
     }
 
+    /// Rebuild from serialized parts (snapshot restore). Callers must
+    /// pass the exact captured state — arenas, per-slot norms, mass,
+    /// and fill flag — so the restored reservoir continues the original
+    /// coin-flip sequence bit-for-bit (given the same restored RNG).
+    pub fn from_parts(
+        dim: usize,
+        keys: Tensor,
+        values: Tensor,
+        v_norm_sq: Vec<f64>,
+        mass: f64,
+        filled: bool,
+    ) -> Self {
+        let s = v_norm_sq.len();
+        assert!(s > 0, "need at least one sample slot");
+        assert_eq!(keys.rows(), s, "key arena rows mismatch");
+        assert_eq!(values.rows(), s, "value arena rows mismatch");
+        assert_eq!(keys.cols(), dim, "key arena width mismatch");
+        assert_eq!(values.cols(), dim, "value arena width mismatch");
+        Self { dim, keys, values, v_norm_sq, mass, filled }
+    }
+
+    /// Cached per-slot ‖v‖² array (snapshot capture).
+    pub fn v_norm_sq(&self) -> &[f64] {
+        &self.v_norm_sq
+    }
+
     /// Observe one (k, v) pair (Algorithm 1, lines 24–28; μ update in
     /// line 6 is folded in). Replacement probability per slot is
     /// `‖v‖²/(μ + ‖v‖²)`; a replaced slot's rows are overwritten in

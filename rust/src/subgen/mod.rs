@@ -24,7 +24,11 @@ pub use legacy::LegacyReferenceSketch;
 pub use matrix_product::{KvSampleRef, MatrixProductSketch};
 pub use normalizer::SoftmaxNormalizerSketch;
 
+use crate::clustering::OnlineThresholdClustering;
+use crate::io::Checkpoint;
 use crate::rng::Pcg64;
+use crate::tensor::Tensor;
+use anyhow::Result;
 use std::cell::RefCell;
 
 /// Reusable buffers for the allocation-free query paths. One instance
@@ -286,6 +290,98 @@ impl SubGenAttention {
     pub fn config(&self) -> &SubGenConfig {
         &self.cfg
     }
+
+    /// Serialize the full sketch state under `prefix` in `ck`:
+    /// reservoir arenas, cluster state (including the *current* δ,
+    /// which δ-doubling may have grown past the config value), and the
+    /// exact RNG state, so a restored sketch continues the update
+    /// stream bit-for-bit. Non-f32 scalars ride the checkpoint's
+    /// 16-bit-limb codecs; f32 arenas are stored verbatim (exact).
+    pub fn save_state(&self, ck: &mut Checkpoint, prefix: &str) {
+        let (rng_state, rng_inc) = self.rng.state_parts();
+        ck.insert_u128(&format!("{prefix}/rng_state"), rng_state);
+        ck.insert_u128(&format!("{prefix}/rng_inc"), rng_inc);
+        let cl = self.normalizer.clustering();
+        ck.insert_u64s(
+            &format!("{prefix}/meta"),
+            &[self.n, self.matprod.is_filled() as u64, cl.total()],
+        );
+        let mp = &self.matprod;
+        let s = mp.num_slots();
+        ck.insert(&format!("{prefix}/mp_keys"), vec![s, self.cfg.dim], mp.keys().as_slice().into());
+        ck.insert(
+            &format!("{prefix}/mp_values"),
+            vec![s, self.cfg.dim],
+            mp.values().as_slice().into(),
+        );
+        ck.insert_f64s(&format!("{prefix}/mp_vns"), mp.v_norm_sq());
+        ck.insert_f64s(&format!("{prefix}/mp_mass"), &[mp.mass()]);
+        let m = cl.num_clusters();
+        ck.insert(&format!("{prefix}/nz_delta"), vec![1], vec![cl.delta()]);
+        ck.insert(
+            &format!("{prefix}/nz_centers"),
+            vec![m, self.cfg.dim],
+            cl.centers().as_slice().into(),
+        );
+        ck.insert_u64s(&format!("{prefix}/nz_counts"), cl.counts());
+        let arena = self.normalizer.samples_arena();
+        ck.insert(
+            &format!("{prefix}/nz_samples"),
+            vec![m * self.cfg.t, self.cfg.dim],
+            arena.as_slice().into(),
+        );
+    }
+
+    /// Rebuild a sketch saved by [`Self::save_state`]. `cfg` must match
+    /// the construction-time configuration (it is not stored — the
+    /// owning cache policy re-derives it from its own config).
+    pub fn restore_state(cfg: SubGenConfig, ck: &Checkpoint, prefix: &str) -> Result<Self> {
+        let rng_state = ck.require_u128(&format!("{prefix}/rng_state"))?;
+        let rng_inc = ck.require_u128(&format!("{prefix}/rng_inc"))?;
+        let meta = ck.require_u64s(&format!("{prefix}/meta"))?;
+        anyhow::ensure!(meta.len() == 3, "{prefix}/meta: expected 3 entries, got {}", meta.len());
+        let (n, filled, total) = (meta[0], meta[1] != 0, meta[2]);
+        let keys = ck.require(&format!("{prefix}/mp_keys"))?;
+        let values = ck.require(&format!("{prefix}/mp_values"))?;
+        let vns = ck.require_f64s(&format!("{prefix}/mp_vns"))?;
+        let mass = ck.require_f64s(&format!("{prefix}/mp_mass"))?;
+        anyhow::ensure!(mass.len() == 1, "{prefix}/mp_mass: expected 1 entry");
+        anyhow::ensure!(vns.len() == cfg.s, "{prefix}/mp_vns: slot count mismatch");
+        let matprod = MatrixProductSketch::from_parts(
+            cfg.dim,
+            Tensor::from_vec(keys.data.clone(), cfg.s, cfg.dim),
+            Tensor::from_vec(values.data.clone(), cfg.s, cfg.dim),
+            vns,
+            mass[0],
+            filled,
+        );
+        let delta = ck.require(&format!("{prefix}/nz_delta"))?;
+        anyhow::ensure!(delta.data.len() == 1, "{prefix}/nz_delta: expected 1 entry");
+        let counts = ck.require_u64s(&format!("{prefix}/nz_counts"))?;
+        let m = counts.len();
+        let centers = ck.require(&format!("{prefix}/nz_centers"))?;
+        let samples = ck.require(&format!("{prefix}/nz_samples"))?;
+        let clustering = OnlineThresholdClustering::from_parts(
+            cfg.dim,
+            delta.data[0],
+            Tensor::from_vec(centers.data.clone(), m, cfg.dim),
+            counts,
+            total,
+        );
+        let normalizer = SoftmaxNormalizerSketch::from_parts(
+            clustering,
+            Tensor::from_vec(samples.data.clone(), m * cfg.t, cfg.dim),
+            cfg.t,
+        );
+        Ok(Self {
+            matprod,
+            normalizer,
+            rng: Pcg64::from_state_parts(rng_state, rng_inc),
+            cfg,
+            n,
+            scratch: RefCell::new(QueryScratch::default()),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -442,6 +538,35 @@ mod tests {
             assert_eq!(sg.scratch.borrow().capacity_signature(), sig_b);
         }
         assert!(bout.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn save_restore_continues_bit_identically() {
+        let dim = 8;
+        let (keys, values) = clusterable_stream(400, 3, dim, 0.05, 21);
+        let cfg = SubGenConfig { dim, delta: 0.5, t: 8, s: 16 };
+        let mut live = SubGenAttention::new(cfg, 13);
+        for i in 0..200 {
+            live.update(keys.row(i), values.row(i));
+        }
+        live.enforce_cluster_cap(2); // exercise a grown δ through the codec
+        let mut ck = Checkpoint::new();
+        live.save_state(&mut ck, "sg");
+        let ck = Checkpoint::from_bytes(&ck.to_bytes()).unwrap();
+        let mut restored = SubGenAttention::restore_state(cfg, &ck, "sg").unwrap();
+        assert_eq!(restored.len(), live.len());
+        for i in 200..keys.rows() {
+            live.update(keys.row(i), values.row(i));
+            restored.update(keys.row(i), values.row(i));
+        }
+        let q: Vec<f32> = (0..dim).map(|i| 0.2 * (i as f32).cos()).collect();
+        assert_eq!(live.query(&q), restored.query(&q));
+        assert_eq!(live.num_clusters(), restored.num_clusters());
+        assert_eq!(
+            live.normalizer().samples_arena().as_slice(),
+            restored.normalizer().samples_arena().as_slice()
+        );
+        assert_eq!(live.rng.state_parts(), restored.rng.state_parts());
     }
 
     #[test]

@@ -39,6 +39,16 @@ impl SoftmaxNormalizerSketch {
         }
     }
 
+    /// Rebuild from serialized parts (snapshot restore): the restored
+    /// clustering (with its *current* δ) plus the captured sample
+    /// arena, which must hold exactly `t` rows per cluster.
+    pub fn from_parts(clustering: OnlineThresholdClustering, samples: Tensor, t: usize) -> Self {
+        assert!(t > 0, "need at least one sample per cluster");
+        assert_eq!(samples.rows(), clustering.num_clusters() * t, "sample arena rows mismatch");
+        assert_eq!(samples.cols(), clustering.dim(), "sample arena width mismatch");
+        Self { clustering, samples, t }
+    }
+
     /// Observe one key (Algorithm 1, lines 11–22).
     ///
     /// Per-slot Vitter replacement: after the clustering has counted

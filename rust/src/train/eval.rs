@@ -92,6 +92,7 @@ pub fn evaluate_policies<E: StepExecutor>(
                 policy: policy.to_string(),
                 budget: cfg.budget,
                 delta: cfg.delta,
+                deadline: None,
             });
             anyhow::ensure!(accepted, "engine rejected eval request {id}");
         }

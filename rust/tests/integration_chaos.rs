@@ -1,0 +1,107 @@
+//! Chaos integration tests (ISSUE 6 acceptance criteria): a worker
+//! killed mid-stream by a deterministic [`FaultPlan`] while real
+//! `HostExecutor` sessions are in flight. Every session must either
+//! complete gap-free after snapshot restore — with tokens bit-identical
+//! to an undisturbed run — or surface a typed error. No hangs, no
+//! silent drops.
+
+use std::time::Duration;
+use subgen::coordinator::{EngineConfig, FaultPlan, HostExecutor, Request};
+use subgen::kvcache::POLICY_NAMES;
+use subgen::server::{drain_stream, Router, RouterConfig, SubmitError};
+
+/// Mixed-policy request against the small host transformer.
+fn request(id: u64, max_new: usize) -> Request {
+    let policy = POLICY_NAMES[id as usize % POLICY_NAMES.len()];
+    Request {
+        id,
+        session_id: None,
+        prompt: vec![2, 5, 7, 3],
+        max_new,
+        policy: policy.into(),
+        budget: 16,
+        delta: 0.5,
+        deadline: None,
+    }
+}
+
+#[test]
+fn worker_kill_mid_stream_recovers_sessions_bit_identically() {
+    let cfg = EngineConfig { max_active: 4, snapshot_every: 1, ..Default::default() };
+    // Undisturbed reference run: same model seed, same requests.
+    let reference: Vec<Vec<i32>> = {
+        let router = Router::spawn(1, cfg.clone(), |_w| HostExecutor::small(11)).unwrap();
+        let out =
+            (0..6u64).map(|id| router.submit_blocking(request(id, 8)).unwrap().tokens).collect();
+        router.shutdown().unwrap();
+        out
+    };
+
+    // Faulted run: the only worker panics at tick 4 with all six
+    // streams in flight; the supervisor restarts it and re-admits the
+    // sessions from their last snapshots.
+    let rcfg = RouterConfig {
+        poll_every: Duration::from_millis(2),
+        // Submits racing the restart keep retrying until the supervisor
+        // swaps in the replacement inbox.
+        retry_attempts: 6,
+        fault_plans: vec![(0, FaultPlan { panic_at_tick: Some(4), ..Default::default() })],
+        ..Default::default()
+    };
+    let router = Router::spawn_with(1, cfg, rcfg, |_w| HostExecutor::small(11)).unwrap();
+    let rxs: Vec<_> =
+        (0..6u64).map(|id| router.submit_streaming(request(id, 8)).unwrap()).collect();
+    for (id, rx) in rxs.iter().enumerate() {
+        // drain_stream dedupes the replayed suffix by token index, so a
+        // gap or divergence in the restored decode fails loudly here.
+        let (streamed, resp) = drain_stream(rx).unwrap();
+        assert_eq!(streamed, reference[id], "request {id} diverged after recovery");
+        assert_eq!(resp.tokens, streamed, "request {id}: stream/response mismatch");
+    }
+    let snap = router.shutdown().unwrap();
+    assert_eq!(snap.restarts, 1, "{snap:?}");
+    assert!(snap.recovered_sessions >= 1, "{snap:?}");
+    assert_eq!(snap.completed, 6, "{snap:?}");
+    assert!(snap.snapshots >= 1, "{snap:?}");
+}
+
+#[test]
+fn exhausted_restart_budget_surfaces_typed_errors_not_hangs() {
+    // max_restarts 0: the supervisor gives the dead worker up and drops
+    // its in-flight entries — every open stream must end with a typed
+    // error promptly instead of blocking forever.
+    let cfg = EngineConfig { snapshot_every: 1, ..Default::default() };
+    let rcfg = RouterConfig {
+        max_restarts: 0,
+        poll_every: Duration::from_millis(2),
+        retry_attempts: 1,
+        fault_plans: vec![(0, FaultPlan { panic_at_tick: Some(2), ..Default::default() })],
+        ..Default::default()
+    };
+    let router = Router::spawn_with(1, cfg, rcfg, |_w| HostExecutor::small(11)).unwrap();
+    // The worker may die before a later submit is even delivered; both
+    // shapes must be the same typed error, never a hang.
+    let subs: Vec<_> = (0..4u64).map(|id| router.submit_streaming(request(id, 64))).collect();
+    for sub in subs {
+        match sub {
+            Ok(rx) => assert_eq!(drain_stream(&rx).unwrap_err(), SubmitError::EngineGone),
+            Err(e) => assert_eq!(e, SubmitError::EngineGone),
+        }
+    }
+    let snap = router.shutdown().unwrap();
+    assert_eq!(snap.restarts, 0, "{snap:?}");
+    assert_eq!(snap.recovered_sessions, 0, "{snap:?}");
+}
+
+#[test]
+fn deadline_expires_with_typed_reply_through_router() {
+    let router = Router::spawn(1, EngineConfig::default(), |_w| HostExecutor::small(11)).unwrap();
+    let err = router.submit_blocking(request(0, 4).with_deadline(Duration::ZERO)).unwrap_err();
+    assert_eq!(err, SubmitError::DeadlineExceeded);
+    // Work without a deadline is untouched.
+    let resp = router.submit_blocking(request(1, 4)).unwrap();
+    assert_eq!(resp.tokens.len(), 4);
+    let snap = router.shutdown().unwrap();
+    assert_eq!(snap.deadline_exceeded, 1, "{snap:?}");
+    assert_eq!(snap.completed, 1, "{snap:?}");
+}

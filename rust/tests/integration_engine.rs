@@ -115,6 +115,7 @@ fn property_batched_decode_matches_sequential_engine() {
                         policy: policy.to_string(),
                         budget: 16,
                         delta: 0.5,
+                        deadline: None,
                     });
                 }
                 engine.run_to_completion().unwrap();
@@ -144,6 +145,7 @@ fn policies_produce_identical_token_streams_on_mock() {
             policy: policy.to_string(),
             budget: 16,
             delta: 0.5,
+            deadline: None,
         });
         engine.run_to_completion().unwrap();
         let tokens = engine.take_responses().pop().unwrap().tokens;
@@ -191,6 +193,7 @@ fn cache_bytes_reported_smaller_for_compressed_policies() {
             policy: policy.to_string(),
             budget,
             delta: 0.5,
+            deadline: None,
         });
         engine.run_to_completion().unwrap();
         engine.take_responses()[0].cache_bytes

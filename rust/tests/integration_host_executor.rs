@@ -168,6 +168,7 @@ fn all_policies_complete_through_engine_on_host_executor() {
                 policy: policy.to_string(),
                 budget: 48,
                 delta: 4.0,
+                deadline: None,
             }));
         }
         engine.run_to_completion().unwrap();
