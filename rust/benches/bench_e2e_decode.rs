@@ -8,7 +8,9 @@
 //! B ∈ {1, 4, 16} parallel branches decoding over one shared 4096-token
 //! context, batched vs per-sequence, with the per-token timings merged
 //! into `BENCH_query.json` (key `batched_decode`) so the CI perf gate
-//! covers them. Section 2 is the PJRT per-policy/per-capacity step
+//! covers them. Section 1b times chunked prefill against the monolithic
+//! pass at several chunk budgets (key `prefill_chunked`), pinning
+//! bit-identity first. Section 2 is the PJRT per-policy/per-capacity step
 //! bench; it requires artifacts (`make artifacts`) and prints a notice
 //! instead when they are missing so `cargo bench` stays green.
 //!
@@ -16,7 +18,9 @@
 
 use std::path::Path;
 use subgen::bench::{black_box, Bencher, Table};
-use subgen::model::{DecodeStep, Generator, HostExecutor, ModelSpec, SequenceCaches};
+use subgen::model::{
+    DecodeStep, FlatCaches, Generator, HostExecutor, ModelSpec, PrefillOutput, SequenceCaches,
+};
 use subgen::rng::{fill_gaussian, Pcg64};
 use subgen::runtime::Runtime;
 use subgen::workload::{lines_for_seq_len_clamped, RetrievalSampler};
@@ -26,16 +30,17 @@ const N_CTX: usize = 4_096;
 /// Batch widths measured (1 is the per-sequence baseline shape).
 const BATCHES: [usize; 3] = [1, 4, 16];
 
-/// Merge one `"batched_decode": {...}` line into `BENCH_query.json` at
-/// the repo root without disturbing the sections `bench_query_latency`
-/// wrote (the file is a flat object with one nested object per line, so
-/// a line-based splice is exact). Creates the file when absent.
-fn merge_into_bench_query(entry_line: &str) -> anyhow::Result<()> {
+/// Merge one `"<key>": {...}` line into `BENCH_query.json` at the repo
+/// root without disturbing the sections `bench_query_latency` wrote
+/// (the file is a flat object with one nested object per line, so a
+/// line-based splice is exact). Creates the file when absent.
+fn merge_into_bench_query(key: &str, entry_line: &str) -> anyhow::Result<()> {
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_query.json");
     let body = std::fs::read_to_string(path).unwrap_or_else(|_| "{\n}\n".to_string());
+    let marker = format!("\"{key}\"");
     let mut kept: Vec<&str> = body
         .lines()
-        .filter(|l| !l.trim_start().starts_with("\"batched_decode\""))
+        .filter(|l| !l.trim_start().starts_with(marker.as_str()))
         .collect();
     // Drop the final close brace, splice the entry, close again.
     while kept.last().is_some_and(|l| l.trim().is_empty()) {
@@ -55,7 +60,7 @@ fn merge_into_bench_query(entry_line: &str) -> anyhow::Result<()> {
     out.push_str(entry_line);
     out.push_str("\n}\n");
     std::fs::write(path, out)?;
-    println!("\nmerged batched_decode into {path}");
+    println!("\nmerged {key} into {path}");
     Ok(())
 }
 
@@ -135,13 +140,78 @@ fn host_batched_section(bencher: &Bencher) -> anyhow::Result<()> {
     ));
     table.print();
     println!("\n(branches share one context: batched decode loads each cached row once per tick)");
-    merge_into_bench_query(&json)?;
+    merge_into_bench_query("batched_decode", &json)?;
+    Ok(())
+}
+
+/// Chunk budgets measured against the monolithic prefill baseline.
+const CHUNKS: [usize; 3] = [4, 16, 64];
+
+/// Section 1b: chunked prefill vs monolithic over a full `prefill_t`
+/// prompt on the host executor — the scheduling tentpole's cost side.
+/// Each chunked iteration pays the whole engine-shaped path: a fresh
+/// K/V carry plus one `prefill_chunk` call per budget-sized piece.
+/// Timings merge into `BENCH_query.json` (key `prefill_chunked`) so the
+/// CI perf gate covers the chunked path alongside batched decode.
+fn host_prefill_chunked_section(bencher: &Bencher) -> anyhow::Result<()> {
+    let exec = HostExecutor::small(9);
+    let spec = exec.spec().clone();
+    let t = spec.prefill_t;
+    let prompt: Vec<i32> = (0..t).map(|i| (i % spec.vocab) as i32).collect();
+    let run_chunked = |chunk: usize| -> PrefillOutput {
+        let mut carry = FlatCaches::for_prefill(&spec, t);
+        let mut start = 0;
+        let mut last = None;
+        while start < t {
+            let take = chunk.min(t - start);
+            last = Some(
+                exec.prefill_chunk(&mut carry, &prompt[start..start + take], start)
+                    .expect("prefill_chunk"),
+            );
+            start += take;
+        }
+        last.expect("non-empty prompt")
+    };
+    // Pin before timing: the last chunk's logits row decides the first
+    // generated token and must match the monolithic pass bit for bit.
+    let mono = exec.prefill(&prompt)?;
+    let v = spec.vocab;
+    for &chunk in &CHUNKS {
+        let out = run_chunked(chunk);
+        anyhow::ensure!(
+            out.logits[(t - 1) * v..t * v] == mono.logits[(t - 1) * v..t * v],
+            "chunked prefill drifted at chunk={chunk}"
+        );
+    }
+
+    println!("\n== chunked prefill vs monolithic over a {t}-token prompt ==\n");
+    let mut table = Table::new(&["chunk", "ns/token", "vs monolithic"]);
+    let r_mono = bencher.run("prefill/monolithic", || {
+        black_box(exec.prefill(black_box(&prompt)).expect("prefill"));
+    });
+    let mono_ns = r_mono.mean_ns() / t as f64;
+    table.row(&["whole prompt".into(), format!("{mono_ns:.0}"), "1.00x".into()]);
+    let mut json =
+        format!("  \"prefill_chunked\": {{\"prompt_t\": {t}, \"monolithic_per_token_ns\": {mono_ns:.0}");
+    for &chunk in &CHUNKS {
+        let r = bencher.run(&format!("prefill_chunked/c{chunk}"), || {
+            black_box(run_chunked(black_box(chunk)));
+        });
+        let ns = r.mean_ns() / t as f64;
+        table.row(&[chunk.to_string(), format!("{ns:.0}"), format!("{:.2}x", ns / mono_ns)]);
+        json.push_str(&format!(", \"chunk{chunk}_per_token_ns\": {ns:.0}"));
+    }
+    json.push('}');
+    table.print();
+    println!("\n(chunking trades a bounded re-dispatch overhead for interleaved decode ticks)");
+    merge_into_bench_query("prefill_chunked", &json)?;
     Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
     let bencher = Bencher { budget: std::time::Duration::from_millis(800), ..Default::default() };
     host_batched_section(&bencher)?;
+    host_prefill_chunked_section(&bencher)?;
 
     let artifacts = Path::new("artifacts");
     if !artifacts.join("manifest.toml").exists() {

@@ -17,7 +17,7 @@
 use subgen::attention::{error_bound_rhs, exact_attention};
 use subgen::bench::fmt_bytes;
 use subgen::cli::Args;
-use subgen::coordinator::{Engine, EngineConfig, HostExecutor, Request};
+use subgen::coordinator::{Engine, EngineConfig, HostExecutor, Request, RequestClass};
 use subgen::kvcache::bytes_per_slot;
 use subgen::subgen::{SubGenAttention, SubGenConfig};
 use subgen::tensor::Tensor;
@@ -103,6 +103,7 @@ fn host_decode_demo() -> anyhow::Result<()> {
             budget: 16,
             delta: 0.5,
             deadline: None,
+            class: RequestClass::Interactive,
         });
         engine.run_to_completion()?;
         let resp = engine.take_responses().pop().expect("one response");

@@ -20,7 +20,7 @@ use anyhow::Result;
 use std::path::PathBuf;
 use subgen::bench::{fmt_bytes, Table};
 use subgen::cli::Args;
-use subgen::coordinator::{Engine, EngineConfig, HostExecutor, Request, StepExecutor};
+use subgen::coordinator::{Engine, EngineConfig, HostExecutor, Request, RequestClass, StepExecutor};
 use subgen::model::{Generator, ModelSpec};
 use subgen::rng::Pcg64;
 use subgen::runtime::Runtime;
@@ -116,10 +116,8 @@ fn run_cell<E: StepExecutor>(
     delta: f32,
     seed: u64,
 ) -> Result<(f64, usize)> {
-    let mut engine = Engine::new(
-        exec,
-        EngineConfig { max_active: 4, prefills_per_tick: 2, ..Default::default() },
-    );
+    let mut engine =
+        Engine::new(exec, EngineConfig::builder().max_active(4).prefills_per_tick(2).build());
     // Same question set across policies (same seed).
     let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed ^ n as u64));
     let mut expected = Vec::new();
@@ -136,6 +134,7 @@ fn run_cell<E: StepExecutor>(
             budget,
             delta,
             deadline: None,
+            class: RequestClass::Interactive,
         });
     }
     engine.run_to_completion()?;

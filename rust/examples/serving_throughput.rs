@@ -26,13 +26,13 @@ use anyhow::Result;
 use std::path::PathBuf;
 use subgen::bench::Table;
 use subgen::cli::Args;
-use subgen::coordinator::{EngineConfig, FaultPlan, HostExecutor, Request};
+use subgen::coordinator::{EngineConfig, FaultPlan, HostExecutor, Request, RequestClass};
 use subgen::model::{Generator, ModelSpec};
 use subgen::rng::Pcg64;
 use subgen::runtime::Runtime;
 use subgen::server::{
     channel, prometheus_text, serve, ChaosReport, ClusterSnapshot, LoadGen, LoadGenReport, Router,
-    RouterConfig,
+    RouterConfig, StreamingReport,
 };
 use subgen::workload::{lines_for_seq_len_clamped, RetrievalSampler};
 
@@ -47,6 +47,9 @@ fn main() -> Result<()> {
         .describe("new", Some("8"), "tokens generated per request")
         .describe("budget", Some("192"), "per-head budget for compressed policies")
         .describe("chaos", None, "inject a worker kill and report recovery (kill-one)")
+        .describe("mixed", None, "mixed-load run: long batch prefills + interactive decode, \
+                   chunked-prefill scheduler vs monolithic")
+        .describe("prefill-chunk", Some("32"), "prefill token budget per tick in --mixed")
         .describe("seed", Some("0"), "rng seed");
     args.exit_on_help();
     let executor = args.get_or("executor", "host");
@@ -67,6 +70,11 @@ fn main() -> Result<()> {
         anyhow::ensure!(scenario == "kill-one", "unknown chaos scenario {scenario:?} (kill-one)");
         anyhow::ensure!(executor == "host", "chaos scenarios need the host executor");
         return run_chaos(workers, requests, n, max_new, budget, seed);
+    }
+    if args.flag("mixed") {
+        anyhow::ensure!(executor == "host", "the mixed-load scenario needs the host executor");
+        let chunk = args.usize_or("prefill-chunk", 32).max(1);
+        return run_mixed(requests, n, max_new, budget, seed, chunk);
     }
 
     println!("executor: {executor} workers: {workers}");
@@ -127,12 +135,11 @@ fn run_chaos(
     seed: u64,
 ) -> Result<()> {
     let model_seed = seed ^ 0xBEEF;
-    let cfg = EngineConfig {
-        max_active: 4,
-        prefills_per_tick: 1,
-        snapshot_every: 1,
-        ..Default::default()
-    };
+    let cfg = EngineConfig::builder()
+        .max_active(4)
+        .prefills_per_tick(1)
+        .snapshot_every(1)
+        .build();
     // Identical prompts in both runs so the latency comparison is
     // workload-for-workload.
     let load = || {
@@ -151,6 +158,7 @@ fn run_chaos(
             budget,
             delta: 4.0,
             deadline: None,
+            class: RequestClass::Interactive,
         });
         LoadGen { rate: 1e6, requests, make_request, seed }
     };
@@ -160,10 +168,9 @@ fn run_chaos(
     let baseline = load().run_streaming(&baseline_router);
     baseline_router.shutdown()?;
 
-    let rcfg = RouterConfig {
-        fault_plans: vec![(0, FaultPlan { panic_at_tick: Some(8), ..Default::default() })],
-        ..Default::default()
-    };
+    let rcfg = RouterConfig::builder()
+        .fault_plans(vec![(0, FaultPlan { panic_at_tick: Some(8), ..Default::default() })])
+        .build();
     let router =
         Router::spawn_with(workers, cfg, rcfg, move |_w| HostExecutor::retrieval(model_seed))?;
     let faulted = load().run_streaming(&router);
@@ -196,6 +203,96 @@ fn run_chaos(
     Ok(())
 }
 
+/// Mixed-load scenario: long-prompt **batch** prefills interleaved
+/// with short-prompt **interactive** requests on a single worker, so
+/// the two classes contend for the same tick loop. The workload runs
+/// twice — monolithic prefill (`prefill_chunk = 0`) and chunked — and
+/// reports per-class `ttft_p95`/`tpot_p95` lines (CI greps these), the
+/// headline comparison (`improved=true` when chunking lowered
+/// interactive p95 TTFT), and the chunked run's Prometheus families
+/// (`subgen_prefill_chunks_total` & co).
+fn run_mixed(
+    requests: usize,
+    n: usize,
+    max_new: usize,
+    budget: usize,
+    seed: u64,
+    chunk: usize,
+) -> Result<()> {
+    let requests = requests.max(8);
+    println!("mixed-load: requests={requests} n={n} prefill_chunk={chunk} (vs monolithic)");
+    let (mono_report, _) = run_mixed_once(requests, n, max_new, budget, seed, 0)?;
+    let (chunked_report, snap) = run_mixed_once(requests, n, max_new, budget, seed, chunk)?;
+    for (label, report) in [(0usize, &mono_report), (chunk, &chunked_report)] {
+        for class in [RequestClass::Interactive, RequestClass::Batch] {
+            println!(
+                "mixed prefill_chunk={label} class={} ttft_p95={:?} tpot_p95={:?} streams={}",
+                class.label(),
+                report.ttft_for(class).p95(),
+                report.tpot_for(class).p95(),
+                report.ttft_for(class).count(),
+            );
+        }
+    }
+    let (mono, chunked) =
+        (mono_report.ttft_interactive.p95(), chunked_report.ttft_interactive.p95());
+    println!(
+        "mixed interactive ttft_p95 monolithic={mono:?} chunked={chunked:?} improved={}",
+        chunked < mono
+    );
+    print!("{}", prometheus_text(&snap));
+    Ok(())
+}
+
+/// One mixed-load pass at a given prefill chunk budget (0 = monolithic).
+/// Even ids are batch-class with ~`n`-token prompts, odd ids are
+/// interactive with short prompts, arriving as an open-loop Poisson
+/// stream whose mean gap is comparable to one long prefill — so
+/// interactive requests routinely land while a batch prefill is in
+/// flight, which is exactly the head-of-line blocking a chunked
+/// scheduler bounds to one chunk.
+fn run_mixed_once(
+    requests: usize,
+    n: usize,
+    max_new: usize,
+    budget: usize,
+    seed: u64,
+    chunk: usize,
+) -> Result<(StreamingReport, ClusterSnapshot)> {
+    let model_seed = seed ^ 0xBEEF;
+    let cfg = EngineConfig::builder()
+        .max_active(4)
+        .prefills_per_tick(1)
+        .prefill_chunk(chunk)
+        .build();
+    let router = Router::spawn(1, cfg, move |_w| HostExecutor::retrieval(model_seed))?;
+    let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed));
+    let mut prompts = Vec::with_capacity(requests);
+    for id in 0..requests {
+        let lines = if id % 2 == 0 { lines_for_seq_len_clamped(n) } else { 2 };
+        prompts.push(sampler.sample(lines).tokens().0);
+    }
+    let make_request = Box::new(move |id: u64| {
+        let class =
+            if id % 2 == 0 { RequestClass::Batch } else { RequestClass::Interactive };
+        Request {
+            id,
+            session_id: None,
+            prompt: prompts[id as usize].clone(),
+            max_new,
+            policy: "subgen".into(),
+            budget,
+            delta: 4.0,
+            deadline: None,
+            class,
+        }
+    });
+    let report =
+        LoadGen { rate: 400.0, requests, make_request, seed }.run_streaming(&router);
+    let snap = router.shutdown()?;
+    Ok((report, snap))
+}
+
 /// One policy's run: spawn the serving backend, drive the open-loop
 /// load, drain, and return (load report, final cluster snapshot).
 fn run_policy(
@@ -226,8 +323,9 @@ fn run_policy(
         budget,
         delta: 4.0,
         deadline: None,
+        class: RequestClass::Interactive,
     });
-    let cfg = EngineConfig { max_active: 4, prefills_per_tick: 1, ..Default::default() };
+    let cfg = EngineConfig::builder().max_active(4).prefills_per_tick(1).build();
     let loadgen = LoadGen { rate, requests, make_request, seed };
 
     if executor == "host" {

@@ -1,6 +1,6 @@
 //! The continuous-batching scheduler.
 
-use super::{Request, Response, StepExecutor};
+use super::{Request, RequestClass, Response, StepExecutor};
 use super::request::Timing;
 use super::snapshot::{FaultPlan, SessionSnapshot};
 use crate::kvcache::attention_flat_into;
@@ -9,6 +9,7 @@ use crate::metrics::{Counter, Gauge, Histogram};
 use anyhow::Result;
 use std::collections::VecDeque;
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Per-token hook: `(request id, token index, token)`, called as
 /// `decode_tick` emits each token — the streaming-response tap.
@@ -20,7 +21,13 @@ pub type TokenSink<'e> = Box<dyn FnMut(u64, usize, i32) + 'e>;
 pub type SnapshotSink<'e> = Box<dyn FnMut(SessionSnapshot) + 'e>;
 
 /// Engine tuning knobs.
+///
+/// Construct via [`EngineConfig::builder`] (or start from
+/// [`EngineConfig::default`] and mutate fields); the struct is
+/// `#[non_exhaustive]`, so new knobs stop breaking downstream
+/// construction sites.
 #[derive(Debug, Clone)]
+#[non_exhaustive]
 pub struct EngineConfig {
     /// Max sequences decoding concurrently (continuous batch width).
     pub max_active: usize,
@@ -57,6 +64,24 @@ pub struct EngineConfig {
     /// Deterministic fault-injection schedule for chaos testing; the
     /// default injects nothing.
     pub fault: FaultPlan,
+    /// Per-tick prefill token budget for chunked prefill. When > 0 and
+    /// the executor supports chunked prefill
+    /// ([`StepExecutor::supports_chunked_prefill`]), admission starts a
+    /// chunked prefill instead of a monolithic one, and each tick
+    /// advances in-flight prefills by at most this many tokens (shared
+    /// across prefills, interactive class first) interleaved with the
+    /// decode batch — Sarathi-style continuous batching that stops long
+    /// prompts from monopolizing a tick. 0 = monolithic prefill
+    /// (default); token streams are bit-identical either way.
+    pub prefill_chunk: usize,
+    /// Decode-latency SLO per tick (a TPOT target). When set, ticks
+    /// whose decode phase runs longer than this accrue "TPOT debt";
+    /// while debt is outstanding and sequences are actively decoding,
+    /// in-flight chunked prefills are preempted (skipped for the tick,
+    /// counted in `EngineStats::prefill_preempted`) until faster-than-
+    /// SLO ticks pay the debt back down. `None` = never preempt
+    /// (default).
+    pub tpot_slo: Option<Duration>,
 }
 
 impl Default for EngineConfig {
@@ -69,7 +94,85 @@ impl Default for EngineConfig {
             batched_decode: true,
             snapshot_every: 0,
             fault: FaultPlan::default(),
+            prefill_chunk: 0,
+            tpot_slo: None,
         }
+    }
+}
+
+impl EngineConfig {
+    /// Start a builder from the defaults.
+    pub fn builder() -> EngineConfigBuilder {
+        EngineConfigBuilder { cfg: EngineConfig::default() }
+    }
+}
+
+/// Builder for [`EngineConfig`] — the construction path for code
+/// outside this crate (the struct is `#[non_exhaustive]`). Every method
+/// sets one knob; finish with [`EngineConfigBuilder::build`].
+#[derive(Debug, Clone)]
+pub struct EngineConfigBuilder {
+    cfg: EngineConfig,
+}
+
+impl EngineConfigBuilder {
+    /// See [`EngineConfig::max_active`].
+    pub fn max_active(mut self, v: usize) -> Self {
+        self.cfg.max_active = v;
+        self
+    }
+
+    /// See [`EngineConfig::queue_capacity`].
+    pub fn queue_capacity(mut self, v: usize) -> Self {
+        self.cfg.queue_capacity = v;
+        self
+    }
+
+    /// See [`EngineConfig::prefills_per_tick`].
+    pub fn prefills_per_tick(mut self, v: usize) -> Self {
+        self.cfg.prefills_per_tick = v;
+        self
+    }
+
+    /// See [`EngineConfig::host_probe_every`].
+    pub fn host_probe_every(mut self, v: usize) -> Self {
+        self.cfg.host_probe_every = v;
+        self
+    }
+
+    /// See [`EngineConfig::batched_decode`].
+    pub fn batched_decode(mut self, v: bool) -> Self {
+        self.cfg.batched_decode = v;
+        self
+    }
+
+    /// See [`EngineConfig::snapshot_every`].
+    pub fn snapshot_every(mut self, v: usize) -> Self {
+        self.cfg.snapshot_every = v;
+        self
+    }
+
+    /// See [`EngineConfig::fault`].
+    pub fn fault(mut self, v: FaultPlan) -> Self {
+        self.cfg.fault = v;
+        self
+    }
+
+    /// See [`EngineConfig::prefill_chunk`].
+    pub fn prefill_chunk(mut self, v: usize) -> Self {
+        self.cfg.prefill_chunk = v;
+        self
+    }
+
+    /// See [`EngineConfig::tpot_slo`].
+    pub fn tpot_slo(mut self, v: Option<Duration>) -> Self {
+        self.cfg.tpot_slo = v;
+        self
+    }
+
+    /// Finish building.
+    pub fn build(self) -> EngineConfig {
+        self.cfg
     }
 }
 
@@ -115,6 +218,23 @@ pub struct EngineStats {
     /// storage errors) — the session keeps decoding, but recovery
     /// would restart from an older snapshot.
     pub snapshot_failures: Counter,
+    /// Prefill chunks executed (one per `prefill_chunk` executor call).
+    pub prefill_chunks: Counter,
+    /// Prompt tokens prefilled through chunked prefill.
+    pub prefill_chunk_tokens: Counter,
+    /// In-flight prefills preempted for a tick because decode TPOT debt
+    /// was outstanding (see [`EngineConfig::tpot_slo`]).
+    pub prefill_preempted: Counter,
+    /// Time-to-first-token of interactive-class requests (submission →
+    /// first emitted token).
+    pub ttft_interactive: Histogram,
+    /// Time-to-first-token of batch-class requests.
+    pub ttft_batch: Histogram,
+    /// Inter-token latency of interactive-class requests (gap between
+    /// consecutive emissions).
+    pub tpot_interactive: Histogram,
+    /// Inter-token latency of batch-class requests.
+    pub tpot_batch: Histogram,
 }
 
 impl EngineStats {
@@ -137,6 +257,29 @@ impl EngineStats {
         self.deadline_exceeded.add(other.deadline_exceeded.get());
         self.snapshots.add(other.snapshots.get());
         self.snapshot_failures.add(other.snapshot_failures.get());
+        self.prefill_chunks.add(other.prefill_chunks.get());
+        self.prefill_chunk_tokens.add(other.prefill_chunk_tokens.get());
+        self.prefill_preempted.add(other.prefill_preempted.get());
+        self.ttft_interactive.merge_from(&other.ttft_interactive);
+        self.ttft_batch.merge_from(&other.ttft_batch);
+        self.tpot_interactive.merge_from(&other.tpot_interactive);
+        self.tpot_batch.merge_from(&other.tpot_batch);
+    }
+
+    /// The TTFT histogram for `class`.
+    pub fn ttft(&self, class: RequestClass) -> &Histogram {
+        match class {
+            RequestClass::Interactive => &self.ttft_interactive,
+            RequestClass::Batch => &self.ttft_batch,
+        }
+    }
+
+    /// The TPOT (inter-token latency) histogram for `class`.
+    pub fn tpot(&self, class: RequestClass) -> &Histogram {
+        match class {
+            RequestClass::Interactive => &self.tpot_interactive,
+            RequestClass::Batch => &self.tpot_batch,
+        }
     }
 }
 
@@ -153,6 +296,25 @@ struct Active {
     /// Most recent step's per-head queries ([L, H, dh] flat) — what the
     /// host probe evaluates against this sequence's caches.
     last_q: Vec<f32>,
+    /// When the last token was emitted (`None` until the first) —
+    /// drives the per-class TTFT/TPOT histograms.
+    last_emit: Option<std::time::Instant>,
+}
+
+/// One sequence whose prompt is mid-way through chunked prefill: the
+/// cache policies hold the first `done` positions, and `carry` holds
+/// the raw per-(layer, head) K/V prefix the next chunk resumes causal
+/// attention from. Counted against `max_active` and in
+/// [`Engine::pending`]; promoted to [`Active`] when the last chunk
+/// lands.
+struct Prefilling {
+    req: Request,
+    timing: Timing,
+    caches: SequenceCaches,
+    carry: FlatCaches,
+    /// Prompt positions prefilled so far.
+    done: usize,
+    last_q: Vec<f32>,
 }
 
 /// The serving engine. Single-threaded event loop (PJRT executables are
@@ -160,8 +322,16 @@ struct Active {
 pub struct Engine<'e, E: StepExecutor> {
     exec: &'e E,
     cfg: EngineConfig,
-    queue: VecDeque<(Request, Timing)>,
+    /// Two-class run queue: interactive requests are admitted (and
+    /// their prefills advanced) before batch requests; FIFO per class.
+    queue_interactive: VecDeque<(Request, Timing)>,
+    queue_batch: VecDeque<(Request, Timing)>,
     active: Vec<Active>,
+    /// Sequences mid-way through chunked prefill.
+    prefilling: Vec<Prefilling>,
+    /// Outstanding decode-latency debt vs [`EngineConfig::tpot_slo`] —
+    /// while positive, chunked prefills are preempted.
+    tpot_debt: Duration,
     done: Vec<Response>,
     /// Ticks executed (drives the probe cadence).
     ticks: u64,
@@ -194,8 +364,11 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
         Self {
             exec,
             cfg,
-            queue: VecDeque::new(),
+            queue_interactive: VecDeque::new(),
+            queue_batch: VecDeque::new(),
             active: Vec::new(),
+            prefilling: Vec::new(),
+            tpot_debt: Duration::ZERO,
             done: Vec::new(),
             ticks: 0,
             probe_out: Vec::new(),
@@ -236,10 +409,37 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
         );
         let spec = self.exec.spec();
         let mut caches = snap.restore_caches(spec)?;
+        if let Some(done) = snap.prefill_done {
+            // Mid-prefill session: rebuild the K/V carry and continue
+            // chunked prefill where the dead worker left off. The carry
+            // rows are exact (f32 verbatim), so the remaining chunks —
+            // and the whole decode — stay bit-identical.
+            anyhow::ensure!(done == snap.pos, "prefill snapshot pos mismatch");
+            anyhow::ensure!(
+                done < snap.req.prompt.len(),
+                "prefill snapshot for request {} is already complete",
+                snap.req.id
+            );
+            let carry = snap.restore_prefill_carry(spec)?;
+            let mut timing = Timing::now();
+            timing.admitted = Some(timing.submitted);
+            self.prefilling.push(Prefilling {
+                req: snap.req,
+                timing,
+                caches,
+                carry,
+                done,
+                last_q: Vec::new(),
+            });
+            return Ok(());
+        }
         let c = spec.pick_cache_variant(caches.max_slots() + 1);
         let flat = caches.assemble(c)?;
         let mut timing = Timing::now();
         timing.admitted = Some(timing.submitted);
+        // A resumed session already streamed its first token before the
+        // crash — its next emission is a TPOT observation, not a TTFT.
+        let last_emit = (!snap.generated.is_empty()).then(std::time::Instant::now);
         self.active.push(Active {
             req: snap.req,
             timing,
@@ -249,6 +449,7 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             pos: snap.pos,
             generated: snap.generated,
             last_q: Vec::new(),
+            last_emit,
         });
         self.stats.active.set(self.active.len() as u64);
         Ok(())
@@ -265,19 +466,27 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
     /// malformed request: an empty prompt — prefill needs at least one
     /// position — or `max_new == 0`, which has nothing to generate).
     pub fn submit(&mut self, req: Request) -> bool {
-        if req.prompt.is_empty() || req.max_new == 0 || self.queue.len() >= self.cfg.queue_capacity
-        {
+        if req.prompt.is_empty() || req.max_new == 0 || self.queued() >= self.cfg.queue_capacity {
             self.stats.rejected.inc();
             return false;
         }
-        self.queue.push_back((req, Timing::now()));
-        self.stats.queue_depth.set(self.queue.len() as u64);
+        let timing = Timing::now();
+        match req.class {
+            RequestClass::Interactive => self.queue_interactive.push_back((req, timing)),
+            RequestClass::Batch => self.queue_batch.push_back((req, timing)),
+        }
+        self.stats.queue_depth.set(self.queued() as u64);
         true
     }
 
-    /// Number of requests waiting + decoding.
+    /// Requests waiting for admission across both classes.
+    fn queued(&self) -> usize {
+        self.queue_interactive.len() + self.queue_batch.len()
+    }
+
+    /// Number of requests waiting + prefilling + decoding.
     pub fn pending(&self) -> usize {
-        self.queue.len() + self.active.len()
+        self.queued() + self.prefilling.len() + self.active.len()
     }
 
     /// Drain finished responses.
@@ -301,7 +510,23 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
         }
         self.expire_deadlines();
         self.admit()?;
-        let progressed = self.decode_tick()?;
+        let advanced = self.advance_prefills()?;
+        let d0 = std::time::Instant::now();
+        let decoded = self.decode_tick()?;
+        if let Some(slo) = self.cfg.tpot_slo {
+            if decoded > 0 {
+                let took = d0.elapsed();
+                if took > slo {
+                    self.tpot_debt += took - slo;
+                } else {
+                    self.tpot_debt = self.tpot_debt.saturating_sub(slo - took);
+                }
+            }
+        }
+        // A prefill chunk is progress too: it must drive the snapshot
+        // cadence (a worker whose only session is mid-prefill still
+        // publishes its carry for recovery) and count as a non-idle tick.
+        let progressed = decoded + advanced;
         self.ticks += 1;
         if self.cfg.snapshot_every > 0
             && progressed > 0
@@ -318,8 +543,8 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
         if progressed > 0 {
             self.stats.tick_latency.record(t0.elapsed());
         }
-        self.stats.queue_depth.set(self.queue.len() as u64);
-        self.stats.active.set(self.active.len() as u64);
+        self.stats.queue_depth.set(self.queued() as u64);
+        self.stats.active.set((self.active.len() + self.prefilling.len()) as u64);
         Ok(progressed)
     }
 
@@ -330,23 +555,18 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
         let now = std::time::Instant::now();
         let stats = &self.stats;
         let expired = &mut self.expired;
-        self.queue.retain(|(req, timing)| {
+        let mut drop_over = |req: &Request, timing: &Timing| {
             let over = req.deadline.is_some_and(|d| now.duration_since(timing.submitted) > d);
             if over {
                 stats.deadline_exceeded.inc();
                 expired.push(req.id);
             }
             !over
-        });
-        self.active.retain(|seq| {
-            let over =
-                seq.req.deadline.is_some_and(|d| now.duration_since(seq.timing.submitted) > d);
-            if over {
-                stats.deadline_exceeded.inc();
-                expired.push(seq.req.id);
-            }
-            !over
-        });
+        };
+        self.queue_interactive.retain(|(req, timing)| drop_over(req, timing));
+        self.queue_batch.retain(|(req, timing)| drop_over(req, timing));
+        self.prefilling.retain(|seq| drop_over(&seq.req, &seq.timing));
+        self.active.retain(|seq| drop_over(&seq.req, &seq.timing));
     }
 
     /// Publish one snapshot per active sequence through the snapshot
@@ -360,7 +580,7 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             return;
         };
         if self.cfg.fault.snapshot_fail_from_tick.is_some_and(|t| tick_no >= t) {
-            self.stats.snapshot_failures.add(self.active.len() as u64);
+            self.stats.snapshot_failures.add((self.active.len() + self.prefilling.len()) as u64);
             return;
         }
         for seq in &self.active {
@@ -371,6 +591,13 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
                 seq.pos,
                 &seq.caches,
             ));
+            self.stats.snapshots.inc();
+        }
+        // Mid-prefill sessions snapshot too: the carry prefix is enough
+        // to resume the remaining chunks bit-identically on another
+        // worker (see [`Engine::resume`]).
+        for seq in &self.prefilling {
+            sink(SessionSnapshot::capture_prefill(&seq.req, seq.done, &seq.caches, &seq.carry));
             self.stats.snapshots.inc();
         }
     }
@@ -433,17 +660,41 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
         Ok(())
     }
 
+    /// Admit queued requests, interactive class first. With chunked
+    /// prefill enabled (and an executor that supports it), admission
+    /// only *starts* a prefill — the prompt is consumed by
+    /// [`Self::advance_prefills`] under the per-tick token budget.
+    /// Otherwise the whole prompt is prefilled monolithically here.
     fn admit(&mut self) -> Result<()> {
+        let chunked = self.cfg.prefill_chunk > 0 && self.exec.supports_chunked_prefill();
         let mut admitted = 0;
         while admitted < self.cfg.prefills_per_tick
-            && self.active.len() < self.cfg.max_active
-            && !self.queue.is_empty()
+            && self.active.len() + self.prefilling.len() < self.cfg.max_active
         {
-            let (req, mut timing) = self.queue.pop_front().unwrap();
+            let Some((req, mut timing)) = self
+                .queue_interactive
+                .pop_front()
+                .or_else(|| self.queue_batch.pop_front())
+            else {
+                break;
+            };
             timing.admitted = Some(std::time::Instant::now());
             let spec = self.exec.spec();
             let mut caches =
                 SequenceCaches::new(spec, &req.policy, req.budget, req.delta, req.id ^ 0x5EED)?;
+            if chunked {
+                let carry = FlatCaches::for_prefill(spec, req.prompt.len());
+                self.prefilling.push(Prefilling {
+                    req,
+                    timing,
+                    caches,
+                    carry,
+                    done: 0,
+                    last_q: Vec::new(),
+                });
+                admitted += 1;
+                continue;
+            }
             let pre = self.exec.prefill(&req.prompt)?;
             let mut last_q = Vec::new();
             for pos in 0..req.prompt.len() {
@@ -470,10 +721,94 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
                 pos,
                 generated: Vec::new(),
                 last_q,
+                last_emit: None,
             });
             admitted += 1;
         }
         Ok(())
+    }
+
+    /// Advance every in-flight chunked prefill under the shared per-tick
+    /// token budget ([`EngineConfig::prefill_chunk`]), interactive class
+    /// first. When decode TPOT debt is outstanding and sequences are
+    /// actively decoding, all prefills are preempted for the tick
+    /// instead (see [`EngineConfig::tpot_slo`]). A prefill whose last
+    /// chunk lands this tick is promoted to [`Active`] immediately, so
+    /// its first decode happens in the same tick a monolithic admission
+    /// would have — chunking never changes the token stream, only how
+    /// prompt work shares ticks with decode. Returns the number of
+    /// prefills that advanced (they count toward the tick's progress).
+    fn advance_prefills(&mut self) -> Result<usize> {
+        if self.prefilling.is_empty() {
+            return Ok(0);
+        }
+        if self.tpot_debt > Duration::ZERO && !self.active.is_empty() {
+            self.stats.prefill_preempted.add(self.prefilling.len() as u64);
+            return Ok(0);
+        }
+        // A mid-prefill session resumed onto an engine configured for
+        // monolithic prefill (prefill_chunk == 0) still has to finish:
+        // treat that as an unbounded budget instead of stalling forever.
+        let mut budget =
+            if self.cfg.prefill_chunk == 0 { usize::MAX } else { self.cfg.prefill_chunk };
+        let mut pending = std::mem::take(&mut self.prefilling);
+        // Interactive prompts get the budget first; stable sort keeps
+        // FIFO order inside each class.
+        pending.sort_by_key(|p| matches!(p.req.class, RequestClass::Batch) as u8);
+        let mut still = Vec::with_capacity(pending.len());
+        let mut advanced = 0;
+        for mut p in pending {
+            let remaining = p.req.prompt.len() - p.done;
+            let take = remaining.min(budget);
+            if take == 0 {
+                still.push(p);
+                continue;
+            }
+            let start = p.done;
+            let pre = self.exec.prefill_chunk(
+                &mut p.carry,
+                &p.req.prompt[start..start + take],
+                start,
+            )?;
+            for pos in start..start + take {
+                let q = self.exec.position_slice(&pre.qs, pos);
+                let k = self.exec.position_slice(&pre.ks, pos);
+                let v = self.exec.position_slice(&pre.vs, pos);
+                p.caches.update(&q, &k, &v);
+                if pos + 1 == p.req.prompt.len() {
+                    p.last_q = q;
+                }
+            }
+            self.stats.prefill_chunks.inc();
+            self.stats.prefill_chunk_tokens.add(take as u64);
+            advanced += 1;
+            p.done += take;
+            budget -= take;
+            if p.done == p.req.prompt.len() {
+                let spec = self.exec.spec();
+                let vocab = spec.vocab;
+                let last = p.req.prompt.len() - 1;
+                let next =
+                    crate::tensor::argmax(&pre.logits[last * vocab..(last + 1) * vocab]) as i32;
+                let c = spec.pick_cache_variant(p.caches.max_slots() + 1);
+                let flat = p.caches.assemble(c)?;
+                self.active.push(Active {
+                    req: p.req,
+                    timing: p.timing,
+                    caches: p.caches,
+                    flat,
+                    next,
+                    pos: last + 1,
+                    generated: Vec::new(),
+                    last_q: p.last_q,
+                    last_emit: None,
+                });
+            } else {
+                still.push(p);
+            }
+        }
+        self.prefilling = still;
+        Ok(advanced)
     }
 
     fn decode_tick(&mut self) -> Result<usize> {
@@ -490,6 +825,12 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             if let Some(sink) = self.sink.as_mut() {
                 sink(seq.req.id, seq.generated.len() - 1, seq.next);
             }
+            let now = std::time::Instant::now();
+            match seq.last_emit {
+                None => self.stats.ttft(seq.req.class).record(now - seq.timing.submitted),
+                Some(prev) => self.stats.tpot(seq.req.class).record(now - prev),
+            }
+            seq.last_emit = Some(now);
         }
         let steps = if self.cfg.batched_decode {
             self.decode_grouped(&active)?
@@ -753,6 +1094,7 @@ mod tests {
                 budget: 8,
                 delta: 0.5,
                 deadline: None,
+                class: RequestClass::Interactive,
             });
             e.run_to_completion().unwrap();
             let rs = e.take_responses();
@@ -778,6 +1120,7 @@ mod tests {
                 budget: 16,
                 delta: 0.5,
                 deadline: None,
+                class: RequestClass::Interactive,
             });
             e.run_to_completion().unwrap();
             let rs = e.take_responses();
@@ -842,6 +1185,7 @@ mod tests {
                     budget: 16,
                     delta: 0.5,
                     deadline: None,
+                    class: RequestClass::Interactive,
                 });
             }
             e.run_to_completion().unwrap();
@@ -865,6 +1209,7 @@ mod tests {
             budget: 16,
             delta: 0.5,
             deadline: None,
+            class: RequestClass::Interactive,
         });
         e.run_to_completion().unwrap();
         // One probe per progressing tick, each a single batched sweep.
@@ -1016,6 +1361,7 @@ mod tests {
             budget: 16,
             delta: 0.5,
             deadline: None,
+            class: RequestClass::Interactive,
         };
         let mut a = Engine::new(&exec, EngineConfig::default());
         a.submit(req());
@@ -1054,5 +1400,213 @@ mod tests {
         let mut e = Engine::new(&exec, EngineConfig::default());
         assert!(e.resume(snap).is_err());
         assert_eq!(e.pending(), 0);
+    }
+
+    #[test]
+    fn chunked_prefill_matches_monolithic_on_host_executor() {
+        // The tentpole invariant at unit level: any chunk budget —
+        // including 1 and ≥ prompt — yields the exact token stream and
+        // cache bytes of a monolithic prefill. The carry stores the
+        // same per-head K/V rows pass 2 of `prefill` recomputes, so
+        // every resumed chunk sees byte-identical attention inputs.
+        let exec = crate::model::HostExecutor::small(11);
+        let run = |chunk: usize, policy: &str| {
+            let mut e = Engine::new(
+                &exec,
+                EngineConfig { prefill_chunk: chunk, ..Default::default() },
+            );
+            e.submit(Request {
+                id: 0,
+                session_id: None,
+                prompt: vec![1, 2, 3, 4, 5, 6, 7],
+                max_new: 6,
+                policy: policy.into(),
+                budget: 16,
+                delta: 0.5,
+                deadline: None,
+                class: RequestClass::Interactive,
+            });
+            e.run_to_completion().unwrap();
+            let r = e.take_responses().pop().unwrap();
+            (r.tokens, r.cache_bytes)
+        };
+        for policy in ["exact", "subgen"] {
+            let mono = run(0, policy);
+            for chunk in [1, 2, 3, 5, 64] {
+                assert_eq!(run(chunk, policy), mono, "chunk={chunk} policy={policy}");
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_with_covering_budget_is_tick_identical() {
+        // A chunk budget ≥ the prompt admits + promotes + first-decodes
+        // in the same tick a monolithic admission would, so the two
+        // modes agree on tick count, not just tokens.
+        let exec = crate::model::HostExecutor::small(5);
+        let run = |chunk: usize| {
+            let mut e = Engine::new(
+                &exec,
+                EngineConfig { prefill_chunk: chunk, ..Default::default() },
+            );
+            e.submit(Request::exact(0, vec![1, 2, 3, 4], 5));
+            e.run_to_completion().unwrap();
+            (e.ticks, e.take_responses().pop().unwrap().tokens)
+        };
+        assert_eq!(run(64), run(0));
+    }
+
+    #[test]
+    fn chunked_prefill_counts_chunks_and_tokens() {
+        let exec = crate::model::HostExecutor::small(2);
+        let mut e = Engine::new(
+            &exec,
+            EngineConfig { prefill_chunk: 4, ..Default::default() },
+        );
+        e.submit(Request::exact(0, vec![1; 10], 2));
+        e.run_to_completion().unwrap();
+        assert_eq!(e.take_responses().len(), 1);
+        // 10 prompt tokens at 4/tick → chunks of 4, 4, 2.
+        assert_eq!(e.stats.prefill_chunks.get(), 3);
+        assert_eq!(e.stats.prefill_chunk_tokens.get(), 10);
+        assert_eq!(e.stats.prefill_preempted.get(), 0);
+    }
+
+    #[test]
+    fn chunk_budget_goes_to_interactive_class_first() {
+        // A long batch prompt and a short interactive prompt admitted
+        // the same tick: the shared per-tick budget feeds the
+        // interactive prefill first, so it reaches decode (and
+        // completes) while the batch prompt is still prefilling.
+        let exec = crate::model::HostExecutor::small(13);
+        let mut e = Engine::new(
+            &exec,
+            EngineConfig {
+                max_active: 2,
+                prefills_per_tick: 2,
+                prefill_chunk: 2,
+                ..Default::default()
+            },
+        );
+        e.submit(Request::exact(0, vec![1; 12], 1).with_class(RequestClass::Batch));
+        e.submit(Request::exact(1, vec![2, 3], 1));
+        e.run_to_completion().unwrap();
+        let rs = e.take_responses();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].id, 1, "interactive must finish before the long batch prompt");
+        assert_eq!(rs[1].id, 0);
+    }
+
+    #[test]
+    fn tpot_debt_preempts_inflight_prefills() {
+        // A zero TPOT SLO makes every decode tick accrue debt, so the
+        // prefill admitted while another sequence decodes is preempted
+        // each tick until the decoder finishes — then drains normally.
+        let exec = crate::model::HostExecutor::small(17);
+        let mut e = Engine::new(
+            &exec,
+            EngineConfig {
+                max_active: 2,
+                prefills_per_tick: 2,
+                prefill_chunk: 2,
+                tpot_slo: Some(Duration::ZERO),
+                ..Default::default()
+            },
+        );
+        e.submit(Request::exact(0, vec![1], 6));
+        e.tick().unwrap(); // id 0 prefills + starts decoding, debt accrues
+        e.submit(Request::exact(1, vec![2; 8], 1));
+        e.run_to_completion().unwrap();
+        let rs = e.take_responses();
+        assert_eq!(rs.len(), 2);
+        assert!(
+            e.stats.prefill_preempted.get() > 0,
+            "decode debt must preempt the in-flight prefill at least once"
+        );
+        // Preemption delays the prefill but never corrupts it: id 1
+        // still answers exactly what an undisturbed engine answers.
+        let mut clean = Engine::new(&exec, EngineConfig::default());
+        clean.submit(Request::exact(1, vec![2; 8], 1));
+        clean.run_to_completion().unwrap();
+        let want = clean.take_responses().pop().unwrap().tokens;
+        assert_eq!(rs.iter().find(|r| r.id == 1).unwrap().tokens, want);
+    }
+
+    #[test]
+    fn per_class_latency_histograms_split_by_class() {
+        let exec = MockExecutor::small();
+        let mut e = engine(
+            EngineConfig { max_active: 2, prefills_per_tick: 2, ..Default::default() },
+            &exec,
+        );
+        e.submit(Request::exact(0, vec![1], 3));
+        e.submit(Request::exact(1, vec![2], 3).with_class(RequestClass::Batch));
+        e.run_to_completion().unwrap();
+        assert_eq!(e.take_responses().len(), 2);
+        // Each class: 1 first token (TTFT) + 2 follow-ups (TPOT).
+        assert_eq!(e.stats.ttft(RequestClass::Interactive).count(), 1);
+        assert_eq!(e.stats.ttft(RequestClass::Batch).count(), 1);
+        assert_eq!(e.stats.tpot(RequestClass::Interactive).count(), 2);
+        assert_eq!(e.stats.tpot(RequestClass::Batch).count(), 2);
+    }
+
+    #[test]
+    fn executor_without_chunked_support_falls_back_to_monolithic() {
+        // MockExecutor reports no chunked-prefill support, so a chunked
+        // config silently degrades to monolithic admission — same
+        // tokens, no chunk counters.
+        let exec = MockExecutor::small();
+        let mut e = engine(EngineConfig { prefill_chunk: 2, ..Default::default() }, &exec);
+        e.submit(Request::exact(0, vec![3, 4], 4));
+        e.run_to_completion().unwrap();
+        assert_eq!(e.take_responses()[0].tokens, vec![5, 6, 7, 8]);
+        assert_eq!(e.stats.prefill_chunks.get(), 0);
+        assert_eq!(e.stats.prefill_chunk_tokens.get(), 0);
+    }
+
+    #[test]
+    fn mid_prefill_snapshot_resumes_bit_identically() {
+        // Kill a worker halfway through a chunked prefill; the v2
+        // snapshot carries the K/V prefix, and a fresh engine resumes
+        // the remaining chunks — final tokens match the undisturbed run.
+        let exec = crate::model::HostExecutor::small(23);
+        let req = || Request {
+            id: 6,
+            session_id: None,
+            prompt: vec![4, 3, 2, 1, 4, 3, 2, 1],
+            max_new: 5,
+            policy: "subgen".into(),
+            budget: 16,
+            delta: 0.5,
+            deadline: None,
+            class: RequestClass::Interactive,
+        };
+        let mut a = Engine::new(&exec, EngineConfig::default());
+        a.submit(req());
+        a.run_to_completion().unwrap();
+        let want = a.take_responses().pop().unwrap().tokens;
+
+        let snaps = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+        let tap = std::rc::Rc::clone(&snaps);
+        let mut b = Engine::new(
+            &exec,
+            EngineConfig { prefill_chunk: 3, snapshot_every: 1, ..Default::default() },
+        );
+        b.set_snapshot_sink(Box::new(move |s| tap.borrow_mut().push(s)));
+        b.submit(req());
+        b.tick().unwrap(); // 3 of 8 prompt tokens prefilled, snapshot published
+        drop(b);
+        let bytes = snaps.borrow().last().unwrap().to_bytes();
+        let snap = SessionSnapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(snap.prefill_done, Some(3));
+        assert!(snap.generated.is_empty());
+
+        let mut c = Engine::new(
+            &exec,
+            EngineConfig { prefill_chunk: 3, ..Default::default() },
+        );
+        c.resume(snap).unwrap();
+        c.run_to_completion().unwrap();
+        assert_eq!(c.take_responses().pop().unwrap().tokens, want);
     }
 }

@@ -32,6 +32,42 @@ pub trait StepExecutor {
     fn decode_batch(&self, steps: &[DecodeStep<'_>]) -> Result<Vec<StepOutput>> {
         steps.iter().map(|st| self.decode(st.token, st.pos, st.flat)).collect()
     }
+    /// Prefill one chunk of a prompt, resuming causal attention from the
+    /// partially-filled K/V carry buffer left by earlier chunks.
+    ///
+    /// `carry` is a raw per-(layer, head) K/V workspace (built by
+    /// [`FlatCaches::for_prefill`]) holding exactly `start_pos` rows per
+    /// head with unit weights; on return it holds
+    /// `start_pos + tokens.len()` rows. Output buffers use the same
+    /// full-`prefill_t` layout as [`StepExecutor::prefill`], with the
+    /// chunk's rows written at their *absolute* positions — so
+    /// [`StepExecutor::position_slice`] works unchanged.
+    ///
+    /// The default implementation only supports the degenerate one-shot
+    /// schedule (`start_pos == 0`, the whole prompt in one chunk) by
+    /// delegating to monolithic [`StepExecutor::prefill`]; executors
+    /// advertise real chunking via
+    /// [`StepExecutor::supports_chunked_prefill`], and the engine only
+    /// splits prompts when they do.
+    fn prefill_chunk(
+        &self,
+        carry: &mut FlatCaches,
+        tokens: &[i32],
+        start_pos: usize,
+    ) -> Result<PrefillOutput> {
+        anyhow::ensure!(
+            start_pos == 0,
+            "this executor has no chunked prefill (start_pos {start_pos} != 0)"
+        );
+        let out = self.prefill(tokens)?;
+        carry.fill_prefix_from_prefill(self.spec(), &out, tokens.len())?;
+        Ok(out)
+    }
+    /// True when [`StepExecutor::prefill_chunk`] can resume from a
+    /// non-zero `start_pos` (real chunked prefill). Default: false.
+    fn supports_chunked_prefill(&self) -> bool {
+        false
+    }
     /// Slice helper: one position's [L, H, dh] out of a prefill tensor.
     fn position_slice(&self, full: &[f32], pos: usize) -> Vec<f32>;
 }
@@ -53,6 +89,19 @@ impl<T: StepExecutor + ?Sized> StepExecutor for &T {
 
     fn decode_batch(&self, steps: &[DecodeStep<'_>]) -> Result<Vec<StepOutput>> {
         (**self).decode_batch(steps)
+    }
+
+    fn prefill_chunk(
+        &self,
+        carry: &mut FlatCaches,
+        tokens: &[i32],
+        start_pos: usize,
+    ) -> Result<PrefillOutput> {
+        (**self).prefill_chunk(carry, tokens, start_pos)
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        (**self).supports_chunked_prefill()
     }
 
     fn position_slice(&self, full: &[f32], pos: usize) -> Vec<f32> {
@@ -93,6 +142,19 @@ impl StepExecutor for HostExecutor {
 
     fn decode_batch(&self, steps: &[DecodeStep<'_>]) -> Result<Vec<StepOutput>> {
         HostExecutor::decode_batch(self, steps)
+    }
+
+    fn prefill_chunk(
+        &self,
+        carry: &mut FlatCaches,
+        tokens: &[i32],
+        start_pos: usize,
+    ) -> Result<PrefillOutput> {
+        HostExecutor::prefill_chunk(self, carry, tokens, start_pos)
+    }
+
+    fn supports_chunked_prefill(&self) -> bool {
+        true
     }
 
     fn position_slice(&self, full: &[f32], pos: usize) -> Vec<f32> {

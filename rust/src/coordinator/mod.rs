@@ -15,9 +15,9 @@ mod executor;
 mod request;
 mod snapshot;
 
-pub use engine::{Engine, EngineConfig, EngineStats, SnapshotSink, TokenSink};
+pub use engine::{Engine, EngineConfig, EngineConfigBuilder, EngineStats, SnapshotSink, TokenSink};
 pub use executor::{MockExecutor, StepExecutor};
-pub use request::{Request, Response};
+pub use request::{Request, RequestClass, Response};
 pub use snapshot::{FaultPlan, SessionSnapshot};
 
 // The pure-rust transformer executor lives in `model` (it is a model);

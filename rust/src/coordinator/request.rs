@@ -2,6 +2,39 @@
 
 use std::time::{Duration, Instant};
 
+/// Scheduling class of a request. The engine's run queue is two-class:
+/// `Interactive` requests are admitted and prefill-advanced before
+/// `Batch` requests, and the per-class TTFT/TPOT histograms are keyed
+/// by this tag — SLO reporting separates latency-sensitive traffic from
+/// throughput traffic sharing the same worker.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub enum RequestClass {
+    /// Latency-sensitive (chat-style) traffic: scheduled first.
+    #[default]
+    Interactive,
+    /// Throughput (offline/bulk) traffic: yields to interactive work.
+    Batch,
+}
+
+impl RequestClass {
+    /// Stable lowercase label used in metrics and CLI flags.
+    pub fn label(self) -> &'static str {
+        match self {
+            RequestClass::Interactive => "interactive",
+            RequestClass::Batch => "batch",
+        }
+    }
+
+    /// Parse the CLI/metrics label form (`"interactive"` / `"batch"`).
+    pub fn parse(s: &str) -> Option<RequestClass> {
+        match s {
+            "interactive" => Some(RequestClass::Interactive),
+            "batch" => Some(RequestClass::Batch),
+            _ => None,
+        }
+    }
+}
+
 /// A generation request.
 #[derive(Debug, Clone)]
 pub struct Request {
@@ -25,6 +58,8 @@ pub struct Request {
     /// deadline is shed with a typed error/event rather than decoded to
     /// completion; `None` = no deadline.
     pub deadline: Option<Duration>,
+    /// Scheduling class (interactive vs batch); see [`RequestClass`].
+    pub class: RequestClass,
 }
 
 impl Request {
@@ -39,6 +74,7 @@ impl Request {
             budget: usize::MAX / 2,
             delta: 0.5,
             deadline: None,
+            class: RequestClass::Interactive,
         }
     }
 
@@ -51,6 +87,12 @@ impl Request {
     /// Attach a completion deadline (builder style).
     pub fn with_deadline(mut self, deadline: Duration) -> Self {
         self.deadline = Some(deadline);
+        self
+    }
+
+    /// Set the scheduling class (builder style).
+    pub fn with_class(mut self, class: RequestClass) -> Self {
+        self.class = class;
         self
     }
 }

@@ -14,14 +14,20 @@
 //! — the same plan replays the same failure on every run, which is what
 //! makes the chaos integration tests assertable.
 
-use super::Request;
+use super::{Request, RequestClass};
 use crate::io::Checkpoint;
-use crate::model::{ModelSpec, SequenceCaches};
+use crate::model::{caches::FlatCaches, ModelSpec, SequenceCaches};
 use anyhow::{bail, ensure, Result};
 use std::time::Duration;
 
 /// Snapshot wire-format version (bumped on layout changes).
-const SNAPSHOT_VERSION: u64 = 1;
+///
+/// * v1 — 10-entry `session/meta`, decode-phase sessions only.
+/// * v2 — 12-entry `session/meta` appending the request class and a
+///   mid-prefill marker; mid-prefill snapshots additionally carry the
+///   raw K/V prefix as `prefill/keys` + `prefill/values`. v1 bytes
+///   still parse (class defaults to interactive, no prefill state).
+const SNAPSHOT_VERSION: u64 = 2;
 
 /// A deterministic schedule of injected faults, consulted by
 /// [`super::Engine::tick`]. Default = no faults. Tick numbers count the
@@ -65,6 +71,12 @@ pub struct SessionSnapshot {
     pub next: i32,
     /// Absolute decode position of `next`.
     pub pos: usize,
+    /// `Some(done)` when the session was frozen mid-way through chunked
+    /// prefill with `done` prompt positions complete (`pos == done`,
+    /// nothing emitted yet); the checkpoint then also carries the raw
+    /// K/V carry prefix (see [`Self::restore_prefill_carry`]). `None`
+    /// for decode-phase snapshots.
+    pub prefill_done: Option<usize>,
     /// Combined tensor container: `session/*` metadata + the
     /// `caches/*` tensors written by [`SequenceCaches::save_into`].
     pub tensors: Checkpoint,
@@ -80,6 +92,46 @@ impl SessionSnapshot {
         next: i32,
         pos: usize,
         caches: &SequenceCaches,
+    ) -> SessionSnapshot {
+        Self::capture_inner(req, generated, next, pos, caches, None)
+    }
+
+    /// Freeze a sequence mid-way through *chunked prefill*: `done`
+    /// prompt positions are in the cache policies, and `carry` holds the
+    /// raw per-(layer, head) K/V prefix the next chunk resumes causal
+    /// attention from ([`FlatCaches::for_prefill`] layout). Nothing has
+    /// been emitted yet, so `generated` is empty and `pos == done`.
+    /// Restore with [`super::Engine::resume`], which rebuilds the carry
+    /// via [`Self::restore_prefill_carry`] and finishes the remaining
+    /// chunks bit-identically.
+    pub fn capture_prefill(
+        req: &Request,
+        done: usize,
+        caches: &SequenceCaches,
+        carry: &FlatCaches,
+    ) -> SessionSnapshot {
+        let mut snap = Self::capture_inner(req, &[], 0, done, caches, Some(done));
+        let lh = carry.num_heads();
+        let dh = if lh > 0 && carry.capacity > 0 { carry.keys.len() / (lh * carry.capacity) } else { 0 };
+        let mut keys = Vec::with_capacity(lh * done * dh);
+        let mut values = Vec::with_capacity(lh * done * dh);
+        for i in 0..lh {
+            let at = i * carry.capacity * dh;
+            keys.extend_from_slice(&carry.keys[at..at + done * dh]);
+            values.extend_from_slice(&carry.values[at..at + done * dh]);
+        }
+        snap.tensors.insert("prefill/keys", vec![lh, done, dh], keys);
+        snap.tensors.insert("prefill/values", vec![lh, done, dh], values);
+        snap
+    }
+
+    fn capture_inner(
+        req: &Request,
+        generated: &[i32],
+        next: i32,
+        pos: usize,
+        caches: &SequenceCaches,
+        prefill_done: Option<usize>,
     ) -> SessionSnapshot {
         let mut ck = Checkpoint::new();
         caches.save_into(&mut ck);
@@ -98,6 +150,11 @@ impl SessionSnapshot {
                 next as u32 as u64,
                 req.deadline.is_some() as u64,
                 deadline_nanos,
+                match req.class {
+                    RequestClass::Interactive => 0,
+                    RequestClass::Batch => 1,
+                },
+                prefill_done.map(|d| d as u64 + 1).unwrap_or(0),
             ],
         );
         ck.insert("session/delta", vec![1], vec![req.delta]);
@@ -109,6 +166,7 @@ impl SessionSnapshot {
             generated: generated.to_vec(),
             next,
             pos,
+            prefill_done,
             tensors: ck,
         }
     }
@@ -122,12 +180,26 @@ impl SessionSnapshot {
     pub fn from_bytes(bytes: &[u8]) -> Result<SessionSnapshot> {
         let ck = Checkpoint::from_bytes(bytes)?;
         let meta = ck.require_u64s("session/meta")?;
-        ensure!(meta.len() == 10, "session/meta: expected 10 entries, got {}", meta.len());
         ensure!(
-            meta[0] == SNAPSHOT_VERSION,
-            "unsupported snapshot version {} (expected {SNAPSHOT_VERSION})",
+            meta.len() == 10 || meta.len() == 12,
+            "session/meta: expected 10 (v1) or 12 (v2) entries, got {}",
+            meta.len()
+        );
+        ensure!(
+            meta[0] >= 1 && meta[0] <= SNAPSHOT_VERSION,
+            "unsupported snapshot version {} (this build reads up to {SNAPSHOT_VERSION})",
             meta[0]
         );
+        // v1 snapshots predate request classes and chunked prefill.
+        let class = match meta.get(10).copied().unwrap_or(0) {
+            0 => RequestClass::Interactive,
+            1 => RequestClass::Batch,
+            other => bail!("session/meta: unknown request class tag {other}"),
+        };
+        let prefill_done = match meta.get(11).copied().unwrap_or(0) {
+            0 => None,
+            d => Some(d as usize - 1),
+        };
         let delta = ck.require("session/delta")?;
         ensure!(delta.data.len() == 1, "session/delta: expected 1 entry");
         let policy = f32_to_str("session/policy", &ck.require("session/policy")?.data)?;
@@ -142,12 +214,14 @@ impl SessionSnapshot {
             budget: meta[5] as usize,
             delta: delta.data[0],
             deadline: (meta[8] != 0).then(|| Duration::from_nanos(meta[9])),
+            class,
         };
         Ok(SessionSnapshot {
             req,
             generated,
             next: meta[7] as u32 as i32,
             pos: meta[6] as usize,
+            prefill_done,
             tensors: ck,
         })
     }
@@ -157,6 +231,36 @@ impl SessionSnapshot {
     /// hosts the same model) — shape mismatches are typed errors.
     pub fn restore_caches(&self, spec: &ModelSpec) -> Result<SequenceCaches> {
         SequenceCaches::restore(spec, &self.tensors)
+    }
+
+    /// Rebuild the chunked-prefill K/V carry of a mid-prefill snapshot
+    /// (see [`Self::capture_prefill`]): a [`FlatCaches::for_prefill`]
+    /// workspace sized for the full prompt, holding the first
+    /// `prefill_done` rows per head with unit weights — exactly the
+    /// state [`crate::coordinator::StepExecutor::prefill_chunk`] resumes
+    /// from. Errors on decode-phase snapshots and shape mismatches.
+    pub fn restore_prefill_carry(&self, spec: &ModelSpec) -> Result<FlatCaches> {
+        let done =
+            self.prefill_done.ok_or_else(|| anyhow::anyhow!("snapshot is not mid-prefill"))?;
+        let mut carry = FlatCaches::for_prefill(spec, self.req.prompt.len());
+        let keys = self.tensors.require("prefill/keys")?;
+        let values = self.tensors.require("prefill/values")?;
+        let lh = carry.num_heads();
+        let dh = spec.d_head;
+        ensure!(
+            keys.data.len() == lh * done * dh && values.data.len() == lh * done * dh,
+            "prefill carry shape mismatch: {} vs {} expected",
+            keys.data.len(),
+            lh * done * dh
+        );
+        for i in 0..lh {
+            let src = i * done * dh;
+            let dst = i * carry.capacity * dh;
+            carry.keys[dst..dst + done * dh].copy_from_slice(&keys.data[src..src + done * dh]);
+            carry.values[dst..dst + done * dh].copy_from_slice(&values.data[src..src + done * dh]);
+        }
+        carry.set_unit_prefix(done);
+        Ok(carry)
     }
 }
 
@@ -210,6 +314,7 @@ mod tests {
             budget: 16,
             delta: 0.5,
             deadline: Some(Duration::from_millis(1500)),
+            class: RequestClass::Batch,
         };
         let mut caches = SequenceCaches::new(spec, &req.policy, req.budget, req.delta, 99).unwrap();
         let dims = spec.n_layers * spec.n_heads * spec.d_head;
@@ -219,6 +324,8 @@ mod tests {
         }
         let snap = SessionSnapshot::capture(&req, &[5, 6, 7], 8, 6, &caches);
         let back = SessionSnapshot::from_bytes(&snap.to_bytes()).unwrap();
+        assert_eq!(back.req.class, RequestClass::Batch);
+        assert_eq!(back.prefill_done, None);
         assert_eq!(back.req.id, 42);
         assert_eq!(back.req.session_id, Some(7));
         assert_eq!(back.req.prompt, vec![1, 2, 3]);
@@ -255,6 +362,59 @@ mod tests {
         let n = bytes.len();
         bytes.truncate(n - 5);
         assert!(SessionSnapshot::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn v1_meta_parses_with_default_class_and_no_prefill() {
+        // Back-compat: a 10-entry session/meta (the v1 layout) must
+        // still parse — class defaults to interactive, no prefill state.
+        let exec = HostExecutor::small(5);
+        let req = Request::exact(3, vec![4, 5], 6);
+        let caches =
+            SequenceCaches::new(exec.spec(), &req.policy, req.budget, req.delta, 1).unwrap();
+        let snap = SessionSnapshot::capture(&req, &[7], 8, 3, &caches);
+        let mut ck = snap.tensors.clone();
+        let meta = ck.require_u64s("session/meta").unwrap();
+        ck.insert_u64s("session/meta", &[&[1u64], &meta[1..10]].concat());
+        let back = SessionSnapshot::from_bytes(&ck.to_bytes()).unwrap();
+        assert_eq!(back.req.class, RequestClass::Interactive);
+        assert_eq!(back.prefill_done, None);
+        assert_eq!(back.req.id, 3);
+        assert_eq!(back.generated, vec![7]);
+    }
+
+    #[test]
+    fn mid_prefill_snapshot_roundtrips_carry_exactly() {
+        let exec = HostExecutor::small(11);
+        let spec = exec.spec();
+        let req = Request::exact(9, vec![1, 2, 3, 4, 5, 6], 4).with_class(RequestClass::Batch);
+        let mut caches = SequenceCaches::new(spec, &req.policy, req.budget, req.delta, 2).unwrap();
+        let mut carry = FlatCaches::for_prefill(spec, req.prompt.len());
+        let done = 4;
+        let pre = exec.prefill_chunk(&mut carry, &req.prompt[..done], 0).unwrap();
+        for pos in 0..done {
+            let q = exec.position_slice(&pre.qs, pos);
+            let k = exec.position_slice(&pre.ks, pos);
+            let v = exec.position_slice(&pre.vs, pos);
+            caches.update(&q, &k, &v);
+        }
+        let snap = SessionSnapshot::capture_prefill(&req, done, &caches, &carry);
+        let back = SessionSnapshot::from_bytes(&snap.to_bytes()).unwrap();
+        assert_eq!(back.prefill_done, Some(done));
+        assert_eq!(back.pos, done);
+        assert_eq!(back.req.class, RequestClass::Batch);
+        assert!(back.generated.is_empty());
+        let restored = back.restore_prefill_carry(spec).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&restored.keys), bits(&carry.keys));
+        assert_eq!(bits(&restored.values), bits(&carry.values));
+        assert_eq!(bits(&restored.w), bits(&carry.w));
+        for i in 0..restored.num_heads() {
+            assert_eq!(restored.packed_len(i), done);
+        }
+        // Decode-phase snapshots reject the carry accessor.
+        let decode_snap = SessionSnapshot::capture(&req, &[1], 2, 7, &caches);
+        assert!(decode_snap.restore_prefill_carry(spec).is_err());
     }
 
     #[test]

@@ -32,14 +32,13 @@ pub struct SubGenCacheConfig {
     pub max_clusters: Option<usize>,
 }
 
-/// Reusable buffers for the batched host-attention path: one persistent
-/// packed buffer plus kernel scratch, so a per-tick batched evaluation
-/// packs once and allocates nothing after warm-up.
+/// Persistent packed buffer for the batched host-attention path, so a
+/// per-tick batched evaluation packs once and allocates nothing after
+/// warm-up. Kernel scratch (`scores`/`zacc`) is caller-supplied — the
+/// same convention as [`PackedCache::attention_batch_into`].
 #[derive(Default)]
 struct BatchScratch {
     buf: Option<PackedCache>,
-    scores: Vec<f32>,
-    zacc: Vec<f64>,
 }
 
 /// Hybrid recent-window + SubGen-sketch cache policy.
@@ -81,13 +80,23 @@ impl SubGenCache {
 
     /// Batched host attention into a caller buffer (`nq × dim`): one
     /// pack into the persistent scratch buffer, then one batched sweep.
+    /// `scores`/`zacc` are caller-owned kernel scratch (resized as
+    /// needed) — the same signature shape as
+    /// [`PackedCache::attention_batch_into`], so callers hold one set of
+    /// scratch vectors across every `_into` attention entry point.
     /// Allocation-free after warm-up at a stable packed-slot count.
-    pub fn attention_batch_into(&self, qs: &[f32], nq: usize, out: &mut [f32]) {
+    pub fn attention_batch_into(
+        &self,
+        qs: &[f32],
+        nq: usize,
+        scores: &mut Vec<f32>,
+        zacc: &mut Vec<f64>,
+        out: &mut [f32],
+    ) {
         let mut scratch = self.scratch.borrow_mut();
-        let sc = &mut *scratch;
-        let buf = PackedCache::ensure_scratch(&mut sc.buf, self.cfg.dim, self.packed_slots());
+        let buf = PackedCache::ensure_scratch(&mut scratch.buf, self.cfg.dim, self.packed_slots());
         self.pack(buf);
-        buf.attention_batch_into(qs, nq, &mut sc.scores, &mut sc.zacc, out);
+        buf.attention_batch_into(qs, nq, scores, zacc, out);
     }
 }
 
@@ -165,7 +174,8 @@ impl CachePolicy for SubGenCache {
         }
         assert_eq!(qs.len() % nq, 0, "qs must be nq × dim row-major");
         let mut out = vec![0.0f32; qs.len()];
-        self.attention_batch_into(qs, nq, &mut out);
+        let (mut scores, mut zacc) = (Vec::new(), Vec::new());
+        self.attention_batch_into(qs, nq, &mut scores, &mut zacc, &mut out);
         out
     }
 

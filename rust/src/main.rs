@@ -21,7 +21,7 @@ use anyhow::Result;
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 use subgen::cli::Args;
-use subgen::coordinator::{Engine, EngineConfig, HostExecutor, Request, StepExecutor};
+use subgen::coordinator::{Engine, EngineConfig, HostExecutor, Request, RequestClass, StepExecutor};
 use subgen::io::Checkpoint;
 use subgen::kvcache::POLICY_NAMES;
 use subgen::model::{Generator, ModelSpec};
@@ -64,6 +64,9 @@ fn main() -> Result<()> {
         .describe("metrics-port", None, "bind 127.0.0.1:PORT for Prometheus scrapes (serve)")
         .describe("snapshot-every", Some("0"), "snapshot cadence in ticks, 0 = off (serve)")
         .describe("deadline-ms", Some("0"), "per-request deadline in ms, 0 = none (serve)")
+        .describe("prefill-chunk", Some("0"), "prefill token budget per tick, 0 = monolithic \
+                   prefill (serve)")
+        .describe("priority", Some("interactive"), "request class: interactive|batch (serve)")
         .describe("seed", Some("0"), "rng seed");
     args.exit_on_help();
 
@@ -156,6 +159,7 @@ fn generate(args: &Args) -> Result<()> {
             budget,
             delta,
             deadline: None,
+            class: RequestClass::Interactive,
         });
         engine.run_to_completion()?;
         let resp = engine.take_responses().pop().expect("one response");
@@ -310,6 +314,10 @@ fn serve_cluster(args: &Args) -> Result<()> {
     let snapshot_every = args.usize_or("snapshot-every", 0);
     let deadline_ms = args.u64_or("deadline-ms", 0);
     let deadline = (deadline_ms > 0).then(|| Duration::from_millis(deadline_ms));
+    let prefill_chunk = args.usize_or("prefill-chunk", 0);
+    let priority = args.get_or("priority", "interactive");
+    let class = RequestClass::parse(&priority)
+        .ok_or_else(|| anyhow::anyhow!("unknown --priority {priority:?} (interactive|batch)"))?;
 
     // Every worker hosts the *same* model (same seed or the same
     // trained checkpoint): responses are identical no matter which
@@ -325,7 +333,11 @@ fn serve_cluster(args: &Args) -> Result<()> {
         }
         None => None,
     };
-    let cfg = EngineConfig { max_active: 4, snapshot_every, ..Default::default() };
+    let cfg = EngineConfig::builder()
+        .max_active(4)
+        .snapshot_every(snapshot_every)
+        .prefill_chunk(prefill_chunk)
+        .build();
     let router = Router::spawn(workers, cfg, move |_w| match &ck {
         Some(ck) => HostExecutor::from_checkpoint(ck).expect("checkpoint validated above"),
         None => HostExecutor::retrieval(model_seed),
@@ -338,7 +350,11 @@ fn serve_cluster(args: &Args) -> Result<()> {
         }
         None => None,
     };
-    println!("serving: workers={workers} policy={policy} requests={requests} stream={stream}");
+    println!(
+        "serving: workers={workers} policy={policy} requests={requests} stream={stream} \
+         prefill_chunk={prefill_chunk} priority={}",
+        class.label()
+    );
 
     let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed));
     let mut reqs = Vec::with_capacity(requests);
@@ -355,6 +371,7 @@ fn serve_cluster(args: &Args) -> Result<()> {
             budget,
             delta,
             deadline,
+            class,
         });
     }
 
@@ -370,7 +387,7 @@ fn serve_cluster(args: &Args) -> Result<()> {
                     tokens += streamed.len() as u64;
                     println!("request id={id} tokens={} (streamed)", streamed.len());
                 }
-                Err(SubmitError::DeadlineExceeded) => expired += 1,
+                Err(SubmitError::Expired) => expired += 1,
                 Err(_) => rejected += 1,
             }
         }
@@ -385,7 +402,7 @@ fn serve_cluster(args: &Args) -> Result<()> {
                     completed += 1;
                     tokens += resp.tokens.len() as u64;
                 }
-                Err(SubmitError::DeadlineExceeded) => expired += 1,
+                Err(SubmitError::Expired) => expired += 1,
                 Err(_) => rejected += 1,
             }
         }

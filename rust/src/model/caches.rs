@@ -4,7 +4,7 @@
 
 use crate::io::Checkpoint;
 use crate::kvcache::{build_policy, CachePolicy, PackedCache, POLICY_NAMES};
-use crate::model::ModelSpec;
+use crate::model::{ModelSpec, PrefillOutput};
 use anyhow::Result;
 
 /// All per-(layer, head) policies of one sequence.
@@ -59,6 +59,74 @@ pub struct FlatCaches {
 }
 
 impl FlatCaches {
+    /// Allocate an empty carry buffer for chunked prefill: one
+    /// `[capacity, d_head]` K/V region per (layer, head), all weights
+    /// zero. Unlike policy-assembled buffers this holds the *raw*
+    /// causal history with unit weights — chunk `n` of a prefill
+    /// attends over the exact per-head key/value prefix written by
+    /// chunks `0..n`, which is what makes chunked prefill bit-identical
+    /// to the monolithic pass. `capacity` must cover the full prompt.
+    pub fn for_prefill(spec: &ModelSpec, capacity: usize) -> FlatCaches {
+        let (l, h, dh) = (spec.n_layers, spec.n_heads, spec.d_head);
+        FlatCaches {
+            capacity,
+            keys: vec![0.0; l * h * capacity * dh],
+            values: vec![0.0; l * h * capacity * dh],
+            w: vec![0.0; l * h * capacity],
+            u: vec![0.0; l * h * capacity],
+            packed: vec![0; l * h],
+        }
+    }
+
+    /// Mark the first `n` slots of every head valid with unit weights
+    /// (`w = u = 1`). Used by the chunked-prefill carry: after writing
+    /// a chunk's K/V rows directly into `keys`/`values`, the executor
+    /// advances the valid prefix here.
+    pub fn set_unit_prefix(&mut self, n: usize) {
+        assert!(n <= self.capacity, "prefix {n} exceeds capacity {}", self.capacity);
+        for i in 0..self.packed.len() {
+            let at = i * self.capacity;
+            for x in &mut self.w[at..at + n] {
+                *x = 1.0;
+            }
+            for x in &mut self.u[at..at + n] {
+                *x = 1.0;
+            }
+            self.packed[i] = n;
+        }
+    }
+
+    /// Populate the carry from a monolithic [`PrefillOutput`]: copy the
+    /// first `len` positions' per-head K/V rows out of the executor's
+    /// `[L, prefill_t, H·dh]` tensors and mark them valid. This is what
+    /// the default `prefill_chunk` (one-shot schedule) and mid-prefill
+    /// snapshot restore use to rebuild carry state.
+    pub fn fill_prefix_from_prefill(
+        &mut self,
+        spec: &ModelSpec,
+        out: &PrefillOutput,
+        len: usize,
+    ) -> Result<()> {
+        let (l, h, dh, t) = (spec.n_layers, spec.n_heads, spec.d_head, spec.prefill_t);
+        anyhow::ensure!(self.packed.len() == l * h, "carry heads != spec heads");
+        anyhow::ensure!(len <= self.capacity, "prefix {len} exceeds capacity {}", self.capacity);
+        anyhow::ensure!(out.ks.len() == l * t * h * dh, "prefill tensor shape mismatch");
+        for li in 0..l {
+            for p in 0..len {
+                let src = (li * t + p) * h * dh;
+                for hi in 0..h {
+                    let dst = (li * h + hi) * self.capacity * dh + p * dh;
+                    self.keys[dst..dst + dh]
+                        .copy_from_slice(&out.ks[src + hi * dh..src + (hi + 1) * dh]);
+                    self.values[dst..dst + dh]
+                        .copy_from_slice(&out.vs[src + hi * dh..src + (hi + 1) * dh]);
+                }
+            }
+        }
+        self.set_unit_prefix(len);
+        Ok(())
+    }
+
     /// Number of (layer, head) buffers held.
     pub fn num_heads(&self) -> usize {
         self.packed.len()
@@ -296,16 +364,41 @@ impl SequenceCaches {
         Ok(())
     }
 
-    /// Host-side attention for (layer, head) — used by tests and the
-    /// clusterability harvest, not the serving path.
-    pub fn attention(&self, l: usize, h: usize, q: &[f32]) -> Vec<f32> {
-        self.policies[l * self.n_heads + h].attention(q)
+    /// Host-side attention for one (layer, head) into a caller buffer
+    /// (`out` is `d_head` wide) — the single per-head entry point; all
+    /// other attention methods on this type are wrappers over it. Packs
+    /// through the shared scratch, so no allocation after warm-up.
+    pub fn attention_into(&mut self, l: usize, h: usize, q: &[f32], out: &mut [f32]) {
+        let i = l * self.n_heads + h;
+        let policy = &self.policies[i];
+        // Rare upgrade: only the exact policy outgrows the largest
+        // cache variant the buffer was sized for.
+        self.scratch.ensure_capacity(policy.packed_slots());
+        policy.pack(&mut self.scratch);
+        self.scratch.attention_batch_into(
+            q,
+            1,
+            &mut self.score_scratch,
+            &mut self.zacc_scratch,
+            out,
+        );
     }
 
-    /// Host-side attention for **every** (layer, head) at once: one
-    /// pack plus one scoring sweep per policy, all through the shared
-    /// scratch buffers — the engine's per-tick batched probe. `q_flat`
-    /// and `out` are `[L, H, dh]` flat (one query per head).
+    /// Allocating wrapper over [`SequenceCaches::attention_into`] —
+    /// used by tests and the clusterability harvest, not the serving
+    /// path.
+    pub fn attention(&mut self, l: usize, h: usize, q: &[f32]) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.d_head];
+        self.attention_into(l, h, q, &mut out);
+        out
+    }
+
+    /// Host-side attention for **every** (layer, head) at once —
+    /// **this is the hot path** (the engine's per-tick batched probe):
+    /// one pack plus one scoring sweep per policy, all through the
+    /// shared scratch buffers. `q_flat` and `out` are `[L, H, dh]` flat
+    /// (one query per head). Each head's result is bit-identical to
+    /// [`SequenceCaches::attention_into`] for that head.
     ///
     /// Compared to calling [`SequenceCaches::attention`] per head, this
     /// allocates nothing after warm-up (no fresh `PackedCache` or
@@ -315,19 +408,16 @@ impl SequenceCaches {
         let expect = self.policies.len() * dh;
         anyhow::ensure!(q_flat.len() == expect, "q_flat: {} != {expect}", q_flat.len());
         anyhow::ensure!(out.len() == expect, "out: {} != {expect}", out.len());
-        for i in 0..self.policies.len() {
-            let policy = &self.policies[i];
-            // Rare upgrade: only the exact policy outgrows the largest
-            // cache variant the buffer was sized for.
-            self.scratch.ensure_capacity(policy.packed_slots());
-            policy.pack(&mut self.scratch);
-            self.scratch.attention_batch_into(
-                &q_flat[i * dh..(i + 1) * dh],
-                1,
-                &mut self.score_scratch,
-                &mut self.zacc_scratch,
-                &mut out[i * dh..(i + 1) * dh],
-            );
+        for l in 0..self.n_layers {
+            for h in 0..self.n_heads {
+                let i = l * self.n_heads + h;
+                self.attention_into(
+                    l,
+                    h,
+                    &q_flat[i * dh..(i + 1) * dh],
+                    &mut out[i * dh..(i + 1) * dh],
+                );
+            }
         }
         Ok(())
     }

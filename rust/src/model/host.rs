@@ -500,6 +500,153 @@ impl HostExecutor {
         Ok(PrefillOutput { logits, qs, ks, vs })
     }
 
+    /// One chunk of a prompt's causal forward pass, resuming from the
+    /// per-(layer, head) K/V rows earlier chunks left in `carry` (a
+    /// [`FlatCaches::for_prefill`] buffer holding `start_pos` rows per
+    /// head with unit weights).
+    ///
+    /// Bit-identity with [`HostExecutor::prefill`]: the monolithic pass
+    /// evaluates position `p` over its per-head `[t, dh]` K/V slab
+    /// prefix `0..=p` with unit weights; here the same rows live in the
+    /// carry's `[capacity, dh]` per-head regions, and both are row-major
+    /// prefixes — so [`attention_flat_into`] sees byte-identical inputs
+    /// and every kernel runs in the same order on the same bits.
+    /// Chunked prefill over any schedule therefore reproduces the
+    /// monolithic logits and (q, k, v) streams exactly, which the
+    /// chunking property tests pin.
+    ///
+    /// Output buffers use the full-`prefill_t` layout with the chunk's
+    /// rows written at absolute positions, so
+    /// [`HostExecutor::position_slice`] applies unchanged; rows outside
+    /// the chunk are zero.
+    pub fn prefill_chunk(
+        &self,
+        carry: &mut FlatCaches,
+        tokens: &[i32],
+        start_pos: usize,
+    ) -> Result<PrefillOutput> {
+        let s = &self.spec;
+        let (l, t_full, h, dh, v) = (s.n_layers, s.prefill_t, s.n_heads, s.d_head, s.vocab);
+        let n = tokens.len();
+        anyhow::ensure!(n >= 1, "empty prefill chunk");
+        anyhow::ensure!(
+            start_pos + n <= t_full,
+            "chunk end {} > prefill_t {t_full}",
+            start_pos + n
+        );
+        anyhow::ensure!(carry.num_heads() == l * h, "carry shaped for a different model");
+        anyhow::ensure!(
+            carry.capacity >= start_pos + n,
+            "carry capacity {} < {} positions",
+            carry.capacity,
+            start_pos + n
+        );
+        for i in 0..l * h {
+            anyhow::ensure!(
+                carry.packed_len(i) == start_pos,
+                "carry holds {} rows, chunk starts at {start_pos}",
+                carry.packed_len(i)
+            );
+        }
+        let (dm, hd) = (s.d_model, h * dh);
+        let q_scale = 1.0 / (dh as f32).sqrt();
+        let c = carry.capacity;
+
+        let mut logits = vec![0.0f32; t_full * v];
+        let mut qs = vec![0.0f32; l * t_full * hd];
+        let mut ks = qs.clone();
+        let mut vs = qs.clone();
+
+        // Residual stream for the chunk's positions only, [n, dm].
+        let mut x = vec![0.0f32; n * dm];
+        for (j, &tok) in tokens.iter().enumerate() {
+            anyhow::ensure!((0..v as i32).contains(&tok), "token {tok} outside vocab {v}");
+            x[j * dm..(j + 1) * dm].copy_from_slice(self.embed.row(tok as usize));
+        }
+
+        let ones = vec![1.0f32; start_pos + n];
+        let mut hn = vec![0.0f32; dm];
+        let mut ff1 = vec![0.0f32; FF_MULT * dm];
+        let mut tmp = vec![0.0f32; dm];
+        let mut attn = vec![0.0f32; hd];
+        let mut out_head = vec![0.0f32; dh];
+        let mut scores = Vec::new();
+        let mut zacc = Vec::new();
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            // Projections + RoPE at absolute positions; K/V rows land
+            // directly in the carry so the causal sweep below (and every
+            // later chunk) reads one contiguous per-head prefix.
+            for j in 0..n {
+                let p = start_pos + j;
+                let at = (li * t_full + p) * hd;
+                rmsnorm(&x[j * dm..(j + 1) * dm], &layer.g_attn, &mut hn);
+                let (q_out, k_out, v_out) = (
+                    &mut qs[at..at + hd],
+                    &mut ks[at..at + hd],
+                    &mut vs[at..at + hd],
+                );
+                matvec_into(layer.wq.as_slice(), dm, &hn, q_out);
+                matvec_into(layer.wk.as_slice(), dm, &hn, k_out);
+                matvec_into(layer.wv.as_slice(), dm, &hn, v_out);
+                rope_inplace(q_out, h, &self.rope_freqs, p);
+                rope_inplace(k_out, h, &self.rope_freqs, p);
+                for qi in q_out.iter_mut() {
+                    *qi *= q_scale;
+                }
+                for hi in 0..h {
+                    let row = (li * h + hi) * c * dh + p * dh;
+                    carry.keys[row..row + dh].copy_from_slice(&k_out[hi * dh..(hi + 1) * dh]);
+                    carry.values[row..row + dh].copy_from_slice(&v_out[hi * dh..(hi + 1) * dh]);
+                }
+            }
+            // Causal attention + MLP over the carry prefix, position by
+            // position — same kernel, same slot order as monolithic
+            // prefill.
+            for j in 0..n {
+                let p = start_pos + j;
+                let at = (li * t_full + p) * hd;
+                for hi in 0..h {
+                    let base = (li * h + hi) * c * dh;
+                    attention_flat_into(
+                        &carry.keys[base..base + (p + 1) * dh],
+                        &carry.values[base..base + (p + 1) * dh],
+                        &ones[..p + 1],
+                        &ones[..p + 1],
+                        dh,
+                        &qs[at + hi * dh..at + (hi + 1) * dh],
+                        1,
+                        None,
+                        &mut scores,
+                        &mut zacc,
+                        &mut out_head,
+                    );
+                    attn[hi * dh..(hi + 1) * dh].copy_from_slice(&out_head);
+                }
+                let xp = &mut x[j * dm..(j + 1) * dm];
+                matvec_into(layer.wo.as_slice(), hd, &attn, &mut tmp);
+                for (xi, &ti) in xp.iter_mut().zip(&tmp) {
+                    *xi += ti;
+                }
+                rmsnorm(xp, &layer.g_mlp, &mut hn);
+                matvec_into(layer.w1.as_slice(), dm, &hn, &mut ff1);
+                silu_inplace(&mut ff1);
+                matvec_into(layer.w2.as_slice(), FF_MULT * dm, &ff1, &mut tmp);
+                for (xi, &ti) in xp.iter_mut().zip(&tmp) {
+                    *xi += ti;
+                }
+            }
+        }
+
+        for j in 0..n {
+            let p = start_pos + j;
+            rmsnorm(&x[j * dm..(j + 1) * dm], &self.g_final, &mut hn);
+            matvec_into(self.embed.as_slice(), dm, &hn, &mut logits[p * v..(p + 1) * v]);
+        }
+        carry.set_unit_prefix(start_pos + n);
+        Ok(PrefillOutput { logits, qs, ks, vs })
+    }
+
     /// One decode step at `pos`: embed `token`, then per (layer, head)
     /// evaluate the policy-packed estimator over `flat` with this
     /// step's (k, v) in the reserved extra slot.
@@ -796,6 +943,57 @@ mod tests {
         let q0 = m.position_slice(&pre.qs, 0);
         let norm = crate::tensor::norm2(&q0);
         assert!(norm.is_finite() && norm > 0.0);
+    }
+
+    #[test]
+    fn prefill_chunks_reproduce_monolithic_prefill_bitwise() {
+        // Any chunk schedule (size 1, uneven, one-shot) must reproduce
+        // the monolithic prefill bit-for-bit at every position.
+        let m = HostExecutor::small(29);
+        let v = m.spec().vocab;
+        let prompt: Vec<i32> = vec![1, 5, 2, 7, 3, 0, 4, 9, 6, 8, 1, 2];
+        let full = m.prefill(&prompt).unwrap();
+        let bits = |x: &[f32]| x.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+        for schedule in [vec![1usize; 12], vec![3, 4, 5], vec![12], vec![7, 5]] {
+            let mut carry = FlatCaches::for_prefill(m.spec(), prompt.len());
+            let mut pos = 0;
+            for len in schedule.clone() {
+                let chunk = m.prefill_chunk(&mut carry, &prompt[pos..pos + len], pos).unwrap();
+                for p in pos..pos + len {
+                    assert_eq!(
+                        bits(&chunk.logits[p * v..(p + 1) * v]),
+                        bits(&full.logits[p * v..(p + 1) * v]),
+                        "{schedule:?} pos {p}"
+                    );
+                    assert_eq!(
+                        bits(&m.position_slice(&chunk.qs, p)),
+                        bits(&m.position_slice(&full.qs, p)),
+                        "{schedule:?} pos {p}"
+                    );
+                    assert_eq!(
+                        bits(&m.position_slice(&chunk.ks, p)),
+                        bits(&m.position_slice(&full.ks, p))
+                    );
+                    assert_eq!(
+                        bits(&m.position_slice(&chunk.vs, p)),
+                        bits(&m.position_slice(&full.vs, p))
+                    );
+                }
+                pos += len;
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_chunk_validates_carry_state() {
+        let m = HostExecutor::small(29);
+        let mut carry = FlatCaches::for_prefill(m.spec(), 4);
+        // Starting past the carry's filled prefix is an error.
+        assert!(m.prefill_chunk(&mut carry, &[1, 2], 1).is_err());
+        m.prefill_chunk(&mut carry, &[1, 2], 0).unwrap();
+        // Overflowing the carry capacity is an error.
+        assert!(m.prefill_chunk(&mut carry, &[3, 4, 5], 2).is_err());
+        assert!(m.prefill_chunk(&mut carry, &[], 2).is_err());
     }
 
     #[test]

@@ -133,7 +133,13 @@ impl Balancer for RoundRobin {
 /// Supervision and admission-control knobs for [`Router::spawn_with`].
 /// [`Router::spawn`] uses the default: supervision on, restarts capped
 /// at 3 per worker, no hang watchdog, no shedding, no injected faults.
+///
+/// Construct via [`RouterConfig::builder`] (or start from
+/// [`RouterConfig::default`] and mutate fields); the struct is
+/// `#[non_exhaustive]`, so new knobs stop breaking downstream
+/// construction sites.
 #[derive(Debug, Clone)]
+#[non_exhaustive]
 pub struct RouterConfig {
     /// Automatic restarts allowed per worker slot before the supervisor
     /// gives up on it (its sessions then surface `EngineGone`).
@@ -175,6 +181,70 @@ impl Default for RouterConfig {
             shed_watermark: None,
             fault_plans: Vec::new(),
         }
+    }
+}
+
+impl RouterConfig {
+    /// Start a builder from the defaults.
+    pub fn builder() -> RouterConfigBuilder {
+        RouterConfigBuilder { cfg: RouterConfig::default() }
+    }
+}
+
+/// Builder for [`RouterConfig`] — the construction path for code
+/// outside this crate (the struct is `#[non_exhaustive]`). Every method
+/// sets one knob; finish with [`RouterConfigBuilder::build`].
+#[derive(Debug, Clone)]
+pub struct RouterConfigBuilder {
+    cfg: RouterConfig,
+}
+
+impl RouterConfigBuilder {
+    /// See [`RouterConfig::max_restarts`].
+    pub fn max_restarts(mut self, v: u64) -> Self {
+        self.cfg.max_restarts = v;
+        self
+    }
+
+    /// See [`RouterConfig::hang_timeout`].
+    pub fn hang_timeout(mut self, v: Option<Duration>) -> Self {
+        self.cfg.hang_timeout = v;
+        self
+    }
+
+    /// See [`RouterConfig::poll_every`].
+    pub fn poll_every(mut self, v: Duration) -> Self {
+        self.cfg.poll_every = v;
+        self
+    }
+
+    /// See [`RouterConfig::retry_attempts`].
+    pub fn retry_attempts(mut self, v: u32) -> Self {
+        self.cfg.retry_attempts = v;
+        self
+    }
+
+    /// See [`RouterConfig::retry_base`].
+    pub fn retry_base(mut self, v: Duration) -> Self {
+        self.cfg.retry_base = v;
+        self
+    }
+
+    /// See [`RouterConfig::shed_watermark`].
+    pub fn shed_watermark(mut self, v: Option<u64>) -> Self {
+        self.cfg.shed_watermark = v;
+        self
+    }
+
+    /// See [`RouterConfig::fault_plans`].
+    pub fn fault_plans(mut self, v: Vec<(usize, FaultPlan)>) -> Self {
+        self.cfg.fault_plans = v;
+        self
+    }
+
+    /// Finish building.
+    pub fn build(self) -> RouterConfig {
+        self.cfg
     }
 }
 
@@ -268,8 +338,15 @@ impl ClusterMetrics {
                 deadline_exceeded: s.deadline_exceeded.get(),
                 snapshots: s.snapshots.get(),
                 snapshot_failures: s.snapshot_failures.get(),
+                prefill_chunks: s.prefill_chunks.get(),
+                prefill_chunk_tokens: s.prefill_chunk_tokens.get(),
+                prefill_preempted: s.prefill_preempted.get(),
                 latency: s.latency.snapshot(),
                 tick_latency: s.tick_latency.snapshot(),
+                ttft_interactive: s.ttft_interactive.snapshot(),
+                ttft_batch: s.ttft_batch.snapshot(),
+                tpot_interactive: s.tpot_interactive.snapshot(),
+                tpot_batch: s.tpot_batch.snapshot(),
             };
             dispatched += stat.dispatched;
             restarts += stat.restarts;
@@ -292,8 +369,15 @@ impl ClusterMetrics {
             deadline_exceeded: merged.deadline_exceeded.get(),
             snapshots: merged.snapshots.get(),
             snapshot_failures: merged.snapshot_failures.get(),
+            prefill_chunks: merged.prefill_chunks.get(),
+            prefill_chunk_tokens: merged.prefill_chunk_tokens.get(),
+            prefill_preempted: merged.prefill_preempted.get(),
             latency: merged.latency.snapshot(),
             tick_latency: merged.tick_latency.snapshot(),
+            ttft_interactive: merged.ttft_interactive.snapshot(),
+            ttft_batch: merged.ttft_batch.snapshot(),
+            tpot_interactive: merged.tpot_interactive.snapshot(),
+            tpot_batch: merged.tpot_batch.snapshot(),
             tokens_per_sec: merged.tokens.get() as f64 / uptime.as_secs_f64().max(1e-9),
             uptime,
         }
@@ -334,10 +418,24 @@ pub struct WorkerStat {
     pub snapshots: u64,
     /// Snapshot writes skipped by injected failures.
     pub snapshot_failures: u64,
+    /// Prefill chunks executed (chunked-prefill scheduler).
+    pub prefill_chunks: u64,
+    /// Prompt tokens prefilled through chunked prefill.
+    pub prefill_chunk_tokens: u64,
+    /// In-flight prefills preempted by decode TPOT debt.
+    pub prefill_preempted: u64,
     /// End-to-end request latency.
     pub latency: HistogramSnapshot,
     /// Per-decode-tick latency.
     pub tick_latency: HistogramSnapshot,
+    /// Time-to-first-token, interactive class.
+    pub ttft_interactive: HistogramSnapshot,
+    /// Time-to-first-token, batch class.
+    pub ttft_batch: HistogramSnapshot,
+    /// Inter-token latency, interactive class.
+    pub tpot_interactive: HistogramSnapshot,
+    /// Inter-token latency, batch class.
+    pub tpot_batch: HistogramSnapshot,
 }
 
 impl WorkerStat {
@@ -389,10 +487,24 @@ pub struct ClusterSnapshot {
     pub snapshots: u64,
     /// Σ snapshot writes skipped by injected failures.
     pub snapshot_failures: u64,
+    /// Σ prefill chunks executed.
+    pub prefill_chunks: u64,
+    /// Σ prompt tokens prefilled through chunked prefill.
+    pub prefill_chunk_tokens: u64,
+    /// Σ prefills preempted by decode TPOT debt.
+    pub prefill_preempted: u64,
     /// Merged end-to-end latency distribution.
     pub latency: HistogramSnapshot,
     /// Merged per-tick latency distribution.
     pub tick_latency: HistogramSnapshot,
+    /// Merged time-to-first-token distribution, interactive class.
+    pub ttft_interactive: HistogramSnapshot,
+    /// Merged time-to-first-token distribution, batch class.
+    pub ttft_batch: HistogramSnapshot,
+    /// Merged inter-token latency distribution, interactive class.
+    pub tpot_interactive: HistogramSnapshot,
+    /// Merged inter-token latency distribution, batch class.
+    pub tpot_batch: HistogramSnapshot,
     /// Generated tokens per wall-clock second since spawn.
     pub tokens_per_sec: f64,
     /// Wall time since the router spawned.
@@ -428,8 +540,15 @@ impl ClusterSnapshot {
             deadline_exceeded: stats.deadline_exceeded.get(),
             snapshots: stats.snapshots.get(),
             snapshot_failures: stats.snapshot_failures.get(),
+            prefill_chunks: stats.prefill_chunks.get(),
+            prefill_chunk_tokens: stats.prefill_chunk_tokens.get(),
+            prefill_preempted: stats.prefill_preempted.get(),
             latency: stats.latency.snapshot(),
             tick_latency: stats.tick_latency.snapshot(),
+            ttft_interactive: stats.ttft_interactive.snapshot(),
+            ttft_batch: stats.ttft_batch.snapshot(),
+            tpot_interactive: stats.tpot_interactive.snapshot(),
+            tpot_batch: stats.tpot_batch.snapshot(),
         };
         ClusterSnapshot {
             dispatched: stat.dispatched,
@@ -446,8 +565,15 @@ impl ClusterSnapshot {
             deadline_exceeded: stat.deadline_exceeded,
             snapshots: stat.snapshots,
             snapshot_failures: stat.snapshot_failures,
+            prefill_chunks: stat.prefill_chunks,
+            prefill_chunk_tokens: stat.prefill_chunk_tokens,
+            prefill_preempted: stat.prefill_preempted,
             latency: stat.latency.clone(),
             tick_latency: stat.tick_latency.clone(),
+            ttft_interactive: stat.ttft_interactive.clone(),
+            ttft_batch: stat.ttft_batch.clone(),
+            tpot_interactive: stat.tpot_interactive.clone(),
+            tpot_batch: stat.tpot_batch.clone(),
             workers: vec![stat],
             tokens_per_sec,
             uptime,

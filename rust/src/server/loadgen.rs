@@ -1,7 +1,7 @@
 //! Open-loop Poisson load generator + latency capture.
 
 use super::{ServerReply, StreamEvent, SubmitTarget};
-use crate::coordinator::Request;
+use crate::coordinator::{Request, RequestClass};
 use crate::metrics::Histogram;
 use crate::rng::{Pcg64, Rng};
 use std::sync::mpsc::Receiver;
@@ -62,10 +62,38 @@ pub struct StreamingReport {
     /// worker restart lands here: the recovery pause shows up as one
     /// large gap before the first post-restore token.
     pub tpot: Histogram,
+    /// TTFT restricted to [`RequestClass::Interactive`] streams — the
+    /// quantity the chunked-prefill scheduler optimises under mixed
+    /// load.
+    pub ttft_interactive: Histogram,
+    /// TTFT restricted to [`RequestClass::Batch`] streams.
+    pub ttft_batch: Histogram,
+    /// TPOT restricted to [`RequestClass::Interactive`] streams.
+    pub tpot_interactive: Histogram,
+    /// TPOT restricted to [`RequestClass::Batch`] streams.
+    pub tpot_batch: Histogram,
     /// Wall time of the whole run.
     pub wall: Duration,
     /// Distinct tokens received (recovery replays deduplicated).
     pub tokens: u64,
+}
+
+impl StreamingReport {
+    /// Per-class TTFT histogram.
+    pub fn ttft_for(&self, class: RequestClass) -> &Histogram {
+        match class {
+            RequestClass::Interactive => &self.ttft_interactive,
+            RequestClass::Batch => &self.ttft_batch,
+        }
+    }
+
+    /// Per-class TPOT histogram.
+    pub fn tpot_for(&self, class: RequestClass) -> &Histogram {
+        match class {
+            RequestClass::Interactive => &self.tpot_interactive,
+            RequestClass::Batch => &self.tpot_batch,
+        }
+    }
 }
 
 /// Baseline-vs-fault comparison from a chaos scenario (see
@@ -104,7 +132,31 @@ struct OpenStream {
     sent: Instant,
     last: Instant,
     got: Vec<i32>,
+    class: RequestClass,
     rx: Receiver<StreamEvent>,
+}
+
+/// Aggregate + per-class latency histograms filled by [`pump`].
+struct StreamHists {
+    ttft: Histogram,
+    tpot: Histogram,
+    ttft_class: [Histogram; 2],
+    tpot_class: [Histogram; 2],
+}
+
+impl StreamHists {
+    fn new() -> Self {
+        StreamHists {
+            ttft: Histogram::new(),
+            tpot: Histogram::new(),
+            ttft_class: [Histogram::new(), Histogram::new()],
+            tpot_class: [Histogram::new(), Histogram::new()],
+        }
+    }
+}
+
+fn class_index(class: RequestClass) -> usize {
+    matches!(class, RequestClass::Batch) as usize
 }
 
 /// Terminal state of one [`pump`] pass over a stream.
@@ -123,7 +175,7 @@ enum Verdict {
 /// exactly-once accounting, mirroring [`super::drain_stream`]); an
 /// index *ahead* of the received prefix is a protocol violation and
 /// fails the stream rather than passing off a gap as success.
-fn pump(s: &mut OpenStream, ttft: &Histogram, tpot: &Histogram, block: bool) -> Verdict {
+fn pump(s: &mut OpenStream, hists: &StreamHists, block: bool) -> Verdict {
     loop {
         let ev = if block {
             match s.rx.recv() {
@@ -148,9 +200,11 @@ fn pump(s: &mut OpenStream, ttft: &Histogram, tpot: &Histogram, block: bool) -> 
                 }
                 let now = Instant::now();
                 if s.got.is_empty() {
-                    ttft.record(now - s.sent);
+                    hists.ttft.record(now - s.sent);
+                    hists.ttft_class[class_index(s.class)].record(now - s.sent);
                 } else {
-                    tpot.record(now - s.last);
+                    hists.tpot.record(now - s.last);
+                    hists.tpot_class[class_index(s.class)].record(now - s.last);
                 }
                 s.last = now;
                 s.got.push(token);
@@ -254,8 +308,7 @@ impl LoadGen {
     pub fn run_streaming(mut self, target: &impl SubmitTarget) -> StreamingReport {
         let mut rng = Pcg64::seed_from_u64(self.seed);
         let start = Instant::now();
-        let ttft = Histogram::new();
-        let tpot = Histogram::new();
+        let hists = StreamHists::new();
         let mut open: Vec<OpenStream> = Vec::new();
         let mut failed = 0usize;
         let mut completed = 0usize;
@@ -270,15 +323,16 @@ impl LoadGen {
                 std::thread::sleep(next_arrival - now);
             }
             let req = (self.make_request)(id as u64);
+            let class = req.class;
             match target.submit_streaming(req) {
                 Ok(rx) => {
                     let now = Instant::now();
-                    open.push(OpenStream { sent: now, last: now, got: Vec::new(), rx });
+                    open.push(OpenStream { sent: now, last: now, got: Vec::new(), class, rx });
                 }
                 Err(_) => failed += 1,
             }
             // Opportunistically harvest whatever has streamed so far.
-            open.retain_mut(|s| match pump(s, &ttft, &tpot, false) {
+            open.retain_mut(|s| match pump(s, &hists, false) {
                 Verdict::Open => true,
                 Verdict::Done(n) => {
                     completed += 1;
@@ -293,7 +347,7 @@ impl LoadGen {
         }
         // Drain the tail.
         for mut s in open {
-            match pump(&mut s, &ttft, &tpot, true) {
+            match pump(&mut s, &hists, true) {
                 Verdict::Done(n) => {
                     completed += 1;
                     tokens += n;
@@ -301,7 +355,21 @@ impl LoadGen {
                 Verdict::Open | Verdict::Failed => failed += 1,
             }
         }
-        StreamingReport { completed, failed, ttft, tpot, wall: start.elapsed(), tokens }
+        let StreamHists { ttft, tpot, ttft_class, tpot_class } = hists;
+        let [ttft_interactive, ttft_batch] = ttft_class;
+        let [tpot_interactive, tpot_batch] = tpot_class;
+        StreamingReport {
+            completed,
+            failed,
+            ttft,
+            tpot,
+            ttft_interactive,
+            ttft_batch,
+            tpot_interactive,
+            tpot_batch,
+            wall: start.elapsed(),
+            tokens,
+        }
     }
 }
 
@@ -354,6 +422,41 @@ mod tests {
         // One TTFT sample per stream; max_new − 1 inter-token gaps.
         assert_eq!(report.ttft.count(), 10);
         assert_eq!(report.tpot.count(), 30);
+        // Default class is interactive; the batch histograms stay empty.
+        assert_eq!(report.ttft_for(RequestClass::Interactive).count(), 10);
+        assert_eq!(report.ttft_for(RequestClass::Batch).count(), 0);
+        assert_eq!(report.tpot_for(RequestClass::Interactive).count(), 30);
+        assert_eq!(report.tpot_for(RequestClass::Batch).count(), 0);
+        handle.shutdown();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn loadgen_streaming_splits_latency_by_class() {
+        let (handle, rx) = channel();
+        let t = std::thread::spawn(move || {
+            let exec = MockExecutor::small();
+            serve(&exec, EngineConfig::default(), rx).unwrap()
+        });
+        let report = LoadGen {
+            rate: 500.0,
+            requests: 8,
+            make_request: Box::new(|id| {
+                let class =
+                    if id % 2 == 0 { RequestClass::Interactive } else { RequestClass::Batch };
+                Request::exact(id, vec![(id % 8) as i32], 3).with_class(class)
+            }),
+            seed: 5,
+        }
+        .run_streaming(&handle);
+        assert_eq!(report.completed, 8);
+        // Aggregate histograms are the union of the per-class splits.
+        assert_eq!(report.ttft_interactive.count(), 4);
+        assert_eq!(report.ttft_batch.count(), 4);
+        assert_eq!(report.ttft.count(), 8);
+        assert_eq!(report.tpot_interactive.count(), 8);
+        assert_eq!(report.tpot_batch.count(), 8);
+        assert_eq!(report.tpot.count(), 16);
         handle.shutdown();
         t.join().unwrap();
     }

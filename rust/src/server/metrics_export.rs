@@ -35,7 +35,7 @@ pub fn prometheus_text(snap: &ClusterSnapshot) -> String {
     let _ = writeln!(s, "# TYPE subgen_tokens_per_second gauge");
     let _ = writeln!(s, "subgen_tokens_per_second {:.3}", snap.tokens_per_sec);
 
-    let counters: [(&str, &str, fn(&super::WorkerStat) -> u64, u64); 10] = [
+    let counters: [(&str, &str, fn(&super::WorkerStat) -> u64, u64); 13] = [
         ("dispatched_total", "Requests dispatched.", |w| w.dispatched, snap.dispatched),
         ("completed_total", "Requests completed.", |w| w.completed, snap.completed),
         ("rejected_total", "Requests rejected.", |w| w.rejected, snap.rejected),
@@ -65,6 +65,24 @@ pub fn prometheus_text(snap: &ClusterSnapshot) -> String {
             "Session snapshot write failures.",
             |w| w.snapshot_failures,
             snap.snapshot_failures,
+        ),
+        (
+            "prefill_chunks_total",
+            "Prefill chunks executed by the chunked-prefill scheduler.",
+            |w| w.prefill_chunks,
+            snap.prefill_chunks,
+        ),
+        (
+            "prefill_chunk_tokens_total",
+            "Prompt tokens prefilled through chunked prefill.",
+            |w| w.prefill_chunk_tokens,
+            snap.prefill_chunk_tokens,
+        ),
+        (
+            "prefill_preempted_total",
+            "In-flight prefills preempted by decode TPOT debt.",
+            |w| w.prefill_preempted,
+            snap.prefill_preempted,
         ),
     ];
     for (stem, help, get, total) in counters {
@@ -111,6 +129,22 @@ pub fn prometheus_text(snap: &ClusterSnapshot) -> String {
     let _ = writeln!(s, "# HELP {name} Per-decode-tick latency (cluster-merged).");
     let _ = writeln!(s, "# TYPE {name} summary");
     summary_lines(&mut s, name, "", &snap.tick_latency);
+    // Per-class SLO summaries: one family per metric, labelled by
+    // scheduling class, so dashboards can plot interactive vs batch
+    // TTFT/TPOT from the same scrape.
+    let name = "subgen_ttft_seconds";
+    let _ = writeln!(s, "# HELP {name} Time to first token by scheduling class (cluster-merged).");
+    let _ = writeln!(s, "# TYPE {name} summary");
+    summary_lines(&mut s, name, "class=\"interactive\",", &snap.ttft_interactive);
+    summary_lines(&mut s, name, "class=\"batch\",", &snap.ttft_batch);
+    let name = "subgen_tpot_seconds";
+    let _ = writeln!(
+        s,
+        "# HELP {name} Inter-token latency by scheduling class (cluster-merged)."
+    );
+    let _ = writeln!(s, "# TYPE {name} summary");
+    summary_lines(&mut s, name, "class=\"interactive\",", &snap.tpot_interactive);
+    summary_lines(&mut s, name, "class=\"batch\",", &snap.tpot_batch);
     s
 }
 
@@ -267,6 +301,25 @@ mod tests {
         assert!(text.contains("\nsubgen_deadline_exceeded_total 0"), "{text}");
         assert!(text.contains("\nsubgen_snapshots_total 0"), "{text}");
         assert!(text.contains("\nsubgen_snapshot_failures_total 0"), "{text}");
+        // Chunked-prefill scheduler families are present even when the
+        // feature is off, so the CI mixed-load smoke can rely on them.
+        assert!(text.contains("subgen_worker_prefill_chunks_total{worker=\"0\"} 0"), "{text}");
+        assert!(text.contains("\nsubgen_prefill_chunks_total 0"), "{text}");
+        assert!(text.contains("\nsubgen_prefill_chunk_tokens_total 0"), "{text}");
+        assert!(text.contains("\nsubgen_prefill_preempted_total 0"), "{text}");
+        // Per-class SLO summaries: 4 interactive requests completed, so
+        // the interactive TTFT count is 4 and batch stays 0.
+        assert!(
+            text.contains("subgen_ttft_seconds{class=\"interactive\",quantile=\"0.95\"}"),
+            "{text}"
+        );
+        assert!(text.contains("subgen_ttft_seconds_count{class=\"interactive\"} 4"), "{text}");
+        assert!(text.contains("subgen_ttft_seconds_count{class=\"batch\"} 0"), "{text}");
+        assert!(
+            text.contains("subgen_tpot_seconds{class=\"batch\",quantile=\"0.99\"}"),
+            "{text}"
+        );
+        assert!(text.contains("subgen_tpot_seconds_count{class=\"interactive\"} 4"), "{text}");
         assert!(text.contains("subgen_request_latency_seconds{quantile=\"0.5\"}"), "{text}");
         assert!(text.contains("subgen_request_latency_seconds{quantile=\"0.95\"}"), "{text}");
         assert!(text.contains("subgen_request_latency_seconds{quantile=\"0.99\"}"), "{text}");

@@ -12,7 +12,10 @@ pub mod cluster;
 mod loadgen;
 pub mod metrics_export;
 
-pub use cluster::{Balancer, ClusterMetrics, ClusterSnapshot, Router, RouterConfig, WorkerStat};
+pub use cluster::{
+    Balancer, ClusterMetrics, ClusterSnapshot, Router, RouterConfig, RouterConfigBuilder,
+    WorkerStat,
+};
 pub use loadgen::{ChaosReport, LoadGen, LoadGenReport, StreamingReport};
 pub use metrics_export::{prometheus_text, MetricsServer};
 
@@ -95,11 +98,25 @@ pub enum SubmitError {
     /// The serve loop is gone (shutdown or thread death).
     EngineGone,
     /// The request was dropped past its deadline (see
-    /// [`Request::deadline`]).
-    DeadlineExceeded,
+    /// [`Request::deadline`]) — the same outcome
+    /// [`ServerReply::Expired`] / [`StreamEvent::Expired`] report on
+    /// the reply channels; one vocabulary across every path.
+    Expired,
     /// The cluster shed the request before dispatch: aggregate
     /// outstanding work is past the router's shed watermark.
     Overloaded,
+}
+
+impl SubmitError {
+    /// Deprecated alias for [`SubmitError::Expired`], kept for one
+    /// release so downstream matches keep compiling. The serving layer
+    /// used to say `DeadlineExceeded` on the submit path and `Expired`
+    /// on the stream path for the same outcome; `Expired` is now the
+    /// single term (the Prometheus family name
+    /// `subgen_deadline_exceeded_total` is wire format and unchanged).
+    #[allow(non_upper_case_globals)]
+    #[deprecated(note = "renamed to SubmitError::Expired")]
+    pub const DeadlineExceeded: SubmitError = SubmitError::Expired;
 }
 
 impl std::fmt::Display for SubmitError {
@@ -107,7 +124,7 @@ impl std::fmt::Display for SubmitError {
         match self {
             SubmitError::Rejected => write!(f, "request rejected by the engine"),
             SubmitError::EngineGone => write!(f, "engine loop terminated"),
-            SubmitError::DeadlineExceeded => write!(f, "request dropped past its deadline"),
+            SubmitError::Expired => write!(f, "request dropped past its deadline"),
             SubmitError::Overloaded => write!(f, "cluster shed the request (over watermark)"),
         }
     }
@@ -178,7 +195,7 @@ pub fn recv_reply(rx: &Receiver<ServerReply>) -> Result<Response, SubmitError> {
     match rx.recv() {
         Ok(ServerReply::Done(resp)) => Ok(resp),
         Ok(ServerReply::Rejected) => Err(SubmitError::Rejected),
-        Ok(ServerReply::Expired) => Err(SubmitError::DeadlineExceeded),
+        Ok(ServerReply::Expired) => Err(SubmitError::Expired),
         Err(_) => Err(SubmitError::EngineGone),
     }
 }
@@ -211,7 +228,7 @@ pub fn drain_stream(rx: &Receiver<StreamEvent>) -> Result<(Vec<i32>, Response), 
             }
             Ok(StreamEvent::Done(resp)) => return Ok((tokens, resp)),
             Ok(StreamEvent::Rejected) => return Err(SubmitError::Rejected),
-            Ok(StreamEvent::Expired) => return Err(SubmitError::DeadlineExceeded),
+            Ok(StreamEvent::Expired) => return Err(SubmitError::Expired),
             Err(_) => return Err(SubmitError::EngineGone),
         }
     }
@@ -527,7 +544,7 @@ pub fn channel() -> (ServerHandle, Receiver<Msg>) {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::MockExecutor;
+    use crate::coordinator::{MockExecutor, RequestClass};
 
     #[test]
     fn serve_loop_round_trips_requests() {
@@ -563,6 +580,7 @@ mod tests {
             budget: 16,
             delta: 0.5,
             deadline: None,
+            class: RequestClass::Interactive,
         };
         let resp = h2.submit_blocking(req).unwrap();
         assert_eq!(resp.tokens.len(), 5);
@@ -731,11 +749,11 @@ mod tests {
         let err = handle
             .submit_blocking(Request::exact(1, vec![1], 500).with_deadline(dl))
             .unwrap_err();
-        assert_eq!(err, SubmitError::DeadlineExceeded);
+        assert_eq!(err, SubmitError::Expired);
         let srx = handle
             .submit_streaming(Request::exact(2, vec![1], 500).with_deadline(dl))
             .unwrap();
-        assert_eq!(drain_stream(&srx).unwrap_err(), SubmitError::DeadlineExceeded);
+        assert_eq!(drain_stream(&srx).unwrap_err(), SubmitError::Expired);
         // The loop is still healthy afterwards.
         let resp = handle.submit_blocking(Request::exact(3, vec![3], 2)).unwrap();
         assert_eq!(resp.tokens, vec![4, 5]);
@@ -743,6 +761,32 @@ mod tests {
         let stats = t.join().unwrap();
         assert_eq!(stats.deadline_exceeded.get(), 2);
         assert_eq!(stats.completed.get(), 1);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deadline_exceeded_alias_still_matches_expired() {
+        // One-release deprecation window: code written against the old
+        // `DeadlineExceeded` name keeps compiling and keeps matching
+        // the renamed `Expired` variant, on both reply paths.
+        assert_eq!(SubmitError::DeadlineExceeded, SubmitError::Expired);
+        let (handle, rx) = channel();
+        let t = std::thread::spawn(move || {
+            let exec = MockExecutor::small();
+            serve(&exec, EngineConfig::default(), rx).unwrap()
+        });
+        let dl = std::time::Duration::ZERO;
+        let err = handle
+            .submit_blocking(Request::exact(1, vec![1], 500).with_deadline(dl))
+            .unwrap_err();
+        assert!(matches!(err, SubmitError::DeadlineExceeded));
+        let srx = handle
+            .submit_streaming(Request::exact(2, vec![1], 500).with_deadline(dl))
+            .unwrap();
+        assert!(matches!(drain_stream(&srx).unwrap_err(), SubmitError::DeadlineExceeded));
+        handle.shutdown();
+        let stats = t.join().unwrap();
+        assert_eq!(stats.deadline_exceeded.get(), 2);
     }
 
     #[test]
@@ -835,6 +879,7 @@ mod tests {
             budget: 16,
             delta: 0.5,
             deadline: None,
+            class: RequestClass::Interactive,
         };
 
         // Reference: uninterrupted run.

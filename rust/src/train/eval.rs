@@ -93,6 +93,7 @@ pub fn evaluate_policies<E: StepExecutor>(
                 budget: cfg.budget,
                 delta: cfg.delta,
                 deadline: None,
+                class: crate::coordinator::RequestClass::Interactive,
             });
             anyhow::ensure!(accepted, "engine rejected eval request {id}");
         }

@@ -6,7 +6,7 @@
 //! silent drops.
 
 use std::time::Duration;
-use subgen::coordinator::{EngineConfig, FaultPlan, HostExecutor, Request};
+use subgen::coordinator::{EngineConfig, FaultPlan, HostExecutor, Request, RequestClass};
 use subgen::kvcache::POLICY_NAMES;
 use subgen::server::{drain_stream, Router, RouterConfig, SubmitError};
 
@@ -22,12 +22,13 @@ fn request(id: u64, max_new: usize) -> Request {
         budget: 16,
         delta: 0.5,
         deadline: None,
+        class: RequestClass::Interactive,
     }
 }
 
 #[test]
 fn worker_kill_mid_stream_recovers_sessions_bit_identically() {
-    let cfg = EngineConfig { max_active: 4, snapshot_every: 1, ..Default::default() };
+    let cfg = EngineConfig::builder().max_active(4).snapshot_every(1).build();
     // Undisturbed reference run: same model seed, same requests.
     let reference: Vec<Vec<i32>> = {
         let router = Router::spawn(1, cfg.clone(), |_w| HostExecutor::small(11)).unwrap();
@@ -40,14 +41,13 @@ fn worker_kill_mid_stream_recovers_sessions_bit_identically() {
     // Faulted run: the only worker panics at tick 4 with all six
     // streams in flight; the supervisor restarts it and re-admits the
     // sessions from their last snapshots.
-    let rcfg = RouterConfig {
-        poll_every: Duration::from_millis(2),
-        // Submits racing the restart keep retrying until the supervisor
-        // swaps in the replacement inbox.
-        retry_attempts: 6,
-        fault_plans: vec![(0, FaultPlan { panic_at_tick: Some(4), ..Default::default() })],
-        ..Default::default()
-    };
+    // Submits racing the restart keep retrying until the supervisor
+    // swaps in the replacement inbox.
+    let rcfg = RouterConfig::builder()
+        .poll_every(Duration::from_millis(2))
+        .retry_attempts(6)
+        .fault_plans(vec![(0, FaultPlan { panic_at_tick: Some(4), ..Default::default() })])
+        .build();
     let router = Router::spawn_with(1, cfg, rcfg, |_w| HostExecutor::small(11)).unwrap();
     let rxs: Vec<_> =
         (0..6u64).map(|id| router.submit_streaming(request(id, 8)).unwrap()).collect();
@@ -66,18 +66,79 @@ fn worker_kill_mid_stream_recovers_sessions_bit_identically() {
 }
 
 #[test]
+fn two_worker_kill_mid_chunked_prefill_recovers_bit_identically() {
+    // The chunked-prefill acceptance bar under chaos: two workers run
+    // long prompts through a small per-tick chunk budget (so prefill
+    // spans many ticks), snapshots publish every tick — including the
+    // mid-prefill carry — and worker 0 panics while its prompts are
+    // still prefilling. The supervisor restarts it, resumes the
+    // sessions from their mid-prefill snapshots, and every stream must
+    // match an undisturbed run bit for bit.
+    let long_request = |id: u64| {
+        let policy = POLICY_NAMES[id as usize % POLICY_NAMES.len()];
+        let prompt: Vec<i32> = (0..12).map(|p| ((p * 5 + id as usize) % 16) as i32).collect();
+        Request {
+            id,
+            session_id: None,
+            prompt,
+            max_new: 6,
+            policy: policy.into(),
+            budget: 16,
+            delta: 0.5,
+            deadline: None,
+            class: if id % 2 == 0 { RequestClass::Batch } else { RequestClass::Interactive },
+        }
+    };
+    let cfg = EngineConfig::builder()
+        .max_active(4)
+        .prefills_per_tick(2)
+        .prefill_chunk(2)
+        .snapshot_every(1)
+        .build();
+    // Undisturbed reference: same worker model seeds, same requests.
+    let reference: Vec<Vec<i32>> = {
+        let router = Router::spawn(2, cfg.clone(), |_w| HostExecutor::small(11)).unwrap();
+        let out = (0..6u64)
+            .map(|id| router.submit_blocking(long_request(id)).unwrap().tokens)
+            .collect();
+        router.shutdown().unwrap();
+        out
+    };
+
+    // Each 12-token prompt needs ≥ 6 ticks of chunk budget, so a panic
+    // at tick 3 lands while worker 0's sessions are still prefilling.
+    let rcfg = RouterConfig::builder()
+        .poll_every(Duration::from_millis(2))
+        .retry_attempts(6)
+        .fault_plans(vec![(0, FaultPlan { panic_at_tick: Some(3), ..Default::default() })])
+        .build();
+    let router = Router::spawn_with(2, cfg, rcfg, |_w| HostExecutor::small(11)).unwrap();
+    let rxs: Vec<_> =
+        (0..6u64).map(|id| router.submit_streaming(long_request(id)).unwrap()).collect();
+    for (id, rx) in rxs.iter().enumerate() {
+        let (streamed, resp) = drain_stream(rx).unwrap();
+        assert_eq!(streamed, reference[id], "request {id} diverged after recovery");
+        assert_eq!(resp.tokens, streamed, "request {id}: stream/response mismatch");
+    }
+    let snap = router.shutdown().unwrap();
+    assert_eq!(snap.restarts, 1, "{snap:?}");
+    assert_eq!(snap.completed, 6, "{snap:?}");
+    assert!(snap.prefill_chunks > 0, "chunked prefill must be exercised: {snap:?}");
+    assert!(snap.snapshots >= 1, "{snap:?}");
+}
+
+#[test]
 fn exhausted_restart_budget_surfaces_typed_errors_not_hangs() {
     // max_restarts 0: the supervisor gives the dead worker up and drops
     // its in-flight entries — every open stream must end with a typed
     // error promptly instead of blocking forever.
-    let cfg = EngineConfig { snapshot_every: 1, ..Default::default() };
-    let rcfg = RouterConfig {
-        max_restarts: 0,
-        poll_every: Duration::from_millis(2),
-        retry_attempts: 1,
-        fault_plans: vec![(0, FaultPlan { panic_at_tick: Some(2), ..Default::default() })],
-        ..Default::default()
-    };
+    let cfg = EngineConfig::builder().snapshot_every(1).build();
+    let rcfg = RouterConfig::builder()
+        .max_restarts(0)
+        .poll_every(Duration::from_millis(2))
+        .retry_attempts(1)
+        .fault_plans(vec![(0, FaultPlan { panic_at_tick: Some(2), ..Default::default() })])
+        .build();
     let router = Router::spawn_with(1, cfg, rcfg, |_w| HostExecutor::small(11)).unwrap();
     // The worker may die before a later submit is even delivered; both
     // shapes must be the same typed error, never a hang.
@@ -97,7 +158,7 @@ fn exhausted_restart_budget_surfaces_typed_errors_not_hangs() {
 fn deadline_expires_with_typed_reply_through_router() {
     let router = Router::spawn(1, EngineConfig::default(), |_w| HostExecutor::small(11)).unwrap();
     let err = router.submit_blocking(request(0, 4).with_deadline(Duration::ZERO)).unwrap_err();
-    assert_eq!(err, SubmitError::DeadlineExceeded);
+    assert_eq!(err, SubmitError::Expired);
     // Work without a deadline is untouched.
     let resp = router.submit_blocking(request(1, 4)).unwrap();
     assert_eq!(resp.tokens.len(), 4);

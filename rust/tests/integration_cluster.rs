@@ -3,7 +3,7 @@
 //! blocking equivalence, sticky sessions, graceful drain, and snapshot
 //! conservation (ISSUE 3 acceptance criteria).
 
-use subgen::coordinator::{EngineConfig, HostExecutor, Request};
+use subgen::coordinator::{EngineConfig, HostExecutor, Request, RequestClass};
 use subgen::kvcache::POLICY_NAMES;
 use subgen::server::{drain_stream, Router, SubmitError};
 
@@ -23,6 +23,7 @@ fn policy_request(id: u64, policy: &str, max_new: usize) -> Request {
         budget: 16,
         delta: 0.5,
         deadline: None,
+        class: RequestClass::Interactive,
     }
 }
 
@@ -31,7 +32,7 @@ fn sixteen_concurrent_mixed_policy_requests_settle() {
     // ≥16 concurrent requests across all five policies against 2 real
     // workers: every request completes or is *explicitly* rejected —
     // no hangs — and the merged snapshot equals the per-worker sums.
-    let router = host_router(2, EngineConfig { max_active: 4, ..Default::default() });
+    let router = host_router(2, EngineConfig::builder().max_active(4).build());
     let n_req = 20usize;
     let (mut completed, mut rejected, mut tokens) = (0u64, 0u64, 0u64);
     std::thread::scope(|scope| {
@@ -82,7 +83,7 @@ fn batched_and_sequential_clusters_serve_identical_responses() {
     let run = |batched: bool| {
         let router = host_router(
             2,
-            EngineConfig { max_active: 4, batched_decode: batched, ..Default::default() },
+            EngineConfig::builder().max_active(4).batched_decode(batched).build(),
         );
         let mut out = Vec::new();
         for id in 0..10u64 {
@@ -153,7 +154,7 @@ fn sessionless_load_spreads_across_workers() {
 fn shutdown_drains_in_flight_work() {
     // Dispatch without reading any reply, then shut down immediately:
     // drain must complete everything already admitted to worker inboxes.
-    let router = host_router(2, EngineConfig { max_active: 2, ..Default::default() });
+    let router = host_router(2, EngineConfig::builder().max_active(2).build());
     let rxs: Vec<_> =
         (0..10).map(|id| router.submit(policy_request(id, "sliding", 2)).unwrap()).collect();
     let snap = router.shutdown().unwrap();
@@ -179,7 +180,7 @@ fn rejection_is_explicit_on_both_paths() {
     // queue_capacity 1 + a burst dispatched before any tick: surplus is
     // rejected with a typed reply (blocking) or a terminal event
     // (streaming) — never a hang.
-    let router = host_router(1, EngineConfig { queue_capacity: 1, ..Default::default() });
+    let router = host_router(1, EngineConfig::builder().queue_capacity(1).build());
     let blocking: Vec<_> =
         (0..5).map(|id| router.submit(policy_request(id, "exact", 2)).unwrap()).collect();
     let srx = router.submit_streaming(policy_request(99, "exact", 0)).unwrap();

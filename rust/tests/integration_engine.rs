@@ -1,14 +1,14 @@
 //! Integration tests: the serving engine over the mock executor —
 //! routing, batching, state-machine and metric invariants at scale.
 
-use subgen::coordinator::{Engine, EngineConfig, MockExecutor, Request};
+use subgen::coordinator::{Engine, EngineConfig, MockExecutor, Request, RequestClass};
 use subgen::proptest_lite::{pair, Gen, Runner};
 use subgen::server::{channel, serve, LoadGen};
 
 #[test]
 fn every_submitted_id_completes_exactly_once() {
     let exec = MockExecutor::small();
-    let mut engine = Engine::new(&exec, EngineConfig { max_active: 3, ..Default::default() });
+    let mut engine = Engine::new(&exec, EngineConfig::builder().max_active(3).build());
     let n = 40;
     for id in 0..n {
         assert!(engine.submit(Request::exact(id, vec![(id % 8) as i32, 1], 1 + (id % 4) as usize)));
@@ -32,7 +32,7 @@ fn interleaved_submission_and_ticking() {
     let exec = MockExecutor::small();
     let mut engine = Engine::new(
         &exec,
-        EngineConfig { max_active: 2, prefills_per_tick: 1, ..Default::default() },
+        EngineConfig::builder().max_active(2).prefills_per_tick(1).build(),
     );
     let mut submitted = 0u64;
     let mut collected = 0usize;
@@ -62,7 +62,7 @@ fn property_random_workloads_complete() {
             let exec = MockExecutor::small();
             let mut engine = Engine::new(
                 &exec,
-                EngineConfig { max_active, prefills_per_tick: 2, ..Default::default() },
+                EngineConfig::builder().max_active(max_active).prefills_per_tick(2).build(),
             );
             for id in 0..n_req {
                 let prompt_len = 1 + (id * 7) % 5;
@@ -95,12 +95,11 @@ fn property_batched_decode_matches_sequential_engine() {
             let run = |batched: bool| {
                 let mut engine = Engine::new(
                     &exec,
-                    EngineConfig {
-                        max_active,
-                        prefills_per_tick: 2,
-                        batched_decode: batched,
-                        ..Default::default()
-                    },
+                    EngineConfig::builder()
+                        .max_active(max_active)
+                        .prefills_per_tick(2)
+                        .batched_decode(batched)
+                        .build(),
                 );
                 for id in 0..n_req as u64 {
                     let i = id as usize;
@@ -116,6 +115,7 @@ fn property_batched_decode_matches_sequential_engine() {
                         budget: 16,
                         delta: 0.5,
                         deadline: None,
+                        class: RequestClass::Interactive,
                     });
                 }
                 engine.run_to_completion().unwrap();
@@ -146,6 +146,7 @@ fn policies_produce_identical_token_streams_on_mock() {
             budget: 16,
             delta: 0.5,
             deadline: None,
+            class: RequestClass::Interactive,
         });
         engine.run_to_completion().unwrap();
         let tokens = engine.take_responses().pop().unwrap().tokens;
@@ -161,7 +162,7 @@ fn server_loop_under_concurrent_load() {
     let (handle, rx) = channel();
     let t = std::thread::spawn(move || {
         let exec = MockExecutor::small();
-        serve(&exec, EngineConfig { max_active: 4, ..Default::default() }, rx).unwrap()
+        serve(&exec, EngineConfig::builder().max_active(4).build(), rx).unwrap()
     });
     let report = LoadGen {
         rate: 1000.0,
@@ -180,6 +181,54 @@ fn server_loop_under_concurrent_load() {
 }
 
 #[test]
+fn chunked_prefill_workload_matches_monolithic_pinned() {
+    // The tentpole acceptance pin: a mixed-class, mixed-policy workload
+    // over the real transformer produces identical responses (ids,
+    // token bits, cache bytes) for every prefill-chunk budget —
+    // chunking reschedules prompt work across ticks but never changes
+    // what any request decodes.
+    let exec = subgen::coordinator::HostExecutor::small(41);
+    let run = |chunk: usize| {
+        let mut engine = Engine::new(
+            &exec,
+            EngineConfig::builder().max_active(3).prefills_per_tick(2).prefill_chunk(chunk).build(),
+        );
+        for id in 0..8u64 {
+            let i = id as usize;
+            let plen = 2 + (i * 5) % 11;
+            let prompt: Vec<i32> = (0..plen).map(|p| ((p * 3 + i) % 16) as i32).collect();
+            let class = if i % 2 == 0 { RequestClass::Batch } else { RequestClass::Interactive };
+            engine.submit(
+                Request {
+                    id,
+                    session_id: None,
+                    prompt,
+                    max_new: 1 + i % 4,
+                    policy: subgen::kvcache::POLICY_NAMES[i % 5].to_string(),
+                    budget: 16,
+                    delta: 0.5,
+                    deadline: None,
+                    class,
+                },
+            );
+        }
+        engine.run_to_completion().unwrap();
+        let chunks = engine.stats.prefill_chunks.get();
+        let mut rs = engine.take_responses();
+        rs.sort_by_key(|r| r.id);
+        let out: Vec<_> = rs.iter().map(|r| (r.id, r.tokens.clone(), r.cache_bytes)).collect();
+        (out, chunks)
+    };
+    let (mono, mono_chunks) = run(0);
+    assert_eq!(mono_chunks, 0, "monolithic mode must not count chunks");
+    for chunk in [1, 3, 8, 64] {
+        let (chunked, chunks) = run(chunk);
+        assert_eq!(chunked, mono, "prefill_chunk={chunk}");
+        assert!(chunks > 0, "prefill_chunk={chunk} must route through chunked prefill");
+    }
+}
+
+#[test]
 fn cache_bytes_reported_smaller_for_compressed_policies() {
     let exec = MockExecutor::small();
     let run = |policy: &str, budget: usize| -> usize {
@@ -194,6 +243,7 @@ fn cache_bytes_reported_smaller_for_compressed_policies() {
             budget,
             delta: 0.5,
             deadline: None,
+            class: RequestClass::Interactive,
         });
         engine.run_to_completion().unwrap();
         engine.take_responses()[0].cache_bytes

@@ -2,7 +2,7 @@
 //! through every cache policy — the end-to-end form of the paper's
 //! estimator guarantees, with no artifacts on disk.
 
-use subgen::coordinator::{Engine, EngineConfig, HostExecutor, MockExecutor, Request};
+use subgen::coordinator::{Engine, EngineConfig, HostExecutor, MockExecutor, Request, RequestClass};
 use subgen::linalg::rel_err_vec;
 use subgen::model::{DecodeStep, ModelSpec, SequenceCaches};
 
@@ -157,7 +157,7 @@ fn all_policies_complete_through_engine_on_host_executor() {
     let exec = HostExecutor::retrieval(5);
     let mut exact_bytes = 0usize;
     for policy in subgen::kvcache::POLICY_NAMES {
-        let mut engine = Engine::new(&exec, EngineConfig { max_active: 3, ..Default::default() });
+        let mut engine = Engine::new(&exec, EngineConfig::builder().max_active(3).build());
         for id in 0..4u64 {
             let prompt: Vec<i32> = (0..96).map(|i| (1 + i % 15) as i32).collect();
             assert!(engine.submit(Request {
@@ -169,6 +169,7 @@ fn all_policies_complete_through_engine_on_host_executor() {
                 budget: 48,
                 delta: 4.0,
                 deadline: None,
+                class: RequestClass::Interactive,
             }));
         }
         engine.run_to_completion().unwrap();

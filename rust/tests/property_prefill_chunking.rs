@@ -1,0 +1,179 @@
+//! Property tests (proptest_lite) for the tentpole invariant of chunked
+//! prefill: **any** chunk schedule — size-1 chunks, uneven mixes, one
+//! chunk covering the whole prompt — produces bit-identical results to
+//! a monolithic prefill, at the executor level (raw q/k/v/logits) and
+//! end-to-end through the engine for every cache policy; and a session
+//! snapshotted mid-prefill resumes to the identical token stream.
+//!
+//! This is the contract that lets the scheduler interleave prompt work
+//! with decode freely: chunking is a *scheduling* choice, never a
+//! numerics choice.
+
+use subgen::coordinator::{
+    Engine, EngineConfig, Request, RequestClass, SessionSnapshot, StepExecutor,
+};
+use subgen::kvcache::POLICY_NAMES;
+use subgen::model::{FlatCaches, HostExecutor};
+use subgen::proptest_lite::{pair, Gen, Runner};
+
+const CASES: usize = 16;
+
+/// Deterministic prompt of the given length (tokens stay tiny so every
+/// executor vocab accepts them).
+fn prompt(len: usize) -> Vec<i32> {
+    (0..len).map(|i| 1 + (i as i32 * 5 + 3) % 7).collect()
+}
+
+/// Split `total` into a schedule of chunk sizes driven by `shape`:
+/// alternating small/large cuts so schedules mix size-1 chunks with
+/// bigger ones; `shape == 0` degenerates to one covering chunk.
+fn schedule(total: usize, shape: usize) -> Vec<usize> {
+    if shape == 0 {
+        return vec![total];
+    }
+    let mut left = total;
+    let mut out = Vec::new();
+    let mut k = shape;
+    while left > 0 {
+        let take = (1 + k % 5).min(left);
+        out.push(take);
+        left -= take;
+        k = k.wrapping_mul(2654435761).wrapping_add(1);
+    }
+    out
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn any_chunk_schedule_matches_monolithic_at_executor_level() {
+    // Raw invariant: for a random prompt length and a random schedule,
+    // concatenating `prefill_chunk` outputs reproduces the monolithic
+    // `prefill`'s q/k/v and per-position logits bit for bit.
+    let exec = HostExecutor::small(29);
+    let spec = exec.spec().clone();
+    let mut runner = Runner::new(0xC41B_ED01, CASES);
+    runner.run(
+        "chunk-schedule/executor",
+        pair(Gen::usize_in(1, 24), Gen::usize_in(0, 1_000)),
+        |&(len, shape)| {
+            let toks = prompt(len);
+            let mono = exec.prefill(&toks).unwrap();
+            let mut carry = FlatCaches::for_prefill(&spec, len);
+            let mut start = 0usize;
+            let mut ok = true;
+            for take in schedule(len, shape) {
+                let pre = exec
+                    .prefill_chunk(&mut carry, &toks[start..start + take], start)
+                    .unwrap();
+                for pos in start..start + take {
+                    ok &= bits(&exec.position_slice(&pre.qs, pos))
+                        == bits(&exec.position_slice(&mono.qs, pos));
+                    ok &= bits(&exec.position_slice(&pre.ks, pos))
+                        == bits(&exec.position_slice(&mono.ks, pos));
+                    ok &= bits(&exec.position_slice(&pre.vs, pos))
+                        == bits(&exec.position_slice(&mono.vs, pos));
+                    let v = spec.vocab;
+                    ok &= bits(&pre.logits[pos * v..(pos + 1) * v])
+                        == bits(&mono.logits[pos * v..(pos + 1) * v]);
+                }
+                start += take;
+            }
+            ok && start == len
+        },
+    );
+}
+
+#[test]
+fn chunked_engine_matches_monolithic_for_every_policy() {
+    // End-to-end invariant: for every cache policy, a chunked engine
+    // (any per-tick budget, including 1 and ≥ prompt) emits the exact
+    // token stream and cache bytes of a monolithic engine.
+    let exec = HostExecutor::small(31);
+    let run = |chunk: usize, len: usize, policy: &str| {
+        let mut e = Engine::new(
+            &exec,
+            EngineConfig::builder().prefill_chunk(chunk).build(),
+        );
+        e.submit(Request {
+            id: 0,
+            session_id: None,
+            prompt: prompt(len),
+            max_new: 4,
+            policy: policy.into(),
+            budget: 12,
+            delta: 0.5,
+            deadline: None,
+            class: RequestClass::Interactive,
+        });
+        e.run_to_completion().unwrap();
+        let r = e.take_responses().pop().unwrap();
+        (r.tokens, r.cache_bytes)
+    };
+    for (pi, policy) in POLICY_NAMES.iter().enumerate() {
+        let mut runner = Runner::new(0xC41B_ED02 + pi as u64, CASES);
+        runner.run(
+            &format!("chunk-schedule/engine/{policy}"),
+            pair(Gen::usize_in(2, 20), Gen::usize_in(1, 32)),
+            |&(len, chunk)| run(chunk, len, policy) == run(0, len, policy),
+        );
+    }
+}
+
+#[test]
+fn mid_prefill_snapshot_resumes_identically_for_every_policy() {
+    // Recovery invariant: cut a chunked prefill after its first chunk,
+    // push the snapshot through the wire format, resume on a fresh
+    // engine — the completed stream matches the undisturbed run.
+    let exec = HostExecutor::small(37);
+    for (pi, policy) in POLICY_NAMES.iter().enumerate() {
+        let mut runner = Runner::new(0xC41B_ED03 + pi as u64, CASES);
+        runner.run(
+            &format!("chunk-schedule/snapshot/{policy}"),
+            pair(Gen::usize_in(4, 20), Gen::usize_in(1, 8)),
+            |&(len, chunk)| {
+                let chunk = chunk.min(len - 1); // guarantee a mid-prefill cut
+                let req = || Request {
+                    id: 3,
+                    session_id: None,
+                    prompt: prompt(len),
+                    max_new: 4,
+                    policy: (*policy).into(),
+                    budget: 12,
+                    delta: 0.5,
+                    deadline: None,
+                    class: RequestClass::Batch,
+                };
+                let mut a = Engine::new(&exec, EngineConfig::builder().build());
+                a.submit(req());
+                a.run_to_completion().unwrap();
+                let want = a.take_responses().pop().unwrap().tokens;
+
+                let snaps = std::rc::Rc::new(std::cell::RefCell::new(Vec::new()));
+                let tap = std::rc::Rc::clone(&snaps);
+                let mut b = Engine::new(
+                    &exec,
+                    EngineConfig::builder().prefill_chunk(chunk).snapshot_every(1).build(),
+                );
+                b.set_snapshot_sink(Box::new(move |s| tap.borrow_mut().push(s)));
+                b.submit(req());
+                b.tick().unwrap(); // first chunk lands, snapshot published
+                drop(b);
+                let bytes = snaps.borrow().last().unwrap().to_bytes();
+                let snap = SessionSnapshot::from_bytes(&bytes).unwrap();
+                if snap.prefill_done != Some(chunk) {
+                    return false;
+                }
+                let mut c = Engine::new(
+                    &exec,
+                    EngineConfig::builder().prefill_chunk(chunk).build(),
+                );
+                c.resume(snap).unwrap();
+                c.run_to_completion().unwrap();
+                c.take_responses().pop().unwrap().tokens == want
+            },
+        );
+    }
+}

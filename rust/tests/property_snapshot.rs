@@ -5,7 +5,7 @@
 //! rests on: a resumed session's softmax sees the same bits it would
 //! have seen had the worker never died.
 
-use subgen::coordinator::{Request, SessionSnapshot};
+use subgen::coordinator::{Request, RequestClass, SessionSnapshot};
 use subgen::kvcache::POLICY_NAMES;
 use subgen::model::{HostExecutor, SequenceCaches};
 use subgen::proptest_lite::{pair, Gen, Runner};
@@ -39,6 +39,7 @@ fn snapshot_restore_continuation_is_bit_identical_for_every_policy() {
                 budget: 12,
                 delta: 0.5,
                 deadline: None,
+                class: RequestClass::Interactive,
             };
             let mut caches = SequenceCaches::new(spec, policy, req.budget, req.delta, 99).unwrap();
             for t in 0..pre {

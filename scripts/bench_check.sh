@@ -3,8 +3,8 @@
 #
 # Re-runs the BENCH_query.json emitters — `cargo bench --bench
 # bench_query_latency` (rewrites the file) then `cargo bench --bench
-# bench_e2e_decode` (merges its `batched_decode` operating point into
-# it) — and compares every `*_ns` timing against the previously
+# bench_e2e_decode` (merges its `batched_decode` and `prefill_chunked`
+# operating points into it) — and compares every `*_ns` timing against the previously
 # committed baseline. Exits non-zero when a timing regresses beyond the
 # tolerance (BENCH_TOLERANCE, default 0.25 = 25%) **or when a `*_ns`
 # key present in the baseline is missing from the fresh run** — a
