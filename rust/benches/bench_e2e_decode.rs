@@ -10,7 +10,9 @@
 //! into `BENCH_query.json` (key `batched_decode`) so the CI perf gate
 //! covers them. Section 1b times chunked prefill against the monolithic
 //! pass at several chunk budgets (key `prefill_chunked`), pinning
-//! bit-identity first. Section 2 is the PJRT per-policy/per-capacity step
+//! bit-identity first. Section 1c measures the flight-recorder tracing
+//! overhead on the engine decode path and asserts it stays within 3%
+//! (key `trace_overhead`). Section 2 is the PJRT per-policy/per-capacity step
 //! bench; it requires artifacts (`make artifacts`) and prints a notice
 //! instead when they are missing so `cargo bench` stays green.
 //!
@@ -18,6 +20,7 @@
 
 use std::path::Path;
 use subgen::bench::{black_box, Bencher, Table};
+use subgen::coordinator::{Engine, EngineConfig, Request, RequestClass};
 use subgen::model::{
     DecodeStep, FlatCaches, Generator, HostExecutor, ModelSpec, PrefillOutput, SequenceCaches,
 };
@@ -208,10 +211,81 @@ fn host_prefill_chunked_section(bencher: &Bencher) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Decode ticks per trace-overhead run: long enough that the engine
+/// loop dominates setup, short enough for best-of-N repeats.
+const TRACE_TOKENS: usize = 512;
+
+/// Section 1c: flight-recorder cost on the engine decode hot path —
+/// one subgen-policy request (16-token prompt, [`TRACE_TOKENS`] decode
+/// ticks) run with tracing off vs on (64 Ki-event ring, sample every
+/// tick, so every tick pays a `record` plus the cache-telemetry
+/// sample). Best-of-N over alternating runs keeps the ratio
+/// noise-resistant; the section *asserts* the ≤3% budget rather than
+/// just reporting it, so an overhead regression fails `cargo bench`
+/// (and with it the CI perf gate) outright. Timings merge into
+/// `BENCH_query.json` (key `trace_overhead`); the ratio key carries no
+/// `_ns` suffix on purpose — the gate compares raw timings, the
+/// in-bench assert owns the ratio.
+fn host_trace_overhead_section() -> anyhow::Result<()> {
+    let exec = HostExecutor::small(11);
+    let vocab = exec.spec().vocab;
+    let prompt: Vec<i32> = (0..16).map(|i| (i % vocab) as i32).collect();
+    let run = |traced: bool| -> anyhow::Result<f64> {
+        let cfg = if traced {
+            EngineConfig::builder().trace_buffer(1 << 16).trace_sample(1).build()
+        } else {
+            EngineConfig::default()
+        };
+        let mut engine = Engine::new(&exec, cfg);
+        engine.submit(Request {
+            id: 0,
+            session_id: None,
+            prompt: prompt.clone(),
+            max_new: TRACE_TOKENS,
+            policy: "subgen".into(),
+            budget: 40,
+            delta: 4.0,
+            deadline: None,
+            class: RequestClass::Interactive,
+        });
+        let t0 = std::time::Instant::now();
+        engine.run_to_completion()?;
+        let elapsed = t0.elapsed();
+        anyhow::ensure!(engine.take_responses().len() == 1, "request did not finish");
+        Ok(elapsed.as_nanos() as f64 / TRACE_TOKENS as f64)
+    };
+    // Warm both paths once, then alternate so slow drifts (thermal,
+    // scheduler) land on both sides equally.
+    run(false)?;
+    run(true)?;
+    let (mut off, mut on) = (f64::MAX, f64::MAX);
+    for _ in 0..7 {
+        off = off.min(run(false)?);
+        on = on.min(run(true)?);
+    }
+    let ratio = on / off.max(1e-9);
+    println!("\n== flight-recorder overhead on the engine decode path ==\n");
+    println!("trace off: {off:.0} ns/token   trace on: {on:.0} ns/token   ratio x{ratio:.3}");
+    merge_into_bench_query(
+        "trace_overhead",
+        &format!(
+            "  \"trace_overhead\": {{\"off_per_token_ns\": {off:.0}, \
+             \"on_per_token_ns\": {on:.0}, \"overhead_ratio\": {ratio:.4}}}"
+        ),
+    )?;
+    anyhow::ensure!(
+        ratio <= 1.03,
+        "tracing-enabled decode is {:.1}% slower than tracing-off (budget 3%)",
+        (ratio - 1.0) * 100.0
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let bencher = Bencher { budget: std::time::Duration::from_millis(800), ..Default::default() };
     host_batched_section(&bencher)?;
     host_prefill_chunked_section(&bencher)?;
+    host_trace_overhead_section()?;
 
     let artifacts = Path::new("artifacts");
     if !artifacts.join("manifest.toml").exists() {

@@ -34,6 +34,7 @@ use subgen::server::{
     channel, prometheus_text, serve, ChaosReport, ClusterSnapshot, LoadGen, LoadGenReport, Router,
     RouterConfig, StreamingReport,
 };
+use subgen::trace::{chrome_trace, request_summaries, FlightRecorder, TraceEvent};
 use subgen::workload::{lines_for_seq_len_clamped, RetrievalSampler};
 
 fn main() -> Result<()> {
@@ -50,6 +51,8 @@ fn main() -> Result<()> {
         .describe("mixed", None, "mixed-load run: long batch prefills + interactive decode, \
                    chunked-prefill scheduler vs monolithic")
         .describe("prefill-chunk", Some("32"), "prefill token budget per tick in --mixed")
+        .describe("trace-out", None, "write a merged Chrome trace-event JSON (all policy runs, \
+                   one track per worker) to this path and print per-request summaries")
         .describe("seed", Some("0"), "rng seed");
     args.exit_on_help();
     let executor = args.get_or("executor", "host");
@@ -65,6 +68,7 @@ fn main() -> Result<()> {
     let max_new = args.usize_or("new", 8);
     let budget = args.usize_or("budget", 192);
     let seed = args.u64_or("seed", 0);
+    let trace_out = args.get("trace-out").map(PathBuf::from);
 
     if let Some(scenario) = args.get("chaos") {
         anyhow::ensure!(scenario == "kill-one", "unknown chaos scenario {scenario:?} (kill-one)");
@@ -79,9 +83,20 @@ fn main() -> Result<()> {
 
     println!("executor: {executor} workers: {workers}");
     let mut table = Table::new(&["policy", "completed", "tok/s", "p50", "p90", "p99", "max"]);
+    let mut tracks: Vec<(String, Vec<TraceEvent>)> = Vec::new();
     for policy in ["exact", "sink", "h2o", "subgen"] {
-        let (report, snap) = run_policy(
-            &executor, &artifacts, workers, policy, requests, rate, n, max_new, budget, seed,
+        let (report, snap, policy_tracks) = run_policy(
+            &executor,
+            &artifacts,
+            workers,
+            policy,
+            requests,
+            rate,
+            n,
+            max_new,
+            budget,
+            seed,
+            trace_out.is_some(),
         )?;
         table.row(&[
             policy.to_string(),
@@ -111,9 +126,24 @@ fn main() -> Result<()> {
              p50={:?} p99={:?}",
             snap.tokens_per_sec, snap.completed, snap.rejected, snap.latency.p50, snap.latency.p99
         );
+        if !policy_tracks.is_empty() {
+            // Request ids repeat across policy runs, so summarise per
+            // policy over the union of this policy's worker rings.
+            let merged: Vec<TraceEvent> =
+                policy_tracks.iter().flat_map(|(_, evs)| evs.iter().copied()).collect();
+            for s in request_summaries(&merged) {
+                println!("trace policy={policy} {s}");
+            }
+            tracks.extend(policy_tracks);
+        }
     }
     println!();
     table.print();
+    if let Some(path) = trace_out {
+        let events: usize = tracks.iter().map(|(_, evs)| evs.len()).sum();
+        std::fs::write(&path, chrome_trace(&tracks))?;
+        println!("trace written path={} tracks={} events={events}", path.display(), tracks.len());
+    }
     Ok(())
 }
 
@@ -123,7 +153,11 @@ fn main() -> Result<()> {
 /// from per-tick snapshots. Reports worker restarts, recovered
 /// sessions, and TTFT/TPOT degradation (faulted p95 / baseline p95),
 /// then dumps the faulted run's Prometheus families so scrapes and CI
-/// greps see the same counters. Arrivals are a burst (the configured
+/// greps see the same counters. Both runs trace into per-worker flight
+/// recorders; before each restart the supervisor writes the dead
+/// incarnation's ring to disk, reported as one
+/// `chaos flight_recorder_dump path=...` line per dump (CI greps
+/// these). Arrivals are a burst (the configured
 /// rate is ignored) so the killed worker deterministically holds
 /// in-flight sessions when the fault fires.
 fn run_chaos(
@@ -135,11 +169,17 @@ fn run_chaos(
     seed: u64,
 ) -> Result<()> {
     let model_seed = seed ^ 0xBEEF;
+    // Tracing is on for both runs (identical overhead keeps the
+    // degradation comparison fair); the faulted run adds a dump dir so
+    // the supervisor leaves a crash-forensics trace behind.
     let cfg = EngineConfig::builder()
         .max_active(4)
         .prefills_per_tick(1)
         .snapshot_every(1)
+        .trace_buffer(1 << 16)
         .build();
+    let dump_dir = std::env::temp_dir().join("subgen_chaos_dumps");
+    let _ = std::fs::remove_dir_all(&dump_dir);
     // Identical prompts in both runs so the latency comparison is
     // workload-for-workload.
     let load = || {
@@ -170,17 +210,22 @@ fn run_chaos(
 
     let rcfg = RouterConfig::builder()
         .fault_plans(vec![(0, FaultPlan { panic_at_tick: Some(8), ..Default::default() })])
+        .trace_dump_dir(Some(dump_dir))
         .build();
     let router =
         Router::spawn_with(workers, cfg, rcfg, move |_w| HostExecutor::retrieval(model_seed))?;
     let faulted = load().run_streaming(&router);
+    let metrics = router.metrics();
     let snap = router.shutdown()?;
+    let trace_dumps: Vec<PathBuf> =
+        metrics.trace_dumps().into_iter().map(|(_, path)| path).collect();
 
     let chaos = ChaosReport {
         baseline,
         faulted,
         restarts: snap.restarts,
         recovered_sessions: snap.recovered_sessions,
+        trace_dumps,
     };
     println!(
         "chaos scenario=kill-one restarts={} recovered_sessions={} completed={}/{requests} \
@@ -199,6 +244,9 @@ fn run_chaos(
         chaos.faulted.ttft.p95(),
         chaos.faulted.tpot.p95()
     );
+    for path in &chaos.trace_dumps {
+        println!("chaos flight_recorder_dump path={}", path.display());
+    }
     print!("{}", prometheus_text(&snap));
     Ok(())
 }
@@ -294,7 +342,8 @@ fn run_mixed_once(
 }
 
 /// One policy's run: spawn the serving backend, drive the open-loop
-/// load, drain, and return (load report, final cluster snapshot).
+/// load, drain, and return (load report, final cluster snapshot,
+/// flight-recorder tracks — empty unless `trace` is on).
 fn run_policy(
     executor: &str,
     artifacts: &std::path::Path,
@@ -306,7 +355,8 @@ fn run_policy(
     max_new: usize,
     budget: usize,
     seed: u64,
-) -> Result<(LoadGenReport, ClusterSnapshot)> {
+    trace: bool,
+) -> Result<(LoadGenReport, ClusterSnapshot, Vec<(String, Vec<TraceEvent>)>)> {
     let policy_owned = policy.to_string();
     let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed));
     let mut prompts = Vec::with_capacity(requests);
@@ -325,7 +375,11 @@ fn run_policy(
         deadline: None,
         class: RequestClass::Interactive,
     });
-    let cfg = EngineConfig::builder().max_active(4).prefills_per_tick(1).build();
+    let mut builder = EngineConfig::builder().max_active(4).prefills_per_tick(1);
+    if trace {
+        builder = builder.trace_buffer(1 << 16);
+    }
+    let cfg = builder.build();
     let loadgen = LoadGen { rate, requests, make_request, seed };
 
     if executor == "host" {
@@ -334,11 +388,24 @@ fn run_policy(
         let model_seed = seed ^ 0xBEEF;
         let router = Router::spawn(workers, cfg, move |_w| HostExecutor::retrieval(model_seed))?;
         let report = loadgen.run(&router);
+        let mut tracks = Vec::new();
+        for w in 0..router.num_workers() {
+            if let Some(rec) = router.recorder(w) {
+                tracks.push((format!("{policy}/worker{w}"), rec.events()));
+            }
+        }
         let snap = router.shutdown()?;
-        Ok((report, snap))
+        Ok((report, snap, tracks))
     } else {
         // PJRT types are not Send: single engine thread, runtime built
-        // inside it; wrap the snapshot from its one stats block.
+        // inside it; wrap the snapshot from its one stats block. The
+        // recorder is pre-built here so the trace survives the engine.
+        let recorder = trace.then(|| std::sync::Arc::new(FlightRecorder::new(1 << 16, 1)));
+        let cfg = EngineConfig::builder()
+            .max_active(4)
+            .prefills_per_tick(1)
+            .trace(recorder.clone())
+            .build();
         let (handle, rx) = channel();
         let artifacts = artifacts.to_path_buf();
         let engine_thread = std::thread::spawn(move || -> Result<_> {
@@ -358,6 +425,9 @@ fn run_policy(
             report.throughput_tps(),
             report.wall,
         );
-        Ok((report, snap))
+        let tracks = recorder
+            .map(|rec| vec![(format!("{policy}/worker0"), rec.events())])
+            .unwrap_or_default();
+        Ok((report, snap, tracks))
     }
 }

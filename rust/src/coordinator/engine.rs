@@ -3,9 +3,10 @@
 use super::{Request, RequestClass, Response, StepExecutor};
 use super::request::Timing;
 use super::snapshot::{FaultPlan, SessionSnapshot};
-use crate::kvcache::attention_flat_into;
+use crate::kvcache::{attention_flat_into, CacheTelemetry};
 use crate::model::{caches::FlatCaches, DecodeStep, SequenceCaches, StepOutput};
 use crate::metrics::{Counter, Gauge, Histogram};
+use crate::trace::{EventKind, FlightRecorder};
 use anyhow::Result;
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -82,6 +83,23 @@ pub struct EngineConfig {
     /// SLO ticks pay the debt back down. `None` = never preempt
     /// (default).
     pub tpot_slo: Option<Duration>,
+    /// Flight-recorder capacity in events. When > 0 the engine records
+    /// per-request trace spans (submit/admit/prefill/decode/snapshot/
+    /// preempt/terminal) into a lock-free ring buffer readable via
+    /// [`Engine::recorder`]; 0 disables tracing (default). Recording is
+    /// allocation-free on the decode hot path (see
+    /// [`crate::trace::FlightRecorder`]).
+    pub trace_buffer: usize,
+    /// Record 1 of every N per-tick trace events (decode-tick spans and
+    /// cache-telemetry samples). Lifecycle events are always recorded,
+    /// so request summaries stay complete under sampling. 0 and 1 both
+    /// mean "every tick" (default 1).
+    pub trace_sample: u64,
+    /// Record into this pre-built flight recorder instead of building a
+    /// private one — how the cluster router shares one recorder per
+    /// worker slot with its supervisor, so crash dumps survive the
+    /// engine. Overrides `trace_buffer` when set.
+    pub trace: Option<Arc<FlightRecorder>>,
 }
 
 impl Default for EngineConfig {
@@ -96,6 +114,9 @@ impl Default for EngineConfig {
             fault: FaultPlan::default(),
             prefill_chunk: 0,
             tpot_slo: None,
+            trace_buffer: 0,
+            trace_sample: 1,
+            trace: None,
         }
     }
 }
@@ -170,6 +191,24 @@ impl EngineConfigBuilder {
         self
     }
 
+    /// See [`EngineConfig::trace_buffer`].
+    pub fn trace_buffer(mut self, v: usize) -> Self {
+        self.cfg.trace_buffer = v;
+        self
+    }
+
+    /// See [`EngineConfig::trace_sample`].
+    pub fn trace_sample(mut self, v: u64) -> Self {
+        self.cfg.trace_sample = v;
+        self
+    }
+
+    /// See [`EngineConfig::trace`].
+    pub fn trace(mut self, v: Option<Arc<FlightRecorder>>) -> Self {
+        self.cfg.trace = v;
+        self
+    }
+
     /// Finish building.
     pub fn build(self) -> EngineConfig {
         self.cfg
@@ -235,6 +274,27 @@ pub struct EngineStats {
     pub tpot_interactive: Histogram,
     /// Inter-token latency of batch-class requests.
     pub tpot_batch: Histogram,
+    /// Packed cache bytes across resident sequences (gauge, updated
+    /// each tick from [`crate::kvcache::CachePolicy::telemetry`]).
+    pub cache_bytes: Gauge,
+    /// SubGen cluster count summed across resident sequences' policies
+    /// (gauge; 0 for policies without clustering).
+    pub cache_clusters: Gauge,
+    /// Value-sampling reservoir occupancy summed across resident
+    /// sequences' policies (gauge).
+    pub cache_reservoir: Gauge,
+    /// Rows admitted into cache policies, summed across resident
+    /// sequences (gauge: the sum shrinks when sequences retire).
+    pub cache_admitted_rows: Gauge,
+    /// Rows evicted or folded into summaries by cache policies, summed
+    /// across resident sequences (gauge).
+    pub cache_evicted_rows: Gauge,
+    /// Measured estimator error of the host probe: relative L2 distance
+    /// between policy attention and the exact unit-weight reference,
+    /// per (layer, head) sweep. Unitless, recorded at nanosecond
+    /// granularity (1 ns ≡ 1e-9 error), so `p99` of 1e6 ns reads as
+    /// 1e-3 relative error. ~0 for the exact policy.
+    pub probe_error: Histogram,
 }
 
 impl EngineStats {
@@ -264,6 +324,12 @@ impl EngineStats {
         self.ttft_batch.merge_from(&other.ttft_batch);
         self.tpot_interactive.merge_from(&other.tpot_interactive);
         self.tpot_batch.merge_from(&other.tpot_batch);
+        self.cache_bytes.add(other.cache_bytes.get());
+        self.cache_clusters.add(other.cache_clusters.get());
+        self.cache_reservoir.add(other.cache_reservoir.get());
+        self.cache_admitted_rows.add(other.cache_admitted_rows.get());
+        self.cache_evicted_rows.add(other.cache_evicted_rows.get());
+        self.probe_error.merge_from(&other.probe_error);
     }
 
     /// The TTFT histogram for `class`.
@@ -340,6 +406,13 @@ pub struct Engine<'e, E: StepExecutor> {
     /// Probe kernel scratch (scores / f64 accumulator).
     probe_scores: Vec<f32>,
     probe_zacc: Vec<f64>,
+    /// Unit-weight scratch for the probe's exact reference pass (all
+    /// 1.0; sized to the largest head's retained rows).
+    probe_unit: Vec<f32>,
+    /// Reference output buffer for the probe's error measurement.
+    probe_ref: Vec<f32>,
+    /// Flight recorder for request tracing; `None` = tracing off.
+    trace: Option<Arc<FlightRecorder>>,
     /// Per-token streaming hook (see [`TokenSink`]); `None` = silent.
     sink: Option<TokenSink<'e>>,
     /// Snapshot publication hook (see [`SnapshotSink`]); `None` = off.
@@ -361,6 +434,10 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
     /// New engine recording into caller-owned stats — how the cluster
     /// router watches per-worker counters without channel round-trips.
     pub fn with_stats(exec: &'e E, cfg: EngineConfig, stats: Arc<EngineStats>) -> Self {
+        let trace = cfg.trace.clone().or_else(|| {
+            (cfg.trace_buffer > 0)
+                .then(|| Arc::new(FlightRecorder::new(cfg.trace_buffer, cfg.trace_sample)))
+        });
         Self {
             exec,
             cfg,
@@ -374,11 +451,21 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             probe_out: Vec::new(),
             probe_scores: Vec::new(),
             probe_zacc: Vec::new(),
+            probe_unit: Vec::new(),
+            probe_ref: Vec::new(),
+            trace,
             sink: None,
             snap_sink: None,
             expired: Vec::new(),
             stats,
         }
+    }
+
+    /// The flight recorder this engine records into, when tracing is
+    /// enabled (see [`EngineConfig::trace_buffer`]). Cheap to clone;
+    /// safe to drain from another thread while the engine runs.
+    pub fn recorder(&self) -> Option<Arc<FlightRecorder>> {
+        self.trace.clone()
     }
 
     /// Install the per-token hook ([`TokenSink`]) feeding streaming
@@ -423,6 +510,9 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             let carry = snap.restore_prefill_carry(spec)?;
             let mut timing = Timing::now();
             timing.admitted = Some(timing.submitted);
+            if let Some(t) = &self.trace {
+                t.record(EventKind::Admit, snap.req.id, 0, snap.req.prompt.len() as u64);
+            }
             self.prefilling.push(Prefilling {
                 req: snap.req,
                 timing,
@@ -440,6 +530,9 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
         // A resumed session already streamed its first token before the
         // crash — its next emission is a TPOT observation, not a TTFT.
         let last_emit = (!snap.generated.is_empty()).then(std::time::Instant::now);
+        if let Some(t) = &self.trace {
+            t.record(EventKind::Admit, snap.req.id, 0, snap.req.prompt.len() as u64);
+        }
         self.active.push(Active {
             req: snap.req,
             timing,
@@ -471,6 +564,9 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             return false;
         }
         let timing = Timing::now();
+        if let Some(t) = &self.trace {
+            t.record(EventKind::Submit, req.id, req.prompt.len() as u64, req.max_new as u64);
+        }
         match req.class {
             RequestClass::Interactive => self.queue_interactive.push_back((req, timing)),
             RequestClass::Batch => self.queue_batch.push_back((req, timing)),
@@ -545,6 +641,7 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
         }
         self.stats.queue_depth.set(self.queued() as u64);
         self.stats.active.set((self.active.len() + self.prefilling.len()) as u64);
+        self.sample_cache_telemetry();
         Ok(progressed)
     }
 
@@ -555,11 +652,15 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
         let now = std::time::Instant::now();
         let stats = &self.stats;
         let expired = &mut self.expired;
+        let trace = self.trace.as_deref();
         let mut drop_over = |req: &Request, timing: &Timing| {
             let over = req.deadline.is_some_and(|d| now.duration_since(timing.submitted) > d);
             if over {
                 stats.deadline_exceeded.inc();
                 expired.push(req.id);
+                if let Some(t) = trace {
+                    t.record(EventKind::Expired, req.id, 0, 0);
+                }
             }
             !over
         };
@@ -592,6 +693,9 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
                 &seq.caches,
             ));
             self.stats.snapshots.inc();
+            if let Some(t) = &self.trace {
+                t.record(EventKind::Snapshot, seq.req.id, tick_no, seq.generated.len() as u64);
+            }
         }
         // Mid-prefill sessions snapshot too: the carry prefix is enough
         // to resume the remaining chunks bit-identically on another
@@ -599,6 +703,40 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
         for seq in &self.prefilling {
             sink(SessionSnapshot::capture_prefill(&seq.req, seq.done, &seq.caches, &seq.carry));
             self.stats.snapshots.inc();
+            if let Some(t) = &self.trace {
+                t.record(EventKind::Snapshot, seq.req.id, tick_no, seq.done as u64);
+            }
+        }
+    }
+
+    /// Refresh the cache-introspection gauges from the resident
+    /// sequences' policy telemetry (see
+    /// [`crate::kvcache::CachePolicy::telemetry`]) and, when tracing,
+    /// record a sampled `CacheTelemetry` trace event. Telemetry is
+    /// counter/field sums — no packing — so this runs every tick
+    /// whether or not tracing is enabled.
+    fn sample_cache_telemetry(&self) {
+        let mut tel = CacheTelemetry::default();
+        for seq in &self.active {
+            tel.merge(&seq.caches.telemetry());
+        }
+        for seq in &self.prefilling {
+            tel.merge(&seq.caches.telemetry());
+        }
+        self.stats.cache_bytes.set(tel.bytes);
+        self.stats.cache_clusters.set(tel.clusters);
+        self.stats.cache_reservoir.set(tel.reservoir);
+        self.stats.cache_admitted_rows.set(tel.admitted);
+        self.stats.cache_evicted_rows.set(tel.evicted);
+        if let Some(t) = &self.trace {
+            if t.tick_sampled(self.ticks) && tel.admitted > 0 {
+                t.record(
+                    EventKind::CacheTelemetry,
+                    0,
+                    tel.bytes,
+                    (tel.clusters << 32) | (tel.reservoir & 0xFFFF_FFFF),
+                );
+            }
         }
     }
 
@@ -609,9 +747,20 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
     /// keeps `seq.flat` in sync each tick via `reassemble`, so probing
     /// the flat buffers evaluates exactly the policies' current packed
     /// estimators without re-packing `L · H` buffers per sequence.
+    /// Each sweep additionally measures the policy estimator's error:
+    /// a second `attention_flat_into` pass with unit weights recovers
+    /// plain softmax attention over the same retained rows, and the
+    /// relative L2 distance between the two outputs is recorded per
+    /// (layer, head) into `EngineStats::probe_error` and (when tracing)
+    /// as `ProbeError` trace events — SubGen's error-vs-budget behavior
+    /// made observable live. ~0 for the exact policy, whose weights are
+    /// already all 1.0.
     fn host_probe(&mut self) -> Result<()> {
         let t0 = std::time::Instant::now();
         let mut out = std::mem::take(&mut self.probe_out);
+        let mut reference = std::mem::take(&mut self.probe_ref);
+        let mut unit = std::mem::take(&mut self.probe_unit);
+        let n_heads = self.exec.spec().n_heads.max(1);
         let mut probed = false;
         let mut nonfinite = 0u64;
         for seq in &self.active {
@@ -637,6 +786,42 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
                     &mut self.probe_zacc,
                     &mut out[i * dh..(i + 1) * dh],
                 );
+                let rows = ww.len();
+                if unit.len() < rows {
+                    unit.resize(rows, 1.0);
+                }
+                reference.resize(dh, 0.0);
+                attention_flat_into(
+                    kk,
+                    vv,
+                    &unit[..rows],
+                    &unit[..rows],
+                    dh,
+                    &seq.last_q[i * dh..(i + 1) * dh],
+                    1,
+                    None,
+                    &mut self.probe_scores,
+                    &mut self.probe_zacc,
+                    &mut reference,
+                );
+                let (mut d2, mut r2) = (0.0f64, 0.0f64);
+                for (a, b) in out[i * dh..(i + 1) * dh].iter().zip(&reference) {
+                    let diff = (*a - *b) as f64;
+                    d2 += diff * diff;
+                    r2 += (*b as f64) * (*b as f64);
+                }
+                let err = if r2 > 0.0 { (d2 / r2).sqrt() } else { d2.sqrt() };
+                self.stats.probe_error.record(Duration::from_nanos((err * 1e9) as u64));
+                if let Some(t) = &self.trace {
+                    let layer = (i / n_heads) as u64;
+                    let head = (i % n_heads) as u64;
+                    t.record(
+                        EventKind::ProbeError,
+                        seq.req.id,
+                        (layer << 32) | head,
+                        err.to_bits(),
+                    );
+                }
             }
             probed = true;
             if !out.iter().all(|x| x.is_finite()) {
@@ -644,6 +829,8 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             }
         }
         self.probe_out = out;
+        self.probe_ref = reference;
+        self.probe_unit = unit;
         if probed {
             self.stats.probes.inc();
             self.stats.probe_nonfinite.add(nonfinite);
@@ -679,6 +866,14 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
                 break;
             };
             timing.admitted = Some(std::time::Instant::now());
+            if let Some(t) = &self.trace {
+                let waited = timing
+                    .admitted
+                    .unwrap()
+                    .duration_since(timing.submitted)
+                    .as_micros() as u64;
+                t.record(EventKind::Admit, req.id, waited, req.prompt.len() as u64);
+            }
             let spec = self.exec.spec();
             let mut caches =
                 SequenceCaches::new(spec, &req.policy, req.budget, req.delta, req.id ^ 0x5EED)?;
@@ -744,6 +939,16 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
         }
         if self.tpot_debt > Duration::ZERO && !self.active.is_empty() {
             self.stats.prefill_preempted.add(self.prefilling.len() as u64);
+            if let Some(t) = &self.trace {
+                for p in &self.prefilling {
+                    t.record(
+                        EventKind::Preempt,
+                        p.req.id,
+                        p.done as u64,
+                        p.req.prompt.len() as u64,
+                    );
+                }
+            }
             return Ok(0);
         }
         // A mid-prefill session resumed onto an engine configured for
@@ -765,6 +970,7 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
                 continue;
             }
             let start = p.done;
+            let c0 = std::time::Instant::now();
             let pre = self.exec.prefill_chunk(
                 &mut p.carry,
                 &p.req.prompt[start..start + take],
@@ -781,6 +987,14 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             }
             self.stats.prefill_chunks.inc();
             self.stats.prefill_chunk_tokens.add(take as u64);
+            if let Some(t) = &self.trace {
+                t.record(
+                    EventKind::PrefillChunk,
+                    p.req.id,
+                    c0.elapsed().as_nanos() as u64,
+                    take as u64,
+                );
+            }
             advanced += 1;
             p.done += take;
             budget -= take;
@@ -817,6 +1031,13 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
         if active.is_empty() {
             return Ok(0);
         }
+        // Per-tick trace spans are sampled; lifecycle events (`Done`)
+        // are not. Nothing below allocates when tracing is on — the
+        // recorder writes fixed-size atomic slots.
+        let trace_tick =
+            self.trace.as_ref().is_some_and(|t| t.tick_sampled(self.ticks));
+        let dt0 = trace_tick.then(std::time::Instant::now);
+        let batch = active.len() as u64;
         // Emit every sequence's pending token first, in admission order
         // — the streamed token order is identical whether the tick then
         // decodes batched or sequence-at-a-time.
@@ -841,6 +1062,7 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             }
             outs
         };
+        let decode_ns = dt0.map(|t| t.elapsed().as_nanos() as u64).unwrap_or(0);
         let mut progressed = 0;
         let mut still_active = Vec::with_capacity(active.len());
         for (mut seq, step) in active.into_iter().zip(steps) {
@@ -850,6 +1072,11 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             seq.pos += 1;
             progressed += 1;
             self.stats.tokens.inc();
+            if trace_tick {
+                if let Some(t) = &self.trace {
+                    t.record(EventKind::DecodeTick, seq.req.id, decode_ns, batch);
+                }
+            }
 
             if seq.generated.len() >= seq.req.max_new {
                 let now = std::time::Instant::now();
@@ -858,6 +1085,14 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
                     seq.timing.admitted.map(|a| a - seq.timing.submitted).unwrap_or_default();
                 self.stats.latency.record(latency);
                 self.stats.completed.inc();
+                if let Some(t) = &self.trace {
+                    t.record(
+                        EventKind::Done,
+                        seq.req.id,
+                        latency.as_micros() as u64,
+                        seq.generated.len() as u64,
+                    );
+                }
                 self.done.push(Response {
                     id: seq.req.id,
                     tokens: seq.generated,
@@ -1608,5 +1843,143 @@ mod tests {
         c.resume(snap).unwrap();
         c.run_to_completion().unwrap();
         assert_eq!(c.take_responses().pop().unwrap().tokens, want);
+    }
+
+    #[test]
+    fn tracing_records_full_request_lifecycle() {
+        use crate::trace::{request_summaries, EventKind};
+        let exec = crate::model::HostExecutor::small(29);
+        let mut e = Engine::new(
+            &exec,
+            EngineConfig {
+                prefill_chunk: 3,
+                snapshot_every: 1,
+                trace_buffer: 1024,
+                ..Default::default()
+            },
+        );
+        e.submit(Request::exact(7, vec![1, 2, 3, 4, 5, 6, 7], 4));
+        e.run_to_completion().unwrap();
+        assert_eq!(e.take_responses().len(), 1);
+        let rec = e.recorder().expect("trace_buffer > 0 builds a recorder");
+        let events = rec.events();
+        let has = |k: EventKind| events.iter().any(|ev| ev.kind == k && ev.session == 7);
+        assert!(has(EventKind::Submit), "missing submit span");
+        assert!(has(EventKind::Admit), "missing admit span");
+        assert!(has(EventKind::PrefillChunk), "missing prefill-chunk span");
+        assert!(has(EventKind::DecodeTick), "missing decode-tick span");
+        assert!(has(EventKind::Snapshot), "missing snapshot span");
+        assert!(has(EventKind::Done), "missing done span");
+        let sums = request_summaries(&events);
+        assert_eq!(sums.len(), 1);
+        assert_eq!(sums[0].session, 7);
+        assert_eq!(sums[0].prefill_chunks, 3); // 7 tokens at 3/tick
+        assert_eq!(sums[0].ticks, 4);
+        assert_eq!(sums[0].outcome, "done");
+    }
+
+    #[test]
+    fn tracing_does_not_change_token_stream() {
+        // The tentpole invariant: recording is side-effect-only. Traced
+        // and untraced engines produce byte-identical responses under
+        // batched decode and chunked prefill.
+        let exec = crate::model::HostExecutor::small(31);
+        let run = |trace_buffer: usize| {
+            let mut e = Engine::new(
+                &exec,
+                EngineConfig {
+                    max_active: 3,
+                    prefills_per_tick: 3,
+                    prefill_chunk: 2,
+                    trace_buffer,
+                    ..Default::default()
+                },
+            );
+            for id in 0..3 {
+                e.submit(Request {
+                    id,
+                    session_id: None,
+                    prompt: vec![1 + id as i32, 2, 3, 4, 5],
+                    max_new: 4,
+                    policy: "subgen".into(),
+                    budget: 16,
+                    delta: 0.5,
+                    deadline: None,
+                    class: RequestClass::Interactive,
+                });
+            }
+            e.run_to_completion().unwrap();
+            let mut rs = e.take_responses();
+            rs.sort_by_key(|r| r.id);
+            rs.into_iter().map(|r| (r.id, r.tokens, r.cache_bytes)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(4096), run(0));
+    }
+
+    #[test]
+    fn trace_sampling_thins_tick_spans_but_keeps_lifecycle() {
+        use crate::trace::EventKind;
+        let exec = MockExecutor::small();
+        let mut e = engine(
+            EngineConfig { trace_buffer: 1024, trace_sample: 4, ..Default::default() },
+            &exec,
+        );
+        e.submit(Request::exact(1, vec![3, 4], 8));
+        e.run_to_completion().unwrap();
+        let events = e.recorder().unwrap().events();
+        let ticks =
+            events.iter().filter(|ev| ev.kind == EventKind::DecodeTick).count();
+        assert!(ticks < 8, "sampling must thin decode-tick spans, got {ticks}");
+        assert!(events.iter().any(|ev| ev.kind == EventKind::Submit));
+        assert!(events.iter().any(|ev| ev.kind == EventKind::Done));
+    }
+
+    #[test]
+    fn cache_telemetry_gauges_track_resident_sequences() {
+        let exec = crate::model::HostExecutor::small(37);
+        let mut e = Engine::new(&exec, EngineConfig::default());
+        e.submit(Request {
+            id: 0,
+            session_id: None,
+            prompt: vec![1, 2, 3, 4, 5, 6, 7, 8],
+            max_new: 16,
+            policy: "subgen".into(),
+            budget: 16,
+            delta: 0.5,
+            deadline: None,
+            class: RequestClass::Interactive,
+        });
+        for _ in 0..4 {
+            e.tick().unwrap();
+        }
+        assert!(e.stats.cache_bytes.get() > 0, "resident sequence must report bytes");
+        assert!(e.stats.cache_admitted_rows.get() >= 8, "prompt rows must be admitted");
+        e.run_to_completion().unwrap();
+        assert_eq!(e.take_responses().len(), 1);
+        // All sequences retired → the per-tick sample returns to zero.
+        assert_eq!(e.stats.cache_bytes.get(), 0);
+    }
+
+    #[test]
+    fn probe_error_is_zero_for_exact_policy() {
+        use crate::trace::EventKind;
+        let exec = crate::model::HostExecutor::small(41);
+        let mut e = Engine::new(
+            &exec,
+            EngineConfig { host_probe_every: 1, trace_buffer: 1024, ..Default::default() },
+        );
+        e.submit(Request::exact(3, vec![1, 2, 3, 4], 4));
+        e.run_to_completion().unwrap();
+        assert!(e.stats.probe_error.count() > 0, "probe must record error samples");
+        let events = e.recorder().unwrap().events();
+        let errs: Vec<f64> = events
+            .iter()
+            .filter(|ev| ev.kind == EventKind::ProbeError)
+            .map(|ev| f64::from_bits(ev.b))
+            .collect();
+        assert!(!errs.is_empty());
+        // Exact policy weights are already all 1.0, so the reference
+        // pass is bit-identical and the measured error is exactly 0.
+        assert!(errs.iter().all(|&x| x == 0.0), "exact policy must measure 0 error: {errs:?}");
     }
 }

@@ -120,4 +120,18 @@ mod tests {
         }
         assert_eq!(c.memory_bytes(4), 2 * m10);
     }
+
+    #[test]
+    fn telemetry_reports_full_retention() {
+        let mut c = ExactCache::new(4);
+        for _ in 0..10 {
+            c.update(&[0.0; 4], &[1.0; 4], &[1.0; 4]);
+        }
+        let t = c.telemetry(4);
+        assert_eq!(t.admitted, 10);
+        assert_eq!(t.slots, 10);
+        assert_eq!(t.evicted, 0);
+        assert_eq!(t.clusters, 0);
+        assert_eq!(t.bytes as usize, c.memory_bytes(4));
+    }
 }

@@ -8,7 +8,7 @@
 //! score is evicted. A separate recent window is always retained, as in
 //! the original system.
 
-use super::{CachePolicy, PackedCache, SlidingCache};
+use super::{bytes_per_slot, CachePolicy, CacheTelemetry, PackedCache, SlidingCache};
 use crate::io::Checkpoint;
 use crate::tensor::dot;
 
@@ -123,6 +123,19 @@ impl CachePolicy for H2OCache {
 
     fn packed_slots(&self) -> usize {
         self.entries.len() + self.recent.retained()
+    }
+
+    fn telemetry(&self, dim: usize) -> CacheTelemetry {
+        let slots = self.packed_slots() as u64;
+        CacheTelemetry {
+            slots,
+            bytes: slots * bytes_per_slot(dim) as u64,
+            admitted: self.n,
+            evicted: self.n.saturating_sub(slots),
+            clusters: 0,
+            // The scored heavy-hitter set plays the reservoir role.
+            reservoir: self.entries.len() as u64,
+        }
     }
 
     fn save_state(&self, ck: &mut Checkpoint, prefix: &str) {

@@ -42,6 +42,43 @@ pub fn bytes_per_slot(dim: usize) -> usize {
     (2 * dim + 2) * std::mem::size_of::<f32>()
 }
 
+/// Cheap introspection counters for one policy instance (see
+/// [`CachePolicy::telemetry`]). All fields are plain sums, so telemetry
+/// from many heads/layers/sequences merges by addition — the engine
+/// samples the merged struct once per tick into the trace and the
+/// `subgen_cache_*` Prometheus families.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheTelemetry {
+    /// Packed slots currently retained (upper bound, no packing).
+    pub slots: u64,
+    /// Retained bytes (`slots × bytes_per_slot`).
+    pub bytes: u64,
+    /// Stream rows ever admitted (`len()`).
+    pub admitted: u64,
+    /// Rows no longer retained verbatim — evicted outright or folded
+    /// into cluster summaries / sample reservoirs.
+    pub evicted: u64,
+    /// Online clusters currently tracked (0 for non-clustering
+    /// policies).
+    pub clusters: u64,
+    /// Sampling-reservoir occupancy — ℓ2 value samples for subgen,
+    /// heavy hitters for h2o (0 for policies without a reservoir).
+    pub reservoir: u64,
+}
+
+impl CacheTelemetry {
+    /// Accumulate another instance's counters (heads, layers and
+    /// sequences all merge by plain addition).
+    pub fn merge(&mut self, other: &CacheTelemetry) {
+        self.slots += other.slots;
+        self.bytes += other.bytes;
+        self.admitted += other.admitted;
+        self.evicted += other.evicted;
+        self.clusters += other.clusters;
+        self.reservoir += other.reservoir;
+    }
+}
+
 /// A streaming per-head KV-cache compression policy.
 pub trait CachePolicy: Send {
     /// Human-readable policy name (used in experiment tables).
@@ -82,6 +119,26 @@ pub trait CachePolicy: Send {
     /// Upper bound on slots `pack` may produce right now (capacity hint
     /// for buffer allocation).
     fn packed_slots(&self) -> usize;
+
+    /// Cheap introspection counters: retained slots/bytes, rows
+    /// admitted/evicted, cluster count and reservoir occupancy. Unlike
+    /// [`Self::memory_bytes`] this must never pack — it is sampled on
+    /// every engine tick, so implementations read existing fields only.
+    /// The default derives everything from `packed_slots()`/`len()`;
+    /// policies with clustering or sampling state override it to fill
+    /// `clusters`/`reservoir`.
+    fn telemetry(&self, dim: usize) -> CacheTelemetry {
+        let slots = self.packed_slots() as u64;
+        let admitted = self.len();
+        CacheTelemetry {
+            slots,
+            bytes: slots * bytes_per_slot(dim) as u64,
+            admitted,
+            evicted: admitted.saturating_sub(slots),
+            clusters: 0,
+            reservoir: 0,
+        }
+    }
 
     /// Retained cache size in bytes (packed representation).
     fn memory_bytes(&self, dim: usize) -> usize {
@@ -289,6 +346,37 @@ mod tests {
             assert_eq!(live.packed_slots(), restored.packed_slots(), "{name}");
             assert_eq!(live.memory_bytes(dim), restored.memory_bytes(dim), "{name}");
         }
+    }
+
+    /// Telemetry must be derivable from existing fields for every
+    /// policy (no packing) and merge additively across instances — the
+    /// contract the engine's per-tick sampler relies on.
+    #[test]
+    fn telemetry_consistent_and_merges_additively() {
+        let dim = 8;
+        let mut rng = Pcg64::seed_from_u64(3);
+        let mut merged = CacheTelemetry::default();
+        for name in POLICY_NAMES {
+            let mut p = build_policy(name, dim, 32, 0.5, 3).unwrap();
+            for _ in 0..200 {
+                let q: Vec<f32> = (0..dim).map(|_| rng.gaussian32(0.0, 0.5)).collect();
+                let k: Vec<f32> = (0..dim).map(|_| rng.gaussian32(0.0, 0.5)).collect();
+                let v: Vec<f32> = (0..dim).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+                p.update(&q, &k, &v);
+            }
+            let t = p.telemetry(dim);
+            assert_eq!(t.admitted, 200, "{name}");
+            assert_eq!(t.slots as usize, p.packed_slots(), "{name}");
+            assert_eq!(t.bytes, t.slots * bytes_per_slot(dim) as u64, "{name}");
+            assert_eq!(t.admitted, t.evicted + t.slots, "{name}");
+            if name == "subgen" {
+                assert!(t.clusters > 0, "subgen must report clusters");
+                assert!(t.reservoir > 0, "subgen must report reservoir occupancy");
+            }
+            merged.merge(&t);
+        }
+        assert_eq!(merged.admitted, 5 * 200);
+        assert!(merged.bytes > 0 && merged.slots > 0);
     }
 
     #[test]

@@ -152,4 +152,17 @@ mod tests {
         }
         assert!(c.memory_bytes(dim) <= 12 * super::super::bytes_per_slot(dim));
     }
+
+    #[test]
+    fn telemetry_matches_packed_slots() {
+        let dim = 4;
+        let mut c = SinkCache::new(dim, 4, 8);
+        for i in 0..1000 {
+            c.update(&[0.0; 4], &[i as f32; 4], &[1.0; 4]);
+        }
+        let t = c.telemetry(dim);
+        assert_eq!(t.admitted, 1000);
+        assert_eq!(t.slots as usize, c.packed_slots());
+        assert_eq!(t.evicted, 1000 - t.slots);
+    }
 }

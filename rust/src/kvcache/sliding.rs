@@ -164,4 +164,19 @@ mod tests {
         }
         assert_eq!(c.memory_bytes(dim), 8 * super::super::bytes_per_slot(dim));
     }
+
+    #[test]
+    fn telemetry_counts_evictions() {
+        let dim = 4;
+        let mut c = SlidingCache::new(dim, 8);
+        for i in 0..100 {
+            let (k, v) = kv(i, dim);
+            c.update(&[0.0; 4], &k, &v);
+        }
+        let t = c.telemetry(dim);
+        assert_eq!(t.admitted, 100);
+        assert_eq!(t.slots, 8);
+        assert_eq!(t.evicted, 92);
+        assert_eq!(t.bytes as usize, c.memory_bytes(dim));
+    }
 }

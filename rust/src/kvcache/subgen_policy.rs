@@ -10,7 +10,7 @@
 //! * ℓ2 samples:      w = μ/(s·‖v‖²),  u = 0
 //! * cluster samples: w = 0,           u = n_i/t
 
-use super::{CachePolicy, PackedCache, SlidingCache};
+use super::{bytes_per_slot, CachePolicy, CacheTelemetry, PackedCache, SlidingCache};
 use crate::io::Checkpoint;
 use crate::subgen::{SubGenAttention, SubGenConfig};
 use std::cell::RefCell;
@@ -166,6 +166,20 @@ impl CachePolicy for SubGenCache {
         let mp = self.sketch.matrix_product().num_slots();
         let nz = self.sketch.normalizer();
         window + mp + nz.num_clusters() * nz.t()
+    }
+
+    fn telemetry(&self, dim: usize) -> CacheTelemetry {
+        let slots = self.packed_slots() as u64;
+        CacheTelemetry {
+            slots,
+            bytes: slots * bytes_per_slot(dim) as u64,
+            admitted: self.n,
+            // Graduated tokens live on only as cluster/reservoir
+            // summaries — everything beyond the retained slots.
+            evicted: self.n.saturating_sub(slots),
+            clusters: self.sketch.num_clusters() as u64,
+            reservoir: self.sketch.matrix_product().num_slots() as u64,
+        }
     }
 
     fn attention_batch(&self, qs: &[f32], nq: usize) -> Vec<f32> {

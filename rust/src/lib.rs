@@ -14,7 +14,8 @@
 //!   policies as a first-class feature, running AOT-compiled JAX/Pallas
 //!   artifacts via PJRT;
 //! * **experiments** — [`workload`], [`train`], [`tsne`], [`bench`],
-//!   [`metrics`]: everything needed to regenerate the paper's Table 1
+//!   [`metrics`], [`trace`]: everything needed to regenerate the
+//!   paper's Table 1
 //!   and Figure 1 plus the Theorem-1 scaling studies, including pure-
 //!   rust training of the host transformer on the retrieval task;
 //! * **substrates** — [`rng`], [`tensor`], [`linalg`], [`cli`],
@@ -40,6 +41,7 @@ pub mod sampling;
 pub mod server;
 pub mod subgen;
 pub mod tensor;
+pub mod trace;
 pub mod train;
 pub mod tsne;
 pub mod workload;

@@ -10,6 +10,11 @@
 //!   serve     — sharded multi-worker serving run (`--workers N`,
 //!               `--stream` for per-token delivery, `--metrics-port`
 //!               for a live Prometheus endpoint)
+//!   trace     — one traced engine run exercising every request phase
+//!               (queue, chunked prefill, decode, snapshot, host
+//!               probe), written as Chrome trace-event JSON
+//!               (chrome://tracing / Perfetto) plus per-request
+//!               summary lines
 //!
 //! `--executor host` (the default) runs everything on the pure-rust
 //! [`subgen::model::HostExecutor`] — no PJRT artifacts needed;
@@ -28,6 +33,7 @@ use subgen::model::{Generator, ModelSpec};
 use subgen::rng::Pcg64;
 use subgen::runtime::Runtime;
 use subgen::server::{drain_stream, MetricsServer, Router, SubmitError};
+use subgen::trace::{chrome_trace, request_summaries};
 use subgen::train::{accuracy_json, evaluate_policies, EvalConfig, TrainConfig, Trainer};
 use subgen::workload::{decode, lines_for_seq_len_clamped, RetrievalSampler};
 
@@ -67,6 +73,8 @@ fn main() -> Result<()> {
         .describe("prefill-chunk", Some("0"), "prefill token budget per tick, 0 = monolithic \
                    prefill (serve)")
         .describe("priority", Some("interactive"), "request class: interactive|batch (serve)")
+        .describe("trace-out", Some("subgen_trace.json"),
+                  "Chrome trace-event JSON output path (trace)")
         .describe("seed", Some("0"), "rng seed");
     args.exit_on_help();
 
@@ -76,6 +84,7 @@ fn main() -> Result<()> {
         "train" => train(&args),
         "eval" => eval(&args),
         "serve" => serve_cluster(&args),
+        "trace" => trace_run(&args),
         other => {
             eprintln!("unknown subcommand {other:?}\n{}", args.usage());
             std::process::exit(2);
@@ -439,4 +448,83 @@ fn serve_cluster(args: &Args) -> Result<()> {
         lat.p99
     );
     Ok(())
+}
+
+/// One traced single-engine run sized so every request phase fires at
+/// least once — queueing (more requests than `max_active`), chunked
+/// prefill, batched decode, snapshot cadence, host probe, cache
+/// telemetry — then writes the flight recorder as Chrome trace-event
+/// JSON (load it in chrome://tracing or Perfetto) and prints one
+/// human-readable summary line per request plus a per-phase event
+/// census. CI parses both.
+fn trace_run(args: &Args) -> Result<()> {
+    let requests = args.usize_or("requests", 4).max(1);
+    let max_new = args.usize_or("new", 8).max(1);
+    let n = args.usize_or("n", 384);
+    let policy = args.get_or("policy", "subgen");
+    let budget = args.usize_or("budget", 128);
+    let delta = args.f32_or("delta", 4.0);
+    let seed = args.u64_or("seed", 0);
+    let out = PathBuf::from(args.get_or("trace-out", "subgen_trace.json"));
+
+    with_executor(args, |exec| {
+        // max_active below the request count forces Queued→Admitted
+        // transitions; a small prefill chunk forces multiple
+        // PrefillChunk spans per prompt; snapshot/probe cadences of a
+        // few ticks guarantee at least one Snapshot, ProbeError, and
+        // CacheTelemetry event within an 8-token decode.
+        let cfg = EngineConfig::builder()
+            .max_active(2)
+            .prefill_chunk(64)
+            .snapshot_every(2)
+            .host_probe_every(2)
+            .trace_buffer(1 << 16)
+            .build();
+        let mut engine = Engine::new(&exec, cfg);
+        let recorder = engine.recorder().expect("trace_buffer > 0 enables the recorder");
+        // Snapshots publish only through a sink; a discarding sink is
+        // enough to exercise the snapshot phase in the trace.
+        engine.set_snapshot_sink(Box::new(|_| {}));
+
+        // Ids start at 1: session 0 is the worker-scoped lane in the
+        // trace schema and would be dropped from request summaries.
+        let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed));
+        for id in 1..=requests {
+            let inst = sampler.sample(lines_for_seq_len_clamped(n));
+            let (prompt, _answer) = inst.tokens();
+            engine.submit(Request {
+                id: id as u64,
+                session_id: None,
+                prompt,
+                max_new,
+                policy: policy.clone(),
+                budget,
+                delta,
+                deadline: None,
+                class: RequestClass::Interactive,
+            });
+        }
+        engine.run_to_completion()?;
+        let completed = engine.take_responses().len();
+
+        let events = recorder.events();
+        for line in request_summaries(&events) {
+            println!("{line}");
+        }
+        let mut census = std::collections::BTreeMap::new();
+        for ev in &events {
+            *census.entry(ev.kind.name()).or_insert(0u64) += 1;
+        }
+        for (phase, count) in &census {
+            println!("trace phase={phase} events={count}");
+        }
+        std::fs::write(&out, chrome_trace(&[("worker0".to_string(), events.clone())]))?;
+        println!(
+            "trace written path={} requests={completed} events={} dropped={}",
+            out.display(),
+            events.len(),
+            recorder.dropped()
+        );
+        Ok(())
+    })
 }

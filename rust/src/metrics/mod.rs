@@ -332,6 +332,25 @@ mod tests {
     }
 
     #[test]
+    fn empty_histogram_every_percentile_is_zero() {
+        // Every exported quantile — including the extremes and
+        // out-of-range inputs, which `quantile` clamps — must be ZERO
+        // on an empty histogram, never a bucket midpoint or max_ns
+        // garbage. The Prometheus exporter renders these unguarded.
+        let h = Histogram::new();
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0, -1.0, 2.0] {
+            assert_eq!(h.quantile(q), Duration::ZERO, "q={q}");
+        }
+        assert_eq!(h.p50(), Duration::ZERO);
+        assert_eq!(h.p95(), Duration::ZERO);
+        assert_eq!(h.p99(), Duration::ZERO);
+        assert_eq!(h.max(), Duration::ZERO);
+        assert_eq!(h.sum(), Duration::ZERO);
+        let s = h.snapshot();
+        assert_eq!((s.count, s.p50, s.p95, s.p99), (0, Duration::ZERO, Duration::ZERO, Duration::ZERO));
+    }
+
+    #[test]
     fn histogram_mean_exact() {
         let h = Histogram::new();
         h.record(Duration::from_micros(10));
@@ -399,6 +418,33 @@ mod tests {
         assert_eq!(a.count(), 1);
         assert_eq!(a.min(), Duration::from_micros(5));
         assert_eq!(a.max(), Duration::from_micros(5));
+    }
+
+    #[test]
+    fn merge_then_snapshot_equals_union_snapshot() {
+        // Snapshotting after a merge must agree field-for-field with a
+        // snapshot of the union stream — the cluster exporter relies on
+        // this when it folds per-worker histograms into one family.
+        let a = Histogram::new();
+        let b = Histogram::new();
+        let union = Histogram::new();
+        for us in (1..=900u64).step_by(7) {
+            a.record(Duration::from_micros(us));
+            union.record(Duration::from_micros(us));
+        }
+        for us in (3..=1500u64).step_by(11) {
+            b.record(Duration::from_micros(us));
+            union.record(Duration::from_micros(us));
+        }
+        a.merge_from(&b);
+        let (m, u) = (a.snapshot(), union.snapshot());
+        assert_eq!(m.count, u.count);
+        assert_eq!(m.sum, u.sum);
+        assert_eq!(m.mean, u.mean);
+        assert_eq!(m.p50, u.p50);
+        assert_eq!(m.p95, u.p95);
+        assert_eq!(m.p99, u.p99);
+        assert_eq!(m.max, u.max);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! expect.
 
 use crate::io::Checkpoint;
-use crate::kvcache::{build_policy, CachePolicy, PackedCache, POLICY_NAMES};
+use crate::kvcache::{build_policy, CachePolicy, CacheTelemetry, PackedCache, POLICY_NAMES};
 use crate::model::{ModelSpec, PrefillOutput};
 use anyhow::Result;
 
@@ -281,6 +281,17 @@ impl SequenceCaches {
     /// Total retained bytes over all layers/heads (Table-1 cache size).
     pub fn memory_bytes(&self) -> usize {
         self.policies.iter().map(|p| p.memory_bytes(self.d_head)).sum()
+    }
+
+    /// Merged introspection counters over all `L × H` policies (plain
+    /// field sums, never packs — cheap enough to sample every engine
+    /// tick; see [`CachePolicy::telemetry`]).
+    pub fn telemetry(&self) -> CacheTelemetry {
+        let mut tel = CacheTelemetry::default();
+        for p in &self.policies {
+            tel.merge(&p.telemetry(self.d_head));
+        }
+        tel
     }
 
     /// Assemble flat [L, H, C, dh] buffers at capacity `c`. History must

@@ -48,9 +48,11 @@ use super::{
 use crate::coordinator::{EngineConfig, EngineStats, FaultPlan, Request, Response, StepExecutor};
 use crate::metrics::HistogramSnapshot;
 use crate::rng::SplitMix64;
+use crate::trace::{chrome_trace, EventKind, FlightRecorder};
 use anyhow::Result;
 use std::collections::HashMap;
 use std::panic::AssertUnwindSafe;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver};
 use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
@@ -168,6 +170,13 @@ pub struct RouterConfig {
     /// always run a benign plan, so an injected crash fires once
     /// instead of crash-looping.
     pub fault_plans: Vec<(usize, FaultPlan)>,
+    /// Crash forensics: when set (and tracing is enabled via
+    /// [`EngineConfig::trace_buffer`]), the supervisor writes the dead
+    /// or hung incarnation's flight-recorder ring to
+    /// `<dir>/flight_recorder_worker<w>_epoch<e>.json` (Chrome
+    /// trace-event JSON) before swapping in the replacement. Paths are
+    /// listed by [`ClusterMetrics::trace_dumps`].
+    pub trace_dump_dir: Option<PathBuf>,
 }
 
 impl Default for RouterConfig {
@@ -180,6 +189,7 @@ impl Default for RouterConfig {
             retry_base: Duration::from_millis(5),
             shed_watermark: None,
             fault_plans: Vec::new(),
+            trace_dump_dir: None,
         }
     }
 }
@@ -242,6 +252,12 @@ impl RouterConfigBuilder {
         self
     }
 
+    /// See [`RouterConfig::trace_dump_dir`].
+    pub fn trace_dump_dir(mut self, v: Option<PathBuf>) -> Self {
+        self.cfg.trace_dump_dir = v;
+        self
+    }
+
     /// Finish building.
     pub fn build(self) -> RouterConfig {
         self.cfg
@@ -255,6 +271,11 @@ struct WorkerMetrics {
     dispatched: AtomicU64,
     /// Times the supervisor replaced this worker after a death/hang.
     restarts: AtomicU64,
+    /// This slot's flight recorder (when tracing is on). Owned by the
+    /// *slot*, not the incarnation: a respawned worker records into the
+    /// same ring, so the supervisor can dump the dead incarnation's
+    /// final events and exporters see one continuous track.
+    recorder: Option<Arc<FlightRecorder>>,
 }
 
 /// Live, lock-free view of every worker's counters. `Send + Sync`:
@@ -267,6 +288,9 @@ pub struct ClusterMetrics {
     shed: AtomicU64,
     /// Sessions re-admitted after a worker death/hang.
     recovered_sessions: AtomicU64,
+    /// `(worker, path)` of every flight-recorder dump the supervisor
+    /// wrote before restarting a dead/hung worker.
+    trace_dumps: Mutex<Vec<(usize, PathBuf)>>,
 }
 
 impl ClusterMetrics {
@@ -311,6 +335,20 @@ impl ClusterMetrics {
         self.recovered_sessions.load(Ordering::Relaxed)
     }
 
+    /// Worker `w`'s flight recorder (`None` when tracing is off). The
+    /// recorder belongs to the slot, not the incarnation, so it
+    /// survives restarts; exporters read it live with
+    /// [`FlightRecorder::events`].
+    pub fn recorder(&self, w: usize) -> Option<Arc<FlightRecorder>> {
+        self.workers[w].recorder.clone()
+    }
+
+    /// Flight-recorder dump files the supervisor has written so far,
+    /// as `(worker index, path)` in write order.
+    pub fn trace_dumps(&self) -> Vec<(usize, PathBuf)> {
+        lock_recover(&self.trace_dumps).clone()
+    }
+
     /// Point-in-time aggregate across all workers: per-worker stats plus
     /// merged counters/histograms and wall-clock tokens/sec. The merge
     /// itself is [`EngineStats::merge_from`] — one implementation for
@@ -341,12 +379,18 @@ impl ClusterMetrics {
                 prefill_chunks: s.prefill_chunks.get(),
                 prefill_chunk_tokens: s.prefill_chunk_tokens.get(),
                 prefill_preempted: s.prefill_preempted.get(),
+                cache_bytes: s.cache_bytes.get(),
+                cache_clusters: s.cache_clusters.get(),
+                cache_reservoir: s.cache_reservoir.get(),
+                cache_admitted_rows: s.cache_admitted_rows.get(),
+                cache_evicted_rows: s.cache_evicted_rows.get(),
                 latency: s.latency.snapshot(),
                 tick_latency: s.tick_latency.snapshot(),
                 ttft_interactive: s.ttft_interactive.snapshot(),
                 ttft_batch: s.ttft_batch.snapshot(),
                 tpot_interactive: s.tpot_interactive.snapshot(),
                 tpot_batch: s.tpot_batch.snapshot(),
+                probe_error: s.probe_error.snapshot(),
             };
             dispatched += stat.dispatched;
             restarts += stat.restarts;
@@ -372,12 +416,18 @@ impl ClusterMetrics {
             prefill_chunks: merged.prefill_chunks.get(),
             prefill_chunk_tokens: merged.prefill_chunk_tokens.get(),
             prefill_preempted: merged.prefill_preempted.get(),
+            cache_bytes: merged.cache_bytes.get(),
+            cache_clusters: merged.cache_clusters.get(),
+            cache_reservoir: merged.cache_reservoir.get(),
+            cache_admitted_rows: merged.cache_admitted_rows.get(),
+            cache_evicted_rows: merged.cache_evicted_rows.get(),
             latency: merged.latency.snapshot(),
             tick_latency: merged.tick_latency.snapshot(),
             ttft_interactive: merged.ttft_interactive.snapshot(),
             ttft_batch: merged.ttft_batch.snapshot(),
             tpot_interactive: merged.tpot_interactive.snapshot(),
             tpot_batch: merged.tpot_batch.snapshot(),
+            probe_error: merged.probe_error.snapshot(),
             tokens_per_sec: merged.tokens.get() as f64 / uptime.as_secs_f64().max(1e-9),
             uptime,
         }
@@ -424,6 +474,19 @@ pub struct WorkerStat {
     pub prefill_chunk_tokens: u64,
     /// In-flight prefills preempted by decode TPOT debt.
     pub prefill_preempted: u64,
+    /// Resident KV-cache bytes across this worker's sequences (gauge,
+    /// sampled every engine tick).
+    pub cache_bytes: u64,
+    /// SubGen cluster count across resident sequences (gauge).
+    pub cache_clusters: u64,
+    /// Reservoir / scored-set occupancy across resident sequences
+    /// (gauge).
+    pub cache_reservoir: u64,
+    /// KV rows admitted by resident sequences' cache policies (gauge).
+    pub cache_admitted_rows: u64,
+    /// KV rows evicted (admitted − retained) by resident sequences
+    /// (gauge).
+    pub cache_evicted_rows: u64,
     /// End-to-end request latency.
     pub latency: HistogramSnapshot,
     /// Per-decode-tick latency.
@@ -436,6 +499,9 @@ pub struct WorkerStat {
     pub tpot_interactive: HistogramSnapshot,
     /// Inter-token latency, batch class.
     pub tpot_batch: HistogramSnapshot,
+    /// Measured cache-estimator error from the host probe (unitless
+    /// relative L2, stored at 1 ns ≡ 1e-9 error).
+    pub probe_error: HistogramSnapshot,
 }
 
 impl WorkerStat {
@@ -493,6 +559,16 @@ pub struct ClusterSnapshot {
     pub prefill_chunk_tokens: u64,
     /// Σ prefills preempted by decode TPOT debt.
     pub prefill_preempted: u64,
+    /// Σ resident KV-cache bytes (gauge).
+    pub cache_bytes: u64,
+    /// Σ SubGen clusters across resident sequences (gauge).
+    pub cache_clusters: u64,
+    /// Σ reservoir occupancy across resident sequences (gauge).
+    pub cache_reservoir: u64,
+    /// Σ KV rows admitted by resident sequences (gauge).
+    pub cache_admitted_rows: u64,
+    /// Σ KV rows evicted by resident sequences (gauge).
+    pub cache_evicted_rows: u64,
     /// Merged end-to-end latency distribution.
     pub latency: HistogramSnapshot,
     /// Merged per-tick latency distribution.
@@ -505,6 +581,9 @@ pub struct ClusterSnapshot {
     pub tpot_interactive: HistogramSnapshot,
     /// Merged inter-token latency distribution, batch class.
     pub tpot_batch: HistogramSnapshot,
+    /// Merged measured cache-estimator error distribution (unitless
+    /// relative L2, stored at 1 ns ≡ 1e-9 error).
+    pub probe_error: HistogramSnapshot,
     /// Generated tokens per wall-clock second since spawn.
     pub tokens_per_sec: f64,
     /// Wall time since the router spawned.
@@ -543,12 +622,18 @@ impl ClusterSnapshot {
             prefill_chunks: stats.prefill_chunks.get(),
             prefill_chunk_tokens: stats.prefill_chunk_tokens.get(),
             prefill_preempted: stats.prefill_preempted.get(),
+            cache_bytes: stats.cache_bytes.get(),
+            cache_clusters: stats.cache_clusters.get(),
+            cache_reservoir: stats.cache_reservoir.get(),
+            cache_admitted_rows: stats.cache_admitted_rows.get(),
+            cache_evicted_rows: stats.cache_evicted_rows.get(),
             latency: stats.latency.snapshot(),
             tick_latency: stats.tick_latency.snapshot(),
             ttft_interactive: stats.ttft_interactive.snapshot(),
             ttft_batch: stats.ttft_batch.snapshot(),
             tpot_interactive: stats.tpot_interactive.snapshot(),
             tpot_batch: stats.tpot_batch.snapshot(),
+            probe_error: stats.probe_error.snapshot(),
         };
         ClusterSnapshot {
             dispatched: stat.dispatched,
@@ -568,12 +653,18 @@ impl ClusterSnapshot {
             prefill_chunks: stat.prefill_chunks,
             prefill_chunk_tokens: stat.prefill_chunk_tokens,
             prefill_preempted: stat.prefill_preempted,
+            cache_bytes: stat.cache_bytes,
+            cache_clusters: stat.cache_clusters,
+            cache_reservoir: stat.cache_reservoir,
+            cache_admitted_rows: stat.cache_admitted_rows,
+            cache_evicted_rows: stat.cache_evicted_rows,
             latency: stat.latency.clone(),
             tick_latency: stat.tick_latency.clone(),
             ttft_interactive: stat.ttft_interactive.clone(),
             ttft_batch: stat.ttft_batch.clone(),
             tpot_interactive: stat.tpot_interactive.clone(),
             tpot_batch: stat.tpot_batch.clone(),
+            probe_error: stat.probe_error.clone(),
             workers: vec![stat],
             tokens_per_sec,
             uptime,
@@ -647,6 +738,7 @@ fn spawn_worker<E, F>(
     w: usize,
     cfg: EngineConfig,
     fault: FaultPlan,
+    trace: Option<Arc<FlightRecorder>>,
     factory: Arc<F>,
     stats: Arc<EngineStats>,
 ) -> Result<(ServerHandle, ServeHooks, WorkerJoin)>
@@ -658,7 +750,7 @@ where
     let hooks = ServeHooks::new();
     let worker_hooks = hooks.clone();
     let join = std::thread::Builder::new().name(format!("subgen-worker-{w}")).spawn(move || {
-        let cfg = EngineConfig { fault, ..cfg };
+        let cfg = EngineConfig { fault, trace, ..cfg };
         match std::panic::catch_unwind(AssertUnwindSafe(|| {
             let exec = (*factory)(w);
             serve_supervised(&exec, cfg, rx, stats, worker_hooks)
@@ -706,10 +798,16 @@ impl Router {
                 .find(|(i, _)| *i == w)
                 .map(|(_, p)| p.clone())
                 .unwrap_or_else(|| cfg.fault.clone());
+            // One recorder per slot, built here (not by the engine) so
+            // it outlives incarnations: the supervisor dumps it after a
+            // crash and exporters read it while the worker serves.
+            let recorder = (cfg.trace_buffer > 0)
+                .then(|| Arc::new(FlightRecorder::new(cfg.trace_buffer, cfg.trace_sample)));
             let (handle, hooks, join) = spawn_worker::<E, F>(
                 w,
                 cfg.clone(),
                 fault,
+                recorder.clone(),
                 Arc::clone(&factory),
                 Arc::clone(&stats),
             )?;
@@ -722,6 +820,7 @@ impl Router {
                 stats,
                 dispatched: AtomicU64::new(0),
                 restarts: AtomicU64::new(0),
+                recorder,
             });
         }
         let shared = Arc::new(Shared {
@@ -734,6 +833,7 @@ impl Router {
             started: Instant::now(),
             shed: AtomicU64::new(0),
             recovered_sessions: AtomicU64::new(0),
+            trace_dumps: Mutex::new(Vec::new()),
         });
         let supervisor = spawn_supervisor::<E, F>(
             Arc::clone(&shared),
@@ -767,6 +867,12 @@ impl Router {
     /// Shareable live metrics (hand a clone to a [`super::MetricsServer`]).
     pub fn metrics(&self) -> Arc<ClusterMetrics> {
         Arc::clone(&self.metrics)
+    }
+
+    /// Worker `w`'s flight recorder (`None` when tracing is off) — see
+    /// [`ClusterMetrics::recorder`].
+    pub fn recorder(&self, w: usize) -> Option<Arc<FlightRecorder>> {
+        self.metrics.recorder(w)
     }
 
     /// Point-in-time cluster aggregate.
@@ -867,6 +973,18 @@ impl Router {
     fn dispatch_request(&self, req: Request, responder: Responder) -> Result<(), SubmitError> {
         if self.over_watermark() {
             self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            // Shedding happens before routing, so no worker owns the
+            // event; worker 0's recorder doubles as the router track.
+            if let Some(rec) = self.metrics.workers[0].recorder.as_deref() {
+                let outstanding: u64 =
+                    (0..self.metrics.num_workers()).map(|i| self.metrics.outstanding(i)).sum();
+                rec.record(
+                    EventKind::Overloaded,
+                    req.session_id.unwrap_or(req.id),
+                    outstanding,
+                    self.rcfg.shed_watermark.unwrap_or(0),
+                );
+            }
             return Err(SubmitError::Overloaded);
         }
         let w = self.route(&req);
@@ -1003,7 +1121,7 @@ where
                     continue;
                 }
                 metrics.workers[w].restarts.fetch_add(1, Ordering::Relaxed);
-                restart_worker::<E, F>(&shared, &metrics, &cfg, &factory, w, dead);
+                restart_worker::<E, F>(&shared, &metrics, &cfg, &rcfg, &factory, w, dead);
                 beats[w] = (0, Instant::now());
             }
         }
@@ -1032,6 +1150,7 @@ fn restart_worker<E, F>(
     shared: &Shared,
     metrics: &ClusterMetrics,
     cfg: &EngineConfig,
+    rcfg: &RouterConfig,
     factory: &Arc<F>,
     w: usize,
     dead: bool,
@@ -1048,14 +1167,34 @@ fn restart_worker<E, F>(
         hooks.fence.store(true, Ordering::SeqCst);
         hooks.clone()
     };
+    // Crash forensics: persist the dead incarnation's flight recorder
+    // now, after the fence and before the replacement starts
+    // overwriting the slot-shared ring. Best-effort — a failed write
+    // must never block recovery.
+    if let (Some(dir), Some(rec)) =
+        (rcfg.trace_dump_dir.as_deref(), metrics.workers[w].recorder.as_deref())
+    {
+        let epoch = lock_recover(&slot.handle).epoch;
+        let path = dir.join(format!("flight_recorder_worker{w}_epoch{epoch}.json"));
+        let json = chrome_trace(&[(format!("worker{w}"), rec.events())]);
+        if std::fs::create_dir_all(dir).is_ok() && std::fs::write(&path, json).is_ok() {
+            lock_recover(&metrics.trace_dumps).push((w, path));
+        }
+    }
     // Terminal outcomes recorded just before death settle first, so a
     // completed session is not replayed to a caller that saw its Done.
     prune_settled(shared, w);
     let mut snaps = std::mem::take(&mut *lock_recover(&old_hooks.snapshots));
     let stats = Arc::clone(&metrics.workers[w].stats);
     // Respawn with a benign fault plan: an injected crash fires once.
-    let spawned =
-        spawn_worker::<E, F>(w, cfg.clone(), FaultPlan::default(), Arc::clone(factory), stats);
+    let spawned = spawn_worker::<E, F>(
+        w,
+        cfg.clone(),
+        FaultPlan::default(),
+        metrics.workers[w].recorder.clone(),
+        Arc::clone(factory),
+        stats,
+    );
     let Ok((handle, hooks, join)) = spawned else {
         // Could not spawn a replacement thread: give the sessions up so
         // their channels close rather than hang.
@@ -1366,6 +1505,59 @@ mod tests {
         let snap = router.shutdown().unwrap();
         assert_eq!(snap.shed, 1);
         assert_eq!(snap.dispatched, 0);
+    }
+
+    #[test]
+    fn supervisor_dumps_flight_recorder_before_restart() {
+        // Worker 0 is killed mid-decode with tracing on; the supervisor
+        // must write the dead incarnation's ring to the dump dir before
+        // respawning, and the dump must contain the dying session's
+        // decode activity (Chrome trace-event JSON).
+        let dir = std::env::temp_dir()
+            .join(format!("subgen_trace_dump_{}", std::process::id()))
+            .join("restart");
+        let _ = std::fs::remove_dir_all(&dir);
+        let rcfg = RouterConfig {
+            poll_every: Duration::from_millis(2),
+            trace_dump_dir: Some(dir.clone()),
+            fault_plans: vec![(0, FaultPlan { panic_at_tick: Some(3), ..Default::default() })],
+            ..Default::default()
+        };
+        let cfg = EngineConfig { snapshot_every: 1, trace_buffer: 4096, ..Default::default() };
+        let router = Router::spawn_with(1, cfg, rcfg, |_w| MockExecutor::small()).unwrap();
+        let resp = router.submit_blocking(Request::exact(7, vec![3], 8)).unwrap();
+        assert_eq!(resp.tokens.len(), 8);
+        let dumps = router.metrics().trace_dumps();
+        assert_eq!(dumps.len(), 1, "one restart, one dump");
+        assert_eq!(dumps[0].0, 0);
+        let json = std::fs::read_to_string(&dumps[0].1).unwrap();
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.contains("\"decode_tick\""), "dying session's ticks missing: {json}");
+        assert!(json.contains("\"tid\":7"), "session track missing: {json}");
+        // The slot recorder survives the restart: the replacement's
+        // events accumulate in the same ring.
+        let rec = router.recorder(0).unwrap();
+        let done =
+            rec.events().iter().filter(|e| e.kind == crate::trace::EventKind::Done).count();
+        assert!(done >= 1, "replacement incarnation recorded no Done");
+        router.shutdown().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shed_records_overloaded_trace_event() {
+        let rcfg = RouterConfig { shed_watermark: Some(0), ..Default::default() };
+        let cfg = EngineConfig { trace_buffer: 256, ..Default::default() };
+        let router = Router::spawn_with(2, cfg, rcfg, |_w| MockExecutor::small()).unwrap();
+        let err = router.submit_blocking(Request::exact(1, vec![3], 2)).unwrap_err();
+        assert_eq!(err, SubmitError::Overloaded);
+        let events = router.recorder(0).unwrap().events();
+        let shed: Vec<_> =
+            events.iter().filter(|e| e.kind == crate::trace::EventKind::Overloaded).collect();
+        assert_eq!(shed.len(), 1);
+        assert_eq!(shed[0].session, 1);
+        assert_eq!(shed[0].b, 0, "watermark payload");
+        router.shutdown().unwrap();
     }
 
     #[test]

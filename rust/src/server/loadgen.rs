@@ -109,6 +109,10 @@ pub struct ChaosReport {
     pub restarts: u64,
     /// Sessions the supervisor re-admitted after those restarts.
     pub recovered_sessions: u64,
+    /// Flight-recorder dump files the supervisor wrote before each
+    /// restart (empty when tracing or the dump dir was off). See
+    /// [`super::cluster::RouterConfig::trace_dump_dir`].
+    pub trace_dumps: Vec<std::path::PathBuf>,
 }
 
 impl ChaosReport {

@@ -103,9 +103,41 @@ pub fn prometheus_text(snap: &ClusterSnapshot) -> String {
         let _ = writeln!(s, "# TYPE subgen_{stem} counter");
         let _ = writeln!(s, "subgen_{stem} {v}");
     }
-    let gauges: [(&str, &str, fn(&super::WorkerStat) -> u64, u64); 2] = [
+    let gauges: [(&str, &str, fn(&super::WorkerStat) -> u64, u64); 7] = [
         ("queue_depth", "Requests queued for admission.", |w| w.queued, snap.queued),
         ("active_sequences", "Sequences actively decoding.", |w| w.active, snap.active),
+        // Cache introspection, sampled from every resident sequence's
+        // CachePolicy::telemetry() on each engine tick.
+        (
+            "cache_bytes",
+            "Resident KV-cache bytes across live sequences.",
+            |w| w.cache_bytes,
+            snap.cache_bytes,
+        ),
+        (
+            "cache_clusters",
+            "SubGen online-clustering centers across live sequences.",
+            |w| w.cache_clusters,
+            snap.cache_clusters,
+        ),
+        (
+            "cache_reservoir_slots",
+            "Reservoir / scored-set occupancy across live sequences.",
+            |w| w.cache_reservoir,
+            snap.cache_reservoir,
+        ),
+        (
+            "cache_admitted_rows",
+            "KV rows admitted by live sequences' cache policies.",
+            |w| w.cache_admitted_rows,
+            snap.cache_admitted_rows,
+        ),
+        (
+            "cache_evicted_rows",
+            "KV rows evicted (admitted minus retained) by live sequences.",
+            |w| w.cache_evicted_rows,
+            snap.cache_evicted_rows,
+        ),
     ];
     for (stem, help, get, total) in gauges {
         family(&mut s, "gauge", stem, help, snap, get, total);
@@ -129,6 +161,16 @@ pub fn prometheus_text(snap: &ClusterSnapshot) -> String {
     let _ = writeln!(s, "# HELP {name} Per-decode-tick latency (cluster-merged).");
     let _ = writeln!(s, "# TYPE {name} summary");
     summary_lines(&mut s, name, "", &snap.tick_latency);
+    // Measured cache-estimator error from the host probe. The
+    // histogram stores the unitless relative L2 error at 1 ns ≡ 1e-9,
+    // so rendering "seconds" recovers the raw error value.
+    let name = "subgen_probe_error";
+    let _ = writeln!(
+        s,
+        "# HELP {name} Measured cache-estimator relative L2 error (unitless, cluster-merged)."
+    );
+    let _ = writeln!(s, "# TYPE {name} summary");
+    summary_lines(&mut s, name, "", &snap.probe_error);
     // Per-class SLO summaries: one family per metric, labelled by
     // scheduling class, so dashboards can plot interactive vs batch
     // TTFT/TPOT from the same scrape.
@@ -146,6 +188,25 @@ pub fn prometheus_text(snap: &ClusterSnapshot) -> String {
     summary_lines(&mut s, name, "class=\"interactive\",", &snap.tpot_interactive);
     summary_lines(&mut s, name, "class=\"batch\",", &snap.tpot_batch);
     s
+}
+
+/// Escape a label *value* for the Prometheus text exposition format:
+/// backslash, double-quote and newline must be escaped inside the
+/// quoted value (`\\`, `\"`, `\n`). Everything rendered today uses
+/// numeric or fixed labels, but any exporter extension that labels by
+/// request-supplied strings (model names, tenant ids) must route them
+/// through here or produce an unparseable scrape.
+pub fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
 }
 
 /// One metric stem as two families: `subgen_worker_<stem>{worker="i"}`
@@ -329,6 +390,37 @@ mod tests {
             "{text}"
         );
         router.shutdown().unwrap();
+    }
+
+    #[test]
+    fn cache_and_probe_families_are_present() {
+        // The introspection families must exist even when idle (exact
+        // policy, no probe), so dashboards and the CI smoke can rely on
+        // them unconditionally.
+        let router = served_router();
+        let text = prometheus_text(&router.snapshot());
+        assert!(text.contains("subgen_worker_cache_bytes{worker=\"0\"}"), "{text}");
+        assert!(text.contains("\n# TYPE subgen_cache_bytes gauge"), "{text}");
+        assert!(text.contains("\nsubgen_cache_clusters "), "{text}");
+        assert!(text.contains("\nsubgen_cache_reservoir_slots "), "{text}");
+        assert!(text.contains("\nsubgen_cache_admitted_rows "), "{text}");
+        assert!(text.contains("\nsubgen_cache_evicted_rows "), "{text}");
+        assert!(text.contains("subgen_probe_error{quantile=\"0.5\"}"), "{text}");
+        assert!(text.contains("\nsubgen_probe_error_count 0"), "{text}");
+        router.shutdown().unwrap();
+    }
+
+    #[test]
+    fn escape_label_handles_quotes_backslashes_and_newlines() {
+        assert_eq!(escape_label("plain-0.9"), "plain-0.9");
+        assert_eq!(escape_label("say \"hi\""), "say \\\"hi\\\"");
+        assert_eq!(escape_label("a\\b"), "a\\\\b");
+        assert_eq!(escape_label("line\nbreak"), "line\\nbreak");
+        // Escaped output round-trips into a valid quoted label value:
+        // no raw quote or newline survives.
+        let esc = escape_label("x\"\n\\");
+        assert!(!esc.contains('\n'));
+        assert!(!esc.replace("\\\"", "").contains('"'));
     }
 
     #[test]

@@ -17,7 +17,7 @@ pub use cluster::{
     WorkerStat,
 };
 pub use loadgen::{ChaosReport, LoadGen, LoadGenReport, StreamingReport};
-pub use metrics_export::{prometheus_text, MetricsServer};
+pub use metrics_export::{escape_label, prometheus_text, MetricsServer};
 
 use crate::coordinator::{
     Engine, EngineConfig, EngineStats, Request, Response, SessionSnapshot, StepExecutor,
@@ -105,18 +105,6 @@ pub enum SubmitError {
     /// The cluster shed the request before dispatch: aggregate
     /// outstanding work is past the router's shed watermark.
     Overloaded,
-}
-
-impl SubmitError {
-    /// Deprecated alias for [`SubmitError::Expired`], kept for one
-    /// release so downstream matches keep compiling. The serving layer
-    /// used to say `DeadlineExceeded` on the submit path and `Expired`
-    /// on the stream path for the same outcome; `Expired` is now the
-    /// single term (the Prometheus family name
-    /// `subgen_deadline_exceeded_total` is wire format and unchanged).
-    #[allow(non_upper_case_globals)]
-    #[deprecated(note = "renamed to SubmitError::Expired")]
-    pub const DeadlineExceeded: SubmitError = SubmitError::Expired;
 }
 
 impl std::fmt::Display for SubmitError {
@@ -764,12 +752,11 @@ mod tests {
     }
 
     #[test]
-    #[allow(deprecated)]
-    fn deadline_exceeded_alias_still_matches_expired() {
-        // One-release deprecation window: code written against the old
-        // `DeadlineExceeded` name keeps compiling and keeps matching
-        // the renamed `Expired` variant, on both reply paths.
-        assert_eq!(SubmitError::DeadlineExceeded, SubmitError::Expired);
+    fn expired_is_the_single_deadline_spelling_on_both_paths() {
+        // The `DeadlineExceeded` alias is gone after its one-release
+        // deprecation window; `Expired` is the surviving spelling and
+        // both reply paths report it (the Prometheus family name
+        // `subgen_deadline_exceeded_total` is wire format, unchanged).
         let (handle, rx) = channel();
         let t = std::thread::spawn(move || {
             let exec = MockExecutor::small();
@@ -779,11 +766,11 @@ mod tests {
         let err = handle
             .submit_blocking(Request::exact(1, vec![1], 500).with_deadline(dl))
             .unwrap_err();
-        assert!(matches!(err, SubmitError::DeadlineExceeded));
+        assert!(matches!(err, SubmitError::Expired));
         let srx = handle
             .submit_streaming(Request::exact(2, vec![1], 500).with_deadline(dl))
             .unwrap();
-        assert!(matches!(drain_stream(&srx).unwrap_err(), SubmitError::DeadlineExceeded));
+        assert!(matches!(drain_stream(&srx).unwrap_err(), SubmitError::Expired));
         handle.shutdown();
         let stats = t.join().unwrap();
         assert_eq!(stats.deadline_exceeded.get(), 2);

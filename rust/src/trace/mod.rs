@@ -1,0 +1,583 @@
+//! Low-overhead structured request tracing: the per-worker **flight
+//! recorder** plus its exporters.
+//!
+//! Every request's lifecycle — submit → queue → admit → prefill
+//! chunk(s) → decode ticks → snapshot → preemption →
+//! done/expired/overloaded — is recorded as fixed-size binary events
+//! into a lock-free ring buffer owned by the worker ([`FlightRecorder`]).
+//! The decode hot path performs **zero allocation** per event: recording
+//! is four relaxed atomic stores plus one release store into a
+//! preallocated slot. When the buffer wraps, the oldest events are
+//! overwritten (and counted in [`FlightRecorder::dropped`]) — exactly
+//! the semantics wanted for crash forensics, where the *last* events
+//! before a death matter most.
+//!
+//! # Event schema
+//!
+//! One event is five 64-bit words (40 bytes):
+//!
+//! | field     | meaning                                                    |
+//! |-----------|------------------------------------------------------------|
+//! | `t_us`    | monotonic microseconds since the recorder's epoch          |
+//! | `session` | request id (`Request::id`); 0 for worker-scoped events     |
+//! | `kind`    | [`EventKind`] discriminant                                 |
+//! | `a`       | kind-specific payload (see below)                          |
+//! | `b`       | kind-specific payload (see below)                          |
+//!
+//! Per-kind payloads:
+//!
+//! | kind                          | `a`                          | `b`                                 |
+//! |-------------------------------|------------------------------|-------------------------------------|
+//! | [`EventKind::Submit`]         | prompt length                | `max_new`                           |
+//! | [`EventKind::Admit`]          | queue wait (µs)              | prompt length                       |
+//! | [`EventKind::PrefillChunk`]   | chunk duration (ns)          | tokens in the chunk                 |
+//! | [`EventKind::DecodeTick`]     | tick duration (ns)           | batch size (sequences this tick)    |
+//! | [`EventKind::Snapshot`]       | tick number                  | generated tokens so far             |
+//! | [`EventKind::Preempt`]        | prompt tokens already done   | prompt length                       |
+//! | [`EventKind::Done`]           | total latency (µs)           | generated tokens                    |
+//! | [`EventKind::Expired`]        | 0                            | 0                                   |
+//! | [`EventKind::Overloaded`]     | aggregate outstanding work   | shed watermark                      |
+//! | [`EventKind::CacheTelemetry`] | cache bytes                  | clusters (hi 32) \| reservoir (lo)  |
+//! | [`EventKind::ProbeError`]     | layer (hi 32) \| head (lo)   | `f64::to_bits` of the measured error|
+//!
+//! `DecodeTick` and `CacheTelemetry` are *per-tick* classes and honor
+//! the sampling rate ([`FlightRecorder::sample_every`]); lifecycle
+//! events (everything else) are always recorded so request summaries
+//! stay complete even under heavy sampling.
+//!
+//! # Exporters
+//!
+//! [`chrome_trace`] renders tracks of events as Chrome trace-event JSON
+//! (open in Perfetto or `chrome://tracing`): one process ("track") per
+//! worker, one thread lane per session, counter tracks for cache
+//! telemetry. [`request_summaries`] folds events into per-request
+//! [`RequestSummary`] rows (`queued_us`, `prefill_chunks`,
+//! `preemptions`, `ticks`, `max_batch`, outcome) for human-readable
+//! reports.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+/// What happened. Discriminants are stable (they appear in flight
+/// recorder dumps on disk); append new kinds, never renumber.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// Request entered the engine's run queue.
+    Submit = 0,
+    /// Request left the queue and was admitted (prefill begins).
+    Admit = 1,
+    /// One chunked-prefill slice executed.
+    PrefillChunk = 2,
+    /// One decode tick advanced this session (or, for `session == 0`,
+    /// the worker's whole tick).
+    DecodeTick = 3,
+    /// A recovery snapshot of this session was published.
+    Snapshot = 4,
+    /// An in-flight prefill was preempted by decode TPOT debt.
+    Preempt = 5,
+    /// Terminal: the request completed.
+    Done = 6,
+    /// Terminal: the request was dropped past its deadline.
+    Expired = 7,
+    /// Terminal: the router shed the request before dispatch.
+    Overloaded = 8,
+    /// Per-tick cache-policy telemetry sample (see
+    /// [`crate::kvcache::CacheTelemetry`]).
+    CacheTelemetry = 9,
+    /// Measured estimator error for one (layer, head) from the
+    /// exact-attention host probe.
+    ProbeError = 10,
+}
+
+impl EventKind {
+    /// Stable lowercase name (used as the Chrome trace event name and
+    /// in text summaries).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Submit => "submit",
+            EventKind::Admit => "admit",
+            EventKind::PrefillChunk => "prefill_chunk",
+            EventKind::DecodeTick => "decode_tick",
+            EventKind::Snapshot => "snapshot",
+            EventKind::Preempt => "preempt",
+            EventKind::Done => "done",
+            EventKind::Expired => "expired",
+            EventKind::Overloaded => "overloaded",
+            EventKind::CacheTelemetry => "cache_telemetry",
+            EventKind::ProbeError => "probe_error",
+        }
+    }
+
+    fn from_u64(v: u64) -> Option<EventKind> {
+        Some(match v {
+            0 => EventKind::Submit,
+            1 => EventKind::Admit,
+            2 => EventKind::PrefillChunk,
+            3 => EventKind::DecodeTick,
+            4 => EventKind::Snapshot,
+            5 => EventKind::Preempt,
+            6 => EventKind::Done,
+            7 => EventKind::Expired,
+            8 => EventKind::Overloaded,
+            9 => EventKind::CacheTelemetry,
+            10 => EventKind::ProbeError,
+            _ => return None,
+        })
+    }
+}
+
+/// One decoded flight-recorder event (see the module docs for the
+/// per-kind payload schema).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Monotonic microseconds since the recorder's epoch.
+    pub t_us: u64,
+    /// Request id (0 for worker-scoped events).
+    pub session: u64,
+    /// Event kind.
+    pub kind: EventKind,
+    /// Kind-specific payload.
+    pub a: u64,
+    /// Kind-specific payload.
+    pub b: u64,
+}
+
+/// One preallocated ring slot. `seq` is written last with `Release`
+/// (and read first with `Acquire`), so a reader that observes `seq > 0`
+/// sees the slot's fields from *some* completed write. A concurrent
+/// wrap can still hand a reader a newer event than `seq` promised —
+/// harmless for forensics, where the dump is taken after the worker is
+/// fenced or dead and the writer has stopped.
+#[derive(Default)]
+struct Slot {
+    seq: AtomicU64,
+    t_us: AtomicU64,
+    session: AtomicU64,
+    kind: AtomicU64,
+    a: AtomicU64,
+    b: AtomicU64,
+}
+
+/// Lock-free fixed-capacity ring buffer of [`TraceEvent`]s — the
+/// per-worker flight recorder. Writers never allocate and never block;
+/// the ring keeps the newest `capacity` events.
+pub struct FlightRecorder {
+    slots: Vec<Slot>,
+    /// Total events ever written (next slot = `head % capacity`).
+    head: AtomicU64,
+    sample_every: u64,
+    epoch: Instant,
+}
+
+impl std::fmt::Debug for FlightRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FlightRecorder")
+            .field("capacity", &self.slots.len())
+            .field("recorded", &self.head.load(Ordering::Relaxed))
+            .field("sample_every", &self.sample_every)
+            .finish()
+    }
+}
+
+impl FlightRecorder {
+    /// Ring of `capacity` slots (min 16). `sample_every = n` records 1
+    /// of every `n` per-tick events (`DecodeTick`/`CacheTelemetry`);
+    /// 0 is treated as 1 (record every tick).
+    pub fn new(capacity: usize, sample_every: u64) -> Self {
+        let capacity = capacity.max(16);
+        Self {
+            slots: (0..capacity).map(|_| Slot::default()).collect(),
+            head: AtomicU64::new(0),
+            sample_every: sample_every.max(1),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Slots in the ring.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Per-tick sampling rate (1 = every tick).
+    pub fn sample_every(&self) -> u64 {
+        self.sample_every
+    }
+
+    /// Whether per-tick events should be recorded for tick `n`.
+    #[inline]
+    pub fn tick_sampled(&self, n: u64) -> bool {
+        n % self.sample_every == 0
+    }
+
+    /// Total events recorded since construction (including overwritten
+    /// ones).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed)
+    }
+
+    /// Events lost to ring wrap-around.
+    pub fn dropped(&self) -> u64 {
+        self.recorded().saturating_sub(self.slots.len() as u64)
+    }
+
+    /// Monotonic microseconds since this recorder's epoch.
+    #[inline]
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros().min(u128::from(u64::MAX)) as u64
+    }
+
+    /// Record one event. Lock-free, allocation-free: one `fetch_add`
+    /// and five stores into a preallocated slot.
+    #[inline]
+    pub fn record(&self, kind: EventKind, session: u64, a: u64, b: u64) {
+        let n = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(n % self.slots.len() as u64) as usize];
+        slot.t_us.store(self.now_us(), Ordering::Relaxed);
+        slot.session.store(session, Ordering::Relaxed);
+        slot.kind.store(kind as u64, Ordering::Relaxed);
+        slot.a.store(a, Ordering::Relaxed);
+        slot.b.store(b, Ordering::Relaxed);
+        slot.seq.store(n + 1, Ordering::Release);
+    }
+
+    /// Decode the ring's current contents, oldest first. Intended for
+    /// export/forensics after the writer has quiesced (fenced worker,
+    /// finished run); concurrent writes can skew ordering near the head
+    /// but never corrupt an individual slot's invariants.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        let head = self.head.load(Ordering::Relaxed);
+        let cap = self.slots.len() as u64;
+        let start = head.saturating_sub(cap);
+        let mut out = Vec::with_capacity((head - start) as usize);
+        for n in start..head {
+            let slot = &self.slots[(n % cap) as usize];
+            if slot.seq.load(Ordering::Acquire) == 0 {
+                continue;
+            }
+            let Some(kind) = EventKind::from_u64(slot.kind.load(Ordering::Relaxed)) else {
+                continue;
+            };
+            out.push(TraceEvent {
+                t_us: slot.t_us.load(Ordering::Relaxed),
+                session: slot.session.load(Ordering::Relaxed),
+                kind,
+                a: slot.a.load(Ordering::Relaxed),
+                b: slot.b.load(Ordering::Relaxed),
+            });
+        }
+        out.sort_by_key(|e| e.t_us);
+        out
+    }
+}
+
+/// Render event tracks as Chrome trace-event JSON (the `traceEvents`
+/// array format Perfetto and `chrome://tracing` load directly).
+///
+/// Each `(label, events)` pair becomes one process (`pid` = index,
+/// named by a `process_name` metadata record) — one track per worker.
+/// Within a track, `tid` is the session id, so every session gets its
+/// own lane. Span kinds (`decode_tick`, `prefill_chunk`) emit complete
+/// (`"ph":"X"`) events with real durations; lifecycle kinds emit
+/// instants (`"ph":"i"`); cache telemetry emits counter (`"ph":"C"`)
+/// series (`cache_bytes`, `cache_clusters`, `cache_reservoir`).
+pub fn chrome_trace(tracks: &[(String, Vec<TraceEvent>)]) -> String {
+    let mut s = String::from("{\"traceEvents\":[");
+    let mut first = true;
+    let mut push = |s: &mut String, item: String| {
+        if !std::mem::take(&mut first) {
+            s.push(',');
+        }
+        s.push_str(&item);
+    };
+    for (pid, (label, events)) in tracks.iter().enumerate() {
+        push(
+            &mut s,
+            format!(
+                "{{\"name\":\"process_name\",\"ph\":\"M\",\"pid\":{pid},\"tid\":0,\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                escape_json(label)
+            ),
+        );
+        for e in events {
+            let name = e.kind.name();
+            let item = match e.kind {
+                EventKind::DecodeTick | EventKind::PrefillChunk => {
+                    // `a` is the duration in ns; the event was recorded
+                    // at its end, so the span starts dur earlier.
+                    let dur_us = (e.a / 1_000).max(1);
+                    let ts = e.t_us.saturating_sub(dur_us);
+                    let (k, v) = match e.kind {
+                        EventKind::DecodeTick => ("batch", e.b),
+                        _ => ("tokens", e.b),
+                    };
+                    format!(
+                        "{{\"name\":\"{name}\",\"ph\":\"X\",\"ts\":{ts},\"dur\":{dur_us},\
+                         \"pid\":{pid},\"tid\":{},\"args\":{{\"{k}\":{v}}}}}",
+                        e.session
+                    )
+                }
+                EventKind::CacheTelemetry => format!(
+                    "{{\"name\":\"cache\",\"ph\":\"C\",\"ts\":{},\"pid\":{pid},\"tid\":0,\
+                     \"args\":{{\"cache_bytes\":{},\"cache_clusters\":{},\
+                     \"cache_reservoir\":{}}}}}",
+                    e.t_us,
+                    e.a,
+                    e.b >> 32,
+                    e.b & 0xFFFF_FFFF
+                ),
+                EventKind::ProbeError => format!(
+                    "{{\"name\":\"{name}\",\"ph\":\"i\",\"ts\":{},\"pid\":{pid},\"tid\":{},\
+                     \"s\":\"t\",\"args\":{{\"layer\":{},\"head\":{},\"error\":{:.6}}}}}",
+                    e.t_us,
+                    e.session,
+                    e.a >> 32,
+                    e.a & 0xFFFF_FFFF,
+                    f64::from_bits(e.b)
+                ),
+                _ => format!(
+                    "{{\"name\":\"{name}\",\"ph\":\"i\",\"ts\":{},\"pid\":{pid},\"tid\":{},\
+                     \"s\":\"t\",\"args\":{{\"a\":{},\"b\":{}}}}}",
+                    e.t_us, e.session, e.a, e.b
+                ),
+            };
+            push(&mut s, item);
+        }
+    }
+    s.push_str("]}");
+    s
+}
+
+fn escape_json(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Human-readable per-request rollup of a trace (one row per session).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct RequestSummary {
+    /// Request id.
+    pub session: u64,
+    /// Queue wait between submit and admit, microseconds.
+    pub queued_us: u64,
+    /// Chunked-prefill slices executed.
+    pub prefill_chunks: u64,
+    /// Times an in-flight prefill was preempted.
+    pub preemptions: u64,
+    /// Decode ticks that advanced this session (sampled count).
+    pub ticks: u64,
+    /// Largest decode batch this session rode in.
+    pub max_batch: u64,
+    /// Recovery snapshots published.
+    pub snapshots: u64,
+    /// Terminal outcome (`done`/`expired`/`overloaded`/`open`).
+    pub outcome: &'static str,
+}
+
+impl std::fmt::Display for RequestSummary {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "trace request id={} queued_us={} prefill_chunks={} preemptions={} ticks={} \
+             max_batch={} snapshots={} outcome={}",
+            self.session,
+            self.queued_us,
+            self.prefill_chunks,
+            self.preemptions,
+            self.ticks,
+            self.max_batch,
+            self.snapshots,
+            self.outcome
+        )
+    }
+}
+
+/// Fold a flat event stream into per-request summaries, ordered by
+/// session id. Worker-scoped events (`session == 0` telemetry) are
+/// ignored; `queued_us` comes from the `Admit` payload so sampling
+/// never skews it.
+pub fn request_summaries(events: &[TraceEvent]) -> Vec<RequestSummary> {
+    let mut by_session: std::collections::BTreeMap<u64, RequestSummary> =
+        std::collections::BTreeMap::new();
+    for e in events {
+        if matches!(e.kind, EventKind::CacheTelemetry | EventKind::ProbeError) {
+            continue;
+        }
+        if e.session == 0 && e.kind == EventKind::DecodeTick {
+            continue; // worker-scoped tick span
+        }
+        let s = by_session.entry(e.session).or_insert_with(|| RequestSummary {
+            session: e.session,
+            outcome: "open",
+            ..Default::default()
+        });
+        match e.kind {
+            EventKind::Admit => s.queued_us = e.a,
+            EventKind::PrefillChunk => s.prefill_chunks += 1,
+            EventKind::Preempt => s.preemptions += 1,
+            EventKind::DecodeTick => {
+                s.ticks += 1;
+                s.max_batch = s.max_batch.max(e.b);
+            }
+            EventKind::Snapshot => s.snapshots += 1,
+            EventKind::Done => s.outcome = "done",
+            EventKind::Expired => s.outcome = "expired",
+            EventKind::Overloaded => s.outcome = "overloaded",
+            _ => {}
+        }
+    }
+    by_session.into_values().collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_records_and_decodes_in_order() {
+        let r = FlightRecorder::new(64, 1);
+        r.record(EventKind::Submit, 7, 12, 4);
+        r.record(EventKind::Admit, 7, 55, 12);
+        r.record(EventKind::Done, 7, 1000, 4);
+        let ev = r.events();
+        assert_eq!(ev.len(), 3);
+        assert_eq!(ev[0].kind, EventKind::Submit);
+        assert_eq!(ev[0].session, 7);
+        assert_eq!(ev[0].a, 12);
+        assert_eq!(ev[2].kind, EventKind::Done);
+        assert_eq!(r.recorded(), 3);
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_wraps_keeping_newest() {
+        let r = FlightRecorder::new(16, 1);
+        for i in 0..40u64 {
+            r.record(EventKind::DecodeTick, 1, i, 1);
+        }
+        let ev = r.events();
+        assert_eq!(ev.len(), 16);
+        // The newest 16 events survive the wrap.
+        assert_eq!(ev.first().unwrap().a, 24);
+        assert_eq!(ev.last().unwrap().a, 39);
+        assert_eq!(r.dropped(), 24);
+    }
+
+    #[test]
+    fn sampling_rate_is_clamped_and_applied() {
+        let r = FlightRecorder::new(16, 0);
+        assert_eq!(r.sample_every(), 1);
+        assert!(r.tick_sampled(0) && r.tick_sampled(1));
+        let r = FlightRecorder::new(16, 4);
+        assert!(r.tick_sampled(0) && r.tick_sampled(4));
+        assert!(!r.tick_sampled(1) && !r.tick_sampled(3));
+    }
+
+    #[test]
+    fn concurrent_writers_never_corrupt_the_ring() {
+        let r = std::sync::Arc::new(FlightRecorder::new(128, 1));
+        let mut joins = Vec::new();
+        for t in 0..4u64 {
+            let r2 = std::sync::Arc::clone(&r);
+            joins.push(std::thread::spawn(move || {
+                for i in 0..500u64 {
+                    r2.record(EventKind::DecodeTick, t + 1, i, 1);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        assert_eq!(r.recorded(), 2000);
+        let ev = r.events();
+        assert_eq!(ev.len(), 128);
+        for e in &ev {
+            assert!(e.session >= 1 && e.session <= 4);
+            assert!(e.a < 500);
+        }
+    }
+
+    #[test]
+    fn chrome_trace_emits_tracks_spans_and_counters() {
+        let r = FlightRecorder::new(64, 1);
+        r.record(EventKind::Submit, 3, 8, 2);
+        r.record(EventKind::Admit, 3, 100, 8);
+        r.record(EventKind::PrefillChunk, 3, 5_000, 8);
+        r.record(EventKind::DecodeTick, 3, 2_000, 1);
+        r.record(EventKind::CacheTelemetry, 0, 4096, (5u64 << 32) | 9);
+        r.record(EventKind::ProbeError, 3, (1u64 << 32) | 2, 0.25f64.to_bits());
+        r.record(EventKind::Done, 3, 77, 2);
+        let json = chrome_trace(&[("worker0".to_string(), r.events())]);
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.ends_with("]}"));
+        for needle in [
+            "\"process_name\"",
+            "\"worker0\"",
+            "\"submit\"",
+            "\"admit\"",
+            "\"prefill_chunk\"",
+            "\"decode_tick\"",
+            "\"ph\":\"X\"",
+            "\"ph\":\"C\"",
+            "\"cache_bytes\":4096",
+            "\"cache_clusters\":5",
+            "\"cache_reservoir\":9",
+            "\"layer\":1,\"head\":2,\"error\":0.25",
+            "\"done\"",
+            "\"tid\":3",
+        ] {
+            assert!(json.contains(needle), "missing {needle} in {json}");
+        }
+        // Balanced braces — cheap structural sanity without a parser.
+        let open = json.matches('{').count();
+        let close = json.matches('}').count();
+        assert_eq!(open, close);
+    }
+
+    #[test]
+    fn chrome_trace_escapes_track_labels() {
+        let json = chrome_trace(&[("w\"0\\\n".to_string(), Vec::new())]);
+        assert!(json.contains("w\\\"0\\\\\\n"));
+    }
+
+    #[test]
+    fn summaries_fold_lifecycle_per_session() {
+        let r = FlightRecorder::new(128, 1);
+        r.record(EventKind::Submit, 1, 8, 4);
+        r.record(EventKind::Admit, 1, 250, 8);
+        r.record(EventKind::PrefillChunk, 1, 1_000, 4);
+        r.record(EventKind::PrefillChunk, 1, 1_000, 4);
+        r.record(EventKind::Preempt, 1, 4, 8);
+        r.record(EventKind::DecodeTick, 1, 900, 3);
+        r.record(EventKind::DecodeTick, 1, 900, 2);
+        r.record(EventKind::Snapshot, 1, 2, 2);
+        r.record(EventKind::Done, 1, 5_000, 4);
+        r.record(EventKind::Submit, 2, 8, 4);
+        r.record(EventKind::Expired, 2, 0, 0);
+        r.record(EventKind::CacheTelemetry, 0, 64, 0);
+        let rows = request_summaries(&r.events());
+        assert_eq!(rows.len(), 2);
+        let one = &rows[0];
+        assert_eq!(one.session, 1);
+        assert_eq!(one.queued_us, 250);
+        assert_eq!(one.prefill_chunks, 2);
+        assert_eq!(one.preemptions, 1);
+        assert_eq!(one.ticks, 2);
+        assert_eq!(one.max_batch, 3);
+        assert_eq!(one.snapshots, 1);
+        assert_eq!(one.outcome, "done");
+        assert_eq!(rows[1].outcome, "expired");
+        let line = format!("{one}");
+        assert!(line.contains("queued_us=250"));
+        assert!(line.contains("outcome=done"));
+    }
+}

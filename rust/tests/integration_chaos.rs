@@ -4,6 +4,12 @@
 //! complete gap-free after snapshot restore — with tokens bit-identical
 //! to an undisturbed run — or surface a typed error. No hangs, no
 //! silent drops.
+//!
+//! The flight-recorder test (ISSUE 8) additionally pins crash
+//! forensics: with tracing on and `RouterConfig::trace_dump_dir` set,
+//! the supervisor must dump the dead incarnation's ring buffer —
+//! holding the faulted sessions' final decode ticks — before swapping
+//! in the replacement, and tracing must not change a single token.
 
 use std::time::Duration;
 use subgen::coordinator::{EngineConfig, FaultPlan, HostExecutor, Request, RequestClass};
@@ -125,6 +131,71 @@ fn two_worker_kill_mid_chunked_prefill_recovers_bit_identically() {
     assert_eq!(snap.completed, 6, "{snap:?}");
     assert!(snap.prefill_chunks > 0, "chunked prefill must be exercised: {snap:?}");
     assert!(snap.snapshots >= 1, "{snap:?}");
+}
+
+#[test]
+fn supervisor_dump_holds_faulted_sessions_last_tick_and_tracing_changes_no_tokens() {
+    let dump_dir =
+        std::env::temp_dir().join(format!("subgen_chaos_forensics_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dump_dir);
+
+    let cfg = EngineConfig::builder().max_active(4).snapshot_every(1).trace_buffer(4096).build();
+    // Undisturbed reference with the *same traced* config: the flight
+    // recorder must be invisible to the token stream.
+    let reference: Vec<Vec<i32>> = {
+        let router = Router::spawn(1, cfg.clone(), |_w| HostExecutor::small(11)).unwrap();
+        let out =
+            (0..6u64).map(|id| router.submit_blocking(request(id, 8)).unwrap().tokens).collect();
+        router.shutdown().unwrap();
+        out
+    };
+
+    let rcfg = RouterConfig::builder()
+        .poll_every(Duration::from_millis(2))
+        .retry_attempts(6)
+        .fault_plans(vec![(0, FaultPlan { panic_at_tick: Some(4), ..Default::default() })])
+        .trace_dump_dir(Some(dump_dir.clone()))
+        .build();
+    let router = Router::spawn_with(1, cfg, rcfg, |_w| HostExecutor::small(11)).unwrap();
+    let metrics = router.metrics();
+    let rxs: Vec<_> =
+        (0..6u64).map(|id| router.submit_streaming(request(id, 8)).unwrap()).collect();
+    for (id, rx) in rxs.iter().enumerate() {
+        let (streamed, _resp) = drain_stream(rx).unwrap();
+        assert_eq!(streamed, reference[id], "request {id} diverged with tracing enabled");
+    }
+    let snap = router.shutdown().unwrap();
+    assert_eq!(snap.restarts, 1, "{snap:?}");
+    assert_eq!(snap.completed, 6, "{snap:?}");
+
+    let dumps = metrics.trace_dumps();
+    assert_eq!(dumps.len(), 1, "one restart ⇒ one dump: {dumps:?}");
+    assert_eq!(dumps[0].0, 0, "the faulted worker is 0");
+    let json = std::fs::read_to_string(&dumps[0].1).unwrap();
+    assert!(json.starts_with("{\"traceEvents\":["), "not chrome-trace JSON: {json:.60}");
+    // Session 0 was submitted and decoding well before the tick-4
+    // panic (a submit racing the crash may legitimately land on the
+    // replacement instead), so the pre-crash ring must hold its
+    // submit...
+    let submit_tids: Vec<u64> = json
+        .match_indices("\"name\":\"submit\"")
+        .map(|(i, _)| {
+            let rest = &json[i..];
+            let tid = rest.split("\"tid\":").nth(1).expect("submit event has a tid");
+            tid.split(|c: char| !c.is_ascii_digit()).next().unwrap().parse().unwrap()
+        })
+        .collect();
+    assert!(submit_tids.contains(&0), "dump lost session 0's submit: {submit_tids:?}");
+    // ...and the first admitted session's final decode tick (a span
+    // with its request id as the lane). Nothing finished before the
+    // panic, so a `done` event would mean the dump was taken *after*
+    // recovery — exactly what forensics must not do.
+    assert!(
+        json.contains("\"tid\":0,\"args\":{\"batch\":"),
+        "dump is missing session 0's last decode tick"
+    );
+    assert!(!json.contains("\"name\":\"done\""), "dump contains post-recovery events");
+    let _ = std::fs::remove_dir_all(&dump_dir);
 }
 
 #[test]

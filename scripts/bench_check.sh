@@ -11,8 +11,16 @@
 # silently dropped operating point must fail the gate, not skip it.
 # A per-key before/after table is printed either way.
 #
-# The baseline does not exist until the first CI bench run commits it —
-# a missing baseline *file* is a clean skip, so this script can gate CI
+# A baseline stamped `"provenance": "seeded"` (hand-written magnitudes
+# committed so the structural gate — key coverage — is live before the
+# first CI bench run on this hardware) relaxes the *magnitude* check to
+# warn-only: seeded numbers are not this machine's numbers, so ratios
+# against them prove nothing. Missing keys still fail — a dropped
+# operating point is structural, not a magnitude. The CI bench job on
+# `main` overwrites the seeded file with measured values (no provenance
+# key), which re-arms the full gate.
+#
+# A missing baseline *file* is a clean skip, so this script can gate CI
 # from day one.
 set -euo pipefail
 
@@ -52,6 +60,7 @@ def walk(node, prefix=""):
 
 base_vals = {k: v for k, v in walk(base) if k.endswith("_ns")}
 fresh_vals = {k: v for k, v in walk(fresh) if k.endswith("_ns")}
+seeded = base.get("provenance") == "seeded"
 
 rows = []
 regressions = []
@@ -83,9 +92,17 @@ if missing:
         f"run (dropped operating point?): {', '.join(missing)}"
     )
 if regressions:
-    sys.exit(
-        f"bench_check: {len(regressions)} timing(s) regressed beyond "
-        f"{tol:.0%}: {', '.join(regressions)}"
-    )
-print("bench_check: all timings within tolerance")
+    if seeded:
+        print(
+            f"bench_check: baseline is seeded (hand-written magnitudes) — "
+            f"{len(regressions)} out-of-tolerance timing(s) reported as "
+            f"warnings only: {', '.join(regressions)}"
+        )
+    else:
+        sys.exit(
+            f"bench_check: {len(regressions)} timing(s) regressed beyond "
+            f"{tol:.0%}: {', '.join(regressions)}"
+        )
+else:
+    print("bench_check: all timings within tolerance")
 EOF
