@@ -19,8 +19,10 @@
 //!     cargo bench --bench bench_e2e_decode
 
 use std::path::Path;
+use std::sync::Arc;
 use subgen::bench::{black_box, Bencher, Table};
 use subgen::coordinator::{Engine, EngineConfig, Request, RequestClass};
+use subgen::kvcache::PagePool;
 use subgen::model::{
     DecodeStep, FlatCaches, Generator, HostExecutor, ModelSpec, PrefillOutput, SequenceCaches,
 };
@@ -281,11 +283,136 @@ fn host_trace_overhead_section() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Budgets measured for the paged decode path, as a percentage of the
+/// rotating working set ([`PAGED_LEASES`] arenas).
+const PAGED_BUDGET_PCTS: [u64; 3] = [100, 50, 25];
+/// Decode steps per timed repetition in the paged section.
+const PAGED_TOKENS: usize = 24;
+/// Concurrent arenas the paged section rotates through — pinning one
+/// evicts the others once the budget bites, so sub-100% budgets pay a
+/// real spill + recall per step.
+const PAGED_LEASES: usize = 4;
+
+/// Section 1d: the leased-page API on the decode hot path — the same
+/// decode step over direct arenas vs arenas owned by a [`PagePool`]
+/// and pinned per step, at budgets covering the whole working set
+/// (100%: the resident fast path, *asserted* within 3% of unpaged)
+/// down to heavy pressure (50%/25%: every pin recalls pages its
+/// neighbours' pins evicted to disk). Bit-identity is pinned before
+/// timing; timings are best-of-7 and merge into `BENCH_query.json`
+/// (key `paged_decode`) so the CI perf gate covers the pooled path.
+fn host_paged_decode_section() -> anyhow::Result<()> {
+    let spec = ModelSpec {
+        vocab: 16,
+        d_model: 32,
+        n_heads: 2,
+        n_layers: 2,
+        d_head: 16,
+        prefill_t: 64,
+        cache_variants: vec![N_CTX + 66, 1024, 320],
+        decode_batch: 0,
+        train_accuracy: -1.0,
+    };
+    let exec = HostExecutor::new(spec.clone(), 7)?;
+    let mut caches = SequenceCaches::new(&spec, "exact", usize::MAX / 4, 4.0, 3)?;
+    let lh_dh = spec.n_layers * spec.n_heads * spec.d_head;
+    let mut rng = Pcg64::seed_from_u64(23);
+    let (mut q, mut k, mut v) = (vec![0.0f32; lh_dh], vec![0.0f32; lh_dh], vec![0.0f32; lh_dh]);
+    for _ in 0..N_CTX {
+        fill_gaussian(&mut rng, &mut q, 0.3);
+        fill_gaussian(&mut rng, &mut k, 0.3);
+        fill_gaussian(&mut rng, &mut v, 1.0);
+        caches.update(&q, &k, &v);
+    }
+    let flat = caches.assemble(spec.pick_cache_variant(caches.max_slots() + 1))?;
+    let arena = flat.serialized_len() as u64;
+    let working_set = arena * PAGED_LEASES as u64;
+    let want = exec.decode(5, N_CTX, &flat)?;
+    // Identical arenas to rotate through: the unpaged baseline owns
+    // them directly, each budgeted run leases fresh copies to a pool.
+    let arenas = || -> anyhow::Result<Vec<FlatCaches>> {
+        (0..PAGED_LEASES).map(|_| FlatCaches::from_serialized(&flat.to_serialized())).collect()
+    };
+
+    let owned = arenas()?;
+    let mut unpaged = f64::MAX;
+    for _ in 0..7 {
+        let t0 = std::time::Instant::now();
+        for t in 0..PAGED_TOKENS {
+            black_box(exec.decode(5, N_CTX, &owned[t % PAGED_LEASES])?);
+        }
+        unpaged = unpaged.min(t0.elapsed().as_nanos() as f64 / PAGED_TOKENS as f64);
+    }
+
+    println!(
+        "\n== paged decode: pool pin/unpin vs direct arenas ({PAGED_LEASES} x {} KiB arenas) ==\n",
+        arena / 1024
+    );
+    let mut table = Table::new(&["budget", "ns/token", "vs unpaged", "evicted", "recalled"]);
+    table.row(&["unpaged".into(), format!("{unpaged:.0}"), "1.00x".into(), "-".into(), "-".into()]);
+    let mut json = format!(
+        "  \"paged_decode\": {{\"n_ctx\": {N_CTX}, \"arena_bytes\": {arena}, \
+         \"unpaged_per_token_ns\": {unpaged:.0}"
+    );
+    let mut ratio100 = 0.0f64;
+    for &pct in &PAGED_BUDGET_PCTS {
+        let pool = Arc::new(PagePool::new(
+            64 * 1024,
+            Some((working_set * pct / 100).max(1)),
+            Some(std::env::temp_dir()),
+        ));
+        let leases = arenas()?
+            .into_iter()
+            .map(|f| pool.register(f))
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        // Pin bit-identity before timing: the pooled path must decode
+        // exactly what the direct arena decodes.
+        {
+            let pin = leases[0].pin()?;
+            let got = exec.decode(5, N_CTX, &pin)?;
+            anyhow::ensure!(got.logits == want.logits, "paged decode drifted at {pct}% budget");
+        }
+        let mut best = f64::MAX;
+        for _ in 0..7 {
+            let t0 = std::time::Instant::now();
+            for t in 0..PAGED_TOKENS {
+                let pin = leases[t % PAGED_LEASES].pin()?;
+                black_box(exec.decode(5, N_CTX, &pin)?);
+            }
+            best = best.min(t0.elapsed().as_nanos() as f64 / PAGED_TOKENS as f64);
+        }
+        let stats = pool.stats();
+        let ratio = best / unpaged.max(1e-9);
+        if pct == 100 {
+            ratio100 = ratio;
+        }
+        table.row(&[
+            format!("{pct}%"),
+            format!("{best:.0}"),
+            format!("{ratio:.2}x"),
+            stats.evicted_pages.to_string(),
+            stats.recalled_pages.to_string(),
+        ]);
+        json.push_str(&format!(", \"budget{pct}_per_token_ns\": {best:.0}"));
+    }
+    json.push_str(&format!(", \"budget100_overhead_ratio\": {ratio100:.4}}}"));
+    table.print();
+    println!("\n(a covering budget is the resident fast path: the lease API must cost ~nothing)");
+    merge_into_bench_query("paged_decode", &json)?;
+    anyhow::ensure!(
+        ratio100 <= 1.03,
+        "paged decode at a covering budget is {:.1}% slower than direct arenas (budget 3%)",
+        (ratio100 - 1.0) * 100.0
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let bencher = Bencher { budget: std::time::Duration::from_millis(800), ..Default::default() };
     host_batched_section(&bencher)?;
     host_prefill_chunked_section(&bencher)?;
     host_trace_overhead_section()?;
+    host_paged_decode_section()?;
 
     let artifacts = Path::new("artifacts");
     if !artifacts.join("manifest.toml").exists() {

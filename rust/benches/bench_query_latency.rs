@@ -224,7 +224,7 @@ fn main() -> std::io::Result<()> {
 
     // ── Machine-readable output for the perf trajectory ──
     let json = format!(
-        "{{\n  \"bench\": \"bench_query_latency\",\n  \"config\": {{\"n\": {n}, \"dim\": {dim}, \"m\": {m}, \"t\": {t_smp}, \"s\": {s_smp}, \"batch\": {batch}}},\n  \"tick_us\": {{\"legacy_per_query\": {legacy_us:.2}, \"flat_per_query\": {flat_us:.2}, \"flat_batched\": {batch_us:.2}}},\n  \"speedup_vs_legacy\": {{\"per_query\": {:.3}, \"batched\": {:.3}}},\n  \"speedup_batched_vs_per_query\": {:.3},\n  \"scaling\": {{\"n\": {:?}, \"subgen_query_ns\": {:?}, \"exact_query_ns\": {:?}, \"subgen_slope\": {:.3}, \"exact_slope\": {:.3}}},\n  \"host_decode_loop\": {{\"n_ctx\": {n_ctx}, \"exact_step_ns\": {:.0}, \"subgen_step_ns\": {:.0}, \"speedup\": {:.3}}}\n}}\n",
+        "{{\n  \"bench\": \"bench_query_latency\",\n  \"provenance\": \"measured\",\n  \"config\": {{\"n\": {n}, \"dim\": {dim}, \"m\": {m}, \"t\": {t_smp}, \"s\": {s_smp}, \"batch\": {batch}}},\n  \"tick_us\": {{\"legacy_per_query\": {legacy_us:.2}, \"flat_per_query\": {flat_us:.2}, \"flat_batched\": {batch_us:.2}}},\n  \"speedup_vs_legacy\": {{\"per_query\": {:.3}, \"batched\": {:.3}}},\n  \"speedup_batched_vs_per_query\": {:.3},\n  \"scaling\": {{\"n\": {:?}, \"subgen_query_ns\": {:?}, \"exact_query_ns\": {:?}, \"subgen_slope\": {:.3}, \"exact_slope\": {:.3}}},\n  \"host_decode_loop\": {{\"n_ctx\": {n_ctx}, \"exact_step_ns\": {:.0}, \"subgen_step_ns\": {:.0}, \"speedup\": {:.3}}}\n}}\n",
         legacy_us / flat_us,
         legacy_us / batch_us,
         flat_us / batch_us,

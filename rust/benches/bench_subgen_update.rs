@@ -128,7 +128,7 @@ fn main() -> std::io::Result<()> {
     );
 
     let json = format!(
-        "{{\n  \"bench\": \"bench_subgen_update\",\n  \"update_slope_vs_n\": {update_slope:.3},\n  \"before_after_ns_per_update\": {{\"n\": {big_n}, \"dim\": {big_dim}, \"m\": {big_m}, \"legacy\": {:.0}, \"flat_arena\": {:.0}, \"speedup\": {:.3}}},\n  \"full_build\": {{\"n\": {big_n}, \"dim\": {big_dim}, \"m\": {big_m}, \"ns_per_token\": {build_ns_per_token:.0}, \"clusters\": {}, \"memory_kib\": {}}}\n}}\n",
+        "{{\n  \"bench\": \"bench_subgen_update\",\n  \"provenance\": \"measured\",\n  \"update_slope_vs_n\": {update_slope:.3},\n  \"before_after_ns_per_update\": {{\"n\": {big_n}, \"dim\": {big_dim}, \"m\": {big_m}, \"legacy\": {:.0}, \"flat_arena\": {:.0}, \"speedup\": {:.3}}},\n  \"full_build\": {{\"n\": {big_n}, \"dim\": {big_dim}, \"m\": {big_m}, \"ns_per_token\": {build_ns_per_token:.0}, \"clusters\": {}, \"memory_kib\": {}}}\n}}\n",
         r_legacy.mean_ns(),
         r_arena.mean_ns(),
         r_legacy.mean_ns() / r_arena.mean_ns(),

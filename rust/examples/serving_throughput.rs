@@ -26,13 +26,15 @@ use anyhow::Result;
 use std::path::PathBuf;
 use subgen::bench::Table;
 use subgen::cli::Args;
-use subgen::coordinator::{EngineConfig, FaultPlan, HostExecutor, Request, RequestClass};
-use subgen::model::{Generator, ModelSpec};
+use subgen::coordinator::{
+    EngineConfig, FaultPlan, HostExecutor, Request, RequestClass, StepExecutor,
+};
+use subgen::model::{FlatCaches, Generator, ModelSpec};
 use subgen::rng::Pcg64;
 use subgen::runtime::Runtime;
 use subgen::server::{
     channel, prometheus_text, serve, ChaosReport, ClusterSnapshot, LoadGen, LoadGenReport, Router,
-    RouterConfig, StreamingReport,
+    RouterConfig, StreamingReport, SubmitError,
 };
 use subgen::trace::{chrome_trace, request_summaries, FlightRecorder, TraceEvent};
 use subgen::workload::{lines_for_seq_len_clamped, RetrievalSampler};
@@ -51,6 +53,10 @@ fn main() -> Result<()> {
         .describe("mixed", None, "mixed-load run: long batch prefills + interactive decode, \
                    chunked-prefill scheduler vs monolithic")
         .describe("prefill-chunk", Some("32"), "prefill token budget per tick in --mixed")
+        .describe("paged", None, "memory-pressure run: unbounded KV pool vs --kv-budget-pct \
+                   of the working set, asserting bit-identical tokens")
+        .describe("kv-budget-pct", Some("25"), "paged-pool budget as % of the working set \
+                   in --paged")
         .describe("trace-out", None, "write a merged Chrome trace-event JSON (all policy runs, \
                    one track per worker) to this path and print per-request summaries")
         .describe("seed", Some("0"), "rng seed");
@@ -79,6 +85,11 @@ fn main() -> Result<()> {
         anyhow::ensure!(executor == "host", "the mixed-load scenario needs the host executor");
         let chunk = args.usize_or("prefill-chunk", 32).max(1);
         return run_mixed(requests, n, max_new, budget, seed, chunk);
+    }
+    if args.flag("paged") {
+        anyhow::ensure!(executor == "host", "the paged scenario needs the host executor");
+        let pct = args.u64_or("kv-budget-pct", 25).max(1);
+        return run_paged(workers, requests, n, max_new, budget, seed, pct);
     }
 
     println!("executor: {executor} workers: {workers}");
@@ -248,6 +259,126 @@ fn run_chaos(
         println!("chaos flight_recorder_dump path={}", path.display());
     }
     print!("{}", prometheus_text(&snap));
+    Ok(())
+}
+
+/// Memory-pressure scenario `--paged`: the same burst workload twice —
+/// an unbounded reference pass, then a pass whose shared KV page pool
+/// is budgeted to `--kv-budget-pct` percent of the decode working set
+/// (`max_active` prompt-capacity carry arenas), forcing cold pages out
+/// to disk between sweeps and back in at every pin. Every session must
+/// still complete with tokens bit-identical to the reference; the run
+/// reports one `paged ... tokens_match=...` line (CI greps it, with
+/// `evicted_pages`/`recalled_pages` nonzero) and dumps the budgeted
+/// pass's Prometheus families so the `subgen_pages_*` series are
+/// scrape-visible under real pressure.
+fn run_paged(
+    workers: usize,
+    requests: usize,
+    n: usize,
+    max_new: usize,
+    budget: usize,
+    seed: u64,
+    pct: u64,
+) -> Result<()> {
+    let model_seed = seed ^ 0xBEEF;
+    // Chunked prefill + per-tick snapshots: the pressure run exercises
+    // paged mid-prefill carries and spill-manifest snapshots, not just
+    // decode arenas.
+    let cfg = EngineConfig::builder()
+        .max_active(4)
+        .prefills_per_tick(2)
+        .prefill_chunk(32)
+        .snapshot_every(1)
+        .build();
+    let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed));
+    let mut prompts = Vec::with_capacity(requests);
+    for _ in 0..requests {
+        prompts.push(sampler.sample(lines_for_seq_len_clamped(n)).tokens().0);
+    }
+    let make = |id: usize| Request {
+        id: id as u64,
+        session_id: None,
+        prompt: prompts[id].clone(),
+        max_new,
+        policy: "subgen".into(),
+        budget,
+        delta: 4.0,
+        deadline: None,
+        class: RequestClass::Interactive,
+    };
+
+    // Reference pass: unbounded pool, everything submitted up front so
+    // the scheduler reaches full concurrency.
+    let router =
+        Router::spawn(workers, cfg.clone(), move |_w| HostExecutor::retrieval(model_seed))?;
+    let rxs: Vec<_> = (0..requests)
+        .map(|id| router.submit(make(id)).map_err(|e| anyhow::anyhow!("submit {id}: {e}")))
+        .collect::<Result<_>>()?;
+    let mut reference = Vec::with_capacity(requests);
+    for (id, rx) in rxs.into_iter().enumerate() {
+        let resp = subgen::server::recv_reply(&rx)
+            .map_err(|e| anyhow::anyhow!("reference request {id}: {e}"))?;
+        reference.push(resp.tokens);
+    }
+    router.shutdown()?;
+
+    // Size the budget off the decode working set: `max_active`
+    // prompt-capacity carry arenas (the largest allocations a sweep
+    // pins at once).
+    let probe = HostExecutor::retrieval(model_seed);
+    let max_prompt = prompts.iter().map(|p| p.len()).max().unwrap_or(n);
+    let arena = FlatCaches::for_prefill(probe.spec(), max_prompt + max_new).serialized_len() as u64;
+    let kv_budget = (4 * arena * pct / 100).max(1);
+
+    let rcfg = RouterConfig::builder()
+        .kv_mem_budget(Some(kv_budget))
+        .spill_dir(Some(std::env::temp_dir()))
+        .build();
+    let router =
+        Router::spawn_with(workers, cfg, rcfg, move |_w| HostExecutor::retrieval(model_seed))?;
+    // A budgeted pool sheds submits that race a fully pinned decode
+    // sweep (the router's overload gate); clients retry exactly like
+    // any 503 — pins drop between sweeps, so a retry lands promptly.
+    let mut shed_retries = 0u64;
+    let mut rxs = Vec::with_capacity(requests);
+    for id in 0..requests {
+        let rx = loop {
+            match router.submit(make(id)) {
+                Ok(rx) => break rx,
+                Err(SubmitError::PoolExhausted) if shed_retries < 10_000 => {
+                    shed_retries += 1;
+                    std::thread::sleep(std::time::Duration::from_millis(1));
+                }
+                Err(e) => anyhow::bail!("request {id} failed under memory pressure: {e}"),
+            }
+        };
+        rxs.push(rx);
+    }
+    let mut paged = Vec::with_capacity(requests);
+    for (id, rx) in rxs.into_iter().enumerate() {
+        let resp = subgen::server::recv_reply(&rx)
+            .map_err(|e| anyhow::anyhow!("budgeted request {id}: {e}"))?;
+        paged.push(resp.tokens);
+    }
+    let stats = router.metrics().pool().stats();
+    let snap = router.shutdown()?;
+    let matched = paged == reference;
+    println!(
+        "paged policy=subgen workers={workers} budget_bytes={kv_budget} pct={pct} \
+         completed={}/{requests} shed_retries={shed_retries} evicted_pages={} \
+         recalled_pages={} ghost_hits={} tokens_match={matched}",
+        paged.len(),
+        stats.evicted_pages,
+        stats.recalled_pages,
+        stats.ghost_hits
+    );
+    print!("{}", prometheus_text(&snap));
+    anyhow::ensure!(matched, "budgeted decode diverged from the unbounded reference");
+    anyhow::ensure!(
+        stats.evicted_pages > 0 && stats.recalled_pages > 0,
+        "the budget never forced paging: {stats:?}"
+    );
     Ok(())
 }
 

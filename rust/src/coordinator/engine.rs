@@ -3,12 +3,13 @@
 use super::{Request, RequestClass, Response, StepExecutor};
 use super::request::Timing;
 use super::snapshot::{FaultPlan, SessionSnapshot};
-use crate::kvcache::{attention_flat_into, CacheTelemetry};
+use crate::kvcache::{attention_flat_into, CacheTelemetry, PageLease, PagePool, PinnedPages};
 use crate::model::{caches::FlatCaches, DecodeStep, SequenceCaches, StepOutput};
 use crate::metrics::{Counter, Gauge, Histogram};
 use crate::trace::{EventKind, FlightRecorder};
 use anyhow::Result;
 use std::collections::VecDeque;
+use std::path::PathBuf;
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -100,6 +101,23 @@ pub struct EngineConfig {
     /// worker slot with its supervisor, so crash dumps survive the
     /// engine. Overrides `trace_buffer` when set.
     pub trace: Option<Arc<FlightRecorder>>,
+    /// Page granularity of the KV [`PagePool`] in bytes (sessions' flat
+    /// arenas are cut every this many serialized bytes for eviction and
+    /// spill). Ignored when [`EngineConfig::pool`] is set.
+    pub page_size: usize,
+    /// Resident-byte budget of the KV pool. `None` (default) disables
+    /// paging — every session's arena stays resident, today's layout.
+    /// Under a budget, cold pages spill to disk (S3-FIFO) and are
+    /// recalled on pin; token streams are bit-identical either way.
+    /// Ignored when [`EngineConfig::pool`] is set.
+    pub kv_mem_budget: Option<u64>,
+    /// Directory for the pool's spill file (the OS temp dir when
+    /// unset). Ignored when [`EngineConfig::pool`] is set.
+    pub spill_dir: Option<PathBuf>,
+    /// Use this pre-built pool instead of building a private one — how
+    /// the cluster router shares one KV memory budget across all its
+    /// workers. Overrides `page_size`/`kv_mem_budget`/`spill_dir`.
+    pub pool: Option<Arc<PagePool>>,
 }
 
 impl Default for EngineConfig {
@@ -117,6 +135,10 @@ impl Default for EngineConfig {
             trace_buffer: 0,
             trace_sample: 1,
             trace: None,
+            page_size: 16 * 1024,
+            kv_mem_budget: None,
+            spill_dir: None,
+            pool: None,
         }
     }
 }
@@ -206,6 +228,30 @@ impl EngineConfigBuilder {
     /// See [`EngineConfig::trace`].
     pub fn trace(mut self, v: Option<Arc<FlightRecorder>>) -> Self {
         self.cfg.trace = v;
+        self
+    }
+
+    /// See [`EngineConfig::page_size`].
+    pub fn page_size(mut self, v: usize) -> Self {
+        self.cfg.page_size = v;
+        self
+    }
+
+    /// See [`EngineConfig::kv_mem_budget`].
+    pub fn kv_mem_budget(mut self, v: Option<u64>) -> Self {
+        self.cfg.kv_mem_budget = v;
+        self
+    }
+
+    /// See [`EngineConfig::spill_dir`].
+    pub fn spill_dir(mut self, v: Option<PathBuf>) -> Self {
+        self.cfg.spill_dir = v;
+        self
+    }
+
+    /// See [`EngineConfig::pool`].
+    pub fn pool(mut self, v: Option<Arc<PagePool>>) -> Self {
+        self.cfg.pool = v;
         self
     }
 
@@ -354,7 +400,10 @@ struct Active {
     req: Request,
     timing: Timing,
     caches: SequenceCaches,
-    flat: FlatCaches,
+    /// Lease on this sequence's assembled flat buffers in the KV page
+    /// pool. Pinned per sweep (`lease.pin()`) — never borrowed raw —
+    /// so cold sequences' pages can spill between ticks.
+    lease: PageLease,
     /// Next token to feed (already emitted to `generated`).
     next: i32,
     pos: usize,
@@ -368,16 +417,18 @@ struct Active {
 }
 
 /// One sequence whose prompt is mid-way through chunked prefill: the
-/// cache policies hold the first `done` positions, and `carry` holds
-/// the raw per-(layer, head) K/V prefix the next chunk resumes causal
-/// attention from. Counted against `max_active` and in
-/// [`Engine::pending`]; promoted to [`Active`] when the last chunk
-/// lands.
+/// cache policies hold the first `done` positions, and the leased
+/// carry arena holds the raw per-(layer, head) K/V prefix the next
+/// chunk resumes causal attention from. Counted against `max_active`
+/// and in [`Engine::pending`]; promoted to [`Active`] when the last
+/// chunk lands.
 struct Prefilling {
     req: Request,
     timing: Timing,
     caches: SequenceCaches,
-    carry: FlatCaches,
+    /// Lease on the K/V carry arena in the KV page pool; pinned for
+    /// the duration of each prefill chunk.
+    lease: PageLease,
     /// Prompt positions prefilled so far.
     done: usize,
     last_q: Vec<f32>,
@@ -417,6 +468,10 @@ pub struct Engine<'e, E: StepExecutor> {
     sink: Option<TokenSink<'e>>,
     /// Snapshot publication hook (see [`SnapshotSink`]); `None` = off.
     snap_sink: Option<SnapshotSink<'e>>,
+    /// KV page pool owning every resident sequence's flat buffers (see
+    /// [`PagePool`]): either private to this engine or shared across a
+    /// router's workers via [`EngineConfig::pool`].
+    pool: Arc<PagePool>,
     /// Ids dropped past their deadline since the last `take_expired`.
     expired: Vec<u64>,
     /// Public metrics. Shared (`Arc`) so a router or metrics exporter on
@@ -438,6 +493,9 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             (cfg.trace_buffer > 0)
                 .then(|| Arc::new(FlightRecorder::new(cfg.trace_buffer, cfg.trace_sample)))
         });
+        let pool = cfg.pool.clone().unwrap_or_else(|| {
+            Arc::new(PagePool::new(cfg.page_size, cfg.kv_mem_budget, cfg.spill_dir.clone()))
+        });
         Self {
             exec,
             cfg,
@@ -456,9 +514,17 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             trace,
             sink: None,
             snap_sink: None,
+            pool,
             expired: Vec::new(),
             stats,
         }
+    }
+
+    /// The KV page pool this engine registers sequences into. Shared
+    /// (`Arc`), so callers can read [`PagePool::stats`] while the
+    /// engine runs.
+    pub fn pool(&self) -> Arc<PagePool> {
+        Arc::clone(&self.pool)
     }
 
     /// The flight recorder this engine records into, when tracing is
@@ -508,6 +574,7 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
                 snap.req.id
             );
             let carry = snap.restore_prefill_carry(spec)?;
+            let lease = self.pool.register(carry)?;
             let mut timing = Timing::now();
             timing.admitted = Some(timing.submitted);
             if let Some(t) = &self.trace {
@@ -517,14 +584,14 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
                 req: snap.req,
                 timing,
                 caches,
-                carry,
+                lease,
                 done,
                 last_q: Vec::new(),
             });
             return Ok(());
         }
         let c = spec.pick_cache_variant(caches.max_slots() + 1);
-        let flat = caches.assemble(c)?;
+        let lease = self.pool.register(caches.assemble(c)?)?;
         let mut timing = Timing::now();
         timing.admitted = Some(timing.submitted);
         // A resumed session already streamed its first token before the
@@ -537,7 +604,7 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             req: snap.req,
             timing,
             caches,
-            flat,
+            lease,
             next: snap.next,
             pos: snap.pos,
             generated: snap.generated,
@@ -701,7 +768,18 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
         // to resume the remaining chunks bit-identically on another
         // worker (see [`Engine::resume`]).
         for seq in &self.prefilling {
-            sink(SessionSnapshot::capture_prefill(&seq.req, seq.done, &seq.caches, &seq.carry));
+            // The carry is captured through its lease image: resident
+            // pages byte-exact, spilled pages as manifest references —
+            // no forced recall on the snapshot path. Fails only if the
+            // lease is pinned (never here: pins drop within sweeps).
+            let image = match seq.lease.image() {
+                Ok(image) => image,
+                Err(_) => {
+                    self.stats.snapshot_failures.inc();
+                    continue;
+                }
+            };
+            sink(SessionSnapshot::capture_prefill_paged(&seq.req, seq.done, &seq.caches, &image));
             self.stats.snapshots.inc();
             if let Some(t) = &self.trace {
                 t.record(EventKind::Snapshot, seq.req.id, tick_no, seq.done as u64);
@@ -742,11 +820,13 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
 
     /// One host-probe pass per tick: every active sequence's step
     /// queries are evaluated through the *already assembled* flat
-    /// buffers (`FlatCaches::head_slices` + `attention_flat_into`) —
-    /// zero packing and zero allocation after warm-up. The decode path
-    /// keeps `seq.flat` in sync each tick via `reassemble`, so probing
-    /// the flat buffers evaluates exactly the policies' current packed
-    /// estimators without re-packing `L · H` buffers per sequence.
+    /// buffers (pinned from the page pool, then
+    /// `FlatCaches::head_slices` + `attention_flat_into`) — zero
+    /// packing, and zero allocation after warm-up when the pages are
+    /// resident. The decode path keeps each lease's arena in sync via
+    /// `reassemble` at check-in, so probing the pinned buffers
+    /// evaluates exactly the policies' current packed estimators
+    /// without re-packing `L · H` buffers per sequence.
     /// Each sweep additionally measures the policy estimator's error:
     /// a second `attention_flat_into` pass with unit weights recovers
     /// plain softmax attention over the same retained rows, and the
@@ -767,12 +847,13 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             if seq.last_q.is_empty() {
                 continue;
             }
-            let lh = seq.flat.num_heads();
+            let pin = seq.lease.pin()?;
+            let lh = pin.num_heads();
             anyhow::ensure!(lh > 0 && seq.last_q.len() % lh == 0, "probe query shape");
             let dh = seq.last_q.len() / lh;
             out.resize(seq.last_q.len(), 0.0);
             for i in 0..lh {
-                let (kk, vv, ww, uu) = seq.flat.head_slices(i);
+                let (kk, vv, ww, uu) = pin.head_slices(i);
                 attention_flat_into(
                     kk,
                     vv,
@@ -879,11 +960,12 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
                 SequenceCaches::new(spec, &req.policy, req.budget, req.delta, req.id ^ 0x5EED)?;
             if chunked {
                 let carry = FlatCaches::for_prefill(spec, req.prompt.len());
+                let lease = self.pool.register(carry)?;
                 self.prefilling.push(Prefilling {
                     req,
                     timing,
                     caches,
-                    carry,
+                    lease,
                     done: 0,
                     last_q: Vec::new(),
                 });
@@ -905,13 +987,13 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             let last = req.prompt.len() - 1;
             let next = crate::tensor::argmax(&pre.logits[last * vocab..(last + 1) * vocab]) as i32;
             let c = spec.pick_cache_variant(caches.max_slots() + 1);
-            let flat = caches.assemble(c)?;
+            let lease = self.pool.register(caches.assemble(c)?)?;
             let pos = req.prompt.len();
             self.active.push(Active {
                 req,
                 timing,
                 caches,
-                flat,
+                lease,
                 next,
                 pos,
                 generated: Vec::new(),
@@ -971,11 +1053,23 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             }
             let start = p.done;
             let c0 = std::time::Instant::now();
+            let mut pin = p.lease.pin()?;
             let pre = self.exec.prefill_chunk(
-                &mut p.carry,
+                &mut pin,
                 &p.req.prompt[start..start + take],
                 start,
             )?;
+            let (paged_in, bytes_in) = pin.recalled();
+            let (paged_out, bytes_out) = pin.evicted();
+            drop(pin);
+            if let Some(t) = &self.trace {
+                if paged_in > 0 {
+                    t.record(EventKind::PageIn, p.req.id, paged_in as u64, bytes_in);
+                }
+                if paged_out > 0 {
+                    t.record(EventKind::PageOut, p.req.id, paged_out as u64, bytes_out);
+                }
+            }
             for pos in start..start + take {
                 let q = self.exec.position_slice(&pre.qs, pos);
                 let k = self.exec.position_slice(&pre.ks, pos);
@@ -1005,12 +1099,12 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
                 let next =
                     crate::tensor::argmax(&pre.logits[last * vocab..(last + 1) * vocab]) as i32;
                 let c = spec.pick_cache_variant(p.caches.max_slots() + 1);
-                let flat = p.caches.assemble(c)?;
+                let lease = self.pool.register(p.caches.assemble(c)?)?;
                 self.active.push(Active {
                     req: p.req,
                     timing: p.timing,
                     caches: p.caches,
-                    flat,
+                    lease,
                     next,
                     pos: last + 1,
                     generated: Vec::new(),
@@ -1053,19 +1147,45 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             }
             seq.last_emit = Some(now);
         }
+        // Pin every active sequence's pages for the sweep — spilled
+        // pages are recalled here (batched reads per lease); under
+        // budget pressure the pool evicts other, unpinned sessions'
+        // cold pages to make room. Pins check back in when this vec
+        // drops at the end of the tick, before snapshots and probes.
+        let mut pins: Vec<PinnedPages> = Vec::with_capacity(active.len());
+        let (mut pages_in, mut bytes_in) = (0u64, 0u64);
+        let (mut pages_out, mut bytes_out) = (0u64, 0u64);
+        for seq in &active {
+            let pin = seq.lease.pin()?;
+            let (rp, rb) = pin.recalled();
+            let (ep, eb) = pin.evicted();
+            pages_in += rp as u64;
+            bytes_in += rb;
+            pages_out += ep as u64;
+            bytes_out += eb;
+            pins.push(pin);
+        }
+        if let Some(t) = &self.trace {
+            if pages_in > 0 {
+                t.record(EventKind::PageIn, 0, pages_in, bytes_in);
+            }
+            if pages_out > 0 {
+                t.record(EventKind::PageOut, 0, pages_out, bytes_out);
+            }
+        }
         let steps = if self.cfg.batched_decode {
-            self.decode_grouped(&active)?
+            self.decode_grouped(&active, &pins)?
         } else {
             let mut outs = Vec::with_capacity(active.len());
-            for seq in &active {
-                outs.push(self.exec.decode(seq.next, seq.pos, &seq.flat)?);
+            for (seq, pin) in active.iter().zip(&pins) {
+                outs.push(self.exec.decode(seq.next, seq.pos, pin)?);
             }
             outs
         };
         let decode_ns = dt0.map(|t| t.elapsed().as_nanos() as u64).unwrap_or(0);
         let mut progressed = 0;
         let mut still_active = Vec::with_capacity(active.len());
-        for (mut seq, step) in active.into_iter().zip(steps) {
+        for (i, (mut seq, step)) in active.into_iter().zip(steps).enumerate() {
             seq.caches.update(&step.q, &step.k, &step.v);
             seq.next = crate::tensor::argmax(&step.logits[..spec_vocab]) as i32;
             seq.last_q = step.q;
@@ -1102,8 +1222,9 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
                 });
             } else {
                 // Re-assemble caches for the next step (capacity upgrade
-                // only when the history outgrows the current buffer).
-                seq.caches.reassemble(self.exec.spec(), &mut seq.flat)?;
+                // only when the history outgrows the current buffer); the
+                // pool re-cuts the page grid at check-in if it grew.
+                seq.caches.reassemble(self.exec.spec(), &mut pins[i])?;
                 still_active.push(seq);
             }
         }
@@ -1115,25 +1236,27 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
     /// step shape (flat-cache capacity — what a lowered `decode_b*`
     /// artifact is specialized on) are grouped in first-seen order and
     /// each group goes through one [`StepExecutor::decode_batch`].
-    /// Returns one [`StepOutput`] per active sequence, in order.
-    fn decode_grouped(&self, active: &[Active]) -> Result<Vec<StepOutput>> {
+    /// `pins` holds each sequence's pinned pages for the sweep, index-
+    /// parallel with `active`. Returns one [`StepOutput`] per active
+    /// sequence, in order.
+    fn decode_grouped(&self, active: &[Active], pins: &[PinnedPages]) -> Result<Vec<StepOutput>> {
         let mut caps: Vec<usize> = Vec::new();
-        for seq in active {
-            if !caps.contains(&seq.flat.capacity) {
-                caps.push(seq.flat.capacity);
+        for pin in pins {
+            if !caps.contains(&pin.capacity) {
+                caps.push(pin.capacity);
             }
         }
         let mut outputs: Vec<Option<StepOutput>> = Vec::with_capacity(active.len());
         outputs.resize_with(active.len(), || None);
         for cap in caps {
             let idx: Vec<usize> =
-                (0..active.len()).filter(|&i| active[i].flat.capacity == cap).collect();
+                (0..active.len()).filter(|&i| pins[i].capacity == cap).collect();
             let batch: Vec<DecodeStep<'_>> = idx
                 .iter()
                 .map(|&i| DecodeStep {
                     token: active[i].next,
                     pos: active[i].pos,
-                    flat: &active[i].flat,
+                    flat: &pins[i],
                 })
                 .collect();
             let outs = self.exec.decode_batch(&batch)?;

@@ -16,8 +16,10 @@
 
 use super::{Request, RequestClass};
 use crate::io::Checkpoint;
+use crate::kvcache::{LeaseImage, PageImage};
 use crate::model::{caches::FlatCaches, ModelSpec, SequenceCaches};
 use anyhow::{bail, ensure, Result};
+use std::path::Path;
 use std::time::Duration;
 
 /// Snapshot wire-format version (bumped on layout changes).
@@ -27,7 +29,13 @@ use std::time::Duration;
 ///   mid-prefill marker; mid-prefill snapshots additionally carry the
 ///   raw K/V prefix as `prefill/keys` + `prefill/values`. v1 bytes
 ///   still parse (class defaults to interactive, no prefill state).
-const SNAPSHOT_VERSION: u64 = 2;
+/// * v3 — mid-prefill snapshots may instead carry the K/V carry as a
+///   page-pool lease image (`paging/*`): resident pages byte-exact,
+///   spilled pages as `(path, offset, len)` manifest references into
+///   the pool's spill file — snapshotting never forces a recall.
+///   `restore_prefill_carry` reads both encodings; v1/v2 bytes still
+///   parse.
+const SNAPSHOT_VERSION: u64 = 3;
 
 /// A deterministic schedule of injected faults, consulted by
 /// [`super::Engine::tick`]. Default = no faults. Tick numbers count the
@@ -125,6 +133,55 @@ impl SessionSnapshot {
         snap
     }
 
+    /// Freeze a mid-prefill sequence whose K/V carry lives in the KV
+    /// page pool, from its [`LeaseImage`] (see
+    /// [`crate::kvcache::PageLease::image`]). Resident pages are
+    /// embedded byte-exactly; spilled pages are recorded as manifest
+    /// references into the pool's spill file, so snapshotting a paged
+    /// session never forces a recall. Restore with
+    /// [`Self::restore_prefill_carry`], which reassembles the carry
+    /// bit-identically (reading spilled ranges back from disk) — the
+    /// v3 counterpart of [`Self::capture_prefill`].
+    pub fn capture_prefill_paged(
+        req: &Request,
+        done: usize,
+        caches: &SequenceCaches,
+        image: &LeaseImage,
+    ) -> SessionSnapshot {
+        let mut snap = Self::capture_inner(req, &[], 0, done, caches, Some(done));
+        snap.tensors.insert_u64s(
+            "paging/meta",
+            &[image.serialized_len, image.page_size, image.pages.len() as u64],
+        );
+        for (i, page) in image.pages.iter().enumerate() {
+            match page {
+                PageImage::Resident(bytes) => {
+                    snap.tensors
+                        .insert_u64s(&format!("paging/p{i}/meta"), &[0, 0, bytes.len() as u64]);
+                    // Serialized arenas and page cuts are 4-byte
+                    // aligned, so the raw page bitcasts to f32 exactly
+                    // (the codec is to/from_le_bytes verbatim).
+                    let data: Vec<f32> = bytes
+                        .chunks_exact(4)
+                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                        .collect();
+                    snap.tensors.insert(&format!("paging/p{i}/data"), vec![data.len()], data);
+                }
+                PageImage::Spilled { path, offset, len } => {
+                    snap.tensors
+                        .insert_u64s(&format!("paging/p{i}/meta"), &[1, *offset, *len]);
+                    let p = path.to_string_lossy();
+                    snap.tensors.insert(
+                        &format!("paging/p{i}/path"),
+                        vec![p.len()],
+                        str_to_f32(&p),
+                    );
+                }
+            }
+        }
+        snap
+    }
+
     fn capture_inner(
         req: &Request,
         generated: &[i32],
@@ -182,7 +239,7 @@ impl SessionSnapshot {
         let meta = ck.require_u64s("session/meta")?;
         ensure!(
             meta.len() == 10 || meta.len() == 12,
-            "session/meta: expected 10 (v1) or 12 (v2) entries, got {}",
+            "session/meta: expected 10 (v1) or 12 (v2/v3) entries, got {}",
             meta.len()
         );
         ensure!(
@@ -234,14 +291,22 @@ impl SessionSnapshot {
     }
 
     /// Rebuild the chunked-prefill K/V carry of a mid-prefill snapshot
-    /// (see [`Self::capture_prefill`]): a [`FlatCaches::for_prefill`]
-    /// workspace sized for the full prompt, holding the first
-    /// `prefill_done` rows per head with unit weights — exactly the
-    /// state [`crate::coordinator::StepExecutor::prefill_chunk`] resumes
-    /// from. Errors on decode-phase snapshots and shape mismatches.
+    /// (see [`Self::capture_prefill`] /
+    /// [`Self::capture_prefill_paged`]): a
+    /// [`FlatCaches::for_prefill`] workspace sized for the full
+    /// prompt, holding the first `prefill_done` rows per head with
+    /// unit weights — exactly the state
+    /// [`crate::coordinator::StepExecutor::prefill_chunk`] resumes
+    /// from. v3 paged snapshots reassemble the carry from their page
+    /// images, reading spilled pages back from the recorded spill-file
+    /// ranges. Errors on decode-phase snapshots, shape mismatches, and
+    /// unreadable spill manifests.
     pub fn restore_prefill_carry(&self, spec: &ModelSpec) -> Result<FlatCaches> {
         let done =
             self.prefill_done.ok_or_else(|| anyhow::anyhow!("snapshot is not mid-prefill"))?;
+        if self.tensors.get("paging/meta").is_some() {
+            return self.restore_prefill_paged(spec, done);
+        }
         let mut carry = FlatCaches::for_prefill(spec, self.req.prompt.len());
         let keys = self.tensors.require("prefill/keys")?;
         let values = self.tensors.require("prefill/values")?;
@@ -260,6 +325,59 @@ impl SessionSnapshot {
             carry.values[dst..dst + done * dh].copy_from_slice(&values.data[src..src + done * dh]);
         }
         carry.set_unit_prefix(done);
+        Ok(carry)
+    }
+
+    /// Reassemble a v3 paged carry (see
+    /// [`Self::capture_prefill_paged`]): concatenate page bytes in
+    /// order — embedded resident pages verbatim, spilled pages read
+    /// back from their recorded spill-file ranges — and deserialize
+    /// the arena. Bit-identical to the captured carry.
+    fn restore_prefill_paged(&self, spec: &ModelSpec, done: usize) -> Result<FlatCaches> {
+        let meta = self.tensors.require_u64s("paging/meta")?;
+        ensure!(meta.len() == 3, "paging/meta: expected 3 entries, got {}", meta.len());
+        let total = meta[0] as usize;
+        let n_pages = meta[2] as usize;
+        let mut bytes = Vec::with_capacity(total);
+        for i in 0..n_pages {
+            let pm = self.tensors.require_u64s(&format!("paging/p{i}/meta"))?;
+            ensure!(pm.len() == 3, "paging/p{i}/meta: expected 3 entries, got {}", pm.len());
+            let len = pm[2] as usize;
+            match pm[0] {
+                0 => {
+                    let data = self.tensors.require(&format!("paging/p{i}/data"))?;
+                    ensure!(
+                        data.data.len() * 4 == len,
+                        "paging/p{i}/data: {} f32s for a {len}-byte page",
+                        data.data.len()
+                    );
+                    for x in &data.data {
+                        bytes.extend_from_slice(&x.to_le_bytes());
+                    }
+                }
+                1 => {
+                    let name = format!("paging/p{i}/path");
+                    let path = f32_to_str(&name, &self.tensors.require(&name)?.data)?;
+                    let got =
+                        crate::io::read_spilled_ranges(Path::new(&path), &[(pm[1], len)])?;
+                    bytes.extend_from_slice(&got[0]);
+                }
+                other => bail!("paging/p{i}/meta: unknown page kind {other}"),
+            }
+        }
+        ensure!(
+            bytes.len() == total,
+            "paged carry reassembled to {} bytes, expected {total}",
+            bytes.len()
+        );
+        let carry = FlatCaches::from_serialized(&bytes)?;
+        ensure!(
+            carry.num_heads() == spec.n_layers * spec.n_heads,
+            "paged carry head count {} does not match the model spec's {}",
+            carry.num_heads(),
+            spec.n_layers * spec.n_heads
+        );
+        ensure!(carry.capacity >= done, "paged carry smaller than its prefill progress");
         Ok(carry)
     }
 }
@@ -415,6 +533,62 @@ mod tests {
         // Decode-phase snapshots reject the carry accessor.
         let decode_snap = SessionSnapshot::capture(&req, &[1], 2, 7, &caches);
         assert!(decode_snap.restore_prefill_carry(spec).is_err());
+    }
+
+    #[test]
+    fn paged_mid_prefill_snapshot_roundtrips_with_spilled_pages() {
+        let exec = HostExecutor::small(11);
+        let spec = exec.spec();
+        let req = Request::exact(13, vec![1, 2, 3, 4, 5, 6], 4);
+        let mut caches = SequenceCaches::new(spec, &req.policy, req.budget, req.delta, 2).unwrap();
+        let mut carry = FlatCaches::for_prefill(spec, req.prompt.len());
+        let done = 4;
+        let pre = exec.prefill_chunk(&mut carry, &req.prompt[..done], 0).unwrap();
+        for pos in 0..done {
+            let q = exec.position_slice(&pre.qs, pos);
+            let k = exec.position_slice(&pre.ks, pos);
+            let v = exec.position_slice(&pre.vs, pos);
+            caches.update(&q, &k, &v);
+        }
+        // Cut the serialized carry into two pages by hand: the first
+        // embedded resident, the second spilled to a real file — the
+        // exact shapes a budgeted pool's lease image produces.
+        let blob = carry.to_serialized();
+        let cut = (blob.len() / 2 / 4) * 4;
+        assert!(cut > 0 && cut < blob.len());
+        let dir = std::env::temp_dir().join(format!("subgen_snap_paged_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let spill_path = dir.join("carry.spill");
+        let mut spill = crate::io::SpillFile::create(&spill_path).unwrap();
+        let ranges = spill.append_pages(&[&blob[cut..]]).unwrap();
+        let image = LeaseImage {
+            serialized_len: blob.len() as u64,
+            page_size: cut as u64,
+            pages: vec![
+                PageImage::Resident(blob[..cut].to_vec()),
+                PageImage::Spilled {
+                    path: spill_path.clone(),
+                    offset: ranges[0].0,
+                    len: ranges[0].1 as u64,
+                },
+            ],
+        };
+        let snap = SessionSnapshot::capture_prefill_paged(&req, done, &caches, &image);
+        let back = SessionSnapshot::from_bytes(&snap.to_bytes()).unwrap();
+        assert_eq!(back.prefill_done, Some(done));
+        assert_eq!(back.pos, done);
+        let restored = back.restore_prefill_carry(spec).unwrap();
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&restored.keys), bits(&carry.keys));
+        assert_eq!(bits(&restored.values), bits(&carry.values));
+        assert_eq!(bits(&restored.w), bits(&carry.w));
+        assert_eq!(bits(&restored.u), bits(&carry.u));
+        assert_eq!(restored.capacity, carry.capacity);
+        // With the spill file gone, restore is a typed error (the
+        // manifest points at a dead pool), not a panic.
+        drop(spill);
+        assert!(back.restore_prefill_carry(spec).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

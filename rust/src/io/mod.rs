@@ -1,4 +1,5 @@
-//! Binary checkpoint + CSV + artifact-manifest I/O.
+//! Binary checkpoint + CSV + artifact-manifest I/O, plus the aligned
+//! streaming spill store ([`SpillFile`]) behind the paged KV pool.
 //!
 //! The checkpoint format is a tiny self-describing container written by
 //! `python/compile/aot.py` and read here — named f32 tensors:
@@ -16,7 +17,9 @@
 mod checkpoint;
 mod csv;
 mod manifest;
+mod spill;
 
 pub use checkpoint::{Checkpoint, NamedTensor};
 pub use csv::CsvWriter;
 pub use manifest::Manifest;
+pub use spill::{read_spilled_ranges, SpillFile, SPILL_ALIGN};

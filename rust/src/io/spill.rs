@@ -1,0 +1,223 @@
+//! Aligned-buffer streaming spill IO for the paged KV pool.
+//!
+//! One [`SpillFile`] per [`crate::kvcache::PagePool`]: evicted pages
+//! are written behind with positioned writes into one append-only file
+//! (offsets allocated monotonically, writes padded to the IO alignment
+//! so the kernel never read-modify-writes a partial block), and
+//! recalled with batched positioned reads — adjacent ranges coalesce
+//! into one syscall, `read_ranges` style. Freed ranges are not reused;
+//! the file lives exactly as long as the pool and is unlinked on drop.
+
+use anyhow::{Context, Result};
+use std::fs::{File, OpenOptions};
+use std::os::unix::fs::FileExt;
+use std::path::{Path, PathBuf};
+
+/// Write/pad alignment for spilled pages. Offsets and write lengths are
+/// rounded up to this, so every positioned write starts and ends on an
+/// IO-friendly boundary regardless of the pool's page size.
+pub const SPILL_ALIGN: u64 = 4096;
+
+/// Round `n` up to the next [`SPILL_ALIGN`] boundary.
+fn align_up(n: u64) -> u64 {
+    n.div_ceil(SPILL_ALIGN) * SPILL_ALIGN
+}
+
+/// Append-only spill store with positioned, batched range reads.
+pub struct SpillFile {
+    file: File,
+    path: PathBuf,
+    /// Next aligned write offset.
+    end: u64,
+}
+
+impl SpillFile {
+    /// Create (truncate) the spill file at `path`.
+    pub fn create(path: &Path) -> Result<SpillFile> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating spill dir {}", dir.display()))?;
+            }
+        }
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(true)
+            .open(path)
+            .with_context(|| format!("creating spill file {}", path.display()))?;
+        Ok(SpillFile { file, path: path.to_path_buf(), end: 0 })
+    }
+
+    /// Path of the backing file (recorded in snapshot manifests so a
+    /// restored session can recall pages the dead worker spilled).
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Bytes allocated in the file so far (aligned high-water mark).
+    pub fn len(&self) -> u64 {
+        self.end
+    }
+
+    /// True before the first write.
+    pub fn is_empty(&self) -> bool {
+        self.end == 0
+    }
+
+    /// Write-behind a batch of evicted pages: all pages are packed into
+    /// one aligned staging buffer (each page starting on an aligned
+    /// offset) and flushed with a single positioned write. Returns each
+    /// page's `(offset, len)` recall handle, in input order.
+    pub fn append_pages(&mut self, pages: &[&[u8]]) -> Result<Vec<(u64, usize)>> {
+        if pages.is_empty() {
+            return Ok(Vec::new());
+        }
+        let base = self.end;
+        let mut handles = Vec::with_capacity(pages.len());
+        let mut staged: Vec<u8> = Vec::new();
+        for page in pages {
+            // Each page starts aligned inside the staging buffer too,
+            // so its absolute offset is aligned.
+            let at = align_up(staged.len() as u64) as usize;
+            staged.resize(at, 0);
+            handles.push((base + at as u64, page.len()));
+            staged.extend_from_slice(page);
+        }
+        let total = align_up(staged.len() as u64) as usize;
+        staged.resize(total, 0);
+        self.file
+            .write_all_at(&staged, base)
+            .with_context(|| format!("spilling {} page(s) to {}", pages.len(), self.path.display()))?;
+        self.end = base + total as u64;
+        Ok(handles)
+    }
+
+    /// Batched recall of `(offset, len)` ranges written by
+    /// [`Self::append_pages`], in input order. Ranges that sit next to
+    /// each other in the file are coalesced into one positioned read.
+    pub fn read_ranges(&self, ranges: &[(u64, usize)]) -> Result<Vec<Vec<u8>>> {
+        read_ranges_from(&self.file, &self.path, ranges)
+    }
+}
+
+impl Drop for SpillFile {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// [`SpillFile::read_ranges`] against a path alone — the snapshot
+/// restore path, where only the manifest's `(path, offset, len)`
+/// entries survive the worker that owned the pool.
+pub fn read_spilled_ranges(path: &Path, ranges: &[(u64, usize)]) -> Result<Vec<Vec<u8>>> {
+    let file =
+        File::open(path).with_context(|| format!("opening spill file {}", path.display()))?;
+    read_ranges_from(&file, path, ranges)
+}
+
+fn read_ranges_from(file: &File, path: &Path, ranges: &[(u64, usize)]) -> Result<Vec<Vec<u8>>> {
+    if ranges.is_empty() {
+        return Ok(Vec::new());
+    }
+    // Coalesce ranges that are adjacent-or-overlapping once aligned
+    // padding is accounted for, then issue one read per run.
+    let mut order: Vec<usize> = (0..ranges.len()).collect();
+    order.sort_by_key(|&i| ranges[i].0);
+    let mut out: Vec<Vec<u8>> = vec![Vec::new(); ranges.len()];
+    let mut run: Vec<usize> = Vec::new();
+    let mut run_end = 0u64;
+    let flush = |run: &[usize], out: &mut Vec<Vec<u8>>| -> Result<()> {
+        if run.is_empty() {
+            return Ok(());
+        }
+        let start = ranges[run[0]].0;
+        let end = run.iter().map(|&i| ranges[i].0 + ranges[i].1 as u64).max().unwrap();
+        let mut buf = vec![0u8; (end - start) as usize];
+        file.read_exact_at(&mut buf, start)
+            .with_context(|| format!("recalling {} byte(s) from {}", buf.len(), path.display()))?;
+        for &i in run {
+            let at = (ranges[i].0 - start) as usize;
+            out[i] = buf[at..at + ranges[i].1].to_vec();
+        }
+        Ok(())
+    };
+    for &i in &order {
+        let (off, len) = ranges[i];
+        if !run.is_empty() && off <= align_up(run_end) {
+            run.push(i);
+            run_end = run_end.max(off + len as u64);
+        } else {
+            flush(&run, &mut out)?;
+            run.clear();
+            run.push(i);
+            run_end = off + len as u64;
+        }
+    }
+    flush(&run, &mut out)?;
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("subgen_spill_test_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn pages_roundtrip_through_batched_write_and_read() {
+        let path = tmp("roundtrip");
+        let mut f = SpillFile::create(&path).unwrap();
+        let a: Vec<u8> = (0..5000u32).map(|x| (x % 251) as u8).collect();
+        let b: Vec<u8> = (0..64u32).map(|x| (x * 7 % 256) as u8).collect();
+        let c: Vec<u8> = vec![0xAB; 4096];
+        let handles = f.append_pages(&[&a, &b, &c]).unwrap();
+        assert_eq!(handles.len(), 3);
+        for (off, _) in &handles {
+            assert_eq!(off % SPILL_ALIGN, 0, "page offsets are aligned");
+        }
+        // Out-of-order, duplicated recall: results come back in input
+        // order regardless of file order.
+        let got = f
+            .read_ranges(&[handles[2], handles[0], handles[1], handles[0]])
+            .unwrap();
+        assert_eq!(got[0], c);
+        assert_eq!(got[1], a);
+        assert_eq!(got[2], b);
+        assert_eq!(got[3], a);
+        // Second batch appends past the aligned high-water mark.
+        let d = vec![7u8; 10];
+        let h2 = f.append_pages(&[&d]).unwrap();
+        assert!(h2[0].0 >= handles[2].0 + c.len() as u64);
+        assert_eq!(f.read_ranges(&[h2[0]]).unwrap()[0], d);
+    }
+
+    #[test]
+    fn path_based_recall_survives_the_writer() {
+        let path = tmp("pathrecall");
+        let page: Vec<u8> = (0..1000u32).map(|x| (x % 17) as u8).collect();
+        let handle;
+        {
+            let mut f = SpillFile::create(&path).unwrap();
+            handle = f.append_pages(&[&page]).unwrap()[0];
+            // Read through the path while the writer is alive (the
+            // chaos-restore shape: another thread owns the pool).
+            assert_eq!(read_spilled_ranges(&path, &[handle]).unwrap()[0], page);
+        }
+        // Dropping the pool's file unlinks it.
+        assert!(read_spilled_ranges(&path, &[handle]).is_err());
+    }
+
+    #[test]
+    fn empty_batches_are_noops() {
+        let path = tmp("empty");
+        let mut f = SpillFile::create(&path).unwrap();
+        assert!(f.append_pages(&[]).unwrap().is_empty());
+        assert!(f.read_ranges(&[]).unwrap().is_empty());
+        assert!(f.is_empty());
+        assert_eq!(f.len(), 0);
+    }
+}

@@ -127,14 +127,17 @@ impl CachePolicy for H2OCache {
 
     fn telemetry(&self, dim: usize) -> CacheTelemetry {
         let slots = self.packed_slots() as u64;
+        let bytes = slots * bytes_per_slot(dim) as u64;
         CacheTelemetry {
             slots,
-            bytes: slots * bytes_per_slot(dim) as u64,
+            bytes,
             admitted: self.n,
             evicted: self.n.saturating_sub(slots),
             clusters: 0,
             // The scored heavy-hitter set plays the reservoir role.
             reservoir: self.entries.len() as u64,
+            resident_bytes: bytes,
+            spilled_bytes: 0,
         }
     }
 

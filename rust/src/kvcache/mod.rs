@@ -24,6 +24,7 @@
 mod exact;
 mod h2o;
 mod packed;
+mod pagepool;
 mod sink;
 mod sliding;
 mod subgen_policy;
@@ -31,6 +32,7 @@ mod subgen_policy;
 pub use exact::ExactCache;
 pub use h2o::H2OCache;
 pub use packed::{attention_flat_into, PackedCache};
+pub use pagepool::{LeaseImage, PageImage, PageLease, PagePool, PinnedPages, PoolStats};
 pub use sink::SinkCache;
 pub use sliding::SlidingCache;
 pub use subgen_policy::{SubGenCache, SubGenCacheConfig};
@@ -64,6 +66,14 @@ pub struct CacheTelemetry {
     /// Sampling-reservoir occupancy — ℓ2 value samples for subgen,
     /// heavy hitters for h2o (0 for policies without a reservoir).
     pub reservoir: u64,
+    /// Bytes of retained state currently resident in RAM. For a bare
+    /// policy everything is resident (`== bytes`); once the arena lives
+    /// in a budgeted [`PagePool`] the pool's paging splits the total
+    /// into resident and spilled shares.
+    pub resident_bytes: u64,
+    /// Bytes of retained state currently spilled to disk (0 for bare
+    /// policies and unbudgeted pools).
+    pub spilled_bytes: u64,
 }
 
 impl CacheTelemetry {
@@ -76,6 +86,8 @@ impl CacheTelemetry {
         self.evicted += other.evicted;
         self.clusters += other.clusters;
         self.reservoir += other.reservoir;
+        self.resident_bytes += other.resident_bytes;
+        self.spilled_bytes += other.spilled_bytes;
     }
 }
 
@@ -130,13 +142,16 @@ pub trait CachePolicy: Send {
     fn telemetry(&self, dim: usize) -> CacheTelemetry {
         let slots = self.packed_slots() as u64;
         let admitted = self.len();
+        let bytes = slots * bytes_per_slot(dim) as u64;
         CacheTelemetry {
             slots,
-            bytes: slots * bytes_per_slot(dim) as u64,
+            bytes,
             admitted,
             evicted: admitted.saturating_sub(slots),
             clusters: 0,
             reservoir: 0,
+            resident_bytes: bytes,
+            spilled_bytes: 0,
         }
     }
 
@@ -369,6 +384,10 @@ mod tests {
             assert_eq!(t.slots as usize, p.packed_slots(), "{name}");
             assert_eq!(t.bytes, t.slots * bytes_per_slot(dim) as u64, "{name}");
             assert_eq!(t.admitted, t.evicted + t.slots, "{name}");
+            // Bare policies are fully resident; paging splits are the
+            // pool's job.
+            assert_eq!(t.resident_bytes, t.bytes, "{name}");
+            assert_eq!(t.spilled_bytes, 0, "{name}");
             if name == "subgen" {
                 assert!(t.clusters > 0, "subgen must report clusters");
                 assert!(t.reservoir > 0, "subgen must report reservoir occupancy");

@@ -1,0 +1,984 @@
+//! Global paged KV memory pool with S3-FIFO admission/eviction and
+//! disk spill/recall.
+//!
+//! Sessions no longer own their flat KV arenas: [`PagePool::register`]
+//! takes ownership of a [`FlatCaches`] and hands back a [`PageLease`].
+//! Every sweep that needs the arena pins it for the duration —
+//! [`PageLease::pin`] checks the arena out of the pool as a
+//! [`PinnedPages`] guard (recalling any spilled pages from disk), and
+//! dropping the guard checks it back in. Checked-out pages are
+//! unevictable; everything else is fair game.
+//!
+//! Eviction is **S3-FIFO** over fixed-size pages (the lease's
+//! serialized image cut every `page_size` bytes):
+//!
+//! * newly admitted pages enter a **small** FIFO sized ~10% of the
+//!   budget; pages re-admitted while their key is still in the ghost
+//!   queue go straight to **main** (a ghost hit);
+//! * under memory pressure the small queue evicts first once it is
+//!   past its share — a page touched more than once is promoted to
+//!   main, a cold page is spilled to disk and its key pushed onto the
+//!   bounded **ghost** queue;
+//! * main evicts with one reinsertion chance per accumulated access
+//!   (frequency capped at 3), the classic scan-resistant lazy
+//!   promotion.
+//!
+//! Spill IO is write-behind and batched ([`crate::io::SpillFile`]):
+//! each eviction wave serializes victims once and lands them with one
+//! aligned positioned write; recall on pin reads all of a lease's
+//! spilled ranges with one batched `read_ranges` sweep. With no budget
+//! configured the pool degenerates to today's resident layout — pin
+//! and check-in just move the arena in and out of a slab, no queues,
+//! no serialization, no IO.
+//!
+//! Paged ≡ unpaged is bit-identical: the serialized image round-trips
+//! every f32 bit pattern, so a decode under any eviction schedule
+//! produces exactly the tokens of the unpaged run (pinned by
+//! `tests/property_paging.rs`).
+
+use crate::io::SpillFile;
+use crate::model::FlatCaches;
+use anyhow::Result;
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+/// Maximum S3-FIFO access frequency a page accumulates (reinsertion
+/// chances in the main queue).
+const FREQ_CAP: u8 = 3;
+
+/// Distinguishes spill files of distinct pools in one process.
+static POOL_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// (lease id, page index) — the S3-FIFO cache key.
+type PageKey = (u64, u32);
+
+/// Which FIFO a page's live queue entry sits in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Queue {
+    Small,
+    Main,
+}
+
+/// Per-page S3-FIFO bookkeeping.
+struct PageMeta {
+    /// Accesses since admission, capped at [`FREQ_CAP`].
+    freq: u8,
+    /// The queue holding this page's live entry (`None`: spilled, or
+    /// never admitted — unbudgeted pools keep all pages unqueued).
+    queued: Option<Queue>,
+    /// Invalidates stale queue entries: an entry is live only while
+    /// its recorded stamp matches.
+    stamp: u32,
+    /// Recall handle of the spilled bytes (valid while the page is not
+    /// resident).
+    disk: Option<(u64, usize)>,
+}
+
+impl PageMeta {
+    fn fresh() -> PageMeta {
+        PageMeta { freq: 0, queued: None, stamp: 0, disk: None }
+    }
+}
+
+/// Where a lease's bytes currently live.
+enum Residency {
+    /// Checked out through a [`PinnedPages`] guard; `bytes` is the
+    /// pinned (serialized-equivalent) size for budget accounting.
+    Out { bytes: u64 },
+    /// Fully resident as a live arena — the fast path; pin is a move.
+    Arena(FlatCaches),
+    /// Cut into per-page buffers; `None` slots live on disk at their
+    /// meta's `disk` handle.
+    Paged(Vec<Option<Vec<u8>>>),
+}
+
+struct Entry {
+    state: Residency,
+    serialized_len: usize,
+    pages: Vec<PageMeta>,
+    /// The lease was dropped while pinned; check-in discards instead
+    /// of re-admitting.
+    dead: bool,
+}
+
+impl Entry {
+    fn page_len(&self, page_size: usize, i: usize) -> usize {
+        let start = i * page_size;
+        (self.serialized_len - start).min(page_size)
+    }
+}
+
+/// Point-in-time pool counters, exported as the
+/// `subgen_pages_{resident,spilled,recalled,ghost_hits}` Prometheus
+/// families and folded into `ClusterSnapshot`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Pages currently in RAM (gauge; pinned pages included).
+    pub resident_pages: u64,
+    /// Pages currently on disk (gauge).
+    pub spilled_pages: u64,
+    /// Bytes currently in RAM (gauge; pinned bytes included).
+    pub resident_bytes: u64,
+    /// Bytes currently on disk (gauge).
+    pub spilled_bytes: u64,
+    /// Bytes pinned by live [`PinnedPages`] guards (gauge).
+    pub pinned_bytes: u64,
+    /// Pages recalled from disk since pool creation (counter).
+    pub recalled_pages: u64,
+    /// Pages evicted to disk since pool creation (counter).
+    pub evicted_pages: u64,
+    /// Admissions that hit the ghost queue and went straight to the
+    /// main FIFO (counter).
+    pub ghost_hits: u64,
+}
+
+struct Inner {
+    entries: HashMap<u64, Entry>,
+    small: VecDeque<(PageKey, u32)>,
+    main: VecDeque<(PageKey, u32)>,
+    ghost: VecDeque<PageKey>,
+    ghost_set: HashSet<PageKey>,
+    spill: Option<SpillFile>,
+    /// Evictable resident bytes (unpinned pages in RAM).
+    unpinned_bytes: u64,
+    pinned_bytes: u64,
+    /// Resident bytes attributed to the small queue (10%-share check).
+    small_bytes: u64,
+    stats: PoolStats,
+    next_id: u64,
+}
+
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// The global fixed-size-page KV store. Shared across all engine
+/// workers of a cluster (`Arc<PagePool>` in `EngineConfig`); safe to
+/// pin/register from any thread.
+pub struct PagePool {
+    inner: Mutex<Inner>,
+    page_size: usize,
+    budget: Option<u64>,
+    spill_path: PathBuf,
+}
+
+impl std::fmt::Debug for PagePool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PagePool")
+            .field("page_size", &self.page_size)
+            .field("budget", &self.budget)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+impl PagePool {
+    /// A pool cutting lease images every `page_size` bytes (rounded up
+    /// to a multiple of 4 so pages stay f32-granular), spilling past
+    /// `budget` resident bytes into a file under `spill_dir` (the OS
+    /// temp dir when unset). `budget: None` disables paging entirely —
+    /// the pool is a plain resident slab with near-zero overhead.
+    pub fn new(page_size: usize, budget: Option<u64>, spill_dir: Option<PathBuf>) -> PagePool {
+        let page_size = page_size.max(64).div_ceil(4) * 4;
+        let seq = POOL_SEQ.fetch_add(1, Ordering::Relaxed);
+        let dir = spill_dir.unwrap_or_else(std::env::temp_dir);
+        let spill_path = dir.join(format!("subgen_pool_{}_{seq}.spill", std::process::id()));
+        PagePool {
+            inner: Mutex::new(Inner {
+                entries: HashMap::new(),
+                small: VecDeque::new(),
+                main: VecDeque::new(),
+                ghost: VecDeque::new(),
+                ghost_set: HashSet::new(),
+                spill: None,
+                unpinned_bytes: 0,
+                pinned_bytes: 0,
+                small_bytes: 0,
+                stats: PoolStats::default(),
+                next_id: 1,
+            }),
+            page_size,
+            budget,
+            spill_path,
+        }
+    }
+
+    /// An unbudgeted (fully resident) pool — today's layout.
+    pub fn unbounded() -> PagePool {
+        PagePool::new(64 * 1024, None, None)
+    }
+
+    /// The configured page size in bytes.
+    pub fn page_size(&self) -> usize {
+        self.page_size
+    }
+
+    /// The resident-byte budget (`None`: unbudgeted).
+    pub fn budget(&self) -> Option<u64> {
+        self.budget
+    }
+
+    /// True when pinned bytes alone exceed the budget: even a full
+    /// eviction sweep cannot make room, so the router sheds new work
+    /// with `SubmitError::PoolExhausted` instead of admitting it.
+    pub fn exhausted(&self) -> bool {
+        match self.budget {
+            Some(b) => lock_recover(&self.inner).pinned_bytes > b,
+            None => false,
+        }
+    }
+
+    /// Current counters (lock, copy, unlock — cheap enough to sample
+    /// per scrape and per engine tick).
+    pub fn stats(&self) -> PoolStats {
+        let inner = lock_recover(&self.inner);
+        let mut s = inner.stats;
+        s.resident_bytes = inner.unpinned_bytes + inner.pinned_bytes;
+        s.pinned_bytes = inner.pinned_bytes;
+        s
+    }
+
+    /// Take ownership of an assembled arena; the returned lease is the
+    /// session's only handle to it from here on. May evict (spill)
+    /// cold pages of other leases to fit the newcomer under budget.
+    pub fn register(self: &Arc<Self>, flat: FlatCaches) -> Result<PageLease> {
+        let serialized_len = flat.serialized_len();
+        let n_pages = serialized_len.div_ceil(self.page_size).max(1);
+        let mut inner = lock_recover(&self.inner);
+        let id = inner.next_id;
+        inner.next_id += 1;
+        let mut entry = Entry {
+            state: Residency::Arena(flat),
+            serialized_len,
+            pages: (0..n_pages).map(|_| PageMeta::fresh()).collect(),
+            dead: false,
+        };
+        inner.unpinned_bytes += serialized_len as u64;
+        inner.stats.resident_pages += n_pages as u64;
+        if self.budget.is_some() {
+            for i in 0..n_pages {
+                let len = entry.page_len(self.page_size, i);
+                admit_page(&mut inner, &mut entry.pages[i], (id, i as u32), len);
+            }
+        }
+        inner.entries.insert(id, entry);
+        self.evict_to_budget(&mut inner)?;
+        drop(inner);
+        Ok(PageLease { pool: Arc::clone(self), id })
+    }
+
+    /// Check the lease's arena out of the pool, recalling spilled pages
+    /// from disk. While the guard lives the pages are unevictable.
+    fn pin_inner(self: &Arc<Self>, id: u64) -> Result<PinnedPages> {
+        let mut inner = lock_recover(&self.inner);
+        let entry = inner
+            .entries
+            .get_mut(&id)
+            .ok_or_else(|| anyhow::anyhow!("lease {id} is gone from the pool"))?;
+        anyhow::ensure!(!matches!(entry.state, Residency::Out { .. }), "lease {id} already pinned");
+        for m in &mut entry.pages {
+            m.freq = (m.freq + 1).min(FREQ_CAP);
+        }
+        let serialized_len = entry.serialized_len as u64;
+        let (flat, recalled_pages, recalled_bytes) =
+            match std::mem::replace(&mut entry.state, Residency::Out { bytes: serialized_len }) {
+                Residency::Out { .. } => unreachable!("checked above"),
+                Residency::Arena(f) => (f, 0u32, 0u64),
+                Residency::Paged(slots) => {
+                    // Batched recall: one read_ranges sweep over every
+                    // spilled page of this lease.
+                    let mut spilled: Vec<(usize, (u64, usize))> = Vec::new();
+                    for (i, slot) in slots.iter().enumerate() {
+                        if slot.is_none() {
+                            let h = entry.pages[i]
+                                .disk
+                                .ok_or_else(|| anyhow::anyhow!("page {i} lost (no recall handle)"))?;
+                            spilled.push((i, h));
+                        }
+                    }
+                    let ranges: Vec<(u64, usize)> = spilled.iter().map(|&(_, h)| h).collect();
+                    let read = match &inner.spill {
+                        Some(f) => f.read_ranges(&ranges)?,
+                        None => {
+                            anyhow::ensure!(ranges.is_empty(), "spilled pages but no spill file");
+                            Vec::new()
+                        }
+                    };
+                    let entry = inner.entries.get_mut(&id).expect("entry still present");
+                    let mut bytes = Vec::with_capacity(entry.serialized_len);
+                    let mut recalled = read.into_iter();
+                    let (mut rp, mut rb) = (0u32, 0u64);
+                    for (i, slot) in slots.into_iter().enumerate() {
+                        match slot {
+                            Some(b) => bytes.extend_from_slice(&b),
+                            None => {
+                                let b = recalled.next().expect("one read per spilled page");
+                                rb += b.len() as u64;
+                                rp += 1;
+                                bytes.extend_from_slice(&b);
+                            }
+                        }
+                        entry.pages[i].disk = None;
+                    }
+                    (FlatCaches::from_serialized(&bytes)?, rp, rb)
+                }
+            };
+        inner.pinned_bytes += serialized_len;
+        inner.unpinned_bytes -= serialized_len - recalled_bytes;
+        inner.stats.recalled_pages += recalled_pages as u64;
+        inner.stats.spilled_pages -= recalled_pages as u64;
+        inner.stats.spilled_bytes -= recalled_bytes;
+        inner.stats.resident_pages += recalled_pages as u64;
+        let (evicted_pages, evicted_bytes) = {
+            let before = inner.stats.evicted_pages;
+            let bytes_before = inner.stats.spilled_bytes;
+            self.evict_to_budget(&mut inner)?;
+            (
+                (inner.stats.evicted_pages - before) as u32,
+                inner.stats.spilled_bytes.saturating_sub(bytes_before),
+            )
+        };
+        drop(inner);
+        Ok(PinnedPages {
+            pool: Arc::clone(self),
+            lease_id: id,
+            flat: Some(flat),
+            recalled_pages,
+            recalled_bytes,
+            evicted_pages,
+            evicted_bytes,
+        })
+    }
+
+    /// Return a pinned arena to the pool (guard drop). Never evicts —
+    /// budget enforcement (which can do IO and fail) happens only on
+    /// the pin/register paths, so dropping a guard is infallible.
+    fn check_in(&self, id: u64, flat: FlatCaches) {
+        let mut inner = lock_recover(&self.inner);
+        // Take the entry out wholesale — sidesteps split borrows of the
+        // guard while queues/counters and the entry are both mutated.
+        let Some(mut entry) = inner.entries.remove(&id) else { return };
+        let Residency::Out { bytes } = entry.state else {
+            inner.entries.insert(id, entry);
+            return;
+        };
+        inner.pinned_bytes -= bytes;
+        if entry.dead {
+            // Lease dropped while pinned: discard. Its queue entries go
+            // stale; un-count their small-queue share now.
+            inner.small_bytes -= small_queued_bytes(&entry, self.page_size);
+            inner.stats.resident_pages -= entry.pages.len() as u64;
+            return;
+        }
+        let new_len = flat.serialized_len();
+        let n_pages = new_len.div_ceil(self.page_size).max(1);
+        if new_len != entry.serialized_len || n_pages != entry.pages.len() {
+            // The arena grew (capacity upgrade mid-decode): re-cut the
+            // page grid. Old queue entries go stale (fresh stamps, and
+            // their small-queue share is un-counted here); leaked disk
+            // ranges die with the pool.
+            inner.small_bytes -= small_queued_bytes(&entry, self.page_size);
+            inner.stats.resident_pages =
+                inner.stats.resident_pages + n_pages as u64 - entry.pages.len() as u64;
+            entry.pages = (0..n_pages).map(|_| PageMeta::fresh()).collect();
+            entry.serialized_len = new_len;
+        }
+        entry.state = Residency::Arena(flat);
+        inner.unpinned_bytes += new_len as u64;
+        if self.budget.is_some() {
+            // Re-admit pages that lost their queue slot (recalled from
+            // disk, or the grid was re-cut); pages still queued keep
+            // their FIFO position — a pin is not a queue reset.
+            for i in 0..entry.pages.len() {
+                if entry.pages[i].queued.is_none() {
+                    let len = entry.page_len(self.page_size, i);
+                    admit_page(&mut inner, &mut entry.pages[i], (id, i as u32), len);
+                }
+            }
+        }
+        inner.entries.insert(id, entry);
+    }
+
+    /// Drop a lease: free resident bytes now, or flag a pinned entry so
+    /// its check-in discards. Spill-file ranges are never reclaimed
+    /// before the pool dies — a snapshot manifest written moments ago
+    /// must stay readable for chaos recovery.
+    fn release(&self, id: u64) {
+        let mut inner = lock_recover(&self.inner);
+        {
+            let Some(entry) = inner.entries.get_mut(&id) else { return };
+            if matches!(entry.state, Residency::Out { .. }) {
+                // Pinned: the guard's check-in does the actual cleanup.
+                entry.dead = true;
+                return;
+            }
+        }
+        let entry = inner.entries.remove(&id).expect("present above");
+        inner.small_bytes -= small_queued_bytes(&entry, self.page_size);
+        match &entry.state {
+            Residency::Out { .. } => unreachable!("handled above"),
+            Residency::Arena(_) => {
+                inner.unpinned_bytes -= entry.serialized_len as u64;
+                inner.stats.resident_pages -= entry.pages.len() as u64;
+            }
+            Residency::Paged(slots) => {
+                let mut res_pages = 0u64;
+                let mut res_bytes = 0u64;
+                let mut sp_pages = 0u64;
+                let mut sp_bytes = 0u64;
+                for (i, slot) in slots.iter().enumerate() {
+                    let len = entry.page_len(self.page_size, i) as u64;
+                    match slot {
+                        Some(_) => {
+                            res_pages += 1;
+                            res_bytes += len;
+                        }
+                        None => {
+                            sp_pages += 1;
+                            sp_bytes += len;
+                        }
+                    }
+                }
+                inner.unpinned_bytes -= res_bytes;
+                inner.stats.resident_pages -= res_pages;
+                inner.stats.spilled_pages -= sp_pages;
+                inner.stats.spilled_bytes -= sp_bytes;
+            }
+        }
+    }
+
+    /// Serialize a lease's current page layout for a session snapshot:
+    /// resident pages carry their bytes, spilled pages carry a
+    /// `(path, offset, len)` manifest the restore side reads directly.
+    fn lease_image(&self, id: u64) -> Result<LeaseImage> {
+        let inner = lock_recover(&self.inner);
+        let entry = inner
+            .entries
+            .get(&id)
+            .ok_or_else(|| anyhow::anyhow!("lease {id} is gone from the pool"))?;
+        let mut pages = Vec::with_capacity(entry.pages.len());
+        match &entry.state {
+            Residency::Out { .. } => {
+                anyhow::bail!("cannot image lease {id} while it is pinned")
+            }
+            Residency::Arena(f) => {
+                let bytes = f.to_serialized();
+                for i in 0..entry.pages.len() {
+                    let start = i * self.page_size;
+                    let end = (start + self.page_size).min(bytes.len());
+                    pages.push(PageImage::Resident(bytes[start..end].to_vec()));
+                }
+            }
+            Residency::Paged(slots) => {
+                for (i, slot) in slots.iter().enumerate() {
+                    match slot {
+                        Some(b) => pages.push(PageImage::Resident(b.clone())),
+                        None => {
+                            let (offset, len) = entry.pages[i]
+                                .disk
+                                .ok_or_else(|| anyhow::anyhow!("page {i} lost (no handle)"))?;
+                            pages.push(PageImage::Spilled {
+                                path: self.spill_path.clone(),
+                                offset,
+                                len: len as u64,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        Ok(LeaseImage {
+            serialized_len: entry.serialized_len as u64,
+            page_size: self.page_size as u64,
+            pages,
+        })
+    }
+
+    /// S3-FIFO eviction sweep: spill cold unpinned pages until resident
+    /// bytes fit the budget (or nothing evictable remains). Victims of
+    /// one sweep land in one batched write-behind.
+    fn evict_to_budget(&self, inner: &mut Inner) -> Result<()> {
+        let Some(budget) = self.budget else { return Ok(()) };
+        let page_size = self.page_size;
+        let mut victims: Vec<(PageKey, Vec<u8>)> = Vec::new();
+        let mut attempts = inner.small.len() + inner.main.len();
+        while inner.unpinned_bytes + inner.pinned_bytes > budget && attempts > 0 {
+            attempts -= 1;
+            let small_first = !inner.small.is_empty()
+                && (inner.small_bytes * 10 >= budget || inner.main.is_empty());
+            let (queue, (key, stamp)) = if small_first {
+                (Queue::Small, inner.small.pop_front().expect("non-empty"))
+            } else if let Some(item) = inner.main.pop_front() {
+                (Queue::Main, item)
+            } else if let Some(item) = inner.small.pop_front() {
+                (Queue::Small, item)
+            } else {
+                break;
+            };
+            // Decide on the popped page with the entry borrowed, then
+            // apply queue/counter mutations after the borrow ends.
+            enum Outcome {
+                /// Lazily-invalidated entry (or dead lease): drop it.
+                Stale,
+                /// Pinned, unevictable: recycle to the queue tail.
+                Repush,
+                /// Warm small page: move to main instead of spilling.
+                Promote { len: usize, stamp: u32 },
+                /// Main page spends one reinsertion chance.
+                Reinsert { stamp: u32 },
+                /// Cold victim: bytes taken for the write-behind batch.
+                Evict { len: usize, bytes: Vec<u8> },
+            }
+            let i = key.1 as usize;
+            let outcome = match inner.entries.get_mut(&key.0) {
+                None => Outcome::Stale,
+                Some(entry) => {
+                    if entry.dead
+                        || i >= entry.pages.len()
+                        || entry.pages[i].stamp != stamp
+                        || entry.pages[i].queued != Some(queue)
+                    {
+                        Outcome::Stale
+                    } else if matches!(entry.state, Residency::Out { .. }) {
+                        Outcome::Repush
+                    } else {
+                        let len = entry.page_len(page_size, i);
+                        match queue {
+                            Queue::Small if entry.pages[i].freq > 1 => {
+                                entry.pages[i].freq = 0;
+                                entry.pages[i].stamp = entry.pages[i].stamp.wrapping_add(1);
+                                entry.pages[i].queued = Some(Queue::Main);
+                                Outcome::Promote { len, stamp: entry.pages[i].stamp }
+                            }
+                            Queue::Main if entry.pages[i].freq > 0 => {
+                                entry.pages[i].freq -= 1;
+                                entry.pages[i].stamp = entry.pages[i].stamp.wrapping_add(1);
+                                Outcome::Reinsert { stamp: entry.pages[i].stamp }
+                            }
+                            _ => {
+                                ensure_paged(entry, page_size);
+                                let Residency::Paged(slots) = &mut entry.state else {
+                                    unreachable!("just paged")
+                                };
+                                match slots[i].take() {
+                                    None => Outcome::Stale,
+                                    Some(bytes) => {
+                                        entry.pages[i].queued = None;
+                                        entry.pages[i].freq = 0;
+                                        Outcome::Evict { len, bytes }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            };
+            match outcome {
+                Outcome::Stale => {}
+                Outcome::Repush => match queue {
+                    Queue::Small => inner.small.push_back((key, stamp)),
+                    Queue::Main => inner.main.push_back((key, stamp)),
+                },
+                Outcome::Promote { len, stamp } => {
+                    inner.small_bytes -= len as u64;
+                    inner.main.push_back((key, stamp));
+                }
+                Outcome::Reinsert { stamp } => inner.main.push_back((key, stamp)),
+                Outcome::Evict { len, bytes } => {
+                    if queue == Queue::Small {
+                        inner.small_bytes -= len as u64;
+                        // Only small-queue evictions feed the ghost
+                        // (per s3-fifo): a main eviction already had
+                        // its chances.
+                        ghost_insert(inner, key, budget, page_size);
+                    }
+                    inner.unpinned_bytes -= len as u64;
+                    inner.stats.resident_pages -= 1;
+                    inner.stats.spilled_pages += 1;
+                    inner.stats.spilled_bytes += len as u64;
+                    inner.stats.evicted_pages += 1;
+                    victims.push((key, bytes));
+                }
+            }
+        }
+        if !victims.is_empty() {
+            if inner.spill.is_none() {
+                inner.spill = Some(SpillFile::create(&self.spill_path)?);
+            }
+            let refs: Vec<&[u8]> = victims.iter().map(|(_, b)| b.as_slice()).collect();
+            let handles = inner.spill.as_mut().expect("just created").append_pages(&refs)?;
+            for ((key, _), handle) in victims.iter().zip(handles) {
+                if let Some(entry) = inner.entries.get_mut(&key.0) {
+                    entry.pages[key.1 as usize].disk = Some(handle);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Admit one page into the S3-FIFO structure (budgeted pools only):
+/// ghost hits go straight to main, everything else enters small.
+fn admit_page(inner: &mut Inner, meta: &mut PageMeta, key: PageKey, len: usize) {
+    meta.freq = 0;
+    meta.stamp = meta.stamp.wrapping_add(1);
+    if inner.ghost_set.remove(&key) {
+        inner.stats.ghost_hits += 1;
+        meta.queued = Some(Queue::Main);
+        inner.main.push_back((key, meta.stamp));
+    } else {
+        meta.queued = Some(Queue::Small);
+        inner.small.push_back((key, meta.stamp));
+        inner.small_bytes += len as u64;
+    }
+}
+
+/// Small-queue byte share of an entry's pages — un-counted when the
+/// entry's queue entries are about to go stale wholesale (lease death,
+/// page-grid re-cut).
+fn small_queued_bytes(entry: &Entry, page_size: usize) -> u64 {
+    let mut total = 0u64;
+    for (i, m) in entry.pages.iter().enumerate() {
+        if m.queued == Some(Queue::Small) {
+            total += entry.page_len(page_size, i) as u64;
+        }
+    }
+    total
+}
+
+/// Push an evicted-from-small key onto the bounded ghost queue.
+fn ghost_insert(inner: &mut Inner, key: PageKey, budget: u64, page_size: usize) {
+    let cap = ((budget / page_size as u64).max(8)) as usize;
+    inner.ghost.push_back(key);
+    inner.ghost_set.insert(key);
+    while inner.ghost_set.len() > cap {
+        match inner.ghost.pop_front() {
+            Some(k) => {
+                inner.ghost_set.remove(&k);
+            }
+            None => break,
+        }
+    }
+}
+
+/// Serialize-and-chop an entry's arena into per-page buffers (a pure
+/// representation change — resident bytes are unchanged).
+fn ensure_paged(entry: &mut Entry, page_size: usize) {
+    if let Residency::Arena(f) = &entry.state {
+        let bytes = f.to_serialized();
+        let mut slots = Vec::with_capacity(entry.pages.len());
+        for i in 0..entry.pages.len() {
+            let start = i * page_size;
+            let end = (start + page_size).min(bytes.len());
+            slots.push(Some(bytes[start..end].to_vec()));
+        }
+        entry.state = Residency::Paged(slots);
+    }
+}
+
+/// A session's handle to its pooled KV arena. Dropping the lease frees
+/// the pages (spill-file ranges persist until the pool itself dies, so
+/// snapshot manifests written before a crash stay readable).
+pub struct PageLease {
+    pool: Arc<PagePool>,
+    id: u64,
+}
+
+impl PageLease {
+    /// The pool-assigned lease id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Pin the arena for one sweep: checks it out of the pool,
+    /// recalling spilled pages from disk. The guard derefs to
+    /// [`FlatCaches`]; dropping it checks the arena back in.
+    pub fn pin(&self) -> Result<PinnedPages> {
+        self.pool.pin_inner(self.id)
+    }
+
+    /// Snapshot the lease's page layout (see [`LeaseImage`]). Fails
+    /// while pinned — the engine snapshots between sweeps.
+    pub fn image(&self) -> Result<LeaseImage> {
+        self.pool.lease_image(self.id)
+    }
+}
+
+impl Drop for PageLease {
+    fn drop(&mut self) {
+        self.pool.release(self.id);
+    }
+}
+
+/// RAII pin over a lease's arena for the duration of one sweep
+/// (prefill chunk, decode tick, host probe). Holds the arena checked
+/// out of the pool — untouchable by eviction — and checks it back in
+/// on drop. Records how much paging IO the pin itself caused.
+pub struct PinnedPages {
+    pool: Arc<PagePool>,
+    lease_id: u64,
+    flat: Option<FlatCaches>,
+    recalled_pages: u32,
+    recalled_bytes: u64,
+    evicted_pages: u32,
+    evicted_bytes: u64,
+}
+
+impl PinnedPages {
+    /// Pages and bytes recalled from disk to satisfy this pin.
+    pub fn recalled(&self) -> (u32, u64) {
+        (self.recalled_pages, self.recalled_bytes)
+    }
+
+    /// Pages and bytes of *other* leases spilled by this pin's budget
+    /// enforcement.
+    pub fn evicted(&self) -> (u32, u64) {
+        (self.evicted_pages, self.evicted_bytes)
+    }
+}
+
+impl std::ops::Deref for PinnedPages {
+    type Target = FlatCaches;
+
+    fn deref(&self) -> &FlatCaches {
+        self.flat.as_ref().expect("arena present until drop")
+    }
+}
+
+impl std::ops::DerefMut for PinnedPages {
+    fn deref_mut(&mut self) -> &mut FlatCaches {
+        self.flat.as_mut().expect("arena present until drop")
+    }
+}
+
+impl Drop for PinnedPages {
+    fn drop(&mut self) {
+        if let Some(flat) = self.flat.take() {
+            self.pool.check_in(self.lease_id, flat);
+        }
+    }
+}
+
+/// One page of a [`LeaseImage`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum PageImage {
+    /// The page's bytes, captured resident.
+    Resident(Vec<u8>),
+    /// A spilled page's on-disk manifest; the restore side reads the
+    /// range directly (the spill file outlives worker deaths — it dies
+    /// with the pool).
+    Spilled {
+        /// Spill file holding the bytes.
+        path: PathBuf,
+        /// Byte offset of the page in the file.
+        offset: u64,
+        /// Byte length of the page.
+        len: u64,
+    },
+}
+
+/// A lease's complete page layout at snapshot time: enough to rebuild
+/// the arena bit-identically on another worker (`SessionSnapshot` v3
+/// stores exactly this).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LeaseImage {
+    /// Total serialized arena length in bytes.
+    pub serialized_len: u64,
+    /// Page granularity the image was cut at.
+    pub page_size: u64,
+    /// Pages in index order.
+    pub pages: Vec<PageImage>,
+}
+
+impl LeaseImage {
+    /// Rebuild the arena: concatenate resident pages, read spilled
+    /// ranges from their manifests (batched per file), deserialize.
+    pub fn materialize(&self) -> Result<FlatCaches> {
+        let mut bytes = Vec::with_capacity(self.serialized_len as usize);
+        // Batch the disk reads per spill file.
+        let mut by_path: HashMap<&PathBuf, Vec<(usize, (u64, usize))>> = HashMap::new();
+        for (i, page) in self.pages.iter().enumerate() {
+            if let PageImage::Spilled { path, offset, len } = page {
+                by_path.entry(path).or_default().push((i, (*offset, *len as usize)));
+            }
+        }
+        let mut recalled: HashMap<usize, Vec<u8>> = HashMap::new();
+        for (path, entries) in &by_path {
+            let ranges: Vec<(u64, usize)> = entries.iter().map(|&(_, r)| r).collect();
+            let bufs = crate::io::read_spilled_ranges(path, &ranges)?;
+            for (&(i, _), buf) in entries.iter().zip(bufs) {
+                recalled.insert(i, buf);
+            }
+        }
+        for (i, page) in self.pages.iter().enumerate() {
+            match page {
+                PageImage::Resident(b) => bytes.extend_from_slice(b),
+                PageImage::Spilled { .. } => {
+                    bytes.extend_from_slice(&recalled[&i]);
+                }
+            }
+        }
+        anyhow::ensure!(
+            bytes.len() as u64 == self.serialized_len,
+            "lease image reassembled {} bytes, expected {}",
+            bytes.len(),
+            self.serialized_len
+        );
+        FlatCaches::from_serialized(&bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::io::Manifest;
+    use crate::model::ModelSpec;
+    use crate::rng::{Pcg64, Rng};
+    use std::path::Path;
+
+    fn spec() -> ModelSpec {
+        let cfg = Config::parse(
+            r#"
+[model]
+vocab = 16
+d_model = 64
+n_heads = 2
+n_layers = 2
+d_head = 8
+prefill_t = 64
+decode_batch = 0
+cache_variants = "64,32"
+"#,
+        )
+        .unwrap();
+        ModelSpec::from_manifest(&Manifest::from_config(Path::new("/tmp"), cfg)).unwrap()
+    }
+
+    fn arena(seed: u64, capacity: usize) -> FlatCaches {
+        let spec = spec();
+        let mut flat = FlatCaches::for_prefill(&spec, capacity);
+        let mut rng = Pcg64::seed_from_u64(seed);
+        for x in flat.keys.iter_mut().chain(flat.values.iter_mut()) {
+            *x = rng.gaussian32(0.0, 1.0);
+        }
+        flat.set_unit_prefix(capacity / 2);
+        flat
+    }
+
+    fn assert_same(a: &FlatCaches, b: &FlatCaches) {
+        assert_eq!(a.capacity, b.capacity);
+        assert_eq!(a.keys, b.keys);
+        assert_eq!(a.values, b.values);
+        assert_eq!(a.w, b.w);
+        assert_eq!(a.u, b.u);
+    }
+
+    #[test]
+    fn unbudgeted_pool_is_a_resident_slab() {
+        let pool = Arc::new(PagePool::unbounded());
+        let flat = arena(1, 16);
+        let want = arena(1, 16);
+        let lease = pool.register(flat).unwrap();
+        for _ in 0..3 {
+            let pin = lease.pin().unwrap();
+            assert_same(&pin, &want);
+            assert_eq!(pin.recalled(), (0, 0));
+            assert_eq!(pin.evicted(), (0, 0));
+        }
+        let s = pool.stats();
+        assert_eq!(s.spilled_pages, 0);
+        assert_eq!(s.recalled_pages, 0);
+        assert_eq!(s.ghost_hits, 0);
+        assert!(s.resident_bytes > 0);
+        drop(lease);
+        assert_eq!(pool.stats().resident_bytes, 0);
+        assert_eq!(pool.stats().resident_pages, 0);
+    }
+
+    #[test]
+    fn double_pin_is_rejected_and_image_fails_while_pinned() {
+        let pool = Arc::new(PagePool::unbounded());
+        let lease = pool.register(arena(2, 16)).unwrap();
+        let pin = lease.pin().unwrap();
+        assert!(lease.pin().is_err());
+        assert!(lease.image().is_err());
+        drop(pin);
+        assert!(lease.pin().is_ok());
+    }
+
+    #[test]
+    fn budget_pressure_spills_and_recalls_bit_identically() {
+        let spill_dir = std::env::temp_dir().join(format!("subgen_pool_t_{}", std::process::id()));
+        let one = arena(0, 16).serialized_len() as u64;
+        // Room for ~1.5 arenas: pinning each in turn forces the others
+        // out and back, with a small page so several pages per arena.
+        let pool = Arc::new(PagePool::new(256, Some(one * 3 / 2), Some(spill_dir)));
+        let leases: Vec<PageLease> =
+            (0..3).map(|s| pool.register(arena(s, 16)).unwrap()).collect();
+        for round in 0..4 {
+            for (s, lease) in leases.iter().enumerate() {
+                let pin = lease.pin().unwrap();
+                assert_same(&pin, &arena(s as u64, 16));
+                let _ = round;
+            }
+        }
+        let s = pool.stats();
+        assert!(s.evicted_pages > 0, "budget pressure must evict: {s:?}");
+        assert!(s.recalled_pages > 0, "pins must recall spilled pages: {s:?}");
+        assert!(s.ghost_hits > 0, "re-admitted pages must hit the ghost queue: {s:?}");
+        drop(leases);
+        let s = pool.stats();
+        assert_eq!(s.resident_pages, 0);
+        assert_eq!(s.spilled_pages, 0);
+    }
+
+    #[test]
+    fn lease_image_materializes_with_spilled_pages() {
+        let one = arena(0, 16).serialized_len() as u64;
+        let pool = Arc::new(PagePool::new(256, Some(one), None));
+        let a = pool.register(arena(7, 16)).unwrap();
+        let b = pool.register(arena(8, 16)).unwrap();
+        // Pin b to force a's pages out.
+        drop(b.pin().unwrap());
+        let image = a.image().unwrap();
+        assert!(
+            image.pages.iter().any(|p| matches!(p, PageImage::Spilled { .. })),
+            "expected at least one spilled page in the image"
+        );
+        let back = image.materialize().unwrap();
+        assert_same(&back, &arena(7, 16));
+        // And the lease itself still recalls correctly afterwards.
+        assert_same(&a.pin().unwrap(), &arena(7, 16));
+    }
+
+    #[test]
+    fn growing_arena_recuts_the_page_grid() {
+        let pool = Arc::new(PagePool::new(256, Some(1 << 20), None));
+        let lease = pool.register(arena(3, 16)).unwrap();
+        let small_pages = pool.stats().resident_pages;
+        {
+            let mut pin = lease.pin().unwrap();
+            *pin = arena(4, 32); // capacity upgrade mid-decode
+        }
+        assert!(pool.stats().resident_pages > small_pages);
+        assert_same(&lease.pin().unwrap(), &arena(4, 32));
+    }
+
+    #[test]
+    fn exhaustion_tracks_pinned_bytes_only() {
+        let one = arena(0, 16).serialized_len() as u64;
+        let pool = Arc::new(PagePool::new(256, Some(one), None));
+        let a = pool.register(arena(1, 16)).unwrap();
+        let b = pool.register(arena(2, 16)).unwrap();
+        assert!(!pool.exhausted(), "unpinned overflow spills instead of exhausting");
+        let pa = a.pin().unwrap();
+        let pb = b.pin().unwrap();
+        assert!(pool.exhausted(), "two pinned arenas exceed a one-arena budget");
+        drop(pa);
+        drop(pb);
+        assert!(!pool.exhausted());
+    }
+}

@@ -170,15 +170,18 @@ impl CachePolicy for SubGenCache {
 
     fn telemetry(&self, dim: usize) -> CacheTelemetry {
         let slots = self.packed_slots() as u64;
+        let bytes = slots * bytes_per_slot(dim) as u64;
         CacheTelemetry {
             slots,
-            bytes: slots * bytes_per_slot(dim) as u64,
+            bytes,
             admitted: self.n,
             // Graduated tokens live on only as cluster/reservoir
             // summaries — everything beyond the retained slots.
             evicted: self.n.saturating_sub(slots),
             clusters: self.sketch.num_clusters() as u64,
             reservoir: self.sketch.matrix_product().num_slots() as u64,
+            resident_bytes: bytes,
+            spilled_bytes: 0,
         }
     }
 

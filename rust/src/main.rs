@@ -73,6 +73,11 @@ fn main() -> Result<()> {
         .describe("prefill-chunk", Some("0"), "prefill token budget per tick, 0 = monolithic \
                    prefill (serve)")
         .describe("priority", Some("interactive"), "request class: interactive|batch (serve)")
+        .describe("kv-mem-budget", Some("0"), "paged KV pool budget in bytes, 0 = unbounded \
+                   (serve)")
+        .describe("page-size", Some("16384"), "paged KV pool page size in bytes (serve)")
+        .describe("spill-dir", None, "directory for cold-page spill files, default temp dir \
+                   (serve)")
         .describe("trace-out", Some("subgen_trace.json"),
                   "Chrome trace-event JSON output path (trace)")
         .describe("seed", Some("0"), "rng seed");
@@ -327,6 +332,12 @@ fn serve_cluster(args: &Args) -> Result<()> {
     let priority = args.get_or("priority", "interactive");
     let class = RequestClass::parse(&priority)
         .ok_or_else(|| anyhow::anyhow!("unknown --priority {priority:?} (interactive|batch)"))?;
+    let kv_mem_budget = match args.u64_or("kv-mem-budget", 0) {
+        0 => None,
+        b => Some(b),
+    };
+    let page_size = args.usize_or("page-size", 16 * 1024);
+    let spill_dir = args.get("spill-dir").map(PathBuf::from);
 
     // Every worker hosts the *same* model (same seed or the same
     // trained checkpoint): responses are identical no matter which
@@ -346,6 +357,9 @@ fn serve_cluster(args: &Args) -> Result<()> {
         .max_active(4)
         .snapshot_every(snapshot_every)
         .prefill_chunk(prefill_chunk)
+        .page_size(page_size)
+        .kv_mem_budget(kv_mem_budget)
+        .spill_dir(spill_dir)
         .build();
     let router = Router::spawn(workers, cfg, move |_w| match &ck {
         Some(ck) => HostExecutor::from_checkpoint(ck).expect("checkpoint validated above"),
@@ -446,6 +460,11 @@ fn serve_cluster(args: &Args) -> Result<()> {
         lat.p50,
         lat.p95,
         lat.p99
+    );
+    println!(
+        "cluster pages resident={} spilled={} recalled={} ghost_hits={} shed={}",
+        snap.pages_resident, snap.pages_spilled, snap.pages_recalled, snap.pages_ghost_hits,
+        snap.shed
     );
     Ok(())
 }

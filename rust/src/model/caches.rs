@@ -155,6 +155,78 @@ impl FlatCaches {
             &self.u[wu..wu + n],
         )
     }
+
+    /// Byte length of [`Self::to_serialized`]'s output: a 48-byte
+    /// header (six u64 LE: capacity and the five buffer lengths) plus
+    /// `keys`/`values`/`w`/`u` as f32 LE and `packed` as u64 LE. Always
+    /// a multiple of 4, so the page pool can cut it at any 4-byte
+    /// page boundary.
+    pub fn serialized_len(&self) -> usize {
+        48 + 4 * (self.keys.len() + self.values.len() + self.w.len() + self.u.len())
+            + 8 * self.packed.len()
+    }
+
+    /// Serialize the arena into the flat byte layout described by
+    /// [`Self::serialized_len`]. f32 values round-trip bit-exactly
+    /// (`to_le_bytes`/`from_le_bytes` preserve every bit pattern,
+    /// NaN payloads included), so spill → recall is bit-identical.
+    pub fn to_serialized(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.serialized_len());
+        for n in [
+            self.capacity as u64,
+            self.keys.len() as u64,
+            self.values.len() as u64,
+            self.w.len() as u64,
+            self.u.len() as u64,
+            self.packed.len() as u64,
+        ] {
+            out.extend_from_slice(&n.to_le_bytes());
+        }
+        for buf in [&self.keys, &self.values, &self.w, &self.u] {
+            for x in buf.iter() {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        for &p in &self.packed {
+            out.extend_from_slice(&(p as u64).to_le_bytes());
+        }
+        debug_assert_eq!(out.len(), self.serialized_len());
+        out
+    }
+
+    /// Rebuild an arena from [`Self::to_serialized`] bytes. The result
+    /// is bit-identical to the serialized instance (same capacity, same
+    /// buffers, same incremental-assembly bookkeeping).
+    pub fn from_serialized(bytes: &[u8]) -> Result<FlatCaches> {
+        anyhow::ensure!(bytes.len() >= 48, "flat-cache image truncated: {} bytes", bytes.len());
+        let mut head = [0u64; 6];
+        for (i, h) in head.iter_mut().enumerate() {
+            *h = u64::from_le_bytes(bytes[i * 8..(i + 1) * 8].try_into().unwrap());
+        }
+        let [capacity, nk, nv, nw, nu, np] = head.map(|x| x as usize);
+        let want = 48 + 4 * (nk + nv + nw + nu) + 8 * np;
+        anyhow::ensure!(bytes.len() == want, "flat-cache image: {} != {want}", bytes.len());
+        let mut at = 48;
+        let mut read_f32s = |n: usize| {
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                v.push(f32::from_le_bytes(bytes[at + i * 4..at + (i + 1) * 4].try_into().unwrap()));
+            }
+            at += n * 4;
+            v
+        };
+        let keys = read_f32s(nk);
+        let values = read_f32s(nv);
+        let w = read_f32s(nw);
+        let u = read_f32s(nu);
+        let mut packed = Vec::with_capacity(np);
+        for i in 0..np {
+            packed
+                .push(u64::from_le_bytes(bytes[at + i * 8..at + (i + 1) * 8].try_into().unwrap())
+                    as usize);
+        }
+        Ok(FlatCaches { capacity, keys, values, w, u, packed })
+    }
 }
 
 impl SequenceCaches {
@@ -621,6 +693,38 @@ cache_variants = "64,32"
             assert_eq!(live.max_slots(), restored.max_slots(), "{policy}");
             assert_eq!(live.memory_bytes(), restored.memory_bytes(), "{policy}");
         }
+    }
+
+    #[test]
+    fn serialization_roundtrips_bit_exactly() {
+        let spec = spec();
+        let lh_dh = spec.n_layers * spec.n_heads * spec.d_head;
+        for policy in crate::kvcache::POLICY_NAMES {
+            let mut rng = Pcg64::seed_from_u64(11);
+            let mut caches = SequenceCaches::new(&spec, policy, 12, 0.5, 1).unwrap();
+            for _ in 0..20 {
+                let q: Vec<f32> = (0..lh_dh).map(|_| rng.gaussian32(0.0, 0.6)).collect();
+                let k: Vec<f32> = (0..lh_dh).map(|_| rng.gaussian32(0.0, 0.6)).collect();
+                let v: Vec<f32> = (0..lh_dh).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+                caches.update(&q, &k, &v);
+            }
+            let flat = caches.assemble(32).unwrap();
+            let bytes = flat.to_serialized();
+            assert_eq!(bytes.len(), flat.serialized_len());
+            assert_eq!(bytes.len() % 4, 0, "pageable images must be 4-byte granular");
+            let back = FlatCaches::from_serialized(&bytes).unwrap();
+            assert_eq!(back.capacity, flat.capacity, "{policy}");
+            assert_eq!(back.keys, flat.keys, "{policy}");
+            assert_eq!(back.values, flat.values, "{policy}");
+            assert_eq!(back.w, flat.w, "{policy}");
+            assert_eq!(back.u, flat.u, "{policy}");
+            assert_eq!(back.packed, flat.packed, "{policy}");
+        }
+        // Truncated / length-mismatched images are clean errors.
+        let flat = FlatCaches::for_prefill(&spec, 8);
+        let bytes = flat.to_serialized();
+        assert!(FlatCaches::from_serialized(&bytes[..40]).is_err());
+        assert!(FlatCaches::from_serialized(&bytes[..bytes.len() - 4]).is_err());
     }
 
     #[test]

@@ -39,6 +39,15 @@
 //! whole group. Results are bit-identical to per-sequence
 //! [`HostExecutor::decode`] calls (same kernels, same accumulation
 //! order), which the integration tests pin.
+//!
+//! **Paged KV memory.** The executor never sees the page machinery:
+//! the engine pins each sequence's [`crate::kvcache::PageLease`] for
+//! the duration of a sweep and the resulting
+//! [`crate::kvcache::PinnedPages`] guard derefs to the same
+//! `FlatCaches` the executor has always borrowed. Spill and recall
+//! happen entirely at pin/check-in boundaries, so decode here is
+//! bit-identical whether the pool is unbounded or paging under a
+//! `--kv-mem-budget`.
 
 use super::spec::FF_MULT;
 use super::{DecodeStep, FlatCaches, ModelSpec, PrefillOutput, StepOutput};

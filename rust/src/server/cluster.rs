@@ -46,6 +46,7 @@ use super::{
     StreamEvent, SubmitError, SubmitTarget,
 };
 use crate::coordinator::{EngineConfig, EngineStats, FaultPlan, Request, Response, StepExecutor};
+use crate::kvcache::PagePool;
 use crate::metrics::HistogramSnapshot;
 use crate::rng::SplitMix64;
 use crate::trace::{chrome_trace, EventKind, FlightRecorder};
@@ -177,6 +178,19 @@ pub struct RouterConfig {
     /// trace-event JSON) before swapping in the replacement. Paths are
     /// listed by [`ClusterMetrics::trace_dumps`].
     pub trace_dump_dir: Option<PathBuf>,
+    /// Page size of the cluster-shared KV [`PagePool`]; `None` uses
+    /// [`EngineConfig::page_size`]. Ignored when the engine config
+    /// already carries a pool.
+    pub page_size: Option<usize>,
+    /// Resident-byte budget of the cluster-shared KV pool, pooled
+    /// across all workers; `None` falls back to
+    /// [`EngineConfig::kv_mem_budget`] (itself `None` = unbudgeted).
+    /// Ignored when the engine config already carries a pool.
+    pub kv_mem_budget: Option<u64>,
+    /// Spill directory of the cluster-shared KV pool; `None` falls
+    /// back to [`EngineConfig::spill_dir`], then the OS temp dir.
+    /// Ignored when the engine config already carries a pool.
+    pub spill_dir: Option<PathBuf>,
 }
 
 impl Default for RouterConfig {
@@ -190,6 +204,9 @@ impl Default for RouterConfig {
             shed_watermark: None,
             fault_plans: Vec::new(),
             trace_dump_dir: None,
+            page_size: None,
+            kv_mem_budget: None,
+            spill_dir: None,
         }
     }
 }
@@ -258,6 +275,24 @@ impl RouterConfigBuilder {
         self
     }
 
+    /// See [`RouterConfig::page_size`].
+    pub fn page_size(mut self, v: Option<usize>) -> Self {
+        self.cfg.page_size = v;
+        self
+    }
+
+    /// See [`RouterConfig::kv_mem_budget`].
+    pub fn kv_mem_budget(mut self, v: Option<u64>) -> Self {
+        self.cfg.kv_mem_budget = v;
+        self
+    }
+
+    /// See [`RouterConfig::spill_dir`].
+    pub fn spill_dir(mut self, v: Option<PathBuf>) -> Self {
+        self.cfg.spill_dir = v;
+        self
+    }
+
     /// Finish building.
     pub fn build(self) -> RouterConfig {
         self.cfg
@@ -284,6 +319,8 @@ struct WorkerMetrics {
 pub struct ClusterMetrics {
     workers: Vec<WorkerMetrics>,
     started: Instant,
+    /// The cluster-shared KV page pool (see [`RouterConfig::kv_mem_budget`]).
+    pool: Arc<PagePool>,
     /// Submissions shed at the watermark (router-level, pre-dispatch).
     shed: AtomicU64,
     /// Sessions re-admitted after a worker death/hang.
@@ -327,6 +364,12 @@ impl ClusterMetrics {
     /// Submissions shed at the overload watermark.
     pub fn shed(&self) -> u64 {
         self.shed.load(Ordering::Relaxed)
+    }
+
+    /// The cluster-shared KV page pool — read [`PagePool::stats`] live
+    /// while the cluster serves.
+    pub fn pool(&self) -> &Arc<PagePool> {
+        &self.pool
     }
 
     /// Sessions re-admitted (snapshot resume or re-dispatch) after a
@@ -397,6 +440,7 @@ impl ClusterMetrics {
             workers.push(stat);
         }
         let uptime = self.started.elapsed();
+        let pool = self.pool.stats();
         ClusterSnapshot {
             workers,
             dispatched,
@@ -421,6 +465,10 @@ impl ClusterMetrics {
             cache_reservoir: merged.cache_reservoir.get(),
             cache_admitted_rows: merged.cache_admitted_rows.get(),
             cache_evicted_rows: merged.cache_evicted_rows.get(),
+            pages_resident: pool.resident_pages,
+            pages_spilled: pool.spilled_pages,
+            pages_recalled: pool.recalled_pages,
+            pages_ghost_hits: pool.ghost_hits,
             latency: merged.latency.snapshot(),
             tick_latency: merged.tick_latency.snapshot(),
             ttft_interactive: merged.ttft_interactive.snapshot(),
@@ -569,6 +617,15 @@ pub struct ClusterSnapshot {
     pub cache_admitted_rows: u64,
     /// Σ KV rows evicted by resident sequences (gauge).
     pub cache_evicted_rows: u64,
+    /// Pages resident in the cluster-shared KV pool (gauge).
+    pub pages_resident: u64,
+    /// Pages currently spilled to the pool's spill file (gauge).
+    pub pages_spilled: u64,
+    /// Pages recalled from disk since spawn (counter).
+    pub pages_recalled: u64,
+    /// S3-FIFO ghost-queue hits (evicted-then-readmitted pages —
+    /// counter; a high rate means the budget thrashes the working set).
+    pub pages_ghost_hits: u64,
     /// Merged end-to-end latency distribution.
     pub latency: HistogramSnapshot,
     /// Merged per-tick latency distribution.
@@ -658,6 +715,10 @@ impl ClusterSnapshot {
             cache_reservoir: stat.cache_reservoir,
             cache_admitted_rows: stat.cache_admitted_rows,
             cache_evicted_rows: stat.cache_evicted_rows,
+            pages_resident: 0,
+            pages_spilled: 0,
+            pages_recalled: 0,
+            pages_ghost_hits: 0,
             latency: stat.latency.clone(),
             tick_latency: stat.tick_latency.clone(),
             ttft_interactive: stat.ttft_interactive.clone(),
@@ -787,6 +848,22 @@ impl Router {
         F: ExecutorFactory<E> + 'static,
     {
         anyhow::ensure!(workers >= 1, "router needs at least one worker");
+        // One KV page pool for the whole cluster: every worker's engine
+        // registers into it, so the memory budget is pooled — a busy
+        // worker spills idle workers' cold pages instead of owning a
+        // fixed slice. Resolved *before* the worker loop and stored
+        // into the engine config, so supervisor respawns (which clone
+        // this config) keep pointing at the same pool and a restarted
+        // worker recalls the pages its predecessor spilled.
+        let mut cfg = cfg;
+        let pool = cfg.pool.clone().unwrap_or_else(|| {
+            Arc::new(PagePool::new(
+                rcfg.page_size.unwrap_or(cfg.page_size),
+                rcfg.kv_mem_budget.or(cfg.kv_mem_budget),
+                rcfg.spill_dir.clone().or_else(|| cfg.spill_dir.clone()),
+            ))
+        });
+        cfg.pool = Some(Arc::clone(&pool));
         let factory = Arc::new(factory);
         let mut slots = Vec::with_capacity(workers);
         let mut wm = Vec::with_capacity(workers);
@@ -831,6 +908,7 @@ impl Router {
         let metrics = Arc::new(ClusterMetrics {
             workers: wm,
             started: Instant::now(),
+            pool,
             shed: AtomicU64::new(0),
             recovered_sessions: AtomicU64::new(0),
             trace_dumps: Mutex::new(Vec::new()),
@@ -986,6 +1064,22 @@ impl Router {
                 );
             }
             return Err(SubmitError::Overloaded);
+        }
+        if self.metrics.pool.exhausted() {
+            // The pinned working set alone is past the KV memory
+            // budget: spilling cold pages cannot make room, so admitting
+            // more sequences would only deepen the overcommit.
+            self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+            if let Some(rec) = self.metrics.workers[0].recorder.as_deref() {
+                let stats = self.metrics.pool.stats();
+                rec.record(
+                    EventKind::Overloaded,
+                    req.session_id.unwrap_or(req.id),
+                    stats.pinned_bytes,
+                    self.metrics.pool.budget().unwrap_or(0),
+                );
+            }
+            return Err(SubmitError::PoolExhausted);
         }
         let w = self.route(&req);
         let id = req.id;
@@ -1505,6 +1599,56 @@ mod tests {
         let snap = router.shutdown().unwrap();
         assert_eq!(snap.shed, 1);
         assert_eq!(snap.dispatched, 0);
+    }
+
+    #[test]
+    fn pool_exhaustion_sheds_with_typed_error() {
+        let rcfg =
+            RouterConfig { kv_mem_budget: Some(256), page_size: Some(64), ..Default::default() };
+        let router =
+            Router::spawn_with(2, EngineConfig::default(), rcfg, |_w| MockExecutor::small())
+                .unwrap();
+        let pool = Arc::clone(router.metrics().pool());
+        assert_eq!(pool.budget(), Some(256));
+        // Pin an arena bigger than the whole budget: the pinned working
+        // set alone exceeds it, so dispatch sheds with the typed error.
+        let exec = MockExecutor::small();
+        let arena = crate::model::caches::FlatCaches::for_prefill(exec.spec(), 256);
+        let lease = pool.register(arena).unwrap();
+        let pin = lease.pin().unwrap();
+        assert!(pool.exhausted());
+        let err = router.submit_blocking(Request::exact(1, vec![3], 2)).unwrap_err();
+        assert_eq!(err, SubmitError::PoolExhausted);
+        assert_eq!(router.metrics().shed(), 1);
+        // Unpinning clears the exhaustion; the same request then serves.
+        drop(pin);
+        drop(lease);
+        assert!(!pool.exhausted());
+        let resp = router.submit_blocking(Request::exact(2, vec![3], 2)).unwrap();
+        assert_eq!(resp.tokens, vec![4, 5]);
+        let snap = router.shutdown().unwrap();
+        assert_eq!(snap.shed, 1);
+        assert_eq!(snap.completed, 1);
+    }
+
+    #[test]
+    fn budgeted_cluster_pages_and_serves_the_same_tokens() {
+        // A KV budget far below one arena forces spill/recall on every
+        // sweep; the served token streams must not change, and the
+        // snapshot must report the paging traffic.
+        let rcfg =
+            RouterConfig { kv_mem_budget: Some(64), page_size: Some(64), ..Default::default() };
+        let router =
+            Router::spawn_with(2, EngineConfig::default(), rcfg, |_w| MockExecutor::small())
+                .unwrap();
+        for id in 0..6 {
+            let resp = router.submit_blocking(Request::exact(id, vec![3], 4)).unwrap();
+            assert_eq!(resp.tokens, vec![4, 5, 6, 7]);
+        }
+        let snap = router.shutdown().unwrap();
+        assert_eq!(snap.completed, 6);
+        assert!(snap.pages_recalled > 0, "budget pressure never recalled a page");
+        assert_eq!(snap.pages_resident, 0, "retired sessions left pages resident");
     }
 
     #[test]

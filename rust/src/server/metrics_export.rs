@@ -103,6 +103,30 @@ pub fn prometheus_text(snap: &ClusterSnapshot) -> String {
         let _ = writeln!(s, "# TYPE subgen_{stem} counter");
         let _ = writeln!(s, "subgen_{stem} {v}");
     }
+    // Page-pool families: the KV page pool is shared across every
+    // worker in the cluster, so these are pool-level series with no
+    // per-worker breakdown. Resident/spilled are point-in-time gauges
+    // from PoolStats; recalled/ghost-hits are monotonic counters.
+    for (stem, kind, help, v) in [
+        ("pages_resident", "gauge", "KV pages resident in the shared page pool.", snap.pages_resident),
+        ("pages_spilled", "gauge", "KV pages spilled to disk by the shared page pool.", snap.pages_spilled),
+        (
+            "pages_recalled_total",
+            "counter",
+            "KV pages recalled from disk into the shared page pool.",
+            snap.pages_recalled,
+        ),
+        (
+            "pages_ghost_hits_total",
+            "counter",
+            "S3-FIFO ghost-queue hits promoting pages to the main queue.",
+            snap.pages_ghost_hits,
+        ),
+    ] {
+        let _ = writeln!(s, "# HELP subgen_{stem} {help}");
+        let _ = writeln!(s, "# TYPE subgen_{stem} {kind}");
+        let _ = writeln!(s, "subgen_{stem} {v}");
+    }
     let gauges: [(&str, &str, fn(&super::WorkerStat) -> u64, u64); 7] = [
         ("queue_depth", "Requests queued for admission.", |w| w.queued, snap.queued),
         ("active_sequences", "Sequences actively decoding.", |w| w.active, snap.active),
@@ -368,6 +392,14 @@ mod tests {
         assert!(text.contains("\nsubgen_prefill_chunks_total 0"), "{text}");
         assert!(text.contains("\nsubgen_prefill_chunk_tokens_total 0"), "{text}");
         assert!(text.contains("\nsubgen_prefill_preempted_total 0"), "{text}");
+        // Page-pool families are pool-level (the pool is shared across
+        // workers) and present even when paging is off, so the CI
+        // memory-pressure smoke can grep them unconditionally.
+        assert!(text.contains("\n# TYPE subgen_pages_resident gauge"), "{text}");
+        assert!(text.contains("\nsubgen_pages_spilled 0"), "{text}");
+        assert!(text.contains("\nsubgen_pages_recalled_total 0"), "{text}");
+        assert!(text.contains("\nsubgen_pages_ghost_hits_total 0"), "{text}");
+        assert!(!text.contains("subgen_pages_resident{worker"), "{text}");
         // Per-class SLO summaries: 4 interactive requests completed, so
         // the interactive TTFT count is 4 and batch stays 0.
         assert!(

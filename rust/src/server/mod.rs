@@ -105,6 +105,11 @@ pub enum SubmitError {
     /// The cluster shed the request before dispatch: aggregate
     /// outstanding work is past the router's shed watermark.
     Overloaded,
+    /// The cluster shed the request before dispatch: the shared KV
+    /// page pool's pinned working set alone exceeds its memory budget
+    /// (see [`crate::kvcache::PagePool::exhausted`]), so admitting
+    /// more sequences could not be paid for by spilling cold pages.
+    PoolExhausted,
 }
 
 impl std::fmt::Display for SubmitError {
@@ -114,6 +119,9 @@ impl std::fmt::Display for SubmitError {
             SubmitError::EngineGone => write!(f, "engine loop terminated"),
             SubmitError::Expired => write!(f, "request dropped past its deadline"),
             SubmitError::Overloaded => write!(f, "cluster shed the request (over watermark)"),
+            SubmitError::PoolExhausted => {
+                write!(f, "cluster shed the request (kv page pool exhausted)")
+            }
         }
     }
 }

@@ -39,6 +39,8 @@
 //! | [`EventKind::Overloaded`]     | aggregate outstanding work   | shed watermark                      |
 //! | [`EventKind::CacheTelemetry`] | cache bytes                  | clusters (hi 32) \| reservoir (lo)  |
 //! | [`EventKind::ProbeError`]     | layer (hi 32) \| head (lo)   | `f64::to_bits` of the measured error|
+//! | [`EventKind::PageIn`]         | pages recalled from disk     | bytes recalled                      |
+//! | [`EventKind::PageOut`]        | pages spilled to disk        | bytes spilled                       |
 //!
 //! `DecodeTick` and `CacheTelemetry` are *per-tick* classes and honor
 //! the sampling rate ([`FlightRecorder::sample_every`]); lifecycle
@@ -88,6 +90,12 @@ pub enum EventKind {
     /// Measured estimator error for one (layer, head) from the
     /// exact-attention host probe.
     ProbeError = 10,
+    /// Spilled KV pages were recalled from disk to satisfy a pin
+    /// (payload: pages, bytes).
+    PageIn = 11,
+    /// Cold KV pages were evicted from the pool and spilled to disk
+    /// (payload: pages, bytes).
+    PageOut = 12,
 }
 
 impl EventKind {
@@ -106,6 +114,8 @@ impl EventKind {
             EventKind::Overloaded => "overloaded",
             EventKind::CacheTelemetry => "cache_telemetry",
             EventKind::ProbeError => "probe_error",
+            EventKind::PageIn => "page_in",
+            EventKind::PageOut => "page_out",
         }
     }
 
@@ -122,6 +132,8 @@ impl EventKind {
             8 => EventKind::Overloaded,
             9 => EventKind::CacheTelemetry,
             10 => EventKind::ProbeError,
+            11 => EventKind::PageIn,
+            12 => EventKind::PageOut,
             _ => return None,
         })
     }
@@ -409,7 +421,13 @@ pub fn request_summaries(events: &[TraceEvent]) -> Vec<RequestSummary> {
     let mut by_session: std::collections::BTreeMap<u64, RequestSummary> =
         std::collections::BTreeMap::new();
     for e in events {
-        if matches!(e.kind, EventKind::CacheTelemetry | EventKind::ProbeError) {
+        if matches!(
+            e.kind,
+            EventKind::CacheTelemetry
+                | EventKind::ProbeError
+                | EventKind::PageIn
+                | EventKind::PageOut
+        ) {
             continue;
         }
         if e.session == 0 && e.kind == EventKind::DecodeTick {

@@ -1,0 +1,244 @@
+//! Property tests (proptest_lite) for the paged KV pool's tentpole
+//! invariant: **any** eviction/spill/recall schedule — driven by random
+//! page sizes and memory budgets from heavy-thrash to effectively
+//! unbounded — produces bit-identical decode tokens *and* session
+//! snapshots to an unpaged run, for every cache policy. Paging is a
+//! *memory-placement* choice, never a numerics choice.
+//!
+//! The chaos test additionally pins the recovery contract: a worker
+//! killed while its sessions' pages sit spilled on disk must restore
+//! those sessions from snapshots whose manifests *recall* the spilled
+//! ranges, finishing every stream bit-identical to an undisturbed run.
+
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+use std::time::Duration;
+use subgen::coordinator::{
+    Engine, EngineConfig, FaultPlan, HostExecutor, Request, RequestClass, SessionSnapshot,
+    StepExecutor,
+};
+use subgen::kvcache::{PoolStats, POLICY_NAMES};
+use subgen::proptest_lite::{pair, Gen, Runner};
+use subgen::server::{drain_stream, Router, RouterConfig};
+
+const CASES: usize = 8;
+
+/// Deterministic prompt (tokens stay tiny so every vocab accepts them).
+fn prompt(len: usize, salt: usize) -> Vec<i32> {
+    (0..len).map(|i| 1 + ((i * 5 + salt * 3) % 11) as i32).collect()
+}
+
+fn request(id: u64, len: usize, policy: &str) -> Request {
+    Request {
+        id,
+        session_id: None,
+        prompt: prompt(len, id as usize),
+        max_new: 3 + (id as usize % 3),
+        policy: policy.into(),
+        budget: 12,
+        delta: 0.5,
+        deadline: None,
+        class: if id % 2 == 0 { RequestClass::Interactive } else { RequestClass::Batch },
+    }
+}
+
+/// Run three mixed requests to completion on one engine, returning the
+/// id-sorted token streams, every snapshot in publication order, and
+/// the pool counters. The caller compares paged vs unpaged outputs;
+/// snapshots referencing spilled ranges stay restorable because the
+/// engine (and so the pool's spill file) outlives this call's return
+/// only through the values it hands back — restore before dropping.
+fn run_requests(
+    engine: &mut Engine<HostExecutor>,
+    policy: &str,
+    len: usize,
+) -> Vec<(u64, Vec<i32>)> {
+    for id in 0..3u64 {
+        engine.submit(request(id, len + (id as usize * 3) % 5, policy));
+    }
+    engine.run_to_completion().unwrap();
+    let mut out: Vec<(u64, Vec<i32>)> =
+        engine.take_responses().into_iter().map(|r| (r.id, r.tokens)).collect();
+    out.sort_by_key(|(id, _)| *id);
+    out
+}
+
+fn engine_with<'e>(
+    exec: &'e HostExecutor,
+    chunk: usize,
+    budget: Option<u64>,
+    page_size: usize,
+    spill_dir: &std::path::Path,
+    sink: Rc<RefCell<Vec<SessionSnapshot>>>,
+) -> Engine<'e, HostExecutor> {
+    let mut e = Engine::new(
+        exec,
+        EngineConfig::builder()
+            .max_active(2)
+            .prefills_per_tick(2)
+            .prefill_chunk(chunk)
+            .snapshot_every(1)
+            .page_size(page_size)
+            .kv_mem_budget(budget)
+            .spill_dir(Some(spill_dir.to_path_buf()))
+            .build(),
+    );
+    e.set_snapshot_sink(Box::new(move |s| sink.borrow_mut().push(s)));
+    e
+}
+
+#[test]
+fn random_page_budgets_decode_and_snapshot_bit_identically_for_every_policy() {
+    let spill_dir =
+        std::env::temp_dir().join(format!("subgen_prop_paging_{}", std::process::id()));
+    std::fs::create_dir_all(&spill_dir).unwrap();
+    let exec = HostExecutor::small(11);
+    let spec = exec.spec().clone();
+    // Paging activity totals across every case: the random schedules
+    // must actually exercise spill + recall, not just the resident
+    // fast path.
+    let evicted = Cell::new(0u64);
+    let recalled = Cell::new(0u64);
+
+    for (pi, policy) in POLICY_NAMES.iter().enumerate() {
+        let mut runner = Runner::new(0x9A6E_D001 + pi as u64, CASES);
+        runner.run(
+            &format!("paging-schedule/{policy}"),
+            pair(pair(Gen::usize_in(6, 18), Gen::usize_in(0, 4)), Gen::usize_in(0, 14)),
+            |&((len, chunk), knob)| {
+                // knob → (page size, budget): pages of 64–256 bytes cut
+                // each arena into many pages; budgets span heavy thrash
+                // (a few pages) to effectively unbounded (1 MiB).
+                let page_size = 64usize << (knob % 3);
+                let budget = [192u64, 512, 2048, 16 * 1024, 1 << 20][knob / 3];
+
+                let ref_snaps = Rc::new(RefCell::new(Vec::new()));
+                let mut a =
+                    engine_with(&exec, chunk, None, page_size, &spill_dir, Rc::clone(&ref_snaps));
+                let want = run_requests(&mut a, policy, len);
+
+                let paged_snaps = Rc::new(RefCell::new(Vec::new()));
+                let mut b = engine_with(
+                    &exec,
+                    chunk,
+                    Some(budget),
+                    page_size,
+                    &spill_dir,
+                    Rc::clone(&paged_snaps),
+                );
+                let got = run_requests(&mut b, policy, len);
+                let stats: PoolStats = b.pool().stats();
+                evicted.set(evicted.get() + stats.evicted_pages);
+                recalled.set(recalled.get() + stats.recalled_pages);
+                if got != want {
+                    return false;
+                }
+
+                // Snapshot streams pair up tick for tick: paging never
+                // perturbs scheduling. Decode-phase snapshots must be
+                // byte-identical; mid-prefill snapshots differ in page
+                // *placement* (resident blobs vs spill manifests) but
+                // must materialize the identical K/V carry. Restores
+                // happen before `b` (and the spill file) drops.
+                let sa = ref_snaps.borrow();
+                let sb = paged_snaps.borrow();
+                if sa.len() != sb.len() {
+                    return false;
+                }
+                for (x, y) in sa.iter().zip(sb.iter()) {
+                    if (x.req.id, x.pos, x.next, &x.generated, x.prefill_done)
+                        != (y.req.id, y.pos, y.next, &y.generated, y.prefill_done)
+                    {
+                        return false;
+                    }
+                    match x.prefill_done {
+                        None => {
+                            if x.to_bytes() != y.to_bytes() {
+                                return false;
+                            }
+                        }
+                        Some(_) => {
+                            let cx = x.restore_prefill_carry(&spec).unwrap();
+                            let cy = y.restore_prefill_carry(&spec).unwrap();
+                            if cx.to_serialized() != cy.to_serialized() {
+                                return false;
+                            }
+                        }
+                    }
+                }
+                true
+            },
+        );
+    }
+    assert!(
+        evicted.get() > 0 && recalled.get() > 0,
+        "random schedules never exercised paging: evicted={} recalled={}",
+        evicted.get(),
+        recalled.get()
+    );
+    let _ = std::fs::remove_dir_all(&spill_dir);
+}
+
+#[test]
+fn worker_kill_with_spilled_pages_restores_sessions_that_recall_them() {
+    // Chaos case: the only worker panics while its sessions' K/V pages
+    // sit spilled under a tiny budget. The supervisor restarts it and
+    // re-admits the sessions from snapshots whose page manifests point
+    // into the *shared* pool's spill file (the pool outlives the worker
+    // at the router level) — every stream must match an undisturbed
+    // unbudgeted run bit for bit.
+    let spill_dir =
+        std::env::temp_dir().join(format!("subgen_prop_paging_chaos_{}", std::process::id()));
+    std::fs::create_dir_all(&spill_dir).unwrap();
+    let long_request = |id: u64| {
+        let policy = POLICY_NAMES[id as usize % POLICY_NAMES.len()];
+        let mut r = request(id, 12, policy);
+        r.prompt = prompt(12, id as usize);
+        r.max_new = 6;
+        r
+    };
+    let cfg = EngineConfig::builder()
+        .max_active(4)
+        .prefills_per_tick(2)
+        .prefill_chunk(2)
+        .snapshot_every(1)
+        .build();
+    // Undisturbed, unbudgeted reference: same model seed, same requests.
+    let reference: Vec<Vec<i32>> = {
+        let router = Router::spawn(1, cfg.clone(), |_w| HostExecutor::small(11)).unwrap();
+        let out = (0..6u64)
+            .map(|id| router.submit_blocking(long_request(id)).unwrap().tokens)
+            .collect();
+        router.shutdown().unwrap();
+        out
+    };
+
+    // A 512-byte budget over 64-byte pages forces every prefill carry
+    // out to disk between ticks; the tick-4 panic lands with the
+    // 12-token prompts (≥ 6 chunked-prefill ticks) still mid-prefill.
+    let rcfg = RouterConfig::builder()
+        .poll_every(Duration::from_millis(2))
+        .retry_attempts(6)
+        .fault_plans(vec![(0, FaultPlan { panic_at_tick: Some(4), ..Default::default() })])
+        .page_size(Some(64))
+        .kv_mem_budget(Some(512))
+        .spill_dir(Some(spill_dir.clone()))
+        .build();
+    let router = Router::spawn_with(1, cfg, rcfg, |_w| HostExecutor::small(11)).unwrap();
+    let rxs: Vec<_> =
+        (0..6u64).map(|id| router.submit_streaming(long_request(id)).unwrap()).collect();
+    for (id, rx) in rxs.iter().enumerate() {
+        let (streamed, resp) = drain_stream(rx).unwrap();
+        assert_eq!(streamed, reference[id], "request {id} diverged after paged recovery");
+        assert_eq!(resp.tokens, streamed, "request {id}: stream/response mismatch");
+    }
+    let stats = router.metrics().pool().stats();
+    assert!(stats.evicted_pages > 0, "budget never forced a spill: {stats:?}");
+    assert!(stats.recalled_pages > 0, "nothing was ever recalled: {stats:?}");
+    let snap = router.shutdown().unwrap();
+    assert_eq!(snap.restarts, 1, "{snap:?}");
+    assert_eq!(snap.completed, 6, "{snap:?}");
+    assert!(snap.recovered_sessions >= 1, "{snap:?}");
+    assert!(snap.pages_recalled > 0, "{snap:?}");
+    let _ = std::fs::remove_dir_all(&spill_dir);
+}

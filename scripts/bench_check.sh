@@ -3,8 +3,9 @@
 #
 # Re-runs the BENCH_query.json emitters — `cargo bench --bench
 # bench_query_latency` (rewrites the file) then `cargo bench --bench
-# bench_e2e_decode` (merges its `batched_decode` and `prefill_chunked`
-# operating points into it) — and compares every `*_ns` timing against the previously
+# bench_e2e_decode` (merges its `batched_decode`, `prefill_chunked`,
+# `trace_overhead`, and `paged_decode` operating points into it) — and
+# compares every `*_ns` timing against the previously
 # committed baseline. Exits non-zero when a timing regresses beyond the
 # tolerance (BENCH_TOLERANCE, default 0.25 = 25%) **or when a `*_ns`
 # key present in the baseline is missing from the fresh run** — a
@@ -16,9 +17,10 @@
 # first CI bench run on this hardware) relaxes the *magnitude* check to
 # warn-only: seeded numbers are not this machine's numbers, so ratios
 # against them prove nothing. Missing keys still fail — a dropped
-# operating point is structural, not a magnitude. The CI bench job on
-# `main` overwrites the seeded file with measured values (no provenance
-# key), which re-arms the full gate.
+# operating point is structural, not a magnitude. The bench emitters
+# stamp `"provenance": "measured"`, so the first CI bench run that
+# commits its output replaces the seeded file and the magnitude check
+# becomes blocking from then on.
 #
 # A missing baseline *file* is a clean skip, so this script can gate CI
 # from day one.
