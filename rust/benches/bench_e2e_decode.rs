@@ -407,12 +407,134 @@ fn host_paged_decode_section() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Context length for the quantized-decode section: large enough that
+/// the per-(layer, head) cache sweep dominates the step and the fused
+/// dequantize-and-score kernels see their memory-bandwidth payoff.
+const N_QUANT: usize = 100_000;
+/// Decode steps per timed repetition in the quantized section.
+const QUANT_TOKENS: usize = 4;
+
+/// Section 1e: decode through encoded caches — the same exact-policy
+/// context stored as `f32` / `f16` / `int8` arenas, decoded by the
+/// fused dequantize-and-score sweeps. At [`N_QUANT`] rows the sweep is
+/// memory-bound, so the smaller codes must win: the section *asserts*
+/// int8 decodes faster per token than f32. Per-encoding arena bytes
+/// plus resident/spilled split under a fixed pool budget (half the f32
+/// working set) merge into `BENCH_query.json` (key `quantized_decode`).
+fn host_quantized_decode_section() -> anyhow::Result<()> {
+    let spec = ModelSpec {
+        vocab: 16,
+        d_model: 32,
+        n_heads: 2,
+        n_layers: 2,
+        d_head: 16,
+        prefill_t: 64,
+        cache_variants: vec![N_QUANT + 66],
+        decode_batch: 0,
+        train_accuracy: -1.0,
+    };
+    let exec = HostExecutor::new(spec.clone(), 7)?;
+    let lh_dh = spec.n_layers * spec.n_heads * spec.d_head;
+    let flat_for = |dtype: &str| -> anyhow::Result<FlatCaches> {
+        let mut caches =
+            SequenceCaches::with_kv_dtype(&spec, "exact", usize::MAX / 4, 4.0, 3, dtype)?;
+        let mut rng = Pcg64::seed_from_u64(29);
+        let (mut q, mut k, mut v) =
+            (vec![0.0f32; lh_dh], vec![0.0f32; lh_dh], vec![0.0f32; lh_dh]);
+        for _ in 0..N_QUANT {
+            fill_gaussian(&mut rng, &mut q, 0.3);
+            fill_gaussian(&mut rng, &mut k, 0.3);
+            fill_gaussian(&mut rng, &mut v, 1.0);
+            caches.update(&q, &k, &v);
+        }
+        caches.assemble(spec.pick_cache_variant(caches.max_slots() + 1))
+    };
+
+    println!("\n== quantized decode: fused dequantize-and-score over {N_QUANT} cached rows ==\n");
+    let f32_flat = flat_for("f32")?;
+    let f32_bytes = f32_flat.serialized_len() as u64;
+    let pool_budget = (f32_bytes / 2).max(1);
+    let want = exec.decode(5, N_QUANT, &f32_flat)?;
+    let mut table =
+        Table::new(&["dtype", "ns/token", "vs f32", "arena bytes", "resident", "spilled"]);
+    let mut json = format!(
+        "  \"quantized_decode\": {{\"n_ctx\": {N_QUANT}, \"pool_budget_bytes\": {pool_budget}"
+    );
+    let mut f32_ns = 0.0f64;
+    let mut int8_ns = 0.0f64;
+    for dtype in ["f32", "f16", "int8"] {
+        let flat = if dtype == "f32" {
+            FlatCaches::from_serialized(&f32_flat.to_serialized())?
+        } else {
+            flat_for(dtype)?
+        };
+        let got = exec.decode(5, N_QUANT, &flat)?;
+        if dtype == "f32" {
+            // The f32 encoding is the historical layout: bit-identical.
+            anyhow::ensure!(got.logits == want.logits, "f32-encoded decode drifted");
+        } else {
+            anyhow::ensure!(
+                got.logits.iter().all(|x| x.is_finite()),
+                "{dtype}-encoded decode produced non-finite logits"
+            );
+        }
+        let mut best = f64::MAX;
+        for _ in 0..7 {
+            let t0 = std::time::Instant::now();
+            for _ in 0..QUANT_TOKENS {
+                black_box(exec.decode(5, N_QUANT, &flat)?);
+            }
+            best = best.min(t0.elapsed().as_nanos() as f64 / QUANT_TOKENS as f64);
+        }
+        if dtype == "f32" {
+            f32_ns = best;
+        }
+        if dtype == "int8" {
+            int8_ns = best;
+        }
+        // Footprint under a fixed byte budget: smaller codes keep more
+        // (for int8, all) of the arena resident where f32 spills half.
+        let arena_bytes = flat.serialized_len() as u64;
+        let pool = Arc::new(PagePool::new(
+            64 * 1024,
+            Some(pool_budget),
+            Some(std::env::temp_dir()),
+        ));
+        let _lease = pool.register(flat)?;
+        let stats = pool.stats();
+        table.row(&[
+            dtype.to_string(),
+            format!("{best:.0}"),
+            format!("{:.2}x", best / f32_ns.max(1e-9)),
+            arena_bytes.to_string(),
+            stats.resident_bytes.to_string(),
+            stats.spilled_bytes.to_string(),
+        ]);
+        json.push_str(&format!(
+            ", \"{dtype}_per_token_ns\": {best:.0}, \"{dtype}_arena_bytes\": {arena_bytes}, \
+             \"{dtype}_resident_bytes\": {}, \"{dtype}_spilled_bytes\": {}",
+            stats.resident_bytes, stats.spilled_bytes
+        ));
+    }
+    json.push_str(&format!(", \"int8_speedup_vs_f32\": {:.3}}}", f32_ns / int8_ns.max(1e-9)));
+    table.print();
+    println!("\n(1-byte codes quarter the sweep's traffic: the fused kernels decode in registers)");
+    merge_into_bench_query("quantized_decode", &json)?;
+    anyhow::ensure!(
+        int8_ns < f32_ns,
+        "fused int8 decode ({int8_ns:.0} ns/token) is not faster than f32 ({f32_ns:.0} ns/token) \
+         at n={N_QUANT}"
+    );
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
     let bencher = Bencher { budget: std::time::Duration::from_millis(800), ..Default::default() };
     host_batched_section(&bencher)?;
     host_prefill_chunked_section(&bencher)?;
     host_trace_overhead_section()?;
     host_paged_decode_section()?;
+    host_quantized_decode_section()?;
 
     let artifacts = Path::new("artifacts");
     if !artifacts.join("manifest.toml").exists() {

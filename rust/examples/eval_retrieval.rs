@@ -7,7 +7,10 @@
 //!     cargo run --release --example eval_retrieval -- --steps 1500
 //!     cargo run --release --example eval_retrieval -- --checkpoint subgen_host.ck
 //!
-//! One `accuracy policy=<p> budget=<b> …` line per table cell is
+//! The sweep covers **dtype × policy × budget**: each KV encoding
+//! (`--kv-dtypes`, default `f32,f16,int8`) re-runs the whole table so
+//! quantized accuracy can be read off against the f32 reference. One
+//! `accuracy policy=<p> dtype=<d> budget=<b> …` line per table cell is
 //! emitted for CI/grep consumption, and the whole sweep lands in
 //! `BENCH_accuracy.json` (trend tracking; no `*_ns` keys, so the perf
 //! gate ignores it).
@@ -19,7 +22,7 @@ use subgen::cli::Args;
 use subgen::io::Checkpoint;
 use subgen::kvcache::POLICY_NAMES;
 use subgen::model::{HostExecutor, ModelSpec};
-use subgen::train::{accuracy_json, evaluate_policies, EvalConfig, TrainConfig, Trainer};
+use subgen::train::{accuracy_json_encoded, evaluate_policies, EvalConfig, TrainConfig, Trainer};
 use subgen::workload::seq_len_for_lines;
 
 fn main() -> Result<()> {
@@ -33,6 +36,7 @@ fn main() -> Result<()> {
         .describe("lines", Some("4"), "held-out document lines (eval)")
         .describe("questions", Some("50"), "held-out documents per policy")
         .describe("budgets", Some("24,32,48"), "per-head budgets to sweep")
+        .describe("kv-dtypes", Some("f32,f16,int8"), "KV encodings to sweep")
         .describe("delta", Some("4.0"), "subgen cluster threshold δ")
         .describe("json", None, "output path (default ../BENCH_accuracy.json)")
         .describe("seed", Some("0"), "rng seed");
@@ -46,6 +50,12 @@ fn main() -> Result<()> {
         .split(',')
         .filter(|s| !s.trim().is_empty())
         .map(|s| s.trim().parse().expect("--budgets must be comma-separated integers"))
+        .collect();
+    let dtypes: Vec<String> = args
+        .get_or("kv-dtypes", "f32,f16,int8")
+        .split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| s.trim().to_string())
         .collect();
 
     // ── Model: load a checkpoint or train one right here ──
@@ -100,37 +110,52 @@ fn main() -> Result<()> {
         seq_len_for_lines(lines)
     );
 
-    // ── The sweep: every policy × every budget, identical documents ──
+    // ── The sweep: every dtype × policy × budget, identical documents ──
     let headers: Vec<String> = std::iter::once("policy".to_string())
         .chain(budgets.iter().map(|b| format!("b={b}")))
         .collect();
     let header_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
     let mut table = Table::new(&header_refs);
-    let mut sweeps = Vec::with_capacity(budgets.len());
-    for &budget in &budgets {
-        let cfg = EvalConfig { questions, n_lines: lines, budget, delta, seed: seed ^ 0x5EED_E7A1 };
-        let rows = evaluate_policies(&exec, &POLICY_NAMES, &cfg)?;
-        for r in &rows {
-            println!(
-                "accuracy policy={} budget={budget} lines={lines} correct={}/{} acc={:.3} \
-                 cache_bytes={:.0}",
-                r.policy, r.correct, r.total, r.accuracy(), r.mean_cache_bytes
-            );
+    let mut sweeps = Vec::with_capacity(dtypes.len() * budgets.len());
+    for dtype in &dtypes {
+        for &budget in &budgets {
+            let cfg = EvalConfig {
+                questions,
+                n_lines: lines,
+                budget,
+                delta,
+                seed: seed ^ 0x5EED_E7A1,
+                kv_dtype: dtype.clone(),
+            };
+            let rows = evaluate_policies(&exec, &POLICY_NAMES, &cfg)?;
+            for r in &rows {
+                println!(
+                    "accuracy policy={} dtype={dtype} budget={budget} lines={lines} \
+                     correct={}/{} acc={:.3} cache_bytes={:.0}",
+                    r.policy, r.correct, r.total, r.accuracy(), r.mean_cache_bytes
+                );
+            }
+            sweeps.push((dtype.clone(), budget, rows));
         }
-        sweeps.push((budget, rows));
     }
-    for (pi, &policy) in POLICY_NAMES.iter().enumerate() {
-        let mut cells = vec![policy.to_string()];
-        for (_, rows) in &sweeps {
-            cells.push(format!("{:.3}", rows[pi].accuracy()));
+    for dtype in &dtypes {
+        for (pi, &policy) in POLICY_NAMES.iter().enumerate() {
+            let label =
+                if dtypes.len() > 1 { format!("{policy}@{dtype}") } else { policy.to_string() };
+            let mut cells = vec![label];
+            for (d, _, rows) in &sweeps {
+                if d == dtype {
+                    cells.push(format!("{:.3}", rows[pi].accuracy()));
+                }
+            }
+            table.row(&cells);
         }
-        table.row(&cells);
     }
     println!();
     table.print();
     println!("\n(exact is the uncompressed reference; compressed rows share each budget)");
 
-    let json = accuracy_json(&sweeps, lines, questions, delta, train_acc);
+    let json = accuracy_json_encoded(&sweeps, lines, questions, delta, train_acc);
     let default_path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_accuracy.json");
     let path = args.get_or("json", default_path);
     std::fs::write(&path, json)?;

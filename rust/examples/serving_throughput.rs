@@ -57,6 +57,7 @@ fn main() -> Result<()> {
                    of the working set, asserting bit-identical tokens")
         .describe("kv-budget-pct", Some("25"), "paged-pool budget as % of the working set \
                    in --paged")
+        .describe("kv-dtype", Some("f32"), "KV-cache storage encoding: f32|f16|int8")
         .describe("trace-out", None, "write a merged Chrome trace-event JSON (all policy runs, \
                    one track per worker) to this path and print per-request summaries")
         .describe("seed", Some("0"), "rng seed");
@@ -89,7 +90,8 @@ fn main() -> Result<()> {
     if args.flag("paged") {
         anyhow::ensure!(executor == "host", "the paged scenario needs the host executor");
         let pct = args.u64_or("kv-budget-pct", 25).max(1);
-        return run_paged(workers, requests, n, max_new, budget, seed, pct);
+        let dtype = args.get_or("kv-dtype", "f32");
+        return run_paged(workers, requests, n, max_new, budget, seed, pct, &dtype);
     }
 
     println!("executor: {executor} workers: {workers}");
@@ -272,6 +274,12 @@ fn run_chaos(
 /// `evicted_pages`/`recalled_pages` nonzero) and dumps the budgeted
 /// pass's Prometheus families so the `subgen_pages_*` series are
 /// scrape-visible under real pressure.
+///
+/// `--kv-dtype` re-runs the whole scenario on an encoded cache; the
+/// pool budget is always sized off the *f32* working set, so the
+/// reported `spilled_bytes` (cumulative spill traffic) is directly
+/// comparable across encodings — CI asserts int8 spills fewer bytes
+/// than f32 under the identical budget.
 fn run_paged(
     workers: usize,
     requests: usize,
@@ -280,6 +288,7 @@ fn run_paged(
     budget: usize,
     seed: u64,
     pct: u64,
+    dtype: &str,
 ) -> Result<()> {
     let model_seed = seed ^ 0xBEEF;
     // Chunked prefill + per-tick snapshots: the pressure run exercises
@@ -290,6 +299,7 @@ fn run_paged(
         .prefills_per_tick(2)
         .prefill_chunk(32)
         .snapshot_every(1)
+        .kv_dtype(dtype)
         .build();
     let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(seed));
     let mut prompts = Vec::with_capacity(requests);
@@ -323,9 +333,10 @@ fn run_paged(
     }
     router.shutdown()?;
 
-    // Size the budget off the decode working set: `max_active`
+    // Size the budget off the *f32* decode working set: `max_active`
     // prompt-capacity carry arenas (the largest allocations a sweep
-    // pins at once).
+    // pins at once). Encoded runs keep the same byte budget — that is
+    // the point of the dtype comparison: same pool, less traffic.
     let probe = HostExecutor::retrieval(model_seed);
     let max_prompt = prompts.iter().map(|p| p.len()).max().unwrap_or(n);
     let arena = FlatCaches::for_prefill(probe.spec(), max_prompt + max_new).serialized_len() as u64;
@@ -364,13 +375,17 @@ fn run_paged(
     let stats = router.metrics().pool().stats();
     let snap = router.shutdown()?;
     let matched = paged == reference;
+    // `spilled_bytes` here is the cumulative spill traffic
+    // (PoolStats::evicted_bytes): the point-in-time gauge drains as
+    // leases release, the counter is what the dtype comparison needs.
     println!(
-        "paged policy=subgen workers={workers} budget_bytes={kv_budget} pct={pct} \
+        "paged policy=subgen workers={workers} dtype={dtype} budget_bytes={kv_budget} pct={pct} \
          completed={}/{requests} shed_retries={shed_retries} evicted_pages={} \
-         recalled_pages={} ghost_hits={} tokens_match={matched}",
+         recalled_pages={} spilled_bytes={} ghost_hits={} tokens_match={matched}",
         paged.len(),
         stats.evicted_pages,
         stats.recalled_pages,
+        stats.evicted_bytes,
         stats.ghost_hits
     );
     print!("{}", prometheus_text(&snap));

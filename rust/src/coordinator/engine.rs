@@ -3,7 +3,7 @@
 use super::{Request, RequestClass, Response, StepExecutor};
 use super::request::Timing;
 use super::snapshot::{FaultPlan, SessionSnapshot};
-use crate::kvcache::{attention_flat_into, CacheTelemetry, PageLease, PagePool, PinnedPages};
+use crate::kvcache::{attention_encoded_into, CacheTelemetry, PageLease, PagePool, PinnedPages};
 use crate::model::{caches::FlatCaches, DecodeStep, SequenceCaches, StepOutput};
 use crate::metrics::{Counter, Gauge, Histogram};
 use crate::trace::{EventKind, FlightRecorder};
@@ -41,7 +41,7 @@ pub struct EngineConfig {
     /// active sequence's caches (estimator observability). The probe
     /// evaluates each (layer, head) policy's packed estimator for the
     /// step's query directly over the sequence's assembled flat buffers
-    /// (`FlatCaches::head_slices` + `attention_flat_into`) — the decode
+    /// (`FlatCaches::head_slices` + `attention_encoded_into`) — the decode
     /// path keeps those in sync every tick, so the probe does no
     /// packing and no per-query heap allocation. (Each head owns a
     /// distinct sketch, so there is exactly one query per sketch per
@@ -118,6 +118,13 @@ pub struct EngineConfig {
     /// the cluster router shares one KV memory budget across all its
     /// workers. Overrides `page_size`/`kv_mem_budget`/`spill_dir`.
     pub pool: Option<Arc<PagePool>>,
+    /// KV-cache storage encoding for admitted sequences: `"f32"`
+    /// (default, bit-identical to the historical layout), `"f16"`, or
+    /// `"int8"` (per-row affine, see [`crate::kvcache::KvDtype`]).
+    /// Travels as a string so the engine stays encoding-blind — the
+    /// name is parsed once at admission inside
+    /// [`SequenceCaches::with_kv_dtype`].
+    pub kv_dtype: String,
 }
 
 impl Default for EngineConfig {
@@ -139,6 +146,7 @@ impl Default for EngineConfig {
             kv_mem_budget: None,
             spill_dir: None,
             pool: None,
+            kv_dtype: "f32".into(),
         }
     }
 }
@@ -252,6 +260,12 @@ impl EngineConfigBuilder {
     /// See [`EngineConfig::pool`].
     pub fn pool(mut self, v: Option<Arc<PagePool>>) -> Self {
         self.cfg.pool = v;
+        self
+    }
+
+    /// See [`EngineConfig::kv_dtype`].
+    pub fn kv_dtype(mut self, v: impl Into<String>) -> Self {
+        self.cfg.kv_dtype = v.into();
         self
     }
 
@@ -821,14 +835,14 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
     /// One host-probe pass per tick: every active sequence's step
     /// queries are evaluated through the *already assembled* flat
     /// buffers (pinned from the page pool, then
-    /// `FlatCaches::head_slices` + `attention_flat_into`) — zero
+    /// `FlatCaches::head_slices` + `attention_encoded_into`) — zero
     /// packing, and zero allocation after warm-up when the pages are
     /// resident. The decode path keeps each lease's arena in sync via
     /// `reassemble` at check-in, so probing the pinned buffers
     /// evaluates exactly the policies' current packed estimators
     /// without re-packing `L · H` buffers per sequence.
     /// Each sweep additionally measures the policy estimator's error:
-    /// a second `attention_flat_into` pass with unit weights recovers
+    /// a second `attention_encoded_into` pass with unit weights recovers
     /// plain softmax attention over the same retained rows, and the
     /// relative L2 distance between the two outputs is recorded per
     /// (layer, head) into `EngineStats::probe_error` and (when tracing)
@@ -854,7 +868,7 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
             out.resize(seq.last_q.len(), 0.0);
             for i in 0..lh {
                 let (kk, vv, ww, uu) = pin.head_slices(i);
-                attention_flat_into(
+                attention_encoded_into(
                     kk,
                     vv,
                     ww,
@@ -872,7 +886,7 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
                     unit.resize(rows, 1.0);
                 }
                 reference.resize(dh, 0.0);
-                attention_flat_into(
+                attention_encoded_into(
                     kk,
                     vv,
                     &unit[..rows],
@@ -956,8 +970,14 @@ impl<'e, E: StepExecutor> Engine<'e, E> {
                 t.record(EventKind::Admit, req.id, waited, req.prompt.len() as u64);
             }
             let spec = self.exec.spec();
-            let mut caches =
-                SequenceCaches::new(spec, &req.policy, req.budget, req.delta, req.id ^ 0x5EED)?;
+            let mut caches = SequenceCaches::with_kv_dtype(
+                spec,
+                &req.policy,
+                req.budget,
+                req.delta,
+                req.id ^ 0x5EED,
+                &self.cfg.kv_dtype,
+            )?;
             if chunked {
                 let carry = FlatCaches::for_prefill(spec, req.prompt.len());
                 let lease = self.pool.register(carry)?;

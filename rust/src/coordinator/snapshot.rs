@@ -35,7 +35,12 @@ use std::time::Duration;
 ///   the pool's spill file — snapshotting never forces a recall.
 ///   `restore_prefill_carry` reads both encodings; v1/v2 bytes still
 ///   parse.
-const SNAPSHOT_VERSION: u64 = 3;
+/// * v4 — KV arenas carry a storage-dtype tag (`f32` | `f16` | `int8`;
+///   see `caches/meta`'s eighth entry and the flat-cache v2 image), and
+///   paged carries are byte-granular: resident page bytes are padded to
+///   whole f32 container slots with the true byte length in the page
+///   meta. v1–v3 bytes still parse (implicitly f32).
+const SNAPSHOT_VERSION: u64 = 4;
 
 /// A deterministic schedule of injected faults, consulted by
 /// [`super::Engine::tick`]. Default = no faults. Tick numbers count the
@@ -121,12 +126,15 @@ impl SessionSnapshot {
         let mut snap = Self::capture_inner(req, &[], 0, done, caches, Some(done));
         let lh = carry.num_heads();
         let dh = if lh > 0 && carry.capacity > 0 { carry.keys.len() / (lh * carry.capacity) } else { 0 };
+        // The prefill carry is always an f32 arena (raw causal history).
+        let kplane = carry.keys.f32();
+        let vplane = carry.values.f32();
         let mut keys = Vec::with_capacity(lh * done * dh);
         let mut values = Vec::with_capacity(lh * done * dh);
         for i in 0..lh {
             let at = i * carry.capacity * dh;
-            keys.extend_from_slice(&carry.keys[at..at + done * dh]);
-            values.extend_from_slice(&carry.values[at..at + done * dh]);
+            keys.extend_from_slice(&kplane[at..at + done * dh]);
+            values.extend_from_slice(&vplane[at..at + done * dh]);
         }
         snap.tensors.insert("prefill/keys", vec![lh, done, dh], keys);
         snap.tensors.insert("prefill/values", vec![lh, done, dh], values);
@@ -158,13 +166,16 @@ impl SessionSnapshot {
                 PageImage::Resident(bytes) => {
                     snap.tensors
                         .insert_u64s(&format!("paging/p{i}/meta"), &[0, 0, bytes.len() as u64]);
-                    // Serialized arenas and page cuts are 4-byte
-                    // aligned, so the raw page bitcasts to f32 exactly
-                    // (the codec is to/from_le_bytes verbatim).
-                    let data: Vec<f32> = bytes
-                        .chunks_exact(4)
-                        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-                        .collect();
+                    // Pages are byte-granular (encoded arenas make
+                    // images arbitrary-length): pad the tail to a whole
+                    // f32 container slot; the true byte length rides
+                    // the page meta.
+                    let mut data = Vec::with_capacity(bytes.len().div_ceil(4));
+                    for c in bytes.chunks(4) {
+                        let mut b = [0u8; 4];
+                        b[..c.len()].copy_from_slice(c);
+                        data.push(f32::from_le_bytes(b));
+                    }
                     snap.tensors.insert(&format!("paging/p{i}/data"), vec![data.len()], data);
                 }
                 PageImage::Spilled { path, offset, len } => {
@@ -321,8 +332,10 @@ impl SessionSnapshot {
         for i in 0..lh {
             let src = i * done * dh;
             let dst = i * carry.capacity * dh;
-            carry.keys[dst..dst + done * dh].copy_from_slice(&keys.data[src..src + done * dh]);
-            carry.values[dst..dst + done * dh].copy_from_slice(&values.data[src..src + done * dh]);
+            carry.keys.f32_mut()[dst..dst + done * dh]
+                .copy_from_slice(&keys.data[src..src + done * dh]);
+            carry.values.f32_mut()[dst..dst + done * dh]
+                .copy_from_slice(&values.data[src..src + done * dh]);
         }
         carry.set_unit_prefix(done);
         Ok(carry)
@@ -347,13 +360,16 @@ impl SessionSnapshot {
                 0 => {
                     let data = self.tensors.require(&format!("paging/p{i}/data"))?;
                     ensure!(
-                        data.data.len() * 4 == len,
+                        data.data.len() == len.div_ceil(4),
                         "paging/p{i}/data: {} f32s for a {len}-byte page",
                         data.data.len()
                     );
+                    let mut page = Vec::with_capacity(data.data.len() * 4);
                     for x in &data.data {
-                        bytes.extend_from_slice(&x.to_le_bytes());
+                        page.extend_from_slice(&x.to_le_bytes());
                     }
+                    page.truncate(len);
+                    bytes.extend_from_slice(&page);
                 }
                 1 => {
                     let name = format!("paging/p{i}/path");
@@ -524,8 +540,8 @@ mod tests {
         assert!(back.generated.is_empty());
         let restored = back.restore_prefill_carry(spec).unwrap();
         let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
-        assert_eq!(bits(&restored.keys), bits(&carry.keys));
-        assert_eq!(bits(&restored.values), bits(&carry.values));
+        assert_eq!(bits(restored.keys.f32()), bits(carry.keys.f32()));
+        assert_eq!(bits(restored.values.f32()), bits(carry.values.f32()));
         assert_eq!(bits(&restored.w), bits(&carry.w));
         for i in 0..restored.num_heads() {
             assert_eq!(restored.packed_len(i), done);
@@ -552,9 +568,10 @@ mod tests {
         }
         // Cut the serialized carry into two pages by hand: the first
         // embedded resident, the second spilled to a real file — the
-        // exact shapes a budgeted pool's lease image produces.
+        // exact shapes a budgeted pool's lease image produces. An odd
+        // cut exercises the byte-granular (non-f32-aligned) page path.
         let blob = carry.to_serialized();
-        let cut = (blob.len() / 2 / 4) * 4;
+        let cut = (blob.len() / 2) | 1;
         assert!(cut > 0 && cut < blob.len());
         let dir = std::env::temp_dir().join(format!("subgen_snap_paged_{}", std::process::id()));
         std::fs::create_dir_all(&dir).unwrap();
@@ -579,8 +596,8 @@ mod tests {
         assert_eq!(back.pos, done);
         let restored = back.restore_prefill_carry(spec).unwrap();
         let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
-        assert_eq!(bits(&restored.keys), bits(&carry.keys));
-        assert_eq!(bits(&restored.values), bits(&carry.values));
+        assert_eq!(bits(restored.keys.f32()), bits(carry.keys.f32()));
+        assert_eq!(bits(restored.values.f32()), bits(carry.values.f32()));
         assert_eq!(bits(&restored.w), bits(&carry.w));
         assert_eq!(bits(&restored.u), bits(&carry.u));
         assert_eq!(restored.capacity, carry.capacity);

@@ -1,7 +1,7 @@
 //! Exact (uncompressed) KV cache — the paper's "Exact" row in Table 1
 //! and the correctness oracle for every other policy.
 
-use super::{CachePolicy, PackedCache};
+use super::{CachePolicy, KvDtype, PackedCache};
 use crate::io::Checkpoint;
 use crate::tensor::Tensor;
 
@@ -10,12 +10,13 @@ use crate::tensor::Tensor;
 pub struct ExactCache {
     keys: Tensor,
     values: Tensor,
+    enc: KvDtype,
 }
 
 impl ExactCache {
     /// Empty cache over `dim`-dimensional tokens.
     pub fn new(dim: usize) -> Self {
-        Self { keys: Tensor::zeros(0, dim), values: Tensor::zeros(0, dim) }
+        Self { keys: Tensor::zeros(0, dim), values: Tensor::zeros(0, dim), enc: KvDtype::F32 }
     }
 
     /// Full key history (rows = tokens).
@@ -48,6 +49,14 @@ impl CachePolicy for ExactCache {
 
     fn packed_append_only(&self) -> bool {
         true
+    }
+
+    fn kv_encoding(&self) -> KvDtype {
+        self.enc
+    }
+
+    fn set_kv_encoding(&mut self, enc: KvDtype) {
+        self.enc = enc;
     }
 
     fn pack_from(&self, buf: &mut PackedCache, from: usize) {

@@ -8,7 +8,9 @@
 //! score is evicted. A separate recent window is always retained, as in
 //! the original system.
 
-use super::{bytes_per_slot, CachePolicy, CacheTelemetry, PackedCache, SlidingCache};
+use super::{
+    bytes_per_slot_encoded, CachePolicy, CacheTelemetry, KvDtype, PackedCache, SlidingCache,
+};
 use crate::io::Checkpoint;
 use crate::tensor::dot;
 
@@ -28,6 +30,7 @@ pub struct H2OCache {
     entries: Vec<Entry>,
     recent: SlidingCache,
     n: u64,
+    enc: KvDtype,
 }
 
 impl H2OCache {
@@ -39,6 +42,7 @@ impl H2OCache {
             entries: Vec::new(),
             recent: SlidingCache::new(dim, window.max(1)),
             n: 0,
+            enc: KvDtype::F32,
         }
     }
 
@@ -125,9 +129,17 @@ impl CachePolicy for H2OCache {
         self.entries.len() + self.recent.retained()
     }
 
+    fn kv_encoding(&self) -> KvDtype {
+        self.enc
+    }
+
+    fn set_kv_encoding(&mut self, enc: KvDtype) {
+        self.enc = enc;
+    }
+
     fn telemetry(&self, dim: usize) -> CacheTelemetry {
         let slots = self.packed_slots() as u64;
-        let bytes = slots * bytes_per_slot(dim) as u64;
+        let bytes = slots * bytes_per_slot_encoded(dim, self.enc) as u64;
         CacheTelemetry {
             slots,
             bytes,

@@ -31,17 +31,28 @@ mod subgen_policy;
 
 pub use exact::ExactCache;
 pub use h2o::H2OCache;
-pub use packed::{attention_flat_into, PackedCache};
+pub use packed::{attention_encoded_into, attention_flat_into, PackedCache};
 pub use pagepool::{LeaseImage, PageImage, PageLease, PagePool, PinnedPages, PoolStats};
 pub use sink::SinkCache;
 pub use sliding::SlidingCache;
 pub use subgen_policy::{SubGenCache, SubGenCacheConfig};
+
+// The encoding layer lives in `tensor`; re-exported here because the
+// kvcache boundary is where everything above stops seeing it.
+pub use crate::tensor::{KvArena, KvDtype, KvSlice};
 
 use crate::io::Checkpoint;
 
 /// Bytes per packed slot: K row + V row + w + u, all f32.
 pub fn bytes_per_slot(dim: usize) -> usize {
     (2 * dim + 2) * std::mem::size_of::<f32>()
+}
+
+/// Bytes per packed slot under an arena encoding: one encoded K row,
+/// one encoded V row, plus the (always-f32) w and u weights. Equals
+/// [`bytes_per_slot`] for [`KvDtype::F32`].
+pub fn bytes_per_slot_encoded(dim: usize, enc: KvDtype) -> usize {
+    2 * enc.row_bytes(dim) + 2 * std::mem::size_of::<f32>()
 }
 
 /// Cheap introspection counters for one policy instance (see
@@ -132,6 +143,22 @@ pub trait CachePolicy: Send {
     /// for buffer allocation).
     fn packed_slots(&self) -> usize;
 
+    /// K/V arena encoding this policy packs into (selected via config —
+    /// `EngineConfig::kv_dtype` / `--kv-dtype`). The policy's *internal*
+    /// streaming state stays f32 (so eviction/clustering decisions are
+    /// encoding-independent); quantization is applied once per row when
+    /// packing into arenas. Default: [`KvDtype::F32`].
+    fn kv_encoding(&self) -> KvDtype {
+        KvDtype::F32
+    }
+
+    /// Select the K/V arena encoding (see [`Self::kv_encoding`]). The
+    /// default is a no-op for policy impls without an encoding knob;
+    /// all five built-in policies store and honor it.
+    fn set_kv_encoding(&mut self, enc: KvDtype) {
+        let _ = enc;
+    }
+
     /// Cheap introspection counters: retained slots/bytes, rows
     /// admitted/evicted, cluster count and reservoir occupancy. Unlike
     /// [`Self::memory_bytes`] this must never pack — it is sampled on
@@ -142,7 +169,7 @@ pub trait CachePolicy: Send {
     fn telemetry(&self, dim: usize) -> CacheTelemetry {
         let slots = self.packed_slots() as u64;
         let admitted = self.len();
-        let bytes = slots * bytes_per_slot(dim) as u64;
+        let bytes = slots * bytes_per_slot_encoded(dim, self.kv_encoding()) as u64;
         CacheTelemetry {
             slots,
             bytes,
@@ -155,18 +182,19 @@ pub trait CachePolicy: Send {
         }
     }
 
-    /// Retained cache size in bytes (packed representation).
+    /// Retained cache size in bytes (packed representation under the
+    /// policy's arena encoding).
     fn memory_bytes(&self, dim: usize) -> usize {
-        let mut buf = PackedCache::new(dim, self.packed_slots().max(1));
+        let mut buf = PackedCache::new_encoded(dim, self.packed_slots().max(1), self.kv_encoding());
         self.pack(&mut buf);
-        buf.used() * bytes_per_slot(dim)
+        buf.used() * bytes_per_slot_encoded(dim, self.kv_encoding())
     }
 
     /// Host-side attention estimate for query `q` (reference/eval path;
     /// the serving path evaluates the same packed buffer in XLA).
     fn attention(&self, q: &[f32]) -> Vec<f32> {
         let dim = q.len();
-        let mut buf = PackedCache::new(dim, self.packed_slots().max(1));
+        let mut buf = PackedCache::new_encoded(dim, self.packed_slots().max(1), self.kv_encoding());
         self.pack(&mut buf);
         buf.attention(q)
     }
@@ -193,7 +221,7 @@ pub trait CachePolicy: Send {
         }
         assert_eq!(qs.len() % nq, 0, "qs must be nq × dim row-major");
         let dim = qs.len() / nq;
-        let mut buf = PackedCache::new(dim, self.packed_slots().max(1));
+        let mut buf = PackedCache::new_encoded(dim, self.packed_slots().max(1), self.kv_encoding());
         self.pack(&mut buf);
         buf.attention_batch(qs, nq)
     }
@@ -236,6 +264,22 @@ pub fn build_policy(
         }
         other => anyhow::bail!("unknown cache policy {other:?}"),
     })
+}
+
+/// [`build_policy`] with an explicit K/V arena encoding — the one
+/// constructor the cache layer uses once a config carries `kv_dtype`.
+/// `build_policy(…)` ≡ `build_policy_encoded(…, KvDtype::F32)`.
+pub fn build_policy_encoded(
+    name: &str,
+    dim: usize,
+    budget: usize,
+    delta: f32,
+    seed: u64,
+    enc: KvDtype,
+) -> anyhow::Result<Box<dyn CachePolicy>> {
+    let mut p = build_policy(name, dim, budget, delta, seed)?;
+    p.set_kv_encoding(enc);
+    Ok(p)
 }
 
 /// All policy names understood by [`build_policy`], in Table-1 order.
@@ -384,6 +428,32 @@ mod tests {
             assert_eq!(t.slots as usize, p.packed_slots(), "{name}");
             assert_eq!(t.bytes, t.slots * bytes_per_slot(dim) as u64, "{name}");
             assert_eq!(t.admitted, t.evicted + t.slots, "{name}");
+            // Encoded policies report the real (smaller) footprint.
+            let mut enc = build_policy_encoded(name, dim, 32, 0.5, 3, KvDtype::Int8).unwrap();
+            assert_eq!(enc.kv_encoding(), KvDtype::Int8, "{name}");
+            for _ in 0..200 {
+                let q: Vec<f32> = (0..dim).map(|_| rng.gaussian32(0.0, 0.5)).collect();
+                let k: Vec<f32> = (0..dim).map(|_| rng.gaussian32(0.0, 0.5)).collect();
+                let v: Vec<f32> = (0..dim).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+                enc.update(&q, &k, &v);
+            }
+            let te = enc.telemetry(dim);
+            assert_eq!(
+                te.bytes,
+                te.slots * bytes_per_slot_encoded(dim, KvDtype::Int8) as u64,
+                "{name}"
+            );
+            assert!(
+                bytes_per_slot_encoded(dim, KvDtype::Int8) < bytes_per_slot(dim),
+                "int8 slots must be smaller than f32 slots"
+            );
+            assert_eq!(te.resident_bytes, te.bytes, "{name}");
+            let mb = enc.memory_bytes(dim);
+            assert_eq!(mb % bytes_per_slot_encoded(dim, KvDtype::Int8), 0, "{name}");
+            assert!(
+                mb <= enc.packed_slots() * bytes_per_slot_encoded(dim, KvDtype::Int8),
+                "{name}"
+            );
             // Bare policies are fully resident; paging splits are the
             // pool's job.
             assert_eq!(t.resident_bytes, t.bytes, "{name}");

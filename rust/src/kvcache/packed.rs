@@ -1,7 +1,7 @@
 //! The fixed-capacity packed cache buffer shared by every policy and by
 //! the XLA kernel.
 
-use crate::tensor::{dot, scores_batch_into};
+use crate::tensor::{dot, scores_batch_encoded_into, scores_batch_into, KvArena, KvDtype, KvSlice};
 
 /// Scratch-growth policy: capacity for `slots` rows plus ~50% headroom.
 fn grown_capacity(slots: usize) -> usize {
@@ -140,33 +140,162 @@ pub fn attention_flat_into(
     }
 }
 
-/// C-slot buffer: row-major K and V `[C, d]`, per-slot weights `w`
+/// [`attention_flat_into`] over **encoded** K/V views — the one
+/// estimator entry point once arenas may be f16/int8. The `F32`/`F32`
+/// arm delegates straight to [`attention_flat_into`], so every f32 path
+/// stays bit-identical to the pre-encoding code; encoded arms run the
+/// same algorithm with the fused dequantize-and-score sweep
+/// ([`scores_batch_encoded_into`]) and per-slot register decode of V
+/// rows — no f32 copy of an encoded arena is materialized. The `extra`
+/// (new-token) slot is always raw f32: it is the decode step's own
+/// K/V, which never lives in an encoded arena.
+#[allow(clippy::too_many_arguments)]
+pub fn attention_encoded_into(
+    keys: KvSlice<'_>,
+    values: KvSlice<'_>,
+    w: &[f32],
+    u: &[f32],
+    dim: usize,
+    qs: &[f32],
+    nq: usize,
+    extra: Option<(&[f32], &[f32])>,
+    scores: &mut Vec<f32>,
+    zacc: &mut Vec<f64>,
+    out: &mut [f32],
+) {
+    if let (KvSlice::F32(k), KvSlice::F32(v)) = (keys, values) {
+        return attention_flat_into(k, v, w, u, dim, qs, nq, extra, scores, zacc, out);
+    }
+    let n = w.len();
+    debug_assert_eq!(keys.elems(), n * dim, "keys must be n × dim");
+    debug_assert_eq!(values.elems(), n * dim, "values must be n × dim");
+    debug_assert_eq!(u.len(), n, "w/u length mismatch");
+    assert_eq!(qs.len(), nq * dim, "qs must be nq × dim");
+    assert_eq!(out.len(), nq * dim, "out must be nq × dim");
+    if let Some((k_new, v_new)) = extra {
+        assert_eq!(k_new.len(), nq * dim, "extra keys must be nq × dim");
+        assert_eq!(v_new.len(), nq * dim, "extra values must be nq × dim");
+    }
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    if (n == 0 && extra.is_none()) || nq == 0 {
+        return;
+    }
+    // Scratch layout: as in `attention_flat_into`, plus one dim-wide
+    // region at the tail where each live V row is decoded while hot.
+    scores.resize(n * nq + 2 * nq + dim, 0.0);
+    let (hist, tail) = scores.split_at_mut(n * nq);
+    let (extra_scores, tail) = tail.split_at_mut(nq);
+    let (shifts, vbuf) = tail.split_at_mut(nq);
+    scores_batch_encoded_into(keys, dim, qs, nq, hist);
+    for b in 0..nq {
+        let q = &qs[b * dim..(b + 1) * dim];
+        extra_scores[b] = match extra {
+            Some((k_new, _)) => dot(&k_new[b * dim..(b + 1) * dim], q),
+            None => f32::NEG_INFINITY,
+        };
+        let mut shift = extra_scores[b];
+        for i in 0..n {
+            let sc = hist[i * nq + b];
+            if (w[i] > 0.0 || u[i] > 0.0) && sc > shift {
+                shift = sc;
+            }
+        }
+        shifts[b] = shift;
+    }
+    zacc.resize(nq * dim + nq, 0.0);
+    for z in zacc.iter_mut() {
+        *z = 0.0;
+    }
+    let (zrows, taus) = zacc.split_at_mut(nq * dim);
+    // One pass over the packed slots: each live V row is decoded once
+    // into `vbuf` and folded into every query's accumulator. Dead slots
+    // (w = u = 0) are skipped without touching their rows.
+    for i in 0..n {
+        let (wi, ui) = (w[i], u[i]);
+        if wi <= 0.0 && ui <= 0.0 {
+            continue;
+        }
+        values.decode_row_into(i, vbuf);
+        for b in 0..nq {
+            if !shifts[b].is_finite() {
+                continue;
+            }
+            let e = ((hist[i * nq + b] - shifts[b]) as f64).exp();
+            if wi > 0.0 {
+                let we = wi as f64 * e;
+                for (zj, &vj) in zrows[b * dim..(b + 1) * dim].iter_mut().zip(vbuf.iter()) {
+                    *zj += we * vj as f64;
+                }
+            }
+            if ui > 0.0 {
+                taus[b] += ui as f64 * e;
+            }
+        }
+    }
+    for b in 0..nq {
+        if !shifts[b].is_finite() {
+            continue;
+        }
+        if let Some((_, v_new)) = extra {
+            let e = ((extra_scores[b] - shifts[b]) as f64).exp();
+            let zb = &mut zrows[b * dim..(b + 1) * dim];
+            for (zj, &vj) in zb.iter_mut().zip(&v_new[b * dim..(b + 1) * dim]) {
+                *zj += e * vj as f64;
+            }
+            taus[b] += e;
+        }
+        if taus[b] > 0.0 {
+            let ob = &mut out[b * dim..(b + 1) * dim];
+            for (o, &zj) in ob.iter_mut().zip(&zrows[b * dim..(b + 1) * dim]) {
+                *o = (zj / taus[b]) as f32;
+            }
+        }
+    }
+}
+
+/// C-slot buffer: row-major K and V `[C, d]` arenas (f32 by default,
+/// optionally f16/int8-encoded — see [`KvDtype`]), per-slot weights `w`
 /// (value path) and `u` (normalizer path). Unused slots carry zero
-/// weights so the kernel can always run at full capacity.
+/// weights so the kernel can always run at full capacity. Rows are
+/// encoded once at push time; the estimator reads them through the
+/// fused encoded kernels.
 #[derive(Debug, Clone)]
 pub struct PackedCache {
     dim: usize,
     capacity: usize,
     used: usize,
-    keys: Vec<f32>,
-    values: Vec<f32>,
+    keys: KvArena,
+    values: KvArena,
     w: Vec<f32>,
     u: Vec<f32>,
 }
 
 impl PackedCache {
-    /// Allocate an empty buffer.
+    /// Allocate an empty f32 buffer.
     pub fn new(dim: usize, capacity: usize) -> Self {
+        Self::new_encoded(dim, capacity, KvDtype::F32)
+    }
+
+    /// Allocate an empty buffer with the given K/V arena encoding.
+    pub fn new_encoded(dim: usize, capacity: usize, enc: KvDtype) -> Self {
         assert!(dim > 0 && capacity > 0);
         Self {
             dim,
             capacity,
             used: 0,
-            keys: vec![0.0; capacity * dim],
-            values: vec![0.0; capacity * dim],
+            keys: KvArena::new(enc, capacity, dim),
+            values: KvArena::new(enc, capacity, dim),
             w: vec![0.0; capacity],
             u: vec![0.0; capacity],
         }
+    }
+
+    /// K/V arena encoding.
+    #[inline]
+    pub fn dtype(&self) -> KvDtype {
+        self.keys.dtype()
     }
 
     /// Reset to empty without reallocating.
@@ -183,9 +312,8 @@ impl PackedCache {
         assert!(self.used < self.capacity, "packed cache overflow");
         assert_eq!(k.len(), self.dim);
         assert_eq!(v.len(), self.dim);
-        let at = self.used * self.dim;
-        self.keys[at..at + self.dim].copy_from_slice(k);
-        self.values[at..at + self.dim].copy_from_slice(v);
+        self.keys.write_row(self.used, k);
+        self.values.write_row(self.used, v);
         self.w[self.used] = w;
         self.u[self.used] = u;
         self.used += 1;
@@ -200,24 +328,26 @@ impl PackedCache {
         slot: &mut Option<PackedCache>,
         dim: usize,
         slots: usize,
+        enc: KvDtype,
     ) -> &mut PackedCache {
         let needed = slots.max(1);
         let rebuild = match slot {
-            Some(buf) => buf.capacity < needed || buf.dim != dim,
+            Some(buf) => buf.capacity < needed || buf.dim != dim || buf.dtype() != enc,
             None => true,
         };
         if rebuild {
-            *slot = Some(PackedCache::new(dim, grown_capacity(slots)));
+            *slot = Some(PackedCache::new_encoded(dim, grown_capacity(slots), enc));
         }
         slot.as_mut().expect("scratch just ensured")
     }
 
     /// In-place variant of [`PackedCache::ensure_scratch`] for a
     /// non-optional scratch field: grow (with the same headroom
-    /// policy) when `slots` no longer fit. Contents are reset.
+    /// policy) when `slots` no longer fit. Contents are reset; the
+    /// arena encoding is preserved.
     pub fn ensure_capacity(&mut self, slots: usize) {
         if self.capacity < slots.max(1) {
-            *self = PackedCache::new(self.dim, grown_capacity(slots));
+            *self = PackedCache::new_encoded(self.dim, grown_capacity(slots), self.dtype());
         }
     }
 
@@ -227,9 +357,8 @@ impl PackedCache {
     pub fn push_normalizer(&mut self, k: &[f32], u: f32) {
         assert!(self.used < self.capacity, "packed cache overflow");
         assert_eq!(k.len(), self.dim);
-        let at = self.used * self.dim;
-        self.keys[at..at + self.dim].copy_from_slice(k);
-        self.values[at..at + self.dim].iter_mut().for_each(|x| *x = 0.0);
+        self.keys.write_row(self.used, k);
+        self.values.zero_row(self.used);
         self.w[self.used] = 0.0;
         self.u[self.used] = u;
         self.used += 1;
@@ -254,13 +383,26 @@ impl PackedCache {
     }
 
     /// Full K buffer `[capacity, dim]` row-major (zero-weighted tail
-    /// included) — exactly what the XLA executable consumes.
+    /// included) — exactly what the XLA executable consumes. F32-only
+    /// accessor (panics on encoded buffers): encoded readers go through
+    /// [`PackedCache::keys_arena`].
     pub fn keys_buffer(&self) -> &[f32] {
+        self.keys.f32()
+    }
+
+    /// Full V buffer. F32-only, like [`PackedCache::keys_buffer`].
+    pub fn values_buffer(&self) -> &[f32] {
+        self.values.f32()
+    }
+
+    /// Encoded K arena (`[capacity, dim]` rows; slots ≥ `used` hold the
+    /// canonical zero row).
+    pub fn keys_arena(&self) -> &KvArena {
         &self.keys
     }
 
-    /// Full V buffer.
-    pub fn values_buffer(&self) -> &[f32] {
+    /// Encoded V arena.
+    pub fn values_arena(&self) -> &KvArena {
         &self.values
     }
 
@@ -274,14 +416,15 @@ impl PackedCache {
         &self.u
     }
 
-    /// Key row of slot `i`.
+    /// Key row of slot `i` (F32-only accessor, like
+    /// [`PackedCache::keys_buffer`]).
     pub fn key(&self, i: usize) -> &[f32] {
-        &self.keys[i * self.dim..(i + 1) * self.dim]
+        &self.keys.f32()[i * self.dim..(i + 1) * self.dim]
     }
 
-    /// Value row of slot `i`.
+    /// Value row of slot `i` (F32-only).
     pub fn value(&self, i: usize) -> &[f32] {
-        &self.values[i * self.dim..(i + 1) * self.dim]
+        &self.values.f32()[i * self.dim..(i + 1) * self.dim]
     }
 
     /// Evaluate the weighted-exponential attention estimator over the
@@ -315,8 +458,9 @@ impl PackedCache {
     /// Batched estimator evaluation into caller-provided buffers.
     /// `scores` (f32, `used × nq`) and `zacc` (f64, `dim`) are scratch
     /// reused across calls — no allocation once warmed; `out` must be
-    /// `nq × dim`. Delegates to [`attention_flat_into`] over the used
-    /// prefix of the owned buffers.
+    /// `nq × dim`. Delegates to [`attention_encoded_into`] over the
+    /// used prefix of the owned arenas (bit-identical to
+    /// [`attention_flat_into`] for f32 buffers).
     pub fn attention_batch_into(
         &self,
         qs: &[f32],
@@ -325,9 +469,9 @@ impl PackedCache {
         zacc: &mut Vec<f64>,
         out: &mut [f32],
     ) {
-        attention_flat_into(
-            &self.keys[..self.used * self.dim],
-            &self.values[..self.used * self.dim],
+        attention_encoded_into(
+            self.keys.slice_rows(0, self.used),
+            self.values.slice_rows(0, self.used),
             &self.w[..self.used],
             &self.u[..self.used],
             self.dim,
@@ -344,11 +488,16 @@ impl PackedCache {
     pub fn log_partition(&self, q: &[f32]) -> f32 {
         let mut shift = f32::NEG_INFINITY;
         let mut scores = vec![0.0f32; self.used];
+        crate::tensor::scores_batch_encoded_into(
+            self.keys.slice_rows(0, self.used),
+            self.dim,
+            q,
+            1,
+            &mut scores,
+        );
         for i in 0..self.used {
-            let sc = dot(self.key(i), q);
-            scores[i] = sc;
-            if self.u[i] > 0.0 && sc > shift {
-                shift = sc;
+            if self.u[i] > 0.0 && scores[i] > shift {
+                shift = scores[i];
             }
         }
         if !shift.is_finite() {
@@ -570,22 +719,100 @@ mod tests {
     #[test]
     fn scratch_growth_policy() {
         let mut slot: Option<PackedCache> = None;
-        let buf = PackedCache::ensure_scratch(&mut slot, 4, 10);
+        let buf = PackedCache::ensure_scratch(&mut slot, 4, 10, KvDtype::F32);
         assert!(buf.capacity() >= 10);
         assert_eq!(buf.dim(), 4);
         let cap = slot.as_ref().unwrap().capacity();
         // No rebuild while the request still fits.
-        PackedCache::ensure_scratch(&mut slot, 4, cap);
+        PackedCache::ensure_scratch(&mut slot, 4, cap, KvDtype::F32);
         assert_eq!(slot.as_ref().unwrap().capacity(), cap);
         // Dim change forces a rebuild.
-        PackedCache::ensure_scratch(&mut slot, 8, 4);
+        PackedCache::ensure_scratch(&mut slot, 8, 4, KvDtype::F32);
         assert_eq!(slot.as_ref().unwrap().dim(), 8);
-        // In-place variant grows only when needed.
-        let mut buf2 = PackedCache::new(2, 4);
+        // Encoding change forces a rebuild too.
+        PackedCache::ensure_scratch(&mut slot, 8, 4, KvDtype::Int8);
+        assert_eq!(slot.as_ref().unwrap().dtype(), KvDtype::Int8);
+        // In-place variant grows only when needed, keeping the dtype.
+        let mut buf2 = PackedCache::new_encoded(2, 4, KvDtype::F16);
         buf2.ensure_capacity(4);
         assert_eq!(buf2.capacity(), 4);
         buf2.ensure_capacity(5);
         assert!(buf2.capacity() >= 5);
+        assert_eq!(buf2.dtype(), KvDtype::F16);
+    }
+
+    #[test]
+    fn encoded_buffers_attend_within_tolerance_of_f32() {
+        let dim = 8;
+        let n = 40;
+        let mut rng = Pcg64::seed_from_u64(29);
+        let keys = Tensor::randn(&mut rng, n, dim, 0.4);
+        let values = Tensor::randn(&mut rng, n, dim, 1.0);
+        let q: Vec<f32> = (0..dim).map(|i| (i as f32 * 0.4).cos() * 0.5).collect();
+        let mut f32_buf = PackedCache::new(dim, n);
+        for i in 0..n {
+            let (w, u) = if i % 5 == 0 { (0.0, 1.2) } else { (1.0, 1.0) };
+            f32_buf.push(keys.row(i), values.row(i), w, u);
+        }
+        let want = f32_buf.attention(&q);
+        for enc in [KvDtype::F16, KvDtype::Int8] {
+            let mut buf = PackedCache::new_encoded(dim, n, enc);
+            assert_eq!(buf.dtype(), enc);
+            for i in 0..n {
+                let (w, u) = if i % 5 == 0 { (0.0, 1.2) } else { (1.0, 1.0) };
+                buf.push(keys.row(i), values.row(i), w, u);
+            }
+            let got = buf.attention(&q);
+            let err = crate::linalg::rel_err_vec(&got, &want);
+            assert!(err <= enc.decode_tolerance(), "{enc:?}: err={err}");
+            // The encoded log-partition agrees with f32 to the same bar.
+            let (lp, lp32) = (buf.log_partition(&q), f32_buf.log_partition(&q));
+            assert!((lp - lp32).abs() <= 0.1, "{enc:?}: {lp} vs {lp32}");
+        }
+    }
+
+    #[test]
+    fn f32_encoded_entry_point_is_bit_identical_to_flat() {
+        let dim = 6;
+        let n = 15;
+        let mut rng = Pcg64::seed_from_u64(31);
+        let keys = Tensor::randn(&mut rng, n, dim, 0.5);
+        let values = Tensor::randn(&mut rng, n, dim, 1.0);
+        let mut buf = PackedCache::new(dim, n);
+        for i in 0..n {
+            buf.push(keys.row(i), values.row(i), 1.0, 1.0);
+        }
+        let qs = Tensor::randn(&mut rng, 3, dim, 0.4);
+        let (mut scores, mut zacc) = (Vec::new(), Vec::new());
+        let mut a = vec![0.0f32; 3 * dim];
+        let mut b = vec![0.0f32; 3 * dim];
+        attention_encoded_into(
+            buf.keys_arena().slice_rows(0, n),
+            buf.values_arena().slice_rows(0, n),
+            &buf.w_buffer()[..n],
+            &buf.u_buffer()[..n],
+            dim,
+            qs.as_slice(),
+            3,
+            None,
+            &mut scores,
+            &mut zacc,
+            &mut a,
+        );
+        attention_flat_into(
+            &buf.keys_buffer()[..n * dim],
+            &buf.values_buffer()[..n * dim],
+            &buf.w_buffer()[..n],
+            &buf.u_buffer()[..n],
+            dim,
+            qs.as_slice(),
+            3,
+            None,
+            &mut scores,
+            &mut zacc,
+            &mut b,
+        );
+        assert_eq!(a, b);
     }
 
     #[test]

@@ -32,8 +32,9 @@
 //! no serialization, no IO.
 //!
 //! Paged ≡ unpaged is bit-identical: the serialized image round-trips
-//! every f32 bit pattern, so a decode under any eviction schedule
-//! produces exactly the tokens of the unpaged run (pinned by
+//! every encoded byte (f32, f16 and int8 arenas alike — pages are
+//! byte-granular, not f32-granular), so a decode under any eviction
+//! schedule produces exactly the tokens of the unpaged run (pinned by
 //! `tests/property_paging.rs`).
 
 use crate::io::SpillFile;
@@ -129,6 +130,11 @@ pub struct PoolStats {
     pub recalled_pages: u64,
     /// Pages evicted to disk since pool creation (counter).
     pub evicted_pages: u64,
+    /// Bytes carried by those evictions (counter). Pages are
+    /// byte-granular, so this — not `evicted_pages × page_size` — is
+    /// the true spill traffic; smaller KV encodings shrink it even
+    /// when the page *count* stays similar.
+    pub evicted_bytes: u64,
     /// Admissions that hit the ghost queue and went straight to the
     /// main FIFO (counter).
     pub ghost_hits: u64,
@@ -175,13 +181,14 @@ impl std::fmt::Debug for PagePool {
 }
 
 impl PagePool {
-    /// A pool cutting lease images every `page_size` bytes (rounded up
-    /// to a multiple of 4 so pages stay f32-granular), spilling past
-    /// `budget` resident bytes into a file under `spill_dir` (the OS
-    /// temp dir when unset). `budget: None` disables paging entirely —
-    /// the pool is a plain resident slab with near-zero overhead.
+    /// A pool cutting lease images every `page_size` bytes (byte
+    /// granular — encoded arenas make images arbitrary-length, so pages
+    /// carry no alignment assumption), spilling past `budget` resident
+    /// bytes into a file under `spill_dir` (the OS temp dir when
+    /// unset). `budget: None` disables paging entirely — the pool is a
+    /// plain resident slab with near-zero overhead.
     pub fn new(page_size: usize, budget: Option<u64>, spill_dir: Option<PathBuf>) -> PagePool {
-        let page_size = page_size.max(64).div_ceil(4) * 4;
+        let page_size = page_size.max(64);
         let seq = POOL_SEQ.fetch_add(1, Ordering::Relaxed);
         let dir = spill_dir.unwrap_or_else(std::env::temp_dir);
         let spill_path = dir.join(format!("subgen_pool_{}_{seq}.spill", std::process::id()));
@@ -599,6 +606,7 @@ impl PagePool {
                     inner.stats.spilled_pages += 1;
                     inner.stats.spilled_bytes += len as u64;
                     inner.stats.evicted_pages += 1;
+                    inner.stats.evicted_bytes += len as u64;
                     victims.push((key, bytes));
                 }
             }
@@ -861,7 +869,10 @@ cache_variants = "64,32"
         let spec = spec();
         let mut flat = FlatCaches::for_prefill(&spec, capacity);
         let mut rng = Pcg64::seed_from_u64(seed);
-        for x in flat.keys.iter_mut().chain(flat.values.iter_mut()) {
+        for x in flat.keys.f32_mut() {
+            *x = rng.gaussian32(0.0, 1.0);
+        }
+        for x in flat.values.f32_mut() {
             *x = rng.gaussian32(0.0, 1.0);
         }
         flat.set_unit_prefix(capacity / 2);

@@ -2,7 +2,7 @@
 //! baseline): deterministically keep the first `n_sink` tokens plus a
 //! sliding window of the most recent tokens.
 
-use super::{CachePolicy, PackedCache, SlidingCache};
+use super::{CachePolicy, KvDtype, PackedCache, SlidingCache};
 use crate::io::Checkpoint;
 
 /// First-`n_sink` + recent-`window` eviction policy.
@@ -16,6 +16,7 @@ pub struct SinkCache {
     stored_sinks: usize,
     recent: SlidingCache,
     n: u64,
+    enc: KvDtype,
 }
 
 impl SinkCache {
@@ -29,6 +30,7 @@ impl SinkCache {
             stored_sinks: 0,
             recent: SlidingCache::new(dim, window.max(1)),
             n: 0,
+            enc: KvDtype::F32,
         }
     }
 }
@@ -71,6 +73,16 @@ impl CachePolicy for SinkCache {
 
     fn packed_slots(&self) -> usize {
         self.stored_sinks + self.recent.retained()
+    }
+
+    fn kv_encoding(&self) -> KvDtype {
+        self.enc
+    }
+
+    fn set_kv_encoding(&mut self, enc: KvDtype) {
+        // `recent` is an internal ring kept in f32 (sink packs its rows
+        // itself), so only the sink-level encoding matters for packing.
+        self.enc = enc;
     }
 
     fn save_state(&self, ck: &mut Checkpoint, prefix: &str) {

@@ -2,7 +2,7 @@
 //! The simplest baseline and the "recent tokens" building block shared
 //! by Sink, H2O and the practical SubGen variant.
 
-use super::{CachePolicy, PackedCache};
+use super::{CachePolicy, KvDtype, PackedCache};
 use crate::io::Checkpoint;
 
 /// Ring buffer of the last `window` (k, v) pairs.
@@ -15,13 +15,21 @@ pub struct SlidingCache {
     values: Vec<f32>,
     /// Tokens observed.
     n: u64,
+    enc: KvDtype,
 }
 
 impl SlidingCache {
     /// Window of `window` tokens over `dim`-dimensional embeddings.
     pub fn new(dim: usize, window: usize) -> Self {
         assert!(window > 0);
-        Self { dim, window, keys: vec![0.0; window * dim], values: vec![0.0; window * dim], n: 0 }
+        Self {
+            dim,
+            window,
+            keys: vec![0.0; window * dim],
+            values: vec![0.0; window * dim],
+            n: 0,
+            enc: KvDtype::F32,
+        }
     }
 
     /// Current number of retained tokens.
@@ -89,6 +97,14 @@ impl CachePolicy for SlidingCache {
 
     fn packed_slots(&self) -> usize {
         self.retained()
+    }
+
+    fn kv_encoding(&self) -> KvDtype {
+        self.enc
+    }
+
+    fn set_kv_encoding(&mut self, enc: KvDtype) {
+        self.enc = enc;
     }
 
     fn save_state(&self, ck: &mut Checkpoint, prefix: &str) {

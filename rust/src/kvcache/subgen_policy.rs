@@ -10,7 +10,9 @@
 //! * ℓ2 samples:      w = μ/(s·‖v‖²),  u = 0
 //! * cluster samples: w = 0,           u = n_i/t
 
-use super::{bytes_per_slot, CachePolicy, CacheTelemetry, PackedCache, SlidingCache};
+use super::{
+    bytes_per_slot_encoded, CachePolicy, CacheTelemetry, KvDtype, PackedCache, SlidingCache,
+};
 use crate::io::Checkpoint;
 use crate::subgen::{SubGenAttention, SubGenConfig};
 use std::cell::RefCell;
@@ -48,6 +50,7 @@ pub struct SubGenCache {
     sketch: SubGenAttention,
     n: u64,
     scratch: RefCell<BatchScratch>,
+    enc: KvDtype,
 }
 
 impl SubGenCache {
@@ -65,6 +68,7 @@ impl SubGenCache {
             sketch: SubGenAttention::new(sketch_cfg, seed),
             n: 0,
             scratch: RefCell::new(BatchScratch::default()),
+            enc: KvDtype::F32,
         }
     }
 
@@ -94,7 +98,12 @@ impl SubGenCache {
         out: &mut [f32],
     ) {
         let mut scratch = self.scratch.borrow_mut();
-        let buf = PackedCache::ensure_scratch(&mut scratch.buf, self.cfg.dim, self.packed_slots());
+        let buf = PackedCache::ensure_scratch(
+            &mut scratch.buf,
+            self.cfg.dim,
+            self.packed_slots(),
+            self.enc,
+        );
         self.pack(buf);
         buf.attention_batch_into(qs, nq, scores, zacc, out);
     }
@@ -168,9 +177,17 @@ impl CachePolicy for SubGenCache {
         window + mp + nz.num_clusters() * nz.t()
     }
 
+    fn kv_encoding(&self) -> KvDtype {
+        self.enc
+    }
+
+    fn set_kv_encoding(&mut self, enc: KvDtype) {
+        self.enc = enc;
+    }
+
     fn telemetry(&self, dim: usize) -> CacheTelemetry {
         let slots = self.packed_slots() as u64;
-        let bytes = slots * bytes_per_slot(dim) as u64;
+        let bytes = slots * bytes_per_slot_encoded(dim, self.enc) as u64;
         CacheTelemetry {
             slots,
             bytes,

@@ -75,6 +75,8 @@ fn main() -> Result<()> {
         .describe("priority", Some("interactive"), "request class: interactive|batch (serve)")
         .describe("kv-mem-budget", Some("0"), "paged KV pool budget in bytes, 0 = unbounded \
                    (serve)")
+        .describe("kv-dtype", Some("f32"), "KV-cache storage encoding: f32|f16|int8 \
+                   (eval/serve)")
         .describe("page-size", Some("16384"), "paged KV pool page size in bytes (serve)")
         .describe("spill-dir", None, "directory for cold-page spill files, default temp dir \
                    (serve)")
@@ -277,7 +279,14 @@ fn eval(args: &Args) -> Result<()> {
              train_accuracy={train_acc:.3}",
             n_tokens - subgen::workload::ANSWER_TOKENS
         );
-        let cfg = EvalConfig { questions, n_lines, budget, delta, seed: seed ^ 0x5EED_E7A1 };
+        let cfg = EvalConfig {
+            questions,
+            n_lines,
+            budget,
+            delta,
+            seed: seed ^ 0x5EED_E7A1,
+            kv_dtype: args.get_or("kv-dtype", "f32"),
+        };
         let rows = evaluate_policies(&exec, &policies, &cfg)?;
         let mut table = subgen::bench::Table::new(&["policy", "accuracy", "correct", "cache KiB"]);
         for r in &rows {
@@ -360,6 +369,7 @@ fn serve_cluster(args: &Args) -> Result<()> {
         .page_size(page_size)
         .kv_mem_budget(kv_mem_budget)
         .spill_dir(spill_dir)
+        .kv_dtype(args.get_or("kv-dtype", "f32"))
         .build();
     let router = Router::spawn(workers, cfg, move |_w| match &ck {
         Some(ck) => HostExecutor::from_checkpoint(ck).expect("checkpoint validated above"),

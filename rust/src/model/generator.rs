@@ -88,6 +88,9 @@ impl<'rt> Generator<'rt> {
             flat.capacity,
         );
         let name = self.spec.decode_artifact(c);
+        // The PJRT decode executable consumes dense f32 operands, so
+        // encoded (f16/int8) arenas are decoded once at the literal
+        // boundary; for f32 arenas this is a plain copy.
         let out = self
             .rt
             .execute(
@@ -95,8 +98,8 @@ impl<'rt> Generator<'rt> {
                 &[
                     lit_i32_scalar(token),
                     lit_i32_scalar(pos as i32),
-                    lit_f32(&flat.keys, &[l, h, c, dh])?,
-                    lit_f32(&flat.values, &[l, h, c, dh])?,
+                    lit_f32(&flat.keys.to_f32_vec(), &[l, h, c, dh])?,
+                    lit_f32(&flat.values.to_f32_vec(), &[l, h, c, dh])?,
                     lit_f32(&flat.w, &[l, h, c])?,
                     lit_f32(&flat.u, &[l, h, c])?,
                 ],

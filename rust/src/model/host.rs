@@ -18,9 +18,12 @@
 //!   (q, k, v) streams that fill `FlatCaches` via the engine;
 //! * **decode** routes every (layer, head) through the *assembled
 //!   policy buffers*: [`FlatCaches::head_slices`] borrows the packed
-//!   K/V/w/u region and [`attention_flat_into`] evaluates the
+//!   K/V/w/u region as encoding-tagged [`crate::kvcache::KvSlice`]
+//!   views and [`attention_encoded_into`] evaluates the
 //!   weighted-exponential estimator with the step's own token in the
-//!   reserved extra slot. Every cache policy (exact, sliding, sink,
+//!   reserved extra slot — decompressing f16/int8 blocks in registers
+//!   when the cache is quantized, and running the original f32 path
+//!   bit-for-bit otherwise. Every cache policy (exact, sliding, sink,
 //!   H2O, SubGen) is therefore exercised by a real autoregressive
 //!   loop, with the batched `tensor::kernels` sweeps on the hot path.
 //!
@@ -34,7 +37,7 @@
 //! through [`matvec_batch_into`] (each weight row loaded once per tick
 //! instead of once per sequence), and sequences borrowing the *same*
 //! [`FlatCaches`] — parallel branches over a shared context — are
-//! answered per (layer, head) by a single [`attention_flat_into`] sweep
+//! answered per (layer, head) by a single [`attention_encoded_into`] sweep
 //! with per-query extra slots, loading each cached row once for the
 //! whole group. Results are bit-identical to per-sequence
 //! [`HostExecutor::decode`] calls (same kernels, same accumulation
@@ -52,7 +55,7 @@
 use super::spec::FF_MULT;
 use super::{DecodeStep, FlatCaches, ModelSpec, PrefillOutput, StepOutput};
 use crate::io::Checkpoint;
-use crate::kvcache::attention_flat_into;
+use crate::kvcache::{attention_encoded_into, attention_flat_into};
 use crate::rng::SplitMix64;
 use crate::tensor::{dot, matvec_batch_into, matvec_into, Tensor};
 use anyhow::Result;
@@ -605,8 +608,10 @@ impl HostExecutor {
                 }
                 for hi in 0..h {
                     let row = (li * h + hi) * c * dh + p * dh;
-                    carry.keys[row..row + dh].copy_from_slice(&k_out[hi * dh..(hi + 1) * dh]);
-                    carry.values[row..row + dh].copy_from_slice(&v_out[hi * dh..(hi + 1) * dh]);
+                    carry.keys.f32_mut()[row..row + dh]
+                        .copy_from_slice(&k_out[hi * dh..(hi + 1) * dh]);
+                    carry.values.f32_mut()[row..row + dh]
+                        .copy_from_slice(&v_out[hi * dh..(hi + 1) * dh]);
                 }
             }
             // Causal attention + MLP over the carry prefix, position by
@@ -618,8 +623,8 @@ impl HostExecutor {
                 for hi in 0..h {
                     let base = (li * h + hi) * c * dh;
                     attention_flat_into(
-                        &carry.keys[base..base + (p + 1) * dh],
-                        &carry.values[base..base + (p + 1) * dh],
+                        &carry.keys.f32()[base..base + (p + 1) * dh],
+                        &carry.values.f32()[base..base + (p + 1) * dh],
                         &ones[..p + 1],
                         &ones[..p + 1],
                         dh,
@@ -693,7 +698,7 @@ impl HostExecutor {
 
             for hi in 0..h {
                 let (kk, vv, ww, uu) = flat.head_slices(li * h + hi);
-                attention_flat_into(
+                attention_encoded_into(
                     kk,
                     vv,
                     ww,
@@ -733,7 +738,7 @@ impl HostExecutor {
     /// weight row is loaded once per tick instead of once per sequence.
     /// Steps borrowing the *same* [`FlatCaches`] (parallel branches
     /// decoding over a shared context) are grouped, and each (layer,
-    /// head) answers the whole group with one [`attention_flat_into`]
+    /// head) answers the whole group with one [`attention_encoded_into`]
     /// call carrying per-query reserved-slot (k, v) — each cached row
     /// is loaded once per group. Outputs are bit-identical to calling
     /// [`HostExecutor::decode`] once per step, in order.
@@ -822,7 +827,7 @@ impl HostExecutor {
                         sc.v_extra[to..to + dh].copy_from_slice(&sc.v[from..from + dh]);
                     }
                     let (kk, vv, ww, uu) = steps[g[0]].flat.head_slices(li * h + hi);
-                    attention_flat_into(
+                    attention_encoded_into(
                         kk,
                         vv,
                         ww,

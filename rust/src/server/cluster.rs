@@ -191,6 +191,12 @@ pub struct RouterConfig {
     /// back to [`EngineConfig::spill_dir`], then the OS temp dir.
     /// Ignored when the engine config already carries a pool.
     pub spill_dir: Option<PathBuf>,
+    /// KV-cache storage encoding applied to every worker engine
+    /// (`"f32"`/`"f16"`/`"int8"`); `None` keeps
+    /// [`EngineConfig::kv_dtype`] as passed. Like the pool knobs, the
+    /// override is resolved once before workers spawn, so supervisor
+    /// respawns inherit it.
+    pub kv_dtype: Option<String>,
 }
 
 impl Default for RouterConfig {
@@ -207,6 +213,7 @@ impl Default for RouterConfig {
             page_size: None,
             kv_mem_budget: None,
             spill_dir: None,
+            kv_dtype: None,
         }
     }
 }
@@ -290,6 +297,12 @@ impl RouterConfigBuilder {
     /// See [`RouterConfig::spill_dir`].
     pub fn spill_dir(mut self, v: Option<PathBuf>) -> Self {
         self.cfg.spill_dir = v;
+        self
+    }
+
+    /// See [`RouterConfig::kv_dtype`].
+    pub fn kv_dtype(mut self, v: Option<String>) -> Self {
+        self.cfg.kv_dtype = v;
         self
     }
 
@@ -864,6 +877,9 @@ impl Router {
             ))
         });
         cfg.pool = Some(Arc::clone(&pool));
+        if let Some(d) = &rcfg.kv_dtype {
+            cfg.kv_dtype = d.clone();
+        }
         let factory = Arc::new(factory);
         let mut slots = Vec::with_capacity(workers);
         let mut wm = Vec::with_capacity(workers);

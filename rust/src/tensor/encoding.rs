@@ -1,0 +1,650 @@
+//! The KvEncoding layer: storage dtypes for KV arenas behind the
+//! kernel boundary.
+//!
+//! Decode is memory-bandwidth-bound on *bytes per retained row*, so on
+//! top of SubGen's sublinear bound on *how many* rows we keep, a
+//! compressed on-arena encoding is a direct speedup multiplier. This
+//! module owns the three encodings ([`KvDtype`]), the encoded arena
+//! ([`KvArena`]) and its borrowed view ([`KvSlice`]):
+//!
+//! * `f32` — the uncompressed baseline; every path through an `F32`
+//!   arena is bit-identical to the pre-encoding code.
+//! * `f16` — IEEE binary16 rows (round-to-nearest-even), 2 bytes/elem.
+//! * `int8` — per-row affine quantization `x ≈ s·(q − z)` with
+//!   `q ∈ [-128, 127]`, structure-of-arrays planes (a contiguous i8
+//!   data plane plus separate f32 scale/zero planes, the
+//!   fastlanes-style transposed-metadata layout), 1 byte/elem + 8
+//!   bytes/row.
+//!
+//! Encoding happens once per row at write time ([`KvArena::write_row`])
+//! and is deterministic, so incremental arena assembly produces the
+//! same encoded bytes as from-scratch assembly. The fused sweeps in
+//! [`crate::tensor`] (`scores_batch_encoded_into`,
+//! `matvec_batch_encoded_into`) and the attention kernel decompress
+//! rows into registers during the scan — no f32 copy of an encoded
+//! arena is ever materialized on the hot path.
+//!
+//! Everything above the kvcache/tensor boundary (executors, the engine,
+//! the router) stays encoding-blind: encodings travel as plain strings
+//! in configs and as opaque [`KvSlice`] values through `head_slices`.
+
+use anyhow::Result;
+
+/// KV arena storage dtype. See the module docs for the encodings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KvDtype {
+    /// Uncompressed f32 rows (4 bytes/elem) — the bit-exact baseline.
+    #[default]
+    F32,
+    /// IEEE binary16 rows (2 bytes/elem), round-to-nearest-even.
+    F16,
+    /// Per-row affine int8: `x ≈ scale·(q − zero)`, 1 byte/elem plus
+    /// two f32s of per-row metadata.
+    Int8,
+}
+
+impl KvDtype {
+    /// All encodings, in serialization-index order.
+    pub const ALL: [KvDtype; 3] = [KvDtype::F32, KvDtype::F16, KvDtype::Int8];
+
+    /// Parse a config-facing name (`f32` | `f16` | `int8`).
+    pub fn parse(name: &str) -> Result<KvDtype> {
+        match name {
+            "f32" => Ok(KvDtype::F32),
+            "f16" => Ok(KvDtype::F16),
+            "int8" => Ok(KvDtype::Int8),
+            other => anyhow::bail!("unknown kv dtype {other:?} (expected f32|f16|int8)"),
+        }
+    }
+
+    /// Config-facing name.
+    pub fn name(self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::F16 => "f16",
+            KvDtype::Int8 => "int8",
+        }
+    }
+
+    /// Stable serialization tag (snapshot v4, flat-cache image v2).
+    pub fn index(self) -> u64 {
+        match self {
+            KvDtype::F32 => 0,
+            KvDtype::F16 => 1,
+            KvDtype::Int8 => 2,
+        }
+    }
+
+    /// Inverse of [`KvDtype::index`].
+    pub fn from_index(i: u64) -> Result<KvDtype> {
+        KvDtype::ALL
+            .get(i as usize)
+            .copied()
+            .ok_or_else(|| anyhow::anyhow!("bad kv dtype index {i}"))
+    }
+
+    /// Encoded bytes per `dim`-wide row (data plane plus any per-row
+    /// metadata planes).
+    pub fn row_bytes(self, dim: usize) -> usize {
+        match self {
+            KvDtype::F32 => 4 * dim,
+            KvDtype::F16 => 2 * dim,
+            KvDtype::Int8 => dim + 8,
+        }
+    }
+
+    /// Relative-error tolerance bar for decode outputs versus the f32
+    /// path — the bound the property tests and the accuracy harness
+    /// hold every policy to.
+    pub fn decode_tolerance(self) -> f32 {
+        match self {
+            KvDtype::F32 => 0.0,
+            KvDtype::F16 => 5e-3,
+            KvDtype::Int8 => 8e-2,
+        }
+    }
+}
+
+/// Convert f32 to IEEE binary16 bits with round-to-nearest-even.
+#[inline]
+pub fn f32_to_f16_bits(value: f32) -> u16 {
+    let x = value.to_bits();
+    let sign = ((x >> 16) & 0x8000) as u16;
+    let mut exp = ((x >> 23) & 0xFF) as i32;
+    let man = x & 0x007F_FFFF;
+    if exp == 255 {
+        // Inf / NaN (NaNs quieten to a canonical payload).
+        let m = if man != 0 { 0x0200 } else { 0 };
+        return sign | 0x7C00 | m;
+    }
+    exp = exp - 127 + 15;
+    if exp >= 31 {
+        return sign | 0x7C00; // overflow → inf
+    }
+    if exp <= 0 {
+        if exp < -10 {
+            return sign; // underflows to zero even after rounding
+        }
+        // Subnormal: shift the (implicit-bit) mantissa into place.
+        let man = man | 0x0080_0000;
+        let shift = (14 - exp) as u32; // 14..=24
+        let half = 1u32 << (shift - 1);
+        let rem = man & ((1u32 << shift) - 1);
+        let mut m = man >> shift;
+        if rem > half || (rem == half && (m & 1) == 1) {
+            m += 1; // may carry into the exponent: smallest normal, still valid
+        }
+        return sign | m as u16;
+    }
+    let mut m = man >> 13;
+    let rem = man & 0x1FFF;
+    if rem > 0x1000 || (rem == 0x1000 && (m & 1) == 1) {
+        m += 1;
+        if m == 0x400 {
+            m = 0;
+            exp += 1;
+            if exp >= 31 {
+                return sign | 0x7C00;
+            }
+        }
+    }
+    sign | ((exp as u16) << 10) | m as u16
+}
+
+/// Convert IEEE binary16 bits to f32 (exact — every f16 value is
+/// representable in f32).
+#[inline(always)]
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1F;
+    let man = (h & 0x03FF) as u32;
+    if exp == 0 {
+        // Zero / subnormal: man × 2⁻²⁴, sign applied bitwise.
+        let v = man as f32 * f32::from_bits(0x3380_0000);
+        return f32::from_bits(v.to_bits() | sign);
+    }
+    if exp == 31 {
+        return f32::from_bits(sign | 0x7F80_0000 | (man << 13));
+    }
+    f32::from_bits(sign | ((exp as u32 + 112) << 23) | (man << 13))
+}
+
+/// Encode one `int8` row: returns `(scale, zero)` and fills `dst` with
+/// the quantized codes. `x ≈ scale·(q − zero)`; constant rows (and zero
+/// rows) decode exactly.
+#[inline]
+fn encode_row_i8(src: &[f32], dst: &mut [i8]) -> (f32, f32) {
+    let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+    for &x in src {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    let span = hi - lo;
+    let s = if span > 0.0 && span.is_finite() { span / 255.0 } else { 1.0 };
+    let mut z = -lo / s - 128.0;
+    if !z.is_finite() {
+        z = 0.0;
+    }
+    for (q, &x) in dst.iter_mut().zip(src) {
+        *q = (x / s + z).round().clamp(-128.0, 127.0) as i8;
+    }
+    (s, z)
+}
+
+/// Encoded row storage. Planes are structure-of-arrays so the data
+/// plane streams contiguously during fused sweeps.
+#[derive(Debug, Clone, PartialEq)]
+enum Store {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+    Int8 { data: Vec<i8>, scale: Vec<f32>, zero: Vec<f32> },
+}
+
+/// A `rows × dim` row-major arena holding encoded K or V rows.
+/// Rows are encoded once at [`KvArena::write_row`] time and read back
+/// either fused (via [`KvSlice`] and the encoded kernels) or decoded
+/// row-at-a-time ([`KvArena::decode_row_into`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct KvArena {
+    dim: usize,
+    rows: usize,
+    store: Store,
+}
+
+impl KvArena {
+    /// Allocate a zeroed arena (every row decodes to all-zero).
+    pub fn new(dtype: KvDtype, rows: usize, dim: usize) -> KvArena {
+        let store = match dtype {
+            KvDtype::F32 => Store::F32(vec![0.0; rows * dim]),
+            KvDtype::F16 => Store::F16(vec![0; rows * dim]),
+            KvDtype::Int8 => Store::Int8 {
+                data: vec![0; rows * dim],
+                scale: vec![1.0; rows],
+                zero: vec![0.0; rows],
+            },
+        };
+        KvArena { dim, rows, store }
+    }
+
+    /// Storage dtype.
+    pub fn dtype(&self) -> KvDtype {
+        match &self.store {
+            Store::F32(_) => KvDtype::F32,
+            Store::F16(_) => KvDtype::F16,
+            Store::Int8 { .. } => KvDtype::Int8,
+        }
+    }
+
+    /// Row width.
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Row count.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Logical element count (`rows × dim`).
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.rows * self.dim
+    }
+
+    /// True when the arena holds no rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    /// Encode `src` (len `dim`) into row `row`. Deterministic: the same
+    /// f32 row always produces the same encoded bytes, which is what
+    /// makes incremental assembly byte-identical to full assembly.
+    #[inline]
+    pub fn write_row(&mut self, row: usize, src: &[f32]) {
+        debug_assert_eq!(src.len(), self.dim);
+        let at = row * self.dim;
+        match &mut self.store {
+            Store::F32(d) => d[at..at + src.len()].copy_from_slice(src),
+            Store::F16(d) => {
+                for (h, &x) in d[at..at + src.len()].iter_mut().zip(src) {
+                    *h = f32_to_f16_bits(x);
+                }
+            }
+            Store::Int8 { data, scale, zero } => {
+                let (s, z) = encode_row_i8(src, &mut data[at..at + src.len()]);
+                scale[row] = s;
+                zero[row] = z;
+            }
+        }
+    }
+
+    /// Reset row `row` to the canonical zero encoding (decodes to 0.0).
+    pub fn zero_row(&mut self, row: usize) {
+        let at = row * self.dim;
+        match &mut self.store {
+            Store::F32(d) => d[at..at + self.dim].iter_mut().for_each(|x| *x = 0.0),
+            Store::F16(d) => d[at..at + self.dim].iter_mut().for_each(|x| *x = 0),
+            Store::Int8 { data, scale, zero } => {
+                data[at..at + self.dim].iter_mut().for_each(|x| *x = 0);
+                scale[row] = 1.0;
+                zero[row] = 0.0;
+            }
+        }
+    }
+
+    /// Borrow rows `row0 .. row0 + n` as an encoded view.
+    pub fn slice_rows(&self, row0: usize, n: usize) -> KvSlice<'_> {
+        let at = row0 * self.dim;
+        let end = (row0 + n) * self.dim;
+        match &self.store {
+            Store::F32(d) => KvSlice::F32(&d[at..end]),
+            Store::F16(d) => KvSlice::F16 { data: &d[at..end], dim: self.dim },
+            Store::Int8 { data, scale, zero } => KvSlice::Int8 {
+                data: &data[at..end],
+                scale: &scale[row0..row0 + n],
+                zero: &zero[row0..row0 + n],
+                dim: self.dim,
+            },
+        }
+    }
+
+    /// Borrow the whole arena as an encoded view.
+    pub fn as_kv_slice(&self) -> KvSlice<'_> {
+        self.slice_rows(0, self.rows)
+    }
+
+    /// Copy `n` encoded rows from `src` (same dtype and dim) starting
+    /// at `src_row` into `self` starting at `dst_row` — a plane-wise
+    /// memcpy, no decode/re-encode.
+    pub fn copy_rows_from(&mut self, src: &KvArena, src_row: usize, dst_row: usize, n: usize) {
+        assert_eq!(self.dim, src.dim, "copy_rows_from: dim mismatch");
+        let (sa, da) = (src_row * self.dim, dst_row * self.dim);
+        let len = n * self.dim;
+        match (&mut self.store, &src.store) {
+            (Store::F32(d), Store::F32(s)) => d[da..da + len].copy_from_slice(&s[sa..sa + len]),
+            (Store::F16(d), Store::F16(s)) => d[da..da + len].copy_from_slice(&s[sa..sa + len]),
+            (
+                Store::Int8 { data, scale, zero },
+                Store::Int8 { data: sd, scale: ss, zero: sz },
+            ) => {
+                data[da..da + len].copy_from_slice(&sd[sa..sa + len]);
+                scale[dst_row..dst_row + n].copy_from_slice(&ss[src_row..src_row + n]);
+                zero[dst_row..dst_row + n].copy_from_slice(&sz[src_row..src_row + n]);
+            }
+            _ => panic!("copy_rows_from: dtype mismatch ({:?} <- {:?})", self.dtype(), src.dtype()),
+        }
+    }
+
+    /// Decode row `row` into `out` (len `dim`).
+    pub fn decode_row_into(&self, row: usize, out: &mut [f32]) {
+        self.as_kv_slice().decode_row_into(row, out);
+    }
+
+    /// Borrow the raw f32 plane. Panics unless the arena is `F32` —
+    /// callers on the always-f32 paths (the chunked-prefill carry) use
+    /// this; encoded arenas must go through [`KvSlice`].
+    #[track_caller]
+    pub fn f32(&self) -> &[f32] {
+        match &self.store {
+            Store::F32(d) => d,
+            _ => panic!("KvArena::f32 on {} arena", self.dtype().name()),
+        }
+    }
+
+    /// Mutable form of [`KvArena::f32`]; same F32-only contract.
+    #[track_caller]
+    pub fn f32_mut(&mut self) -> &mut [f32] {
+        match &mut self.store {
+            Store::F32(d) => d,
+            _ => panic!("KvArena::f32_mut on {} arena", self.dtype().name()),
+        }
+    }
+
+    /// Decode the whole arena to a fresh f32 vector (cold paths only:
+    /// XLA literal upload, tests).
+    pub fn to_f32_vec(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len()];
+        for r in 0..self.rows {
+            let at = r * self.dim;
+            self.decode_row_into(r, &mut out[at..at + self.dim]);
+        }
+        out
+    }
+
+    /// Encoded byte length of [`KvArena::write_bytes`]'s output.
+    pub fn byte_len(&self) -> usize {
+        self.rows * self.dtype().row_bytes(self.dim)
+    }
+
+    /// Append the arena's encoded planes to `out` (LE, bit-exact):
+    /// the data plane first, then any per-row metadata planes.
+    pub fn write_bytes(&self, out: &mut Vec<u8>) {
+        match &self.store {
+            Store::F32(d) => {
+                for x in d {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            Store::F16(d) => {
+                for h in d {
+                    out.extend_from_slice(&h.to_le_bytes());
+                }
+            }
+            Store::Int8 { data, scale, zero } => {
+                for q in data {
+                    out.push(*q as u8);
+                }
+                for x in scale.iter().chain(zero.iter()) {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+    }
+
+    /// Rebuild an arena from [`KvArena::write_bytes`] output —
+    /// bit-identical planes (the round-trip preserves every encoded
+    /// byte, NaN payloads included).
+    pub fn from_bytes(dtype: KvDtype, rows: usize, dim: usize, bytes: &[u8]) -> Result<KvArena> {
+        let want = rows * dtype.row_bytes(dim);
+        anyhow::ensure!(bytes.len() == want, "kv arena image: {} != {want} bytes", bytes.len());
+        let n = rows * dim;
+        let read_f32s = |at: usize, count: usize| -> Vec<f32> {
+            (0..count)
+                .map(|i| {
+                    f32::from_le_bytes(bytes[at + i * 4..at + (i + 1) * 4].try_into().unwrap())
+                })
+                .collect()
+        };
+        let store = match dtype {
+            KvDtype::F32 => Store::F32(read_f32s(0, n)),
+            KvDtype::F16 => Store::F16(
+                (0..n)
+                    .map(|i| u16::from_le_bytes(bytes[i * 2..(i + 1) * 2].try_into().unwrap()))
+                    .collect(),
+            ),
+            KvDtype::Int8 => Store::Int8 {
+                data: bytes[..n].iter().map(|&b| b as i8).collect(),
+                scale: read_f32s(n, rows),
+                zero: read_f32s(n + rows * 4, rows),
+            },
+        };
+        Ok(KvArena { dim, rows, store })
+    }
+}
+
+/// Borrowed encoded view of a run of rows — the encoding-tagged form
+/// `head_slices` hands to the attention kernel. Consumers above the
+/// kernel treat it as opaque; the fused kernels match on the variant.
+#[derive(Debug, Clone, Copy)]
+pub enum KvSlice<'a> {
+    /// Raw f32 rows (`rows × dim` flat).
+    F32(&'a [f32]),
+    /// binary16 rows.
+    F16 { data: &'a [u16], dim: usize },
+    /// Per-row affine int8 rows plus metadata planes.
+    Int8 { data: &'a [i8], scale: &'a [f32], zero: &'a [f32], dim: usize },
+}
+
+impl KvSlice<'_> {
+    /// Storage dtype of the view.
+    pub fn dtype(&self) -> KvDtype {
+        match self {
+            KvSlice::F32(_) => KvDtype::F32,
+            KvSlice::F16 { .. } => KvDtype::F16,
+            KvSlice::Int8 { .. } => KvDtype::Int8,
+        }
+    }
+
+    /// Logical element count (`rows × dim`).
+    pub fn elems(&self) -> usize {
+        match self {
+            KvSlice::F32(d) => d.len(),
+            KvSlice::F16 { data, .. } => data.len(),
+            KvSlice::Int8 { data, .. } => data.len(),
+        }
+    }
+
+    /// Row count given the row width.
+    pub fn rows(&self, dim: usize) -> usize {
+        if dim == 0 {
+            0
+        } else {
+            self.elems() / dim
+        }
+    }
+
+    /// Decode row `row` into `out`.
+    #[inline]
+    pub fn decode_row_into(&self, row: usize, out: &mut [f32]) {
+        match self {
+            KvSlice::F32(d) => out.copy_from_slice(&d[row * out.len()..(row + 1) * out.len()]),
+            KvSlice::F16 { data, dim } => {
+                let at = row * dim;
+                for (o, &h) in out.iter_mut().zip(&data[at..at + dim]) {
+                    *o = f16_bits_to_f32(h);
+                }
+            }
+            KvSlice::Int8 { data, scale, zero, dim } => {
+                let (s, z) = (scale[row], zero[row]);
+                let at = row * dim;
+                for (o, &q) in out.iter_mut().zip(&data[at..at + dim]) {
+                    *o = s * (q as f32 - z);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng};
+
+    #[test]
+    fn f16_bits_roundtrip_exhaustively() {
+        // Every one of the 65536 f16 bit patterns must survive
+        // decode → encode unchanged (NaNs: NaN-ness preserved).
+        for h in 0..=u16::MAX {
+            let f = f16_bits_to_f32(h);
+            let exp = (h >> 10) & 0x1F;
+            let man = h & 0x03FF;
+            if exp == 31 && man != 0 {
+                assert!(f.is_nan(), "h={h:#06x}");
+                assert!(f16_bits_to_f32(f32_to_f16_bits(f)).is_nan());
+                continue;
+            }
+            assert_eq!(f32_to_f16_bits(f), h, "h={h:#06x} f={f}");
+        }
+    }
+
+    #[test]
+    fn f16_encode_rounds_to_nearest_even() {
+        // 1 + 2^-11 is exactly between 1.0 and the next f16; RNE picks
+        // the even mantissa (1.0).
+        assert_eq!(f32_to_f16_bits(1.0 + 0.000_488_281_25), 0x3C00);
+        // 1 + 3·2^-11 is between consecutive f16s; RNE picks the even
+        // neighbour (mantissa 2).
+        assert_eq!(f32_to_f16_bits(1.0 + 3.0 * 0.000_488_281_25), 0x3C02);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7BFF); // f16::MAX
+        assert_eq!(f32_to_f16_bits(65520.0), 0x7C00); // rounds to inf
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+    }
+
+    #[test]
+    fn int8_rows_decode_within_half_step() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let dim = 16;
+        let mut arena = KvArena::new(KvDtype::Int8, 8, dim);
+        let mut out = vec![0.0f32; dim];
+        for r in 0..8 {
+            let src: Vec<f32> = (0..dim).map(|_| rng.gaussian32(0.0, 2.0)).collect();
+            arena.write_row(r, &src);
+            arena.decode_row_into(r, &mut out);
+            let span = src.iter().fold(f32::NEG_INFINITY, |a, &x| a.max(x))
+                - src.iter().fold(f32::INFINITY, |a, &x| a.min(x));
+            let step = span / 255.0;
+            for (a, b) in out.iter().zip(&src) {
+                assert!((a - b).abs() <= 0.51 * step.max(1e-6), "{a} vs {b} (step {step})");
+            }
+        }
+    }
+
+    #[test]
+    fn constant_and_zero_rows_decode_exactly() {
+        for dtype in KvDtype::ALL {
+            let dim = 5;
+            let mut arena = KvArena::new(dtype, 3, dim);
+            let mut out = vec![9.0f32; dim];
+            // Untouched rows decode to zero.
+            arena.decode_row_into(0, &mut out);
+            assert_eq!(out, vec![0.0; dim], "{dtype:?}");
+            // Constant rows round-trip exactly under int8's affine map.
+            arena.write_row(1, &[0.75; 5]);
+            arena.decode_row_into(1, &mut out);
+            assert_eq!(out, vec![0.75; dim], "{dtype:?}");
+            // Written-then-zeroed rows decode to zero again.
+            arena.write_row(2, &[1.5, -2.0, 0.25, 3.0, -0.5]);
+            arena.zero_row(2);
+            arena.decode_row_into(2, &mut out);
+            assert_eq!(out, vec![0.0; dim], "{dtype:?}");
+        }
+    }
+
+    #[test]
+    fn byte_roundtrip_is_bit_identical() {
+        let mut rng = Pcg64::seed_from_u64(11);
+        for dtype in KvDtype::ALL {
+            let (rows, dim) = (7, 6);
+            let mut arena = KvArena::new(dtype, rows, dim);
+            for r in 0..rows {
+                let src: Vec<f32> = (0..dim).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+                arena.write_row(r, &src);
+            }
+            let mut bytes = Vec::new();
+            arena.write_bytes(&mut bytes);
+            assert_eq!(bytes.len(), arena.byte_len(), "{dtype:?}");
+            assert_eq!(bytes.len(), rows * dtype.row_bytes(dim), "{dtype:?}");
+            let back = KvArena::from_bytes(dtype, rows, dim, &bytes).unwrap();
+            assert_eq!(back, arena, "{dtype:?}");
+            assert!(KvArena::from_bytes(dtype, rows, dim, &bytes[..bytes.len() - 1]).is_err());
+        }
+    }
+
+    #[test]
+    fn copy_rows_preserves_encoded_bytes() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        for dtype in KvDtype::ALL {
+            let (rows, dim) = (6, 4);
+            let mut src = KvArena::new(dtype, rows, dim);
+            for r in 0..rows {
+                let row: Vec<f32> = (0..dim).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+                src.write_row(r, &row);
+            }
+            let mut dst = KvArena::new(dtype, rows, dim);
+            dst.copy_rows_from(&src, 1, 2, 3);
+            let (mut a, mut b) = (vec![0.0f32; dim], vec![0.0f32; dim]);
+            for i in 0..3 {
+                src.decode_row_into(1 + i, &mut a);
+                dst.decode_row_into(2 + i, &mut b);
+                assert_eq!(a, b, "{dtype:?} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn slices_decode_like_the_arena() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        for dtype in KvDtype::ALL {
+            let (rows, dim) = (5, 3);
+            let mut arena = KvArena::new(dtype, rows, dim);
+            for r in 0..rows {
+                let row: Vec<f32> = (0..dim).map(|_| rng.gaussian32(0.0, 1.0)).collect();
+                arena.write_row(r, &row);
+            }
+            let view = arena.slice_rows(2, 3);
+            assert_eq!(view.dtype(), dtype);
+            assert_eq!(view.rows(dim), 3);
+            let (mut a, mut b) = (vec![0.0f32; dim], vec![0.0f32; dim]);
+            for i in 0..3 {
+                view.decode_row_into(i, &mut a);
+                arena.decode_row_into(2 + i, &mut b);
+                assert_eq!(a, b, "{dtype:?} row {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn dtype_parse_and_index_roundtrip() {
+        for dtype in KvDtype::ALL {
+            assert_eq!(KvDtype::parse(dtype.name()).unwrap(), dtype);
+            assert_eq!(KvDtype::from_index(dtype.index()).unwrap(), dtype);
+        }
+        assert!(KvDtype::parse("f64").is_err());
+        assert!(KvDtype::from_index(3).is_err());
+        assert_eq!(KvDtype::default(), KvDtype::F32);
+        assert_eq!(KvDtype::F32.decode_tolerance(), 0.0);
+        assert!(KvDtype::F16.decode_tolerance() < KvDtype::Int8.decode_tolerance());
+    }
+}

@@ -12,7 +12,89 @@
 //! bit-identical to the scalar per-row code they replace — only the row
 //! loop is restructured (4-row unrolling for load reuse and ILP).
 
-use super::{dist_sq, dot};
+use super::{dist_sq, dot, f16_bits_to_f32, KvSlice};
+
+/// Dot of an f16-encoded row against an f32 vector, decoding elements
+/// in registers. Same 4-wide accumulator split as [`super::dot`], so
+/// the result is bit-identical to decoding the row to f32 first and
+/// calling `dot` — without the materialized copy.
+#[inline]
+fn dot_f16(a: &[u16], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += f16_bits_to_f32(a[j]) * b[j];
+        s1 += f16_bits_to_f32(a[j + 1]) * b[j + 1];
+        s2 += f16_bits_to_f32(a[j + 2]) * b[j + 2];
+        s3 += f16_bits_to_f32(a[j + 3]) * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        s += f16_bits_to_f32(a[j]) * b[j];
+    }
+    s
+}
+
+/// Integer-code dot: `Σ_j (a_j as f32) · b_j` over a raw int8 plane
+/// (the per-row affine correction is applied by the caller). 4-wide
+/// accumulator split like [`super::dot`].
+#[inline]
+fn dot_i8(a: &[i8], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] as f32 * b[j];
+        s1 += a[j + 1] as f32 * b[j + 1];
+        s2 += a[j + 2] as f32 * b[j + 2];
+        s3 += a[j + 3] as f32 * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        s += a[j] as f32 * b[j];
+    }
+    s
+}
+
+/// Per-query element sums for the int8 affine correction, computed once
+/// per sweep (stack buffer for the common small-batch case).
+struct QuerySums {
+    buf: [f32; 16],
+    vec: Vec<f32>,
+    n: usize,
+}
+
+impl QuerySums {
+    fn new(qs: &[f32], cols: usize, nq: usize) -> QuerySums {
+        let mut out = QuerySums { buf: [0.0; 16], vec: Vec::new(), n: nq };
+        if nq > 16 {
+            out.vec = vec![0.0; nq];
+        }
+        for b in 0..nq {
+            let s: f32 = qs[b * cols..(b + 1) * cols].iter().sum();
+            if nq > 16 {
+                out.vec[b] = s;
+            } else {
+                out.buf[b] = s;
+            }
+        }
+        out
+    }
+
+    #[inline]
+    fn get(&self) -> &[f32] {
+        if self.n > 16 {
+            &self.vec
+        } else {
+            &self.buf[..self.n]
+        }
+    }
+}
 
 /// `out[r] = ⟨row_r, x⟩` for every row of `data`; 4-row-unrolled so the
 /// compiler can interleave the four dot reductions and reuse `x` loads.
@@ -61,6 +143,55 @@ pub fn matvec_batch_into(data: &[f32], cols: usize, xs: &[f32], nb: usize, out: 
     }
 }
 
+/// [`matvec_batch_into`] over an encoded arena view: the fused
+/// dequantize-and-multiply sweep. The `F32` arm delegates to
+/// [`matvec_batch_into`] (bit-identical to the pre-encoding path);
+/// `f16`/`int8` rows are decompressed into registers during the scan —
+/// no f32 copy of the arena is materialized. Layout matches
+/// [`matvec_batch_into`]: `out[b * rows + r] = ⟨row_r, x_b⟩`.
+///
+/// For `int8` the per-row affine map `x = s·(q − z)` folds into the
+/// reduction as `⟨row_r, x_b⟩ = s_r·(Σ_j q_j·x_bj − z_r·Σ_j x_bj)`, so
+/// each row costs one integer-code dot plus two multiplies; the
+/// per-query sums are computed once per sweep.
+pub fn matvec_batch_encoded_into(
+    data: KvSlice<'_>,
+    cols: usize,
+    xs: &[f32],
+    nb: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(xs.len(), nb * cols, "matvec_batch_encoded_into input shape");
+    debug_assert_eq!(out.len() * cols, data.elems() * nb, "matvec_batch_encoded_into out shape");
+    if nb == 0 {
+        return;
+    }
+    let rows = out.len() / nb;
+    match data {
+        KvSlice::F32(d) => matvec_batch_into(d, cols, xs, nb, out),
+        KvSlice::F16 { data, .. } => {
+            for r in 0..rows {
+                let row = &data[r * cols..(r + 1) * cols];
+                for b in 0..nb {
+                    out[b * rows + r] = dot_f16(row, &xs[b * cols..(b + 1) * cols]);
+                }
+            }
+        }
+        KvSlice::Int8 { data, scale, zero, .. } => {
+            let sums = QuerySums::new(xs, cols, nb);
+            let sum_x = sums.get();
+            for r in 0..rows {
+                let row = &data[r * cols..(r + 1) * cols];
+                let (s, z) = (scale[r], zero[r]);
+                for b in 0..nb {
+                    let acc = dot_i8(row, &xs[b * cols..(b + 1) * cols]);
+                    out[b * rows + r] = s * (acc - z * sum_x[b]);
+                }
+            }
+        }
+    }
+}
+
 /// Fused score+max pass: `out[r] = ⟨row_r, x⟩` and the maximum score is
 /// reduced in the same sweep (no second pass over the buffer). Returns
 /// `f32::NEG_INFINITY` when there are no rows.
@@ -95,6 +226,50 @@ pub fn scores_batch_into(data: &[f32], cols: usize, qs: &[f32], nq: usize, out: 
         }
         if b < nq {
             out_row[b] = dot(row, &qs[b * cols..(b + 1) * cols]);
+        }
+    }
+}
+
+/// [`scores_batch_into`] over an encoded arena view: the fused
+/// dequantize-and-score sweep behind the attention kernel. The `F32`
+/// arm delegates to [`scores_batch_into`] (bit-identical to the
+/// pre-encoding path); encoded rows decode in registers during the
+/// sweep. Layout matches [`scores_batch_into`]:
+/// `out[r * nq + b] = ⟨row_r, q_b⟩`. See
+/// [`matvec_batch_encoded_into`] for the int8 affine folding.
+pub fn scores_batch_encoded_into(
+    keys: KvSlice<'_>,
+    cols: usize,
+    qs: &[f32],
+    nq: usize,
+    out: &mut [f32],
+) {
+    debug_assert_eq!(qs.len(), nq * cols, "scores_batch_encoded_into query shape");
+    debug_assert_eq!(out.len() * cols, keys.elems() * nq, "scores_batch_encoded_into out shape");
+    let rows = keys.rows(cols);
+    match keys {
+        KvSlice::F32(d) => scores_batch_into(d, cols, qs, nq, out),
+        KvSlice::F16 { data, .. } => {
+            for r in 0..rows {
+                let row = &data[r * cols..(r + 1) * cols];
+                let out_row = &mut out[r * nq..(r + 1) * nq];
+                for (b, o) in out_row.iter_mut().enumerate() {
+                    *o = dot_f16(row, &qs[b * cols..(b + 1) * cols]);
+                }
+            }
+        }
+        KvSlice::Int8 { data, scale, zero, .. } => {
+            let sums = QuerySums::new(qs, cols, nq);
+            let sum_q = sums.get();
+            for r in 0..rows {
+                let row = &data[r * cols..(r + 1) * cols];
+                let (s, z) = (scale[r], zero[r]);
+                let out_row = &mut out[r * nq..(r + 1) * nq];
+                for (b, o) in out_row.iter_mut().enumerate() {
+                    let acc = dot_i8(row, &qs[b * cols..(b + 1) * cols]);
+                    *o = s * (acc - z * sum_q[b]);
+                }
+            }
         }
     }
 }
@@ -215,6 +390,54 @@ mod tests {
                 let mut single = vec![0.0f32; rows];
                 matvec_into(&data, cols, &xs[b * cols..(b + 1) * cols], &mut single);
                 assert_eq!(&batched[b * rows..(b + 1) * rows], &single[..], "nb={nb} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn encoded_sweeps_match_decoded_reference() {
+        use crate::tensor::{KvArena, KvDtype};
+        let mut rng = Pcg64::seed_from_u64(23);
+        let (rows, cols) = (19, 8);
+        // nq = 17 exercises the heap fallback of the query-sum scratch.
+        for nq in [1usize, 3, 17] {
+            let qs = random_flat(&mut rng, nq * cols);
+            for dtype in KvDtype::ALL {
+                let mut arena = KvArena::new(dtype, rows, cols);
+                for r in 0..rows {
+                    let row = random_flat(&mut rng, cols);
+                    arena.write_row(r, &row);
+                }
+                // Reference: decode the arena and run the f32 kernels.
+                let decoded = arena.to_f32_vec();
+                let mut want_scores = vec![0.0f32; rows * nq];
+                scores_batch_into(&decoded, cols, &qs, nq, &mut want_scores);
+                let mut got_scores = vec![0.0f32; rows * nq];
+                scores_batch_encoded_into(arena.as_kv_slice(), cols, &qs, nq, &mut got_scores);
+                let mut want_mv = vec![0.0f32; nq * rows];
+                matvec_batch_into(&decoded, cols, &qs, nq, &mut want_mv);
+                let mut got_mv = vec![0.0f32; nq * rows];
+                matvec_batch_encoded_into(arena.as_kv_slice(), cols, &qs, nq, &mut got_mv);
+                match dtype {
+                    // f32 delegates and f16 decodes element-exact with
+                    // the same accumulation order: bit-identical.
+                    KvDtype::F32 | KvDtype::F16 => {
+                        assert_eq!(got_scores, want_scores, "{dtype:?} nq={nq}");
+                        assert_eq!(got_mv, want_mv, "{dtype:?} nq={nq}");
+                    }
+                    // int8's affine folding reorders the reduction, so
+                    // allow f32 round-off against the decoded reference.
+                    KvDtype::Int8 => {
+                        for (g, w) in
+                            got_scores.iter().zip(&want_scores).chain(got_mv.iter().zip(&want_mv))
+                        {
+                            assert!(
+                                (g - w).abs() <= 1e-4 * (1.0 + w.abs()),
+                                "{dtype:?} nq={nq}: {g} vs {w}"
+                            );
+                        }
+                    }
+                }
             }
         }
     }

@@ -5,18 +5,25 @@
 //! the decode path: packing cache buffers, distances for clustering,
 //! norms for reservoir sampling, and reference attention for tests.
 //!
-//! Deliberately small: no broadcasting, no autograd, no generic dtypes —
-//! dense row-major `f32` with explicit shapes, tuned for predictable
-//! performance in the L3 hot loop.
+//! Deliberately small: no broadcasting, no autograd — dense row-major
+//! `f32` with explicit shapes, tuned for predictable performance in the
+//! L3 hot loop. The one storage-dtype exception is the KV-arena
+//! encoding layer ([`KvDtype`]/[`KvArena`]/[`KvSlice`] in
+//! [`encoding`]): KV rows may be stored f16 or per-row-affine int8, and
+//! the fused kernels ([`scores_batch_encoded_into`],
+//! [`matvec_batch_encoded_into`]) decompress rows into registers during
+//! the sweep instead of materializing f32 copies.
 
 mod dense;
+mod encoding;
 mod kernels;
 mod ops;
 
 pub use dense::Tensor;
+pub use encoding::{f16_bits_to_f32, f32_to_f16_bits, KvArena, KvDtype, KvSlice};
 pub use kernels::{
-    axpy_rows_f64, matvec_batch_into, matvec_into, nearest_row, scores_batch_into,
-    scores_max_into, strided_max_into,
+    axpy_rows_f64, matvec_batch_encoded_into, matvec_batch_into, matvec_into, nearest_row,
+    scores_batch_encoded_into, scores_batch_into, scores_max_into, strided_max_into,
 };
 pub use ops::{matmul, matvec};
 

@@ -46,11 +46,23 @@ pub struct EvalConfig {
     pub delta: f32,
     /// Document stream seed (disjoint from training streams).
     pub seed: u64,
+    /// KV-cache storage encoding for every decoded sequence
+    /// (`"f32"`/`"f16"`/`"int8"`); the string is forwarded to
+    /// [`EngineConfig::kv_dtype`] untouched, so the evaluator stays as
+    /// encoding-blind as the engine.
+    pub kv_dtype: String,
 }
 
 impl Default for EvalConfig {
     fn default() -> Self {
-        Self { questions: 50, n_lines: 8, budget: 48, delta: 4.0, seed: 0x5EED_E7A1 }
+        Self {
+            questions: 50,
+            n_lines: 8,
+            budget: 48,
+            delta: 4.0,
+            seed: 0x5EED_E7A1,
+            kv_dtype: "f32".into(),
+        }
     }
 }
 
@@ -74,7 +86,11 @@ pub fn evaluate_policies<E: StepExecutor>(
     for &policy in policies {
         let mut engine = Engine::new(
             exec,
-            EngineConfig { queue_capacity: cfg.questions + 1, ..Default::default() },
+            EngineConfig {
+                queue_capacity: cfg.questions + 1,
+                kv_dtype: cfg.kv_dtype.clone(),
+                ..Default::default()
+            },
         );
         // Same seed per policy ⇒ every row answers identical documents.
         let mut sampler = RetrievalSampler::new(Pcg64::seed_from_u64(cfg.seed));
@@ -143,6 +159,41 @@ pub fn accuracy_json(
         let comma = if i + 1 < sweeps.len() { "," } else { "" };
         out.push_str(&format!(
             "    {{\"budget\": {budget}, \"accuracy\": {{{}}}, \"cache_bytes\": {{{}}}}}{comma}\n",
+            acc.join(", "),
+            bytes.join(", ")
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    out
+}
+
+/// [`accuracy_json`] with a KV-encoding dimension: one `budgets` entry
+/// per (kv_dtype, budget) pair, so trend lines can track quantized
+/// accuracy against the f32 reference in the same file.
+pub fn accuracy_json_encoded(
+    sweeps: &[(String, usize, Vec<PolicyAccuracy>)],
+    n_lines: usize,
+    questions: usize,
+    delta: f32,
+    train_accuracy: f64,
+) -> String {
+    let mut out = String::from("{\n  \"bench\": \"eval_retrieval\",\n");
+    out.push_str(&format!(
+        "  \"config\": {{\"n_lines\": {n_lines}, \"questions\": {questions}, \
+         \"delta\": {delta}, \"train_accuracy\": {train_accuracy:.4}}},\n"
+    ));
+    out.push_str("  \"budgets\": [\n");
+    for (i, (dtype, budget, rows)) in sweeps.iter().enumerate() {
+        let acc: Vec<String> =
+            rows.iter().map(|r| format!("\"{}\": {:.4}", r.policy, r.accuracy())).collect();
+        let bytes: Vec<String> = rows
+            .iter()
+            .map(|r| format!("\"{}\": {:.0}", r.policy, r.mean_cache_bytes))
+            .collect();
+        let comma = if i + 1 < sweeps.len() { "," } else { "" };
+        out.push_str(&format!(
+            "    {{\"kv_dtype\": \"{dtype}\", \"budget\": {budget}, \"accuracy\": {{{}}}, \
+             \"cache_bytes\": {{{}}}}}{comma}\n",
             acc.join(", "),
             bytes.join(", ")
         ));

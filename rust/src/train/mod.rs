@@ -34,7 +34,7 @@ mod optim;
 mod params;
 mod trainer;
 
-pub use eval::{accuracy_json, evaluate_policies, EvalConfig, PolicyAccuracy};
+pub use eval::{accuracy_json, accuracy_json_encoded, evaluate_policies, EvalConfig, PolicyAccuracy};
 pub use model::{Tape, TrainModel};
 pub use optim::{clip_grad_norm, OptimKind, Optimizer};
 pub use params::ParamSet;

@@ -16,7 +16,7 @@
 use super::params::ParamSet;
 use crate::io::Checkpoint;
 use crate::model::{rope_freqs, rope_inplace, silu_inplace, ModelSpec, NORM_EPS};
-use crate::tensor::{argmax, axpy, dot, matvec_into};
+use crate::tensor::{argmax, axpy, dot, matvec_batch_into, matvec_into};
 use anyhow::Result;
 
 /// Activation record of one forward pass, plus reusable backward
@@ -273,19 +273,26 @@ impl TrainModel {
             let (xs_in, xs_rest) = tape.xs.split_at_mut(l + 1);
             let x = &xs_in[l];
             let x_next = &mut xs_rest[0];
+            // Projections run batched over the whole sequence (each
+            // weight row is loaded once per layer, not once per
+            // position); `matvec_batch_into`'s `out[pos * rows + r]`
+            // layout is the tape's per-position layout, and its inner
+            // reduction is the same `dot`, so results are bit-identical
+            // to the per-position `matvec_into` loop (pinned in tests).
             for pos in 0..t {
                 let a = &mut tape.a_norm[l][pos * dm..(pos + 1) * dm];
                 tape.inv_attn[l][pos] = rmsnorm_fwd(&x[pos * dm..(pos + 1) * dm], g_attn, a);
+            }
+            matvec_batch_into(wq, dm, &tape.a_norm[l][..t * dm], t, &mut tape.q[l][..t * hd]);
+            matvec_batch_into(wk, dm, &tape.a_norm[l][..t * dm], t, &mut tape.k[l][..t * hd]);
+            matvec_batch_into(wv, dm, &tape.a_norm[l][..t * dm], t, &mut tape.v[l][..t * hd]);
+            for pos in 0..t {
                 let qp = &mut tape.q[l][pos * hd..(pos + 1) * hd];
-                matvec_into(wq, dm, a, qp);
                 rope_inplace(qp, h, &self.rope, pos);
                 for qi in qp.iter_mut() {
                     *qi *= q_scale;
                 }
-                let kp = &mut tape.k[l][pos * hd..(pos + 1) * hd];
-                matvec_into(wk, dm, a, kp);
-                rope_inplace(kp, h, &self.rope, pos);
-                matvec_into(wv, dm, a, &mut tape.v[l][pos * hd..(pos + 1) * hd]);
+                rope_inplace(&mut tape.k[l][pos * hd..(pos + 1) * hd], h, &self.rope, pos);
             }
             // Causal softmax attention per (head, position).
             for hi in 0..h {
@@ -320,37 +327,41 @@ impl TrainModel {
                     }
                 }
             }
-            // Output projection + residual, then the MLP block.
+            // Output projection + residual, then the MLP block — every
+            // matvec batched over positions; the residual adds keep the
+            // original operand order so sums stay bit-identical.
+            matvec_batch_into(wo, hd, &tape.att[l][..t * hd], t, &mut tape.x_mid[l][..t * dm]);
             for pos in 0..t {
-                let tmp = &mut tape.vec_dm;
-                matvec_into(wo, hd, &tape.att[l][pos * hd..(pos + 1) * hd], tmp);
                 let xm = &mut tape.x_mid[l][pos * dm..(pos + 1) * dm];
                 for (j, xj) in xm.iter_mut().enumerate() {
-                    *xj = x[pos * dm + j] + tmp[j];
+                    *xj = x[pos * dm + j] + *xj;
                 }
                 let b = &mut tape.b_norm[l][pos * dm..(pos + 1) * dm];
                 tape.inv_mlp[l][pos] = rmsnorm_fwd(xm, g_mlp, b);
-                let pre = &mut tape.ff_pre[l][pos * d_ff..(pos + 1) * d_ff];
-                matvec_into(w1, dm, b, pre);
-                let act = &mut tape.ff_act[l][pos * d_ff..(pos + 1) * d_ff];
-                act.copy_from_slice(pre);
-                silu_inplace(act);
-                matvec_into(w2, d_ff, act, tmp);
+            }
+            let pre = &mut tape.ff_pre[l][..t * d_ff];
+            matvec_batch_into(w1, dm, &tape.b_norm[l][..t * dm], t, pre);
+            let act = &mut tape.ff_act[l][..t * d_ff];
+            act.copy_from_slice(&tape.ff_pre[l][..t * d_ff]);
+            silu_inplace(act);
+            matvec_batch_into(w2, d_ff, &tape.ff_act[l][..t * d_ff], t, &mut x_next[..t * dm]);
+            for pos in 0..t {
                 let xn = &mut x_next[pos * dm..(pos + 1) * dm];
                 for (j, xj) in xn.iter_mut().enumerate() {
-                    *xj = tape.x_mid[l][pos * dm + j] + tmp[j];
+                    *xj = tape.x_mid[l][pos * dm + j] + *xj;
                 }
             }
         }
 
-        // Final norm + tied logits.
+        // Final norm + tied logits (one batched sweep over the
+        // vocab-sized embedding — the trainer's largest matvec).
         let g_final = self.params.g_final.of(p);
         let x_last = &tape.xs[spec.n_layers];
         for pos in 0..t {
             let hf = &mut tape.hfin[pos * dm..(pos + 1) * dm];
             tape.inv_fin[pos] = rmsnorm_fwd(&x_last[pos * dm..(pos + 1) * dm], g_final, hf);
-            matvec_into(embed, dm, hf, &mut tape.logits[pos * vocab..(pos + 1) * vocab]);
         }
+        matvec_batch_into(embed, dm, &tape.hfin[..t * dm], t, &mut tape.logits[..t * vocab]);
         Ok(())
     }
 
@@ -607,6 +618,58 @@ mod tests {
             let want = &pre.logits[pos * v..(pos + 1) * v];
             let err = rel_err_vec(tape.logits_at(pos, v), want);
             assert!(err < 1e-4, "pos {pos}: err={err}");
+        }
+    }
+
+    #[test]
+    fn batched_forward_matches_per_position_matvecs_bitwise() {
+        // The batched projection sweeps must be *bit-identical* to the
+        // per-position `matvec_into` loop they replaced: recompute every
+        // recorded matvec from its recorded input (same op order —
+        // matvec, then RoPE, then scale) and compare bit patterns.
+        let bits = |s: &[f32]| s.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        let model = TrainModel::init(tiny_spec(), 11).unwrap();
+        let spec = model.spec().clone();
+        let (dm, h, dh) = (spec.d_model, spec.n_heads, spec.d_head);
+        let (d_ff, vocab, hd) = (spec.d_ff(), spec.vocab, spec.n_heads * spec.d_head);
+        let q_scale = 1.0 / (dh as f32).sqrt();
+        let tokens = [1, 3, 5, 2, 7, 4, 9];
+        let t = tokens.len();
+        let mut tape = Tape::new();
+        model.forward(&tokens, &mut tape).unwrap();
+        let p = model.params().data();
+        let mut want = vec![0.0f32; hd.max(d_ff).max(vocab).max(dm)];
+        for (l, seg) in model.params().layers.iter().enumerate() {
+            for pos in 0..t {
+                let a = &tape.a_norm[l][pos * dm..(pos + 1) * dm];
+                matvec_into(seg.wq.of(p), dm, a, &mut want[..hd]);
+                rope_inplace(&mut want[..hd], h, &model.rope, pos);
+                for w in want[..hd].iter_mut() {
+                    *w *= q_scale;
+                }
+                assert_eq!(bits(&want[..hd]), bits(&tape.q[l][pos * hd..(pos + 1) * hd]));
+                matvec_into(seg.wk.of(p), dm, a, &mut want[..hd]);
+                rope_inplace(&mut want[..hd], h, &model.rope, pos);
+                assert_eq!(bits(&want[..hd]), bits(&tape.k[l][pos * hd..(pos + 1) * hd]));
+                matvec_into(seg.wv.of(p), dm, a, &mut want[..hd]);
+                assert_eq!(bits(&want[..hd]), bits(&tape.v[l][pos * hd..(pos + 1) * hd]));
+                let att = &tape.att[l][pos * hd..(pos + 1) * hd];
+                matvec_into(seg.wo.of(p), hd, att, &mut want[..dm]);
+                for (j, w) in want[..dm].iter_mut().enumerate() {
+                    *w = tape.xs[l][pos * dm + j] + *w;
+                }
+                assert_eq!(bits(&want[..dm]), bits(&tape.x_mid[l][pos * dm..(pos + 1) * dm]));
+                let b = &tape.b_norm[l][pos * dm..(pos + 1) * dm];
+                matvec_into(seg.w1.of(p), dm, b, &mut want[..d_ff]);
+                let pre = &tape.ff_pre[l][pos * d_ff..(pos + 1) * d_ff];
+                assert_eq!(bits(&want[..d_ff]), bits(pre));
+            }
+        }
+        let embed = model.params().embed.of(p);
+        for pos in 0..t {
+            let hf = &tape.hfin[pos * dm..(pos + 1) * dm];
+            matvec_into(embed, dm, hf, &mut want[..vocab]);
+            assert_eq!(bits(&want[..vocab]), bits(tape.logits_at(pos, vocab)));
         }
     }
 

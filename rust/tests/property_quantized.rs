@@ -1,0 +1,210 @@
+//! Property tests (proptest_lite) for the KV-cache encoding layer:
+//!
+//! * **Decode tolerance** — for every cache policy, under random budgets
+//!   and stream lengths, decoding through an `f16`/`int8` cache stays
+//!   within the encoding's published tolerance of the `f32` cache fed
+//!   the identical stream, and the `f32` encoding itself is
+//!   *bit-identical* to the historical unencoded path.
+//! * **Snapshot round-trip** — an encoded cache pushed through the v4
+//!   session-snapshot wire format restores *bit-identically*: same
+//!   encoding tag, same quantized bytes, same attention outputs after
+//!   any continuation suffix.
+//! * **Paging invariance** — random page sizes and memory budgets never
+//!   perturb quantized decode: pages are byte-granular, so spilling and
+//!   recalling `f16`/`int8` arenas (whose byte lengths are not multiples
+//!   of 4) reproduces the unpaged token streams exactly.
+
+use std::cell::{Cell, RefCell};
+use std::rc::Rc;
+use subgen::coordinator::{
+    Engine, EngineConfig, HostExecutor, Request, RequestClass, SessionSnapshot,
+};
+use subgen::kvcache::{KvDtype, POLICY_NAMES};
+use subgen::model::SequenceCaches;
+use subgen::proptest_lite::{pair, Gen, Runner};
+
+const CASES: usize = 12;
+
+/// Deterministic per-step q/k/v feed (flat `[L, H, dh]`).
+fn feed(dims: usize, t: u64) -> Vec<f32> {
+    (0..dims).map(|j| ((t * 131 + j as u64) as f32 * 0.37).sin()).collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn quantized_decode_stays_within_tolerance_of_f32_for_every_policy() {
+    let exec = HostExecutor::small(5);
+    let spec = exec.spec();
+    let dims = spec.n_layers * spec.n_heads * spec.d_head;
+    for enc in KvDtype::ALL {
+        for (pi, policy) in POLICY_NAMES.iter().enumerate() {
+            let mut runner = Runner::new(0xD7_0BE5 + pi as u64 + (enc.index() << 8), CASES);
+            runner.run(
+                &format!("decode-tolerance/{}/{policy}", enc.name()),
+                pair(Gen::usize_in(4, 24), Gen::usize_in(1, 70)),
+                |&(budget, steps)| {
+                    let mut base =
+                        SequenceCaches::new(spec, policy, budget, 0.5, 99).unwrap();
+                    let mut quant = SequenceCaches::with_kv_dtype(
+                        spec, policy, budget, 0.5, 99, enc.name(),
+                    )
+                    .unwrap();
+                    assert_eq!(quant.kv_dtype(), enc);
+                    for t in 0..steps {
+                        let x = feed(dims, t as u64);
+                        base.update(&x, &x, &x);
+                        quant.update(&x, &x, &x);
+                    }
+                    let q = feed(dims, 1_000_003);
+                    let mut a = vec![0.0; dims];
+                    let mut b = vec![0.0; dims];
+                    base.attention_all_into(&q, &mut a).unwrap();
+                    quant.attention_all_into(&q, &mut b).unwrap();
+                    match enc {
+                        // f32 "encoding" is the historical layout:
+                        // nothing may move, not even a ULP.
+                        KvDtype::F32 => bits(&a) == bits(&b),
+                        _ => {
+                            let tol = enc.decode_tolerance();
+                            a.iter()
+                                .zip(&b)
+                                .all(|(x, y)| (x - y).abs() <= tol * (1.0 + x.abs()))
+                        }
+                    }
+                },
+            );
+        }
+    }
+}
+
+#[test]
+fn encoded_snapshot_roundtrip_restores_bit_identically_for_every_policy() {
+    let exec = HostExecutor::small(7);
+    let spec = exec.spec();
+    let dims = spec.n_layers * spec.n_heads * spec.d_head;
+    for enc in KvDtype::ALL {
+        for (pi, policy) in POLICY_NAMES.iter().enumerate() {
+            let mut runner = Runner::new(0x5AFE_0400 + pi as u64 + (enc.index() << 8), CASES);
+            runner.run(
+                &format!("snapshot-roundtrip/{}/{policy}", enc.name()),
+                pair(pair(Gen::usize_in(1, 50), Gen::usize_in(0, 30)), Gen::usize_in(4, 20)),
+                |&((pre, post), budget)| {
+                    let req = Request {
+                        id: 7,
+                        session_id: None,
+                        prompt: vec![1, 2, 3],
+                        max_new: 4,
+                        policy: (*policy).into(),
+                        budget,
+                        delta: 0.5,
+                        deadline: None,
+                        class: RequestClass::Interactive,
+                    };
+                    let mut caches = SequenceCaches::with_kv_dtype(
+                        spec, policy, budget, 0.5, 99, enc.name(),
+                    )
+                    .unwrap();
+                    for t in 0..pre {
+                        let x = feed(dims, t as u64);
+                        caches.update(&x, &x, &x);
+                    }
+                    // Through the wire format and back: the restored
+                    // cache must carry the same encoding tag and the
+                    // same quantized bytes, not a re-quantization.
+                    let snap = SessionSnapshot::capture(&req, &[9, 8], 7, pre + 2, &caches);
+                    let back = SessionSnapshot::from_bytes(&snap.to_bytes()).unwrap();
+                    let mut restored = back.restore_caches(spec).unwrap();
+                    if restored.kv_dtype() != enc {
+                        return false;
+                    }
+                    for t in 0..post {
+                        let x = feed(dims, (pre + t) as u64);
+                        caches.update(&x, &x, &x);
+                        restored.update(&x, &x, &x);
+                    }
+                    let q = feed(dims, 1_000_003);
+                    let mut a = vec![0.0; dims];
+                    let mut b = vec![0.0; dims];
+                    caches.attention_all_into(&q, &mut a).unwrap();
+                    restored.attention_all_into(&q, &mut b).unwrap();
+                    bits(&a) == bits(&b)
+                        && caches.memory_bytes() == restored.memory_bytes()
+                        && caches.len() == restored.len()
+                },
+            );
+        }
+    }
+}
+
+#[test]
+fn random_page_schedules_never_perturb_quantized_decode() {
+    // Byte-granular paging: f16 rows are 2-byte-aligned and int8 rows
+    // carry 8 bytes of per-row scale/zero, so encoded arenas cut at
+    // arbitrary byte offsets. Any page size × budget schedule must
+    // reproduce the unpaged token streams exactly.
+    let spill_dir =
+        std::env::temp_dir().join(format!("subgen_prop_quant_{}", std::process::id()));
+    std::fs::create_dir_all(&spill_dir).unwrap();
+    let exec = HostExecutor::small(11);
+    let evicted = Cell::new(0u64);
+
+    let run = |dtype: &str, budget: Option<u64>, page_size: usize, len: usize| {
+        let snaps = Rc::new(RefCell::new(Vec::<SessionSnapshot>::new()));
+        let mut engine = Engine::new(
+            &exec,
+            EngineConfig::builder()
+                .max_active(2)
+                .prefills_per_tick(2)
+                .snapshot_every(1)
+                .page_size(page_size)
+                .kv_mem_budget(budget)
+                .spill_dir(Some(spill_dir.clone()))
+                .kv_dtype(dtype)
+                .build(),
+        );
+        let sink = Rc::clone(&snaps);
+        engine.set_snapshot_sink(Box::new(move |s| sink.borrow_mut().push(s)));
+        for id in 0..3u64 {
+            engine.submit(Request {
+                id,
+                session_id: None,
+                prompt: (0..len).map(|i| 1 + ((i * 5 + id as usize * 3) % 11) as i32).collect(),
+                max_new: 3 + (id as usize % 3),
+                policy: POLICY_NAMES[id as usize % POLICY_NAMES.len()].into(),
+                budget: 12,
+                delta: 0.5,
+                deadline: None,
+                class: RequestClass::Interactive,
+            });
+        }
+        engine.run_to_completion().unwrap();
+        let mut out: Vec<(u64, Vec<i32>)> =
+            engine.take_responses().into_iter().map(|r| (r.id, r.tokens)).collect();
+        out.sort_by_key(|(id, _)| *id);
+        let stats = engine.pool().stats();
+        (out, snaps.borrow().iter().map(|s| s.to_bytes()).collect::<Vec<_>>(), stats)
+    };
+
+    for (di, dtype) in ["f16", "int8"].iter().enumerate() {
+        let mut runner = Runner::new(0x9A6E_0400 + di as u64, CASES / 2);
+        runner.run(
+            &format!("quantized-paging/{dtype}"),
+            pair(Gen::usize_in(6, 16), Gen::usize_in(0, 11)),
+            |&(len, knob)| {
+                // Odd-ish page sizes exercise cuts that land mid-row
+                // and mid-scale-plane; budgets span thrash to roomy.
+                let page_size = [64usize, 96, 160, 288][knob % 4];
+                let budget = [256u64, 1024, 64 * 1024][knob / 4];
+                let (want, want_snaps, _) = run(dtype, None, page_size, len);
+                let (got, got_snaps, stats) = run(dtype, Some(budget), page_size, len);
+                evicted.set(evicted.get() + stats.evicted_pages);
+                got == want && got_snaps == want_snaps
+            },
+        );
+    }
+    assert!(evicted.get() > 0, "schedules never exercised spill: evicted={}", evicted.get());
+    let _ = std::fs::remove_dir_all(&spill_dir);
+}
